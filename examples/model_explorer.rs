@@ -1,0 +1,60 @@
+//! Model explorer: predicted vs measured IPC for one kernel pair across
+//! every feasible residency split.
+//!
+//! ```text
+//! cargo run --release --example model_explorer [K1 [K2 [gpu]]]
+//! ```
+//!
+//! Shows how the Markov model's heterogeneous chain tracks (and where
+//! it misses) the simulator as the occupancy split between a pair
+//! shifts — the data behind the scheduler's choice of (b1, b2).
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{feasible_splits, Coordinator};
+use kernelet::kernel::BenchmarkApp;
+use kernelet::model::{self, Granularity};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let k1 = BenchmarkApp::from_name(args.first().map(|s| s.as_str()).unwrap_or("TEA"))
+        .expect("unknown kernel");
+    let k2 = BenchmarkApp::from_name(args.get(1).map(|s| s.as_str()).unwrap_or("PC"))
+        .expect("unknown kernel");
+    let gpu = match args.get(2).map(|s| s.as_str()) {
+        Some("gtx680") => GpuConfig::gtx680(),
+        _ => GpuConfig::c2050(),
+    };
+    let coord = Coordinator::new(&gpu);
+    let (s1, s2) = (k1.spec(), k2.spec());
+    let (m1, m2) = (coord.model_solo_ipc(&s1), coord.model_solo_ipc(&s2));
+
+    println!("{} + {} on {} (model solos: {:.3} / {:.3})\n", s1.name, s2.name, gpu.name, m1, m2);
+    println!(
+        "{:>7} {:>12} {:>12} {:>10} {:>10} {:>9} {:>9}",
+        "b1:b2", "pred_cipc1", "pred_cipc2", "pred_tot", "meas_tot", "pred_cp", "meas_cp"
+    );
+    let p1 = coord.profile(&s1);
+    let p2 = coord.profile(&s2);
+    for (b1, b2) in feasible_splits(&gpu, &s1, &s2) {
+        let pred = model::predict_pair(&gpu, &s1, b1, m1, &s2, b2, m2, Granularity::Block);
+        let (z1, z2) = (b1 * gpu.num_sms * 2, b2 * gpu.num_sms * 2);
+        let meas = coord.simcache.pair(&s1, z1, b1, &s2, z2, b2);
+        let meas_cp =
+            model::co_scheduling_profit(&[p1.ipc, p2.ipc], &[meas.cipc[0], meas.cipc[1]]);
+        println!(
+            "{:>7} {:>12.4} {:>12.4} {:>10.4} {:>10.4} {:>9.3} {:>9.3}",
+            format!("{b1}:{b2}"),
+            pred.cipc[0],
+            pred.cipc[1],
+            pred.total_ipc,
+            meas.total_ipc,
+            pred.cp,
+            meas_cp
+        );
+    }
+    if let Some((b1, b2, _, cp)) = coord.best_split(&s1, &s2) {
+        println!("\nscheduler would pick split {b1}:{b2} (predicted CP {cp:.3})");
+    } else {
+        println!("\nscheduler finds no split worth co-scheduling (all below cp_min)");
+    }
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the 60-second tour of the Kernelet public API.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Pick a GPU config (Table 2).
+//! 2. Profile two kernels by pre-executing a few thread blocks.
+//! 3. Ask the Markov model for the best co-schedule split and the
+//!    balanced slice sizes (Eq. 8).
+//! 4. Run a small shared-GPU workload under BASE and Kernelet and
+//!    compare throughput.
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::baselines::run_base;
+use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::kernel::BenchmarkApp;
+use kernelet::workload::{Mix, Stream};
+
+fn main() {
+    // 1. The simulated GPU (Tesla C2050; see DESIGN.md for the
+    //    hardware-substitution argument).
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    println!("GPU: {} ({} SMs, peak IPC {})\n", gpu.name, gpu.num_sms, gpu.peak_ipc());
+
+    // 2. Profile a compute-bound and a memory-bound kernel.
+    let tea = BenchmarkApp::TEA.spec();
+    let pc = BenchmarkApp::PC.spec();
+    for k in [&tea, &pc] {
+        let p = coord.profile(k);
+        println!(
+            "{:>4}: IPC {:.3}  PUR {:.3}  MUR {:.3}  R_m {:.3}",
+            k.name, p.ipc, p.pur, p.mur, p.rm
+        );
+    }
+
+    // 3. Best co-schedule for the pair, according to the model.
+    let (b1, b2, cipc, cp) = coord.best_split(&tea, &pc).expect("TEA+PC should co-schedule");
+    let (s1, s2) = kernelet::model::balanced_slice_sizes(
+        &gpu,
+        &tea,
+        b1,
+        cipc[0],
+        coord.min_slice(&tea),
+        &pc,
+        b2,
+        cipc[1],
+        coord.min_slice(&pc),
+    );
+    println!("\nmodel: co-run TEA at {b1} blocks/SM with PC at {b2} blocks/SM");
+    println!("       predicted cIPC = {:.3} / {:.3}, CP = {:.3}", cipc[0], cipc[1], cp);
+    println!("       balanced slice sizes = {s1} / {s2} grid blocks (Eq. 8)");
+
+    // 4. A small shared workload: MIX mix, 8 instances per app.
+    let stream = Stream::saturated(Mix::MIX, 8, 42);
+    let base = run_base(&coord, &stream);
+    let ours = run_kernelet(&coord, &stream);
+    println!("\nworkload: {} kernels (MIX)", stream.len());
+    println!("BASE     total {:.3}s  ({:.1} kernels/s)", base.total_secs, base.throughput_kps);
+    println!(
+        "Kernelet total {:.3}s  ({:.1} kernels/s)  -> {:+.1}% throughput",
+        ours.total_secs,
+        ours.throughput_kps,
+        (base.total_secs / ours.total_secs - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,49 @@
+//! Shared-cloud scenario: Poisson kernel arrivals from multiple
+//! tenants (paper Fig. 1b — a GPU server behind an rCUDA-style API).
+//!
+//! ```text
+//! cargo run --release --example shared_cloud [arrivals_per_sec]
+//! ```
+//!
+//! Kernels from the ALL mix arrive as independent Poisson processes;
+//! the coordinator schedules the pending queue continuously. Reported:
+//! makespan, throughput, and mean turnaround vs the BASE consolidation
+//! scheduler — at several load levels.
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::baselines::run_base;
+use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::workload::{Mix, Stream};
+
+fn main() {
+    let base_rate: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(400.0);
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    println!("GPU: {}  workload: ALL mix, 40 instances/app, Poisson arrivals\n", gpu.name);
+    println!(
+        "{:>12} {:>12} {:>12} {:>14} {:>14} {:>10}",
+        "rate(/s/app)", "base_mkspan", "kern_mkspan", "base_turnar(s)", "kern_turnar(s)", "gain%"
+    );
+    for mult in [0.25, 0.5, 1.0, 2.0] {
+        let rate = base_rate * mult;
+        let stream = Stream::poisson(Mix::ALL, 40, rate, 2026);
+        let b = run_base(&coord, &stream);
+        let k = run_kernelet(&coord, &stream);
+        assert_eq!(k.kernels_completed, stream.len());
+        println!(
+            "{:>12.0} {:>12.3} {:>12.3} {:>14.4} {:>14.4} {:>9.1}%",
+            rate,
+            b.total_secs,
+            k.total_secs,
+            b.mean_turnaround_secs,
+            k.mean_turnaround_secs,
+            (b.total_secs / k.total_secs - 1.0) * 100.0
+        );
+    }
+    println!(
+        "\nAt low load the GPU idles between arrivals (little to co-schedule);\n\
+         as the queue saturates, Kernelet's slicing finds complementary pairs\n\
+         and the throughput gap over consolidation widens — the paper's shared\n\
+         cluster/cloud setting."
+    );
+}

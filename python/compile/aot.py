@@ -1,0 +1,105 @@
+"""AOT pipeline: lower every kernel variant to HLO *text* artifacts.
+
+HLO text (not ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids,
+which the xla crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+- ``<kernel>_nb<K>.hlo.txt`` — the sliceable kernel compiled for a
+  K-block slice (offset is a runtime i32[1] argument, so one artifact
+  serves every slice position);
+- ``markov_steady.hlo.txt`` — the Markov steady-state power iteration;
+- ``manifest.txt`` — one line per artifact telling the rust runtime the
+  argument/output shapes:
+  ``file|kernel|n_blocks|in:<dtype>:<dims>,...|out:<dtype>:<dims>``.
+
+Run via ``make artifacts`` (a no-op when artifacts are newer than the
+compile sources).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import markov
+from .kernels.defs import REGISTRY
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    dims = "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+    return f"{s.dtype}:{dims}"
+
+
+def lower_kernel(name: str, n_blocks: int) -> tuple[str, str]:
+    """Returns (hlo_text, manifest_line_suffix) for one kernel variant."""
+    kdef = REGISTRY[name]
+    fn = model.jitted_slice(kdef, n_blocks)
+    shapes = model.example_shapes(name)
+    lowered = fn.lower(*shapes)
+    text = to_hlo_text(lowered)
+    out = lowered.out_info
+    out_spec = _spec_str(jax.ShapeDtypeStruct(out.shape, out.dtype))
+    ins = ",".join(_spec_str(s) for s in shapes)
+    return text, f"{name}|{n_blocks}|in:{ins}|out:{out_spec}"
+
+
+def lower_markov() -> tuple[str, str]:
+    fn = model.steady_state_fn()
+    shapes = model.steady_state_shapes()
+    lowered = fn.lower(*shapes)
+    text = to_hlo_text(lowered)
+    ins = ",".join(_spec_str(s) for s in shapes)
+    out = lowered.out_info
+    out_spec = _spec_str(jax.ShapeDtypeStruct(out.shape, out.dtype))
+    return text, f"markov_steady|1|in:{ins}|out:{out_spec}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--kernels", default="all", help="comma list or 'all'")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = list(REGISTRY) if args.kernels == "all" else args.kernels.split(",")
+
+    manifest = []
+    for name in names:
+        for nb in model.SLICE_VARIANTS:
+            text, line = lower_kernel(name, nb)
+            fname = f"{name}_nb{nb}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            manifest.append(f"{fname}|{line}")
+            print(f"wrote {out_dir / fname} ({len(text)} chars)")
+
+    text, line = lower_markov()
+    (out_dir / "markov_steady.hlo.txt").write_text(text)
+    manifest.append(f"markov_steady.hlo.txt|{line}")
+    print(f"wrote {out_dir / 'markov_steady.hlo.txt'} ({len(text)} chars)")
+    # Padding metadata the rust model needs for the markov artifact.
+    manifest.append(f"#markov_pad={markov.PAD} markov_iters={markov.ITERS}")
+
+    (out_dir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir / 'manifest.txt'} ({len(manifest)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels and their oracles."""
+
+from . import common, defs, markov, ref  # noqa: F401
+from .defs import N_BLOCKS, REGISTRY, KernelDef  # noqa: F401

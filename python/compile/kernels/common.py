@@ -1,0 +1,98 @@
+"""Shared Pallas plumbing for sliceable kernels (Layer 1).
+
+Every benchmark kernel is written as a *sliceable grid*: a
+``pallas_call`` whose grid is the number of thread blocks in the slice
+and whose first input is a ``block_offset`` scalar. Inside the kernel
+body the rectified block id is ``pl.program_id(0) + offset`` — the
+JAX-level equivalent of the paper's PTX index rectification (Fig. 3c):
+the slice computes exactly the blocks [offset, offset + n_blocks) of the
+original grid, and the concatenation of slice outputs over a partition
+equals the full-grid output bit for bit.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a CUDA thread
+block maps to one grid step; the block's shared-memory tile becomes the
+``out_specs`` VMEM block; inputs are kept whole in ``pl.ANY`` memory and
+gathered with dynamic slices, which is where a TPU lowering would use
+scalar-prefetch + HBM->VMEM DMA. ``interpret=True`` everywhere: the CPU
+PJRT client cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def sliced_pallas_call(
+    body: Callable,
+    *,
+    n_inputs: int,
+    out_block: Sequence[int],
+    out_dtype,
+    n_blocks: int,
+):
+    """Build the sliced ``pallas_call`` for a kernel body.
+
+    ``body(off_ref, *in_refs, o_ref)`` computes output block
+    ``pl.program_id(0)`` of the slice from rectified block id
+    ``pl.program_id(0) + off_ref[0]``.
+
+    Returns a callable ``(offset_i32_array, *inputs) -> slice_output``
+    where the slice output stacks ``n_blocks`` output blocks on axis 0.
+    """
+    out_shape = (n_blocks * out_block[0], *out_block[1:])
+    index_map = lambda i: (i,) + (0,) * (len(out_block) - 1)
+    return pl.pallas_call(
+        body,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (1 + n_inputs),
+        out_specs=pl.BlockSpec(tuple(out_block), index_map),
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+        interpret=True,
+    )
+
+
+def jit_slice(fn):
+    """jit with the block count static (one executable per slice size —
+    the AOT story: rust loads one compiled artifact per variant)."""
+    return functools.partial(jax.jit, static_argnames=("n_blocks",))(fn)
+
+
+def rectified_id(off_ref):
+    """The rectified block index (Fig. 3c): slice-local id + offset.
+
+    ``jnp.sum`` collapses the i32[1] ref read to a true scalar — plain
+    ``off_ref[0]`` leaves a rank-1 value behind when the ref is
+    discharged during jit lowering, which ``dynamic_slice`` rejects.
+    """
+    return pl.program_id(0) + jnp.sum(off_ref[...])
+
+
+def dyn(ref, start, size):
+    """Dynamic row-slice read of a whole-array ref."""
+    return ref[pl.dslice(start, size)]
+
+
+def dyn2(ref, start, size):
+    """Dynamic row-slice read of a 2-D ref (all columns)."""
+    return ref[pl.dslice(start, size), :]
+
+
+def erf_approx(x):
+    """erf via the Abramowitz-Stegun 7.1.26 polynomial (|err| < 1.5e-7).
+
+    ``jax.scipy.special.erf`` lowers to the modern ``erf`` HLO opcode,
+    which the xla crate's bundled xla_extension 0.5.1 text parser
+    rejects; this expansion uses only exp/mul/add and round-trips.
+    """
+    a1, a2, a3, a4, a5 = 0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429
+    p = 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))

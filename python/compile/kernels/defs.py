@@ -1,0 +1,262 @@
+"""Layer-1 Pallas kernels for the eight benchmark applications.
+
+Each kernel is defined as a :class:`KernelDef` bundling the Pallas body,
+shapes, example-input factory and the jnp oracle from :mod:`ref`. All
+kernels share the sliceable-grid convention of :mod:`common`:
+``N_BLOCKS`` thread blocks, slice outputs stacked on axis 0.
+
+Sizes are deliberately small (everything fits in one TPU core's VMEM;
+CPU interpretation is fast) — the point is composition with the rust
+runtime, not throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import dyn, dyn2, erf_approx, rectified_id, sliced_pallas_call
+
+# Every kernel uses 8 logical thread blocks so the slicing sweep
+# (1, 2, 4, 8 blocks) is uniform across the suite.
+N_BLOCKS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDef:
+    """One sliceable benchmark kernel."""
+
+    name: str
+    body: Callable
+    n_inputs: int
+    out_block: Sequence[int]
+    out_dtype: object
+    example_inputs: Callable[[int], tuple]
+    reference: Callable
+    description: str = ""
+
+    def run_slice(self, offset, *inputs, n_blocks: int = N_BLOCKS):
+        """Execute blocks [offset, offset + n_blocks) of the grid."""
+        call = sliced_pallas_call(
+            self.body,
+            n_inputs=self.n_inputs,
+            out_block=self.out_block,
+            out_dtype=self.out_dtype,
+            n_blocks=n_blocks,
+        )
+        return call(jnp.asarray([offset], jnp.int32), *inputs)
+
+    def run_full(self, *inputs):
+        """Full-grid execution (offset 0, all blocks)."""
+        return self.run_slice(0, *inputs, n_blocks=N_BLOCKS)
+
+
+# --- MM: tiled dense matmul -------------------------------------------
+MM_M, MM_K, MM_N = 128, 64, 64
+MM_TILE = MM_M // N_BLOCKS
+
+
+def _mm_body(off_ref, a_ref, b_ref, o_ref):
+    b = rectified_id(off_ref)
+    a_tile = dyn2(a_ref, b * MM_TILE, MM_TILE)  # (TILE, K) from HBM
+    o_ref[...] = a_tile @ b_ref[...]  # MXU-shaped tile matmul
+
+
+def _mm_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.standard_normal((MM_M, MM_K)), jnp.float32),
+        jnp.asarray(r.standard_normal((MM_K, MM_N)), jnp.float32),
+    )
+
+
+# --- BS: Black-Scholes ------------------------------------------------
+BS_N = 1024
+BS_TILE = BS_N // N_BLOCKS
+
+
+def _bs_body(off_ref, s_ref, k_ref, t_ref, o_ref):
+    b = rectified_id(off_ref)
+    s = dyn(s_ref, b * BS_TILE, BS_TILE)
+    k = dyn(k_ref, b * BS_TILE, BS_TILE)
+    t = dyn(t_ref, b * BS_TILE, BS_TILE)
+    r, sigma = 0.02, 0.3
+    sq = sigma * jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * sigma * sigma) * t) / sq
+    d2 = d1 - sq
+    ncdf = lambda x: 0.5 * (1.0 + erf_approx(x / jnp.sqrt(2.0)))
+    o_ref[...] = s * ncdf(d1) - k * jnp.exp(-r * t) * ncdf(d2)
+
+
+def _bs_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.uniform(10.0, 100.0, BS_N), jnp.float32),
+        jnp.asarray(r.uniform(10.0, 100.0, BS_N), jnp.float32),
+        jnp.asarray(r.uniform(0.1, 2.0, BS_N), jnp.float32),
+    )
+
+
+# --- ST: 1-D 3-point stencil ------------------------------------------
+ST_N = 1024
+ST_TILE = ST_N // N_BLOCKS
+
+
+def _st_body(off_ref, x_ref, o_ref):
+    b = rectified_id(off_ref)
+    # Input is padded by 2; block b needs rows [b*T, b*T + T + 2).
+    xs = dyn(x_ref, b * ST_TILE, ST_TILE + 2)
+    o_ref[...] = 0.25 * xs[:-2] + 0.5 * xs[1:-1] + 0.25 * xs[2:]
+
+
+def _st_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.standard_normal(ST_N + 2), jnp.float32),)
+
+
+# --- SPMV: ELL sparse matrix-vector ------------------------------------
+SPMV_ROWS, SPMV_NNZ, SPMV_COLS = 512, 8, 256
+SPMV_TILE = SPMV_ROWS // N_BLOCKS
+
+
+def _spmv_body(off_ref, data_ref, idx_ref, x_ref, o_ref):
+    b = rectified_id(off_ref)
+    data = dyn2(data_ref, b * SPMV_TILE, SPMV_TILE)
+    idx = dyn2(idx_ref, b * SPMV_TILE, SPMV_TILE)
+    x = x_ref[...]
+    o_ref[...] = jnp.sum(data * x[idx], axis=1)
+
+
+def _spmv_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.standard_normal((SPMV_ROWS, SPMV_NNZ)), jnp.float32),
+        jnp.asarray(r.integers(0, SPMV_COLS, (SPMV_ROWS, SPMV_NNZ)), jnp.int32),
+        jnp.asarray(r.standard_normal(SPMV_COLS), jnp.float32),
+    )
+
+
+# --- SAD: per-row sum of absolute differences ---------------------------
+SAD_ROWS, SAD_COLS = 64, 64
+SAD_TILE = SAD_ROWS // N_BLOCKS
+
+
+def _sad_body(off_ref, a_ref, b_ref, o_ref):
+    b = rectified_id(off_ref)
+    at = dyn2(a_ref, b * SAD_TILE, SAD_TILE)
+    bt = dyn2(b_ref, b * SAD_TILE, SAD_TILE)
+    o_ref[...] = jnp.sum(jnp.abs(at - bt), axis=1)
+
+
+def _sad_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.uniform(0.0, 255.0, (SAD_ROWS, SAD_COLS)), jnp.float32),
+        jnp.asarray(r.uniform(0.0, 255.0, (SAD_ROWS, SAD_COLS)), jnp.float32),
+    )
+
+
+# --- MRIQ: phase accumulation -------------------------------------------
+MRIQ_K, MRIQ_X = 64, 512
+MRIQ_TILE = MRIQ_X // N_BLOCKS
+
+
+def _mriq_body(off_ref, kx_ref, phi_ref, x_ref, o_ref):
+    b = rectified_id(off_ref)
+    x = dyn(x_ref, b * MRIQ_TILE, MRIQ_TILE)
+    kx = kx_ref[...]
+    phi = phi_ref[...]
+    o_ref[...] = jnp.sum(phi[None, :] * jnp.cos(jnp.outer(x, kx)), axis=1)
+
+
+def _mriq_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.standard_normal(MRIQ_K), jnp.float32),
+        jnp.asarray(r.standard_normal(MRIQ_K), jnp.float32),
+        jnp.asarray(r.standard_normal(MRIQ_X), jnp.float32),
+    )
+
+
+# --- PC: two-hop pointer chase ------------------------------------------
+PC_N = 1024
+PC_TILE = PC_N // N_BLOCKS
+
+
+def _pc_body(off_ref, idx_ref, data_ref, o_ref):
+    b = rectified_id(off_ref)
+    i0 = dyn(idx_ref, b * PC_TILE, PC_TILE)
+    idx = idx_ref[...]
+    data = data_ref[...]
+    o_ref[...] = data[idx[i0]]
+
+
+def _pc_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.permutation(PC_N), jnp.int32),
+        jnp.asarray(r.standard_normal(PC_N), jnp.float32),
+    )
+
+
+# --- TEA: block-cipher mixing rounds --------------------------------------
+TEA_N = 512
+TEA_TILE = TEA_N // N_BLOCKS
+TEA_ROUNDS = 4
+
+
+def _tea_body(off_ref, v_ref, key_ref, o_ref):
+    b = rectified_id(off_ref)
+    v = dyn2(v_ref, b * TEA_TILE, TEA_TILE)
+    key = key_ref[...]
+    delta = jnp.int32(-1640531527)
+    v0, v1 = v[:, 0], v[:, 1]
+    k0, k1, k2, k3 = key[0], key[1], key[2], key[3]
+    s = jnp.int32(0)
+    rshift5 = lambda x: jnp.bitwise_and(x >> 5, jnp.int32((1 << 27) - 1))
+    for _ in range(TEA_ROUNDS):
+        s = s + delta
+        v0 = v0 + jnp.bitwise_xor(jnp.bitwise_xor((v1 << 4) + k0, v1 + s), rshift5(v1) + k1)
+        v1 = v1 + jnp.bitwise_xor(jnp.bitwise_xor((v0 << 4) + k2, v0 + s), rshift5(v0) + k3)
+    o_ref[...] = jnp.stack([v0, v1], axis=1)
+
+
+def _tea_inputs(seed):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.integers(-(2**31), 2**31 - 1, (TEA_N, 2)), jnp.int32),
+        jnp.asarray(r.integers(-(2**31), 2**31 - 1, 4), jnp.int32),
+    )
+
+
+def _tea_ref(v, key):
+    return ref.tea_ref(v, key, rounds=TEA_ROUNDS)
+
+
+REGISTRY: dict[str, KernelDef] = {
+    k.name: k
+    for k in [
+        KernelDef("mm", _mm_body, 2, (MM_TILE, MM_N), jnp.float32, _mm_inputs, ref.mm_ref,
+                  "tiled dense matmul"),
+        KernelDef("bs", _bs_body, 3, (BS_TILE,), jnp.float32, _bs_inputs, ref.bs_ref,
+                  "Black-Scholes call pricing"),
+        KernelDef("st", _st_body, 1, (ST_TILE,), jnp.float32, _st_inputs, ref.st_ref,
+                  "1-D 3-point stencil"),
+        KernelDef("spmv", _spmv_body, 3, (SPMV_TILE,), jnp.float32, _spmv_inputs, ref.spmv_ref,
+                  "ELL sparse matrix-vector multiply"),
+        KernelDef("sad", _sad_body, 2, (SAD_TILE,), jnp.float32, _sad_inputs, ref.sad_ref,
+                  "per-row sum of absolute differences"),
+        KernelDef("mriq", _mriq_body, 3, (MRIQ_TILE,), jnp.float32, _mriq_inputs, ref.mriq_ref,
+                  "MRI-Q phase accumulation"),
+        KernelDef("pc", _pc_body, 2, (PC_TILE,), jnp.float32, _pc_inputs, ref.pc_ref,
+                  "two-hop pointer chase"),
+        KernelDef("tea", _tea_body, 2, (TEA_TILE, 2), jnp.int32, _tea_inputs, _tea_ref,
+                  "TEA cipher mixing rounds"),
+    ]
+}

@@ -1,0 +1,63 @@
+"""Steady-state solver as a Pallas kernel (the scheduler's L1 hot spot).
+
+Kernelet's FindCoSchedule evaluates the heterogeneous Markov chain for
+every candidate pair; the dominant cost is the steady-state computation
+over the transition matrix. This kernel runs the power iteration
+entirely in VMEM: the (padded) transition matrix and the probability
+vector stay resident while ``ITERS`` mat-vec rounds execute — on a TPU
+this is a textbook MXU workload (64x64 f32 fits trivially; HBM traffic
+is one matrix load).
+
+Padding contract: callers embed an (n <= PAD)-state chain into a
+PAD x PAD matrix whose padding rows are identity self-loops and supply a
+start vector ``pi0`` with zero mass on the padding states; identity
+self-loops then never receive mass and the active sub-chain converges
+exactly as the unpadded one would.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shape: covers any block-granularity hetero chain of the
+# rust model ((b1+1)(b2+1) <= 64 on both evaluation GPUs at block
+# granularity after the virtual-SM reduction).
+PAD = 64
+ITERS = 256
+
+
+def _steady_body(p_ref, pi0_ref, o_ref):
+    p = p_ref[...]
+    pi0 = pi0_ref[...]
+
+    def body(_, pi):
+        nxt = pi @ p
+        return nxt / jnp.sum(nxt)
+
+    o_ref[...] = jax.lax.fori_loop(0, ITERS, body, pi0)
+
+
+@functools.partial(jax.jit)
+def steady_state(p, pi0):
+    """Power-iteration steady state of a PAD x PAD row-stochastic matrix."""
+    assert p.shape == (PAD, PAD), p.shape
+    assert pi0.shape == (PAD,), pi0.shape
+    return pl.pallas_call(
+        _steady_body,
+        out_shape=jax.ShapeDtypeStruct((PAD,), jnp.float32),
+        interpret=True,
+    )(p, pi0)
+
+
+def pad_chain(p_small, pi0_small):
+    """Embed an n-state chain + start vector into the PAD-state frame."""
+    n = p_small.shape[0]
+    assert p_small.shape == (n, n) and n <= PAD
+    p = jnp.eye(PAD, dtype=jnp.float32)
+    p = p.at[:n, :n].set(jnp.asarray(p_small, jnp.float32))
+    pi0 = jnp.zeros((PAD,), jnp.float32).at[:n].set(jnp.asarray(pi0_small, jnp.float32))
+    return p, pi0

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every benchmark kernel (the correctness signal).
+
+Each ``*_ref`` computes the full-grid output the sliceable Pallas kernel
+must reproduce. Kept deliberately free of Pallas so a bug in the kernel
+plumbing cannot hide in the oracle.
+"""
+
+from __future__ import annotations
+
+from .common import erf_approx
+
+import jax.numpy as jnp
+
+
+def mm_ref(a, b):
+    """Dense matmul C = A @ B."""
+    return a @ b
+
+
+def bs_ref(s, k, t):
+    """Black-Scholes European call price (r, sigma fixed constants)."""
+    r, sigma = 0.02, 0.3
+    sq = sigma * jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * sigma * sigma) * t) / sq
+    d2 = d1 - sq
+    ncdf = lambda x: 0.5 * (1.0 + erf_approx(x / jnp.sqrt(2.0)))
+    return s * ncdf(d1) - k * jnp.exp(-r * t) * ncdf(d2)
+
+
+def st_ref(x):
+    """1-D 3-point stencil over a (n+2)-padded input -> n outputs."""
+    return 0.25 * x[:-2] + 0.5 * x[1:-1] + 0.25 * x[2:]
+
+
+def spmv_ref(data, idx, x):
+    """ELL SpMV: y_r = sum_j data[r,j] * x[idx[r,j]]."""
+    return jnp.sum(data * x[idx], axis=1)
+
+
+def sad_ref(a, b):
+    """Per-row sum of absolute differences of two images."""
+    return jnp.sum(jnp.abs(a - b), axis=1)
+
+
+def mriq_ref(kx, phi, x):
+    """MRI-Q-style phase accumulation: out_i = sum_k phi_k cos(kx_k x_i)."""
+    return jnp.sum(phi[None, :] * jnp.cos(jnp.outer(x, kx)), axis=1)
+
+
+def pc_ref(idx, data):
+    """Two-hop pointer chase: out_i = data[idx[idx[i]]]."""
+    return data[idx[idx]]
+
+
+def tea_ref(v, key, rounds=4):
+    """TEA-like mixing rounds on (n, 2) int32 pairs.
+
+    Uses int32 two's-complement wrapping; right shifts are masked to
+    emulate logical shifts so the Pallas kernel and this oracle agree
+    bit for bit.
+    """
+    delta = jnp.int32(-1640531527)  # 0x9E3779B9 as int32
+    v0, v1 = v[:, 0], v[:, 1]
+    k0, k1, k2, k3 = key[0], key[1], key[2], key[3]
+    s = jnp.int32(0)
+    lshift = lambda x, n: (x << n)
+    rshift = lambda x, n: jnp.bitwise_and(x >> n, jnp.int32((1 << (31 - n + 1)) - 1) if n else -1)
+    for _ in range(rounds):
+        s = s + delta
+        v0 = v0 + (jnp.bitwise_xor(jnp.bitwise_xor(lshift(v1, 4) + k0, v1 + s), rshift(v1, 5) + k1))
+        v1 = v1 + (jnp.bitwise_xor(jnp.bitwise_xor(lshift(v0, 4) + k2, v0 + s), rshift(v0, 5) + k3))
+    return jnp.stack([v0, v1], axis=1)

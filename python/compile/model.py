@@ -1,0 +1,57 @@
+"""Layer 2: the jitted compute graphs the AOT pipeline lowers.
+
+For every benchmark kernel this module exposes one jitted function per
+slice size (the AOT variants rust loads as separate executables), plus
+the Markov steady-state solver. Python never runs on the request path:
+these functions exist to be ``jax.jit(...).lower(...)``-ed by
+``aot.py``; the tests call them directly to validate numerics first.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import markov
+from .kernels.defs import N_BLOCKS, REGISTRY, KernelDef
+
+# Slice sizes lowered ahead of time; a co-schedule picks among these.
+SLICE_VARIANTS = (N_BLOCKS, N_BLOCKS // 2, N_BLOCKS // 4)
+
+
+def slice_fn(kdef: KernelDef, n_blocks: int):
+    """The jittable (offset, *inputs) -> slice-output function."""
+
+    def fn(offset, *inputs):
+        return kdef.run_slice(offset, *inputs, n_blocks=n_blocks)
+
+    fn.__name__ = f"{kdef.name}_nb{n_blocks}"
+    return fn
+
+
+def jitted_slice(kdef: KernelDef, n_blocks: int):
+    return jax.jit(slice_fn(kdef, n_blocks))
+
+
+@functools.lru_cache(maxsize=None)
+def example_shapes(name: str):
+    """ShapeDtypeStructs of (offset, *inputs) for lowering."""
+    kdef = REGISTRY[name]
+    inputs = kdef.example_inputs(0)
+    specs = [jax.ShapeDtypeStruct((1,), jnp.int32)]
+    specs += [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in inputs]
+    return tuple(specs)
+
+
+def steady_state_fn():
+    """The Markov steady-state solver (see kernels/markov.py)."""
+    return jax.jit(markov.steady_state)
+
+
+def steady_state_shapes():
+    return (
+        jax.ShapeDtypeStruct((markov.PAD, markov.PAD), jnp.float32),
+        jax.ShapeDtypeStruct((markov.PAD,), jnp.float32),
+    )

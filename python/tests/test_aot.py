@@ -1,0 +1,51 @@
+"""The AOT pipeline produces loadable HLO text."""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+from compile.kernels.defs import REGISTRY
+
+
+def test_lower_one_kernel_produces_hlo():
+    text, line = aot.lower_kernel("mm", 4)
+    assert "ENTRY" in text
+    assert "f32[" in text
+    assert line.startswith("mm|4|in:int32:1,")
+
+
+def test_lower_markov_produces_hlo():
+    text, line = aot.lower_markov()
+    assert "ENTRY" in text
+    assert "f32[64,64]" in text.replace(" ", "")
+    assert line.startswith("markov_steady|1|")
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_all_kernels_lower(name):
+    for nb in model.SLICE_VARIANTS:
+        text, _ = aot.lower_kernel(name, nb)
+        assert "ENTRY" in text, f"{name} nb={nb}"
+
+
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "arts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--kernels", "sad"],
+        check=True,
+        cwd=pathlib.Path(__file__).resolve().parents[1],
+    )
+    files = {p.name for p in out.iterdir()}
+    assert "sad_nb8.hlo.txt" in files
+    assert "markov_steady.hlo.txt" in files
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    data_lines = [l for l in manifest if not l.startswith("#")]
+    assert len(data_lines) == len(model.SLICE_VARIANTS) + 1
+    for line in data_lines:
+        parts = line.split("|")
+        assert len(parts) == 5, line
+        assert parts[3].startswith("in:")
+        assert parts[4].startswith("out:")

@@ -1,0 +1,74 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas kernel's full-grid output must match its pure-jnp oracle,
+and hypothesis sweeps input values (the shapes are static by design —
+one AOT artifact per shape).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.defs import N_BLOCKS, REGISTRY
+
+NAMES = sorted(REGISTRY)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_full_grid_matches_reference(name):
+    kdef = REGISTRY[name]
+    inputs = kdef.example_inputs(seed=123)
+    got = kdef.run_full(*inputs)
+    want = kdef.reference(*inputs)
+    assert got.shape == want.shape, f"{name}: {got.shape} vs {want.shape}"
+    assert got.dtype == want.dtype
+    if jnp.issubdtype(got.dtype, jnp.floating):
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", NAMES)
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_full_grid_matches_reference_random_inputs(name, seed):
+    kdef = REGISTRY[name]
+    inputs = kdef.example_inputs(seed=seed)
+    got = kdef.run_full(*inputs)
+    want = kdef.reference(*inputs)
+    if jnp.issubdtype(got.dtype, jnp.floating):
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_integer_kernels_bit_exact(name):
+    kdef = REGISTRY[name]
+    if not jnp.issubdtype(kdef.out_dtype, jnp.integer):
+        pytest.skip("float kernel")
+    inputs = kdef.example_inputs(seed=7)
+    np.testing.assert_array_equal(kdef.run_full(*inputs), kdef.reference(*inputs))
+
+
+def test_registry_has_all_eight():
+    assert NAMES == sorted(["mm", "bs", "st", "spmv", "sad", "mriq", "pc", "tea"])
+    for kdef in REGISTRY.values():
+        assert N_BLOCKS % 2 == 0
+        assert kdef.n_inputs == len(kdef.example_inputs(0))
+
+
+def test_erf_approx_accuracy():
+    """The A-S 7.1.26 polynomial must track jax's erf within 2e-6 —
+    it replaces the `erf` HLO opcode the old XLA parser rejects."""
+    import jax.numpy as jnp
+    from jax.scipy.special import erf as jax_erf
+
+    from compile.kernels.common import erf_approx
+
+    x = jnp.linspace(-5.0, 5.0, 4001)
+    np.testing.assert_allclose(erf_approx(x), jax_erf(x), atol=2e-6)
+    # Odd symmetry and saturation.
+    np.testing.assert_allclose(erf_approx(-x), -erf_approx(x), atol=1e-7)
+    assert float(erf_approx(jnp.float32(10.0))) == 1.0

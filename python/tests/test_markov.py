@@ -1,0 +1,70 @@
+"""Steady-state Pallas kernel vs dense linear algebra."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import markov
+
+
+def random_chain(n, seed):
+    r = np.random.default_rng(seed)
+    p = r.random((n, n)) + 0.05  # strictly positive -> ergodic
+    p /= p.sum(axis=1, keepdims=True)
+    return p.astype(np.float32)
+
+
+def steady_reference(p):
+    """Left eigenvector for eigenvalue 1 via numpy eig."""
+    w, v = np.linalg.eig(p.T)
+    i = int(np.argmin(np.abs(w - 1.0)))
+    pi = np.real(v[:, i])
+    pi = np.abs(pi)
+    return pi / pi.sum()
+
+
+@pytest.mark.parametrize("n", [2, 5, 16, 64])
+def test_matches_eigenvector(n):
+    p_small = random_chain(n, seed=n)
+    pi0 = np.full((n,), 1.0 / n, np.float32)
+    p, pi0p = markov.pad_chain(p_small, pi0)
+    got = np.asarray(markov.steady_state(p, pi0p))[:n]
+    want = steady_reference(p_small)
+    np.testing.assert_allclose(got, want, atol=2e-4)
+
+
+def test_padding_states_stay_empty():
+    p_small = random_chain(6, seed=3)
+    pi0 = np.full((6,), 1.0 / 6, np.float32)
+    p, pi0p = markov.pad_chain(p_small, pi0)
+    out = np.asarray(markov.steady_state(p, pi0p))
+    assert np.all(out[6:] == 0.0)
+    np.testing.assert_allclose(out.sum(), 1.0, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**20), n=st.integers(2, 32))
+def test_output_is_distribution(seed, n):
+    p_small = random_chain(n, seed)
+    pi0 = np.full((n,), 1.0 / n, np.float32)
+    p, pi0p = markov.pad_chain(p_small, pi0)
+    out = np.asarray(markov.steady_state(p, pi0p))
+    assert np.all(out >= -1e-7)
+    np.testing.assert_allclose(out.sum(), 1.0, atol=1e-5)
+
+
+def test_two_state_analytic():
+    # pi0 = p10/(p01+p10) for the canonical 2-state chain.
+    p = np.array([[0.7, 0.3], [0.1, 0.9]], np.float32)
+    pp, pi0 = markov.pad_chain(p, np.array([0.5, 0.5], np.float32))
+    out = np.asarray(markov.steady_state(pp, pi0))[:2]
+    np.testing.assert_allclose(out, [0.25, 0.75], atol=1e-5)
+
+
+def test_fixed_shapes():
+    assert markov.PAD == 64
+    p = jnp.eye(markov.PAD, dtype=jnp.float32)
+    pi0 = jnp.zeros((markov.PAD,), jnp.float32).at[0].set(1.0)
+    out = markov.steady_state(p, pi0)
+    assert out.shape == (markov.PAD,)

@@ -1,0 +1,81 @@
+"""Slicing semantics: the JAX-level index-rectification property.
+
+The defining property of the sliceable-grid convention (paper §4.1):
+for ANY partition of the grid into contiguous slices, concatenating the
+slice outputs equals the full-grid output exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.defs import N_BLOCKS, REGISTRY
+
+NAMES = sorted(REGISTRY)
+
+
+def partitions():
+    """Strategy: contiguous partitions of range(N_BLOCKS)."""
+    return st.lists(
+        st.integers(1, N_BLOCKS), min_size=1, max_size=N_BLOCKS
+    ).map(_clip_partition)
+
+
+def _clip_partition(sizes):
+    out, total = [], 0
+    for s in sizes:
+        s = min(s, N_BLOCKS - total)
+        if s <= 0:
+            break
+        out.append(s)
+        total += s
+    if total < N_BLOCKS:
+        out.append(N_BLOCKS - total)
+    return out
+
+
+@pytest.mark.parametrize("name", NAMES)
+@settings(max_examples=12, deadline=None)
+@given(sizes=partitions(), seed=st.integers(0, 2**20))
+def test_concat_of_slices_equals_full(name, sizes, seed):
+    kdef = REGISTRY[name]
+    inputs = kdef.example_inputs(seed=seed)
+    full = kdef.run_full(*inputs)
+    chunks = []
+    offset = 0
+    for s in sizes:
+        chunks.append(kdef.run_slice(offset, *inputs, n_blocks=s))
+        offset += s
+    assert offset == N_BLOCKS
+    stitched = jnp.concatenate(chunks, axis=0)
+    np.testing.assert_array_equal(np.asarray(stitched), np.asarray(full)), name
+
+
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("nb", [1, 2, 4])
+def test_single_slice_matches_full_region(name, nb):
+    """A slice at offset k must equal rows [k*T, (k+nb)*T) of the full run."""
+    kdef = REGISTRY[name]
+    inputs = kdef.example_inputs(seed=5)
+    full = np.asarray(kdef.run_full(*inputs))
+    rows_per_block = full.shape[0] // N_BLOCKS
+    for offset in range(0, N_BLOCKS - nb + 1, nb):
+        got = np.asarray(kdef.run_slice(offset, *inputs, n_blocks=nb))
+        want = full[offset * rows_per_block : (offset + nb) * rows_per_block]
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_out_of_order_slices_commute(name):
+    """Slices are independent: executing them in reverse order yields the
+    same stitched result (thread-block independence, paper §2.2)."""
+    kdef = REGISTRY[name]
+    inputs = kdef.example_inputs(seed=9)
+    full = np.asarray(kdef.run_full(*inputs))
+    halves = [
+        np.asarray(kdef.run_slice(N_BLOCKS // 2, *inputs, n_blocks=N_BLOCKS // 2)),
+        np.asarray(kdef.run_slice(0, *inputs, n_blocks=N_BLOCKS // 2)),
+    ]
+    stitched = np.concatenate([halves[1], halves[0]], axis=0)
+    np.testing.assert_array_equal(stitched, full)

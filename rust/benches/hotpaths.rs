@@ -1,0 +1,119 @@
+//! Hot-path microbenchmarks + design ablations (DESIGN.md §6).
+//!
+//! Run: `cargo bench --bench hotpaths`
+//!
+//! - simulator instruction throughput (the Fig. 13 substrate);
+//! - Markov steady state: power iteration vs dense solve
+//!   (`ablation_steady_solver`);
+//! - chain granularity: warp vs block (`ablation_state_granularity`);
+//! - pruning on vs off in FindCoSchedule (`ablation_pruning`);
+//! - PTX slicing transform throughput.
+
+use kernelet::bench::{bench, black_box};
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::pruning::PruneParams;
+use kernelet::coordinator::Coordinator;
+use kernelet::kernel::{BenchmarkApp, KernelInstance};
+use kernelet::model::chain::{steady_state_dense, steady_state_power};
+use kernelet::model::hetero::build_hetero_chain;
+use kernelet::model::params::{ChainParams, Granularity, SmEnv};
+use kernelet::model::{predict_pair, predict_solo};
+use kernelet::sim::{simulate_solo, SmEngine, Workload};
+
+fn main() {
+    sim_throughput();
+    ablation_steady_solver();
+    ablation_state_granularity();
+    ablation_pruning();
+    ptx_throughput();
+}
+
+fn sim_throughput() {
+    let gpu = GpuConfig::c2050();
+    let spec = BenchmarkApp::MM.spec().with_grid(256);
+    let insts = kernelet::sim::blocks_on_sm(&gpu, spec.grid_blocks) as u64
+        * spec.inst_per_block(&gpu);
+    let r = bench("sim::solo_mm_256_blocks", 2, 10, || {
+        let mut e = SmEngine::new(&gpu, 1);
+        e.add_workload(Workload::new(spec.clone(), kernelet::sim::blocks_on_sm(&gpu, 256)));
+        black_box(e.run());
+    });
+    let mips = insts as f64 / r.mean.as_secs_f64() / 1e6;
+    println!("  -> {mips:.1} M simulated warp-instructions/s (target >= 10)");
+
+    let pc = BenchmarkApp::PC.spec().with_grid(256);
+    bench("sim::solo_pc_256_blocks(memory-bound)", 2, 10, || {
+        black_box(simulate_solo(&gpu, &pc, 3));
+    });
+}
+
+fn ablation_steady_solver() {
+    let gpu = GpuConfig::c2050();
+    let env = SmEnv::virtual_sm(&gpu);
+    let (k1, k2) = (BenchmarkApp::TEA.spec(), BenchmarkApp::PC.spec());
+    let p1 = ChainParams::from_kernel(&gpu, &k1, 4, Granularity::Block, env.vsm_count);
+    let p2 = ChainParams::from_kernel(&gpu, &k2, 3, Granularity::Block, env.vsm_count);
+    let chain = build_hetero_chain(&p1, &p2, &env);
+    println!("hetero chain states: {}", chain.n);
+    bench("steady_state::power_iteration", 3, 200, || {
+        black_box(steady_state_power(&chain, 1e-10, 20_000));
+    });
+    bench("steady_state::dense_solve_O(N^3)", 3, 200, || {
+        black_box(steady_state_dense(&chain));
+    });
+}
+
+fn ablation_state_granularity() {
+    let gpu = GpuConfig::c2050();
+    let (k1, k2) = (BenchmarkApp::TEA.spec(), BenchmarkApp::PC.spec());
+    let s1 = predict_solo(&gpu, &k1, Granularity::Block).ipc;
+    let s2 = predict_solo(&gpu, &k2, Granularity::Block).ipc;
+    bench("predict_pair::block_granularity", 2, 50, || {
+        black_box(predict_pair(&gpu, &k1, 4, s1, &k2, 3, s2, Granularity::Block));
+    });
+    bench("predict_pair::warp_granularity", 2, 5, || {
+        black_box(predict_pair(&gpu, &k1, 4, s1, &k2, 3, s2, Granularity::Warp));
+    });
+    let b = predict_pair(&gpu, &k1, 4, s1, &k2, 3, s2, Granularity::Block);
+    let w = predict_pair(&gpu, &k1, 4, s1, &k2, 3, s2, Granularity::Warp);
+    println!(
+        "  -> total IPC block={:.4} warp={:.4} (rel diff {:.1}%)",
+        b.total_ipc,
+        w.total_ipc,
+        (b.total_ipc - w.total_ipc).abs() / w.total_ipc * 100.0
+    );
+}
+
+fn ablation_pruning() {
+    let gpu = GpuConfig::c2050();
+    let insts: Vec<KernelInstance> = BenchmarkApp::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, a)| KernelInstance::new(i as u64, a.spec(), 0.0))
+        .collect();
+    let refs: Vec<&KernelInstance> = insts.iter().collect();
+
+    let with = Coordinator::new(&gpu);
+    with.find_coschedule(&refs); // warm caches
+    bench("find_coschedule::pruning_on", 3, 100, || {
+        black_box(with.find_coschedule(&refs));
+    });
+
+    let mut without = Coordinator::new(&gpu);
+    without.prune = PruneParams::off();
+    without.find_coschedule(&refs);
+    bench("find_coschedule::pruning_off", 3, 100, || {
+        black_box(without.find_coschedule(&refs));
+    });
+}
+
+fn ptx_throughput() {
+    use kernelet::ptx::{parse_kernel, rectify, samples, RectifyOptions};
+    let k = parse_kernel(samples::MATRIX_ADD).unwrap();
+    bench("ptx::parse_matrix_add", 5, 500, || {
+        black_box(parse_kernel(samples::MATRIX_ADD).unwrap());
+    });
+    bench("ptx::rectify_matrix_add(2d)", 5, 500, || {
+        black_box(rectify(&k, &RectifyOptions::two_d()));
+    });
+}

@@ -1,0 +1,17 @@
+//! Regenerate the model-validation and slicing figures
+//! (Figs. 4, 6, 7, 8, 9, 10, 11, 12) and time each regeneration.
+//!
+//! Run: `cargo bench --bench paper_figures`
+//! (Scheduling figures 13/14 live in the `scheduling` bench — they
+//! dominate runtime and deserve their own target.)
+
+use kernelet::bench::once;
+use kernelet::figures::{generate, FigOptions};
+
+fn main() {
+    let opts = FigOptions::default();
+    for id in ["fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12"] {
+        let (rep, _) = once(&format!("generate::{id}"), || generate(id, &opts).unwrap());
+        println!("{}", rep.render());
+    }
+}

@@ -1,0 +1,14 @@
+//! Regenerate paper Tables 2, 4 and 6 (and time the generation).
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use kernelet::bench::once;
+use kernelet::figures::{generate, FigOptions};
+
+fn main() {
+    let opts = FigOptions::default();
+    for id in ["table2", "table4", "table6"] {
+        let (rep, _) = once(&format!("generate::{id}"), || generate(id, &opts).unwrap());
+        println!("{}", rep.render());
+    }
+}

@@ -1,0 +1,46 @@
+//! End-to-end scheduling benchmarks: paper Figs. 13 and 14, plus the
+//! scheduler-throughput microbenches the §Perf pass tracks.
+//!
+//! Run: `cargo bench --bench scheduling`
+//! Environment: `KERNELET_INSTANCES` overrides instances/app (default
+//! 200 here; the paper uses 1000 — see EXPERIMENTS.md for a full run).
+
+use kernelet::bench::{bench, once};
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::figures::{generate, FigOptions};
+use kernelet::workload::{Mix, Stream};
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let opts = FigOptions { instances_per_app: instances, mc_samples: 200, ..Default::default() };
+
+    for id in ["fig13", "fig14"] {
+        let (rep, _) = once(&format!("generate::{id}"), || generate(id, &opts).unwrap());
+        println!("{}", rep.render());
+    }
+
+    // Scheduler hot-path microbenches (§Perf targets).
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let stream = Stream::saturated(Mix::ALL, 4, 7);
+    // Warm the caches once so the steady-state cost is measured.
+    run_kernelet(&coord, &stream);
+
+    let refs: Vec<&kernelet::kernel::KernelInstance> = stream.instances.iter().collect();
+    bench("find_coschedule::all_8_apps_warm", 3, 50, || {
+        kernelet::bench::black_box(coord.find_coschedule(&refs));
+    });
+
+    bench("run_kernelet::ALLx4_warm_cache", 1, 10, || {
+        kernelet::bench::black_box(run_kernelet(&coord, &stream));
+    });
+
+    let big = Stream::saturated(Mix::ALL, 100, 11);
+    bench("run_kernelet::ALLx100_warm_cache", 1, 3, || {
+        kernelet::bench::black_box(run_kernelet(&coord, &big));
+    });
+}

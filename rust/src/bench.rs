@@ -1,0 +1,88 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: each
+//! benchmark measures wall-clock over warmup + timed iterations and
+//! prints a criterion-like summary line. Figure-regeneration benches
+//! additionally print the regenerated paper table so `cargo bench`
+//! output doubles as the reproduction record.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "bench {:<44} {:>10.3?} /iter (min {:.3?}, max {:.3?}, n={})",
+            self.name, self.mean, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    println!("{}", res.summary());
+    res
+}
+
+/// Run `f` once, timed, labeled — for end-to-end regenerations where a
+/// single run is the deliverable.
+pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("bench {name:<44} {dt:>10.3?} (single run)");
+    (out, dt)
+}
+
+/// Black-box to defeat the optimizer (stable-rust friendly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u32;
+        let r = bench("test", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean && r.mean <= r.max.max(r.mean));
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, dt) = once("t", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,283 @@
+//! GPU architecture configurations (paper Table 2).
+//!
+//! Kernelet is evaluated on an NVIDIA Tesla C2050 (Fermi GF110) and a
+//! GTX680 (Kepler GK104). Since no such hardware exists in this
+//! environment, these configs parameterize the cycle-level simulator in
+//! [`crate::sim`] and the Markov model in [`crate::model`]. Values marked
+//! "calibrated" are not in Table 2 and were chosen to reproduce the
+//! paper's *shapes* (see DESIGN.md §2).
+
+/// GPU micro-architecture generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// Fermi-class: 2 warp schedulers/SM, each issuing half a warp per
+    /// cycle (theoretical IPC of 1 instruction/cycle/SM as the paper
+    /// normalizes it).
+    Fermi,
+    /// Kepler-class: 4 warp schedulers/SMX with dual issue (theoretical
+    /// IPC of 8 as the paper normalizes it).
+    Kepler,
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Arch::Fermi => write!(f, "Fermi"),
+            Arch::Kepler => write!(f, "Kepler"),
+        }
+    }
+}
+
+/// Full configuration of one GPU (paper Table 2 + simulator calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Marketing name, e.g. "Tesla C2050".
+    pub name: &'static str,
+    pub arch: Arch,
+    /// Number of streaming multiprocessors.
+    pub num_sms: u32,
+    /// Scalar cores per SM.
+    pub cores_per_sm: u32,
+    /// Core clock in MHz.
+    pub core_mhz: u32,
+    /// Global memory size in MB.
+    pub mem_mb: u32,
+    /// Global memory bandwidth in GB/s.
+    pub mem_bw_gbs: f64,
+    /// Threads per warp (32 on all NVIDIA parts).
+    pub warp_size: u32,
+    /// Maximum resident warps per SM.
+    pub max_warps_per_sm: u32,
+    /// Maximum resident thread blocks per SM.
+    pub max_blocks_per_sm: u32,
+    /// Maximum resident threads per SM.
+    pub max_threads_per_sm: u32,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u32,
+    /// Shared memory per SM in bytes.
+    pub smem_per_sm: u32,
+    /// Warp schedulers per SM.
+    pub warp_schedulers: u32,
+    /// Instructions each scheduler can issue per cycle (0.5 on Fermi —
+    /// one warp takes two cycles across the 16-wide half pipeline; 2.0 on
+    /// Kepler with dual issue).
+    pub issue_per_scheduler: f64,
+    /// Uncontended global-memory latency in cycles (calibrated).
+    pub mem_latency_cycles: f64,
+    /// Per-request incremental latency under contention, in cycles per
+    /// outstanding request beyond the bandwidth limit (calibrated linear
+    /// model, paper §4.4: L = L0 + f(outstanding)/B).
+    pub mem_contention_slope: f64,
+    /// Fixed cost of launching one kernel/slice, in SM cycles
+    /// (calibrated: high on Fermi, low on Kepler — the architectural
+    /// difference behind Fig. 6).
+    pub launch_overhead_cycles: f64,
+    /// Memory transaction size in bytes (one coalesced request).
+    pub mem_request_bytes: u32,
+    /// 32-byte memory sectors one SM's load/store units can generate per
+    /// cycle (one coalesced 128B request = 4 sectors). This is the
+    /// Peak_MPC normalization for the paper's MUR metric.
+    pub lsu_sectors_per_cycle: f64,
+    /// Scale on kernels' (Fermi-calibrated) dependent-arithmetic
+    /// latency: GK104 carries 6x the ALUs and 8x the SFUs of GF110 per
+    /// SM at a lower clock, so dependency chains cost far fewer issue
+    /// slots per warp (calibrated).
+    pub arith_latency_scale: f64,
+}
+
+impl GpuConfig {
+    /// NVIDIA Tesla C2050 (Fermi GF110), paper Table 2 column 1.
+    pub fn c2050() -> Self {
+        GpuConfig {
+            name: "Tesla C2050",
+            arch: Arch::Fermi,
+            num_sms: 14,
+            cores_per_sm: 32,
+            core_mhz: 1147,
+            mem_mb: 3072,
+            mem_bw_gbs: 144.0,
+            warp_size: 32,
+            max_warps_per_sm: 48,
+            max_blocks_per_sm: 8,
+            max_threads_per_sm: 1536,
+            regs_per_sm: 32768,
+            smem_per_sm: 48 * 1024,
+            warp_schedulers: 2,
+            issue_per_scheduler: 0.5,
+            mem_latency_cycles: 440.0,
+            mem_contention_slope: 24.0,
+            // Fermi kernel launches serialize through a single hardware
+            // queue; ~7.5us measured by microbenchmarks of the era.
+            launch_overhead_cycles: 8600.0,
+            mem_request_bytes: 128,
+            lsu_sectors_per_cycle: 4.0,
+            arith_latency_scale: 1.0,
+        }
+    }
+
+    /// NVIDIA GTX680 (Kepler GK104), paper Table 2 column 2.
+    pub fn gtx680() -> Self {
+        GpuConfig {
+            name: "GTX680",
+            arch: Arch::Kepler,
+            num_sms: 8,
+            cores_per_sm: 192,
+            core_mhz: 706,
+            mem_mb: 2048,
+            mem_bw_gbs: 192.0,
+            warp_size: 32,
+            max_warps_per_sm: 64,
+            max_blocks_per_sm: 16,
+            max_threads_per_sm: 2048,
+            regs_per_sm: 65536,
+            smem_per_sm: 48 * 1024,
+            warp_schedulers: 4,
+            issue_per_scheduler: 2.0,
+            mem_latency_cycles: 350.0,
+            mem_contention_slope: 10.0,
+            // Kepler's Hyper-Q-era launch path is far cheaper (Fig. 6
+            // shows <2% overhead at nearly all slice sizes).
+            launch_overhead_cycles: 900.0,
+            mem_request_bytes: 128,
+            lsu_sectors_per_cycle: 8.0,
+            arith_latency_scale: 0.4,
+        }
+    }
+
+    /// Both evaluation GPUs, in paper order.
+    pub fn all() -> Vec<Self> {
+        vec![Self::c2050(), Self::gtx680()]
+    }
+
+    /// Theoretical peak instructions per cycle per SM, the paper's IPC
+    /// normalization (1.0 for C2050, 8.0 for GTX680).
+    pub fn peak_ipc(&self) -> f64 {
+        self.warp_schedulers as f64 * self.issue_per_scheduler
+    }
+
+    /// Peak memory requests per cycle for the whole GPU
+    /// (bandwidth / request size / clock), the paper's Peak_MPC.
+    pub fn peak_mpc(&self) -> f64 {
+        self.mem_bw_gbs * 1e9 / self.mem_request_bytes as f64 / (self.core_mhz as f64 * 1e6)
+    }
+
+    /// Peak memory requests per cycle available to a single SM.
+    pub fn peak_mpc_per_sm(&self) -> f64 {
+        self.peak_mpc() / self.num_sms as f64
+    }
+
+    /// DRAM service rate per SM in 32-byte sectors per cycle — the
+    /// bandwidth share the simulator's memory queue drains at.
+    pub fn dram_sectors_per_cycle_per_sm(&self) -> f64 {
+        self.mem_bw_gbs * 1e9 / 32.0 / self.clock_hz() / self.num_sms as f64
+    }
+
+    /// Core clock in Hz.
+    pub fn clock_hz(&self) -> f64 {
+        self.core_mhz as f64 * 1e6
+    }
+
+    /// Convert SM cycles to seconds.
+    pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz()
+    }
+
+    /// Resident blocks per SM for a kernel with the given per-block
+    /// resource usage (the CUDA occupancy calculation).
+    pub fn blocks_per_sm(&self, threads_per_block: u32, regs_per_thread: u32, smem_per_block: u32) -> u32 {
+        assert!(threads_per_block > 0, "empty thread block");
+        let by_threads = self.max_threads_per_sm / threads_per_block;
+        let by_blocks = self.max_blocks_per_sm;
+        let by_regs = if regs_per_thread == 0 {
+            u32::MAX
+        } else {
+            self.regs_per_sm / (regs_per_thread * threads_per_block)
+        };
+        let by_smem = if smem_per_block == 0 {
+            u32::MAX
+        } else {
+            self.smem_per_sm / smem_per_block
+        };
+        by_threads.min(by_blocks).min(by_regs).min(by_smem)
+    }
+
+    /// Occupancy (active warps / max warps) for a kernel with the given
+    /// per-block resources, assuming enough blocks to saturate.
+    pub fn occupancy(&self, threads_per_block: u32, regs_per_thread: u32, smem_per_block: u32) -> f64 {
+        let blocks = self.blocks_per_sm(threads_per_block, regs_per_thread, smem_per_block);
+        let warps_per_block = threads_per_block.div_ceil(self.warp_size);
+        let active = (blocks * warps_per_block).min(self.max_warps_per_sm);
+        active as f64 / self.max_warps_per_sm as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let c = GpuConfig::c2050();
+        assert_eq!(c.num_sms, 14);
+        assert_eq!(c.cores_per_sm, 32);
+        assert_eq!(c.core_mhz, 1147);
+        assert_eq!(c.mem_mb, 3072);
+        assert_eq!(c.mem_bw_gbs, 144.0);
+        let g = GpuConfig::gtx680();
+        assert_eq!(g.num_sms, 8);
+        assert_eq!(g.cores_per_sm, 192);
+        assert_eq!(g.core_mhz, 706);
+        assert_eq!(g.mem_mb, 2048);
+        assert_eq!(g.mem_bw_gbs, 192.0);
+    }
+
+    #[test]
+    fn peak_ipc_matches_paper_normalization() {
+        assert_eq!(GpuConfig::c2050().peak_ipc(), 1.0);
+        assert_eq!(GpuConfig::gtx680().peak_ipc(), 8.0);
+    }
+
+    #[test]
+    fn peak_mpc_sane() {
+        // 144 GB/s / 128 B / 1.147 GHz ~ 0.98 requests/cycle.
+        let mpc = GpuConfig::c2050().peak_mpc();
+        assert!((mpc - 0.98).abs() < 0.02, "mpc={mpc}");
+        // 192 GB/s / 128 B / 0.706 GHz ~ 2.12.
+        let mpc = GpuConfig::gtx680().peak_mpc();
+        assert!((mpc - 2.12).abs() < 0.03, "mpc={mpc}");
+    }
+
+    #[test]
+    fn occupancy_full_when_unconstrained() {
+        let c = GpuConfig::c2050();
+        // 256-thread blocks, light registers: 6 blocks * 8 warps = 48 = max.
+        assert_eq!(c.blocks_per_sm(256, 20, 0), 6);
+        assert!((c.occupancy(256, 20, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_register_limited() {
+        let c = GpuConfig::c2050();
+        // 63 regs/thread * 256 threads = 16128 regs/block -> 2 blocks.
+        assert_eq!(c.blocks_per_sm(256, 63, 0), 2);
+        let occ = c.occupancy(256, 63, 0);
+        assert!((occ - 16.0 / 48.0).abs() < 1e-12, "occ={occ}");
+    }
+
+    #[test]
+    fn occupancy_smem_limited() {
+        let c = GpuConfig::c2050();
+        // 24KB smem per block -> 2 blocks.
+        assert_eq!(c.blocks_per_sm(128, 16, 24 * 1024), 2);
+    }
+
+    #[test]
+    fn small_blocks_capped_by_block_slots() {
+        let c = GpuConfig::c2050();
+        // 32-thread blocks: thread limit would allow 48, but Fermi caps at 8.
+        assert_eq!(c.blocks_per_sm(32, 16, 0), 8);
+        // SAD-like: occupancy 8 warps/48 = 16.7% (paper Table 4).
+        let occ = c.occupancy(32, 16, 0);
+        assert!((occ - 8.0 / 48.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,102 @@
+//! The Kernelet coordinator: pending-kernel queue, candidate pruning,
+//! greedy co-schedule selection, and the execution loop (paper §3-4).
+//!
+//! This is the paper's system contribution, in the shape of Fig. 2:
+//! submitted kernels are buffered in a queue; the slicer determines each
+//! kernel's minimum slice size; the scheduler picks the two pending
+//! kernels with the highest model-predicted co-scheduling profit and
+//! dispatches alternating balanced slices until either kernel drains or
+//! the queue changes (Algorithm 1).
+
+pub mod baselines;
+pub mod executor;
+pub mod greedy;
+pub mod multigpu;
+pub mod pruning;
+pub mod simcache;
+
+pub use executor::{run_kernelet, ExecutionReport};
+pub use greedy::{CoSchedule, Coordinator};
+pub use multigpu::{DispatchPolicy, MultiGpuDispatcher, MultiGpuReport};
+pub use pruning::{prune_pairs, PruneParams};
+pub use simcache::SimCache;
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Can blocks of the two kernels be co-resident at (b1, b2) blocks per
+/// SM? (The CUDA block-scheduler resource check, extended to two
+/// kernels.)
+pub fn coresident_feasible(gpu: &GpuConfig, k1: &KernelSpec, b1: u32, k2: &KernelSpec, b2: u32) -> bool {
+    if b1 == 0 || b2 == 0 {
+        return false;
+    }
+    let threads = b1 * k1.threads_per_block + b2 * k2.threads_per_block;
+    let regs = b1 * k1.regs_per_thread * k1.threads_per_block
+        + b2 * k2.regs_per_thread * k2.threads_per_block;
+    let smem = b1 * k1.smem_per_block + b2 * k2.smem_per_block;
+    let blocks = b1 + b2;
+    let warps = b1 * k1.warps_per_block(gpu) + b2 * k2.warps_per_block(gpu);
+    threads <= gpu.max_threads_per_sm
+        && regs <= gpu.regs_per_sm
+        && smem <= gpu.smem_per_sm
+        && blocks <= gpu.max_blocks_per_sm
+        && warps <= gpu.max_warps_per_sm
+}
+
+/// Enumerate all feasible per-SM residency splits (b1, b2) for two
+/// kernels ("only a limited number of slice ratios need to be
+/// evaluated", §4.4).
+pub fn feasible_splits(gpu: &GpuConfig, k1: &KernelSpec, k2: &KernelSpec) -> Vec<(u32, u32)> {
+    let max1 = k1.blocks_per_sm(gpu);
+    let max2 = k2.blocks_per_sm(gpu);
+    let mut out = Vec::new();
+    for b1 in 1..=max1 {
+        for b2 in 1..=max2 {
+            if coresident_feasible(gpu, k1, b1, k2, b2) {
+                out.push((b1, b2));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn full_residency_pair_infeasible() {
+        let gpu = GpuConfig::c2050();
+        let mm = BenchmarkApp::MM.spec(); // 4 blocks/SM max solo
+        let pc = BenchmarkApp::PC.spec(); // 6 blocks/SM max solo
+        assert!(!coresident_feasible(&gpu, &mm, 4, &pc, 6));
+        assert!(coresident_feasible(&gpu, &mm, 2, &pc, 2));
+    }
+
+    #[test]
+    fn splits_nonempty_for_all_benchmark_pairs() {
+        let gpu = GpuConfig::c2050();
+        let apps = BenchmarkApp::ALL;
+        for (i, a) in apps.iter().enumerate() {
+            for b in &apps[i + 1..] {
+                let s = feasible_splits(&gpu, &a.spec(), &b.spec());
+                assert!(!s.is_empty(), "{} + {}", a.name(), b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn splits_are_feasible_and_unique() {
+        let gpu = GpuConfig::gtx680();
+        let a = BenchmarkApp::ST.spec();
+        let b = BenchmarkApp::BS.spec();
+        let s = feasible_splits(&gpu, &a, &b);
+        let mut set = std::collections::HashSet::new();
+        for &(b1, b2) in &s {
+            assert!(coresident_feasible(&gpu, &a, b1, &b, b2));
+            assert!(set.insert((b1, b2)));
+        }
+    }
+}

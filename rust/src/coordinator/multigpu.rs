@@ -1,0 +1,194 @@
+//! Multi-GPU dispatching — the paper's §2.2 extension: "Kernelet can be
+//! extended to multiple GPUs with a workload dispatcher to each
+//! individual GPU."
+//!
+//! A [`MultiGpuDispatcher`] owns one [`Coordinator`] per device and
+//! routes each arriving kernel instance to a device queue; each device
+//! then runs the ordinary Kernelet policy over its own queue. Two
+//! routing policies:
+//!
+//! - [`DispatchPolicy::RoundRobin`] — oblivious, the baseline;
+//! - [`DispatchPolicy::LeastLoaded`] — route to the device with the
+//!   least outstanding work, estimating a kernel's cost on each device
+//!   from its cached solo measurement (devices may be heterogeneous:
+//!   a C2050 and a GTX680 disagree on every kernel's cost, and on
+//!   *which* kernels they are relatively good at).
+
+use super::executor::run_kernelet;
+use super::greedy::Coordinator;
+use crate::config::GpuConfig;
+use crate::kernel::KernelInstance;
+use crate::workload::Stream;
+
+/// Routing policy for arriving kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Result of a multi-GPU run.
+#[derive(Debug, Clone)]
+pub struct MultiGpuReport {
+    /// Makespan: the slowest device's total time (seconds).
+    pub makespan_secs: f64,
+    /// Per-device (gpu name, kernels routed, busy seconds).
+    pub per_device: Vec<(String, usize, f64)>,
+    /// Aggregate throughput over the makespan.
+    pub throughput_kps: f64,
+}
+
+/// One coordinator per device plus the routing state.
+pub struct MultiGpuDispatcher {
+    devices: Vec<Coordinator>,
+    policy: DispatchPolicy,
+}
+
+impl MultiGpuDispatcher {
+    pub fn new(gpus: &[GpuConfig], policy: DispatchPolicy) -> Self {
+        assert!(!gpus.is_empty(), "need at least one device");
+        Self { devices: gpus.iter().map(Coordinator::new).collect(), policy }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Estimated cost (seconds) of one kernel instance on device `d`
+    /// (cached solo measurement — the dispatcher's load model).
+    fn est_cost(&self, d: usize, k: &KernelInstance) -> f64 {
+        let coord = &self.devices[d];
+        coord.gpu.cycles_to_secs(coord.simcache.solo_full(&k.spec))
+    }
+
+    /// Partition a stream over the devices according to the policy.
+    /// Returns one sub-stream per device (arrival order preserved).
+    pub fn route(&self, stream: &Stream) -> Vec<Stream> {
+        let n = self.devices.len();
+        let mut parts: Vec<Vec<KernelInstance>> = vec![Vec::new(); n];
+        let mut load = vec![0.0f64; n];
+        for (i, k) in stream.instances.iter().enumerate() {
+            let d = match self.policy {
+                DispatchPolicy::RoundRobin => i % n,
+                DispatchPolicy::LeastLoaded => {
+                    // Choose the device whose load after accepting this
+                    // kernel is smallest.
+                    (0..n)
+                        .min_by(|&a, &b| {
+                            let la = load[a] + self.est_cost(a, k);
+                            let lb = load[b] + self.est_cost(b, k);
+                            la.total_cmp(&lb)
+                        })
+                        .unwrap()
+                }
+            };
+            load[d] += self.est_cost(d, k);
+            parts[d].push(k.clone());
+        }
+        parts.into_iter().map(|instances| Stream { instances }).collect()
+    }
+
+    /// Route and run the stream; every device schedules its queue with
+    /// the Kernelet policy.
+    pub fn run(&self, stream: &Stream) -> MultiGpuReport {
+        let parts = self.route(stream);
+        let mut per_device = Vec::new();
+        let mut makespan = 0.0f64;
+        let mut completed = 0usize;
+        for (coord, part) in self.devices.iter().zip(&parts) {
+            if part.is_empty() {
+                per_device.push((coord.gpu.name.to_string(), 0, 0.0));
+                continue;
+            }
+            let rep = run_kernelet(coord, part);
+            assert_eq!(rep.kernels_completed, part.len(), "{} lost kernels", coord.gpu.name);
+            completed += rep.kernels_completed;
+            makespan = makespan.max(rep.total_secs);
+            per_device.push((coord.gpu.name.to_string(), part.len(), rep.total_secs));
+        }
+        assert_eq!(completed, stream.len(), "dispatcher lost kernels");
+        MultiGpuReport {
+            makespan_secs: makespan,
+            throughput_kps: completed as f64 / makespan.max(1e-12),
+            per_device,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Mix;
+
+    #[test]
+    fn routing_conserves_and_partitions() {
+        let d = MultiGpuDispatcher::new(
+            &[GpuConfig::c2050(), GpuConfig::gtx680()],
+            DispatchPolicy::RoundRobin,
+        );
+        let stream = Stream::saturated(Mix::MIX, 4, 7);
+        let parts = d.route(&stream);
+        assert_eq!(parts.len(), 2);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, stream.len());
+        // Round robin splits evenly.
+        assert_eq!(parts[0].len(), parts[1].len());
+        // No duplicated ids.
+        let mut ids: Vec<u64> =
+            parts.iter().flat_map(|p| p.instances.iter().map(|k| k.id)).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), stream.len());
+    }
+
+    #[test]
+    fn two_gpus_beat_one() {
+        let single = MultiGpuDispatcher::new(&[GpuConfig::c2050()], DispatchPolicy::RoundRobin);
+        let dual = MultiGpuDispatcher::new(
+            &[GpuConfig::c2050(), GpuConfig::c2050()],
+            DispatchPolicy::RoundRobin,
+        );
+        let stream = Stream::saturated(Mix::ALL, 4, 11);
+        let one = single.run(&stream);
+        let two = dual.run(&stream);
+        assert!(
+            two.makespan_secs < one.makespan_secs * 0.65,
+            "two={} one={}",
+            two.makespan_secs,
+            one.makespan_secs
+        );
+    }
+
+    #[test]
+    fn least_loaded_balances_heterogeneous_fleet() {
+        // A GTX680 is several times faster than a C2050 on compute
+        // kernels; round-robin leaves it idle while the C2050 lags.
+        let gpus = [GpuConfig::c2050(), GpuConfig::gtx680()];
+        let rr = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin);
+        let ll = MultiGpuDispatcher::new(&gpus, DispatchPolicy::LeastLoaded);
+        let stream = Stream::saturated(Mix::CI, 6, 13);
+        let a = rr.run(&stream);
+        let b = ll.run(&stream);
+        assert!(
+            b.makespan_secs < a.makespan_secs,
+            "least-loaded {} >= round-robin {}",
+            b.makespan_secs,
+            a.makespan_secs
+        );
+        // The faster device takes more kernels under least-loaded.
+        let (c2050_n, gtx_n) = (b.per_device[0].1, b.per_device[1].1);
+        assert!(gtx_n > c2050_n, "gtx={gtx_n} c2050={c2050_n}");
+    }
+
+    #[test]
+    fn empty_device_allowed() {
+        let d = MultiGpuDispatcher::new(
+            &[GpuConfig::c2050(), GpuConfig::c2050(), GpuConfig::c2050()],
+            DispatchPolicy::RoundRobin,
+        );
+        let mut stream = Stream::saturated(Mix::CI, 1, 3);
+        stream.instances.truncate(2); // fewer kernels than devices
+        let rep = d.run(&stream);
+        assert_eq!(rep.per_device.iter().map(|d| d.1).sum::<usize>(), 2);
+    }
+}

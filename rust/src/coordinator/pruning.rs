@@ -1,0 +1,135 @@
+//! Co-scheduling candidate-space pruning (paper §4.3).
+//!
+//! A co-schedule is only promising when the two kernels use GPU
+//! resources in a complementary way. The paper's regression analysis
+//! found PUR and MUR to be the counters most correlated with
+//! co-scheduling profit, and prunes a pair when its PUR difference is
+//! below α_p or its MUR difference is below α_m. If everything gets
+//! pruned, the thresholds are relaxed.
+
+use crate::profiler::Profile;
+
+/// Pruning thresholds. Paper defaults after the Table 6 sweep:
+/// α_p = 0.4 for both GPUs; α_m = 0.1 (C2050) / 0.105 (GTX680).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneParams {
+    pub alpha_p: f64,
+    pub alpha_m: f64,
+}
+
+impl PruneParams {
+    pub fn paper_default_c2050() -> Self {
+        PruneParams { alpha_p: 0.4, alpha_m: 0.1 }
+    }
+
+    pub fn paper_default_gtx680() -> Self {
+        PruneParams { alpha_p: 0.4, alpha_m: 0.105 }
+    }
+
+    /// No pruning at all (ablation).
+    pub fn off() -> Self {
+        PruneParams { alpha_p: 0.0, alpha_m: 0.0 }
+    }
+
+    /// Should this pair be pruned? (PUR difference below α_p, or MUR
+    /// difference below α_m.)
+    pub fn prunes(&self, a: &Profile, b: &Profile) -> bool {
+        (a.pur - b.pur).abs() < self.alpha_p || (a.mur - b.mur).abs() < self.alpha_m
+    }
+
+    /// Relax both thresholds (used when every candidate was pruned:
+    /// "if all the co-schedules are pruned, we need to increase α_p or
+    /// α_m" — in our direction of effect, *decrease* them so fewer
+    /// pairs get pruned).
+    pub fn relaxed(&self) -> Self {
+        PruneParams { alpha_p: self.alpha_p * 0.5, alpha_m: self.alpha_m * 0.5 }
+    }
+}
+
+/// Filter candidate pair indices by the pruning rule. `profiles[i]`
+/// corresponds to candidate kernel i; `pairs` are index pairs into it.
+/// Automatically relaxes thresholds (up to 4 times) if everything is
+/// pruned, finally falling back to no pruning.
+pub fn prune_pairs(
+    profiles: &[Profile],
+    pairs: &[(usize, usize)],
+    params: PruneParams,
+) -> Vec<(usize, usize)> {
+    let mut p = params;
+    for _ in 0..4 {
+        let kept: Vec<_> = pairs
+            .iter()
+            .copied()
+            .filter(|&(i, j)| !p.prunes(&profiles[i], &profiles[j]))
+            .collect();
+        if !kept.is_empty() {
+            return kept;
+        }
+        p = p.relaxed();
+    }
+    pairs.to_vec()
+}
+
+/// Count how many of the pairs would be pruned at the given thresholds
+/// (the Table 6 cells).
+pub fn count_pruned(profiles: &[Profile], pairs: &[(usize, usize)], params: PruneParams) -> usize {
+    pairs.iter().filter(|&&(i, j)| params.prunes(&profiles[i], &profiles[j])).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof(pur: f64, mur: f64) -> Profile {
+        Profile { ipc: pur, pur, mur, rm: 0.1, sectors_per_mem_inst: 4.0, inst_per_block: 1000 }
+    }
+
+    #[test]
+    fn similar_pur_pruned() {
+        let p = PruneParams { alpha_p: 0.4, alpha_m: 0.1 };
+        // Two compute kernels: close PUR.
+        assert!(p.prunes(&prof(0.9, 0.02), &prof(0.85, 0.5)));
+        // Complementary: far in both.
+        assert!(!p.prunes(&prof(0.9, 0.02), &prof(0.1, 0.4)));
+    }
+
+    #[test]
+    fn similar_mur_pruned_even_with_far_pur() {
+        let p = PruneParams { alpha_p: 0.4, alpha_m: 0.1 };
+        assert!(p.prunes(&prof(0.9, 0.3), &prof(0.1, 0.25)));
+    }
+
+    #[test]
+    fn off_params_keep_everything() {
+        let p = PruneParams::off();
+        assert!(!p.prunes(&prof(0.5, 0.1), &prof(0.5, 0.1)));
+    }
+
+    #[test]
+    fn relaxation_recovers_candidates() {
+        let profiles = vec![prof(0.5, 0.2), prof(0.45, 0.18)];
+        let pairs = vec![(0, 1)];
+        // Harsh thresholds prune the only pair; prune_pairs must relax
+        // and eventually return it.
+        let kept = prune_pairs(&profiles, &pairs, PruneParams { alpha_p: 0.9, alpha_m: 0.5 });
+        assert_eq!(kept, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn count_monotone_in_thresholds() {
+        let profiles: Vec<_> =
+            (0..8).map(|i| prof(i as f64 / 8.0, (8 - i) as f64 / 16.0)).collect();
+        let mut pairs = Vec::new();
+        for i in 0..8 {
+            for j in i + 1..8 {
+                pairs.push((i, j));
+            }
+        }
+        let mut last = 0;
+        for a in [0.05, 0.1, 0.2, 0.4, 0.8] {
+            let n = count_pruned(&profiles, &pairs, PruneParams { alpha_p: a, alpha_m: 0.02 });
+            assert!(n >= last, "a={a} n={n} last={last}");
+            last = n;
+        }
+    }
+}

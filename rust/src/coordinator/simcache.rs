@@ -1,0 +1,172 @@
+//! Memoized simulation measurements.
+//!
+//! All instances of an application are identical kernels, so the
+//! simulator's deterministic measurements of solo runs, sliced runs and
+//! co-scheduled slice pairs can be cached. This is what makes the
+//! 1000-instance Fig. 13 runs cheap: the queue-level schedule is
+//! arithmetic over a few dozen memoized slice-pair measurements.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+use crate::sim::{self, PairResult};
+
+/// Cache of solo and pair simulation results for one GPU.
+pub struct SimCache {
+    gpu: GpuConfig,
+    solo: Mutex<HashMap<(String, u32), f64>>,
+    pair: Mutex<HashMap<(String, u32, u32, String, u32, u32), CachedPair>>,
+    hits: Mutex<u64>,
+    misses: Mutex<u64>,
+}
+
+/// Slimmed-down pair measurement (what the executor needs per round).
+#[derive(Debug, Clone, Copy)]
+pub struct CachedPair {
+    pub cycles: f64,
+    pub cipc: [f64; 2],
+    pub total_ipc: f64,
+}
+
+impl SimCache {
+    pub fn new(gpu: &GpuConfig) -> Self {
+        Self {
+            gpu: gpu.clone(),
+            solo: Mutex::new(HashMap::new()),
+            pair: Mutex::new(HashMap::new()),
+            hits: Mutex::new(0),
+            misses: Mutex::new(0),
+        }
+    }
+
+    pub fn gpu(&self) -> &GpuConfig {
+        &self.gpu
+    }
+
+    /// Cycles to run `blocks` blocks of `spec` solo (including launch
+    /// overhead).
+    pub fn solo_cycles(&self, spec: &KernelSpec, blocks: u32) -> f64 {
+        assert!(blocks >= 1);
+        let key = (spec.name.to_string(), blocks);
+        if let Some(&c) = self.solo.lock().unwrap().get(&key) {
+            *self.hits.lock().unwrap() += 1;
+            return c;
+        }
+        *self.misses.lock().unwrap() += 1;
+        let r = sim::simulate_solo(&self.gpu, &spec.with_grid(blocks), sim::DEFAULT_SEED);
+        self.solo.lock().unwrap().insert(key, r.cycles);
+        r.cycles
+    }
+
+    /// Full-grid solo cycles.
+    pub fn solo_full(&self, spec: &KernelSpec) -> f64 {
+        self.solo_cycles(spec, spec.grid_blocks)
+    }
+
+    /// Measured co-run of an (s1, s2)-block slice pair at residency
+    /// quotas (q1, q2).
+    pub fn pair(&self, k1: &KernelSpec, s1: u32, q1: u32, k2: &KernelSpec, s2: u32, q2: u32) -> CachedPair {
+        assert!(s1 >= 1 && s2 >= 1);
+        // Canonicalize the key order so (A,B) and (B,A) share entries.
+        let flip = (k1.name, s1, q1) > (k2.name, s2, q2);
+        let key = if flip {
+            (k2.name.to_string(), s2, q2, k1.name.to_string(), s1, q1)
+        } else {
+            (k1.name.to_string(), s1, q1, k2.name.to_string(), s2, q2)
+        };
+        if let Some(&c) = self.pair.lock().unwrap().get(&key) {
+            *self.hits.lock().unwrap() += 1;
+            return if flip { CachedPair { cipc: [c.cipc[1], c.cipc[0]], ..c } } else { c };
+        }
+        *self.misses.lock().unwrap() += 1;
+        let pr: PairResult = if flip {
+            let p = sim::simulate_pair(&self.gpu, k2, s2, q2, k1, s1, q1, sim::DEFAULT_SEED);
+            PairResult { cycles: p.cycles, per_kernel: [p.per_kernel[0].clone(), p.per_kernel[1].clone()] }
+        } else {
+            sim::simulate_pair(&self.gpu, k1, s1, q1, k2, s2, q2, sim::DEFAULT_SEED)
+        };
+        let c = CachedPair {
+            cycles: pr.cycles,
+            cipc: [pr.cipc(0), pr.cipc(1)],
+            total_ipc: pr.total_ipc(),
+        };
+        self.pair.lock().unwrap().insert(key, c);
+        if flip {
+            CachedPair { cipc: [c.cipc[1], c.cipc[0]], ..c }
+        } else {
+            c
+        }
+    }
+
+    /// (hits, misses) — used by the perf pass to verify the memoization
+    /// carries Fig. 13.
+    pub fn stats(&self) -> (u64, u64) {
+        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+    }
+
+    /// Fill the cache for a set of pair probes in parallel (the §Perf
+    /// pass's second optimization: OPT's pre-execution probes dominated
+    /// Fig. 13 wall time when simulated serially inside the scheduling
+    /// loop). Each probe is (k1, s1, q1, k2, s2, q2).
+    pub fn prewarm_pairs(&self, probes: &[(KernelSpec, u32, u32, KernelSpec, u32, u32)]) {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(probes.len().max(1)) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let Some((k1, s1, q1, k2, s2, q2)) = probes.get(i) else { break };
+                    self.pair(k1, *s1, *q1, k2, *s2, *q2);
+                });
+            }
+        });
+    }
+
+    /// Fill the solo cache for a set of (spec, blocks) runs in parallel.
+    pub fn prewarm_solo(&self, runs: &[(KernelSpec, u32)]) {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(runs.len().max(1)) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let Some((spec, blocks)) = runs.get(i) else { break };
+                    self.solo_cycles(spec, *blocks);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn solo_cache_hits() {
+        let cache = SimCache::new(&GpuConfig::c2050());
+        let k = BenchmarkApp::TEA.spec();
+        let a = cache.solo_cycles(&k, 56);
+        let b = cache.solo_cycles(&k, 56);
+        assert_eq!(a, b);
+        let (h, m) = cache.stats();
+        assert_eq!((h, m), (1, 1));
+    }
+
+    #[test]
+    fn pair_cache_symmetric() {
+        let cache = SimCache::new(&GpuConfig::c2050());
+        let a = BenchmarkApp::TEA.spec();
+        let b = BenchmarkApp::PC.spec();
+        let ab = cache.pair(&a, 28, 2, &b, 42, 3);
+        let ba = cache.pair(&b, 42, 3, &a, 28, 2);
+        assert_eq!(ab.cycles, ba.cycles);
+        assert_eq!(ab.cipc[0], ba.cipc[1]);
+        assert_eq!(ab.cipc[1], ba.cipc[0]);
+        let (h, m) = cache.stats();
+        assert_eq!((h, m), (1, 1));
+    }
+}

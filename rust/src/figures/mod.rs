@@ -1,0 +1,101 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (§5). Each function returns a [`Report`]: a titled table of rows
+//! that prints to the terminal and serializes to TSV. The CLI
+//! (`kernelet figure <id>` / `kernelet table <id>`) and the cargo
+//! benches drive these; EXPERIMENTS.md records the outputs against the
+//! paper's numbers.
+//!
+//! | id | paper artifact |
+//! |----|----------------|
+//! | `table2`  | GPU configurations |
+//! | `table4`  | benchmark PUR / MUR / occupancy |
+//! | `table6`  | pairs pruned vs (α_p, α_m) |
+//! | `fig4`    | PUR/MUR-difference vs CP correlation |
+//! | `fig6`    | sliced-execution overhead vs slice size |
+//! | `fig7`    | single-kernel IPC, predicted vs measured |
+//! | `fig8`    | concurrent IPC, model slice ratio |
+//! | `fig9`    | concurrent IPC, fixed 1:1 ratio |
+//! | `fig10`   | ± uncoalesced-access modeling (PC, SPMV) |
+//! | `fig11`   | ± virtual-SM reduction on GTX680 |
+//! | `fig12`   | CP, predicted vs measured |
+//! | `fig13`   | BASE vs Kernelet vs OPT across workloads |
+//! | `fig14`   | CDF of MC(1000) schedule times |
+
+pub mod report;
+pub mod scheduling;
+pub mod slicing;
+pub mod tables;
+pub mod validation;
+
+pub use report::Report;
+
+use anyhow::{bail, Result};
+
+/// All figure/table ids, in paper order.
+pub const ALL_IDS: [&str; 13] = [
+    "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "table6", "fig14",
+];
+
+/// Options shared by the generators.
+#[derive(Debug, Clone)]
+pub struct FigOptions {
+    /// Kernel instances per application for the scheduling experiments
+    /// (paper: 1000; benches and tests scale this down).
+    pub instances_per_app: u32,
+    /// Monte-Carlo sample count for fig14 (paper: 1000).
+    pub mc_samples: u32,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for FigOptions {
+    fn default() -> Self {
+        Self { instances_per_app: 1000, mc_samples: 1000, seed: crate::sim::DEFAULT_SEED }
+    }
+}
+
+impl FigOptions {
+    /// A quick configuration for tests and smoke runs.
+    pub fn quick() -> Self {
+        Self { instances_per_app: 20, mc_samples: 40, seed: crate::sim::DEFAULT_SEED }
+    }
+}
+
+/// Generate one report by id.
+pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
+    Ok(match id {
+        "table2" => tables::table2(),
+        "table4" => tables::table4(),
+        "table6" => tables::table6(),
+        "fig4" => validation::fig4(opts),
+        "fig6" => slicing::fig6(),
+        "fig7" => validation::fig7(),
+        "fig8" => validation::fig8(),
+        "fig9" => validation::fig9(),
+        "fig10" => validation::fig10(),
+        "fig11" => validation::fig11(),
+        "fig12" => validation::fig12(),
+        "fig13" => scheduling::fig13(opts),
+        "fig14" => scheduling::fig14(opts),
+        other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(generate("fig99", &FigOptions::quick()).is_err());
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut ids = ALL_IDS.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), ALL_IDS.len());
+    }
+}

@@ -1,0 +1,146 @@
+//! Tabular report type shared by every figure/table generator.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One regenerated table/figure: a titled grid of cells plus free-form
+/// notes (observations the paper's prose makes about the artifact).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "ragged row in {}", self.id);
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Column index by name (panics on typo — generator bug).
+    pub fn col(&self, name: &str) -> usize {
+        self.columns.iter().position(|c| c == name).unwrap_or_else(|| panic!("no column {name}"))
+    }
+
+    /// Numeric view of one column (for assertions in tests/benches).
+    pub fn column_f64(&self, name: &str) -> Vec<f64> {
+        let i = self.col(name);
+        self.rows.iter().filter_map(|r| r[i].parse::<f64>().ok()).collect()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        writeln!(out, "== {} — {} ==", self.id, self.title).unwrap();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        writeln!(out, "{}", fmt_row(&self.columns, &widths)).unwrap();
+        writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)))
+            .unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", fmt_row(row, &widths)).unwrap();
+        }
+        for n in &self.notes {
+            writeln!(out, "# {n}").unwrap();
+        }
+        out
+    }
+
+    /// Serialize as TSV (one artifact per figure under figures_out/).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.columns.join("\t")).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", row.join("\t")).unwrap();
+        }
+        out
+    }
+
+    pub fn save_tsv(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.tsv", self.id));
+        std::fs::write(&path, self.to_tsv()).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Format helpers used by all generators.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("t", "Test", &["a", "b"]);
+        r.row(vec!["1".into(), "2.5".into()]);
+        r.row(vec!["3".into(), "x".into()]);
+        r.note("a note");
+        r
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let s = sample().render();
+        assert!(s.contains("== t — Test =="));
+        assert!(s.contains("2.5"));
+        assert!(s.contains("# a note"));
+    }
+
+    #[test]
+    fn column_f64_skips_non_numeric() {
+        assert_eq!(sample().column_f64("b"), vec![2.5]);
+        assert_eq!(sample().column_f64("a"), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut r = Report::new("t", "T", &["a", "b"]);
+        r.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn tsv_roundtrip_shape() {
+        let tsv = sample().to_tsv();
+        let lines: Vec<_> = tsv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "a\tb");
+    }
+}

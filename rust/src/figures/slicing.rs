@@ -1,0 +1,74 @@
+//! Fig. 6: sliced-execution overhead vs slice size.
+
+use super::report::{f, Report};
+use crate::config::GpuConfig;
+use crate::kernel::BenchmarkApp;
+use crate::slicer;
+
+/// Overhead `(T_s/T_ns − 1)` for each benchmark at slice sizes that are
+/// multiples of |SM|, on both GPUs.
+pub fn fig6() -> Report {
+    let mut r = Report::new(
+        "fig6",
+        "Sliced execution overhead vs slice size (paper Fig. 6)",
+        &["gpu", "bench", "slice_blocks", "per_sm", "overhead_pct"],
+    );
+    for gpu in GpuConfig::all() {
+        for app in BenchmarkApp::ALL {
+            let spec = app.spec();
+            for mult in 1..=spec.blocks_per_sm(&gpu).max(1) * 2 {
+                let size = mult * gpu.num_sms;
+                if size >= spec.grid_blocks {
+                    break;
+                }
+                let ov = slicer::slicing_overhead(&gpu, &spec, size, crate::sim::DEFAULT_SEED);
+                r.row(vec![
+                    gpu.name.to_string(),
+                    app.name().to_string(),
+                    size.to_string(),
+                    mult.to_string(),
+                    f(ov * 100.0, 2),
+                ]);
+            }
+        }
+    }
+    r.note("paper: overhead shrinks with slice size; C2050 high at small slices (launch cost), GTX680 <2% almost everywhere");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shapes_hold() {
+        let t = fig6();
+        assert!(!t.rows.is_empty());
+        let ov_col = t.col("overhead_pct");
+        let gpu_col = t.col("gpu");
+        let per_sm = t.col("per_sm");
+        // Shape 1: the smallest C2050 slices cost more than the largest.
+        let c_small: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[gpu_col] == "Tesla C2050" && r[per_sm] == "1")
+            .map(|r| r[ov_col].parse().unwrap())
+            .collect();
+        let c_large: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[gpu_col] == "Tesla C2050" && r[per_sm] == "4")
+            .map(|r| r[ov_col].parse().unwrap())
+            .collect();
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(avg(&c_small) > avg(&c_large), "small={} large={}", avg(&c_small), avg(&c_large));
+        // Shape 2: GTX680 overheads are much lower than C2050 at size 1.
+        let g_small: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[gpu_col] == "GTX680" && r[per_sm] == "1")
+            .map(|r| r[ov_col].parse().unwrap())
+            .collect();
+        assert!(avg(&g_small) < avg(&c_small));
+    }
+}

@@ -1,0 +1,141 @@
+//! Tables 2, 4 and 6.
+
+use super::report::{f, pct, Report};
+use crate::config::GpuConfig;
+use crate::coordinator::pruning::{count_pruned, PruneParams};
+use crate::kernel::BenchmarkApp;
+use crate::profiler;
+
+/// Table 2: GPU configurations.
+pub fn table2() -> Report {
+    let mut r = Report::new(
+        "table2",
+        "GPU configurations (paper Table 2)",
+        &["field", "C2050", "GTX680"],
+    );
+    let (c, g) = (GpuConfig::c2050(), GpuConfig::gtx680());
+    let rows: Vec<(&str, String, String)> = vec![
+        ("Architecture", format!("{} GF110", c.arch), format!("{} GK104", g.arch)),
+        ("Number of SMs", c.num_sms.to_string(), g.num_sms.to_string()),
+        ("Cores per SM", c.cores_per_sm.to_string(), g.cores_per_sm.to_string()),
+        ("Core frequency (MHz)", c.core_mhz.to_string(), g.core_mhz.to_string()),
+        ("Global memory (MB)", c.mem_mb.to_string(), g.mem_mb.to_string()),
+        ("Memory bandwidth (GB/s)", f(c.mem_bw_gbs, 0), f(g.mem_bw_gbs, 0)),
+        ("Warp schedulers per SM", c.warp_schedulers.to_string(), g.warp_schedulers.to_string()),
+        ("Theoretical IPC", f(c.peak_ipc(), 0), f(g.peak_ipc(), 0)),
+    ];
+    for (k, a, b) in rows {
+        r.row(vec![k.to_string(), a, b]);
+    }
+    r
+}
+
+/// Table 4: memory and computational characteristics of the benchmarks
+/// (measured on the simulator by the pre-execution profiler).
+pub fn table4() -> Report {
+    let mut r = Report::new(
+        "table4",
+        "Benchmark characteristics: PUR / MUR / occupancy (paper Table 4)",
+        &[
+            "bench",
+            "c2050_pur",
+            "c2050_mur",
+            "c2050_occ%",
+            "gtx680_pur",
+            "gtx680_mur",
+            "gtx680_occ%",
+        ],
+    );
+    let (c, g) = (GpuConfig::c2050(), GpuConfig::gtx680());
+    for app in BenchmarkApp::ALL {
+        let spec = app.spec();
+        let pc = profiler::profile(&c, &spec);
+        let pg = profiler::profile(&g, &spec);
+        r.row(vec![
+            app.name().to_string(),
+            f(pc.pur, 4),
+            f(pc.mur, 4),
+            pct(spec.occupancy(&c)),
+            f(pg.pur, 4),
+            f(pg.mur, 4),
+            pct(spec.occupancy(&g)),
+        ]);
+    }
+    r.note("paper: PUR range ~0.01-1.0, PC/SAD memory-bound, MRIQ/BS/TEA compute-bound");
+    r
+}
+
+/// Table 6: number of kernel pairs pruned for each (α_m, α_p) on C2050.
+pub fn table6() -> Report {
+    let gpu = GpuConfig::c2050();
+    let alphas_p: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    let alphas_m: Vec<f64> = (1..=10).map(|i| 0.015 * i as f64).collect();
+    let mut cols: Vec<String> = vec!["alpha_m\\alpha_p".to_string()];
+    cols.extend(alphas_p.iter().map(|a| f(*a, 1)));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut r = Report::new(
+        "table6",
+        "Kernel pairs pruned vs (α_p, α_m) on C2050 (paper Table 6)",
+        &col_refs,
+    );
+    let profiles: Vec<_> =
+        BenchmarkApp::ALL.iter().map(|a| profiler::profile(&gpu, &a.spec())).collect();
+    let mut pairs = Vec::new();
+    for i in 0..profiles.len() {
+        for j in i + 1..profiles.len() {
+            pairs.push((i, j));
+        }
+    }
+    for &am in &alphas_m {
+        let mut row = vec![f(am, 3)];
+        for &ap in &alphas_p {
+            let n = count_pruned(&profiles, &pairs, PruneParams { alpha_p: ap, alpha_m: am });
+            row.push(n.to_string());
+        }
+        r.row(row);
+    }
+    r.note("28 pairs total; counts must be monotone in both thresholds");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_config() {
+        let t = table2();
+        assert_eq!(t.rows[1][1], "14");
+        assert_eq!(t.rows[1][2], "8");
+    }
+
+    #[test]
+    fn table4_occupancies() {
+        let t = table4();
+        let occ = t.column_f64("c2050_occ%");
+        assert_eq!(occ.len(), 8);
+        // SAD is the low-occupancy outlier on C2050 (16.7%).
+        let sad_row = t.rows.iter().find(|r| r[0] == "SAD").unwrap();
+        assert_eq!(sad_row[3], "16.7");
+    }
+
+    #[test]
+    fn table6_monotone() {
+        let t = table6();
+        // Along each row (increasing alpha_p) counts are non-decreasing.
+        for row in &t.rows {
+            let vals: Vec<i64> = row[1..].iter().map(|c| c.parse().unwrap()).collect();
+            for w in vals.windows(2) {
+                assert!(w[1] >= w[0], "{row:?}");
+            }
+            assert!(*vals.last().unwrap() <= 28);
+        }
+        // Down each column (increasing alpha_m) counts are non-decreasing.
+        for c in 1..t.columns.len() {
+            let vals: Vec<i64> = t.rows.iter().map(|r| r[c].parse().unwrap()).collect();
+            for w in vals.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Model-validation figures: 4, 7, 8, 9, 10, 11, 12.
+
+use super::report::{f, Report};
+use crate::config::GpuConfig;
+use crate::coordinator::{feasible_splits, Coordinator};
+use crate::kernel::{testing::testing_kernels, BenchmarkApp, KernelSpec};
+use crate::model::{self, Granularity};
+use crate::profiler;
+use crate::sim;
+use crate::stats::pearson;
+
+/// Fig. 4: correlation between single-kernel PUR/MUR differences and
+/// measured co-scheduling profit, over the synthetic testing kernels.
+pub fn fig4(opts: &super::FigOptions) -> Report {
+    let gpu = GpuConfig::c2050();
+    let kernels = testing_kernels(12);
+    let profiles: Vec<_> = kernels.iter().map(|k| profiler::profile(&gpu, k)).collect();
+    let mut r = Report::new(
+        "fig4",
+        "PUR/MUR difference vs measured CP over testing kernels (paper Fig. 4)",
+        &["k1", "k2", "pur_diff", "mur_diff", "cp"],
+    );
+    let mut purds = Vec::new();
+    let mut murds = Vec::new();
+    let mut cps = Vec::new();
+    for i in 0..kernels.len() {
+        for j in i + 1..kernels.len() {
+            let (a, b) = (&kernels[i], &kernels[j]);
+            // Balanced slice sizes (drain times matched using the
+            // measured solo IPCs): an equal-size pair would spend most
+            // of the round in the slow kernel's drain tail, polluting
+            // the CP measurement with an imbalance artifact the real
+            // scheduler never produces.
+            let base = 3 * gpu.num_sms;
+            let ratio = (profiles[j].ipc / profiles[i].ipc).clamp(0.1, 10.0);
+            let (s1, s2) = if ratio >= 1.0 {
+                (base, ((base as f64 * ratio / gpu.num_sms as f64).round() as u32).max(1) * gpu.num_sms)
+            } else {
+                (
+                    ((base as f64 / ratio / gpu.num_sms as f64).round() as u32).max(1) * gpu.num_sms,
+                    base,
+                )
+            };
+            let pair = sim::simulate_pair(&gpu, a, s1, 3, b, s2, 3, opts.seed);
+            let cp = model::co_scheduling_profit(
+                &[profiles[i].ipc, profiles[j].ipc],
+                &[pair.cipc(0), pair.cipc(1)],
+            );
+            let pd = (profiles[i].pur - profiles[j].pur).abs();
+            let md = (profiles[i].mur - profiles[j].mur).abs();
+            purds.push(pd);
+            murds.push(md);
+            cps.push(cp);
+            r.row(vec![
+                a.name.to_string(),
+                b.name.to_string(),
+                f(pd, 4),
+                f(md, 4),
+                f(cp, 4),
+            ]);
+        }
+    }
+    let rp = pearson(&purds, &cps);
+    let rm = pearson(&murds, &cps);
+    r.note(format!("pearson(pur_diff, cp) = {rp:.3}"));
+    r.note(format!("pearson(mur_diff, cp) = {rm:.3}"));
+    r.note("paper: strong positive correlation for both factors");
+    r
+}
+
+/// Fig. 7: single-kernel IPC — predicted (Markov model, 3-state for
+/// uncoalesced kernels) vs measured (simulator), both GPUs.
+pub fn fig7() -> Report {
+    let mut r = Report::new(
+        "fig7",
+        "Single-kernel IPC: predicted vs measured (paper Fig. 7)",
+        &["gpu", "bench", "measured", "predicted", "abs_err"],
+    );
+    for gpu in GpuConfig::all() {
+        let mut errs = Vec::new();
+        for app in BenchmarkApp::ALL {
+            let spec = app.spec();
+            let measured = sim::simulate_solo(&gpu, &spec, crate::sim::DEFAULT_SEED).ipc(&gpu);
+            let predicted = predict_solo_best(&gpu, &spec);
+            let err = (measured - predicted).abs();
+            errs.push(err);
+            r.row(vec![
+                gpu.name.to_string(),
+                app.name().to_string(),
+                f(measured, 4),
+                f(predicted, 4),
+                f(err, 4),
+            ]);
+        }
+        let avg = errs.iter().sum::<f64>() / errs.len() as f64;
+        r.note(format!(
+            "{}: average absolute error {:.3} (paper: 0.08 on C2050, 0.21 on GTX680; ±20% of peak band)",
+            gpu.name, avg
+        ));
+    }
+    r
+}
+
+/// The production prediction path: 3-state model when the kernel has
+/// uncoalesced accesses, 2-state otherwise.
+fn predict_solo_best(gpu: &GpuConfig, spec: &KernelSpec) -> f64 {
+    if spec.mix.uncoalesced_frac > 0.0 {
+        model::uncoal::predict_solo_tri(gpu, spec, Granularity::Block).ipc
+    } else {
+        model::predict_solo(gpu, spec, Granularity::Warp).ipc
+    }
+}
+
+/// Shared machinery for Figs. 8/9/11/12: run all 28 benchmark pairs at
+/// a residency split, compare model and simulator.
+fn concurrent_rows(
+    r: &mut Report,
+    gpu: &GpuConfig,
+    split: SplitPolicy,
+    virtual_sm: bool,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let coord = Coordinator::new(gpu);
+    let apps = BenchmarkApp::ALL;
+    let mut meas_tot = Vec::new();
+    let mut pred_tot = Vec::new();
+    let mut meas_cp = Vec::new();
+    let mut pred_cp = Vec::new();
+    for i in 0..apps.len() {
+        for j in i + 1..apps.len() {
+            let (k1, k2) = (apps[i].spec(), apps[j].spec());
+            let p1 = coord.profile(&k1);
+            let p2 = coord.profile(&k2);
+            let (b1, b2) = match split {
+                SplitPolicy::ModelBest => {
+                    let Some((b1, b2, ..)) = coord.best_split(&k1, &k2) else { continue };
+                    (b1, b2)
+                }
+                SplitPolicy::OneToOne => {
+                    let splits = feasible_splits(gpu, &k1, &k2);
+                    let Some(&(b1, b2)) =
+                        splits.iter().filter(|(a, b)| a == b).max_by_key(|(a, _)| *a)
+                    else {
+                        continue;
+                    };
+                    (b1, b2)
+                }
+            };
+            // Predicted concurrent IPCs at that split. The predicted CP
+            // divides by model-predicted solo IPCs (consistent units);
+            // the measured CP divides by measured solo IPCs.
+            let (ms1, ms2) = (coord.model_solo_ipc(&k1), coord.model_solo_ipc(&k2));
+            let pred = if virtual_sm {
+                model::predict_pair(gpu, &k1, b1, ms1, &k2, b2, ms2, Granularity::Block)
+            } else {
+                predict_pair_no_vsm(gpu, &k1, b1, ms1, &k2, b2, ms2)
+            };
+            // Measured: balanced slice pair on the simulator.
+            let (s1, s2) = model::balanced_slice_sizes(
+                gpu,
+                &k1,
+                b1,
+                pred.cipc[0].max(1e-6),
+                gpu.num_sms,
+                &k2,
+                b2,
+                pred.cipc[1].max(1e-6),
+                gpu.num_sms,
+            );
+            let m = coord.simcache.pair(&k1, s1, b1, &k2, s2, b2);
+            let mcp =
+                model::co_scheduling_profit(&[p1.ipc, p2.ipc], &[m.cipc[0], m.cipc[1]]);
+            meas_tot.push(m.total_ipc);
+            pred_tot.push(pred.total_ipc);
+            meas_cp.push(mcp);
+            pred_cp.push(pred.cp);
+            r.row(vec![
+                format!("{}+{}", apps[i].name(), apps[j].name()),
+                format!("{b1}:{b2}"),
+                f(m.total_ipc, 4),
+                f(pred.total_ipc, 4),
+                f(mcp, 4),
+                f(pred.cp, 4),
+            ]);
+        }
+    }
+    (meas_tot, pred_tot, meas_cp, pred_cp)
+}
+
+#[derive(Clone, Copy)]
+enum SplitPolicy {
+    ModelBest,
+    OneToOne,
+}
+
+/// Fig. 11 ablation path: heterogeneous model without the virtual-SM
+/// reduction (single scheduler over the whole SMX).
+fn predict_pair_no_vsm(
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    b1: u32,
+    ipc1: f64,
+    k2: &KernelSpec,
+    b2: u32,
+    ipc2: f64,
+) -> model::PairPrediction {
+    use crate::model::hetero::{build_hetero_chain, pair_ipc_from_steady};
+    use crate::model::params::{ChainParams, SmEnv};
+    let env = SmEnv::single_scheduler(gpu);
+    let p1 = ChainParams::from_kernel(gpu, k1, b1, Granularity::Block, 1);
+    let p2 = ChainParams::from_kernel(gpu, k2, b2, Granularity::Block, 1);
+    let chain = build_hetero_chain(&p1, &p2, &env);
+    let pi = model::steady_state_power(&chain, 1e-10, 20_000);
+    let cipc = pair_ipc_from_steady(&pi, &p1, &p2, &env);
+    let total_ipc = cipc[0] + cipc[1];
+    let cp = model::co_scheduling_profit(&[ipc1, ipc2], &cipc);
+    model::PairPrediction { cipc, total_ipc, cp }
+}
+
+fn concurrent_report(id: &str, title: &str, gpu: &GpuConfig, split: SplitPolicy, vsm: bool) -> Report {
+    let mut r = Report::new(
+        id,
+        title,
+        &["pair", "split_b1:b2", "measured_ipc", "predicted_ipc", "measured_cp", "predicted_cp"],
+    );
+    let (mt, pt, _, _) = concurrent_rows(&mut r, gpu, split, vsm);
+    if !mt.is_empty() {
+        let corr = pearson(&mt, &pt);
+        let mean_err = mt
+            .iter()
+            .zip(&pt)
+            .map(|(m, p)| (m - p).abs())
+            .sum::<f64>()
+            / mt.len() as f64;
+        r.note(format!("pairs={} pearson(measured, predicted)={corr:.3} mean|err|={mean_err:.3}", mt.len()));
+    }
+    r
+}
+
+/// Fig. 8: concurrent IPC at the model-chosen slice ratio, both GPUs.
+pub fn fig8() -> Report {
+    let mut out = concurrent_report(
+        "fig8",
+        "Concurrent IPC, model slice ratio (paper Fig. 8) — C2050 then GTX680",
+        &GpuConfig::c2050(),
+        SplitPolicy::ModelBest,
+        true,
+    );
+    let second = concurrent_report("fig8", "", &GpuConfig::gtx680(), SplitPolicy::ModelBest, true);
+    let gpu_tag = |rows: Vec<Vec<String>>, tag: &str| -> Vec<Vec<String>> {
+        rows.into_iter()
+            .map(|mut r| {
+                r[0] = format!("{tag}:{}", r[0]);
+                r
+            })
+            .collect()
+    };
+    out.rows = gpu_tag(out.rows, "C2050");
+    for row in gpu_tag(second.rows, "GTX680") {
+        out.rows.push(row);
+    }
+    for n in second.notes {
+        out.note(format!("GTX680 {n}"));
+    }
+    out
+}
+
+/// Fig. 9: concurrent IPC at a fixed 1:1 residency split.
+pub fn fig9() -> Report {
+    concurrent_report(
+        "fig9",
+        "Concurrent IPC, fixed 1:1 slice ratio on C2050 (paper Fig. 9)",
+        &GpuConfig::c2050(),
+        SplitPolicy::OneToOne,
+        true,
+    )
+}
+
+/// Fig. 10: PC and SPMV predicted with vs without uncoalesced-access
+/// modeling, against measurement (C2050).
+pub fn fig10() -> Report {
+    let gpu = GpuConfig::c2050();
+    let mut r = Report::new(
+        "fig10",
+        "Effect of uncoalesced-access modeling on C2050 (paper Fig. 10)",
+        &["bench", "measured", "tri_state", "assume_coalesced"],
+    );
+    for app in [BenchmarkApp::PC, BenchmarkApp::SPMV] {
+        let spec = app.spec();
+        let measured = sim::simulate_solo(&gpu, &spec, crate::sim::DEFAULT_SEED).ipc(&gpu);
+        let tri = model::uncoal::predict_solo_tri(&gpu, &spec, Granularity::Block).ipc;
+        let wrong = model::uncoal::predict_solo_assume_coalesced(&gpu, &spec, Granularity::Block).ipc;
+        r.row(vec![app.name().to_string(), f(measured, 4), f(tri, 4), f(wrong, 4)]);
+    }
+    r.note("paper: the coalesced-only assumption substantially overestimates IPC");
+    r
+}
+
+/// Fig. 11: GTX680 concurrent IPC predicted without the virtual-SM
+/// reduction (severe underestimation expected).
+pub fn fig11() -> Report {
+    let mut r = concurrent_report(
+        "fig11",
+        "Concurrent IPC on GTX680 WITHOUT virtual-SM modeling (paper Fig. 11)",
+        &GpuConfig::gtx680(),
+        SplitPolicy::ModelBest,
+        false,
+    );
+    r.note("paper: ignoring the multiple warp schedulers severely underestimates IPC");
+    r
+}
+
+/// Fig. 12: CP predicted vs measured on C2050 at the model ratio.
+pub fn fig12() -> Report {
+    let mut r = Report::new(
+        "fig12",
+        "Co-scheduling profit: predicted vs measured on C2050 (paper Fig. 12)",
+        &["pair", "split_b1:b2", "measured_ipc", "predicted_ipc", "measured_cp", "predicted_cp"],
+    );
+    let (_, _, mc, pc) = concurrent_rows(&mut r, &GpuConfig::c2050(), SplitPolicy::ModelBest, true);
+    if !mc.is_empty() {
+        let corr = pearson(&mc, &pc);
+        let mean_err =
+            mc.iter().zip(&pc).map(|(m, p)| (m - p).abs()).sum::<f64>() / mc.len() as f64;
+        r.note(format!("pearson(measured_cp, predicted_cp)={corr:.3} mean|err|={mean_err:.3}"));
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_ablation_direction() {
+        let t = fig10();
+        for row in &t.rows {
+            let tri: f64 = row[2].parse().unwrap();
+            let wrong: f64 = row[3].parse().unwrap();
+            assert!(wrong > tri, "{row:?}: coalesced-only must overestimate");
+        }
+    }
+
+    #[test]
+    fn fig7_errors_bounded() {
+        let t = fig7();
+        assert_eq!(t.rows.len(), 16);
+        // Predictions must track measurements within the paper's ±20%
+        // of peak IPC band for most kernels.
+        let gpu_col = t.col("gpu");
+        let err_col = t.col("abs_err");
+        let in_band = |gpu: &str, peak: f64| {
+            let errs: Vec<f64> = t
+                .rows
+                .iter()
+                .filter(|r| r[gpu_col] == gpu)
+                .map(|r| r[err_col].parse::<f64>().unwrap())
+                .collect();
+            errs.iter().filter(|&&e| e <= 0.2 * peak).count() as f64 / errs.len() as f64
+        };
+        assert!(in_band("Tesla C2050", 1.0) >= 0.75, "C2050 out of band");
+        assert!(in_band("GTX680", 8.0) >= 0.75, "GTX680 out of band");
+    }
+}

@@ -1,0 +1,134 @@
+//! A kernel *instance*: one submitted launch, with residual-block
+//! tracking as slices of it get dispatched.
+
+use super::spec::KernelSpec;
+
+/// Lifecycle of a submitted kernel instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelStatus {
+    /// In the pending queue, no slice dispatched yet.
+    Pending,
+    /// Some slices dispatched, blocks remain.
+    Running,
+    /// All thread blocks executed.
+    Finished,
+}
+
+/// One submitted kernel launch, tracked by the coordinator.
+///
+/// Slicing never re-orders blocks: slices are contiguous block-ID ranges
+/// (paper §2.2 "Block IDs of a slice is continuous in the grid index
+/// space"), so an instance only needs a cursor `next_block`.
+#[derive(Debug, Clone)]
+pub struct KernelInstance {
+    /// Unique id assigned at submission.
+    pub id: u64,
+    /// The kernel being launched.
+    pub spec: KernelSpec,
+    /// Submission time in seconds (Poisson arrival process).
+    pub arrival_time: f64,
+    /// First not-yet-dispatched block id.
+    next_block: u32,
+}
+
+impl KernelInstance {
+    pub fn new(id: u64, spec: KernelSpec, arrival_time: f64) -> Self {
+        spec.validate();
+        Self { id, spec, arrival_time, next_block: 0 }
+    }
+
+    /// Blocks not yet dispatched.
+    pub fn remaining_blocks(&self) -> u32 {
+        self.spec.grid_blocks - self.next_block
+    }
+
+    pub fn status(&self) -> KernelStatus {
+        if self.next_block == 0 {
+            KernelStatus::Pending
+        } else if self.next_block < self.spec.grid_blocks {
+            KernelStatus::Running
+        } else {
+            KernelStatus::Finished
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.status() == KernelStatus::Finished
+    }
+
+    /// Dispatch the next slice of up to `size` blocks; returns the
+    /// half-open block-id range actually dispatched.
+    ///
+    /// Panics if the instance is already finished (callers must check).
+    pub fn take_slice(&mut self, size: u32) -> std::ops::Range<u32> {
+        assert!(size > 0, "empty slice");
+        assert!(!self.is_finished(), "kernel {} already drained", self.id);
+        let start = self.next_block;
+        let end = (start + size).min(self.spec.grid_blocks);
+        self.next_block = end;
+        start..end
+    }
+
+    /// Undo a dispatched slice (used when a co-schedule is recomputed
+    /// after a new arrival preempts the planned sequence).
+    pub fn put_back(&mut self, range: std::ops::Range<u32>) {
+        assert_eq!(range.end, self.next_block, "can only put back the latest slice");
+        self.next_block = range.start;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::benchmarks::BenchmarkApp;
+
+    fn inst() -> KernelInstance {
+        KernelInstance::new(1, BenchmarkApp::MM.spec().with_grid(100), 0.0)
+    }
+
+    #[test]
+    fn slice_lifecycle() {
+        let mut k = inst();
+        assert_eq!(k.status(), KernelStatus::Pending);
+        assert_eq!(k.remaining_blocks(), 100);
+        let s = k.take_slice(30);
+        assert_eq!(s, 0..30);
+        assert_eq!(k.status(), KernelStatus::Running);
+        let s = k.take_slice(30);
+        assert_eq!(s, 30..60);
+        let s = k.take_slice(100); // clamped to remaining
+        assert_eq!(s, 60..100);
+        assert!(k.is_finished());
+        assert_eq!(k.remaining_blocks(), 0);
+    }
+
+    #[test]
+    fn slices_cover_grid_exactly_once() {
+        let mut k = inst();
+        let mut covered = vec![false; 100];
+        while !k.is_finished() {
+            for b in k.take_slice(7) {
+                assert!(!covered[b as usize], "block {b} dispatched twice");
+                covered[b as usize] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn put_back_restores() {
+        let mut k = inst();
+        let s = k.take_slice(40);
+        k.put_back(s);
+        assert_eq!(k.remaining_blocks(), 100);
+        assert_eq!(k.status(), KernelStatus::Pending);
+    }
+
+    #[test]
+    #[should_panic]
+    fn take_from_finished_panics() {
+        let mut k = inst();
+        k.take_slice(100);
+        k.take_slice(1);
+    }
+}

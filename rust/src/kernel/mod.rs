@@ -1,0 +1,18 @@
+//! Kernel representation: statistical specs, benchmark suite, launch
+//! instances.
+//!
+//! A [`KernelSpec`] is what Kernelet's scheduler knows about a submitted
+//! kernel: grid/block configuration, per-block resource usage (which
+//! determines occupancy), and the instruction mix obtained from profiling
+//! a few thread blocks (§4.4 "getting the input for the model"). The
+//! eight benchmark applications of Table 3 plus the synthetic testing
+//! kernels of Fig. 4 are defined in [`benchmarks`] and [`testing`].
+
+pub mod benchmarks;
+pub mod instance;
+pub mod spec;
+pub mod testing;
+
+pub use benchmarks::{benchmark_suite, BenchmarkApp};
+pub use instance::{KernelInstance, KernelStatus};
+pub use spec::{InstructionMix, KernelSpec};

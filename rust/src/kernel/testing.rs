@@ -1,0 +1,74 @@
+//! Synthetic testing kernels (paper §4.3, Fig. 4).
+//!
+//! The paper builds a family of kernels mixing memory and computation
+//! instructions in tunable ratios to demonstrate the correlation between
+//! single-kernel PUR/MUR and co-scheduling profit. `testing_kernels`
+//! generates the same family: single-run PURs in ~[0.26, 0.83] and MURs
+//! in ~[0.07, 0.84].
+
+use super::spec::{InstructionMix, KernelSpec};
+
+/// Names are leaked so specs can keep `&'static str` names (the family
+/// is tiny and generated once per process).
+fn leak_name(s: String) -> &'static str {
+    Box::leak(s.into_boxed_str())
+}
+
+/// Generate `n` synthetic testing kernels sweeping the memory-instruction
+/// ratio from compute-saturating to memory-saturating.
+pub fn testing_kernels(n: usize) -> Vec<KernelSpec> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            // Sweep R_m geometrically: 0.002 (pure compute) -> 0.5
+            // (pure memory streaming).
+            let mem_ratio = 0.002 * (0.5f64 / 0.002).powf(t);
+            KernelSpec {
+                name: leak_name(format!("SYN{i:02}")),
+                grid_blocks: 1024,
+                threads_per_block: 256,
+                regs_per_thread: 20,
+                smem_per_block: 0,
+                inst_per_warp: 2048,
+                mix: InstructionMix {
+                    mem_ratio,
+                    uncoalesced_frac: 0.0,
+                    uncoalesced_fanout: 1,
+                },
+                // Independent ALU chains like the paper's generated
+                // mixes; latency fully hideable at high occupancy.
+                arith_latency: 20,
+                ilp: 1.5,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_is_valid_and_monotone_in_mem_ratio() {
+        let ks = testing_kernels(10);
+        assert_eq!(ks.len(), 10);
+        for k in &ks {
+            k.validate();
+        }
+        for w in ks.windows(2) {
+            assert!(w[1].mix.mem_ratio > w[0].mix.mem_ratio);
+        }
+        assert!(ks[0].mix.mem_ratio < 0.01);
+        assert!((ks[9].mix.mem_ratio - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn names_distinct() {
+        let ks = testing_kernels(5);
+        let mut names: Vec<_> = ks.iter().map(|k| k.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5);
+    }
+}

@@ -1,0 +1,55 @@
+//! # Kernelet
+//!
+//! A reproduction of *"Kernelet: High-Throughput GPU Kernel Executions
+//! with Dynamic Slicing and Scheduling"* (Zhong & He, 2013) as a
+//! three-layer Rust + JAX/Pallas system.
+//!
+//! Kernelet improves the throughput of a GPU shared by many submitted
+//! kernels by (1) transparently *slicing* each kernel into sub-kernels of
+//! contiguous thread blocks via PTX index rectification, (2) predicting
+//! the instructions-per-cycle of any two co-scheduled slices with a
+//! Markov-chain model of the SM's warp population, and (3) greedily
+//! co-scheduling the kernel pair with the highest predicted
+//! *co-scheduling profit* at a *balanced slice ratio*.
+//!
+//! Because no Fermi/Kepler GPU exists in this environment, "measured"
+//! quantities come from a cycle-level stochastic GPU simulator
+//! ([`sim`]), and the real-compute path runs AOT-compiled XLA artifacts
+//! (JAX/Pallas-authored) through the PJRT CPU client ([`runtime`]).
+//! See DESIGN.md for the substitution argument.
+//!
+//! ## Layout
+//! - [`config`] — GPU architecture configs (paper Table 2).
+//! - [`stats`] — deterministic RNG, distributions, regression, CDFs.
+//! - [`kernel`] — kernel specs, the 8-benchmark suite (Tables 3-4),
+//!   synthetic testing kernels (Fig. 4), launch instances.
+//! - [`ptx`] — mini-PTX toolchain: parse, analyze, *index-rectify*
+//!   (the §4.1 slicing transform), emit, and interpret.
+//! - [`sim`] — cycle-level SM/GPU simulator (the measurement substrate).
+//! - [`model`] — the Markov-chain performance model (§4.4).
+//! - [`profiler`] — pre-execution profiling of a few thread blocks.
+//! - [`slicer`] — minimum-slice-size search under an overhead budget.
+//! - [`coordinator`] — pending queue, pruning, greedy scheduler,
+//!   baselines (BASE / OPT / MC).
+//! - [`workload`] — Poisson-arrival workload generation (Table 5).
+//! - [`runtime`] — PJRT artifact loading + sliced real-compute dispatch.
+//! - [`figures`] — regenerators for every paper table and figure.
+//! - [`bench`] — the micro-benchmark harness used by `cargo bench`
+//!   (criterion is unavailable offline).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod kernel;
+pub mod model;
+pub mod profiler;
+pub mod ptx;
+pub mod runtime;
+pub mod sim;
+pub mod slicer;
+pub mod stats;
+pub mod workload;
+
+pub use config::{Arch, GpuConfig};
+pub use kernel::{benchmark_suite, BenchmarkApp, KernelInstance, KernelSpec};

@@ -1,0 +1,208 @@
+//! `kernelet` — the Kernelet coordinator CLI.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! kernelet table <2|4|6>                  regenerate a paper table
+//! kernelet figure <4|6|...|14|all> [--out DIR] [--quick]
+//! kernelet profile <bench|all> [--gpu c2050|gtx680]
+//! kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu ...] [--instances N]
+//! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
+//! kernelet serve [--requests N]           E2E sliced serving demo (PJRT)
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::baselines::{run_base, run_opt};
+use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::figures::{self, FigOptions};
+use kernelet::kernel::BenchmarkApp;
+use kernelet::profiler;
+use kernelet::runtime::{ArtifactRegistry, SlicedRunner};
+use kernelet::workload::{Mix, Stream};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("table") => cmd_table(&args[1..]),
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
+        Some("schedule") => cmd_schedule(&args[1..]),
+        Some("slice-ptx") => cmd_slice_ptx(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reproduction)
+
+USAGE:
+  kernelet table <2|4|6>
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|all> [--out DIR] [--quick]
+  kernelet profile <BENCH|all> [--gpu c2050|gtx680]
+  kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
+  kernelet slice-ptx <file.ptx> [--dims 1|2]
+  kernelet serve [--requests N]
+";
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn parse_gpu(args: &[String]) -> Result<GpuConfig> {
+    match flag_value(args, "--gpu").unwrap_or("c2050") {
+        "c2050" => Ok(GpuConfig::c2050()),
+        "gtx680" => Ok(GpuConfig::gtx680()),
+        other => bail!("unknown gpu {other}"),
+    }
+}
+
+fn cmd_table(args: &[String]) -> Result<()> {
+    let id = match args.first().map(|s| s.as_str()) {
+        Some("2") => "table2",
+        Some("4") => "table4",
+        Some("6") => "table6",
+        _ => bail!("usage: kernelet table <2|4|6>"),
+    };
+    let rep = figures::generate(id, &FigOptions::default())?;
+    print!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    let Some(which) = args.first() else { bail!("usage: kernelet figure <id|all>") };
+    let opts =
+        if args.iter().any(|a| a == "--quick") { FigOptions::quick() } else { FigOptions::default() };
+    let out_dir = flag_value(args, "--out").map(PathBuf::from);
+    let ids: Vec<String> = if which == "all" {
+        figures::ALL_IDS.iter().map(|s| s.to_string()).collect()
+    } else if which.starts_with("fig") || which.starts_with("table") {
+        vec![which.to_string()]
+    } else {
+        vec![format!("fig{which}")]
+    };
+    for id in ids {
+        let rep = figures::generate(&id, &opts)?;
+        print!("{}", rep.render());
+        println!();
+        if let Some(dir) = &out_dir {
+            rep.save_tsv(dir)?;
+            println!("(saved {}/{}.tsv)", dir.display(), id);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &[String]) -> Result<()> {
+    let gpu = parse_gpu(args)?;
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let apps: Vec<BenchmarkApp> = if which == "all" || which.starts_with("--") {
+        BenchmarkApp::ALL.to_vec()
+    } else {
+        vec![BenchmarkApp::from_name(which).context("unknown benchmark")?]
+    };
+    println!("profiling on {} (pre-execution of a few thread blocks)", gpu.name);
+    println!(
+        "{:>6} {:>8} {:>8} {:>8} {:>8} {:>12}",
+        "bench", "ipc", "pur", "mur", "rm", "sect/m-inst"
+    );
+    for app in apps {
+        let p = profiler::profile(&gpu, &app.spec());
+        println!(
+            "{:>6} {:>8.4} {:>8.4} {:>8.4} {:>8.4} {:>12.4}",
+            app.name(),
+            p.ipc,
+            p.pur,
+            p.mur,
+            p.rm,
+            p.sectors_per_mem_inst
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &[String]) -> Result<()> {
+    let gpu = parse_gpu(args)?;
+    let mix = Mix::from_name(flag_value(args, "--mix").unwrap_or("ALL")).context("bad --mix")?;
+    let instances: u32 = flag_value(args, "--instances").unwrap_or("100").parse()?;
+    let coord = Coordinator::new(&gpu);
+    let stream = Stream::saturated(mix, instances, kernelet::sim::DEFAULT_SEED);
+    println!(
+        "scheduling {} instances ({} apps x {}) on {} ...",
+        stream.len(),
+        mix.apps().len(),
+        instances,
+        gpu.name
+    );
+    let base = run_base(&coord, &stream);
+    let ours = run_kernelet(&coord, &stream);
+    let opt = run_opt(&coord, &stream);
+    println!("BASE     : {:>10.3}s  ({:.1} kernels/s)", base.total_secs, base.throughput_kps);
+    println!(
+        "Kernelet : {:>10.3}s  ({:.1} kernels/s)  {:+.1}% vs BASE, {} co-schedule rounds",
+        ours.total_secs,
+        ours.throughput_kps,
+        (base.total_secs - ours.total_secs) / base.total_secs * 100.0,
+        ours.coschedule_rounds
+    );
+    println!(
+        "OPT      : {:>10.3}s  ({:.1} kernels/s)  Kernelet gap {:+.1}%",
+        opt.total_secs,
+        opt.throughput_kps,
+        (ours.total_secs - opt.total_secs) / opt.total_secs * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_slice_ptx(args: &[String]) -> Result<()> {
+    let Some(path) = args.first() else { bail!("usage: kernelet slice-ptx <file.ptx> [--dims N]") };
+    let dims: u32 = flag_value(args, "--dims").unwrap_or("1").parse()?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let opts = kernelet::ptx::RectifyOptions { dims };
+    let out = kernelet::ptx::slice_ptx(&src, &opts)?;
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let requests: u32 = flag_value(args, "--requests").unwrap_or("64").parse()?;
+    if !kernelet::runtime::artifacts_available() {
+        bail!("artifacts/ missing — run `make artifacts` first");
+    }
+    let reg = ArtifactRegistry::open_default()?;
+    let runner = SlicedRunner::new(&reg);
+    println!("PJRT platform: {}", reg.platform());
+    let kernels = reg.manifest().kernels();
+    let mut total = std::time::Duration::ZERO;
+    let start = std::time::Instant::now();
+    for i in 0..requests {
+        let kernel = &kernels[i as usize % kernels.len()];
+        let inputs = runner.example_inputs(kernel, 1000 + i as u64)?;
+        let t0 = std::time::Instant::now();
+        runner.run_verified(kernel, &inputs, &[4, 2, 2])?;
+        total += t0.elapsed();
+    }
+    let wall = start.elapsed();
+    println!(
+        "{requests} requests served (sliced 4+2+2, each verified vs full run): \
+         mean latency {:.2} ms, throughput {:.1} req/s",
+        total.as_secs_f64() * 1e3 / requests as f64,
+        requests as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}

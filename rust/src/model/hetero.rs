@@ -1,0 +1,244 @@
+//! Heterogeneous-workload model: two kernels co-resident on the SM
+//! (paper §4.4, Eqs. 5-7).
+//!
+//! The SM state is the pair (p, q) of idle-unit counts of the two
+//! kernels. The two kernels' unit transitions are independent given the
+//! shared round duration and the shared memory-contention latency, so
+//! each row of the product chain is the outer product of two marginal
+//! rows.
+
+use super::chain::{binomial_pmf, steady_state_auto, Transition};
+use super::params::{ChainParams, Granularity, SmEnv};
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Model output for a co-scheduled kernel pair at a given residency.
+#[derive(Debug, Clone, Copy)]
+pub struct PairPrediction {
+    /// Concurrent per-kernel IPC (whole SM, virtual SMs aggregated).
+    pub cipc: [f64; 2],
+    /// Aggregate concurrent IPC (Eq. 7).
+    pub total_ipc: f64,
+    /// Predicted co-scheduling profit vs the solo IPCs supplied.
+    pub cp: f64,
+}
+
+/// Build the product chain for two unit populations sharing the SM.
+pub fn build_hetero_chain(p1: &ChainParams, p2: &ChainParams, env: &SmEnv) -> Transition {
+    let (w1, w2) = (p1.units as usize, p2.units as usize);
+    let n = (w1 + 1) * (w2 + 1);
+    let mut t = Transition::new(n);
+    let mut sleep1 = Vec::new();
+    let mut wake1 = Vec::new();
+    let mut sleep2 = Vec::new();
+    let mut wake2 = Vec::new();
+    let mut row1 = vec![0.0f64; w1 + 1];
+    let mut row2 = vec![0.0f64; w2 + 1];
+    for p in 0..=w1 {
+        for q in 0..=w2 {
+            let state = p * (w2 + 1) + q;
+            let ready = (w1 - p) as f64 * p1.group + (w2 - q) as f64 * p2.group;
+            let d = (ready / env.issue_rate).max(1.0);
+            let outstanding =
+                p as f64 * p1.sectors_per_idle_unit + q as f64 * p2.sectors_per_idle_unit;
+            let l = env.latency(outstanding);
+            let p_wake = (d / l).min(1.0);
+            marginal_row(w1, p, p1.p_mem, p_wake, &mut sleep1, &mut wake1, &mut row1);
+            marginal_row(w2, q, p2.p_mem, p_wake, &mut sleep2, &mut wake2, &mut row2);
+            let out = t.row_mut(state);
+            for (i, &a) in row1.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let base = i * (w2 + 1);
+                for (j, &b) in row2.iter().enumerate() {
+                    out[base + j] += a * b;
+                }
+            }
+        }
+    }
+    t
+}
+
+/// One kernel's marginal transition row from `i` idle units out of `w`.
+fn marginal_row(
+    w: usize,
+    i: usize,
+    p_mem: f64,
+    p_wake: f64,
+    sleep_buf: &mut Vec<f64>,
+    wake_buf: &mut Vec<f64>,
+    out: &mut [f64],
+) {
+    out.iter_mut().for_each(|x| *x = 0.0);
+    binomial_pmf((w - i) as u32, p_mem, sleep_buf);
+    binomial_pmf(i as u32, p_wake, wake_buf);
+    for (s, &ps) in sleep_buf.iter().enumerate() {
+        if ps == 0.0 {
+            continue;
+        }
+        for (k, &pk) in wake_buf.iter().enumerate() {
+            out[i + s - k] += ps * pk;
+        }
+    }
+}
+
+/// Per-kernel concurrent IPC from the joint steady state
+/// (Eqs. 5 and 6: instructions each kernel issues per round over the
+/// shared round duration).
+pub fn pair_ipc_from_steady(
+    pi: &[f64],
+    p1: &ChainParams,
+    p2: &ChainParams,
+    env: &SmEnv,
+) -> [f64; 2] {
+    let (w1, w2) = (p1.units as usize, p2.units as usize);
+    assert_eq!(pi.len(), (w1 + 1) * (w2 + 1));
+    let mut insts = [0.0f64; 2];
+    let mut cycles = 0.0f64;
+    for p in 0..=w1 {
+        for q in 0..=w2 {
+            let g = pi[p * (w2 + 1) + q];
+            if g == 0.0 {
+                continue;
+            }
+            let i1 = (w1 - p) as f64 * p1.group;
+            let i2 = (w2 - q) as f64 * p2.group;
+            let d = ((i1 + i2) / env.issue_rate).max(1.0);
+            insts[0] += g * i1;
+            insts[1] += g * i2;
+            cycles += g * d;
+        }
+    }
+    if cycles == 0.0 {
+        [0.0, 0.0]
+    } else {
+        [insts[0] / cycles, insts[1] / cycles]
+    }
+}
+
+/// Predict the concurrent execution of `k1` at `b1` resident blocks/SM
+/// with `k2` at `b2`, given their solo IPCs (for the CP term).
+///
+/// `granularity` trades accuracy for state-space size; the scheduler
+/// uses [`Granularity::Block`] (the paper's production setting).
+pub fn predict_pair(
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    b1: u32,
+    solo_ipc1: f64,
+    k2: &KernelSpec,
+    b2: u32,
+    solo_ipc2: f64,
+    granularity: Granularity,
+) -> PairPrediction {
+    let env = SmEnv::virtual_sm(gpu);
+    let p1 = ChainParams::from_kernel(gpu, k1, b1, granularity, env.vsm_count);
+    let p2 = ChainParams::from_kernel(gpu, k2, b2, granularity, env.vsm_count);
+    let chain = build_hetero_chain(&p1, &p2, &env);
+    let pi = steady_state_auto(&chain);
+    let vsm = pair_ipc_from_steady(&pi, &p1, &p2, &env);
+    let cipc = [vsm[0] * env.vsm_count as f64, vsm[1] * env.vsm_count as f64];
+    let total_ipc = cipc[0] + cipc[1];
+    let cp = super::co_scheduling_profit(&[solo_ipc1, solo_ipc2], &cipc);
+    PairPrediction { cipc, total_ipc, cp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::InstructionMix;
+    use crate::model::homo::predict_solo;
+
+    fn spec(name: &'static str, mem: f64) -> KernelSpec {
+        KernelSpec {
+            name,
+            grid_blocks: 1024,
+            threads_per_block: 256,
+            regs_per_thread: 20,
+            smem_per_block: 0,
+            inst_per_warp: 1024,
+            mix: InstructionMix::coalesced(mem),
+            arith_latency: 20,
+            ilp: 2.0,
+        }
+    }
+
+    #[test]
+    fn hetero_chain_is_stochastic() {
+        let gpu = GpuConfig::c2050();
+        let env = SmEnv::virtual_sm(&gpu);
+        let p1 = ChainParams::from_kernel(&gpu, &spec("a", 0.02), 3, Granularity::Block, env.vsm_count);
+        let p2 = ChainParams::from_kernel(&gpu, &spec("b", 0.4), 3, Granularity::Block, env.vsm_count);
+        let t = build_hetero_chain(&p1, &p2, &env);
+        t.validate(1e-8);
+    }
+
+    #[test]
+    fn complementary_pair_has_positive_cp() {
+        let gpu = GpuConfig::c2050();
+        let (c, m) = (spec("c", 0.005), spec("m", 0.45));
+        let sc = predict_solo(&gpu, &c, Granularity::Block).ipc;
+        let sm = predict_solo(&gpu, &m, Granularity::Block).ipc;
+        let pred = predict_pair(&gpu, &c, 3, sc, &m, 3, sm, Granularity::Block);
+        assert!(pred.cp > 0.05, "cp={}", pred.cp);
+        // Both kernels make progress.
+        assert!(pred.cipc[0] > 0.0 && pred.cipc[1] > 0.0);
+    }
+
+    #[test]
+    fn identical_memory_kernels_gain_little() {
+        let gpu = GpuConfig::c2050();
+        let m = spec("m", 0.45);
+        let sm = predict_solo(&gpu, &m, Granularity::Block).ipc;
+        let same = predict_pair(&gpu, &m, 3, sm, &m, 3, sm, Granularity::Block);
+        let c = spec("c", 0.005);
+        let sc = predict_solo(&gpu, &c, Granularity::Block).ipc;
+        let complementary = predict_pair(&gpu, &c, 3, sc, &m, 3, sm, Granularity::Block);
+        assert!(
+            complementary.cp > same.cp + 0.03,
+            "complementary={} same={}",
+            complementary.cp,
+            same.cp
+        );
+    }
+
+    #[test]
+    fn total_ipc_is_sum_of_parts() {
+        let gpu = GpuConfig::c2050();
+        let (a, b) = (spec("a", 0.1), spec("b", 0.2));
+        let sa = predict_solo(&gpu, &a, Granularity::Block).ipc;
+        let sb = predict_solo(&gpu, &b, Granularity::Block).ipc;
+        let p = predict_pair(&gpu, &a, 3, sa, &b, 3, sb, Granularity::Block);
+        assert!((p.total_ipc - (p.cipc[0] + p.cipc[1])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_ipc_not_above_solo_at_same_residency() {
+        // Sharing the SM cannot make a kernel faster than it would be
+        // with the same residency alone plus an idle partner... it can
+        // only contend. (Each cIPC <= its half-residency solo IPC.)
+        let gpu = GpuConfig::c2050();
+        let m = spec("m", 0.3);
+        let solo_half = {
+            use crate::model::chain::SteadyStateMethod;
+            use crate::model::homo::predict_solo_at;
+            predict_solo_at(&gpu, &m, 3, Granularity::Block, SteadyStateMethod::PowerIteration, true).ipc
+        };
+        let s = predict_solo(&gpu, &m, Granularity::Block).ipc;
+        let p = predict_pair(&gpu, &m, 3, s, &m, 3, s, Granularity::Block);
+        assert!(p.cipc[0] <= solo_half + 1e-9, "cipc={} solo_half={}", p.cipc[0], solo_half);
+    }
+
+    #[test]
+    fn warp_granularity_pair_tractable_and_close_to_block() {
+        let gpu = GpuConfig::c2050();
+        let (c, m) = (spec("c", 0.01), spec("m", 0.35));
+        let sc = predict_solo(&gpu, &c, Granularity::Warp).ipc;
+        let sm = predict_solo(&gpu, &m, Granularity::Warp).ipc;
+        let w = predict_pair(&gpu, &c, 3, sc, &m, 3, sm, Granularity::Warp);
+        let b = predict_pair(&gpu, &c, 3, sc, &m, 3, sm, Granularity::Block);
+        let rel = (w.total_ipc - b.total_ipc).abs() / w.total_ipc;
+        assert!(rel < 0.4, "warp={} block={} rel={rel}", w.total_ipc, b.total_ipc);
+    }
+}

@@ -1,0 +1,206 @@
+//! Homogeneous-workload model: one kernel on the SM (paper §4.4,
+//! Eqs. 2-4).
+
+use super::chain::{binomial_pmf, steady_state_dense, steady_state_power, SteadyStateMethod, Transition};
+use super::params::{ChainParams, Granularity, SmEnv, SoloPrediction};
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Build the 2-state-per-unit chain's transition matrix over SM states
+/// S_0..S_W (number of idle units).
+///
+/// From state i (i idle, W−i ready), within one round of duration d(i):
+/// each ready unit goes idle w.p. `p_mem`; each idle unit wakes w.p.
+/// `min(1, d(i)/L(i))`. The (sleep, wake) pairs are independent
+/// binomials; P(i→j) convolves all pairs with `j = i + sleep − wake`
+/// (the paper's Eq. 2 constraints).
+pub fn build_homo_chain(p: &ChainParams, env: &SmEnv) -> Transition {
+    let w = p.units as usize;
+    let n = w + 1;
+    let mut t = Transition::new(n);
+    let mut sleep_pmf = Vec::new();
+    let mut wake_pmf = Vec::new();
+    for i in 0..=w {
+        let ready = (w - i) as f64;
+        let d = env.round_duration(ready, p.group);
+        let l = env.latency(i as f64 * p.sectors_per_idle_unit);
+        let p_wake = (d / l).min(1.0);
+        binomial_pmf((w - i) as u32, p.p_mem, &mut sleep_pmf);
+        binomial_pmf(i as u32, p_wake, &mut wake_pmf);
+        let row = t.row_mut(i);
+        for (s, &ps) in sleep_pmf.iter().enumerate() {
+            if ps == 0.0 {
+                continue;
+            }
+            for (k, &pk) in wake_pmf.iter().enumerate() {
+                let j = i + s - k;
+                row[j] += ps * pk;
+            }
+        }
+    }
+    t
+}
+
+/// IPC of one virtual SM from the steady-state vector (paper Eq. 4,
+/// generalized to group size g and issue rate r: a round in state i
+/// issues (W−i)·g instructions over max((W−i)·g/r, 1) cycles).
+pub fn ipc_from_steady(pi: &[f64], p: &ChainParams, env: &SmEnv) -> f64 {
+    let w = p.units as usize;
+    assert_eq!(pi.len(), w + 1);
+    let mut insts = 0.0;
+    let mut cycles = 0.0;
+    for (i, &g) in pi.iter().enumerate() {
+        let ready = (w - i) as f64;
+        let d = env.round_duration(ready, p.group);
+        insts += g * ready * p.group;
+        cycles += g * d;
+    }
+    if cycles == 0.0 {
+        0.0
+    } else {
+        insts / cycles
+    }
+}
+
+/// Predict solo IPC / PUR / MUR for `spec` at full solo residency on
+/// `gpu` (paper Fig. 7's predicted series).
+pub fn predict_solo(gpu: &GpuConfig, spec: &KernelSpec, granularity: Granularity) -> SoloPrediction {
+    let blocks = spec.blocks_per_sm(gpu);
+    predict_solo_at(gpu, spec, blocks, granularity, SteadyStateMethod::Auto, true)
+}
+
+/// Full-control variant: residency, solver and the virtual-SM reduction
+/// are explicit (the Fig. 11 ablation passes `virtual_sm = false`).
+pub fn predict_solo_at(
+    gpu: &GpuConfig,
+    spec: &KernelSpec,
+    blocks: u32,
+    granularity: Granularity,
+    method: SteadyStateMethod,
+    virtual_sm: bool,
+) -> SoloPrediction {
+    let env = if virtual_sm { SmEnv::virtual_sm(gpu) } else { SmEnv::single_scheduler(gpu) };
+    let params = ChainParams::from_kernel(gpu, spec, blocks, granularity, env.vsm_count);
+    let chain = build_homo_chain(&params, &env);
+    let pi = match method {
+        SteadyStateMethod::PowerIteration => steady_state_power(&chain, 1e-12, 20_000),
+        SteadyStateMethod::DenseSolve => steady_state_dense(&chain),
+        SteadyStateMethod::Auto => super::chain::steady_state_auto(&chain),
+    };
+    let vsm_ipc = ipc_from_steady(&pi, &params, &env);
+    let ipc = vsm_ipc * env.vsm_count as f64;
+    let pur = ipc / gpu.peak_ipc();
+    // Sector rate = IPC * sectors per instruction.
+    let sectors_per_inst = spec.mix.mem_ratio
+        * ((1.0 - spec.mix.uncoalesced_frac) * 4.0
+            + spec.mix.uncoalesced_frac * spec.mix.uncoalesced_fanout as f64);
+    let mur = ipc * sectors_per_inst / gpu.lsu_sectors_per_cycle;
+    SoloPrediction { ipc, pur, mur }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{BenchmarkApp, InstructionMix};
+
+    fn spec(mem: f64) -> KernelSpec {
+        KernelSpec {
+            name: "m",
+            grid_blocks: 1024,
+            threads_per_block: 256,
+            regs_per_thread: 20,
+            smem_per_block: 0,
+            inst_per_warp: 1024,
+            mix: InstructionMix::coalesced(mem),
+            arith_latency: 20,
+            ilp: 2.0,
+        }
+    }
+
+    #[test]
+    fn chain_rows_are_stochastic() {
+        let gpu = GpuConfig::c2050();
+        for mem in [0.0, 0.05, 0.3, 0.9, 1.0] {
+            let env = SmEnv::virtual_sm(&gpu);
+            let p = ChainParams::from_kernel(&gpu, &spec(mem), 6, Granularity::Warp, env.vsm_count);
+            let t = build_homo_chain(&p, &env);
+            t.validate(1e-9);
+        }
+    }
+
+    #[test]
+    fn pure_compute_predicts_peak() {
+        let gpu = GpuConfig::c2050();
+        let pred = predict_solo(&gpu, &spec(0.0), Granularity::Warp);
+        // No memory stalls: the model must predict peak IPC (the model
+        // ignores pipeline latency by design).
+        assert!((pred.ipc - 1.0).abs() < 1e-9, "ipc={}", pred.ipc);
+        assert!((pred.pur - 1.0).abs() < 1e-9);
+        assert_eq!(pred.mur, 0.0);
+    }
+
+    #[test]
+    fn heavy_memory_predicts_low_ipc() {
+        let gpu = GpuConfig::c2050();
+        let pred = predict_solo(&gpu, &spec(0.5), Granularity::Warp);
+        assert!(pred.ipc < 0.4, "ipc={}", pred.ipc);
+        assert!(pred.mur > 0.0);
+    }
+
+    #[test]
+    fn ipc_monotone_in_memory_ratio() {
+        let gpu = GpuConfig::c2050();
+        let mut last = f64::INFINITY;
+        for mem in [0.01, 0.05, 0.1, 0.2, 0.4] {
+            let p = predict_solo(&gpu, &spec(mem), Granularity::Warp);
+            assert!(p.ipc < last + 1e-9, "mem={mem} ipc={} last={last}", p.ipc);
+            last = p.ipc;
+        }
+    }
+
+    #[test]
+    fn block_granularity_approximates_warp_level() {
+        let gpu = GpuConfig::c2050();
+        for mem in [0.02, 0.1, 0.3] {
+            let w = predict_solo(&gpu, &spec(mem), Granularity::Warp);
+            let b = predict_solo(&gpu, &spec(mem), Granularity::Block);
+            let rel = (w.ipc - b.ipc).abs() / w.ipc;
+            assert!(rel < 0.35, "mem={mem}: warp={} block={} rel={rel}", w.ipc, b.ipc);
+        }
+    }
+
+    #[test]
+    fn solvers_agree() {
+        let gpu = GpuConfig::c2050();
+        let k = spec(0.15);
+        let a = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::PowerIteration, true);
+        let b = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::DenseSolve, true);
+        assert!((a.ipc - b.ipc).abs() < 1e-6, "power={} dense={}", a.ipc, b.ipc);
+    }
+
+    #[test]
+    fn kepler_without_virtual_sm_underestimates() {
+        // Fig. 11: ignoring the multiple warp schedulers severely
+        // underestimates Kepler IPC.
+        let gpu = GpuConfig::gtx680();
+        let k = BenchmarkApp::TEA.spec();
+        let with = predict_solo_at(&gpu, &k, 16, Granularity::Warp, SteadyStateMethod::PowerIteration, true);
+        let without =
+            predict_solo_at(&gpu, &k, 16, Granularity::Warp, SteadyStateMethod::PowerIteration, false);
+        assert!(
+            without.ipc < with.ipc * 0.5,
+            "with={} without={}",
+            with.ipc,
+            without.ipc
+        );
+    }
+
+    #[test]
+    fn lower_occupancy_lowers_memory_bound_ipc() {
+        let gpu = GpuConfig::c2050();
+        let k = spec(0.3);
+        let hi = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::PowerIteration, true);
+        let lo = predict_solo_at(&gpu, &k, 1, Granularity::Warp, SteadyStateMethod::PowerIteration, true);
+        assert!(lo.ipc < hi.ipc, "lo={} hi={}", lo.ipc, hi.ipc);
+    }
+}

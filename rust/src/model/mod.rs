@@ -1,0 +1,179 @@
+//! The Markov-chain performance model (paper §4.4).
+//!
+//! Kernelet's scheduler cannot pre-execute every candidate co-schedule;
+//! it needs a cheap analytic estimate of the IPC of two kernels' slices
+//! running concurrently on an SM. The paper models the SM's warp
+//! population as a Markov chain:
+//!
+//! - a warp is *ready* (has an issueable instruction) or *idle*
+//!   (stalled on memory);
+//! - the SM state is the number of idle warps; the chain steps once per
+//!   scheduling *round*, in which every ready warp issues one
+//!   instruction;
+//! - a ready warp goes idle with probability `R_m` (its instruction was
+//!   a memory op); an idle warp wakes within a round of duration `d`
+//!   with probability `d / L`, where the latency `L` grows linearly
+//!   with the number of outstanding requests (memory contention);
+//! - the steady-state distribution γ over states gives
+//!   `IPC = Σ γ_i·(W-i) / Σ γ_i·d_i` (Eqs. 4-6).
+//!
+//! Extensions implemented exactly as the paper describes:
+//! - **Heterogeneous workloads**: the product chain over two kernels'
+//!   idle counts, with shared round duration and shared memory
+//!   contention ([`hetero`]).
+//! - **Uncoalesced accesses**: a third warp state ("stalled on
+//!   uncoalesced access") with its own, higher latency ([`uncoal`]).
+//! - **Multiple warp schedulers**: Kepler SMXs are reduced to
+//!   `warp_schedulers` independent *virtual SMs*, each with a share of
+//!   the warps and bandwidth ([`params::VirtualSm`]).
+//! - **Block granularity**: grouping a block's warps into one
+//!   scheduling unit shrinks the state space from O(W²) to O(B²),
+//!   the paper's answer to the O(N³) steady-state cost.
+
+pub mod chain;
+pub mod hetero;
+pub mod homo;
+pub mod params;
+pub mod uncoal;
+
+pub use chain::{steady_state_dense, steady_state_power, SteadyStateMethod};
+pub use hetero::{predict_pair, PairPrediction};
+pub use homo::predict_solo;
+pub use params::{ChainParams, Granularity, SoloPrediction};
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Co-scheduling profit (paper Eq. 1).
+///
+/// `ipc` are solo IPCs, `cipc` concurrent IPCs, pairwise per kernel.
+/// CP = 0 means no better than serializing the kernels; 0.5 would mean
+/// both ran at full solo speed concurrently.
+pub fn co_scheduling_profit(ipc: &[f64], cipc: &[f64]) -> f64 {
+    assert_eq!(ipc.len(), cipc.len());
+    assert!(!ipc.is_empty());
+    let s: f64 = ipc
+        .iter()
+        .zip(cipc)
+        .map(|(&i, &c)| {
+            assert!(i > 0.0, "solo IPC must be positive");
+            c / i
+        })
+        .sum();
+    if s <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    1.0 - 1.0 / s
+}
+
+/// Predicted execution-time imbalance of a co-scheduled slice pair
+/// (paper Eq. 8): `ΔT = |s1·I1/cIPC1 − s2·I2/cIPC2|` in cycles, where
+/// `s` are slice sizes in blocks and `I` instructions per block.
+pub fn slice_imbalance(
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    s1: u32,
+    cipc1: f64,
+    k2: &KernelSpec,
+    s2: u32,
+    cipc2: f64,
+) -> f64 {
+    assert!(cipc1 > 0.0 && cipc2 > 0.0);
+    let t1 = s1 as f64 * k1.inst_per_block(gpu) as f64 / cipc1;
+    let t2 = s2 as f64 * k2.inst_per_block(gpu) as f64 / cipc2;
+    (t1 - t2).abs()
+}
+
+/// Given per-SM resident block counts `(b1, b2)` and the model's
+/// concurrent IPCs, pick slice sizes (grid blocks) that drain in nearly
+/// equal time (the *balanced slice ratio*, §4.4), subject to a minimum
+/// slice size from the slicer's overhead bound.
+///
+/// Slice sizes are multiples of `b_i * num_sms` (each SM keeps its
+/// resident quota for the whole co-schedule round).
+pub fn balanced_slice_sizes(
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    b1: u32,
+    cipc1: f64,
+    min_slice1: u32,
+    k2: &KernelSpec,
+    b2: u32,
+    cipc2: f64,
+    min_slice2: u32,
+) -> (u32, u32) {
+    let unit1 = b1 * gpu.num_sms;
+    let unit2 = b2 * gpu.num_sms;
+    // Candidate multiples of each kernel's residency unit, scanning for
+    // the pair with minimal predicted ΔT that satisfies both minimum
+    // slice sizes. The search space is tiny (paper: "only a limited
+    // number of slice ratios need to be evaluated").
+    let m1_lo = min_slice1.div_ceil(unit1).max(1);
+    let m2_lo = min_slice2.div_ceil(unit2).max(1);
+    let mut best = (m1_lo * unit1, m2_lo * unit2);
+    let mut best_dt = f64::INFINITY;
+    for m1 in m1_lo..m1_lo + 8 {
+        for m2 in m2_lo..m2_lo + 8 {
+            let (s1, s2) = (m1 * unit1, m2 * unit2);
+            let dt = slice_imbalance(gpu, k1, s1, cipc1, k2, s2, cipc2);
+            // Among balanced candidates prefer the smallest total slice
+            // (finer interleaving = quicker adaptation to arrivals).
+            let key = dt * (1.0 + 1e-6 * (s1 + s2) as f64);
+            if key < best_dt {
+                best_dt = key;
+                best = (s1, s2);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn cp_zero_when_serialized() {
+        // Co-run at exactly half solo speed each == serialization.
+        let cp = co_scheduling_profit(&[1.0, 0.5], &[0.5, 0.25]);
+        assert!(cp.abs() < 1e-12);
+    }
+
+    #[test]
+    fn cp_half_when_perfect() {
+        let cp = co_scheduling_profit(&[0.8, 0.3], &[0.8, 0.3]);
+        assert!((cp - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cp_negative_when_destructive() {
+        // Co-running made things slower than serializing.
+        let cp = co_scheduling_profit(&[1.0, 1.0], &[0.4, 0.4]);
+        assert!(cp < 0.0);
+    }
+
+    #[test]
+    fn imbalance_zero_when_matched() {
+        let gpu = GpuConfig::c2050();
+        let k = BenchmarkApp::MM.spec();
+        let dt = slice_imbalance(&gpu, &k, 10, 0.5, &k, 10, 0.5);
+        assert_eq!(dt, 0.0);
+    }
+
+    #[test]
+    fn balanced_sizes_are_unit_multiples_and_close() {
+        let gpu = GpuConfig::c2050();
+        let k1 = BenchmarkApp::MM.spec();
+        let k2 = BenchmarkApp::PC.spec();
+        // MM is ~5x the per-block work at these cIPCs; sizes should
+        // compensate.
+        let (s1, s2) = balanced_slice_sizes(&gpu, &k1, 4, 0.5, 42, &k2, 2, 0.05, 42);
+        assert_eq!(s1 % (4 * gpu.num_sms), 0);
+        assert_eq!(s2 % (2 * gpu.num_sms), 0);
+        let t1 = s1 as f64 * k1.inst_per_block(&gpu) as f64 / 0.5;
+        let t2 = s2 as f64 * k2.inst_per_block(&gpu) as f64 / 0.05;
+        let rel = (t1 - t2).abs() / t1.max(t2);
+        assert!(rel < 0.5, "t1={t1} t2={t2}");
+    }
+}

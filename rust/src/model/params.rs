@@ -1,0 +1,215 @@
+//! Model parameterization: from (GPU, kernel) to chain parameters.
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Scheduling-unit granularity for the chain's state space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One unit per warp — the exact model, O(W²) states for pairs.
+    Warp,
+    /// One unit per thread block — the paper's state-space reduction
+    /// ("we consider the thread block as a scheduling unit, instead of
+    /// considering individual warps", §4.4). Default in the scheduler.
+    Block,
+}
+
+/// Chain parameters for one kernel on one (virtual) SM.
+#[derive(Debug, Clone)]
+pub struct ChainParams {
+    /// Schedulable units resident on the (virtual) SM.
+    pub units: u32,
+    /// Warps per unit (1 for warp granularity).
+    pub group: f64,
+    /// Probability that a ready unit stalls on a memory access when it
+    /// issues (unit-level R_m).
+    pub p_mem: f64,
+    /// Outstanding 32-byte sectors contributed by one idle unit
+    /// (contention input to the linear latency model).
+    pub sectors_per_idle_unit: f64,
+    /// Fraction of memory stalls that are uncoalesced (3-state model).
+    pub uncoal_frac: f64,
+    /// Sectors for a coalesced unit stall / an uncoalesced unit stall.
+    pub sectors_coal: f64,
+    pub sectors_uncoal: f64,
+}
+
+impl ChainParams {
+    /// Derive chain parameters for `spec` occupying `blocks` resident
+    /// blocks on one SM of `gpu`, at the given granularity, assuming the
+    /// SM is divided into `vsm_count` virtual SMs (1 = whole SM).
+    pub fn from_kernel(
+        gpu: &GpuConfig,
+        spec: &KernelSpec,
+        blocks: u32,
+        granularity: Granularity,
+        vsm_count: u32,
+    ) -> Self {
+        assert!(blocks >= 1);
+        assert!(vsm_count >= 1);
+        let warps_per_block = spec.warps_per_block(gpu) as f64;
+        let total_warps = blocks as f64 * warps_per_block;
+        // Warps assigned to one virtual SM.
+        let vsm_warps = (total_warps / vsm_count as f64).max(1.0);
+        let (units, group) = match granularity {
+            Granularity::Warp => (vsm_warps.round().max(1.0) as u32, 1.0),
+            Granularity::Block => {
+                let blocks_per_vsm = (blocks as f64 / vsm_count as f64).max(1.0);
+                let units = blocks_per_vsm.round().max(1.0) as u32;
+                (units, vsm_warps / units as f64)
+            }
+        };
+        // Flow-preserving group reduction: a unit's "idle" state proxies
+        // g idle warps, so the unit-level stall probability that keeps
+        // the ready->idle flow equal to the warp-level chain's is R_m
+        // itself (each unit issues g instructions per round, and
+        // (W-I)·R_m warps stall per round = (U-I_u)·R_m units·g... /g).
+        // Amplifying to 1-(1-R_m)^g would make the whole block stall
+        // whenever any warp does, grossly underestimating IPC.
+        let p_mem = spec.mix.mem_ratio;
+        let sectors_coal = 4.0 * group.max(1.0);
+        let sectors_uncoal = spec.mix.uncoalesced_fanout as f64 * group.max(1.0);
+        let avg_sectors = (1.0 - spec.mix.uncoalesced_frac) * sectors_coal
+            + spec.mix.uncoalesced_frac * sectors_uncoal;
+        ChainParams {
+            units,
+            group,
+            p_mem,
+            sectors_per_idle_unit: avg_sectors,
+            uncoal_frac: spec.mix.uncoalesced_frac,
+            sectors_coal,
+            sectors_uncoal,
+        }
+    }
+}
+
+/// Shared (virtual-)SM environment for a chain evaluation.
+#[derive(Debug, Clone)]
+pub struct SmEnv {
+    /// Instructions per cycle the (virtual) SM can issue.
+    pub issue_rate: f64,
+    /// Base memory latency L0 in cycles.
+    pub l0: f64,
+    /// DRAM sectors per cycle available to this virtual SM.
+    pub bw: f64,
+    /// Number of virtual SMs the physical SM was divided into.
+    pub vsm_count: u32,
+}
+
+impl SmEnv {
+    /// The paper's virtual-SM reduction: one warp scheduler per virtual
+    /// SM, parameters divided accordingly (§4.4 "Adaptation to GPUs with
+    /// multiple warp schedulers").
+    pub fn virtual_sm(gpu: &GpuConfig) -> Self {
+        let n = gpu.warp_schedulers;
+        SmEnv {
+            issue_rate: gpu.issue_per_scheduler,
+            l0: gpu.mem_latency_cycles,
+            bw: gpu.dram_sectors_per_cycle_per_sm() / n as f64,
+            vsm_count: n,
+        }
+    }
+
+    /// Ablation (Fig. 11): ignore the multiple warp schedulers and model
+    /// the whole SM as a single-scheduler pipeline with unit issue rate.
+    pub fn single_scheduler(gpu: &GpuConfig) -> Self {
+        SmEnv {
+            issue_rate: 1.0,
+            l0: gpu.mem_latency_cycles,
+            bw: gpu.dram_sectors_per_cycle_per_sm(),
+            vsm_count: 1,
+        }
+    }
+
+    /// Linear contention latency: L = L0 + outstanding_sectors / B
+    /// (paper §4.4's linear memory model).
+    pub fn latency(&self, outstanding_sectors: f64) -> f64 {
+        self.l0 + outstanding_sectors / self.bw
+    }
+
+    /// Round duration in cycles when `ready_units` units each issue
+    /// `group` instructions (≥ 1 cycle; the all-idle round is one idle
+    /// cycle, per the paper).
+    pub fn round_duration(&self, ready_units: f64, group: f64) -> f64 {
+        (ready_units * group / self.issue_rate).max(1.0)
+    }
+}
+
+/// Model output for a solo kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct SoloPrediction {
+    /// Whole-SM IPC (all virtual SMs aggregated).
+    pub ipc: f64,
+    /// IPC / peak issue rate (the paper's PUR).
+    pub pur: f64,
+    /// Predicted MUR (sector rate / LSU peak).
+    pub mur: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn warp_granularity_unit_counts() {
+        let gpu = GpuConfig::c2050();
+        let k = BenchmarkApp::MM.spec(); // 256 threads -> 8 warps/block
+        let p = ChainParams::from_kernel(&gpu, &k, 4, Granularity::Warp, 1);
+        assert_eq!(p.units, 32);
+        assert_eq!(p.group, 1.0);
+        assert!((p.p_mem - k.mix.mem_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_granularity_groups_warps() {
+        let gpu = GpuConfig::c2050();
+        let k = BenchmarkApp::MM.spec();
+        let p = ChainParams::from_kernel(&gpu, &k, 4, Granularity::Block, 1);
+        assert_eq!(p.units, 4);
+        assert_eq!(p.group, 8.0);
+        // Flow-preserving reduction keeps the warp-level stall rate.
+        assert!((p.p_mem - k.mix.mem_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_sm_divides_resources() {
+        let gpu = GpuConfig::gtx680();
+        let env = SmEnv::virtual_sm(&gpu);
+        assert_eq!(env.vsm_count, 4);
+        assert_eq!(env.issue_rate, 2.0);
+        assert!((env.bw - gpu.dram_sectors_per_cycle_per_sm() / 4.0).abs() < 1e-12);
+        let k = BenchmarkApp::TEA.spec(); // 128 threads -> 4 warps/block
+        let p = ChainParams::from_kernel(&gpu, &k, 16, Granularity::Warp, 4);
+        assert_eq!(p.units, 16); // 64 warps / 4 vSMs
+    }
+
+    #[test]
+    fn latency_linear_in_outstanding() {
+        let gpu = GpuConfig::c2050();
+        let env = SmEnv::virtual_sm(&gpu);
+        let l1 = env.latency(0.0);
+        let l2 = env.latency(10.0);
+        let l3 = env.latency(20.0);
+        assert_eq!(l1, gpu.mem_latency_cycles);
+        assert!((l3 - l2 - (l2 - l1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_duration_floor_is_one() {
+        let gpu = GpuConfig::c2050();
+        let env = SmEnv::virtual_sm(&gpu);
+        assert_eq!(env.round_duration(0.0, 1.0), 1.0);
+        assert!(env.round_duration(24.0, 1.0) > 1.0);
+    }
+
+    #[test]
+    fn uncoalesced_kernel_has_split_sectors() {
+        let gpu = GpuConfig::c2050();
+        let k = BenchmarkApp::PC.spec();
+        let p = ChainParams::from_kernel(&gpu, &k, 6, Granularity::Warp, 1);
+        assert!(p.uncoal_frac > 0.9);
+        assert_eq!(p.sectors_coal, 4.0);
+        assert_eq!(p.sectors_uncoal, 16.0);
+    }
+}

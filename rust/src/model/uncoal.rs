@@ -1,0 +1,249 @@
+//! Three-state model for uncoalesced accesses (paper §4.4
+//! "Uncoalesced Access").
+//!
+//! A warp/unit is *ready*, *stalled on a coalesced access* (4 sectors,
+//! latency L_c), or *stalled on an uncoalesced access* (fanout sectors,
+//! higher latency L_u). The SM state is the pair (c, u) of stall counts
+//! with c + u ≤ W. Ready units trinomially split into
+//! {stay, stall-coalesced, stall-uncoalesced}; each stalled class wakes
+//! with its own binomial.
+//!
+//! Fig. 10's ablation ("wrongly assume coalesced-only") is reproduced by
+//! evaluating the plain 2-state model on a kernel whose
+//! `uncoalesced_frac` was zeroed out.
+
+use super::chain::{binomial_pmf, steady_state_auto, Transition};
+use super::params::{ChainParams, Granularity, SmEnv, SoloPrediction};
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Enumeration of (c, u) states with c + u ≤ w, plus index mapping.
+#[derive(Debug, Clone)]
+pub struct TriStateSpace {
+    pub w: usize,
+    states: Vec<(usize, usize)>,
+    index: Vec<usize>, // (c * (w+1) + u) -> state id
+}
+
+impl TriStateSpace {
+    pub fn new(w: usize) -> Self {
+        let mut states = Vec::new();
+        let mut index = vec![usize::MAX; (w + 1) * (w + 1)];
+        for c in 0..=w {
+            for u in 0..=(w - c) {
+                index[c * (w + 1) + u] = states.len();
+                states.push((c, u));
+            }
+        }
+        Self { w, states, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn state(&self, id: usize) -> (usize, usize) {
+        self.states[id]
+    }
+
+    pub fn id(&self, c: usize, u: usize) -> usize {
+        let v = self.index[c * (self.w + 1) + u];
+        debug_assert_ne!(v, usize::MAX);
+        v
+    }
+}
+
+/// Trinomial pmf over (stall_c, stall_u) for n ready units with
+/// per-issue probabilities (p_c, p_u). Returned as a dense (n+1)² grid
+/// where entry [a][b] is P(stall_c = a, stall_u = b), zero when a+b > n.
+fn trinomial_pmf(n: usize, p_c: f64, p_u: f64, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize((n + 1) * (n + 1), 0.0);
+    // P(a,b) = C(n,a) C(n-a,b) p_c^a p_u^b (1-p_c-p_u)^(n-a-b).
+    // Build via two nested binomials: a ~ Binom(n, p_c), then given a,
+    // b ~ Binom(n-a, p_u / (1-p_c)).
+    let mut pa = Vec::new();
+    let mut pb = Vec::new();
+    binomial_pmf(n as u32, p_c, &mut pa);
+    let p_u_given = if p_c >= 1.0 { 0.0 } else { (p_u / (1.0 - p_c)).min(1.0) };
+    for (a, &qa) in pa.iter().enumerate() {
+        if qa == 0.0 {
+            continue;
+        }
+        binomial_pmf((n - a) as u32, p_u_given, &mut pb);
+        for (b, &qb) in pb.iter().enumerate() {
+            out[a * (n + 1) + b] += qa * qb;
+        }
+    }
+}
+
+/// Build the 3-state chain for a solo kernel.
+pub fn build_tri_chain(p: &ChainParams, env: &SmEnv) -> (TriStateSpace, Transition) {
+    let w = p.units as usize;
+    let space = TriStateSpace::new(w);
+    let n = space.len();
+    let mut t = Transition::new(n);
+    let p_mem_c = p.p_mem * (1.0 - p.uncoal_frac);
+    let p_mem_u = p.p_mem * p.uncoal_frac;
+    let mut tri = Vec::new();
+    let mut wake_c = Vec::new();
+    let mut wake_u = Vec::new();
+    for id in 0..n {
+        let (c, u) = space.state(id);
+        let ready = w - c - u;
+        let d = env.round_duration(ready as f64, p.group);
+        let outstanding = c as f64 * p.sectors_coal + u as f64 * p.sectors_uncoal;
+        // Uncoalesced stalls wait on `fanout` serialized sectors; their
+        // latency is higher by the extra service time through the same
+        // contended queue.
+        let l_c = env.latency(outstanding);
+        let l_u = l_c + (p.sectors_uncoal - p.sectors_coal).max(0.0) / env.bw;
+        let pw_c = (d / l_c).min(1.0);
+        let pw_u = (d / l_u).min(1.0);
+        trinomial_pmf(ready, p_mem_c, p_mem_u, &mut tri);
+        binomial_pmf(c as u32, pw_c, &mut wake_c);
+        binomial_pmf(u as u32, pw_u, &mut wake_u);
+        // row[(c + sc - kc, u + su - ku)] += P(sc,su) P(kc) P(ku)
+        for sc in 0..=ready {
+            for su in 0..=(ready - sc) {
+                let pt = tri[sc * (ready + 1) + su];
+                if pt == 0.0 {
+                    continue;
+                }
+                for (kc, &qc) in wake_c.iter().enumerate() {
+                    if qc == 0.0 {
+                        continue;
+                    }
+                    for (ku, &qu) in wake_u.iter().enumerate() {
+                        let nc = c + sc - kc;
+                        let nu = u + su - ku;
+                        let j = space.id(nc, nu);
+                        t.row_mut(id)[j] += pt * qc * qu;
+                    }
+                }
+            }
+        }
+    }
+    (space, t)
+}
+
+/// Predict solo IPC with the 3-state model.
+pub fn predict_solo_tri(gpu: &GpuConfig, spec: &KernelSpec, granularity: Granularity) -> SoloPrediction {
+    let env = SmEnv::virtual_sm(gpu);
+    let blocks = spec.blocks_per_sm(gpu);
+    let p = ChainParams::from_kernel(gpu, spec, blocks, granularity, env.vsm_count);
+    let (space, chain) = build_tri_chain(&p, &env);
+    let pi = steady_state_auto(&chain);
+    let mut insts = 0.0;
+    let mut cycles = 0.0;
+    for (id, &g) in pi.iter().enumerate() {
+        let (c, u) = space.state(id);
+        let ready = (space.w - c - u) as f64;
+        let d = env.round_duration(ready, p.group);
+        insts += g * ready * p.group;
+        cycles += g * d;
+    }
+    let vsm_ipc = if cycles == 0.0 { 0.0 } else { insts / cycles };
+    let ipc = vsm_ipc * env.vsm_count as f64;
+    let sectors_per_inst = spec.mix.mem_ratio
+        * ((1.0 - spec.mix.uncoalesced_frac) * 4.0
+            + spec.mix.uncoalesced_frac * spec.mix.uncoalesced_fanout as f64);
+    SoloPrediction { ipc, pur: ipc / gpu.peak_ipc(), mur: ipc * sectors_per_inst / gpu.lsu_sectors_per_cycle }
+}
+
+/// The Fig. 10 ablation: predict while (wrongly) assuming all accesses
+/// are coalesced.
+pub fn predict_solo_assume_coalesced(
+    gpu: &GpuConfig,
+    spec: &KernelSpec,
+    granularity: Granularity,
+) -> SoloPrediction {
+    let mut wrong = spec.clone();
+    wrong.mix.uncoalesced_frac = 0.0;
+    wrong.mix.uncoalesced_fanout = 1;
+    super::homo::predict_solo(gpu, &wrong, granularity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{BenchmarkApp, InstructionMix, KernelSpec};
+
+    #[test]
+    fn state_space_size() {
+        let s = TriStateSpace::new(4);
+        // (4+1)(4+2)/2 = 15 states.
+        assert_eq!(s.len(), 15);
+        for id in 0..s.len() {
+            let (c, u) = s.state(id);
+            assert!(c + u <= 4);
+            assert_eq!(s.id(c, u), id);
+        }
+    }
+
+    #[test]
+    fn trinomial_sums_to_one() {
+        let mut buf = Vec::new();
+        for n in [0usize, 1, 5, 12] {
+            trinomial_pmf(n, 0.2, 0.3, &mut buf);
+            let s: f64 = buf.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn tri_chain_stochastic() {
+        let gpu = GpuConfig::c2050();
+        let env = SmEnv::virtual_sm(&gpu);
+        let k = BenchmarkApp::PC.spec();
+        let p = ChainParams::from_kernel(&gpu, &k, 6, Granularity::Block, env.vsm_count);
+        let (_, t) = build_tri_chain(&p, &env);
+        t.validate(1e-8);
+    }
+
+    #[test]
+    fn coalesced_only_kernel_matches_two_state() {
+        // With uncoal_frac = 0 the 3-state model must agree with the
+        // 2-state model.
+        let gpu = GpuConfig::c2050();
+        let k = KernelSpec {
+            name: "c",
+            grid_blocks: 1024,
+            threads_per_block: 256,
+            regs_per_thread: 20,
+            smem_per_block: 0,
+            inst_per_warp: 1024,
+            mix: InstructionMix::coalesced(0.2),
+            arith_latency: 20,
+            ilp: 1.0,
+        };
+        let tri = predict_solo_tri(&gpu, &k, Granularity::Block);
+        let two = super::super::homo::predict_solo(&gpu, &k, Granularity::Block);
+        assert!(
+            (tri.ipc - two.ipc).abs() / two.ipc < 0.02,
+            "tri={} two={}",
+            tri.ipc,
+            two.ipc
+        );
+    }
+
+    #[test]
+    fn assuming_coalesced_overestimates_pc() {
+        // Fig. 10: ignoring uncoalesced accesses predicts much higher
+        // IPC than the 3-state model for PC.
+        let gpu = GpuConfig::c2050();
+        let pc = BenchmarkApp::PC.spec();
+        let tri = predict_solo_tri(&gpu, &pc, Granularity::Block);
+        let wrong = predict_solo_assume_coalesced(&gpu, &pc, Granularity::Block);
+        assert!(
+            wrong.ipc > tri.ipc * 1.5,
+            "wrong={} tri={}",
+            wrong.ipc,
+            tri.ipc
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Hardware profiling by pre-execution (paper §4.4, "getting the input
+//! for the model").
+//!
+//! Kernelet profiles "a small number of thread blocks from a single
+//! kernel" — a tiny fraction of the full grid — and derives from the
+//! counters everything the model and the pruning stage need: R_m (memory
+//! instructions / total instructions), solo IPC, PUR, MUR, and
+//! instructions per block. Profiles are cached per kernel name ("if the
+//! kernel has been submitted before, we simply use ... the previous
+//! execution").
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+use crate::sim;
+
+/// Profiler counters for one kernel on one GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Profile {
+    /// Measured solo IPC per SM.
+    pub ipc: f64,
+    /// Pipeline utilization ratio (§4.3).
+    pub pur: f64,
+    /// Memory-bandwidth utilization ratio (§4.3).
+    pub mur: f64,
+    /// Measured memory-instruction ratio (model input R_m).
+    pub rm: f64,
+    /// Average 32B sectors per memory instruction (coalescing profile).
+    pub sectors_per_mem_inst: f64,
+    /// Dynamic instructions per thread block (Eq. 8 input I_K).
+    pub inst_per_block: u64,
+}
+
+/// How many "resident generations" of blocks the pre-execution runs
+/// (2 generations saturates the SM and washes out the cold-start).
+const PROFILE_GENERATIONS: u32 = 3;
+
+/// Profile a kernel by pre-executing a few thread blocks.
+pub fn profile(gpu: &GpuConfig, spec: &KernelSpec) -> Profile {
+    // Pre-execute a few generations of resident blocks across all SMs —
+    // a very small part of the full grid for Table-3-sized kernels.
+    let blocks = (spec.blocks_per_sm(gpu) * PROFILE_GENERATIONS * gpu.num_sms).min(spec.grid_blocks);
+    let small = spec.with_grid(blocks);
+    let mut r = sim::simulate_solo(gpu, &small, sim::DEFAULT_SEED ^ 0x9120F11E);
+    // The profiler reads SM counters; the launch overhead is excluded
+    // (it would pollute IPC for so few blocks).
+    r.cycles -= gpu.launch_overhead_cycles;
+    let m = &r.kernels[0];
+    Profile {
+        ipc: r.ipc(gpu),
+        pur: r.pur(gpu),
+        mur: r.mur(gpu),
+        rm: if m.insts == 0 { 0.0 } else { m.mem_insts as f64 / m.insts as f64 },
+        sectors_per_mem_inst: if m.mem_insts == 0 {
+            4.0
+        } else {
+            m.sectors as f64 / m.mem_insts as f64
+        },
+        inst_per_block: spec.inst_per_block(gpu),
+    }
+}
+
+/// Process-wide profile cache keyed by (gpu name, kernel name).
+#[derive(Default)]
+pub struct ProfileCache {
+    map: Mutex<HashMap<(String, String), Profile>>,
+}
+
+impl ProfileCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Profile through the cache.
+    pub fn get(&self, gpu: &GpuConfig, spec: &KernelSpec) -> Profile {
+        let key = (gpu.name.to_string(), spec.name.to_string());
+        if let Some(p) = self.map.lock().unwrap().get(&key) {
+            return *p;
+        }
+        let p = profile(gpu, spec);
+        self.map.lock().unwrap().insert(key, p);
+        p
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn rm_estimate_close_to_spec() {
+        let gpu = GpuConfig::c2050();
+        for app in [BenchmarkApp::PC, BenchmarkApp::ST, BenchmarkApp::MM] {
+            let spec = app.spec();
+            let p = profile(&gpu, &spec);
+            // Stochastic instruction stream: R_m within 20% relative or
+            // 0.005 absolute.
+            let err = (p.rm - spec.mix.mem_ratio).abs();
+            assert!(
+                err < (0.2 * spec.mix.mem_ratio).max(5e-3),
+                "{}: rm={} spec={}",
+                app.name(),
+                p.rm,
+                spec.mix.mem_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn sectors_profile_detects_uncoalesced() {
+        let gpu = GpuConfig::c2050();
+        let pc = profile(&gpu, &BenchmarkApp::PC.spec());
+        let mm = profile(&gpu, &BenchmarkApp::MM.spec());
+        assert!(pc.sectors_per_mem_inst > 10.0, "pc={}", pc.sectors_per_mem_inst);
+        assert!((mm.sectors_per_mem_inst - 4.0).abs() < 0.01, "mm={}", mm.sectors_per_mem_inst);
+    }
+
+    #[test]
+    fn compute_kernels_profile_high_pur() {
+        let gpu = GpuConfig::c2050();
+        let tea = profile(&gpu, &BenchmarkApp::TEA.spec());
+        let pc = profile(&gpu, &BenchmarkApp::PC.spec());
+        assert!(tea.pur > 0.8, "tea pur={}", tea.pur);
+        assert!(pc.pur < 0.1, "pc pur={}", pc.pur);
+        assert!(pc.mur > tea.mur);
+    }
+
+    #[test]
+    fn cache_hits_are_identical() {
+        let gpu = GpuConfig::c2050();
+        let cache = ProfileCache::new();
+        let a = cache.get(&gpu, &BenchmarkApp::BS.spec());
+        let b = cache.get(&gpu, &BenchmarkApp::BS.spec());
+        assert_eq!(a, b);
+        assert_eq!(cache.len(), 1);
+    }
+}

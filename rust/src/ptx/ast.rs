@@ -1,0 +1,396 @@
+//! AST for the mini-PTX subset.
+
+use std::fmt;
+
+/// Scalar types (the subset the benchmarks need).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Type {
+    U32,
+    S32,
+    U64,
+    F32,
+    Pred,
+}
+
+impl Type {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Type::U32 => "u32",
+            Type::S32 => "s32",
+            Type::U64 => "u64",
+            Type::F32 => "f32",
+            Type::Pred => "pred",
+        }
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Type::U32 | Type::S32 | Type::F32 => 4,
+            Type::U64 => 8,
+            Type::Pred => 1,
+        }
+    }
+
+    pub fn from_suffix(s: &str) -> Option<Type> {
+        Some(match s {
+            "u32" => Type::U32,
+            "s32" => Type::S32,
+            "u64" => Type::U64,
+            "f32" => Type::F32,
+            "pred" => Type::Pred,
+            _ => return None,
+        })
+    }
+}
+
+/// A virtual register, e.g. `%r1`, `%rd4`, `%f2`, `%p0`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub String);
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// Built-in special registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Special {
+    CtaIdX,
+    CtaIdY,
+    TidX,
+    TidY,
+    NTidX,
+    NTidY,
+    NCtaIdX,
+    NCtaIdY,
+}
+
+impl Special {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Special::CtaIdX => "%ctaid.x",
+            Special::CtaIdY => "%ctaid.y",
+            Special::TidX => "%tid.x",
+            Special::TidY => "%tid.y",
+            Special::NTidX => "%ntid.x",
+            Special::NTidY => "%ntid.y",
+            Special::NCtaIdX => "%nctaid.x",
+            Special::NCtaIdY => "%nctaid.y",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Special> {
+        Some(match s {
+            "%ctaid.x" => Special::CtaIdX,
+            "%ctaid.y" => Special::CtaIdY,
+            "%tid.x" => Special::TidX,
+            "%tid.y" => Special::TidY,
+            "%ntid.x" => Special::NTidX,
+            "%ntid.y" => Special::NTidY,
+            "%nctaid.x" => Special::NCtaIdX,
+            "%nctaid.y" => Special::NCtaIdY,
+            _ => return None,
+        })
+    }
+}
+
+/// Instruction operand.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    /// Integer immediate (also carries small negatives for s32).
+    Imm(i64),
+    /// f32 immediate, e.g. `0f3F800000` or a decimal literal.
+    FImm(f32),
+    Special(Special),
+}
+
+/// Comparison operators for `setp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl Cmp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cmp::Eq => "eq",
+            Cmp::Ne => "ne",
+            Cmp::Lt => "lt",
+            Cmp::Le => "le",
+            Cmp::Gt => "gt",
+            Cmp::Ge => "ge",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Cmp> {
+        Some(match s {
+            "eq" => Cmp::Eq,
+            "ne" => Cmp::Ne,
+            "lt" => Cmp::Lt,
+            "le" => Cmp::Le,
+            "gt" => Cmp::Gt,
+            "ge" => Cmp::Ge,
+            _ => return None,
+        })
+    }
+}
+
+/// Binary ALU operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul, // `.lo` semantics for integers
+    Div,
+    Rem,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+impl BinOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul.lo",
+            BinOp::Div => "div",
+            BinOp::Rem => "rem",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+            BinOp::And => "and",
+            BinOp::Or => "or",
+            BinOp::Xor => "xor",
+            BinOp::Shl => "shl",
+            BinOp::Shr => "shr",
+        }
+    }
+}
+
+/// Memory address: `[reg + offset]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Addr {
+    pub base: Reg,
+    pub offset: i64,
+}
+
+/// State space for loads/stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    Param,
+    Global,
+}
+
+/// One instruction of the subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    /// `mov.<ty> dst, src`
+    Mov { ty: Type, dst: Reg, src: Operand },
+    /// `<op>.<ty> dst, a, b`
+    Bin { op: BinOp, ty: Type, dst: Reg, a: Operand, b: Operand },
+    /// `mad.lo.<ty> dst, a, b, c` (dst = a*b + c) / `fma.rn.f32`
+    Mad { ty: Type, dst: Reg, a: Operand, b: Operand, c: Operand },
+    /// `mul.wide.u32 dst(u64), a(u32), b(u32)`
+    MulWide { dst: Reg, a: Operand, b: Operand },
+    /// `cvt.<dty>.<sty> dst, src`
+    Cvt { dty: Type, sty: Type, dst: Reg, src: Operand },
+    /// `ld.<space>.<ty> dst, [addr]`
+    Ld { space: Space, ty: Type, dst: Reg, addr: Addr },
+    /// `st.<space>.<ty> [addr], src`
+    St { space: Space, ty: Type, src: Operand, addr: Addr },
+    /// `setp.<cmp>.<ty> p, a, b`
+    Setp { cmp: Cmp, ty: Type, dst: Reg, a: Operand, b: Operand },
+    /// `@p bra L` / `@!p bra L` / `bra L`
+    Bra { pred: Option<(Reg, bool)>, target: String },
+    /// `L:`
+    Label(String),
+    /// `ret`
+    Ret,
+}
+
+impl Inst {
+    /// Register this instruction defines, if any.
+    pub fn def(&self) -> Option<&Reg> {
+        match self {
+            Inst::Mov { dst, .. }
+            | Inst::Bin { dst, .. }
+            | Inst::Mad { dst, .. }
+            | Inst::MulWide { dst, .. }
+            | Inst::Cvt { dst, .. }
+            | Inst::Ld { dst, .. }
+            | Inst::Setp { dst, .. } => Some(dst),
+            _ => None,
+        }
+    }
+
+    /// Registers this instruction uses.
+    pub fn uses(&self) -> Vec<&Reg> {
+        fn op<'a>(o: &'a Operand, out: &mut Vec<&'a Reg>) {
+            if let Operand::Reg(r) = o {
+                out.push(r);
+            }
+        }
+        let mut out = Vec::new();
+        match self {
+            Inst::Mov { src, .. } => op(src, &mut out),
+            Inst::Bin { a, b, .. } => {
+                op(a, &mut out);
+                op(b, &mut out);
+            }
+            Inst::Mad { a, b, c, .. } => {
+                op(a, &mut out);
+                op(b, &mut out);
+                op(c, &mut out);
+            }
+            Inst::MulWide { a, b, .. } => {
+                op(a, &mut out);
+                op(b, &mut out);
+            }
+            Inst::Cvt { src, .. } => op(src, &mut out),
+            Inst::Ld { addr, .. } => out.push(&addr.base),
+            Inst::St { src, addr, .. } => {
+                op(src, &mut out);
+                out.push(&addr.base);
+            }
+            Inst::Setp { a, b, .. } => {
+                op(a, &mut out);
+                op(b, &mut out);
+            }
+            Inst::Bra { pred: Some((p, _)), .. } => out.push(p),
+            _ => {}
+        }
+        out
+    }
+
+    /// Special registers read by this instruction.
+    pub fn specials(&self) -> Vec<Special> {
+        fn op(o: &Operand, out: &mut Vec<Special>) {
+            if let Operand::Special(s) = o {
+                out.push(*s);
+            }
+        }
+        let mut out = Vec::new();
+        match self {
+            Inst::Mov { src, .. } | Inst::Cvt { src, .. } => op(src, &mut out),
+            Inst::Bin { a, b, .. } | Inst::Setp { a, b, .. } | Inst::MulWide { a, b, .. } => {
+                op(a, &mut out);
+                op(b, &mut out);
+            }
+            Inst::Mad { a, b, c, .. } => {
+                op(a, &mut out);
+                op(b, &mut out);
+                op(c, &mut out);
+            }
+            Inst::St { src, .. } => op(src, &mut out),
+            _ => {}
+        }
+        out
+    }
+
+    /// Rewrite every operand with `f` (used by the rectifier to swap
+    /// `%ctaid` reads for rectified registers).
+    pub fn map_operands(&mut self, f: &mut dyn FnMut(&mut Operand)) {
+        match self {
+            Inst::Mov { src, .. } | Inst::Cvt { src, .. } => f(src),
+            Inst::Bin { a, b, .. } | Inst::Setp { a, b, .. } | Inst::MulWide { a, b, .. } => {
+                f(a);
+                f(b);
+            }
+            Inst::Mad { a, b, c, .. } => {
+                f(a);
+                f(b);
+                f(c);
+            }
+            Inst::St { src, .. } => f(src),
+            _ => {}
+        }
+    }
+}
+
+/// A `.entry` kernel: parameters, register declarations, body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    /// (param name, type); all params are passed by value (pointers are
+    /// u64).
+    pub params: Vec<(String, Type)>,
+    /// Declared registers (name -> type).
+    pub regs: Vec<(Reg, Type)>,
+    pub body: Vec<Inst>,
+}
+
+impl Kernel {
+    pub fn reg_type(&self, r: &Reg) -> Option<Type> {
+        self.regs.iter().find(|(n, _)| n == r).map(|(_, t)| *t)
+    }
+
+    /// A register name not yet in use, with the given prefix.
+    pub fn fresh_reg(&self, prefix: &str) -> Reg {
+        let mut i = 0;
+        loop {
+            let cand = Reg(format!("{prefix}{i}"));
+            if self.reg_type(&cand).is_none() {
+                return cand;
+            }
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn def_use_extraction() {
+        let i = Inst::Bin {
+            op: BinOp::Add,
+            ty: Type::U32,
+            dst: Reg("r1".into()),
+            a: Operand::Reg(Reg("r2".into())),
+            b: Operand::Imm(4),
+        };
+        assert_eq!(i.def().unwrap().0, "r1");
+        assert_eq!(i.uses().len(), 1);
+        assert_eq!(i.uses()[0].0, "r2");
+    }
+
+    #[test]
+    fn specials_detected() {
+        let i = Inst::Mov {
+            ty: Type::U32,
+            dst: Reg("r1".into()),
+            src: Operand::Special(Special::CtaIdX),
+        };
+        assert_eq!(i.specials(), vec![Special::CtaIdX]);
+    }
+
+    #[test]
+    fn fresh_reg_avoids_collisions() {
+        let k = Kernel {
+            name: "t".into(),
+            params: vec![],
+            regs: vec![(Reg("x0".into()), Type::U32)],
+            body: vec![],
+        };
+        assert_eq!(k.fresh_reg("x").0, "x1");
+    }
+
+    #[test]
+    fn type_roundtrip() {
+        for t in [Type::U32, Type::S32, Type::U64, Type::F32, Type::Pred] {
+            assert_eq!(Type::from_suffix(t.suffix()), Some(t));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Emit a [`Kernel`] back to PTX text (the output Kernelet hands to the
+//! driver / assembler after rectification).
+
+use std::fmt::Write;
+
+use super::ast::*;
+
+fn op(o: &Operand) -> String {
+    match o {
+        Operand::Reg(r) => format!("{r}"),
+        Operand::Imm(v) => format!("{v}"),
+        Operand::FImm(v) => format!("0f{:08X}", v.to_bits()),
+        Operand::Special(s) => s.name().to_string(),
+    }
+}
+
+fn addr(a: &Addr) -> String {
+    if a.offset == 0 {
+        format!("[{}]", a.base)
+    } else {
+        format!("[{}+{}]", a.base, a.offset)
+    }
+}
+
+/// Param-space bases are parameter names, printed without the `%`.
+fn param_addr(a: &Addr) -> String {
+    if a.offset == 0 {
+        format!("[{}]", a.base.0)
+    } else {
+        format!("[{}+{}]", a.base.0, a.offset)
+    }
+}
+
+fn space(s: Space) -> &'static str {
+    match s {
+        Space::Param => "param",
+        Space::Global => "global",
+    }
+}
+
+/// Emit full kernel text.
+pub fn emit(k: &Kernel) -> String {
+    let mut s = String::new();
+    writeln!(s, ".visible .entry {} (", k.name).unwrap();
+    for (i, (name, ty)) in k.params.iter().enumerate() {
+        let comma = if i + 1 < k.params.len() { "," } else { "" };
+        writeln!(s, "    .param .{} {}{}", ty.suffix(), name, comma).unwrap();
+    }
+    writeln!(s, ") {{").unwrap();
+    // Group register declarations by type.
+    for ty in [Type::Pred, Type::U32, Type::S32, Type::U64, Type::F32] {
+        let of_ty: Vec<_> = k.regs.iter().filter(|(_, t)| *t == ty).collect();
+        if of_ty.is_empty() {
+            continue;
+        }
+        let names: Vec<String> = of_ty.iter().map(|(r, _)| format!("{r}")).collect();
+        writeln!(s, "    .reg .{} {};", ty.suffix(), names.join(", ")).unwrap();
+    }
+    for inst in &k.body {
+        match inst {
+            Inst::Label(l) => writeln!(s, "{l}:").unwrap(),
+            other => writeln!(s, "    {};", inst_text(other)).unwrap(),
+        }
+    }
+    writeln!(s, "}}").unwrap();
+    s
+}
+
+fn inst_text(i: &Inst) -> String {
+    match i {
+        Inst::Mov { ty, dst, src } => format!("mov.{} {}, {}", ty.suffix(), dst, op(src)),
+        Inst::Bin { op: o, ty, dst, a, b } => {
+            let mn = match (o, ty) {
+                // Bitwise/shift ops use .b32 in PTX.
+                (BinOp::And | BinOp::Or | BinOp::Xor | BinOp::Shl, Type::U32) => {
+                    format!("{}.b32", o.name())
+                }
+                _ => format!("{}.{}", o.name(), ty.suffix()),
+            };
+            format!("{mn} {}, {}, {}", dst, op(a), op(b))
+        }
+        Inst::Mad { ty, dst, a, b, c } => {
+            let mn = if *ty == Type::F32 { "fma.rn.f32".to_string() } else { format!("mad.lo.{}", ty.suffix()) };
+            format!("{mn} {}, {}, {}, {}", dst, op(a), op(b), op(c))
+        }
+        Inst::MulWide { dst, a, b } => format!("mul.wide.u32 {}, {}, {}", dst, op(a), op(b)),
+        Inst::Cvt { dty, sty, dst, src } => {
+            format!("cvt.{}.{} {}, {}", dty.suffix(), sty.suffix(), dst, op(src))
+        }
+        Inst::Ld { space: sp, ty, dst, addr: a } => {
+            let at = if *sp == Space::Param { param_addr(a) } else { addr(a) };
+            format!("ld.{}.{} {}, {}", space(*sp), ty.suffix(), dst, at)
+        }
+        Inst::St { space: sp, ty, src, addr: a } => {
+            let at = if *sp == Space::Param { param_addr(a) } else { addr(a) };
+            format!("st.{}.{} {}, {}", space(*sp), ty.suffix(), at, op(src))
+        }
+        Inst::Setp { cmp, ty, dst, a, b } => {
+            format!("setp.{}.{} {}, {}, {}", cmp.name(), ty.suffix(), dst, op(a), op(b))
+        }
+        Inst::Bra { pred: None, target } => format!("bra {target}"),
+        Inst::Bra { pred: Some((p, true)), target } => format!("@{p} bra {target}"),
+        Inst::Bra { pred: Some((p, false)), target } => format!("@!{p} bra {target}"),
+        Inst::Ret => "ret".into(),
+        Inst::Label(_) => unreachable!("labels handled by caller"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+    use crate::ptx::samples;
+
+    /// Parse -> emit -> parse must be a fixed point (module-level
+    /// headers aside).
+    #[test]
+    fn roundtrip_all_samples() {
+        for (name, src) in samples::all() {
+            let k1 = parse_kernel(src).unwrap();
+            let text = emit(&k1);
+            let k2 = parse_kernel(&text).unwrap_or_else(|e| panic!("{name}: {e}\n{text}"));
+            assert_eq!(k1.name, k2.name, "{name}");
+            assert_eq!(k1.params, k2.params, "{name}");
+            assert_eq!(k1.body, k2.body, "{name}");
+        }
+    }
+
+    #[test]
+    fn float_immediates_hex_stable() {
+        let src = ".entry t () { .reg .f32 %f0; mov.f32 %f0, 0f3F800000; ret; }";
+        let k = parse_kernel(src).unwrap();
+        let text = emit(&k);
+        assert!(text.contains("0f3F800000"), "{text}");
+    }
+}

@@ -1,0 +1,550 @@
+//! A per-thread PTX interpreter.
+//!
+//! Executes a kernel over a (sliced or full) grid against a
+//! byte-addressed global memory. Used by the test suite and the
+//! `ptx_slice` example to prove the §4.1 rectification transform is
+//! semantics-preserving: launching the rectified kernel slice-by-slice
+//! produces memory bit-identical to the original single launch.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ast::*;
+
+/// Global memory plus parameter values.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub memory: Vec<u8>,
+}
+
+impl Machine {
+    pub fn new(bytes: usize) -> Self {
+        Self { memory: vec![0; bytes] }
+    }
+
+    pub fn write_f32s(&mut self, addr: usize, xs: &[f32]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.memory[addr + 4 * i..addr + 4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn read_f32s(&self, addr: usize, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| f32::from_le_bytes(self.memory[addr + 4 * i..addr + 4 * i + 4].try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn write_u32s(&mut self, addr: usize, xs: &[u32]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.memory[addr + 4 * i..addr + 4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn read_u32s(&self, addr: usize, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|i| u32::from_le_bytes(self.memory[addr + 4 * i..addr + 4 * i + 4].try_into().unwrap()))
+            .collect()
+    }
+
+    fn load(&self, ty: Type, addr: u64) -> Result<u64> {
+        let a = addr as usize;
+        if a + ty.size_bytes() as usize > self.memory.len() {
+            bail!("load out of bounds: {a}+{}", ty.size_bytes());
+        }
+        Ok(match ty {
+            Type::U32 | Type::S32 | Type::F32 => {
+                u32::from_le_bytes(self.memory[a..a + 4].try_into().unwrap()) as u64
+            }
+            Type::U64 => u64::from_le_bytes(self.memory[a..a + 8].try_into().unwrap()),
+            Type::Pred => self.memory[a] as u64,
+        })
+    }
+
+    fn store(&mut self, ty: Type, addr: u64, val: u64) -> Result<()> {
+        let a = addr as usize;
+        if a + ty.size_bytes() as usize > self.memory.len() {
+            bail!("store out of bounds: {a}+{}", ty.size_bytes());
+        }
+        match ty {
+            Type::U32 | Type::S32 | Type::F32 => {
+                self.memory[a..a + 4].copy_from_slice(&(val as u32).to_le_bytes())
+            }
+            Type::U64 => self.memory[a..a + 8].copy_from_slice(&val.to_le_bytes()),
+            Type::Pred => self.memory[a] = val as u8,
+        }
+        Ok(())
+    }
+}
+
+/// Parameter values for a launch: raw 64-bit images (pointers are
+/// byte addresses into `Machine::memory`, scalars are zero-extended,
+/// f32 params are the bit pattern in the low 32 bits).
+pub type Args = Vec<u64>;
+
+/// Launch configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LaunchConfig {
+    pub grid: (u32, u32),
+    pub block: (u32, u32),
+}
+
+/// Execute `kernel` over the full grid (all blocks, all threads,
+/// sequentially — the interpreter checks semantics, not performance).
+pub fn launch(kernel: &Kernel, cfg: LaunchConfig, args: &Args, m: &mut Machine) -> Result<()> {
+    if args.len() != kernel.params.len() {
+        bail!(
+            "kernel {} expects {} args, got {}",
+            kernel.name,
+            kernel.params.len(),
+            args.len()
+        );
+    }
+    // Pre-index labels.
+    let mut labels: HashMap<&str, usize> = HashMap::new();
+    for (i, inst) in kernel.body.iter().enumerate() {
+        if let Inst::Label(l) = inst {
+            labels.insert(l.as_str(), i);
+        }
+    }
+    // Parameter "memory": params are addressed by name through
+    // ld.param with the param name as the base register.
+    let params: HashMap<&str, u64> = kernel
+        .params
+        .iter()
+        .zip(args)
+        .map(|((n, _), &v)| (n.as_str(), v))
+        .collect();
+
+    for by in 0..cfg.grid.1 {
+        for bx in 0..cfg.grid.0 {
+            for ty in 0..cfg.block.1 {
+                for tx in 0..cfg.block.0 {
+                    run_thread(kernel, &labels, &params, cfg, (bx, by), (tx, ty), m)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_thread(
+    kernel: &Kernel,
+    labels: &HashMap<&str, usize>,
+    params: &HashMap<&str, u64>,
+    cfg: LaunchConfig,
+    blk: (u32, u32),
+    tid: (u32, u32),
+    m: &mut Machine,
+) -> Result<()> {
+    let mut regs: HashMap<&str, u64> = HashMap::new();
+    let special = |s: Special| -> u64 {
+        match s {
+            Special::CtaIdX => blk.0 as u64,
+            Special::CtaIdY => blk.1 as u64,
+            Special::TidX => tid.0 as u64,
+            Special::TidY => tid.1 as u64,
+            Special::NTidX => cfg.block.0 as u64,
+            Special::NTidY => cfg.block.1 as u64,
+            Special::NCtaIdX => cfg.grid.0 as u64,
+            Special::NCtaIdY => cfg.grid.1 as u64,
+        }
+    };
+    let mut pc = 0usize;
+    let mut steps = 0u64;
+    const MAX_STEPS: u64 = 10_000_000;
+    while pc < kernel.body.len() {
+        steps += 1;
+        if steps > MAX_STEPS {
+            bail!("thread exceeded {MAX_STEPS} steps (runaway loop?)");
+        }
+        let inst = &kernel.body[pc];
+        macro_rules! val {
+            ($o:expr) => {
+                match $o {
+                    Operand::Reg(r) => *regs
+                        .get(r.0.as_str())
+                        .ok_or_else(|| anyhow!("read of undefined register %{}", r.0))?,
+                    Operand::Imm(v) => *v as u64,
+                    Operand::FImm(v) => v.to_bits() as u64,
+                    Operand::Special(s) => special(*s),
+                }
+            };
+        }
+        match inst {
+            Inst::Label(_) => {}
+            Inst::Ret => return Ok(()),
+            Inst::Mov { dst, src, .. } => {
+                let v = val!(src);
+                regs.insert(leak(&dst.0), v);
+            }
+            Inst::Cvt { dty, sty, dst, src } => {
+                let v = val!(src);
+                let out = match (sty, dty) {
+                    (Type::U32, Type::U64) => v & 0xFFFF_FFFF,
+                    (Type::U64, Type::U32) => v & 0xFFFF_FFFF,
+                    (Type::S32, Type::F32) => (f32::from(v as u32 as i32 as i16 as f32)).to_bits() as u64,
+                    (Type::U32, Type::F32) => ((v as u32) as f32).to_bits() as u64,
+                    (Type::F32, Type::U32) => (f32::from_bits(v as u32) as u32) as u64,
+                    _ => v,
+                };
+                regs.insert(leak(&dst.0), out);
+            }
+            Inst::Bin { op, ty, dst, a, b } => {
+                let (x, y) = (val!(a), val!(b));
+                let out = eval_bin(*op, *ty, x, y)?;
+                regs.insert(leak(&dst.0), out);
+            }
+            Inst::Mad { ty, dst, a, b, c } => {
+                let (x, y, z) = (val!(a), val!(b), val!(c));
+                let out = match ty {
+                    Type::F32 => {
+                        let r = f32::from_bits(x as u32).mul_add(f32::from_bits(y as u32), f32::from_bits(z as u32));
+                        r.to_bits() as u64
+                    }
+                    Type::U32 | Type::S32 => {
+                        ((x as u32).wrapping_mul(y as u32).wrapping_add(z as u32)) as u64
+                    }
+                    Type::U64 => x.wrapping_mul(y).wrapping_add(z),
+                    Type::Pred => bail!("mad on pred"),
+                };
+                regs.insert(leak(&dst.0), out);
+            }
+            Inst::MulWide { dst, a, b } => {
+                let (x, y) = (val!(a) as u32 as u64, val!(b) as u32 as u64);
+                regs.insert(leak(&dst.0), x * y);
+            }
+            Inst::Ld { space, ty, dst, addr } => {
+                let v = match space {
+                    Space::Param => {
+                        // Param loads use the param name as base.
+                        *params
+                            .get(addr.base.0.as_str())
+                            .ok_or_else(|| anyhow!("unknown param {}", addr.base.0))?
+                    }
+                    Space::Global => {
+                        let base = *regs
+                            .get(addr.base.0.as_str())
+                            .ok_or_else(|| anyhow!("ld base %{} undefined", addr.base.0))?;
+                        m.load(*ty, base.wrapping_add(addr.offset as u64))?
+                    }
+                };
+                regs.insert(leak(&dst.0), v);
+            }
+            Inst::St { space, ty, src, addr } => {
+                if *space != Space::Global {
+                    bail!("st only supported to global");
+                }
+                let base = *regs
+                    .get(addr.base.0.as_str())
+                    .ok_or_else(|| anyhow!("st base %{} undefined", addr.base.0))?;
+                let v = val!(src);
+                m.store(*ty, base.wrapping_add(addr.offset as u64), v)?;
+            }
+            Inst::Setp { cmp, ty, dst, a, b } => {
+                let (x, y) = (val!(a), val!(b));
+                let t = eval_cmp(*cmp, *ty, x, y);
+                regs.insert(leak(&dst.0), t as u64);
+            }
+            Inst::Bra { pred, target } => {
+                let take = match pred {
+                    None => true,
+                    Some((p, positive)) => {
+                        let v = *regs
+                            .get(p.0.as_str())
+                            .ok_or_else(|| anyhow!("branch on undefined %{}", p.0))?
+                            != 0;
+                        v == *positive
+                    }
+                };
+                if take {
+                    pc = *labels
+                        .get(target.as_str())
+                        .ok_or_else(|| anyhow!("unknown label {target}"))?;
+                    continue;
+                }
+            }
+        }
+        pc += 1;
+    }
+    Ok(())
+}
+
+/// Registers are interned per call via leaking tiny strings; the
+/// interpreter is test-only so the bounded leak is acceptable... except
+/// it is NOT acceptable in loops over threads. Use a global cache
+/// instead.
+fn leak(s: &str) -> &'static str {
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut g = cache.lock().unwrap();
+    if let Some(&v) = g.get(s) {
+        return v;
+    }
+    let v: &'static str = Box::leak(s.to_string().into_boxed_str());
+    g.insert(v);
+    v
+}
+
+fn eval_bin(op: BinOp, ty: Type, x: u64, y: u64) -> Result<u64> {
+    Ok(match ty {
+        Type::F32 => {
+            let (a, b) = (f32::from_bits(x as u32), f32::from_bits(y as u32));
+            let r = match op {
+                BinOp::Add => a + b,
+                BinOp::Sub => a - b,
+                BinOp::Mul => a * b,
+                BinOp::Div => a / b,
+                BinOp::Min => a.min(b),
+                BinOp::Max => a.max(b),
+                _ => bail!("bitwise op on f32"),
+            };
+            r.to_bits() as u64
+        }
+        Type::U32 | Type::S32 => {
+            let (a, b) = (x as u32, y as u32);
+            let r = match op {
+                BinOp::Add => a.wrapping_add(b),
+                BinOp::Sub => a.wrapping_sub(b),
+                BinOp::Mul => a.wrapping_mul(b),
+                BinOp::Div => {
+                    if b == 0 {
+                        bail!("division by zero")
+                    } else if ty == Type::S32 {
+                        ((a as i32).wrapping_div(b as i32)) as u32
+                    } else {
+                        a / b
+                    }
+                }
+                BinOp::Rem => {
+                    if b == 0 {
+                        bail!("rem by zero")
+                    } else {
+                        a % b
+                    }
+                }
+                BinOp::Min => a.min(b),
+                BinOp::Max => a.max(b),
+                BinOp::And => a & b,
+                BinOp::Or => a | b,
+                BinOp::Xor => a ^ b,
+                BinOp::Shl => a.wrapping_shl(b),
+                BinOp::Shr => a.wrapping_shr(b),
+            };
+            r as u64
+        }
+        Type::U64 => match op {
+            BinOp::Add => x.wrapping_add(y),
+            BinOp::Sub => x.wrapping_sub(y),
+            BinOp::Mul => x.wrapping_mul(y),
+            BinOp::Div => {
+                if y == 0 {
+                    bail!("division by zero")
+                } else {
+                    x / y
+                }
+            }
+            BinOp::Rem => {
+                if y == 0 {
+                    bail!("rem by zero")
+                } else {
+                    x % y
+                }
+            }
+            BinOp::Min => x.min(y),
+            BinOp::Max => x.max(y),
+            BinOp::And => x & y,
+            BinOp::Or => x | y,
+            BinOp::Xor => x ^ y,
+            BinOp::Shl => x.wrapping_shl(y as u32),
+            BinOp::Shr => x.wrapping_shr(y as u32),
+        },
+        Type::Pred => bail!("ALU op on pred"),
+    })
+}
+
+fn eval_cmp(cmp: Cmp, ty: Type, x: u64, y: u64) -> bool {
+    match ty {
+        Type::F32 => {
+            let (a, b) = (f32::from_bits(x as u32), f32::from_bits(y as u32));
+            match cmp {
+                Cmp::Eq => a == b,
+                Cmp::Ne => a != b,
+                Cmp::Lt => a < b,
+                Cmp::Le => a <= b,
+                Cmp::Gt => a > b,
+                Cmp::Ge => a >= b,
+            }
+        }
+        Type::S32 => {
+            let (a, b) = (x as u32 as i32, y as u32 as i32);
+            match cmp {
+                Cmp::Eq => a == b,
+                Cmp::Ne => a != b,
+                Cmp::Lt => a < b,
+                Cmp::Le => a <= b,
+                Cmp::Gt => a > b,
+                Cmp::Ge => a >= b,
+            }
+        }
+        _ => {
+            let (a, b) = if ty == Type::U32 { (x as u32 as u64, y as u32 as u64) } else { (x, y) };
+            match cmp {
+                Cmp::Eq => a == b,
+                Cmp::Ne => a != b,
+                Cmp::Lt => a < b,
+                Cmp::Le => a <= b,
+                Cmp::Gt => a > b,
+                Cmp::Ge => a >= b,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+    use crate::ptx::rectify::{rectify, RectifyOptions};
+    use crate::ptx::samples;
+
+    #[test]
+    fn saxpy_computes() {
+        let k = parse_kernel(samples::SAXPY).unwrap();
+        let mut m = Machine::new(4096);
+        let n = 100u32;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        m.write_f32s(0, &x);
+        m.write_f32s(1024, &y);
+        let args = vec![0u64, 1024, (3.0f32).to_bits() as u64, n as u64];
+        // 7 blocks of 16 threads covers 112 >= 100 threads.
+        launch(&k, LaunchConfig { grid: (7, 1), block: (16, 1) }, &args, &mut m).unwrap();
+        let out = m.read_f32s(1024, n as usize);
+        for i in 0..n as usize {
+            assert_eq!(out[i], 3.0 * i as f32 + 2.0 * i as f32, "i={i}");
+        }
+    }
+
+    #[test]
+    fn matrix_add_full_grid() {
+        let k = parse_kernel(samples::MATRIX_ADD).unwrap();
+        let width = 32u32; // 2x2 grid of 16x16 blocks
+        let total = (width * width) as usize;
+        let mut m = Machine::new(total * 8 + 64);
+        let a: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..total).map(|i| (2 * i) as f32).collect();
+        m.write_f32s(0, &a);
+        m.write_f32s((total * 4) as usize, &b);
+        let args = vec![0u64, (total * 4) as u64, width as u64];
+        launch(&k, LaunchConfig { grid: (2, 2), block: (16, 16) }, &args, &mut m).unwrap();
+        let out = m.read_f32s(0, total);
+        for i in 0..total {
+            assert_eq!(out[i], (3 * i) as f32, "i={i}");
+        }
+    }
+
+    #[test]
+    fn mix_rounds_loops() {
+        let k = parse_kernel(samples::MIX_ROUNDS).unwrap();
+        let n = 64usize;
+        let mut m = Machine::new(n * 4);
+        m.write_u32s(0, &vec![1u32; n]);
+        let args = vec![0u64, 4]; // 4 rounds
+        launch(&k, LaunchConfig { grid: (4, 1), block: (16, 1) }, &args, &mut m).unwrap();
+        let out = m.read_u32s(0, n);
+        // Reference computation.
+        for (i, &got) in out.iter().enumerate() {
+            let mut v = 1u32;
+            for _ in 0..4 {
+                v ^= v << 4;
+                v = v.wrapping_add(i as u32);
+            }
+            assert_eq!(got, v, "i={i}");
+        }
+    }
+
+    /// THE slicing-correctness test: rectified slices == original launch.
+    #[test]
+    fn sliced_execution_is_bit_identical() {
+        for (name, src) in samples::all() {
+            let k = parse_kernel(src).unwrap();
+            let is_2d = name == "matrix_add";
+            let opts = if is_2d { RectifyOptions::two_d() } else { RectifyOptions::one_d() };
+            let sliced = rectify(&k, &opts);
+
+            let (grid, block): ((u32, u32), (u32, u32)) =
+                if is_2d { ((4, 4), (8, 8)) } else { ((8, 1), (16, 1)) };
+            let mem_bytes = 64 * 1024;
+
+            // Common initial memory.
+            let mut init = Machine::new(mem_bytes);
+            let total_threads = (grid.0 * grid.1 * block.0 * block.1) as usize;
+            let idx: Vec<u32> = (0..total_threads as u32).map(|i| (i * 7) % total_threads as u32).collect();
+            init.write_u32s(0, &idx); // doubles as index array / data
+            let fdata: Vec<f32> = (0..total_threads).map(|i| i as f32 * 0.5).collect();
+            init.write_f32s(16 * 1024, &fdata);
+            init.write_f32s(32 * 1024, &fdata);
+
+            let args: Args = match name {
+                "matrix_add" => vec![16 * 1024, 32 * 1024, (grid.0 * block.0) as u64],
+                "saxpy" => vec![16 * 1024, 32 * 1024, (2.0f32).to_bits() as u64, total_threads as u64],
+                "gather" => vec![0, 16 * 1024, 32 * 1024],
+                "mix_rounds" => vec![0, 3],
+                _ => unreachable!(),
+            };
+
+            // Reference: single full launch of the ORIGINAL kernel.
+            let mut whole = init.clone();
+            launch(&k, LaunchConfig { grid, block }, &args, &mut whole).unwrap();
+
+            // Sliced: rectified kernel, launched slice by slice over a
+            // linearized block range (2 blocks per slice).
+            let mut sliced_m = init.clone();
+            let total_blocks = grid.0 * grid.1;
+            let mut next = 0u32;
+            while next < total_blocks {
+                let this = 2.min(total_blocks - next);
+                let mut sargs = args.clone();
+                if is_2d {
+                    // 2-D rectification: offset in x wraps into y.
+                    let off_x = next % grid.0;
+                    let off_y = next / grid.0;
+                    sargs.extend([off_x as u64, grid.0 as u64, off_y as u64, grid.1 as u64]);
+                    launch(
+                        &sliced,
+                        LaunchConfig { grid: (this, 1), block },
+                        &sargs,
+                        &mut sliced_m,
+                    )
+                    .unwrap();
+                } else {
+                    sargs.extend([next as u64, grid.0 as u64]);
+                    launch(
+                        &sliced,
+                        LaunchConfig { grid: (this, 1), block },
+                        &sargs,
+                        &mut sliced_m,
+                    )
+                    .unwrap();
+                }
+                next += this;
+            }
+            assert_eq!(whole.memory, sliced_m.memory, "{name}: sliced run diverged");
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_store_errors() {
+        let src = ".entry t ( .param .u64 p ) { .reg .u64 %rd0; .reg .u32 %r0; \
+                   ld.param.u64 %rd0, [p]; mov.u32 %r0, 1; st.global.u32 [%rd0], %r0; ret; }";
+        let k = parse_kernel(src).unwrap();
+        let mut m = Machine::new(8);
+        let r = launch(&k, LaunchConfig { grid: (1, 1), block: (1, 1) }, &vec![100u64], &mut m);
+        assert!(r.is_err());
+    }
+}

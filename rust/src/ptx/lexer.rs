@@ -1,0 +1,240 @@
+//! Tokenizer for the mini-PTX subset.
+
+use anyhow::{bail, Result};
+
+/// Lexical token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// `.visible`, `.entry`, `.param`, `.reg`, `.u32`, ... (without dot)
+    Directive(String),
+    /// Bare identifier or instruction mnemonic part.
+    Ident(String),
+    /// `%r1`, `%ctaid` etc. (without the %)
+    Reg(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal (decimal or 0f-hex).
+    Float(f32),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    At,
+    Bang,
+    Plus,
+    Minus,
+    Dot,
+    Lt,
+    Gt,
+}
+
+/// Tokenize PTX source; `//` comments and `/* */` blocks are skipped.
+pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let n = b.len();
+    let mut out = Vec::new();
+    while i < n {
+        let c = b[i];
+        match c {
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                i += 2;
+                while i + 1 < n && !(b[i] == '*' && b[i + 1] == '/') {
+                    i += 1;
+                }
+                i += 2;
+            }
+            '.' => {
+                // Directive or type suffix: lex as Directive if followed
+                // by an identifier start, else Dot.
+                if i + 1 < n && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == '_') {
+                    let mut j = i + 1;
+                    while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    out.push(Tok::Directive(b[i + 1..j].iter().collect()));
+                    i = j;
+                } else {
+                    out.push(Tok::Dot);
+                    i += 1;
+                }
+            }
+            '%' => {
+                let mut j = i + 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                // Allow one ".x"/".y" suffix for specials like %ctaid.x.
+                if j + 1 < n && b[j] == '.' && (b[j + 1] == 'x' || b[j + 1] == 'y') {
+                    j += 2;
+                }
+                if j == i + 1 {
+                    bail!("lone % at char {i}");
+                }
+                out.push(Tok::Reg(b[i + 1..j].iter().collect()));
+                i = j;
+            }
+            '0' if i + 1 < n && b[i + 1] == 'f' => {
+                // PTX hex float: 0fXXXXXXXX.
+                let j = i + 2;
+                let hex: String = b[j..(j + 8).min(n)].iter().collect();
+                if hex.len() != 8 || !hex.chars().all(|c| c.is_ascii_hexdigit()) {
+                    bail!("bad hex float at char {i}");
+                }
+                let bits = u32::from_str_radix(&hex, 16).unwrap();
+                out.push(Tok::Float(f32::from_bits(bits)));
+                i = j + 8;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                let mut is_float = false;
+                while j < n
+                    && (b[j].is_ascii_digit()
+                        || (b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit()))
+                {
+                    if b[j] == '.' {
+                        is_float = true;
+                    }
+                    j += 1;
+                }
+                let s: String = b[i..j].iter().collect();
+                if is_float {
+                    out.push(Tok::Float(s.parse()?));
+                } else {
+                    out.push(Tok::Int(s.parse()?));
+                }
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' || c == '$' => {
+                let mut j = i;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_' || b[j] == '$') {
+                    j += 1;
+                }
+                out.push(Tok::Ident(b[i..j].iter().collect()));
+                i = j;
+            }
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '{' => {
+                out.push(Tok::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Tok::RBrace);
+                i += 1;
+            }
+            '[' => {
+                out.push(Tok::LBracket);
+                i += 1;
+            }
+            ']' => {
+                out.push(Tok::RBracket);
+                i += 1;
+            }
+            ',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            ';' => {
+                out.push(Tok::Semi);
+                i += 1;
+            }
+            ':' => {
+                out.push(Tok::Colon);
+                i += 1;
+            }
+            '@' => {
+                out.push(Tok::At);
+                i += 1;
+            }
+            '!' => {
+                out.push(Tok::Bang);
+                i += 1;
+            }
+            '+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            '<' => {
+                out.push(Tok::Lt);
+                i += 1;
+            }
+            '>' => {
+                out.push(Tok::Gt);
+                i += 1;
+            }
+            other => bail!("unexpected character {other:?} at {i}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_tokens() {
+        let toks = tokenize(".entry foo ( .param .u64 p0 ) { ret; }").unwrap();
+        assert_eq!(toks[0], Tok::Directive("entry".into()));
+        assert_eq!(toks[1], Tok::Ident("foo".into()));
+        assert!(toks.contains(&Tok::Directive("u64".into())));
+        assert!(toks.contains(&Tok::Semi));
+    }
+
+    #[test]
+    fn registers_and_specials() {
+        let toks = tokenize("mov.u32 %r1, %ctaid.x;").unwrap();
+        assert!(toks.contains(&Tok::Reg("r1".into())));
+        assert!(toks.contains(&Tok::Reg("ctaid.x".into())));
+    }
+
+    #[test]
+    fn hex_float() {
+        let toks = tokenize("0f3F800000").unwrap();
+        assert_eq!(toks, vec![Tok::Float(1.0)]);
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let toks = tokenize("// line\nret; /* block */ ret;").unwrap();
+        assert_eq!(toks.iter().filter(|t| **t == Tok::Semi).count(), 2);
+    }
+
+    #[test]
+    fn reg_range_decl() {
+        let toks = tokenize(".reg .u32 %r<5>;").unwrap();
+        assert!(toks.contains(&Tok::Lt));
+        assert!(toks.contains(&Tok::Int(5)));
+        assert!(toks.contains(&Tok::Gt));
+    }
+
+    #[test]
+    fn negative_offset_bracket() {
+        let toks = tokenize("[%rd1+-4]").unwrap();
+        assert!(toks.contains(&Tok::Plus));
+        assert!(toks.contains(&Tok::Minus));
+        assert!(toks.contains(&Tok::Int(4)));
+    }
+}

@@ -1,0 +1,221 @@
+//! Control-flow graph and live-range analysis.
+//!
+//! The rectifier stores rebased block indices in registers; the paper
+//! applies "the classic register minimization techniques, e.g. variable
+//! liveness analysis", so that "register usage by slicing keeps
+//! unchanged in most of our test cases". This module provides the
+//! backward dataflow and a register-pressure measure used to verify
+//! exactly that claim in the tests.
+
+use std::collections::{HashMap, HashSet};
+
+use super::ast::{Inst, Kernel, Reg};
+
+/// A basic block: a half-open instruction index range in the kernel body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    pub range: std::ops::Range<usize>,
+    pub succs: Vec<usize>,
+}
+
+/// The CFG over the kernel body.
+#[derive(Debug, Clone)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+}
+
+/// Build the CFG: leaders are the entry, label positions, and
+/// instructions following branches.
+pub fn build_cfg(body: &[Inst]) -> Cfg {
+    let n = body.len();
+    let mut leaders: HashSet<usize> = HashSet::new();
+    leaders.insert(0);
+    let mut label_pos: HashMap<&str, usize> = HashMap::new();
+    for (i, inst) in body.iter().enumerate() {
+        if let Inst::Label(l) = inst {
+            label_pos.insert(l.as_str(), i);
+            leaders.insert(i);
+        }
+    }
+    for (i, inst) in body.iter().enumerate() {
+        if let Inst::Bra { target, .. } = inst {
+            leaders.insert(label_pos[target.as_str()]);
+            if i + 1 < n {
+                leaders.insert(i + 1);
+            }
+        }
+        if matches!(inst, Inst::Ret) && i + 1 < n {
+            leaders.insert(i + 1);
+        }
+    }
+    let mut starts: Vec<usize> = leaders.into_iter().collect();
+    starts.sort_unstable();
+    let mut blocks = Vec::new();
+    for (bi, &s) in starts.iter().enumerate() {
+        let e = starts.get(bi + 1).copied().unwrap_or(n);
+        blocks.push(Block { range: s..e, succs: Vec::new() });
+    }
+    // Successor edges.
+    let block_of = |pos: usize| starts.partition_point(|&s| s <= pos) - 1;
+    for bi in 0..blocks.len() {
+        let range = blocks[bi].range.clone();
+        if range.is_empty() {
+            continue;
+        }
+        let last = range.end - 1;
+        let mut succs = Vec::new();
+        match &body[last] {
+            Inst::Ret => {}
+            Inst::Bra { pred, target } => {
+                succs.push(block_of(label_pos[target.as_str()]));
+                if pred.is_some() && range.end < n {
+                    succs.push(block_of(range.end));
+                }
+            }
+            _ => {
+                if range.end < n {
+                    succs.push(block_of(range.end));
+                }
+            }
+        }
+        blocks[bi].succs = succs;
+    }
+    Cfg { blocks }
+}
+
+/// Per-instruction live-out sets (registers live immediately after each
+/// instruction), computed by iterative backward dataflow over the CFG.
+pub fn liveness(body: &[Inst]) -> Vec<HashSet<Reg>> {
+    let cfg = build_cfg(body);
+    let nb = cfg.blocks.len();
+    let mut live_in: Vec<HashSet<Reg>> = vec![HashSet::new(); nb];
+    let mut live_out_block: Vec<HashSet<Reg>> = vec![HashSet::new(); nb];
+    loop {
+        let mut changed = false;
+        for bi in (0..nb).rev() {
+            let mut out: HashSet<Reg> = HashSet::new();
+            for &s in &cfg.blocks[bi].succs {
+                out.extend(live_in[s].iter().cloned());
+            }
+            let mut live = out.clone();
+            for i in cfg.blocks[bi].range.clone().rev() {
+                if let Some(d) = body[i].def() {
+                    live.remove(d);
+                }
+                for u in body[i].uses() {
+                    live.insert(u.clone());
+                }
+            }
+            if live != live_in[bi] {
+                live_in[bi] = live;
+                changed = true;
+            }
+            if out != live_out_block[bi] {
+                live_out_block[bi] = out;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Expand to per-instruction live-out.
+    let mut per_inst: Vec<HashSet<Reg>> = vec![HashSet::new(); body.len()];
+    for (bi, block) in cfg.blocks.iter().enumerate() {
+        let mut live = live_out_block[bi].clone();
+        for i in block.range.clone().rev() {
+            per_inst[i] = live.clone();
+            if let Some(d) = body[i].def() {
+                live.remove(d);
+            }
+            for u in body[i].uses() {
+                live.insert(u.clone());
+            }
+        }
+    }
+    per_inst
+}
+
+/// Maximum number of simultaneously live registers — the pressure the
+/// hardware register allocator would see (per thread).
+pub fn max_pressure(k: &Kernel) -> usize {
+    liveness(&k.body).iter().map(|s| s.len()).max().unwrap_or(0)
+}
+
+/// Drop declared registers that are never referenced (the rectifier's
+/// cleanup pass: substitution can orphan the registers that used to hold
+/// raw `%ctaid` copies).
+pub fn prune_dead_decls(k: &mut Kernel) {
+    let mut used: HashSet<Reg> = HashSet::new();
+    for inst in &k.body {
+        if let Some(d) = inst.def() {
+            used.insert(d.clone());
+        }
+        for u in inst.uses() {
+            used.insert(u.clone());
+        }
+    }
+    k.regs.retain(|(r, _)| used.contains(r));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+    use crate::ptx::samples;
+
+    #[test]
+    fn straightline_cfg_single_block() {
+        let k = parse_kernel(samples::MATRIX_ADD).unwrap();
+        let cfg = build_cfg(&k.body);
+        assert_eq!(cfg.blocks.len(), 1);
+        assert!(cfg.blocks[0].succs.is_empty());
+    }
+
+    #[test]
+    fn loop_cfg_has_back_edge() {
+        let k = parse_kernel(samples::MIX_ROUNDS).unwrap();
+        let cfg = build_cfg(&k.body);
+        assert!(cfg.blocks.len() >= 3);
+        // Some block must point backwards (the loop).
+        let back = cfg
+            .blocks
+            .iter()
+            .enumerate()
+            .any(|(i, b)| b.succs.iter().any(|&s| s <= i));
+        assert!(back, "no back edge found: {cfg:?}");
+    }
+
+    #[test]
+    fn liveness_loop_carried_values() {
+        let k = parse_kernel(samples::MIX_ROUNDS).unwrap();
+        let live = liveness(&k.body);
+        // The accumulator %r5 must be live across the loop branch.
+        let bra_idx = k
+            .body
+            .iter()
+            .position(|i| matches!(i, Inst::Bra { pred: None, .. }))
+            .unwrap();
+        assert!(live[bra_idx].contains(&Reg("r5".into())), "{:?}", live[bra_idx]);
+    }
+
+    #[test]
+    fn pressure_reasonable() {
+        for (name, src) in samples::all() {
+            let k = parse_kernel(src).unwrap();
+            let p = max_pressure(&k);
+            assert!(p > 0 && p <= k.regs.len(), "{name}: pressure {p} of {}", k.regs.len());
+        }
+    }
+
+    #[test]
+    fn prune_removes_unused() {
+        let mut k = parse_kernel(
+            ".entry t () { .reg .u32 %r<4>; mov.u32 %r0, 1; mov.u32 %r1, %r0; ret; }",
+        )
+        .unwrap();
+        assert_eq!(k.regs.len(), 4);
+        prune_dead_decls(&mut k);
+        assert_eq!(k.regs.len(), 2);
+    }
+}

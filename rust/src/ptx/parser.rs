@@ -1,0 +1,415 @@
+//! Recursive-descent parser for the mini-PTX subset.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ast::*;
+use super::lexer::{tokenize, Tok};
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self.toks.get(self.i).cloned().ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, t: &Tok) -> Result<()> {
+        let got = self.next()?;
+        if &got != t {
+            bail!("expected {t:?}, got {got:?} at token {}", self.i - 1);
+        }
+        Ok(())
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == Some(t) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("expected identifier, got {other:?}"),
+        }
+    }
+
+    fn directive(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Directive(s) => Ok(s),
+            other => bail!("expected directive, got {other:?}"),
+        }
+    }
+
+    fn ty(&mut self) -> Result<Type> {
+        let d = self.directive()?;
+        Type::from_suffix(&d).ok_or_else(|| anyhow!("unknown type .{d}"))
+    }
+
+    fn reg(&mut self) -> Result<Reg> {
+        match self.next()? {
+            Tok::Reg(s) => Ok(Reg(s)),
+            other => bail!("expected register, got {other:?}"),
+        }
+    }
+
+    fn operand(&mut self) -> Result<Operand> {
+        match self.next()? {
+            Tok::Reg(s) => {
+                if let Some(sp) = Special::from_name(&format!("%{s}")) {
+                    Ok(Operand::Special(sp))
+                } else {
+                    Ok(Operand::Reg(Reg(s)))
+                }
+            }
+            Tok::Int(v) => Ok(Operand::Imm(v)),
+            Tok::Float(v) => Ok(Operand::FImm(v)),
+            Tok::Minus => match self.next()? {
+                Tok::Int(v) => Ok(Operand::Imm(-v)),
+                Tok::Float(v) => Ok(Operand::FImm(-v)),
+                other => bail!("expected number after '-', got {other:?}"),
+            },
+            other => bail!("expected operand, got {other:?}"),
+        }
+    }
+
+    fn addr(&mut self) -> Result<Addr> {
+        self.expect(&Tok::LBracket)?;
+        // Base is a register (`[%rd1+8]`) or a parameter name (`[pX]`);
+        // parameter names are carried as pseudo-registers.
+        let base = match self.next()? {
+            Tok::Reg(s) => Reg(s),
+            Tok::Ident(s) => Reg(s),
+            other => bail!("expected address base, got {other:?}"),
+        };
+        let mut offset = 0i64;
+        if self.eat(&Tok::Plus) {
+            let neg = self.eat(&Tok::Minus);
+            match self.next()? {
+                Tok::Int(v) => offset = if neg { -v } else { v },
+                other => bail!("expected offset, got {other:?}"),
+            }
+        }
+        self.expect(&Tok::RBracket)?;
+        Ok(Addr { base, offset })
+    }
+}
+
+/// Parse a single `.entry` kernel out of PTX text. Headers like
+/// `.version`/`.target`/`.address_size` are tolerated and skipped.
+pub fn parse_kernel(src: &str) -> Result<Kernel> {
+    let toks = tokenize(src).context("tokenizing")?;
+    let mut p = P { toks, i: 0 };
+
+    // Skip module headers until `.entry` (optionally `.visible`).
+    loop {
+        match p.peek() {
+            Some(Tok::Directive(d)) if d == "entry" => break,
+            Some(_) => {
+                p.i += 1;
+            }
+            None => bail!("no .entry kernel found"),
+        }
+    }
+    p.expect(&Tok::Directive("entry".into()))?;
+    let name = p.ident()?;
+
+    // Parameter list.
+    let mut params = Vec::new();
+    p.expect(&Tok::LParen)?;
+    if p.peek() != Some(&Tok::RParen) {
+        loop {
+            p.expect(&Tok::Directive("param".into()))?;
+            let ty = p.ty()?;
+            let pname = p.ident()?;
+            params.push((pname, ty));
+            if !p.eat(&Tok::Comma) {
+                break;
+            }
+        }
+    }
+    p.expect(&Tok::RParen)?;
+    p.expect(&Tok::LBrace)?;
+
+    // Register declarations.
+    let mut regs: Vec<(Reg, Type)> = Vec::new();
+    while p.peek() == Some(&Tok::Directive("reg".into())) {
+        p.i += 1;
+        let ty = p.ty()?;
+        loop {
+            let r = p.reg()?;
+            // Ranged declaration `%r<5>` declares %r0..%r4.
+            if p.eat(&Tok::Lt) {
+                let n = match p.next()? {
+                    Tok::Int(v) => v,
+                    other => bail!("expected count in reg range, got {other:?}"),
+                };
+                p.expect(&Tok::Gt)?;
+                for k in 0..n {
+                    regs.push((Reg(format!("{}{}", r.0, k)), ty));
+                }
+            } else {
+                regs.push((r, ty));
+            }
+            if !p.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        p.expect(&Tok::Semi)?;
+    }
+
+    // Body.
+    let mut body = Vec::new();
+    loop {
+        match p.peek() {
+            Some(Tok::RBrace) => {
+                p.i += 1;
+                break;
+            }
+            None => bail!("unterminated kernel body"),
+            _ => {}
+        }
+        body.push(parse_inst(&mut p)?);
+    }
+
+    Ok(Kernel { name, params, regs, body })
+}
+
+fn parse_inst(p: &mut P) -> Result<Inst> {
+    // Label?
+    if let Some(Tok::Ident(_)) = p.peek() {
+        if p.toks.get(p.i + 1) == Some(&Tok::Colon) {
+            let l = p.ident()?;
+            p.expect(&Tok::Colon)?;
+            return Ok(Inst::Label(l));
+        }
+    }
+    // Predicated branch?
+    if p.eat(&Tok::At) {
+        let neg = p.eat(&Tok::Bang);
+        let pred = p.reg()?;
+        let mn = p.ident()?;
+        if mn != "bra" {
+            bail!("only bra may be predicated in this subset, got {mn}");
+        }
+        let target = p.ident()?;
+        p.expect(&Tok::Semi)?;
+        return Ok(Inst::Bra { pred: Some((pred, !neg)), target });
+    }
+
+    let mn = p.ident()?;
+    let inst = match mn.as_str() {
+        "ret" => {
+            p.expect(&Tok::Semi)?;
+            return Ok(Inst::Ret);
+        }
+        "bra" => {
+            let target = p.ident()?;
+            p.expect(&Tok::Semi)?;
+            return Ok(Inst::Bra { pred: None, target });
+        }
+        "mov" => {
+            let ty = p.ty()?;
+            let dst = p.reg()?;
+            p.expect(&Tok::Comma)?;
+            let src = p.operand()?;
+            Inst::Mov { ty, dst, src }
+        }
+        "cvt" => {
+            let dty = p.ty()?;
+            let sty = p.ty()?;
+            let dst = p.reg()?;
+            p.expect(&Tok::Comma)?;
+            let src = p.operand()?;
+            Inst::Cvt { dty, sty, dst, src }
+        }
+        "ld" => {
+            let space = parse_space(p)?;
+            let ty = p.ty()?;
+            let dst = p.reg()?;
+            p.expect(&Tok::Comma)?;
+            let addr = p.addr()?;
+            Inst::Ld { space, ty, dst, addr }
+        }
+        "st" => {
+            let space = parse_space(p)?;
+            let ty = p.ty()?;
+            let addr = p.addr()?;
+            p.expect(&Tok::Comma)?;
+            let src = p.operand()?;
+            Inst::St { space, ty, src, addr }
+        }
+        "setp" => {
+            let cmpd = p.directive()?;
+            let cmp = Cmp::from_name(&cmpd).ok_or_else(|| anyhow!("unknown cmp .{cmpd}"))?;
+            let ty = p.ty()?;
+            let dst = p.reg()?;
+            p.expect(&Tok::Comma)?;
+            let a = p.operand()?;
+            p.expect(&Tok::Comma)?;
+            let b = p.operand()?;
+            Inst::Setp { cmp, ty, dst, a, b }
+        }
+        "mad" | "fma" => {
+            // mad.lo.u32 / fma.rn.f32 — skip the mode directive.
+            let mode = p.directive()?;
+            let ty = if mode == "lo" || mode == "rn" { p.ty()? } else {
+                Type::from_suffix(&mode).ok_or_else(|| anyhow!("unknown mad mode .{mode}"))?
+            };
+            let dst = p.reg()?;
+            p.expect(&Tok::Comma)?;
+            let a = p.operand()?;
+            p.expect(&Tok::Comma)?;
+            let b = p.operand()?;
+            p.expect(&Tok::Comma)?;
+            let c = p.operand()?;
+            Inst::Mad { ty, dst, a, b, c }
+        }
+        "mul" => {
+            // mul.lo.<ty> | mul.wide.u32 | mul.rn.f32 | mul.f32
+            let mode = p.directive()?;
+            match mode.as_str() {
+                "wide" => {
+                    let _ = p.ty()?; // source type (u32)
+                    let dst = p.reg()?;
+                    p.expect(&Tok::Comma)?;
+                    let a = p.operand()?;
+                    p.expect(&Tok::Comma)?;
+                    let b = p.operand()?;
+                    Inst::MulWide { dst, a, b }
+                }
+                "lo" | "rn" => {
+                    let ty = p.ty()?;
+                    bin_rest(p, BinOp::Mul, ty)?
+                }
+                other => {
+                    let ty = Type::from_suffix(other)
+                        .ok_or_else(|| anyhow!("unknown mul mode .{other}"))?;
+                    bin_rest(p, BinOp::Mul, ty)?
+                }
+            }
+        }
+        "add" | "sub" | "div" | "rem" | "min" | "max" | "and" | "or" | "xor" | "shl" | "shr" => {
+            let op = match mn.as_str() {
+                "add" => BinOp::Add,
+                "sub" => BinOp::Sub,
+                "div" => BinOp::Div,
+                "rem" => BinOp::Rem,
+                "min" => BinOp::Min,
+                "max" => BinOp::Max,
+                "and" => BinOp::And,
+                "or" => BinOp::Or,
+                "xor" => BinOp::Xor,
+                "shl" => BinOp::Shl,
+                "shr" => BinOp::Shr,
+                _ => unreachable!(),
+            };
+            // Tolerate rounding-mode directives (add.rn.f32).
+            let mut d = p.directive()?;
+            if d == "rn" || d == "b32" {
+                if d == "b32" {
+                    // and/or/xor/shl use .b32; map to u32.
+                    d = "u32".into();
+                } else {
+                    d = p.directive()?;
+                }
+            }
+            let ty = Type::from_suffix(&d).ok_or_else(|| anyhow!("unknown type .{d}"))?;
+            bin_rest(p, op, ty)?
+        }
+        other => bail!("unknown mnemonic {other}"),
+    };
+    p.expect(&Tok::Semi)?;
+    Ok(inst)
+}
+
+fn bin_rest(p: &mut P, op: BinOp, ty: Type) -> Result<Inst> {
+    let dst = p.reg()?;
+    p.expect(&Tok::Comma)?;
+    let a = p.operand()?;
+    p.expect(&Tok::Comma)?;
+    let b = p.operand()?;
+    Ok(Inst::Bin { op, ty, dst, a, b })
+}
+
+fn parse_space(p: &mut P) -> Result<Space> {
+    let d = p.directive()?;
+    match d.as_str() {
+        "param" => Ok(Space::Param),
+        "global" => Ok(Space::Global),
+        other => bail!("unknown space .{other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::samples;
+
+    #[test]
+    fn parses_matrix_add() {
+        let k = parse_kernel(samples::MATRIX_ADD).unwrap();
+        assert_eq!(k.name, "matrix_add");
+        assert_eq!(k.params.len(), 3);
+        assert!(k.body.iter().any(|i| matches!(i, Inst::St { .. })));
+        assert!(k
+            .body
+            .iter()
+            .any(|i| i.specials().contains(&Special::CtaIdX)));
+    }
+
+    #[test]
+    fn parses_all_samples() {
+        for (name, src) in samples::all() {
+            let k = parse_kernel(src).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!k.body.is_empty(), "{name} empty body");
+            assert!(matches!(k.body.last(), Some(Inst::Ret)), "{name} must end with ret");
+        }
+    }
+
+    #[test]
+    fn reg_range_expansion() {
+        let src = ".entry t () { .reg .u32 %r<3>; mov.u32 %r0, 1; mov.u32 %r2, 2; ret; }";
+        let k = parse_kernel(src).unwrap();
+        assert_eq!(k.regs.len(), 3);
+        assert!(k.reg_type(&Reg("r2".into())).is_some());
+    }
+
+    #[test]
+    fn predicated_branch() {
+        let src = ".entry t () { .reg .pred %p0; .reg .u32 %r0; \
+                   setp.lt.u32 %p0, %r0, 10; @%p0 bra L1; L1: ret; }";
+        let k = parse_kernel(src).unwrap();
+        assert!(k
+            .body
+            .iter()
+            .any(|i| matches!(i, Inst::Bra { pred: Some((_, true)), .. })));
+    }
+
+    #[test]
+    fn negated_predicate() {
+        let src = ".entry t () { .reg .pred %p0; @!%p0 bra L; L: ret; }";
+        let k = parse_kernel(src).unwrap();
+        assert!(k
+            .body
+            .iter()
+            .any(|i| matches!(i, Inst::Bra { pred: Some((_, false)), .. })));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_kernel("not ptx at all").is_err());
+        assert!(parse_kernel(".entry t () { frobnicate.u32 %r1; }").is_err());
+    }
+}

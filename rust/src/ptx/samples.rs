@@ -1,0 +1,177 @@
+//! Hand-written PTX sources for representative kernels.
+//!
+//! `MATRIX_ADD` is the paper's running example (Fig. 3): a 2-D grid
+//! where each thread adds one element pair. The others cover the 1-D
+//! streaming, gather and branchy patterns the benchmark suite models
+//! statistically, so the rectifier + interpreter round-trip is
+//! exercised over every control-flow shape the subset supports.
+
+/// Fig. 3 MatrixAdd: C[row,col] = A + B over a `width`-wide matrix.
+/// Launched with a 2-D grid; each block covers 16x16 elements.
+pub const MATRIX_ADD: &str = r#"
+.version 3.1
+.target sm_20
+.address_size 64
+
+.visible .entry matrix_add (
+    .param .u64 pA,
+    .param .u64 pB,
+    .param .u32 pWidth
+) {
+    .reg .u32 %r<8>;
+    .reg .u64 %rd<6>;
+    .reg .f32 %f<3>;
+
+    ld.param.u64 %rd0, [pA];
+    ld.param.u64 %rd1, [pB];
+    ld.param.u32 %r6, [pWidth];
+
+    // row = ctaid.x * ntid.x + tid.x
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mul.lo.u32 %r2, %r0, %r1;
+    mov.u32 %r3, %tid.x;
+    add.u32 %r2, %r2, %r3;
+
+    // col = ctaid.y * ntid.y + tid.y
+    mov.u32 %r0, %ctaid.y;
+    mov.u32 %r1, %ntid.y;
+    mul.lo.u32 %r4, %r0, %r1;
+    mov.u32 %r5, %tid.y;
+    add.u32 %r4, %r4, %r5;
+
+    // idx = row + col * width
+    mul.lo.u32 %r7, %r4, %r6;
+    add.u32 %r7, %r7, %r2;
+
+    // A[idx] += B[idx]
+    mul.wide.u32 %rd2, %r7, 4;
+    add.u64 %rd3, %rd0, %rd2;
+    add.u64 %rd4, %rd1, %rd2;
+    ld.global.f32 %f0, [%rd3];
+    ld.global.f32 %f1, [%rd4];
+    add.f32 %f2, %f0, %f1;
+    st.global.f32 [%rd3], %f2;
+    ret;
+}
+"#;
+
+/// 1-D SAXPY: y[i] = a*x[i] + y[i] with a bounds check.
+pub const SAXPY: &str = r#"
+.visible .entry saxpy (
+    .param .u64 pX,
+    .param .u64 pY,
+    .param .f32 pA,
+    .param .u32 pN
+) {
+    .reg .u32 %r<5>;
+    .reg .u64 %rd<5>;
+    .reg .f32 %f<4>;
+    .reg .pred %p<1>;
+
+    ld.param.u64 %rd0, [pX];
+    ld.param.u64 %rd1, [pY];
+    ld.param.f32 %f0, [pA];
+    ld.param.u32 %r3, [pN];
+
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mad.lo.u32 %r2, %r0, %r1, 0;
+    mov.u32 %r4, %tid.x;
+    add.u32 %r2, %r2, %r4;
+
+    setp.ge.u32 %p0, %r2, %r3;
+    @%p0 bra DONE;
+
+    mul.wide.u32 %rd2, %r2, 4;
+    add.u64 %rd3, %rd0, %rd2;
+    add.u64 %rd4, %rd1, %rd2;
+    ld.global.f32 %f1, [%rd3];
+    ld.global.f32 %f2, [%rd4];
+    fma.rn.f32 %f3, %f0, %f1, %f2;
+    st.global.f32 [%rd4], %f3;
+DONE:
+    ret;
+}
+"#;
+
+/// 1-D gather (pointer-chase flavour): out[i] = data[idx[i]].
+pub const GATHER: &str = r#"
+.visible .entry gather (
+    .param .u64 pIdx,
+    .param .u64 pData,
+    .param .u64 pOut
+) {
+    .reg .u32 %r<4>;
+    .reg .u64 %rd<8>;
+    .reg .f32 %f<1>;
+
+    ld.param.u64 %rd0, [pIdx];
+    ld.param.u64 %rd1, [pData];
+    ld.param.u64 %rd2, [pOut];
+
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mov.u32 %r2, %tid.x;
+    mad.lo.u32 %r3, %r0, %r1, 0;
+    add.u32 %r3, %r3, %r2;
+
+    mul.wide.u32 %rd3, %r3, 4;
+    add.u64 %rd4, %rd0, %rd3;
+    ld.global.u32 %r0, [%rd4];
+    mul.wide.u32 %rd5, %r0, 4;
+    add.u64 %rd6, %rd1, %rd5;
+    ld.global.f32 %f0, [%rd6];
+    add.u64 %rd7, %rd2, %rd3;
+    st.global.f32 [%rd7], %f0;
+    ret;
+}
+"#;
+
+/// Per-thread loop (TEA-round flavour): iteratively mixes a value.
+pub const MIX_ROUNDS: &str = r#"
+.visible .entry mix_rounds (
+    .param .u64 pData,
+    .param .u32 pRounds
+) {
+    .reg .u32 %r<8>;
+    .reg .u64 %rd<3>;
+    .reg .pred %p<1>;
+
+    ld.param.u64 %rd0, [pData];
+    ld.param.u32 %r4, [pRounds];
+
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mov.u32 %r2, %tid.x;
+    mad.lo.u32 %r3, %r0, %r1, 0;
+    add.u32 %r3, %r3, %r2;
+
+    mul.wide.u32 %rd1, %r3, 4;
+    add.u64 %rd2, %rd0, %rd1;
+    ld.global.u32 %r5, [%rd2];
+
+    mov.u32 %r6, 0;
+LOOP:
+    setp.ge.u32 %p0, %r6, %r4;
+    @%p0 bra DONE;
+    shl.b32 %r7, %r5, 4;
+    xor.b32 %r5, %r5, %r7;
+    add.u32 %r5, %r5, %r3;
+    add.u32 %r6, %r6, 1;
+    bra LOOP;
+DONE:
+    st.global.u32 [%rd2], %r5;
+    ret;
+}
+"#;
+
+/// All samples with names, for sweep tests.
+pub fn all() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("matrix_add", MATRIX_ADD),
+        ("saxpy", SAXPY),
+        ("gather", GATHER),
+        ("mix_rounds", MIX_ROUNDS),
+    ]
+}

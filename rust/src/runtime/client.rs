@@ -1,0 +1,187 @@
+//! PJRT client wrapper and compiled-artifact registry.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A concrete tensor value crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Tensor::F32(_, d) | Tensor::I32(_, d) => d,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v, _) => v.len(),
+            Tensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        let dt = match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        };
+        dt == spec.dtype && self.dims() == spec.dims.as_slice()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::F32(v, dims) => xla::Literal::vec1(v).reshape(dims)?,
+            Tensor::I32(v, dims) => xla::Literal::vec1(v).reshape(dims)?,
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, spec.dims.clone()),
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, spec.dims.clone()),
+        })
+    }
+}
+
+/// Loads artifacts once, compiles once, executes many times — "one
+/// compiled executable per model variant".
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over an artifact directory produced by
+    /// `make artifacts`.
+    pub fn open(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open at the default location.
+    pub fn open_default() -> Result<Self> {
+        Self::open(super::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Find the artifact entry for (kernel, n_blocks).
+    pub fn spec(&self, kernel: &str, n_blocks: u32) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kernel == kernel && a.n_blocks == n_blocks)
+            .with_context(|| format!("no artifact for {kernel} nb={n_blocks}"))
+    }
+
+    /// Compile (cached) the artifact for (kernel, n_blocks).
+    fn executable(&self, file: &str) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {file}"))?;
+        cache.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute one artifact with the given inputs, validating shapes
+    /// against the manifest.
+    pub fn execute(&self, kernel: &str, n_blocks: u32, inputs: &[Tensor]) -> Result<Tensor> {
+        let spec = self.spec(kernel, n_blocks)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{kernel} nb={n_blocks}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !t.matches(s) {
+                bail!("{kernel} nb={n_blocks}: input {i} mismatches manifest spec {s:?}");
+            }
+        }
+        self.executable(&spec.file)?;
+        let cache = self.compiled.lock().unwrap();
+        let exe = cache.get(&spec.file).unwrap();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Tensor::from_literal(&out, &spec.output)
+    }
+
+    /// Number of distinct compiled executables so far.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_matching() {
+        let t = Tensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(t.matches(&TensorSpec { dtype: DType::F32, dims: vec![2, 3] }));
+        assert!(!t.matches(&TensorSpec { dtype: DType::F32, dims: vec![3, 2] }));
+        assert!(!t.matches(&TensorSpec { dtype: DType::I32, dims: vec![2, 3] }));
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::I32(vec![1, 2, 3], vec![3]);
+        assert_eq!(t.len(), 3);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+
+    // PJRT-backed tests live in tests/runtime_pjrt.rs and skip when
+    // artifacts are absent.
+}

@@ -1,0 +1,229 @@
+//! Sliced real-compute dispatch: run a kernel's grid as a sequence of
+//! slice executions through PJRT and stitch the outputs.
+//!
+//! This is the real-numerics counterpart of the simulator's timing
+//! model: the coordinator decides slice sizes; this module proves the
+//! decision is *safe* by executing actual compiled kernels slice by
+//! slice and verifying the stitched output equals the full-grid run.
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{ArtifactRegistry, Tensor};
+use crate::stats::Xoshiro256;
+
+/// Runs sliceable kernels through the artifact registry.
+pub struct SlicedRunner<'a> {
+    reg: &'a ArtifactRegistry,
+}
+
+impl<'a> SlicedRunner<'a> {
+    pub fn new(reg: &'a ArtifactRegistry) -> Self {
+        Self { reg }
+    }
+
+    /// Total grid blocks of a kernel = the largest AOT variant.
+    pub fn total_blocks(&self, kernel: &str) -> Result<u32> {
+        self.reg
+            .manifest()
+            .variants(kernel)
+            .first()
+            .map(|a| a.n_blocks)
+            .context("unknown kernel")
+    }
+
+    /// Execute the full grid in one launch (offset 0).
+    pub fn run_full(&self, kernel: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let nb = self.total_blocks(kernel)?;
+        let args = with_offset(inputs, 0);
+        self.reg.execute(kernel, nb, &args)
+    }
+
+    /// Execute the grid as contiguous slices of the given block counts
+    /// (must partition the grid and match AOT'd variants), stitching
+    /// outputs along axis 0.
+    pub fn run_sliced(&self, kernel: &str, inputs: &[Tensor], slice_blocks: &[u32]) -> Result<Tensor> {
+        let total = self.total_blocks(kernel)?;
+        if slice_blocks.iter().sum::<u32>() != total {
+            bail!("slices {slice_blocks:?} do not partition {total} blocks");
+        }
+        let mut offset = 0u32;
+        let mut pieces: Vec<Tensor> = Vec::new();
+        for &nb in slice_blocks {
+            let args = with_offset(inputs, offset as i32);
+            pieces.push(self.reg.execute(kernel, nb, &args)?);
+            offset += nb;
+        }
+        concat0(&pieces)
+    }
+
+    /// Run full and sliced, verify bit-identical, return (output,
+    /// max abs diff == 0). The E2E driver calls this per request.
+    pub fn run_verified(&self, kernel: &str, inputs: &[Tensor], slice_blocks: &[u32]) -> Result<Tensor> {
+        let full = self.run_full(kernel, inputs)?;
+        let sliced = self.run_sliced(kernel, inputs, slice_blocks)?;
+        if full != sliced {
+            bail!("{kernel}: sliced execution diverged from full run");
+        }
+        Ok(full)
+    }
+
+    /// Random example inputs matching the manifest spec of a kernel
+    /// (offset excluded). Mirrors `example_inputs` on the python side
+    /// in distribution, not values — the verification is
+    /// self-consistency, the oracle check lives in pytest.
+    pub fn example_inputs(&self, kernel: &str, seed: u64) -> Result<Vec<Tensor>> {
+        let nb = self.total_blocks(kernel)?;
+        let spec = self.reg.spec(kernel, nb)?;
+        let mut rng = Xoshiro256::new(seed);
+        let mut out = Vec::new();
+        for ts in spec.inputs.iter().skip(1) {
+            // skip the offset arg
+            let n = ts.elements();
+            out.push(match ts.dtype {
+                super::manifest::DType::F32 => Tensor::F32(
+                    (0..n).map(|_| rng.range_f64(0.1, 2.0) as f32).collect(),
+                    ts.dims.clone(),
+                ),
+                super::manifest::DType::I32 => {
+                    // Index-like inputs must stay in-range; the largest
+                    // safe bound for every int input in the suite is the
+                    // smallest dimension product of any f32 input ---
+                    // conservatively use n for permutation-ish data.
+                    let bound = index_bound(kernel, ts, spec);
+                    Tensor::I32(
+                        (0..n).map(|_| rng.below(bound as u64) as i32).collect(),
+                        ts.dims.clone(),
+                    )
+                }
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Safe upper bound for integer inputs (they are gather indices in
+/// pc/spmv, arbitrary payload in tea).
+fn index_bound(kernel: &str, _ts: &super::manifest::TensorSpec, spec: &super::manifest::ArtifactSpec) -> i64 {
+    match kernel {
+        // pc: idx indexes into data (second f32 input).
+        "pc" => spec.inputs.iter().skip(1).find_map(|t| {
+            (t.dtype == super::manifest::DType::F32).then(|| t.elements() as i64)
+        }).unwrap_or(1),
+        // spmv: idx indexes into x (the 1-D f32 input).
+        "spmv" => spec
+            .inputs
+            .iter()
+            .filter(|t| t.dtype == super::manifest::DType::F32 && t.dims.len() == 1)
+            .map(|t| t.elements() as i64)
+            .min()
+            .unwrap_or(1),
+        // tea and friends: full i32 range is fine, but keep it modest.
+        _ => i32::MAX as i64 / 2,
+    }
+}
+
+fn with_offset(inputs: &[Tensor], offset: i32) -> Vec<Tensor> {
+    let mut args = Vec::with_capacity(inputs.len() + 1);
+    args.push(Tensor::I32(vec![offset], vec![1]));
+    args.extend(inputs.iter().cloned());
+    args
+}
+
+/// Concatenate tensors along axis 0.
+fn concat0(pieces: &[Tensor]) -> Result<Tensor> {
+    if pieces.is_empty() {
+        bail!("nothing to concatenate");
+    }
+    let tail_dims = pieces[0].dims()[1..].to_vec();
+    let mut rows = 0i64;
+    for p in pieces {
+        if p.dims()[1..] != tail_dims[..] {
+            bail!("ragged concatenation");
+        }
+        rows += p.dims()[0];
+    }
+    let mut dims = vec![rows];
+    dims.extend(&tail_dims);
+    Ok(match &pieces[0] {
+        Tensor::F32(..) => {
+            let mut v = Vec::new();
+            for p in pieces {
+                v.extend_from_slice(p.as_f32()?);
+            }
+            Tensor::F32(v, dims)
+        }
+        Tensor::I32(..) => {
+            let mut v = Vec::new();
+            for p in pieces {
+                v.extend_from_slice(p.as_i32()?);
+            }
+            Tensor::I32(v, dims)
+        }
+    })
+}
+
+/// Steady-state evaluation through the AOT markov artifact: pads the
+/// chain to the artifact's fixed frame and returns the active-state
+/// distribution. The PJRT-vs-native agreement test lives in
+/// `tests/runtime_pjrt.rs`.
+pub fn steady_state_pjrt(reg: &ArtifactRegistry, p_small: &[Vec<f64>]) -> Result<Vec<f64>> {
+    const PAD: usize = 64;
+    let n = p_small.len();
+    if n > PAD {
+        bail!("chain of {n} states exceeds the AOT frame ({PAD})");
+    }
+    let mut p = vec![0f32; PAD * PAD];
+    for i in 0..PAD {
+        p[i * PAD + i] = 1.0; // identity padding rows
+    }
+    for (i, row) in p_small.iter().enumerate() {
+        if row.len() != n {
+            bail!("ragged transition matrix");
+        }
+        for (j, &v) in row.iter().enumerate() {
+            p[i * PAD + j] = v as f32;
+        }
+        p[i * PAD + i] = row[i] as f32; // overwrite identity diag
+    }
+    let mut pi0 = vec![0f32; PAD];
+    for v in pi0.iter_mut().take(n) {
+        *v = 1.0 / n as f32;
+    }
+    let out = reg.execute(
+        "markov_steady",
+        1,
+        &[
+            Tensor::F32(p, vec![PAD as i64, PAD as i64]),
+            Tensor::F32(pi0, vec![PAD as i64]),
+        ],
+    )?;
+    Ok(out.as_f32()?[..n].iter().map(|&x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat0_f32() {
+        let a = Tensor::F32(vec![1.0, 2.0], vec![1, 2]);
+        let b = Tensor::F32(vec![3.0, 4.0, 5.0, 6.0], vec![2, 2]);
+        let c = concat0(&[a, b]).unwrap();
+        assert_eq!(c.dims(), &[3, 2]);
+        assert_eq!(c.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn concat0_rejects_ragged() {
+        let a = Tensor::F32(vec![1.0, 2.0], vec![1, 2]);
+        let b = Tensor::F32(vec![3.0], vec![1, 1]);
+        assert!(concat0(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn with_offset_prepends() {
+        let args = with_offset(&[Tensor::F32(vec![1.0], vec![1])], 5);
+        assert_eq!(args.len(), 2);
+        assert_eq!(args[0], Tensor::I32(vec![5], vec![1]));
+    }
+}

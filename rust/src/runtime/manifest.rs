@@ -1,0 +1,176 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes one line per artifact:
+//! `file|kernel|n_blocks|in:<dtype>:<dims>,...|out:<dtype>:<dims>`
+//! e.g. `mm_nb4.hlo.txt|mm|4|in:int32:1,float32:128x64,float32:64x64|out:float32:64x64`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// Shape + dtype of one argument or result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<i64>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (d, dims) = s.split_once(':').with_context(|| format!("bad tensor spec {s}"))?;
+        let dtype = DType::parse(d)?;
+        let dims = if dims == "scalar" {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|x| x.parse::<i64>().with_context(|| format!("bad dim in {s}")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kernel: String,
+    pub n_blocks: u32,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 5 {
+                bail!("manifest line {} malformed: {line}", lineno + 1);
+            }
+            let ins = parts[3]
+                .strip_prefix("in:")
+                .with_context(|| format!("line {}: missing in:", lineno + 1))?;
+            let out = parts[4]
+                .strip_prefix("out:")
+                .with_context(|| format!("line {}: missing out:", lineno + 1))?;
+            artifacts.push(ArtifactSpec {
+                file: parts[0].to_string(),
+                kernel: parts[1].to_string(),
+                n_blocks: parts[2].parse().context("n_blocks")?,
+                inputs: ins.split(',').map(TensorSpec::parse).collect::<Result<Vec<_>>>()?,
+                output: TensorSpec::parse(out)?,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt", dir.display()))?;
+        Self::parse(&text)
+    }
+
+    /// All entries for one kernel, sorted by descending block count.
+    pub fn variants(&self, kernel: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<_> = self.artifacts.iter().filter(|a| a.kernel == kernel).collect();
+        v.sort_by(|a, b| b.n_blocks.cmp(&a.n_blocks));
+        v
+    }
+
+    /// Kernel names present (excluding the markov solver).
+    pub fn kernels(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .artifacts
+            .iter()
+            .map(|a| a.kernel.clone())
+            .filter(|k| k != "markov_steady")
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+mm_nb8.hlo.txt|mm|8|in:int32:1,float32:128x64,float32:64x64|out:float32:128x64
+mm_nb4.hlo.txt|mm|4|in:int32:1,float32:128x64,float32:64x64|out:float32:64x64
+markov_steady.hlo.txt|markov_steady|1|in:float32:64x64,float32:64|out:float32:64
+#markov_pad=64 markov_iters=256
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let mm8 = &m.artifacts[0];
+        assert_eq!(mm8.kernel, "mm");
+        assert_eq!(mm8.n_blocks, 8);
+        assert_eq!(mm8.inputs.len(), 3);
+        assert_eq!(mm8.inputs[0], TensorSpec { dtype: DType::I32, dims: vec![1] });
+        assert_eq!(mm8.output.dims, vec![128, 64]);
+    }
+
+    #[test]
+    fn variants_sorted_desc() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.variants("mm");
+        assert_eq!(v.len(), 2);
+        assert!(v[0].n_blocks > v[1].n_blocks);
+    }
+
+    #[test]
+    fn kernels_excludes_markov() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.kernels(), vec!["mm".to_string()]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("only|three|fields").is_err());
+        assert!(Manifest::parse("f|k|x|in:f32:1|out:f32:1").is_err()); // bad n_blocks
+        assert!(Manifest::parse("f|k|1|in:f99:1|out:f32:1").is_err()); // bad dtype
+    }
+
+    #[test]
+    fn scalar_dims() {
+        let t = TensorSpec::parse("float32:scalar").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.elements(), 1);
+    }
+}

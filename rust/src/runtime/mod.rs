@@ -1,0 +1,41 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! Python runs once at build time (`make artifacts`): JAX lowers every
+//! sliceable Pallas kernel variant and the Markov steady-state solver
+//! to HLO text (see `python/compile/aot.py`). This module is the
+//! request-path side: the rust coordinator loads the text with
+//! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//! client, and executes slices with concrete inputs — Python is never
+//! on the request path.
+
+pub mod client;
+pub mod dispatch;
+pub mod manifest;
+
+pub use client::{ArtifactRegistry, Tensor};
+pub use dispatch::SlicedRunner;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$KERNELET_ARTIFACTS`, else
+/// `artifacts/` relative to the crate root, else the current dir.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("KERNELET_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR);
+    if manifest_dir.exists() {
+        return manifest_dir;
+    }
+    PathBuf::from(ARTIFACTS_DIR)
+}
+
+/// True when `make artifacts` has produced a manifest (integration
+/// tests skip politely when it hasn't).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

@@ -1,0 +1,454 @@
+//! The per-SM execution engine.
+//!
+//! Event-driven at warp granularity: warps sit either in a FIFO ready
+//! ring (served round-robin, like the hardware warp schedulers polling
+//! ready warps each round — paper §4.4) or in per-source sorted wake-up
+//! FIFOs keyed by the cycle their outstanding dependency resolves (see
+//! the §Perf note on `SmEngine`). Issue bandwidth is a fractional
+//! per-cycle budget (`peak_ipc`), so Fermi's half-warp-per-scheduler
+//! issue and Kepler's dual issue both map onto the same mechanism.
+
+use std::collections::VecDeque;
+
+use super::memory::MemoryPipe;
+use super::metrics::{KernelMetrics, SimResult};
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+use crate::stats::Xoshiro256;
+
+/// A kernel plus the number of its blocks assigned to this SM.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub spec: KernelSpec,
+    pub blocks: u32,
+    /// Residency quota: at most this many blocks of this workload may
+    /// be co-resident on the SM. This is how a co-schedule's (b1, b2)
+    /// split pins each slice's occupancy (the paper's "slices with
+    /// tunable occupancy") — without it, a kernel with tiny blocks
+    /// slowly steals every freed block slot from its partner.
+    pub quota: Option<u32>,
+}
+
+impl Workload {
+    pub fn new(spec: KernelSpec, blocks: u32) -> Self {
+        assert!(blocks >= 1, "workload with zero blocks");
+        Self { spec, blocks, quota: None }
+    }
+
+    pub fn with_quota(spec: KernelSpec, blocks: u32, quota: u32) -> Self {
+        assert!(blocks >= 1 && quota >= 1);
+        Self { spec, blocks, quota: Some(quota) }
+    }
+}
+
+/// One resident warp's execution state.
+#[derive(Debug, Clone)]
+struct WarpState {
+    /// Index into the engine's workload list.
+    kernel: usize,
+    /// Resident-block slot this warp belongs to.
+    block_slot: usize,
+    /// Instructions left in the current block assignment.
+    remaining: u32,
+}
+
+/// A resident-block slot: tracks how many of its warps have finished.
+#[derive(Debug, Clone)]
+struct BlockSlot {
+    warps_left: u32,
+    live: bool,
+}
+
+/// Resource accounting for block co-residency on the SM.
+#[derive(Debug, Clone, Default)]
+struct SmResources {
+    threads: u32,
+    regs: u32,
+    smem: u32,
+    blocks: u32,
+    warps: u32,
+}
+
+impl SmResources {
+    fn fits(&self, gpu: &GpuConfig, k: &KernelSpec) -> bool {
+        let warps = k.threads_per_block.div_ceil(gpu.warp_size);
+        self.threads + k.threads_per_block <= gpu.max_threads_per_sm
+            && self.regs + k.regs_per_thread * k.threads_per_block <= gpu.regs_per_sm
+            && self.smem + k.smem_per_block <= gpu.smem_per_sm
+            && self.blocks + 1 <= gpu.max_blocks_per_sm
+            && self.warps + warps <= gpu.max_warps_per_sm
+    }
+
+    fn claim(&mut self, gpu: &GpuConfig, k: &KernelSpec) {
+        self.threads += k.threads_per_block;
+        self.regs += k.regs_per_thread * k.threads_per_block;
+        self.smem += k.smem_per_block;
+        self.blocks += 1;
+        self.warps += k.threads_per_block.div_ceil(gpu.warp_size);
+    }
+
+    fn release(&mut self, gpu: &GpuConfig, k: &KernelSpec) {
+        self.threads -= k.threads_per_block;
+        self.regs -= k.regs_per_thread * k.threads_per_block;
+        self.smem -= k.smem_per_block;
+        self.blocks -= 1;
+        self.warps -= k.threads_per_block.div_ceil(gpu.warp_size);
+    }
+}
+
+/// The engine simulating one representative SM.
+///
+/// Wake-up bookkeeping uses per-source sorted FIFOs instead of a heap
+/// (§Perf: the heap's sift operations were 64% of Fig. 13 wall time).
+/// Sortedness is structural: each workload's arithmetic stalls have a
+/// constant gap, so `now + gap` is nondecreasing as `now` advances; and
+/// the memory pipe's completion times are nondecreasing because its
+/// bandwidth server frees monotonically and the pipeline latency is
+/// constant.
+pub struct SmEngine {
+    gpu: GpuConfig,
+    rng: Xoshiro256,
+    workloads: Vec<Workload>,
+    /// Blocks of each workload not yet made resident.
+    pending_blocks: Vec<u32>,
+    /// Blocks of each workload currently resident.
+    resident_blocks: Vec<u32>,
+    warps: Vec<WarpState>,
+    /// Free warp-state indices for reuse.
+    free_warps: Vec<usize>,
+    slots: Vec<BlockSlot>,
+    free_slots: Vec<usize>,
+    resources: SmResources,
+    /// Warps ready to issue, round-robin ring.
+    ready: VecDeque<usize>,
+    /// Warps stalled on arithmetic dependencies, one sorted FIFO per
+    /// workload (constant gap per workload keeps each sorted).
+    arith_sleep: Vec<VecDeque<(f64, usize)>>,
+    /// Warps stalled on memory, one shared sorted FIFO (the pipe's
+    /// completion times are nondecreasing).
+    mem_sleep: VecDeque<(f64, usize)>,
+    memory: MemoryPipe,
+    metrics: Vec<KernelMetrics>,
+    /// Round-robin cursor for refilling from multiple workloads.
+    refill_cursor: usize,
+}
+
+impl SmEngine {
+    pub fn new(gpu: &GpuConfig, seed: u64) -> Self {
+        Self {
+            gpu: gpu.clone(),
+            rng: Xoshiro256::new(seed),
+            workloads: Vec::new(),
+            pending_blocks: Vec::new(),
+            resident_blocks: Vec::new(),
+            warps: Vec::new(),
+            free_warps: Vec::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            resources: SmResources::default(),
+            ready: VecDeque::new(),
+            arith_sleep: Vec::new(),
+            mem_sleep: VecDeque::new(),
+            memory: MemoryPipe::new(gpu),
+            metrics: Vec::new(),
+            refill_cursor: 0,
+        }
+    }
+
+    /// Register a workload before `run`. The first workload registered
+    /// gets priority when blocks compete for SM residency (launch
+    /// order, like the hardware dispatcher).
+    pub fn add_workload(&mut self, w: Workload) {
+        w.spec.validate();
+        self.pending_blocks.push(w.blocks);
+        self.resident_blocks.push(0);
+        self.metrics.push(KernelMetrics::default());
+        self.arith_sleep.push(VecDeque::new());
+        self.workloads.push(w);
+    }
+
+    /// Earliest pending wake-up across every sleep queue.
+    fn next_wake(&self) -> Option<f64> {
+        let mut best: Option<f64> = self.mem_sleep.front().map(|&(at, _)| at);
+        for q in &self.arith_sleep {
+            if let Some(&(at, _)) = q.front() {
+                best = Some(best.map_or(at, |b| b.min(at)));
+            }
+        }
+        best
+    }
+
+    /// Move every warp due by `now` to the ready ring.
+    fn wake_due(&mut self, now: f64) {
+        while let Some(&(at, w)) = self.mem_sleep.front() {
+            if at <= now {
+                self.mem_sleep.pop_front();
+                self.ready.push_back(w);
+            } else {
+                break;
+            }
+        }
+        for q in &mut self.arith_sleep {
+            while let Some(&(at, w)) = q.front() {
+                if at <= now {
+                    q.pop_front();
+                    self.ready.push_back(w);
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Try to make pending blocks resident while resources allow.
+    /// Round-robin over workloads starting at `refill_cursor` so two
+    /// co-scheduled kernels interleave their residency fairly (this is
+    /// what slice-size tuning controls occupancy *through*).
+    fn refill(&mut self) {
+        let n = self.workloads.len();
+        if n == 0 {
+            return;
+        }
+        // A quota only binds while some OTHER workload still has work:
+        // once the partner slice drains, the hardware block dispatcher
+        // lets the survivor expand into the freed slots.
+        let others_active: Vec<bool> = (0..n)
+            .map(|i| {
+                (0..n).any(|j| {
+                    j != i && (self.pending_blocks[j] > 0 || self.resident_blocks[j] > 0)
+                })
+            })
+            .collect();
+        let mut stalled = 0usize;
+        let mut i = self.refill_cursor % n;
+        while stalled < n {
+            let under_quota = !others_active[i]
+                || self.workloads[i]
+                    .quota
+                    .map_or(true, |q| self.resident_blocks[i] < q);
+            if self.pending_blocks[i] > 0
+                && under_quota
+                && self.resources.fits(&self.gpu, &self.workloads[i].spec)
+            {
+                self.admit_block(i);
+                stalled = 0;
+            } else {
+                stalled += 1;
+            }
+            i = (i + 1) % n;
+        }
+        self.refill_cursor = i;
+    }
+
+    fn admit_block(&mut self, kernel: usize) {
+        let spec = self.workloads[kernel].spec.clone();
+        self.resources.claim(&self.gpu, &spec);
+        self.pending_blocks[kernel] -= 1;
+        self.resident_blocks[kernel] += 1;
+        let warps_per_block = spec.threads_per_block.div_ceil(self.gpu.warp_size);
+        let slot = if let Some(s) = self.free_slots.pop() {
+            self.slots[s] = BlockSlot { warps_left: warps_per_block, live: true };
+            s
+        } else {
+            self.slots.push(BlockSlot { warps_left: warps_per_block, live: true });
+            self.slots.len() - 1
+        };
+        for _ in 0..warps_per_block {
+            let state = WarpState { kernel, block_slot: slot, remaining: spec.inst_per_warp };
+            let w = if let Some(w) = self.free_warps.pop() {
+                self.warps[w] = state;
+                w
+            } else {
+                self.warps.push(state);
+                self.warps.len() - 1
+            };
+            self.ready.push_back(w);
+        }
+    }
+
+    /// Run until every workload's blocks have completed. Returns the
+    /// accumulated metrics; `cycles` does NOT include launch overhead
+    /// (callers add it — see [`super::simulate_solo`]).
+    pub fn run(&mut self) -> SimResult {
+        assert!(!self.workloads.is_empty(), "no workloads");
+        self.refill();
+        let mut now = 0.0f64;
+        // Fractional issue budget accumulated per cycle.
+        let peak = self.gpu.peak_ipc();
+        let mut budget = 0.0f64;
+
+        loop {
+            // Wake everything due by `now`.
+            self.wake_due(now);
+
+            if self.ready.is_empty() {
+                match self.next_wake() {
+                    Some(at) => {
+                        // Idle cycles until the next wake-up.
+                        now = at;
+                        budget = peak; // a fresh cycle's budget awaits
+                        continue;
+                    }
+                    None => break, // drained
+                }
+            }
+
+            // Issue phase for this cycle.
+            budget += peak;
+            // Cap the carried budget: hardware cannot bank issue slots.
+            if budget > peak.max(1.0) {
+                budget = peak.max(1.0);
+            }
+            while budget >= 1.0 {
+                let Some(w) = self.ready.pop_front() else { break };
+                budget -= 1.0;
+                self.issue(w, now);
+            }
+            now += 1.0;
+        }
+
+        SimResult { cycles: now, kernels: self.metrics.clone() }
+    }
+
+    /// Issue one instruction of warp `w` at cycle `now`.
+    fn issue(&mut self, w: usize, now: f64) {
+        let (kernel, slot) = (self.warps[w].kernel, self.warps[w].block_slot);
+        let spec = &self.workloads[kernel].spec;
+        let mix = spec.mix;
+        self.metrics[kernel].insts += 1;
+        self.warps[w].remaining -= 1;
+
+        let finished = self.warps[w].remaining == 0;
+        if finished {
+            self.free_warps.push(w);
+            let s = &mut self.slots[slot];
+            s.warps_left -= 1;
+            if s.warps_left == 0 && s.live {
+                s.live = false;
+                self.free_slots.push(slot);
+                let spec = self.workloads[kernel].spec.clone();
+                self.resources.release(&self.gpu, &spec);
+                self.resident_blocks[kernel] -= 1;
+                self.metrics[kernel].blocks_completed += 1;
+                self.refill();
+            }
+            return;
+        }
+
+        if self.rng.chance(mix.mem_ratio) {
+            // Global memory instruction.
+            self.metrics[kernel].mem_insts += 1;
+            let sectors = if mix.uncoalesced_frac > 0.0 && self.rng.chance(mix.uncoalesced_frac) {
+                mix.uncoalesced_fanout
+            } else {
+                4 // one coalesced 128B transaction
+            };
+            self.metrics[kernel].sectors += sectors as u64;
+            let wake = self.memory.access(now, sectors);
+            debug_assert!(self.mem_sleep.back().map_or(true, |&(at, _)| at <= wake));
+            self.mem_sleep.push_back((wake, w));
+        } else {
+            // Arithmetic: dependent-issue gap of arith_latency/ilp
+            // cycles on average (1.0 = back-to-back). Dual-issue
+            // schedulers (Kepler: 2 instr/scheduler/cycle) pair
+            // independent instructions statically, effectively halving
+            // the per-warp dependency gap.
+            let dual = self.gpu.issue_per_scheduler.max(1.0);
+            let lat = spec.arith_latency as f64 * self.gpu.arith_latency_scale;
+            let gap = (lat / (spec.ilp * dual)).max(1.0);
+            if gap <= 1.0 {
+                self.ready.push_back(w);
+            } else {
+                debug_assert!(self.arith_sleep[kernel]
+                    .back()
+                    .map_or(true, |&(at, _)| at <= now + gap));
+                self.arith_sleep[kernel].push_back((now + gap, w));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::InstructionMix;
+
+    fn spec(mem: f64, ilp: f64) -> KernelSpec {
+        KernelSpec {
+            name: "t",
+            grid_blocks: 64,
+            threads_per_block: 128,
+            regs_per_thread: 16,
+            smem_per_block: 0,
+            inst_per_warp: 256,
+            mix: InstructionMix::coalesced(mem),
+            arith_latency: 20,
+            ilp,
+        }
+    }
+
+    #[test]
+    fn drains_all_blocks() {
+        let gpu = GpuConfig::c2050();
+        let mut e = SmEngine::new(&gpu, 1);
+        e.add_workload(Workload::new(spec(0.1, 2.0), 10));
+        let r = e.run();
+        assert_eq!(r.kernels[0].blocks_completed, 10);
+        assert_eq!(r.kernels[0].insts, 10 * 4 * 256);
+        assert!(r.cycles > 0.0);
+    }
+
+    #[test]
+    fn residency_respects_block_cap() {
+        // 8-block cap on Fermi: a 9th block must wait. Indirectly
+        // observable: tiny 32-thread blocks, pure compute, the run must
+        // still drain and complete exactly `blocks`.
+        let gpu = GpuConfig::c2050();
+        let mut k = spec(0.0, 4.0);
+        k.threads_per_block = 32;
+        let mut e = SmEngine::new(&gpu, 2);
+        e.add_workload(Workload::new(k, 20));
+        let r = e.run();
+        assert_eq!(r.kernels[0].blocks_completed, 20);
+    }
+
+    #[test]
+    fn two_workloads_share_residency() {
+        let gpu = GpuConfig::c2050();
+        let mut e = SmEngine::new(&gpu, 3);
+        e.add_workload(Workload::new(spec(0.0, 2.0), 6));
+        e.add_workload(Workload::new(spec(0.4, 1.0), 6));
+        let r = e.run();
+        assert_eq!(r.kernels[0].blocks_completed, 6);
+        assert_eq!(r.kernels[1].blocks_completed, 6);
+    }
+
+    #[test]
+    fn low_ilp_lowers_ipc() {
+        let gpu = GpuConfig::c2050();
+        let mut hi = SmEngine::new(&gpu, 4);
+        hi.add_workload(Workload::new(spec(0.0, 4.0), 24));
+        let r_hi = hi.run();
+        let mut lo = SmEngine::new(&gpu, 4);
+        // Same work, heavy dependency stalls.
+        let mut k = spec(0.0, 0.3);
+        k.arith_latency = 40;
+        lo.add_workload(Workload::new(k, 24));
+        let r_lo = lo.run();
+        assert!(r_lo.cycles > r_hi.cycles * 1.5, "lo={} hi={}", r_lo.cycles, r_hi.cycles);
+    }
+
+    #[test]
+    fn kepler_issues_faster_than_fermi() {
+        let k = spec(0.0, 4.0);
+        let mut f = SmEngine::new(&GpuConfig::c2050(), 5);
+        f.add_workload(Workload::new(k.clone(), 16));
+        let rf = f.run();
+        let mut g = SmEngine::new(&GpuConfig::gtx680(), 5);
+        g.add_workload(Workload::new(k, 16));
+        let rg = g.run();
+        // Kepler's peak IPC is 8x Fermi's; pure-ALU work should finish
+        // several times quicker.
+        assert!(rg.cycles < rf.cycles / 2.0, "kepler={} fermi={}", rg.cycles, rf.cycles);
+    }
+}

@@ -1,0 +1,135 @@
+//! Simulation counters and derived performance metrics.
+
+use crate::config::GpuConfig;
+
+/// Counters for one kernel within a simulation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelMetrics {
+    /// Dynamic instructions issued (warp-instructions).
+    pub insts: u64,
+    /// Of those, global-memory instructions (profiler input for R_m).
+    pub mem_insts: u64,
+    /// 32-byte DRAM sectors generated.
+    pub sectors: u64,
+    /// Thread blocks run to completion.
+    pub blocks_completed: u32,
+    /// Cycles during which this kernel had at least one resident warp
+    /// (used for per-kernel solo-equivalent IPC in tail phases).
+    pub resident_cycles: f64,
+}
+
+impl KernelMetrics {
+    pub fn absorb(&mut self, other: &KernelMetrics) {
+        self.insts += other.insts;
+        self.mem_insts += other.mem_insts;
+        self.sectors += other.sectors;
+        self.blocks_completed += other.blocks_completed;
+        self.resident_cycles += other.resident_cycles;
+    }
+}
+
+/// Result of one SM simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// Total cycles simulated until all workloads drained.
+    pub cycles: f64,
+    /// Per-workload counters, in `add_workload` order.
+    pub kernels: Vec<KernelMetrics>,
+}
+
+impl SimResult {
+    /// Aggregate instructions across kernels.
+    pub fn total_insts(&self) -> u64 {
+        self.kernels.iter().map(|k| k.insts).sum()
+    }
+
+    /// Aggregate sectors across kernels.
+    pub fn total_sectors(&self) -> u64 {
+        self.kernels.iter().map(|k| k.sectors).sum()
+    }
+
+    /// SM instructions per cycle.
+    pub fn ipc(&self, _gpu: &GpuConfig) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.total_insts() as f64 / self.cycles
+        }
+    }
+
+    /// Pipeline utilization ratio: IPC normalized by the SM's peak issue
+    /// rate (paper §4.3).
+    pub fn pur(&self, gpu: &GpuConfig) -> f64 {
+        self.ipc(gpu) / gpu.peak_ipc()
+    }
+
+    /// Memory-bandwidth utilization ratio: sector rate normalized by the
+    /// SM's peak LSU sector rate (paper §4.3 Peak_MPC).
+    pub fn mur(&self, gpu: &GpuConfig) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.total_sectors() as f64 / self.cycles / gpu.lsu_sectors_per_cycle
+        }
+    }
+
+    /// Wall-clock seconds on this GPU.
+    pub fn seconds(&self, gpu: &GpuConfig) -> f64 {
+        gpu.cycles_to_secs(self.cycles)
+    }
+
+    /// Merge a sequentially-following run into this one (sliced
+    /// execution accounting).
+    pub fn absorb(&mut self, other: &SimResult) {
+        self.cycles += other.cycles;
+        while self.kernels.len() < other.kernels.len() {
+            self.kernels.push(KernelMetrics::default());
+        }
+        for (mine, theirs) in self.kernels.iter_mut().zip(&other.kernels) {
+            mine.absorb(theirs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let gpu = GpuConfig::c2050();
+        let r = SimResult {
+            cycles: 1000.0,
+            kernels: vec![KernelMetrics { insts: 500, mem_insts: 100, sectors: 800, blocks_completed: 4, resident_cycles: 1000.0 }],
+        };
+        assert!((r.ipc(&gpu) - 0.5).abs() < 1e-12);
+        assert!((r.pur(&gpu) - 0.5).abs() < 1e-12);
+        assert!((r.mur(&gpu) - 0.2).abs() < 1e-12);
+        assert!((r.seconds(&gpu) - 1000.0 / 1.147e9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut a = SimResult {
+            cycles: 10.0,
+            kernels: vec![KernelMetrics { insts: 1, mem_insts: 1, sectors: 2, blocks_completed: 1, resident_cycles: 10.0 }],
+        };
+        let b = SimResult {
+            cycles: 5.0,
+            kernels: vec![KernelMetrics { insts: 3, mem_insts: 2, sectors: 4, blocks_completed: 2, resident_cycles: 5.0 }],
+        };
+        a.absorb(&b);
+        assert_eq!(a.cycles, 15.0);
+        assert_eq!(a.kernels[0].insts, 4);
+        assert_eq!(a.kernels[0].sectors, 6);
+        assert_eq!(a.kernels[0].blocks_completed, 3);
+    }
+
+    #[test]
+    fn empty_result_is_zero() {
+        let gpu = GpuConfig::c2050();
+        let r = SimResult::default();
+        assert_eq!(r.ipc(&gpu), 0.0);
+        assert_eq!(r.mur(&gpu), 0.0);
+    }
+}

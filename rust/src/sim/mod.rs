@@ -1,0 +1,290 @@
+//! Cycle-level stochastic GPU simulator — the measurement substrate.
+//!
+//! The paper measures IPC/PUR/MUR/execution-time on real Fermi and
+//! Kepler silicon; this environment has neither, so every "measured"
+//! number in the reproduction comes from this simulator (see DESIGN.md
+//! §2 for the substitution argument). The simulator implements the
+//! mechanisms the paper's analytic model approximates:
+//!
+//! - per-SM warp population with round-robin warp schedulers and a
+//!   per-cycle issue budget (0.5 instr/scheduler on Fermi, 2.0 with dual
+//!   issue on Kepler);
+//! - a memory pipeline per SM: fixed pipeline latency plus a
+//!   deterministic-service bandwidth queue in 32-byte sectors, which
+//!   yields the linear latency-vs-outstanding-requests behaviour the
+//!   paper models as `L = L0 + f(outstanding)/B`;
+//! - coalesced (4-sector) vs fully uncoalesced (fanout-sector) memory
+//!   instructions;
+//! - a block dispatcher with resource-limited co-residency of blocks
+//!   from two kernels (registers, shared memory, threads, block slots);
+//! - per-slice kernel launch overhead (the source of Fig. 6's curves);
+//! - compute-pipeline dependency stalls (arith latency / ILP) which the
+//!   paper's model ignores — deliberately kept so the model-vs-measured
+//!   gaps in Figs. 7-12 are honest.
+//!
+//! One SM is simulated and treated as representative (the paper's own
+//! SPMD argument in §4.4); grid blocks are distributed round-robin, so
+//! the representative SM receives `ceil(blocks / num_sms)`.
+
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+
+pub use engine::{SmEngine, Workload};
+pub use metrics::{KernelMetrics, SimResult};
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+
+/// Default RNG seed for measurement runs (fixed for reproducibility).
+pub const DEFAULT_SEED: u64 = 0xC2050_680;
+
+/// Blocks the representative SM receives out of a `total` distributed
+/// round-robin over the GPU.
+pub fn blocks_on_sm(gpu: &GpuConfig, total: u32) -> u32 {
+    total.div_ceil(gpu.num_sms)
+}
+
+/// Simulate a full solo (unsliced) kernel execution.
+///
+/// Returns per-SM metrics; execution time in cycles includes one kernel
+/// launch overhead.
+pub fn simulate_solo(gpu: &GpuConfig, spec: &KernelSpec, seed: u64) -> SimResult {
+    let blocks = blocks_on_sm(gpu, spec.grid_blocks);
+    let mut eng = SmEngine::new(gpu, seed);
+    eng.add_workload(Workload::new(spec.clone(), blocks));
+    let mut res = eng.run();
+    res.cycles += gpu.launch_overhead_cycles;
+    res
+}
+
+/// Simulate a solo kernel executed as a sequence of slices of
+/// `slice_size` blocks (grid-wide) — the Fig. 6 setup.
+///
+/// Architecture matters here (and is exactly Fig. 6's finding):
+/// - **Fermi** has a single in-order launch queue: every slice pays its
+///   launch overhead serially AND the SM drains between slices (the
+///   occupancy ramp bubbles). Each slice is simulated separately.
+/// - **Kepler** (Hyper-Q era) pipelines back-to-back launches: the next
+///   slice's blocks start filling as the previous drains, so the drain
+///   bubbles vanish and only the (cheap) per-launch costs remain.
+pub fn simulate_solo_sliced(gpu: &GpuConfig, spec: &KernelSpec, slice_size: u32, seed: u64) -> SimResult {
+    assert!(slice_size >= 1);
+    let n_slices = spec.grid_blocks.div_ceil(slice_size) as f64;
+    match gpu.arch {
+        crate::config::Arch::Fermi => {
+            let mut remaining = spec.grid_blocks;
+            let mut agg = SimResult::default();
+            let mut slice_idx = 0u64;
+            while remaining > 0 {
+                let this = remaining.min(slice_size);
+                remaining -= this;
+                let blocks = blocks_on_sm(gpu, this);
+                let mut eng = SmEngine::new(gpu, seed ^ (0x51ce << 16) ^ slice_idx);
+                eng.add_workload(Workload::new(spec.clone(), blocks));
+                let r = eng.run();
+                agg.absorb(&r);
+                agg.cycles += gpu.launch_overhead_cycles;
+                slice_idx += 1;
+            }
+            agg
+        }
+        crate::config::Arch::Kepler => {
+            // Pipelined launches: blocks stream continuously; per-slice
+            // launch costs accumulate but the SM never drains.
+            let blocks = blocks_on_sm(gpu, spec.grid_blocks);
+            let mut eng = SmEngine::new(gpu, seed ^ (0x51ce << 16));
+            eng.add_workload(Workload::new(spec.clone(), blocks));
+            let mut r = eng.run();
+            r.cycles += gpu.launch_overhead_cycles * n_slices;
+            r
+        }
+    }
+}
+
+/// Result of co-running one slice pair to completion on the SM.
+#[derive(Debug, Clone)]
+pub struct PairResult {
+    /// Total cycles until both slices drained (includes one launch
+    /// overhead for the round — concurrent launches overlap in separate
+    /// streams, so the pair pays max(two launches) ~= one).
+    pub cycles: f64,
+    /// Per-kernel metrics, indexed like the input pair.
+    pub per_kernel: [KernelMetrics; 2],
+}
+
+impl PairResult {
+    /// Concurrent IPC of kernel `i` (instructions / total cycles).
+    pub fn cipc(&self, i: usize) -> f64 {
+        self.per_kernel[i].insts as f64 / self.cycles
+    }
+
+    /// Aggregate IPC over both kernels.
+    pub fn total_ipc(&self) -> f64 {
+        (self.per_kernel[0].insts + self.per_kernel[1].insts) as f64 / self.cycles
+    }
+}
+
+/// Simulate one co-schedule round: a slice of `s1` grid blocks from
+/// `k1` (at most `q1` blocks co-resident per SM) concurrently with a
+/// slice of `s2` blocks from `k2` (quota `q2`).
+///
+/// The quotas are the co-schedule's residency split (b1, b2): they pin
+/// each slice's occupancy share, which is the whole point of slice-size
+/// tuning in the paper. Feasibility of (q1, q2) is the caller's
+/// responsibility ([`crate::coordinator::coresident_feasible`]).
+pub fn simulate_pair(
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    s1: u32,
+    q1: u32,
+    k2: &KernelSpec,
+    s2: u32,
+    q2: u32,
+    seed: u64,
+) -> PairResult {
+    assert!(s1 >= 1 && s2 >= 1);
+    let mut eng = SmEngine::new(gpu, seed);
+    eng.add_workload(Workload::with_quota(k1.clone(), blocks_on_sm(gpu, s1), q1));
+    eng.add_workload(Workload::with_quota(k2.clone(), blocks_on_sm(gpu, s2), q2));
+    let res = eng.run();
+    PairResult {
+        cycles: res.cycles + gpu.launch_overhead_cycles,
+        per_kernel: [res.kernels[0].clone(), res.kernels[1].clone()],
+    }
+}
+
+/// Steady-state co-run estimate: repeat the slice pair `rounds` times
+/// with different seeds and aggregate (cheap variance reduction for the
+/// scheduler's OPT oracle and the figures).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pair_rounds(
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    s1: u32,
+    q1: u32,
+    k2: &KernelSpec,
+    s2: u32,
+    q2: u32,
+    rounds: u32,
+    seed: u64,
+) -> PairResult {
+    assert!(rounds >= 1);
+    let mut cycles = 0.0;
+    let mut agg = [KernelMetrics::default(), KernelMetrics::default()];
+    for r in 0..rounds {
+        let pr = simulate_pair(gpu, k1, s1, q1, k2, s2, q2, seed.wrapping_add(r as u64 * 0x9E37));
+        cycles += pr.cycles;
+        agg[0].absorb(&pr.per_kernel[0]);
+        agg[1].absorb(&pr.per_kernel[1]);
+    }
+    PairResult { cycles, per_kernel: agg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{BenchmarkApp, InstructionMix};
+
+    fn mini(mem_ratio: f64) -> KernelSpec {
+        KernelSpec {
+            name: "mini",
+            // Large enough that the one-off launch overhead (8600 cycles
+            // on C2050) is amortized below 2%, like real Table 3 grids.
+            grid_blocks: 1120,
+            threads_per_block: 256,
+            regs_per_thread: 20,
+            smem_per_block: 0,
+            inst_per_warp: 512,
+            mix: InstructionMix::coalesced(mem_ratio),
+            arith_latency: 20,
+            ilp: 2.0,
+        }
+    }
+
+    #[test]
+    fn solo_compute_bound_saturates_pipeline() {
+        let gpu = GpuConfig::c2050();
+        let r = simulate_solo(&gpu, &mini(0.0), 1);
+        // 48 warps of pure ALU with ilp 2 must keep IPC near peak (1.0).
+        assert!(r.ipc(&gpu) > 0.9, "ipc={}", r.ipc(&gpu));
+        assert!(r.pur(&gpu) > 0.9);
+        assert!(r.mur(&gpu) < 0.01);
+    }
+
+    #[test]
+    fn solo_memory_bound_is_slow() {
+        let gpu = GpuConfig::c2050();
+        let r = simulate_solo(&gpu, &mini(0.5), 1);
+        assert!(r.ipc(&gpu) < 0.3, "ipc={}", r.ipc(&gpu));
+        assert!(r.mur(&gpu) > 0.02, "mur={}", r.mur(&gpu));
+    }
+
+    #[test]
+    fn instruction_accounting_exact() {
+        let gpu = GpuConfig::c2050();
+        let spec = mini(0.1);
+        let r = simulate_solo(&gpu, &spec, 7);
+        let blocks = blocks_on_sm(&gpu, spec.grid_blocks);
+        let expect = blocks as u64 * spec.inst_per_block(&gpu);
+        assert_eq!(r.kernels[0].insts, expect);
+        assert_eq!(r.kernels[0].blocks_completed, blocks);
+    }
+
+    #[test]
+    fn sliced_never_faster_than_unsliced() {
+        let gpu = GpuConfig::c2050();
+        let spec = BenchmarkApp::MM.spec().with_grid(256);
+        let whole = simulate_solo(&gpu, &spec, 3);
+        let sliced = simulate_solo_sliced(&gpu, &spec, 14, 3);
+        assert!(
+            sliced.cycles > whole.cycles,
+            "sliced={} whole={}",
+            sliced.cycles,
+            whole.cycles
+        );
+        // Same total work regardless of slicing.
+        assert_eq!(sliced.kernels[0].insts, whole.kernels[0].insts);
+    }
+
+    #[test]
+    fn pair_conserves_work() {
+        let gpu = GpuConfig::c2050();
+        let (a, b) = (mini(0.0), mini(0.4));
+        let pr = simulate_pair(&gpu, &a, 28, 3, &b, 28, 3, 11);
+        let blocks = blocks_on_sm(&gpu, 28);
+        assert_eq!(pr.per_kernel[0].insts, blocks as u64 * a.inst_per_block(&gpu));
+        assert_eq!(pr.per_kernel[1].insts, blocks as u64 * b.inst_per_block(&gpu));
+        assert!(pr.total_ipc() > 0.0);
+    }
+
+    #[test]
+    fn complementary_pair_beats_serial() {
+        // A compute kernel co-run with a memory kernel should finish in
+        // less time than running the two slices back to back — the
+        // paper's core premise.
+        let gpu = GpuConfig::c2050();
+        let compute = mini(0.0);
+        let memory = mini(0.5);
+        let solo_c = simulate_solo(&gpu, &compute.with_grid(280), 5);
+        let solo_m = simulate_solo(&gpu, &memory.with_grid(280), 6);
+        let pair = simulate_pair(&gpu, &compute, 280, 3, &memory, 280, 3, 7);
+        let serial = solo_c.cycles + solo_m.cycles;
+        assert!(
+            pair.cycles < serial * 0.95,
+            "pair={} serial={}",
+            pair.cycles,
+            serial
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gpu = GpuConfig::gtx680();
+        let spec = mini(0.2);
+        let a = simulate_solo(&gpu, &spec, 42);
+        let b = simulate_solo(&gpu, &spec, 42);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.kernels[0].sectors, b.kernels[0].sectors);
+    }
+}

@@ -1,0 +1,127 @@
+//! Kernel slicer: minimum slice size under an overhead budget
+//! (paper §4.1).
+//!
+//! Slicing a kernel into n slices costs n kernel launches plus partial
+//! occupancy at each slice boundary. Kernelet "experimentally determines
+//! the suitable slice size to be the minimum slice so that the overhead
+//! is not greater than p% of the kernel execution time" (p = 2 by
+//! default). Candidate sizes are multiples of the SM count (the Fig. 6
+//! sweep), and the result is cached per kernel ("if the kernel has been
+//! submitted before, we simply use the smallest slice size in the
+//! previous execution").
+//!
+//! The code-level transform that makes a slice launchable — index
+//! rectification on PTX — lives in [`crate::ptx::rectify`]; this module
+//! only decides *sizes*.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::config::GpuConfig;
+use crate::kernel::KernelSpec;
+use crate::sim;
+
+/// Default overhead budget: 2% (paper §4.1).
+pub const DEFAULT_OVERHEAD_PCT: f64 = 2.0;
+
+/// Relative slicing overhead of executing `spec` in slices of
+/// `slice_size` blocks: `T_s / T_ns − 1` (the Fig. 6 y-axis).
+pub fn slicing_overhead(gpu: &GpuConfig, spec: &KernelSpec, slice_size: u32, seed: u64) -> f64 {
+    let whole = sim::simulate_solo(gpu, spec, seed);
+    let sliced = sim::simulate_solo_sliced(gpu, spec, slice_size, seed);
+    sliced.cycles / whole.cycles - 1.0
+}
+
+/// The Fig. 6 sweep: candidate slice sizes from |SM| up to the full
+/// residency footprint, in |SM| multiples.
+pub fn candidate_sizes(gpu: &GpuConfig, spec: &KernelSpec) -> Vec<u32> {
+    let max_mult = spec.blocks_per_sm(gpu).max(1) * 3; // up to 3 generations
+    (1..=max_mult).map(|m| m * gpu.num_sms).collect()
+}
+
+/// Find the minimum slice size whose overhead is within `budget_pct`.
+///
+/// Falls back to the whole grid if even the largest candidate exceeds
+/// the budget (degenerates to non-sliced execution, as the paper notes
+/// for the extreme).
+pub fn min_slice_size(gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64, seed: u64) -> u32 {
+    for size in candidate_sizes(gpu, spec) {
+        if size >= spec.grid_blocks {
+            break;
+        }
+        if slicing_overhead(gpu, spec, size, seed) * 100.0 <= budget_pct {
+            return size;
+        }
+    }
+    spec.grid_blocks
+}
+
+/// Cache of minimum slice sizes keyed by (gpu, kernel name).
+#[derive(Default)]
+pub struct SliceSizeCache {
+    map: Mutex<HashMap<(String, String), u32>>,
+}
+
+impl SliceSizeCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64) -> u32 {
+        let key = (gpu.name.to_string(), spec.name.to_string());
+        if let Some(&s) = self.map.lock().unwrap().get(&key) {
+            return s;
+        }
+        let s = min_slice_size(gpu, spec, budget_pct, sim::DEFAULT_SEED ^ 0x511CE);
+        self.map.lock().unwrap().insert(key, s);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn overhead_decreases_with_slice_size() {
+        let gpu = GpuConfig::c2050();
+        let spec = BenchmarkApp::MM.spec();
+        let small = slicing_overhead(&gpu, &spec, gpu.num_sms, 1);
+        let large = slicing_overhead(&gpu, &spec, gpu.num_sms * 8, 1);
+        assert!(small > large, "small={small} large={large}");
+        assert!(small > 0.0);
+    }
+
+    #[test]
+    fn min_slice_respects_budget() {
+        let gpu = GpuConfig::c2050();
+        let spec = BenchmarkApp::TEA.spec();
+        let s = min_slice_size(&gpu, &spec, 2.0, 1);
+        assert!(s >= gpu.num_sms);
+        assert!(s < spec.grid_blocks);
+        let ov = slicing_overhead(&gpu, &spec, s, 1);
+        assert!(ov * 100.0 <= 2.5, "overhead={}", ov * 100.0); // small seed noise margin
+    }
+
+    #[test]
+    fn kepler_allows_smaller_slices() {
+        // Fig. 6: GTX680's cheap launches make nearly all slice sizes
+        // viable; its minimum slice should be no larger (in SM
+        // generations) than C2050's.
+        let c = GpuConfig::c2050();
+        let g = GpuConfig::gtx680();
+        let spec = BenchmarkApp::BS.spec();
+        let sc = min_slice_size(&c, &spec, 2.0, 1) / c.num_sms;
+        let sg = min_slice_size(&g, &spec, 2.0, 1) / g.num_sms;
+        assert!(sg <= sc, "kepler={sg} gens, fermi={sc} gens");
+    }
+
+    #[test]
+    fn cache_returns_same() {
+        let gpu = GpuConfig::gtx680();
+        let cache = SliceSizeCache::new();
+        let spec = BenchmarkApp::ST.spec();
+        assert_eq!(cache.get(&gpu, &spec, 2.0), cache.get(&gpu, &spec, 2.0));
+    }
+}

@@ -1,0 +1,16 @@
+//! Statistical utilities used across Kernelet.
+//!
+//! Everything here is dependency-free and deterministic: the scheduler,
+//! the simulator and the benchmark harness all draw randomness from
+//! [`rng::Xoshiro256`] seeded explicitly, so every figure and table in the
+//! paper reproduction is bit-reproducible.
+
+pub mod cdf;
+pub mod regression;
+pub mod rng;
+pub mod summary;
+
+pub use cdf::Cdf;
+pub use regression::{linear_fit, pearson};
+pub use rng::Xoshiro256;
+pub use summary::Summary;

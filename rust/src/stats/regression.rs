@@ -1,0 +1,169 @@
+//! Correlation and linear regression.
+//!
+//! The paper uses a regression over profiler counters to identify PUR and
+//! MUR as the factors most correlated with co-scheduling profit (§4.3,
+//! Fig. 4); `pearson` and `linear_fit` regenerate that analysis.
+
+/// Pearson correlation coefficient between two equal-length series.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Ordinary least squares fit y = a + b*x. Returns (intercept, slope, r2).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    let slope = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let intercept = my - slope * mx;
+    // r^2 from residuals.
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let pred = intercept + slope * x;
+        ss_res += (y - pred) * (y - pred);
+        ss_tot += (y - my) * (y - my);
+    }
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    (intercept, slope, r2)
+}
+
+/// Multiple linear regression y = b0 + b.x via normal equations.
+///
+/// `xs` is row-major: one row of predictors per observation. Returns the
+/// coefficient vector [b0, b1, ..., bk]. Used by the pruning-factor
+/// analysis to rank profiler counters against CP.
+pub fn multi_linear_fit(xs: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let k = xs[0].len();
+    let n = xs.len();
+    assert!(n > k, "underdetermined system");
+    let dim = k + 1;
+    // Build X^T X and X^T y with an implicit leading 1 column.
+    let mut ata = vec![vec![0.0f64; dim]; dim];
+    let mut aty = vec![0.0f64; dim];
+    for (row, &y) in xs.iter().zip(ys) {
+        assert_eq!(row.len(), k);
+        let mut aug = Vec::with_capacity(dim);
+        aug.push(1.0);
+        aug.extend_from_slice(row);
+        for i in 0..dim {
+            for j in 0..dim {
+                ata[i][j] += aug[i] * aug[j];
+            }
+            aty[i] += aug[i] * y;
+        }
+    }
+    solve_dense(&mut ata, &mut aty);
+    aty
+}
+
+/// In-place Gaussian elimination with partial pivoting; solution left in b.
+fn solve_dense(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut pivot = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[pivot][col].abs() {
+                pivot = row;
+            }
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-12, "singular system");
+        for row in 0..n {
+            if row == col {
+                continue;
+            }
+            let f = a[row][col] / diag;
+            for j in col..n {
+                a[row][j] -= f * a[col][j];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    for i in 0..n {
+        b[i] /= a[i][i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_positive() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let ys = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_negative() {
+        let xs = vec![1.0, 2.0, 3.0];
+        let ys = vec![3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &ys) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        let xs = vec![1.0, 1.0, 1.0];
+        let ys = vec![1.0, 2.0, 3.0];
+        assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 1.5 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 1.5).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn multi_linear_recovers_coefficients() {
+        // y = 1 + 2*x1 - 3*x2 on a grid.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..5 {
+            for j in 0..5 {
+                let (x1, x2) = (i as f64, j as f64 * 0.5);
+                xs.push(vec![x1, x2]);
+                ys.push(1.0 + 2.0 * x1 - 3.0 * x2);
+            }
+        }
+        let c = multi_linear_fit(&xs, &ys);
+        assert!((c[0] - 1.0).abs() < 1e-8);
+        assert!((c[1] - 2.0).abs() < 1e-8);
+        assert!((c[2] + 3.0).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,165 @@
+//! Workload generation (paper §5.1, Table 5).
+//!
+//! Four kernel mixes — CI (compute-intensive), MI (memory-intensive),
+//! MIX and ALL — with Poisson arrivals, equal rates per application.
+//! The paper initiates 1000 instances of each kernel in the mix and
+//! submits them according to the Poisson process, with λ large enough
+//! that at least two kernels are always pending.
+
+use crate::kernel::{BenchmarkApp, KernelInstance};
+use crate::stats::Xoshiro256;
+
+/// The paper's four workload mixes (Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mix {
+    /// BS, MM, TEA, MRIQ.
+    CI,
+    /// PC, SPMV, ST, SAD.
+    MI,
+    /// PC, BS, TEA, SAD.
+    MIX,
+    /// All eight applications.
+    ALL,
+}
+
+impl Mix {
+    pub const ALL_MIXES: [Mix; 4] = [Mix::CI, Mix::MI, Mix::MIX, Mix::ALL];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mix::CI => "CI",
+            Mix::MI => "MI",
+            Mix::MIX => "MIX",
+            Mix::ALL => "ALL",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Mix> {
+        Self::ALL_MIXES.iter().copied().find(|m| m.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Applications in the mix (Table 5).
+    pub fn apps(&self) -> Vec<BenchmarkApp> {
+        use BenchmarkApp::*;
+        match self {
+            Mix::CI => vec![BS, MM, TEA, MRIQ],
+            Mix::MI => vec![PC, SPMV, ST, SAD],
+            Mix::MIX => vec![PC, BS, TEA, SAD],
+            Mix::ALL => vec![PC, SPMV, ST, BS, MM, TEA, MRIQ, SAD],
+        }
+    }
+}
+
+/// A generated submission stream: kernel instances sorted by arrival.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub instances: Vec<KernelInstance>,
+}
+
+impl Stream {
+    /// Generate `per_app` instances of every application in `mix`, with
+    /// exponential inter-arrival times of rate `lambda` (arrivals/sec)
+    /// per application, merged and sorted.
+    pub fn poisson(mix: Mix, per_app: u32, lambda: f64, seed: u64) -> Stream {
+        let mut rng = Xoshiro256::new(seed);
+        let mut instances = Vec::new();
+        let mut id = 0u64;
+        for app in mix.apps() {
+            let mut t = 0.0f64;
+            for _ in 0..per_app {
+                t += rng.exponential(lambda);
+                instances.push(KernelInstance::new(id, app.spec(), t));
+                id += 1;
+            }
+        }
+        instances.sort_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time));
+        Stream { instances }
+    }
+
+    /// All instances available at time zero (the paper's saturated-queue
+    /// assumption: λ high enough that ≥2 kernels are always pending).
+    pub fn saturated(mix: Mix, per_app: u32, seed: u64) -> Stream {
+        let mut rng = Xoshiro256::new(seed);
+        let mut instances = Vec::new();
+        let mut id = 0u64;
+        for app in mix.apps() {
+            for _ in 0..per_app {
+                instances.push(KernelInstance::new(id, app.spec(), 0.0));
+                id += 1;
+            }
+        }
+        // Shuffle so arrival order interleaves applications.
+        rng.shuffle(&mut instances);
+        Stream { instances }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Total thread blocks across the stream (the work-conservation
+    /// invariant the property tests check against schedules).
+    pub fn total_blocks(&self) -> u64 {
+        self.instances.iter().map(|k| k.spec.grid_blocks as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_match_table5() {
+        assert_eq!(Mix::CI.apps().len(), 4);
+        assert_eq!(Mix::MI.apps().len(), 4);
+        assert_eq!(Mix::MIX.apps().len(), 4);
+        assert_eq!(Mix::ALL.apps().len(), 8);
+        assert!(Mix::CI.apps().contains(&BenchmarkApp::MRIQ));
+        assert!(Mix::MI.apps().contains(&BenchmarkApp::PC));
+        assert!(Mix::MIX.apps().contains(&BenchmarkApp::TEA));
+    }
+
+    #[test]
+    fn poisson_stream_sorted_and_complete() {
+        let s = Stream::poisson(Mix::MIX, 50, 100.0, 7);
+        assert_eq!(s.len(), 200);
+        for w in s.instances.windows(2) {
+            assert!(w[0].arrival_time <= w[1].arrival_time);
+        }
+        // Unique ids.
+        let mut ids: Vec<_> = s.instances.iter().map(|k| k.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 200);
+    }
+
+    #[test]
+    fn poisson_interarrival_mean() {
+        let s = Stream::poisson(Mix::CI, 2000, 10.0, 11);
+        // Per-app rate 10/s, 4 apps -> merged rate 40/s; last arrival
+        // around 2000/10 = 200s.
+        let last = s.instances.last().unwrap().arrival_time;
+        assert!((last - 200.0).abs() < 20.0, "last={last}");
+    }
+
+    #[test]
+    fn saturated_all_at_zero() {
+        let s = Stream::saturated(Mix::ALL, 10, 3);
+        assert_eq!(s.len(), 80);
+        assert!(s.instances.iter().all(|k| k.arrival_time == 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Stream::poisson(Mix::MI, 20, 50.0, 42);
+        let b = Stream::poisson(Mix::MI, 20, 50.0, 42);
+        for (x, y) in a.instances.iter().zip(&b.instances) {
+            assert_eq!(x.arrival_time, y.arrival_time);
+            assert_eq!(x.spec.name, y.spec.name);
+        }
+    }
+}

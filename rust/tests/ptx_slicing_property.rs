@@ -1,0 +1,143 @@
+//! Property tests for the PTX slicing transform: for every sample
+//! kernel and RANDOM slice partitions / launch geometries, sliced
+//! execution through the interpreter is bit-identical to the original
+//! launch (the paper's §4.1 safety claim under the §2.2
+//! block-independence assumption).
+
+use kernelet::ptx::interp::{Args, LaunchConfig};
+use kernelet::ptx::{launch, parse_kernel, rectify, samples, Machine, RectifyOptions};
+use kernelet::stats::Xoshiro256;
+
+/// Random contiguous partition of `total` into slices of 1..=max_slice.
+fn random_partition(rng: &mut Xoshiro256, total: u32, max_slice: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut left = total;
+    while left > 0 {
+        let s = (1 + rng.below(max_slice as u64) as u32).min(left);
+        out.push(s);
+        left -= s;
+    }
+    out
+}
+
+fn init_machine(rng: &mut Xoshiro256, threads: usize) -> Machine {
+    let mut m = Machine::new(64 * 1024);
+    let idx: Vec<u32> = {
+        // A random permutation keeps gather targets in range.
+        let mut v: Vec<u32> = (0..threads as u32).collect();
+        rng.shuffle(&mut v);
+        v
+    };
+    m.write_u32s(0, &idx);
+    let fdata: Vec<f32> = (0..threads).map(|_| rng.range_f64(-4.0, 4.0) as f32).collect();
+    m.write_f32s(16 * 1024, &fdata);
+    let fdata2: Vec<f32> = (0..threads).map(|_| rng.range_f64(-4.0, 4.0) as f32).collect();
+    m.write_f32s(32 * 1024, &fdata2);
+    m
+}
+
+fn args_for(name: &str, grid: (u32, u32), block: (u32, u32), threads: usize) -> Args {
+    match name {
+        "matrix_add" => vec![16 * 1024, 32 * 1024, (grid.0 * block.0) as u64],
+        "saxpy" => vec![16 * 1024, 32 * 1024, (1.5f32).to_bits() as u64, threads as u64],
+        "gather" => vec![0, 16 * 1024, 32 * 1024],
+        "mix_rounds" => vec![0, 5],
+        other => panic!("unknown sample {other}"),
+    }
+}
+
+#[test]
+fn sliced_equals_whole_for_random_partitions() {
+    let mut rng = Xoshiro256::new(0x9A9A);
+    for (name, src) in samples::all() {
+        let kernel = parse_kernel(src).unwrap();
+        let is_2d = name == "matrix_add";
+        let opts = if is_2d { RectifyOptions::two_d() } else { RectifyOptions::one_d() };
+        let sliced = rectify(&kernel, &opts);
+        for trial in 0..6 {
+            let (grid, block): ((u32, u32), (u32, u32)) = if is_2d {
+                let g = 2 + rng.below(4) as u32;
+                ((g, g), (8, 8))
+            } else {
+                ((2 + rng.below(14) as u32, 1), (16, 1))
+            };
+            let threads = (grid.0 * grid.1 * block.0 * block.1) as usize;
+            let args = args_for(name, grid, block, threads);
+            let init = init_machine(&mut rng, threads);
+
+            let mut whole = init.clone();
+            launch(&kernel, LaunchConfig { grid, block }, &args, &mut whole)
+                .unwrap_or_else(|e| panic!("{name} trial {trial}: {e}"));
+
+            let total_blocks = grid.0 * grid.1;
+            let parts = random_partition(&mut rng, total_blocks, 5);
+            let mut slicedm = init.clone();
+            let mut next = 0u32;
+            for part in parts {
+                let mut sargs = args.clone();
+                if is_2d {
+                    sargs.extend([
+                        (next % grid.0) as u64,
+                        grid.0 as u64,
+                        (next / grid.0) as u64,
+                        grid.1 as u64,
+                    ]);
+                } else {
+                    sargs.extend([next as u64, grid.0 as u64]);
+                }
+                launch(&sliced, LaunchConfig { grid: (part, 1), block }, &sargs, &mut slicedm)
+                    .unwrap_or_else(|e| panic!("{name} trial {trial}: {e}"));
+                next += part;
+            }
+            assert_eq!(next, total_blocks);
+            assert_eq!(
+                whole.memory, slicedm.memory,
+                "{name} trial {trial}: sliced run diverged"
+            );
+        }
+    }
+}
+
+/// Rectified kernels survive an emit -> parse -> emit round trip (the
+/// "hand the PTX back to the driver" path).
+#[test]
+fn rectified_text_roundtrip_stable() {
+    for (name, src) in samples::all() {
+        let k = parse_kernel(src).unwrap();
+        for opts in [RectifyOptions::one_d(), RectifyOptions::two_d()] {
+            let s1 = rectify(&k, &opts);
+            let t1 = kernelet::ptx::emit::emit(&s1);
+            let s2 = parse_kernel(&t1).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let t2 = kernelet::ptx::emit::emit(&s2);
+            assert_eq!(t1, t2, "{name}: emit not a fixed point");
+        }
+    }
+}
+
+/// The wrap-around loop normalizes out-of-range x offsets into y
+/// (Fig. 3c): launching the 2-D kernel with a linear offset past the
+/// end of a row must land on the right (x, y) block.
+#[test]
+fn two_d_wraparound_correct() {
+    let kernel = parse_kernel(samples::MATRIX_ADD).unwrap();
+    let sliced = rectify(&kernel, &RectifyOptions::two_d());
+    let (grid, block) = ((4u32, 4u32), (8u32, 8u32));
+    let width = grid.0 * block.0;
+    let total = (width * width) as usize;
+    let mut rng = Xoshiro256::new(3);
+    let init = init_machine(&mut rng, total);
+    let args = args_for("matrix_add", grid, block, total);
+
+    let mut whole = init.clone();
+    launch(&kernel, LaunchConfig { grid, block }, &args, &mut whole).unwrap();
+
+    // One slice per block, but pass the offset UN-normalized: x = k,
+    // y = 0 for all 16 blocks. The kernel's wrap loop must fix it.
+    let mut slicedm = init.clone();
+    for k in 0..grid.0 * grid.1 {
+        let mut sargs = args.clone();
+        sargs.extend([k as u64, grid.0 as u64, 0u64, grid.1 as u64]);
+        launch(&sliced, LaunchConfig { grid: (1, 1), block }, &sargs, &mut slicedm).unwrap();
+    }
+    assert_eq!(whole.memory, slicedm.memory, "wrap-around normalization broken");
+}

@@ -1,0 +1,98 @@
+//! Integration tests over the real PJRT path: load AOT artifacts,
+//! execute sliced, verify against the full-grid run, and check the
+//! markov artifact against the native model solver.
+//!
+//! These tests skip (pass vacuously, with a note) when `make artifacts`
+//! has not run — cargo test must stay green from a bare checkout.
+
+use kernelet::model::chain::Transition;
+use kernelet::runtime::{artifacts_available, ArtifactRegistry, SlicedRunner};
+
+fn registry() -> Option<ArtifactRegistry> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactRegistry::open_default().expect("open registry"))
+}
+
+#[test]
+fn platform_is_cpu() {
+    let Some(reg) = registry() else { return };
+    assert!(reg.platform().to_lowercase().contains("host") || reg.platform().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn manifest_lists_all_eight_kernels() {
+    let Some(reg) = registry() else { return };
+    let names = reg.manifest().kernels();
+    for k in ["bs", "mm", "mriq", "pc", "sad", "spmv", "st", "tea"] {
+        assert!(names.iter().any(|n| n == k), "missing {k} in {names:?}");
+    }
+}
+
+#[test]
+fn every_kernel_sliced_equals_full() {
+    let Some(reg) = registry() else { return };
+    let runner = SlicedRunner::new(&reg);
+    for kernel in reg.manifest().kernels() {
+        let inputs = runner.example_inputs(&kernel, 42).expect("inputs");
+        // Partitions exercising every AOT variant: 8 = 4+4 = 4+2+2.
+        for slices in [vec![8u32], vec![4, 4], vec![4, 2, 2], vec![2, 2, 2, 2]] {
+            runner
+                .run_verified(&kernel, &inputs, &slices)
+                .unwrap_or_else(|e| panic!("{kernel} {slices:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn slice_offsets_select_distinct_regions() {
+    let Some(reg) = registry() else { return };
+    let runner = SlicedRunner::new(&reg);
+    let inputs = runner.example_inputs("mm", 7).unwrap();
+    let full = runner.run_full("mm", &inputs).unwrap();
+    let half1 = runner.run_sliced("mm", &inputs, &[4, 4]).unwrap();
+    assert_eq!(full, half1);
+}
+
+#[test]
+fn markov_artifact_agrees_with_native_solver() {
+    let Some(reg) = registry() else { return };
+    // A random ergodic 12-state chain.
+    let n = 12;
+    let mut rng = kernelet::stats::Xoshiro256::new(2024);
+    let mut p = vec![vec![0f64; n]; n];
+    for row in p.iter_mut() {
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = rng.f64() + 0.02;
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    // Native power iteration.
+    let mut t = Transition::new(n);
+    for i in 0..n {
+        t.row_mut(i).copy_from_slice(&p[i]);
+    }
+    let native = kernelet::model::steady_state_power(&t, 1e-12, 100_000);
+    // PJRT artifact.
+    let pjrt = kernelet::runtime::dispatch::steady_state_pjrt(&reg, &p).expect("pjrt steady");
+    for (a, b) in native.iter().zip(&pjrt) {
+        assert!((a - b).abs() < 5e-4, "native={a} pjrt={b}");
+    }
+}
+
+#[test]
+fn executables_are_cached() {
+    let Some(reg) = registry() else { return };
+    let runner = SlicedRunner::new(&reg);
+    let inputs = runner.example_inputs("sad", 1).unwrap();
+    runner.run_sliced("sad", &inputs, &[4, 4]).unwrap();
+    let after_first = reg.compiled_count();
+    runner.run_sliced("sad", &inputs, &[4, 4]).unwrap();
+    assert_eq!(reg.compiled_count(), after_first, "recompiled on second run");
+}

@@ -1,0 +1,197 @@
+//! Property-based invariant tests over the scheduling stack.
+//!
+//! proptest is unavailable offline, so properties are checked over
+//! randomized cases drawn from the library's own deterministic RNG —
+//! every failure is reproducible from the printed seed.
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::baselines::{run_base, run_opt};
+use kernelet::coordinator::{coresident_feasible, feasible_splits, run_kernelet, Coordinator};
+use kernelet::kernel::{BenchmarkApp, InstructionMix, KernelInstance, KernelSpec};
+use kernelet::model::chain::{steady_state_dense, steady_state_power};
+use kernelet::model::homo::build_homo_chain;
+use kernelet::model::params::{ChainParams, Granularity, SmEnv};
+use kernelet::stats::Xoshiro256;
+use kernelet::workload::{Mix, Stream};
+
+fn random_spec(rng: &mut Xoshiro256, id: u32) -> KernelSpec {
+    let threads = *rng.choose(&[32u32, 64, 128, 256, 512]);
+    KernelSpec {
+        name: Box::leak(format!("RND{id}").into_boxed_str()),
+        grid_blocks: 28 + rng.below(200) as u32,
+        threads_per_block: threads,
+        regs_per_thread: 16 + rng.below(32) as u32,
+        smem_per_block: *rng.choose(&[0u32, 4096, 8192, 16384]),
+        inst_per_warp: 64 + rng.below(2048) as u32,
+        mix: InstructionMix {
+            mem_ratio: rng.range_f64(0.0, 0.5),
+            uncoalesced_frac: if rng.chance(0.3) { rng.f64() } else { 0.0 },
+            uncoalesced_fanout: 1 + rng.below(31) as u32,
+        },
+        arith_latency: 10 + rng.below(40) as u32,
+        ilp: rng.range_f64(0.4, 2.5),
+    }
+}
+
+/// PROPERTY: every policy executes every thread block of every kernel
+/// exactly once — total instructions are conserved, kernels all finish.
+#[test]
+fn work_conservation_across_policies() {
+    for seed in [1u64, 7, 42] {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 3, seed);
+        for (name, rep) in [
+            ("base", run_base(&coord, &stream)),
+            ("kernelet", run_kernelet(&coord, &stream)),
+            ("opt", run_opt(&coord, &stream)),
+        ] {
+            assert_eq!(rep.kernels_completed, stream.len(), "{name} seed={seed}");
+            // Every instance has a completion time after its arrival.
+            for k in &stream.instances {
+                let done = rep.completion.get(&k.id).unwrap_or_else(|| {
+                    panic!("{name} seed={seed}: kernel {} never completed", k.id)
+                });
+                assert!(*done >= k.arrival_time, "{name} seed={seed}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: schedules are deterministic given the stream.
+#[test]
+fn scheduling_deterministic() {
+    let coord = Coordinator::new(&GpuConfig::gtx680());
+    let stream = Stream::saturated(Mix::ALL, 2, 99);
+    let a = run_kernelet(&coord, &stream);
+    let b = run_kernelet(&coord, &stream);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.coschedule_rounds, b.coschedule_rounds);
+}
+
+/// PROPERTY: OPT (oracle pre-execution) never loses to Kernelet by more
+/// than launch-overhead noise, and both never lose to BASE by more than
+/// noise (the greedy fallback runs solo == BASE when nothing profits).
+#[test]
+fn policy_ordering() {
+    for (gpu, seed) in [(GpuConfig::c2050(), 5u64), (GpuConfig::gtx680(), 6)] {
+        let coord = Coordinator::new(&gpu);
+        let stream = Stream::saturated(Mix::ALL, 4, seed);
+        let base = run_base(&coord, &stream).total_secs;
+        let ours = run_kernelet(&coord, &stream).total_secs;
+        let opt = run_opt(&coord, &stream).total_secs;
+        assert!(opt <= ours * 1.05, "{}: opt={opt} kernelet={ours}", gpu.name);
+        assert!(ours <= base * 1.05, "{}: kernelet={ours} base={base}", gpu.name);
+    }
+}
+
+/// PROPERTY: feasible splits are exactly the co-resident-feasible grid
+/// points, for random kernel pairs.
+#[test]
+fn split_enumeration_sound_and_complete() {
+    let mut rng = Xoshiro256::new(0xFEA51B1E);
+    let gpu = GpuConfig::c2050();
+    for case in 0..20 {
+        let a = random_spec(&mut rng, case * 2);
+        let b = random_spec(&mut rng, case * 2 + 1);
+        let splits = feasible_splits(&gpu, &a, &b);
+        for &(b1, b2) in &splits {
+            assert!(coresident_feasible(&gpu, &a, b1, &b, b2), "case {case}");
+        }
+        // Completeness over the quota grid.
+        let mut count = 0;
+        for b1 in 1..=a.blocks_per_sm(&gpu) {
+            for b2 in 1..=b.blocks_per_sm(&gpu) {
+                if coresident_feasible(&gpu, &a, b1, &b, b2) {
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, splits.len(), "case {case}");
+    }
+}
+
+/// PROPERTY: for random kernels the homogeneous chain is stochastic and
+/// its two steady-state solvers agree.
+#[test]
+fn chain_invariants_random_kernels() {
+    let mut rng = Xoshiro256::new(0xC4A1A);
+    let gpu = GpuConfig::c2050();
+    let env = SmEnv::virtual_sm(&gpu);
+    for case in 0..25 {
+        let spec = random_spec(&mut rng, 1000 + case);
+        let blocks = spec.blocks_per_sm(&gpu);
+        let p = ChainParams::from_kernel(&gpu, &spec, blocks, Granularity::Block, env.vsm_count);
+        let chain = build_homo_chain(&p, &env);
+        chain.validate(1e-8);
+        let a = steady_state_power(&chain, 1e-12, 50_000);
+        let b = steady_state_dense(&chain);
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-8, "case {case}: sum={sum}");
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6, "case {case}: power={x} dense={y}");
+        }
+    }
+}
+
+/// PROPERTY: simulator work accounting is exact for random kernels.
+#[test]
+fn simulator_work_accounting_random() {
+    let mut rng = Xoshiro256::new(0x51111);
+    let gpu = GpuConfig::gtx680();
+    for case in 0..15 {
+        let spec = random_spec(&mut rng, 2000 + case);
+        let r = kernelet::sim::simulate_solo(&gpu, &spec, case as u64);
+        let blocks = kernelet::sim::blocks_on_sm(&gpu, spec.grid_blocks);
+        assert_eq!(r.kernels[0].blocks_completed, blocks, "case {case}");
+        assert_eq!(
+            r.kernels[0].insts,
+            blocks as u64 * spec.inst_per_block(&gpu),
+            "case {case}"
+        );
+        assert!(r.ipc(&gpu) <= gpu.peak_ipc() + 1e-9, "case {case}: ipc={}", r.ipc(&gpu));
+    }
+}
+
+/// PROPERTY: co-run of a pair conserves both kernels' work and neither
+/// kernel's cIPC exceeds the GPU peak.
+#[test]
+fn pair_simulation_invariants_random() {
+    let mut rng = Xoshiro256::new(0xAB2E11);
+    let gpu = GpuConfig::c2050();
+    for case in 0..10 {
+        let a = random_spec(&mut rng, 3000 + case);
+        let b = random_spec(&mut rng, 3100 + case);
+        let splits = feasible_splits(&gpu, &a, &b);
+        if splits.is_empty() {
+            continue;
+        }
+        let &(q1, q2) = rng.choose(&splits);
+        let (s1, s2) = (q1 * gpu.num_sms, q2 * gpu.num_sms);
+        let pr = kernelet::sim::simulate_pair(&gpu, &a, s1, q1, &b, s2, q2, case as u64);
+        let b1 = kernelet::sim::blocks_on_sm(&gpu, s1);
+        let b2 = kernelet::sim::blocks_on_sm(&gpu, s2);
+        assert_eq!(pr.per_kernel[0].insts, b1 as u64 * a.inst_per_block(&gpu));
+        assert_eq!(pr.per_kernel[1].insts, b2 as u64 * b.inst_per_block(&gpu));
+        assert!(pr.total_ipc() <= gpu.peak_ipc() + 1e-9);
+    }
+}
+
+/// PROPERTY: take_slice covers each kernel's grid exactly once for
+/// arbitrary slice-size sequences.
+#[test]
+fn slicing_partitions_grid() {
+    let mut rng = Xoshiro256::new(0x5111CE);
+    for case in 0..50 {
+        let spec = BenchmarkApp::ALL[case % 8].spec().with_grid(97 + (case as u32 * 13) % 300);
+        let mut inst = KernelInstance::new(case as u64, spec.clone(), 0.0);
+        let mut seen = vec![false; spec.grid_blocks as usize];
+        while !inst.is_finished() {
+            let size = 1 + rng.below(60) as u32;
+            for blk in inst.take_slice(size) {
+                assert!(!seen[blk as usize], "case {case}: block {blk} twice");
+                seen[blk as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: blocks missed");
+    }
+}
