@@ -18,7 +18,10 @@
 //!    verified bit-identical against the unsliced run;
 //! 3. latency/throughput are reported for both planes (simulated GPU
 //!    seconds, host wall-clock), and the scheduling gain over BASE
-//!    consolidation is printed.
+//!    consolidation is printed;
+//! 4. finally the two planes are fused: the scheduling engine re-runs
+//!    with the PJRT `TimingBackend`, so the same dispatch loop is timed
+//!    by real kernel executions instead of the simulator.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -26,9 +29,9 @@ use std::time::Instant;
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::run_base;
-use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::coordinator::{run_kernelet, Coordinator, Engine, KerneletSelector};
 use kernelet::kernel::BenchmarkApp;
-use kernelet::runtime::{artifacts_available, ArtifactRegistry, SlicedRunner};
+use kernelet::runtime::{artifacts_available, ArtifactRegistry, PjrtBackend, SlicedRunner};
 use kernelet::stats::Summary;
 use kernelet::workload::{Mix, Stream};
 
@@ -96,5 +99,24 @@ fn main() {
         ours.coschedule_rounds,
         ours.mean_turnaround_secs,
     );
+    // ---- Unified plane: the same engine, timed by real executions. ----
+    // The PJRT backend feeds measured wall-clock (as cycles) into the
+    // identical dispatch loop; kernels without AOT artifacts fall back
+    // to the simulator cache.
+    let timing = PjrtBackend::new(&reg, &gpu, &coord.simcache);
+    let small = Stream::saturated(Mix::ALL, 1, 0xE2E);
+    let rep = Engine::new(&coord).with_timing(&timing).run(&mut KerneletSelector, &small);
+    assert_eq!(rep.kernels_completed, small.len());
+    println!(
+        "\nengine on the PJRT timing backend ({} kernel instances):\n\
+         \u{20}  {} co-schedule rounds + {} solo slices, utilization {:.0}%, \
+         peak queue depth {}",
+        small.len(),
+        rep.coschedule_rounds,
+        rep.solo_slices,
+        rep.utilization * 100.0,
+        rep.peak_queue_depth(),
+    );
+
     println!("\nE2E OK — all three layers composed (L3 rust scheduling, L2 XLA graphs, L1 Pallas kernels).");
 }

@@ -1,13 +1,18 @@
 //! End-to-end scheduling benchmarks: paper Figs. 13 and 14, plus the
-//! scheduler-throughput microbenches the §Perf pass tracks.
+//! engine hot-path microbenches the §Perf pass tracks.
 //!
 //! Run: `cargo bench --bench scheduling`
-//! Environment: `KERNELET_INSTANCES` overrides instances/app (default
-//! 200 here; the paper uses 1000 — see EXPERIMENTS.md for a full run).
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 200 here;
+//!   the paper uses 1000 — see EXPERIMENTS.md for a full run).
+//! - `KERNELET_BENCH_OUT` overrides the JSON output path (default
+//!   `BENCH_scheduling.json` in the working directory) so CI can record
+//!   the perf trajectory.
 
-use kernelet::bench::{bench, once};
+use kernelet::bench::{bench, once, BenchResult};
 use kernelet::config::GpuConfig;
-use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::coordinator::baselines::run_base;
+use kernelet::coordinator::{run_kernelet, Coordinator, Engine, FifoSelector, KerneletSelector};
 use kernelet::figures::{generate, FigOptions};
 use kernelet::workload::{Mix, Stream};
 
@@ -18,12 +23,25 @@ fn main() {
         .unwrap_or(200);
     let opts = FigOptions { instances_per_app: instances, mc_samples: 200, ..Default::default() };
 
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // The figure regenerations are the only workloads `instances`
+    // scales, so record their timings too — otherwise the JSON's
+    // instances_per_app field would describe nothing in it.
     for id in ["fig13", "fig14"] {
-        let (rep, _) = once(&format!("generate::{id}"), || generate(id, &opts).unwrap());
+        let (rep, dt) = once(&format!("generate::{id}"), || generate(id, &opts).unwrap());
         println!("{}", rep.render());
+        results.push(BenchResult {
+            name: format!("generate::{id}"),
+            iters: 1,
+            mean: dt,
+            min: dt,
+            max: dt,
+        });
     }
 
-    // Scheduler hot-path microbenches (§Perf targets).
+    // Scheduler hot-path microbenches (§Perf targets), all through the
+    // unified engine.
     let gpu = GpuConfig::c2050();
     let coord = Coordinator::new(&gpu);
     let stream = Stream::saturated(Mix::ALL, 4, 7);
@@ -31,16 +49,50 @@ fn main() {
     run_kernelet(&coord, &stream);
 
     let refs: Vec<&kernelet::kernel::KernelInstance> = stream.instances.iter().collect();
-    bench("find_coschedule::all_8_apps_warm", 3, 50, || {
+    results.push(bench("find_coschedule::all_8_apps_warm", 3, 50, || {
         kernelet::bench::black_box(coord.find_coschedule(&refs));
-    });
+    }));
 
-    bench("run_kernelet::ALLx4_warm_cache", 1, 10, || {
-        kernelet::bench::black_box(run_kernelet(&coord, &stream));
-    });
+    results.push(bench("engine::kernelet::ALLx4_warm_cache", 1, 10, || {
+        kernelet::bench::black_box(Engine::new(&coord).run(&mut KerneletSelector, &stream));
+    }));
+
+    results.push(bench("engine::fifo::ALLx4_warm_cache", 1, 10, || {
+        kernelet::bench::black_box(Engine::new(&coord).run(&mut FifoSelector, &stream));
+    }));
 
     let big = Stream::saturated(Mix::ALL, 100, 11);
-    bench("run_kernelet::ALLx100_warm_cache", 1, 3, || {
+    run_base(&coord, &big); // warm the whole-grid solo entries too
+    results.push(bench("engine::kernelet::ALLx100_warm_cache", 1, 3, || {
         kernelet::bench::black_box(run_kernelet(&coord, &big));
-    });
+    }));
+
+    let arrivals = Stream::poisson(Mix::ALL, 25, 2000.0, 3);
+    results.push(bench("engine::kernelet::poisson_ALLx25", 1, 5, || {
+        kernelet::bench::black_box(run_kernelet(&coord, &arrivals));
+    }));
+
+    // Record the perf trajectory for CI.
+    let json = format!(
+        "{{\"bench\":\"scheduling\",\"instances_per_app\":{},\"results\":[{}]}}\n",
+        instances,
+        results
+            .iter()
+            .map(|b| format!(
+                "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"min_ns\":{},\"max_ns\":{}}}",
+                b.name,
+                b.iters,
+                b.mean.as_nanos(),
+                b.min.as_nanos(),
+                b.max.as_nanos()
+            ))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let out = std::env::var("KERNELET_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_scheduling.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

@@ -1,83 +1,100 @@
-//! Baseline scheduling policies (paper §5.1 "Comparisons").
+//! Baseline scheduling policies (paper §5.1 "Comparisons"), as
+//! [`Selector`] implementations over the shared [`Engine`].
 //!
 //! - **BASE** — kernel consolidation (Ravi et al. [34]): kernels launch
-//!   whole, in arrival order. For Table-3-sized grids every kernel
-//!   saturates the GPU, so concurrent execution "almost degrades to
-//!   sequential execution" (paper §1); the only sharing is the tail
-//!   overlap the hardware dispatcher gives, which the simulator measures
-//!   per consecutive kernel pair.
-//! - **OPT** — the offline oracle: the same greedy loop as Kernelet,
-//!   but every pair + slice-ratio candidate is *pre-executed* on the
-//!   hardware (simulator) instead of being predicted by the model.
-//! - **MC(s)** — Monte-Carlo co-scheduling: `s` random schedule plans
-//!   (random pair, random feasible split, random slice multiple); the
-//!   distribution of their total times is Fig. 14.
+//!   whole, in arrival order ([`super::engine::FifoSelector`]). For
+//!   Table-3-sized grids every kernel saturates the GPU, so concurrent
+//!   execution "almost degrades to sequential execution" (paper §1).
+//! - **OPT** — the offline oracle ([`OptSelector`]): the same greedy
+//!   loop as Kernelet, but every pair + slice-ratio candidate is
+//!   *pre-executed* on the hardware (simulator) instead of being
+//!   predicted by the model.
+//! - **MC(s)** — Monte-Carlo co-scheduling ([`RandomSelector`]): `s`
+//!   random schedule plans (random pair, random feasible split, random
+//!   slice multiple); the distribution of their total times is Fig. 14.
 
-use std::collections::HashMap;
-
+use super::engine::{Decision, Engine, FifoSelector, Selector};
 use super::greedy::Coordinator;
 use super::{feasible_splits, ExecutionReport};
 use crate::kernel::{KernelInstance, KernelSpec};
+use crate::stats::rng::split_seed;
 use crate::stats::Xoshiro256;
 use crate::workload::Stream;
 
 /// BASE: whole-kernel consolidation in arrival order.
 pub fn run_base(coord: &Coordinator, stream: &Stream) -> ExecutionReport {
-    let gpu = coord.gpu.clone();
-    let mut clock_cycles = 0.0f64;
-    let mut completion = HashMap::new();
-    for k in &stream.instances {
-        let arrival_cycles = k.arrival_time * gpu.clock_hz();
-        if arrival_cycles > clock_cycles {
-            clock_cycles = arrival_cycles;
-        }
-        clock_cycles += coord.simcache.solo_full(&k.spec);
-        completion.insert(k.id, gpu.cycles_to_secs(clock_cycles));
-    }
-    finalize(&gpu, stream, clock_cycles, completion, 0, stream.len() as u64)
+    Engine::new(coord).run(&mut FifoSelector, stream)
 }
 
 /// OPT: greedy scheduling with measured (pre-executed) CP instead of
-/// the model. Uses the same executor loop as Kernelet but swaps the
-/// pair-selection criterion.
+/// the model. Same engine as Kernelet; only the selection criterion
+/// differs.
 pub fn run_opt(coord: &Coordinator, stream: &Stream) -> ExecutionReport {
-    run_with_selector(coord, stream, &mut |coord, pending| select_opt(coord, pending))
+    Engine::new(coord).run(&mut OptSelector, stream)
 }
 
-/// MC(s): `s` random schedules; returns each one's total seconds
-/// (the Fig. 14 sample).
+/// MC(s): `s` random schedules; returns each one's total seconds (the
+/// Fig. 14 sample). Per-plan RNG streams are decorrelated through
+/// [`split_seed`] so the samples are independent.
 pub fn run_monte_carlo(coord: &Coordinator, stream: &Stream, s: u32, seed: u64) -> Vec<f64> {
     (0..s)
         .map(|i| {
-            let mut rng = Xoshiro256::new(seed.wrapping_add(i as u64 * 0x5DEECE66D));
-            let r = run_with_selector(coord, stream, &mut |coord, pending| {
-                select_random(coord, pending, &mut rng)
-            });
-            r.total_secs
+            let mut sel = RandomSelector::new(split_seed(seed, i as u64));
+            Engine::new(coord).run(&mut sel, stream).total_secs
         })
         .collect()
-}
-
-/// A co-schedule decision produced by a selector.
-struct Decision {
-    k1: u64,
-    k2: u64,
-    b1: u32,
-    b2: u32,
-    size1: u32,
-    size2: u32,
 }
 
 /// OPT's selector: pre-execute every un-pruned pair at every feasible
 /// split, measure CP, take the best (memoized through the SimCache so
 /// the "pre-execution" cost is paid once per pair).
-fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
+pub struct OptSelector;
+
+impl Selector for OptSelector {
+    fn name(&self) -> &'static str {
+        "opt"
+    }
+
+    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
+        select_opt(coord, pending)
+    }
+}
+
+/// MC's selector: a uniformly random pair at a uniformly random
+/// feasible split with random slice multiples.
+pub struct RandomSelector {
+    rng: Xoshiro256,
+}
+
+impl RandomSelector {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed) }
+    }
+}
+
+impl Selector for RandomSelector {
+    fn name(&self) -> &'static str {
+        "mc"
+    }
+
+    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
+        select_random(coord, pending, &mut self.rng)
+    }
+}
+
+/// Earliest instance of each distinct application in the pending set.
+fn distinct_apps<'q>(pending: &[&'q KernelInstance]) -> Vec<&'q KernelInstance> {
     let mut apps: Vec<&KernelInstance> = Vec::new();
     for inst in pending {
         if !apps.iter().any(|k| k.spec.name == inst.spec.name) {
             apps.push(inst);
         }
     }
+    apps
+}
+
+fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
+    let apps = distinct_apps(pending);
     if apps.len() < 2 {
         return None;
     }
@@ -108,7 +125,19 @@ fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decisi
                         m.cipc[1].max(1e-6),
                         coord.min_slice(&kj.spec),
                     );
-                    best = Some((cp, Decision { k1: ki.id, k2: kj.id, b1, b2, size1: z1, size2: z2 }));
+                    best = Some((
+                        cp,
+                        Decision {
+                            k1: ki.id,
+                            k2: kj.id,
+                            b1,
+                            b2,
+                            size1: z1,
+                            size2: z2,
+                            cipc: m.cipc,
+                            cp,
+                        },
+                    ));
                 }
             }
         }
@@ -116,18 +145,12 @@ fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decisi
     best.map(|(_, d)| d)
 }
 
-/// Random selector for MC.
 fn select_random(
     coord: &Coordinator,
     pending: &[&KernelInstance],
     rng: &mut Xoshiro256,
 ) -> Option<Decision> {
-    let mut apps: Vec<&KernelInstance> = Vec::new();
-    for inst in pending {
-        if !apps.iter().any(|k| k.spec.name == inst.spec.name) {
-            apps.push(inst);
-        }
-    }
+    let apps = distinct_apps(pending);
     if apps.len() < 2 {
         return None;
     }
@@ -152,133 +175,13 @@ fn select_random(
         b2,
         size1: b1 * coord.gpu.num_sms * m1,
         size2: b2 * coord.gpu.num_sms * m2,
+        cipc: [0.0, 0.0],
+        cp: 0.0,
     })
 }
 
 fn measured_solo_ipc(coord: &Coordinator, spec: &KernelSpec) -> f64 {
     coord.profile(spec).ipc
-}
-
-/// Shared executor skeleton for OPT and MC (Kernelet itself lives in
-/// [`super::executor`] and uses the model-driven coordinator).
-fn run_with_selector(
-    coord: &Coordinator,
-    stream: &Stream,
-    select: &mut dyn FnMut(&Coordinator, &[&KernelInstance]) -> Option<Decision>,
-) -> ExecutionReport {
-    let gpu = coord.gpu.clone();
-    let mut queue: Vec<KernelInstance> = Vec::new();
-    let mut upcoming = stream.instances.clone();
-    upcoming.reverse();
-    let mut clock_cycles = 0.0f64;
-    let mut completion = HashMap::new();
-    let mut rounds = 0u64;
-    let mut solo_slices = 0u64;
-    let secs = |c: f64| gpu.cycles_to_secs(c);
-
-    loop {
-        while upcoming.last().map_or(false, |k| k.arrival_time <= secs(clock_cycles)) {
-            queue.push(upcoming.pop().unwrap());
-        }
-        if queue.is_empty() {
-            match upcoming.last() {
-                Some(k) => {
-                    clock_cycles = k.arrival_time * gpu.clock_hz();
-                    continue;
-                }
-                None => break,
-            }
-        }
-        let refs: Vec<&KernelInstance> = queue.iter().collect();
-        match select(coord, &refs) {
-            Some(d) => {
-                let i1 = queue.iter().position(|k| k.id == d.k1).unwrap();
-                let i2 = queue.iter().position(|k| k.id == d.k2).unwrap();
-                loop {
-                    let (lo, hi) = if i1 < i2 { (i1, i2) } else { (i2, i1) };
-                    let (a, b) = queue.split_at_mut(hi);
-                    let (ka, kb) = (&mut a[lo], &mut b[0]);
-                    let (k1, k2) = if i1 < i2 { (ka, kb) } else { (kb, ka) };
-                    let r1 = k1.take_slice(d.size1.min(k1.remaining_blocks().max(1)));
-                    let r2 = k2.take_slice(d.size2.min(k2.remaining_blocks().max(1)));
-                    let (n1, n2) = (r1.end - r1.start, r2.end - r2.start);
-                    let spec1 = queue[i1].spec.clone();
-                    let spec2 = queue[i2].spec.clone();
-                    let m = coord.simcache.pair(&spec1, n1, d.b1, &spec2, n2, d.b2);
-                    clock_cycles += m.cycles;
-                    rounds += 1;
-                    let t = secs(clock_cycles);
-                    if queue[i1].is_finished() {
-                        completion.insert(queue[i1].id, t);
-                    }
-                    if queue[i2].is_finished() {
-                        completion.insert(queue[i2].id, t);
-                    }
-                    let drained = queue[i1].is_finished() || queue[i2].is_finished();
-                    let arrival = upcoming.last().map_or(false, |k| k.arrival_time <= t);
-                    if drained || arrival {
-                        break;
-                    }
-                }
-                queue.retain(|k| !k.is_finished());
-            }
-            None => {
-                let head = queue
-                    .iter_mut()
-                    .min_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time))
-                    .unwrap();
-                // With nothing left to arrive, chunking buys no future
-                // co-scheduling opportunity — run the whole residual in
-                // one launch (solo == BASE). Otherwise keep chunks at a
-                // quarter of the original grid so an arrival can still
-                // pair with the residual.
-                let slice = if upcoming.is_empty() {
-                    head.remaining_blocks()
-                } else {
-                    coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
-                };
-                let r = head.take_slice(slice.min(head.remaining_blocks().max(1)));
-                let n = r.end - r.start;
-                let spec = head.spec.clone();
-                let id = head.id;
-                let fin = head.is_finished();
-                clock_cycles += coord.simcache.solo_cycles(&spec, n);
-                solo_slices += 1;
-                if fin {
-                    completion.insert(id, secs(clock_cycles));
-                }
-                queue.retain(|k| !k.is_finished());
-            }
-        }
-    }
-    finalize(&gpu, stream, clock_cycles, completion, rounds, solo_slices)
-}
-
-fn finalize(
-    gpu: &crate::config::GpuConfig,
-    stream: &Stream,
-    clock_cycles: f64,
-    completion: HashMap<u64, f64>,
-    rounds: u64,
-    solo_slices: u64,
-) -> ExecutionReport {
-    let mut turn = 0.0;
-    for k in &stream.instances {
-        if let Some(&done) = completion.get(&k.id) {
-            turn += done - k.arrival_time;
-        }
-    }
-    let total_secs = gpu.cycles_to_secs(clock_cycles);
-    ExecutionReport {
-        total_cycles: clock_cycles,
-        total_secs,
-        kernels_completed: completion.len(),
-        coschedule_rounds: rounds,
-        solo_slices,
-        mean_turnaround_secs: turn / stream.len().max(1) as f64,
-        throughput_kps: completion.len() as f64 / total_secs.max(1e-12),
-        completion,
-    }
 }
 
 #[cfg(test)]
@@ -334,5 +237,14 @@ mod tests {
         let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = samples.iter().cloned().fold(0.0f64, f64::max);
         assert!(max >= min);
+    }
+
+    #[test]
+    fn mc_deterministic_given_seed() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 1, 3);
+        let a = run_monte_carlo(&coord, &stream, 3, 41);
+        let b = run_monte_carlo(&coord, &stream, 3, 41);
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,666 @@
+//! The event-driven scheduling engine every policy runs on.
+//!
+//! The paper's contribution is a *runtime* (Fig. 2, Algorithm 1): a
+//! clock, a pending queue fed by the arrival process, and a dispatch
+//! loop that keeps asking a policy for the next co-schedule (or solo
+//! slice) and advances the clock by the measured slice time. The seed
+//! implemented that loop four times — Kernelet, BASE, OPT and MC each
+//! had a bespoke copy. This module is the single copy they all share,
+//! split along the two axes the duplicates differed on:
+//!
+//! - [`Selector`] — *which work runs next*: Kernelet's model-driven
+//!   greedy pick ([`KerneletSelector`]), the measured oracle
+//!   (`baselines::OptSelector`), Monte-Carlo random plans
+//!   (`baselines::RandomSelector`), or plain consolidation
+//!   ([`FifoSelector`]).
+//! - [`TimingBackend`] — *how long it takes*: the cycle-level simulator
+//!   via [`super::SimCache`] (default), or real PJRT slice executions
+//!   via `runtime::PjrtBackend`.
+//!
+//! The engine is a stepping state machine ([`Engine::submit`] /
+//! [`Engine::run_until`] / [`Engine::drain`]) so drivers can interleave
+//! admission with execution — the multi-GPU dispatcher routes arrivals
+//! *online* by consulting live engine load between steps — while
+//! [`Engine::run`] is the one-shot convenience that replays a whole
+//! [`Stream`]. Tracing goes through a pluggable [`Observer`]; the
+//! `KERNELET_TRACE` environment variable is read once at construction,
+//! never in the dispatch hot path.
+
+use std::collections::HashMap;
+
+use super::greedy::{CoSchedule, Coordinator};
+use super::simcache::SimCache;
+use crate::kernel::{KernelInstance, KernelSpec};
+use crate::workload::Stream;
+
+/// A co-schedule decision produced by a [`Selector`]: the paper's
+/// `<K1, K2, size1, size2>` tuple plus the residency split behind it.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Instance ids of the chosen kernels.
+    pub k1: u64,
+    pub k2: u64,
+    /// Per-SM resident blocks for each kernel.
+    pub b1: u32,
+    pub b2: u32,
+    /// Slice sizes in grid blocks.
+    pub size1: u32,
+    pub size2: u32,
+    /// Concurrent IPCs the selector expects (model or measurement);
+    /// informational, surfaced through the trace observer.
+    pub cipc: [f64; 2],
+    /// Co-scheduling profit the selector expects; informational.
+    pub cp: f64,
+}
+
+impl From<CoSchedule> for Decision {
+    fn from(cs: CoSchedule) -> Self {
+        Decision {
+            k1: cs.k1,
+            k2: cs.k2,
+            b1: cs.b1,
+            b2: cs.b2,
+            size1: cs.size1,
+            size2: cs.size2,
+            cipc: cs.cipc,
+            cp: cs.cp,
+        }
+    }
+}
+
+/// A scheduling policy: picks what the engine dispatches next.
+pub trait Selector {
+    /// Policy name (reports, traces).
+    fn name(&self) -> &'static str;
+
+    /// Pick a co-schedule from the pending set, or `None` to run the
+    /// head kernel solo.
+    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision>;
+
+    /// Blocks to dispatch when the head kernel runs solo. The default
+    /// keeps chunks at a quarter of the original grid while arrivals
+    /// are still expected — so a newcomer can co-schedule with the
+    /// residual — and runs the whole residual once the stream is dry
+    /// (solo == BASE; chunking would buy nothing but launch overhead).
+    fn solo_slice(&mut self, coord: &Coordinator, head: &KernelInstance, more_arrivals: bool) -> u32 {
+        if more_arrivals {
+            coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
+        } else {
+            head.remaining_blocks()
+        }
+    }
+}
+
+/// The paper's policy (Algorithm 1): greedy co-scheduling by
+/// model-predicted profit, balanced slice ratio (Eq. 8).
+pub struct KerneletSelector;
+
+impl Selector for KerneletSelector {
+    fn name(&self) -> &'static str {
+        "kernelet"
+    }
+
+    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
+        coord.find_coschedule(pending).map(Decision::from)
+    }
+}
+
+/// BASE — kernel consolidation (Ravi et al. [34]): kernels launch
+/// whole, in arrival order, never sliced and never paired.
+pub struct FifoSelector;
+
+impl Selector for FifoSelector {
+    fn name(&self) -> &'static str {
+        "base"
+    }
+
+    fn select(&mut self, _coord: &Coordinator, _pending: &[&KernelInstance]) -> Option<Decision> {
+        None
+    }
+
+    fn solo_slice(&mut self, _coord: &Coordinator, head: &KernelInstance, _more: bool) -> u32 {
+        head.remaining_blocks()
+    }
+}
+
+/// Measured duration of a co-scheduled slice pair.
+#[derive(Debug, Clone, Copy)]
+pub struct PairTiming {
+    /// Cycles until both slices drain.
+    pub cycles: f64,
+    /// Per-kernel concurrent IPCs over the round.
+    pub cipc: [f64; 2],
+    /// Aggregate IPC of the round.
+    pub total_ipc: f64,
+}
+
+/// Where slice durations come from: the simulator today, real PJRT
+/// executions through `runtime::PjrtBackend`, hardware counters
+/// tomorrow. The engine is agnostic.
+pub trait TimingBackend {
+    /// Backend name (reports, traces).
+    fn backend_name(&self) -> &'static str;
+
+    /// Cycles to run `blocks` blocks of `spec` solo (including launch
+    /// overhead).
+    fn time_solo(&self, spec: &KernelSpec, blocks: u32) -> f64;
+
+    /// Measured co-run of an (s1, s2)-block slice pair at per-SM
+    /// residency quotas (q1, q2).
+    fn time_pair(
+        &self,
+        k1: &KernelSpec,
+        s1: u32,
+        q1: u32,
+        k2: &KernelSpec,
+        s2: u32,
+        q2: u32,
+    ) -> PairTiming;
+}
+
+impl TimingBackend for SimCache {
+    fn backend_name(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn time_solo(&self, spec: &KernelSpec, blocks: u32) -> f64 {
+        self.solo_cycles(spec, blocks)
+    }
+
+    fn time_pair(
+        &self,
+        k1: &KernelSpec,
+        s1: u32,
+        q1: u32,
+        k2: &KernelSpec,
+        s2: u32,
+        q2: u32,
+    ) -> PairTiming {
+        let m = self.pair(k1, s1, q1, k2, s2, q2);
+        PairTiming { cycles: m.cycles, cipc: m.cipc, total_ipc: m.total_ipc }
+    }
+}
+
+/// One dispatched slice (pair round or solo) in the execution trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SliceRecord {
+    pub start_cycles: f64,
+    pub end_cycles: f64,
+    /// Primary kernel: (instance id implicit in `k1`), blocks dispatched.
+    pub k1: u64,
+    pub blocks1: u32,
+    /// Partner slice when the round was co-scheduled.
+    pub k2: Option<(u64, u32)>,
+}
+
+/// Engine events for tracing/telemetry. All methods default to no-ops;
+/// implement what you care about.
+pub trait Observer {
+    /// A co-schedule was selected for dispatch.
+    fn coschedule(&mut self, _k1: &str, _k2: &str, _d: &Decision) {}
+    /// A slice round finished at `end_secs`.
+    fn slice(&mut self, _rec: &SliceRecord, _end_secs: f64) {}
+    /// A kernel instance drained its grid at `t_secs`.
+    fn completed(&mut self, _id: u64, _t_secs: f64) {}
+}
+
+/// The `KERNELET_TRACE` observer: co-schedule selections to stderr
+/// (same line format the old inline `eprintln!` produced).
+pub struct StderrTrace;
+
+impl Observer for StderrTrace {
+    fn coschedule(&mut self, k1: &str, k2: &str, d: &Decision) {
+        // Selectors without a prediction (e.g. MC random plans) leave
+        // cp/cipc zeroed; don't print placeholder zeros as predictions.
+        if d.cp != 0.0 || d.cipc != [0.0, 0.0] {
+            eprintln!(
+                "coschedule {}x{} + {}x{} (b {}:{}, pred cp {:.3}, cipc {:.3}/{:.3})",
+                k1, d.size1, k2, d.size2, d.b1, d.b2, d.cp, d.cipc[0], d.cipc[1]
+            );
+        } else {
+            eprintln!("coschedule {}x{} + {}x{} (b {}:{})", k1, d.size1, k2, d.size2, d.b1, d.b2);
+        }
+    }
+}
+
+/// Outcome of running a stream to completion under some policy.
+#[derive(Debug, Clone)]
+pub struct ExecutionReport {
+    /// Total makespan in GPU cycles.
+    pub total_cycles: f64,
+    /// Total makespan in seconds on this GPU.
+    pub total_secs: f64,
+    /// Kernels completed.
+    pub kernels_completed: usize,
+    /// Kernels of the stream that never finished (0 on a full run; the
+    /// mean turnaround averages over *completed* kernels only).
+    pub incomplete: usize,
+    /// Co-schedule rounds dispatched.
+    pub coschedule_rounds: u64,
+    /// Solo slices dispatched (no partner available).
+    pub solo_slices: u64,
+    /// Per-instance completion times (seconds), by instance id.
+    pub completion: HashMap<u64, f64>,
+    /// Mean turnaround (completion − arrival) over completed kernels,
+    /// in seconds.
+    pub mean_turnaround_secs: f64,
+    /// Throughput in kernels per second.
+    pub throughput_kps: f64,
+    /// Fraction of the makespan the device was executing slices (the
+    /// remainder is idle time between arrivals).
+    pub utilization: f64,
+    /// Pending-queue depth sampled at every dispatch decision:
+    /// (clock seconds, kernels pending).
+    pub queue_depth: Vec<(f64, usize)>,
+    /// Per-round slice trace, in dispatch order.
+    pub slice_trace: Vec<SliceRecord>,
+}
+
+impl ExecutionReport {
+    /// Largest pending-queue depth seen at any dispatch decision.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.queue_depth.iter().map(|&(_, d)| d).max().unwrap_or(0)
+    }
+
+    /// Mean pending-queue depth over dispatch decisions.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth.is_empty() {
+            return 0.0;
+        }
+        self.queue_depth.iter().map(|&(_, d)| d as f64).sum::<f64>()
+            / self.queue_depth.len() as f64
+    }
+
+    /// Blocks dispatched per instance id (work-conservation checks).
+    pub fn blocks_dispatched(&self) -> HashMap<u64, u64> {
+        let mut out: HashMap<u64, u64> = HashMap::new();
+        for rec in &self.slice_trace {
+            *out.entry(rec.k1).or_default() += rec.blocks1 as u64;
+            if let Some((id2, n2)) = rec.k2 {
+                *out.entry(id2).or_default() += n2 as u64;
+            }
+        }
+        out
+    }
+}
+
+/// The discrete-event scheduling engine: owns the clock, the pending
+/// queue, slice dispatch and completion bookkeeping for one device.
+pub struct Engine<'a> {
+    coord: &'a Coordinator,
+    timing: &'a dyn TimingBackend,
+    observer: Option<Box<dyn Observer + 'a>>,
+    clock_cycles: f64,
+    busy_cycles: f64,
+    queue: Vec<KernelInstance>,
+    completion: HashMap<u64, f64>,
+    rounds: u64,
+    solo_slices: u64,
+    slice_trace: Vec<SliceRecord>,
+    queue_depth: Vec<(f64, usize)>,
+}
+
+impl<'a> Engine<'a> {
+    /// A fresh engine timed by the coordinator's simulator cache.
+    /// `KERNELET_TRACE` is consulted once, here — not per dispatch.
+    pub fn new(coord: &'a Coordinator) -> Self {
+        let observer: Option<Box<dyn Observer + 'a>> =
+            if std::env::var_os("KERNELET_TRACE").is_some() {
+                Some(Box::new(StderrTrace))
+            } else {
+                None
+            };
+        Self {
+            coord,
+            timing: &coord.simcache,
+            observer,
+            clock_cycles: 0.0,
+            busy_cycles: 0.0,
+            queue: Vec::new(),
+            completion: HashMap::new(),
+            rounds: 0,
+            solo_slices: 0,
+            slice_trace: Vec::new(),
+            queue_depth: Vec::new(),
+        }
+    }
+
+    /// Swap the timing backend (e.g. `runtime::PjrtBackend`).
+    pub fn with_timing(mut self, timing: &'a dyn TimingBackend) -> Self {
+        self.timing = timing;
+        self
+    }
+
+    /// Install a trace observer (replaces any `KERNELET_TRACE` default).
+    pub fn with_observer(mut self, obs: Box<dyn Observer + 'a>) -> Self {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// Current clock in seconds.
+    pub fn clock_secs(&self) -> f64 {
+        self.secs(self.clock_cycles)
+    }
+
+    /// Kernels currently pending (live view, for load estimation).
+    pub fn pending(&self) -> &[KernelInstance] {
+        &self.queue
+    }
+
+    /// Kernels completed so far.
+    pub fn completed_count(&self) -> usize {
+        self.completion.len()
+    }
+
+    fn secs(&self, cycles: f64) -> f64 {
+        self.coord.gpu.cycles_to_secs(cycles)
+    }
+
+    /// Admit a kernel instance. If the device is idle the clock jumps
+    /// forward to the arrival (never backward).
+    pub fn submit(&mut self, k: KernelInstance) {
+        if self.queue.is_empty() {
+            let c = k.arrival_time * self.coord.gpu.clock_hz();
+            if c > self.clock_cycles {
+                self.clock_cycles = c;
+            }
+        }
+        self.queue.push(k);
+    }
+
+    /// Dispatch until the clock reaches `t_secs` (the next arrival) or
+    /// the queue drains. `more_arrivals` tells solo dispatch whether
+    /// chunking can still buy a future co-scheduling opportunity.
+    pub fn run_until(&mut self, selector: &mut dyn Selector, t_secs: f64, more_arrivals: bool) {
+        while !self.queue.is_empty() && self.secs(self.clock_cycles) < t_secs {
+            self.dispatch_once(&mut *selector, Some(t_secs), more_arrivals);
+        }
+    }
+
+    /// Dispatch until the queue is empty (no further arrivals).
+    pub fn drain(&mut self, selector: &mut dyn Selector) {
+        while !self.queue.is_empty() {
+            self.dispatch_once(&mut *selector, None, false);
+        }
+    }
+
+    /// Replay a whole stream: admit each arrival at its time, then
+    /// drain. Consumes the engine; one engine per run.
+    pub fn run(mut self, selector: &mut dyn Selector, stream: &Stream) -> ExecutionReport {
+        for k in stream.arrivals() {
+            self.run_until(&mut *selector, k.arrival_time, true);
+            self.submit(k);
+        }
+        self.drain(&mut *selector);
+        self.finish(stream)
+    }
+
+    /// Close out the run and produce the report (turnaround is computed
+    /// against the stream's arrival times).
+    pub fn finish(self, stream: &Stream) -> ExecutionReport {
+        let total_secs = self.secs(self.clock_cycles);
+        let mut turn = 0.0;
+        let mut completed_of_stream = 0usize;
+        for k in &stream.instances {
+            if let Some(&done) = self.completion.get(&k.id) {
+                turn += done - k.arrival_time;
+                completed_of_stream += 1;
+            }
+        }
+        ExecutionReport {
+            total_cycles: self.clock_cycles,
+            total_secs,
+            kernels_completed: self.completion.len(),
+            incomplete: stream.len().saturating_sub(completed_of_stream),
+            coschedule_rounds: self.rounds,
+            solo_slices: self.solo_slices,
+            mean_turnaround_secs: turn / completed_of_stream.max(1) as f64,
+            throughput_kps: self.completion.len() as f64 / total_secs.max(1e-12),
+            utilization: if self.clock_cycles > 0.0 {
+                self.busy_cycles / self.clock_cycles
+            } else {
+                0.0 // never dispatched anything
+            },
+            completion: self.completion,
+            queue_depth: self.queue_depth,
+            slice_trace: self.slice_trace,
+        }
+    }
+
+    /// One dispatch decision: ask the selector, run a co-schedule block
+    /// of rounds or a single solo slice.
+    fn dispatch_once(
+        &mut self,
+        selector: &mut dyn Selector,
+        next_arrival: Option<f64>,
+        more_arrivals: bool,
+    ) {
+        self.queue_depth.push((self.secs(self.clock_cycles), self.queue.len()));
+        let decision = {
+            let refs: Vec<&KernelInstance> = self.queue.iter().collect();
+            selector.select(self.coord, &refs)
+        };
+        match decision {
+            Some(d) => self.dispatch_pair(&d, next_arrival),
+            None => self.dispatch_solo(&mut *selector, more_arrivals),
+        }
+    }
+
+    /// Dispatch alternating balanced slices of a selected pair "while R
+    /// does not change, or K1 and K2 both still have thread blocks"
+    /// (Algorithm 1, line 8): rounds repeat until either kernel drains
+    /// or the next arrival becomes due.
+    fn dispatch_pair(&mut self, d: &Decision, next_arrival: Option<f64>) {
+        let i1 = self
+            .queue
+            .iter()
+            .position(|k| k.id == d.k1)
+            .expect("selector chose a kernel not in the pending queue");
+        let i2 = self
+            .queue
+            .iter()
+            .position(|k| k.id == d.k2)
+            .expect("selector chose a kernel not in the pending queue");
+        assert_ne!(i1, i2, "selector paired a kernel with itself");
+        if let Some(obs) = self.observer.as_deref_mut() {
+            obs.coschedule(self.queue[i1].spec.name, self.queue[i2].spec.name, d);
+        }
+        loop {
+            let r1 = {
+                let k = &mut self.queue[i1];
+                k.take_slice(d.size1.min(k.remaining_blocks().max(1)))
+            };
+            let r2 = {
+                let k = &mut self.queue[i2];
+                k.take_slice(d.size2.min(k.remaining_blocks().max(1)))
+            };
+            let (n1, n2) = (r1.end - r1.start, r2.end - r2.start);
+            let start_cycles = self.clock_cycles;
+            let m = self.timing.time_pair(
+                &self.queue[i1].spec,
+                n1,
+                d.b1,
+                &self.queue[i2].spec,
+                n2,
+                d.b2,
+            );
+            self.clock_cycles += m.cycles;
+            self.busy_cycles += m.cycles;
+            self.rounds += 1;
+            let t = self.secs(self.clock_cycles);
+            self.push_slice(
+                SliceRecord {
+                    start_cycles,
+                    end_cycles: self.clock_cycles,
+                    k1: self.queue[i1].id,
+                    blocks1: n1,
+                    k2: Some((self.queue[i2].id, n2)),
+                },
+                t,
+            );
+            if self.queue[i1].is_finished() {
+                self.complete(self.queue[i1].id, t);
+            }
+            if self.queue[i2].is_finished() {
+                self.complete(self.queue[i2].id, t);
+            }
+            let drained = self.queue[i1].is_finished() || self.queue[i2].is_finished();
+            let arrival_due = next_arrival.map_or(false, |ta| ta <= t);
+            if drained || arrival_due {
+                break;
+            }
+        }
+        self.queue.retain(|k| !k.is_finished());
+    }
+
+    /// Dispatch one solo slice of the head (earliest-arrival) kernel.
+    fn dispatch_solo(&mut self, selector: &mut dyn Selector, more_arrivals: bool) {
+        let head = self
+            .queue
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.arrival_time.total_cmp(&b.arrival_time))
+            .map(|(i, _)| i)
+            .expect("dispatch_solo on an empty queue");
+        let size = selector.solo_slice(self.coord, &self.queue[head], more_arrivals);
+        let (r, id, fin) = {
+            let k = &mut self.queue[head];
+            let r = k.take_slice(size.min(k.remaining_blocks().max(1)));
+            let id = k.id;
+            let fin = k.is_finished();
+            (r, id, fin)
+        };
+        let n = r.end - r.start;
+        let start_cycles = self.clock_cycles;
+        let cycles = self.timing.time_solo(&self.queue[head].spec, n);
+        self.clock_cycles += cycles;
+        self.busy_cycles += cycles;
+        self.solo_slices += 1;
+        let t = self.secs(self.clock_cycles);
+        self.push_slice(
+            SliceRecord {
+                start_cycles,
+                end_cycles: self.clock_cycles,
+                k1: id,
+                blocks1: n,
+                k2: None,
+            },
+            t,
+        );
+        if fin {
+            self.complete(id, t);
+        }
+        self.queue.retain(|k| !k.is_finished());
+    }
+
+    fn complete(&mut self, id: u64, t: f64) {
+        self.completion.insert(id, t);
+        if let Some(obs) = self.observer.as_deref_mut() {
+            obs.completed(id, t);
+        }
+    }
+
+    fn push_slice(&mut self, rec: SliceRecord, end_secs: f64) {
+        if let Some(obs) = self.observer.as_deref_mut() {
+            obs.slice(&rec, end_secs);
+        }
+        self.slice_trace.push(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::workload::{Mix, Stream};
+
+    #[test]
+    fn fifo_is_sequential_sum_of_solo_runs() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 1, 3);
+        let r = Engine::new(&coord).run(&mut FifoSelector, &stream);
+        assert_eq!(r.kernels_completed, stream.len());
+        assert_eq!(r.coschedule_rounds, 0);
+        assert_eq!(r.solo_slices as usize, stream.len());
+        let expect: f64 =
+            stream.instances.iter().map(|k| coord.simcache.solo_full(&k.spec)).sum();
+        assert!((r.total_cycles - expect).abs() < 1.0);
+        // Saturated stream: the device never idles.
+        assert!((r.utilization - 1.0).abs() < 1e-9, "util={}", r.utilization);
+    }
+
+    #[test]
+    fn report_trace_conserves_work() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 2, 5);
+        let r = Engine::new(&coord).run(&mut KerneletSelector, &stream);
+        assert_eq!(r.incomplete, 0);
+        let dispatched = r.blocks_dispatched();
+        for k in &stream.instances {
+            assert_eq!(
+                dispatched.get(&k.id).copied().unwrap_or(0),
+                k.spec.grid_blocks as u64,
+                "kernel {} blocks",
+                k.id
+            );
+        }
+        // Slice trace timestamps are contiguous and monotone.
+        for w in r.slice_trace.windows(2) {
+            assert!(w[0].end_cycles <= w[1].start_cycles + 1e-9);
+        }
+        assert!(!r.queue_depth.is_empty());
+        assert!(r.peak_queue_depth() <= stream.len());
+    }
+
+    #[test]
+    fn idle_gaps_lower_utilization() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let mut stream = Stream::saturated(Mix::CI, 1, 5);
+        stream.instances.truncate(2);
+        stream.instances[1].arrival_time = 1e3; // long idle gap
+        let r = Engine::new(&coord).run(&mut FifoSelector, &stream);
+        assert_eq!(r.kernels_completed, 2);
+        assert!(r.total_secs > 1e3);
+        assert!(r.utilization < 0.5, "util={}", r.utilization);
+        assert!(r.utilization > 0.0);
+    }
+
+    #[test]
+    fn observer_sees_every_completion() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        struct Count(Rc<RefCell<usize>>);
+        impl Observer for Count {
+            fn completed(&mut self, _id: u64, _t: f64) {
+                *self.0.borrow_mut() += 1;
+            }
+        }
+
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 1, 9);
+        let n = Rc::new(RefCell::new(0));
+        let r = Engine::new(&coord)
+            .with_observer(Box::new(Count(n.clone())))
+            .run(&mut KerneletSelector, &stream);
+        assert_eq!(*n.borrow(), r.kernels_completed);
+    }
+
+    #[test]
+    fn stepping_api_matches_one_shot_run() {
+        let coord = Coordinator::new(&GpuConfig::gtx680());
+        let stream = Stream::poisson(Mix::MIX, 3, 200.0, 17);
+        let one_shot = Engine::new(&coord).run(&mut KerneletSelector, &stream);
+        let mut engine = Engine::new(&coord);
+        let mut sel = KerneletSelector;
+        for k in stream.arrivals() {
+            engine.run_until(&mut sel, k.arrival_time, true);
+            engine.submit(k);
+        }
+        engine.drain(&mut sel);
+        let stepped = engine.finish(&stream);
+        assert_eq!(stepped.total_cycles, one_shot.total_cycles);
+        assert_eq!(stepped.completion, one_shot.completion);
+        assert_eq!(stepped.coschedule_rounds, one_shot.coschedule_rounds);
+    }
+}

@@ -1,178 +1,23 @@
-//! The Kernelet execution loop (paper Algorithm 1).
+//! The Kernelet policy adapter (paper Algorithm 1).
 //!
-//! Pulls kernels from the arrival stream into the pending queue, asks
-//! [`super::greedy::Coordinator::find_coschedule`] for the best pair,
-//! and dispatches alternating balanced slices of it. The co-schedule is
-//! re-used "while R does not change, or K1 and K2 both still have
-//! thread blocks"; a new arrival or a drained kernel triggers
-//! recomputation. When no pair is available (one application pending,
-//! or nothing feasible), the head kernel runs slices solo so arrivals
-//! can still preempt between slices.
+//! The dispatch loop itself lives in [`super::engine`]; this module is
+//! the policy entry point: pull kernels from the arrival stream, ask
+//! [`super::greedy::Coordinator::find_coschedule`] for the best pair
+//! via [`KerneletSelector`], dispatch alternating balanced slices. The
+//! co-schedule is re-used "while R does not change, or K1 and K2 both
+//! still have thread blocks"; a new arrival or a drained kernel
+//! triggers recomputation. When no pair is available the head kernel
+//! runs slices solo so arrivals can still preempt between slices.
 
-use std::collections::HashMap;
-
+use super::engine::{Engine, KerneletSelector};
 use super::greedy::Coordinator;
-use crate::kernel::KernelInstance;
 use crate::workload::Stream;
 
-/// Outcome of running a stream to completion under some policy.
-#[derive(Debug, Clone)]
-pub struct ExecutionReport {
-    /// Total makespan in GPU cycles.
-    pub total_cycles: f64,
-    /// Total makespan in seconds on this GPU.
-    pub total_secs: f64,
-    /// Kernels completed (must equal the stream length).
-    pub kernels_completed: usize,
-    /// Co-schedule rounds dispatched.
-    pub coschedule_rounds: u64,
-    /// Solo slices dispatched (no partner available).
-    pub solo_slices: u64,
-    /// Per-instance completion times (seconds), by instance id.
-    pub completion: HashMap<u64, f64>,
-    /// Mean turnaround (completion − arrival) in seconds.
-    pub mean_turnaround_secs: f64,
-    /// Throughput in kernels per second.
-    pub throughput_kps: f64,
-}
-
-impl ExecutionReport {
-    fn finalize(mut self, stream: &Stream) -> Self {
-        let mut turn = 0.0;
-        for k in &stream.instances {
-            if let Some(&done) = self.completion.get(&k.id) {
-                turn += done - k.arrival_time;
-            }
-        }
-        self.mean_turnaround_secs = turn / stream.len().max(1) as f64;
-        self.throughput_kps = self.kernels_completed as f64 / self.total_secs.max(1e-12);
-        self
-    }
-}
+pub use super::engine::ExecutionReport;
 
 /// Run a stream under the Kernelet policy.
 pub fn run_kernelet(coord: &Coordinator, stream: &Stream) -> ExecutionReport {
-    let gpu = coord.gpu.clone();
-    let mut queue: Vec<KernelInstance> = Vec::new();
-    let mut upcoming = stream.instances.clone();
-    upcoming.reverse(); // pop() yields earliest arrival
-    let mut clock_cycles = 0.0f64;
-    let mut completion = HashMap::new();
-    let mut rounds = 0u64;
-    let mut solo_slices = 0u64;
-
-    let secs = |c: f64| gpu.cycles_to_secs(c);
-
-    loop {
-        // Admit arrivals due by the current clock.
-        while upcoming.last().map_or(false, |k| k.arrival_time <= secs(clock_cycles)) {
-            queue.push(upcoming.pop().unwrap());
-        }
-        if queue.is_empty() {
-            match upcoming.last() {
-                Some(k) => {
-                    // Idle until the next arrival.
-                    clock_cycles = k.arrival_time * gpu.clock_hz();
-                    continue;
-                }
-                None => break,
-            }
-        }
-
-        let refs: Vec<&KernelInstance> = queue.iter().collect();
-        let cs = coord.find_coschedule(&refs);
-        match cs {
-            Some(cs) => {
-                let i1 = queue.iter().position(|k| k.id == cs.k1).unwrap();
-                let i2 = queue.iter().position(|k| k.id == cs.k2).unwrap();
-                if std::env::var_os("KERNELET_TRACE").is_some() {
-                    eprintln!(
-                        "coschedule {}x{} + {}x{} (b {}:{}, pred cp {:.3}, cipc {:.3}/{:.3})",
-                        queue[i1].spec.name, cs.size1, queue[i2].spec.name, cs.size2,
-                        cs.b1, cs.b2, cs.cp, cs.cipc[0], cs.cipc[1]
-                    );
-                }
-                // Dispatch rounds until either kernel drains or a new
-                // kernel arrives (Algorithm 1, line 8).
-                loop {
-                    let (r1, r2) = {
-                        let k1 = &mut queue[i1.min(i2)];
-                        let _ = k1; // split borrows below
-                        let (lo, hi) = if i1 < i2 { (i1, i2) } else { (i2, i1) };
-                        let (a, b) = queue.split_at_mut(hi);
-                        let (ka, kb) = (&mut a[lo], &mut b[0]);
-                        let (k1, k2) = if i1 < i2 { (ka, kb) } else { (kb, ka) };
-                        let r1 = k1.take_slice(cs.size1.min(k1.remaining_blocks().max(1)));
-                        let r2 = k2.take_slice(cs.size2.min(k2.remaining_blocks().max(1)));
-                        (r1, r2)
-                    };
-                    let n1 = r1.end - r1.start;
-                    let n2 = r2.end - r2.start;
-                    let spec1 = queue[i1].spec.clone();
-                    let spec2 = queue[i2].spec.clone();
-                    let m = coord.simcache.pair(&spec1, n1, cs.b1, &spec2, n2, cs.b2);
-                    clock_cycles += m.cycles;
-                    rounds += 1;
-                    let t = secs(clock_cycles);
-                    if queue[i1].is_finished() {
-                        completion.insert(queue[i1].id, t);
-                    }
-                    if queue[i2].is_finished() {
-                        completion.insert(queue[i2].id, t);
-                    }
-                    let drained = queue[i1].is_finished() || queue[i2].is_finished();
-                    let arrival = upcoming.last().map_or(false, |k| k.arrival_time <= t);
-                    if drained || arrival {
-                        break;
-                    }
-                }
-                queue.retain(|k| !k.is_finished());
-            }
-            None => {
-                // No partner: run a solo chunk of the head kernel. A
-                // quarter of the residual (at least one minimum slice)
-                // keeps launch overhead negligible while still letting
-                // a newly arriving kernel co-schedule with the rest.
-                let head = queue
-                    .iter_mut()
-                    .min_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time))
-                    .unwrap();
-                // With nothing left to arrive, chunking buys no future
-                // co-scheduling opportunity — run the whole residual in
-                // one launch (solo == BASE). Otherwise keep chunks at a
-                // quarter of the original grid so an arrival can still
-                // pair with the residual.
-                let slice = if upcoming.is_empty() {
-                    head.remaining_blocks()
-                } else {
-                    coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
-                };
-                let r = head.take_slice(slice.min(head.remaining_blocks().max(1)));
-                let n = r.end - r.start;
-                let spec = head.spec.clone();
-                let id = head.id;
-                let fin = head.is_finished();
-                clock_cycles += coord.simcache.solo_cycles(&spec, n);
-                solo_slices += 1;
-                if fin {
-                    completion.insert(id, secs(clock_cycles));
-                }
-                queue.retain(|k| !k.is_finished());
-            }
-        }
-    }
-
-    ExecutionReport {
-        total_cycles: clock_cycles,
-        total_secs: secs(clock_cycles),
-        kernels_completed: completion.len(),
-        coschedule_rounds: rounds,
-        solo_slices,
-        completion,
-        mean_turnaround_secs: 0.0,
-        throughput_kps: 0.0,
-    }
-    .finalize(stream)
+    Engine::new(coord).run(&mut KerneletSelector, stream)
 }
 
 #[cfg(test)]
@@ -187,6 +32,7 @@ mod tests {
         let stream = Stream::saturated(Mix::MIX, 2, 5);
         let r = run_kernelet(&coord, &stream);
         assert_eq!(r.kernels_completed, stream.len());
+        assert_eq!(r.incomplete, 0);
         assert!(r.total_secs > 0.0);
         assert!(r.coschedule_rounds > 0, "expected co-scheduling in MIX");
     }
@@ -213,6 +59,8 @@ mod tests {
         assert_eq!(r.kernels_completed, 2);
         assert_eq!(r.coschedule_rounds, 0);
         assert!(r.total_secs > 1e6);
+        // Almost the whole makespan is the idle wait for kernel 2.
+        assert!(r.utilization < 0.01, "util={}", r.utilization);
     }
 
     #[test]

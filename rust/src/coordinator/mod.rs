@@ -1,21 +1,41 @@
-//! The Kernelet coordinator: pending-kernel queue, candidate pruning,
-//! greedy co-schedule selection, and the execution loop (paper §3-4).
+//! The Kernelet coordinator (paper §3-4, Fig. 2): pending-kernel queue,
+//! candidate pruning, greedy co-schedule selection, and the *scheduling
+//! engine* every policy executes on.
 //!
-//! This is the paper's system contribution, in the shape of Fig. 2:
-//! submitted kernels are buffered in a queue; the slicer determines each
-//! kernel's minimum slice size; the scheduler picks the two pending
-//! kernels with the highest model-predicted co-scheduling profit and
-//! dispatches alternating balanced slices until either kernel drains or
-//! the queue changes (Algorithm 1).
+//! Architecture — one event-driven loop, two plug-in axes:
+//!
+//! ```text
+//!   arrivals ──► Engine (clock, pending queue, slice dispatch,
+//!               │        completion bookkeeping, trace observer)
+//!               ├─ Selector      .. which work runs next
+//!               │    KerneletSelector   model-driven greedy (Alg. 1)
+//!               │    OptSelector        measured oracle
+//!               │    RandomSelector     Monte-Carlo plans
+//!               │    FifoSelector       BASE consolidation
+//!               └─ TimingBackend  .. how long a slice takes
+//!                    SimCache            cycle-level simulator
+//!                    runtime::PjrtBackend real PJRT slice executions
+//! ```
+//!
+//! [`executor::run_kernelet`] and the [`baselines`] entry points are
+//! thin adapters binding a `Selector` to the engine; [`multigpu`] runs
+//! one engine per device and routes arrivals online off live engine
+//! load. There is no other clock-advancing dispatch loop in the crate.
 
 pub mod baselines;
+pub mod engine;
 pub mod executor;
 pub mod greedy;
 pub mod multigpu;
 pub mod pruning;
 pub mod simcache;
 
-pub use executor::{run_kernelet, ExecutionReport};
+pub use baselines::{run_base, run_monte_carlo, run_opt, OptSelector, RandomSelector};
+pub use engine::{
+    Decision, Engine, ExecutionReport, FifoSelector, KerneletSelector, Observer, PairTiming,
+    Selector, SliceRecord, StderrTrace, TimingBackend,
+};
+pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};
 pub use multigpu::{DispatchPolicy, MultiGpuDispatcher, MultiGpuReport};
 pub use pruning::{prune_pairs, PruneParams};

@@ -3,18 +3,22 @@
 //! individual GPU."
 //!
 //! A [`MultiGpuDispatcher`] owns one [`Coordinator`] per device and
-//! routes each arriving kernel instance to a device queue; each device
-//! then runs the ordinary Kernelet policy over its own queue. Two
-//! routing policies:
+//! routes arrivals *online*: every device runs its own scheduling
+//! [`Engine`] (Kernelet policy) and all engines share the one global
+//! arrival clock — before each arrival is routed, every engine advances
+//! to the arrival time, so routing observes *live* device state rather
+//! than a static pre-partition. Two routing policies:
 //!
 //! - [`DispatchPolicy::RoundRobin`] — oblivious, the baseline;
-//! - [`DispatchPolicy::LeastLoaded`] — route to the device with the
-//!   least outstanding work, estimating a kernel's cost on each device
-//!   from its cached solo measurement (devices may be heterogeneous:
-//!   a C2050 and a GTX680 disagree on every kernel's cost, and on
-//!   *which* kernels they are relatively good at).
+//! - [`DispatchPolicy::LeastLoaded`] — route to the device whose live
+//!   backlog (engine clock overrun past "now" plus the estimated cost
+//!   of every queued residual) plus the arriving kernel's estimated
+//!   cost is smallest. Cost estimates come from cached solo
+//!   measurements, so heterogeneous fleets (a C2050 and a GTX680
+//!   disagree on every kernel's cost, and on *which* kernels they are
+//!   relatively good at) are handled.
 
-use super::executor::run_kernelet;
+use super::engine::{Engine, ExecutionReport, KerneletSelector};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
 use crate::kernel::KernelInstance;
@@ -36,9 +40,12 @@ pub struct MultiGpuReport {
     pub per_device: Vec<(String, usize, f64)>,
     /// Aggregate throughput over the makespan.
     pub throughput_kps: f64,
+    /// Full per-device engine reports (slice traces, queue depth,
+    /// utilization), aligned with `per_device`.
+    pub reports: Vec<ExecutionReport>,
 }
 
-/// One coordinator per device plus the routing state.
+/// One coordinator (and so one engine) per device plus routing state.
 pub struct MultiGpuDispatcher {
     devices: Vec<Coordinator>,
     policy: DispatchPolicy,
@@ -61,56 +68,88 @@ impl MultiGpuDispatcher {
         coord.gpu.cycles_to_secs(coord.simcache.solo_full(&k.spec))
     }
 
-    /// Partition a stream over the devices according to the policy.
-    /// Returns one sub-stream per device (arrival order preserved).
-    pub fn route(&self, stream: &Stream) -> Vec<Stream> {
+    /// Live backlog of device `d` at global time `now`: how far its
+    /// engine clock has run past `now` plus the estimated cost of every
+    /// queued residual (scaled by the blocks still to dispatch).
+    fn live_load(&self, d: usize, engine: &Engine<'_>, now: f64) -> f64 {
+        let coord = &self.devices[d];
+        let overrun = (engine.clock_secs() - now).max(0.0);
+        let queued: f64 = engine
+            .pending()
+            .iter()
+            .map(|k| {
+                let full = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&k.spec));
+                full * f64::from(k.remaining_blocks()) / f64::from(k.spec.grid_blocks)
+            })
+            .sum();
+        overrun + queued
+    }
+
+    /// Route and run the stream online; every device schedules its
+    /// queue with the Kernelet policy through its own engine.
+    pub fn run(&self, stream: &Stream) -> MultiGpuReport {
         let n = self.devices.len();
-        let mut parts: Vec<Vec<KernelInstance>> = vec![Vec::new(); n];
-        let mut load = vec![0.0f64; n];
+        let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
+        let mut selectors: Vec<KerneletSelector> =
+            self.devices.iter().map(|_| KerneletSelector).collect();
+        let mut routed: Vec<Vec<KernelInstance>> = vec![Vec::new(); n];
+
         for (i, k) in stream.instances.iter().enumerate() {
+            let t = k.arrival_time;
+            // Advance every device to the arrival so routing sees live
+            // engine state, not the state at the previous arrival.
+            for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
+                engine.run_until(sel, t, true);
+            }
             let d = match self.policy {
                 DispatchPolicy::RoundRobin => i % n,
                 DispatchPolicy::LeastLoaded => {
-                    // Choose the device whose load after accepting this
-                    // kernel is smallest.
-                    (0..n)
-                        .min_by(|&a, &b| {
-                            let la = load[a] + self.est_cost(a, k);
-                            let lb = load[b] + self.est_cost(b, k);
-                            la.total_cmp(&lb)
-                        })
+                    // One load evaluation per device per arrival (the
+                    // per-queue sum is O(pending), too heavy to repeat
+                    // inside a pairwise comparator).
+                    let loads: Vec<f64> = (0..n)
+                        .map(|d| self.live_load(d, &engines[d], t) + self.est_cost(d, k))
+                        .collect();
+                    loads
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| a.total_cmp(b))
+                        .map(|(d, _)| d)
                         .unwrap()
                 }
             };
-            load[d] += self.est_cost(d, k);
-            parts[d].push(k.clone());
+            routed[d].push(k.clone());
+            engines[d].submit(k.clone());
         }
-        parts.into_iter().map(|instances| Stream { instances }).collect()
-    }
 
-    /// Route and run the stream; every device schedules its queue with
-    /// the Kernelet policy.
-    pub fn run(&self, stream: &Stream) -> MultiGpuReport {
-        let parts = self.route(stream);
         let mut per_device = Vec::new();
+        let mut reports = Vec::new();
         let mut makespan = 0.0f64;
         let mut completed = 0usize;
-        for (coord, part) in self.devices.iter().zip(&parts) {
-            if part.is_empty() {
-                per_device.push((coord.gpu.name.to_string(), 0, 0.0));
-                continue;
-            }
-            let rep = run_kernelet(coord, part);
-            assert_eq!(rep.kernels_completed, part.len(), "{} lost kernels", coord.gpu.name);
+        for (((engine, sel), coord), part) in engines
+            .into_iter()
+            .zip(selectors.iter_mut())
+            .zip(&self.devices)
+            .zip(routed.into_iter())
+        {
+            let count = part.len();
+            let mut engine = engine;
+            engine.drain(sel);
+            let rep = engine.finish(&Stream { instances: part });
+            assert_eq!(rep.kernels_completed, count, "{} lost kernels", coord.gpu.name);
             completed += rep.kernels_completed;
-            makespan = makespan.max(rep.total_secs);
-            per_device.push((coord.gpu.name.to_string(), part.len(), rep.total_secs));
+            if count > 0 {
+                makespan = makespan.max(rep.total_secs);
+            }
+            per_device.push((coord.gpu.name.to_string(), count, rep.total_secs));
+            reports.push(rep);
         }
         assert_eq!(completed, stream.len(), "dispatcher lost kernels");
         MultiGpuReport {
             makespan_secs: makespan,
             throughput_kps: completed as f64 / makespan.max(1e-12),
             per_device,
+            reports,
         }
     }
 }
@@ -127,15 +166,15 @@ mod tests {
             DispatchPolicy::RoundRobin,
         );
         let stream = Stream::saturated(Mix::MIX, 4, 7);
-        let parts = d.route(&stream);
-        assert_eq!(parts.len(), 2);
-        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let rep = d.run(&stream);
+        assert_eq!(rep.per_device.len(), 2);
+        let total: usize = rep.per_device.iter().map(|p| p.1).sum();
         assert_eq!(total, stream.len());
         // Round robin splits evenly.
-        assert_eq!(parts[0].len(), parts[1].len());
-        // No duplicated ids.
+        assert_eq!(rep.per_device[0].1, rep.per_device[1].1);
+        // No duplicated ids across devices.
         let mut ids: Vec<u64> =
-            parts.iter().flat_map(|p| p.instances.iter().map(|k| k.id)).collect();
+            rep.reports.iter().flat_map(|r| r.completion.keys().copied()).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), stream.len());
@@ -190,5 +229,22 @@ mod tests {
         stream.instances.truncate(2); // fewer kernels than devices
         let rep = d.run(&stream);
         assert_eq!(rep.per_device.iter().map(|d| d.1).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn online_least_loaded_uses_both_identical_devices() {
+        // Saturated queue on two identical devices: live-load routing
+        // must alternate (each arrival goes to the shorter backlog).
+        let gpus = [GpuConfig::c2050(), GpuConfig::c2050()];
+        let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::LeastLoaded);
+        let stream = Stream::saturated(Mix::MIX, 4, 23);
+        let rep = d.run(&stream);
+        let total: usize = rep.per_device.iter().map(|p| p.1).sum();
+        assert_eq!(total, stream.len());
+        assert!(rep.per_device.iter().all(|p| p.1 > 0), "{:?}", rep.per_device);
+        // Poisson arrivals route online without losing kernels either.
+        let arrivals = Stream::poisson(Mix::MIX, 4, 500.0, 29);
+        let rep = d.run(&arrivals);
+        assert_eq!(rep.per_device.iter().map(|p| p.1).sum::<usize>(), arrivals.len());
     }
 }

@@ -31,10 +31,11 @@ pub use report::Report;
 
 use anyhow::{bail, Result};
 
-/// All figure/table ids, in paper order.
-pub const ALL_IDS: [&str; 13] = [
+/// All figure/table ids, in paper order, plus repo-native telemetry
+/// reports (`qdepth`).
+pub const ALL_IDS: [&str; 14] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table6", "fig14",
+    "fig13", "table6", "fig14", "qdepth",
 ];
 
 /// Options shared by the generators.
@@ -78,6 +79,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "fig12" => validation::fig12(),
         "fig13" => scheduling::fig13(opts),
         "fig14" => scheduling::fig14(opts),
+        "qdepth" => scheduling::qdepth(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

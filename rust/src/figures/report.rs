@@ -87,10 +87,54 @@ impl Report {
         out
     }
 
+    /// Serialize as a JSON object (hand-rolled: serde is unavailable
+    /// offline). Cells are emitted as strings; consumers parse numerics
+    /// the same way [`Self::column_f64`] does.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let arr = |xs: &[String]| -> String {
+            let cells: Vec<String> = xs.iter().map(|c| format!("\"{}\"", esc(c))).collect();
+            format!("[{}]", cells.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        let notes: Vec<String> = self.notes.iter().map(|n| format!("\"{}\"", esc(n))).collect();
+        format!(
+            "{{\"id\":\"{}\",\"title\":\"{}\",\"columns\":{},\"rows\":[{}],\"notes\":[{}]}}",
+            esc(&self.id),
+            esc(&self.title),
+            arr(&self.columns),
+            rows.join(","),
+            notes.join(",")
+        )
+    }
+
     pub fn save_tsv(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.tsv", self.id));
         std::fs::write(&path, self.to_tsv()).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Serialize next to the TSV (machine-readable artifact for CI and
+    /// dashboards).
+    pub fn save_json(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.id));
+        std::fs::write(&path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))
     }
 }
 
@@ -134,6 +178,18 @@ mod tests {
     fn ragged_row_panics() {
         let mut r = Report::new("t", "T", &["a", "b"]);
         r.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn json_escapes_and_shapes() {
+        let mut r = Report::new("j", "Quote \" and tab\there", &["a"]);
+        r.row(vec!["x\\y".into()]);
+        r.note("line\nbreak");
+        let j = r.to_json();
+        assert!(j.starts_with("{\"id\":\"j\""));
+        assert!(j.contains("Quote \\\" and tab\\there"));
+        assert!(j.contains("x\\\\y"));
+        assert!(j.contains("line\\nbreak"));
     }
 
     #[test]

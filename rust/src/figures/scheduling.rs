@@ -21,6 +21,8 @@ pub fn fig13(opts: &super::FigOptions) -> Report {
             "opt_s",
             "kernelet_vs_base_pct",
             "opt_gap_pct",
+            "kernelet_util",
+            "peak_q",
         ],
     );
     for gpu in GpuConfig::all() {
@@ -46,6 +48,8 @@ pub fn fig13(opts: &super::FigOptions) -> Report {
                 f(opt.total_secs, 3),
                 f(improve, 1),
                 f(gap, 1),
+                f(ours.utilization, 3),
+                ours.peak_queue_depth().to_string(),
             ]);
         }
     }
@@ -87,10 +91,65 @@ pub fn fig14(opts: &super::FigOptions) -> Report {
     r
 }
 
+/// Engine telemetry (not a paper artifact): pending-queue depth over
+/// time and device utilization for BASE vs Kernelet on the ALL mix —
+/// the view a production serving deployment monitors, regenerated from
+/// the engine's enriched [`crate::coordinator::ExecutionReport`].
+pub fn qdepth(opts: &super::FigOptions) -> Report {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let stream = Stream::saturated(Mix::ALL, opts.instances_per_app, opts.seed ^ 0x5D);
+    let mut r = Report::new(
+        "qdepth",
+        "Pending-queue depth over time: BASE vs Kernelet (engine telemetry)",
+        &["policy", "t_s", "depth"],
+    );
+    for (name, rep) in [("base", run_base(&coord, &stream)), ("kernelet", run_kernelet(&coord, &stream))]
+    {
+        // Down-sample the timeline to ~64 rows per policy, always
+        // keeping the final sample so the drain tail stays visible.
+        let step = (rep.queue_depth.len() / 64).max(1);
+        let last = rep.queue_depth.len().saturating_sub(1);
+        for (i, &(t, depth)) in rep.queue_depth.iter().enumerate() {
+            if i % step == 0 || i == last {
+                r.row(vec![name.to_string(), f(t, 4), depth.to_string()]);
+            }
+        }
+        r.note(format!(
+            "{name}: utilization {:.3}, peak depth {}, mean depth {:.1}, incomplete {}",
+            rep.utilization,
+            rep.peak_queue_depth(),
+            rep.mean_queue_depth(),
+            rep.incomplete
+        ));
+    }
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::figures::FigOptions;
+
+    #[test]
+    fn qdepth_reports_both_policies_fully_drained() {
+        let t = qdepth(&FigOptions::quick());
+        assert!(!t.rows.is_empty());
+        assert_eq!(t.notes.len(), 2);
+        for note in &t.notes {
+            assert!(note.ends_with("incomplete 0"), "{note}");
+        }
+        // Both policies appear, and depths stay within the stream size.
+        let pol = t.col("policy");
+        let dep = t.col("depth");
+        for p in ["base", "kernelet"] {
+            assert!(t.rows.iter().any(|r| r[pol] == p), "missing {p}");
+        }
+        let total = 8 * FigOptions::quick().instances_per_app as usize;
+        for row in &t.rows {
+            assert!(row[dep].parse::<usize>().unwrap() <= total, "{row:?}");
+        }
+    }
 
     #[test]
     fn fig13_kernelet_beats_base_on_mix_and_all() {

@@ -2,7 +2,7 @@
 
 use super::report::{f, Report};
 use crate::config::GpuConfig;
-use crate::coordinator::{feasible_splits, Coordinator};
+use crate::coordinator::{feasible_splits, Coordinator, TimingBackend};
 use crate::kernel::{testing::testing_kernels, BenchmarkApp, KernelSpec};
 use crate::model::{self, Granularity};
 use crate::profiler;
@@ -154,7 +154,8 @@ fn concurrent_rows(
             } else {
                 predict_pair_no_vsm(gpu, &k1, b1, ms1, &k2, b2, ms2)
             };
-            // Measured: balanced slice pair on the simulator.
+            // Measured: balanced slice pair through the same timing
+            // backend interface the scheduling engine dispatches on.
             let (s1, s2) = model::balanced_slice_sizes(
                 gpu,
                 &k1,
@@ -166,7 +167,7 @@ fn concurrent_rows(
                 pred.cipc[1].max(1e-6),
                 gpu.num_sms,
             );
-            let m = coord.simcache.pair(&k1, s1, b1, &k2, s2, b2);
+            let m = coord.simcache.time_pair(&k1, s1, b1, &k2, s2, b2);
             let mcp =
                 model::co_scheduling_profit(&[p1.ipc, p2.ipc], &[m.cipc[0], m.cipc[1]]);
             meas_tot.push(m.total_ipc);

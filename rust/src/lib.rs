@@ -29,10 +29,13 @@
 //! - [`model`] — the Markov-chain performance model (§4.4).
 //! - [`profiler`] — pre-execution profiling of a few thread blocks.
 //! - [`slicer`] — minimum-slice-size search under an overhead budget.
-//! - [`coordinator`] — pending queue, pruning, greedy scheduler,
-//!   baselines (BASE / OPT / MC).
+//! - [`coordinator`] — the event-driven scheduling engine
+//!   (`Engine`), its two plug-in axes (`Selector`: Kernelet / OPT /
+//!   MC / BASE policies; `TimingBackend`: simulator or PJRT), pruning,
+//!   greedy selection, and the online multi-GPU dispatcher.
 //! - [`workload`] — Poisson-arrival workload generation (Table 5).
-//! - [`runtime`] — PJRT artifact loading + sliced real-compute dispatch.
+//! - [`runtime`] — PJRT artifact loading, sliced real-compute dispatch,
+//!   and the real-execution `TimingBackend` for the engine.
 //! - [`figures`] — regenerators for every paper table and figure.
 //! - [`bench`] — the micro-benchmark harness used by `cargo bench`
 //!   (criterion is unavailable offline).

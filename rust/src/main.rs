@@ -53,7 +53,7 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|all> [--out DIR] [--quick]
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|all> [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
   kernelet slice-ptx <file.ptx> [--dims 1|2]
@@ -91,7 +91,10 @@ fn cmd_figure(args: &[String]) -> Result<()> {
     let out_dir = flag_value(args, "--out").map(PathBuf::from);
     let ids: Vec<String> = if which == "all" {
         figures::ALL_IDS.iter().map(|s| s.to_string()).collect()
-    } else if which.starts_with("fig") || which.starts_with("table") {
+    } else if figures::ALL_IDS.contains(&which.as_str())
+        || which.starts_with("fig")
+        || which.starts_with("table")
+    {
         vec![which.to_string()]
     } else {
         vec![format!("fig{which}")]
@@ -102,7 +105,8 @@ fn cmd_figure(args: &[String]) -> Result<()> {
         println!();
         if let Some(dir) = &out_dir {
             rep.save_tsv(dir)?;
-            println!("(saved {}/{}.tsv)", dir.display(), id);
+            rep.save_json(dir)?;
+            println!("(saved {}/{}.tsv + .json)", dir.display(), id);
         }
     }
     Ok(())

@@ -5,10 +5,20 @@
 //! model: the coordinator decides slice sizes; this module proves the
 //! decision is *safe* by executing actual compiled kernels slice by
 //! slice and verifying the stitched output equals the full-grid run.
+//! [`PjrtBackend`] additionally plugs those executions into the
+//! scheduling engine as a [`TimingBackend`], so the same dispatch loop
+//! that runs on the simulator can be driven by real kernel launches.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::client::{ArtifactRegistry, Tensor};
+use crate::config::GpuConfig;
+use crate::coordinator::{PairTiming, TimingBackend};
+use crate::kernel::KernelSpec;
 use crate::stats::Xoshiro256;
 
 /// Runs sliceable kernels through the artifact registry.
@@ -160,6 +170,134 @@ fn concat0(pieces: &[Tensor]) -> Result<Tensor> {
             Tensor::I32(v, dims)
         }
     })
+}
+
+/// Real-compute timing backend for the scheduling engine: slice
+/// durations come from executing the AOT-compiled artifact through
+/// PJRT and converting measured host wall-clock into "GPU cycles" at
+/// the config's clock rate. Kernels without an AOT artifact (and any
+/// execution error) fall back to the wrapped backend, so mixed streams
+/// still schedule.
+///
+/// Two approximations, by construction of the testbed: requested block
+/// counts are scaled linearly from the nearest AOT'd slice variant, and
+/// the PJRT CPU client has no co-residency, so a pair round costs the
+/// sum of its two slices. Wall-clock measurements are inherently
+/// nondeterministic — use the simulator backend where reproducibility
+/// matters (figures, differential tests).
+pub struct PjrtBackend<'a> {
+    reg: &'a ArtifactRegistry,
+    runner: SlicedRunner<'a>,
+    gpu: GpuConfig,
+    fallback: &'a dyn TimingBackend,
+    /// Ready argument vectors (offset 0 prepended) per artifact
+    /// kernel, built once — input synthesis must not pollute the
+    /// timing, and a synthesis failure is cached as `None` so it is
+    /// not retried on every slice.
+    args: Mutex<HashMap<String, Option<Arc<Vec<Tensor>>>>>,
+    /// (kernel, n_blocks) variants already executed once: the registry
+    /// compiles lazily on first use, and compile time must not pollute
+    /// the timing either.
+    warmed: Mutex<std::collections::HashSet<(String, u32)>>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(reg: &'a ArtifactRegistry, gpu: &GpuConfig, fallback: &'a dyn TimingBackend) -> Self {
+        Self {
+            reg,
+            runner: SlicedRunner::new(reg),
+            gpu: gpu.clone(),
+            fallback,
+            args: Mutex::new(HashMap::new()),
+            warmed: Mutex::new(std::collections::HashSet::new()),
+        }
+    }
+
+    /// Artifact name for a benchmark spec ("PC" → "pc"), if AOT'd.
+    fn artifact_for(&self, spec_name: &str) -> Option<String> {
+        let name = spec_name.to_ascii_lowercase();
+        if self.reg.manifest().variants(&name).is_empty() {
+            None
+        } else {
+            Some(name)
+        }
+    }
+
+    /// Wall-seconds to execute `blocks` blocks of `kernel` as one
+    /// slice, scaled linearly from the nearest AOT'd variant.
+    fn measure_slice_secs(&self, kernel: &str, blocks: u32) -> Option<f64> {
+        let variants = self.reg.manifest().variants(kernel);
+        let v = variants
+            .iter()
+            .filter(|a| a.n_blocks <= blocks)
+            .max_by_key(|a| a.n_blocks)
+            .or_else(|| variants.iter().min_by_key(|a| a.n_blocks))?;
+        let nb = v.n_blocks;
+        let args: Arc<Vec<Tensor>> = {
+            let mut map = self.args.lock().unwrap();
+            map.entry(kernel.to_string())
+                .or_insert_with(|| {
+                    self.runner
+                        .example_inputs(kernel, 0xCAFE)
+                        .ok()
+                        .map(|ins| Arc::new(with_offset(&ins, 0)))
+                })
+                .clone()?
+        };
+        // First use of a variant compiles the executable lazily inside
+        // the registry; run it once untimed so the measurement below
+        // sees execution only. Mark it warmed only after that run
+        // succeeds, so a transient failure does not skip future
+        // warm-ups and leak compile time into the clock.
+        let needs_warm = !self.warmed.lock().unwrap().contains(&(kernel.to_string(), nb));
+        if needs_warm {
+            self.reg.execute(kernel, nb, &args).ok()?;
+            self.warmed.lock().unwrap().insert((kernel.to_string(), nb));
+        }
+        let t0 = Instant::now();
+        self.reg.execute(kernel, nb, &args).ok()?;
+        let dt = t0.elapsed().as_secs_f64();
+        Some(dt * blocks as f64 / nb as f64)
+    }
+}
+
+impl TimingBackend for PjrtBackend<'_> {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn time_solo(&self, spec: &KernelSpec, blocks: u32) -> f64 {
+        if let Some(k) = self.artifact_for(spec.name) {
+            if let Some(secs) = self.measure_slice_secs(&k, blocks) {
+                return secs * self.gpu.clock_hz();
+            }
+        }
+        self.fallback.time_solo(spec, blocks)
+    }
+
+    fn time_pair(
+        &self,
+        k1: &KernelSpec,
+        s1: u32,
+        q1: u32,
+        k2: &KernelSpec,
+        s2: u32,
+        q2: u32,
+    ) -> PairTiming {
+        if let (Some(a), Some(b)) = (self.artifact_for(k1.name), self.artifact_for(k2.name)) {
+            if let (Some(t1), Some(t2)) =
+                (self.measure_slice_secs(&a, s1), self.measure_slice_secs(&b, s2))
+            {
+                let cycles = ((t1 + t2) * self.gpu.clock_hz()).max(1e-9);
+                let cipc = [
+                    k1.inst_per_block(&self.gpu) as f64 * s1 as f64 / cycles,
+                    k2.inst_per_block(&self.gpu) as f64 * s2 as f64 / cycles,
+                ];
+                return PairTiming { cycles, cipc, total_ipc: cipc[0] + cipc[1] };
+            }
+        }
+        self.fallback.time_pair(k1, s1, q1, k2, s2, q2)
+    }
 }
 
 /// Steady-state evaluation through the AOT markov artifact: pads the

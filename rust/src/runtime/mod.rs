@@ -6,14 +6,16 @@
 //! request-path side: the rust coordinator loads the text with
 //! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
 //! client, and executes slices with concrete inputs — Python is never
-//! on the request path.
+//! on the request path. [`PjrtBackend`] exposes those executions to the
+//! scheduling engine as a `TimingBackend`, so the coordinator's one
+//! dispatch loop can run on real compute instead of the simulator.
 
 pub mod client;
 pub mod dispatch;
 pub mod manifest;
 
 pub use client::{ArtifactRegistry, Tensor};
-pub use dispatch::SlicedRunner;
+pub use dispatch::{PjrtBackend, SlicedRunner};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
 use std::path::{Path, PathBuf};

@@ -12,5 +12,5 @@ pub mod summary;
 
 pub use cdf::Cdf;
 pub use regression::{linear_fit, pearson};
-pub use rng::Xoshiro256;
+pub use rng::{split_seed, Xoshiro256};
 pub use summary::Summary;

@@ -93,6 +93,13 @@ impl Stream {
         Stream { instances }
     }
 
+    /// Iterate submissions in arrival order (instances are stored
+    /// sorted by arrival time). The scheduling engine consumes this to
+    /// admit kernels online.
+    pub fn arrivals(&self) -> impl Iterator<Item = KernelInstance> + '_ {
+        self.instances.iter().cloned()
+    }
+
     pub fn len(&self) -> usize {
         self.instances.len()
     }
@@ -151,6 +158,16 @@ mod tests {
         let s = Stream::saturated(Mix::ALL, 10, 3);
         assert_eq!(s.len(), 80);
         assert!(s.instances.iter().all(|k| k.arrival_time == 0.0));
+    }
+
+    #[test]
+    fn arrivals_iterate_in_order() {
+        let s = Stream::poisson(Mix::MIX, 10, 80.0, 5);
+        let times: Vec<f64> = s.arrivals().map(|k| k.arrival_time).collect();
+        assert_eq!(times.len(), s.len());
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
     }
 
     #[test]

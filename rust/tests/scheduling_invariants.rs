@@ -5,7 +5,7 @@
 //! every failure is reproducible from the printed seed.
 
 use kernelet::config::GpuConfig;
-use kernelet::coordinator::baselines::{run_base, run_opt};
+use kernelet::coordinator::baselines::{run_base, run_monte_carlo, run_opt};
 use kernelet::coordinator::{coresident_feasible, feasible_splits, run_kernelet, Coordinator};
 use kernelet::kernel::{BenchmarkApp, InstructionMix, KernelInstance, KernelSpec};
 use kernelet::model::chain::{steady_state_dense, steady_state_power};
@@ -57,7 +57,9 @@ fn work_conservation_across_policies() {
     }
 }
 
-/// PROPERTY: schedules are deterministic given the stream.
+/// PROPERTY: schedules are deterministic given the stream — the whole
+/// report, not just the headline numbers: completion map, slice trace
+/// and queue-depth timeline must be identical across runs.
 #[test]
 fn scheduling_deterministic() {
     let coord = Coordinator::new(&GpuConfig::gtx680());
@@ -66,6 +68,40 @@ fn scheduling_deterministic() {
     let b = run_kernelet(&coord, &stream);
     assert_eq!(a.total_cycles, b.total_cycles);
     assert_eq!(a.coschedule_rounds, b.coschedule_rounds);
+    assert_eq!(a.completion, b.completion);
+    assert_eq!(a.slice_trace, b.slice_trace);
+    assert_eq!(a.queue_depth, b.queue_depth);
+    assert_eq!(a.utilization, b.utilization);
+    // MC is deterministic given (stream, seed) too.
+    let small = Stream::saturated(Mix::MIX, 1, 4);
+    assert_eq!(
+        run_monte_carlo(&coord, &small, 3, 1234),
+        run_monte_carlo(&coord, &small, 3, 1234)
+    );
+}
+
+/// PROPERTY: the engine's enriched report is internally consistent —
+/// utilization bounded, every grid block dispatched exactly once in the
+/// slice trace, nothing incomplete.
+#[test]
+fn engine_report_consistent() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    for stream in [Stream::saturated(Mix::ALL, 2, 21), Stream::poisson(Mix::MIX, 3, 100.0, 22)] {
+        for rep in [run_base(&coord, &stream), run_kernelet(&coord, &stream)] {
+            assert_eq!(rep.incomplete, 0);
+            assert!(rep.utilization > 0.0 && rep.utilization <= 1.0 + 1e-9, "{}", rep.utilization);
+            assert!(rep.peak_queue_depth() <= stream.len());
+            let dispatched = rep.blocks_dispatched();
+            for k in &stream.instances {
+                assert_eq!(
+                    dispatched.get(&k.id).copied().unwrap_or(0),
+                    k.spec.grid_blocks as u64,
+                    "kernel {}",
+                    k.id
+                );
+            }
+        }
+    }
 }
 
 /// PROPERTY: OPT (oracle pre-execution) never loses to Kernelet by more
@@ -174,6 +210,391 @@ fn pair_simulation_invariants_random() {
         assert_eq!(pr.per_kernel[1].insts, b2 as u64 * b.inst_per_block(&gpu));
         assert!(pr.total_ipc() <= gpu.peak_ipc() + 1e-9);
     }
+}
+
+/// Frozen copies of the seed's four bespoke dispatch loops, kept
+/// verbatim (modulo visibility plumbing) as the differential oracle:
+/// the unified engine's adapters must reproduce their schedules
+/// bit-for-bit on fixed streams. Do not "improve" this module — its
+/// value is that it never changes with the engine.
+mod reference {
+    use std::collections::HashMap;
+
+    use kernelet::coordinator::{feasible_splits, Coordinator};
+    use kernelet::kernel::{KernelInstance, KernelSpec};
+    use kernelet::stats::Xoshiro256;
+    use kernelet::workload::Stream;
+
+    /// Frozen copy of `stats::rng::split_seed` (splitmix64 finalizer
+    /// over the (seed, index) pair). Deliberately NOT the production
+    /// helper: if that helper regresses, the MC differential below must
+    /// catch it rather than change in lockstep.
+    fn ref_split_seed(seed: u64, index: u64) -> u64 {
+        let mut z = seed ^ index.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub struct RefReport {
+        pub total_cycles: f64,
+        pub completion: HashMap<u64, f64>,
+        pub rounds: u64,
+        pub solo_slices: u64,
+    }
+
+    pub fn run_kernelet(coord: &Coordinator, stream: &Stream) -> RefReport {
+        let gpu = coord.gpu.clone();
+        let mut queue: Vec<KernelInstance> = Vec::new();
+        let mut upcoming = stream.instances.clone();
+        upcoming.reverse(); // pop() yields earliest arrival
+        let mut clock_cycles = 0.0f64;
+        let mut completion = HashMap::new();
+        let mut rounds = 0u64;
+        let mut solo_slices = 0u64;
+        let secs = |c: f64| gpu.cycles_to_secs(c);
+
+        loop {
+            while upcoming.last().map_or(false, |k| k.arrival_time <= secs(clock_cycles)) {
+                queue.push(upcoming.pop().unwrap());
+            }
+            if queue.is_empty() {
+                match upcoming.last() {
+                    Some(k) => {
+                        clock_cycles = k.arrival_time * gpu.clock_hz();
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            let refs: Vec<&KernelInstance> = queue.iter().collect();
+            match coord.find_coschedule(&refs) {
+                Some(cs) => {
+                    let i1 = queue.iter().position(|k| k.id == cs.k1).unwrap();
+                    let i2 = queue.iter().position(|k| k.id == cs.k2).unwrap();
+                    loop {
+                        let (r1, r2) = {
+                            let (lo, hi) = if i1 < i2 { (i1, i2) } else { (i2, i1) };
+                            let (a, b) = queue.split_at_mut(hi);
+                            let (ka, kb) = (&mut a[lo], &mut b[0]);
+                            let (k1, k2) = if i1 < i2 { (ka, kb) } else { (kb, ka) };
+                            let r1 = k1.take_slice(cs.size1.min(k1.remaining_blocks().max(1)));
+                            let r2 = k2.take_slice(cs.size2.min(k2.remaining_blocks().max(1)));
+                            (r1, r2)
+                        };
+                        let n1 = r1.end - r1.start;
+                        let n2 = r2.end - r2.start;
+                        let spec1 = queue[i1].spec.clone();
+                        let spec2 = queue[i2].spec.clone();
+                        let m = coord.simcache.pair(&spec1, n1, cs.b1, &spec2, n2, cs.b2);
+                        clock_cycles += m.cycles;
+                        rounds += 1;
+                        let t = secs(clock_cycles);
+                        if queue[i1].is_finished() {
+                            completion.insert(queue[i1].id, t);
+                        }
+                        if queue[i2].is_finished() {
+                            completion.insert(queue[i2].id, t);
+                        }
+                        let drained = queue[i1].is_finished() || queue[i2].is_finished();
+                        let arrival = upcoming.last().map_or(false, |k| k.arrival_time <= t);
+                        if drained || arrival {
+                            break;
+                        }
+                    }
+                    queue.retain(|k| !k.is_finished());
+                }
+                None => {
+                    solo_step(
+                        coord,
+                        &mut queue,
+                        &upcoming,
+                        &mut clock_cycles,
+                        &mut solo_slices,
+                        &mut completion,
+                    );
+                }
+            }
+        }
+        RefReport { total_cycles: clock_cycles, completion, rounds, solo_slices }
+    }
+
+    pub fn run_base(coord: &Coordinator, stream: &Stream) -> RefReport {
+        let gpu = coord.gpu.clone();
+        let mut clock_cycles = 0.0f64;
+        let mut completion = HashMap::new();
+        for k in &stream.instances {
+            let arrival_cycles = k.arrival_time * gpu.clock_hz();
+            if arrival_cycles > clock_cycles {
+                clock_cycles = arrival_cycles;
+            }
+            clock_cycles += coord.simcache.solo_full(&k.spec);
+            completion.insert(k.id, gpu.cycles_to_secs(clock_cycles));
+        }
+        RefReport {
+            total_cycles: clock_cycles,
+            completion,
+            rounds: 0,
+            solo_slices: stream.len() as u64,
+        }
+    }
+
+    pub fn run_opt(coord: &Coordinator, stream: &Stream) -> RefReport {
+        run_with_selector(coord, stream, &mut |coord, pending| select_opt(coord, pending))
+    }
+
+    pub fn run_monte_carlo(coord: &Coordinator, stream: &Stream, s: u32, seed: u64) -> Vec<f64> {
+        (0..s)
+            .map(|i| {
+                let mut rng = Xoshiro256::new(ref_split_seed(seed, i as u64));
+                let r = run_with_selector(coord, stream, &mut |coord, pending| {
+                    select_random(coord, pending, &mut rng)
+                });
+                coord.gpu.cycles_to_secs(r.total_cycles)
+            })
+            .collect()
+    }
+
+    struct Decision {
+        k1: u64,
+        k2: u64,
+        b1: u32,
+        b2: u32,
+        size1: u32,
+        size2: u32,
+    }
+
+    fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
+        let mut apps: Vec<&KernelInstance> = Vec::new();
+        for inst in pending {
+            if !apps.iter().any(|k| k.spec.name == inst.spec.name) {
+                apps.push(inst);
+            }
+        }
+        if apps.len() < 2 {
+            return None;
+        }
+        let mut best: Option<(f64, Decision)> = None;
+        for i in 0..apps.len() {
+            for j in i + 1..apps.len() {
+                let (ki, kj) = (apps[i], apps[j]);
+                let ipc1 = measured_solo_ipc(coord, &ki.spec);
+                let ipc2 = measured_solo_ipc(coord, &kj.spec);
+                for (b1, b2) in feasible_splits(&coord.gpu, &ki.spec, &kj.spec) {
+                    let (s1, s2) = (b1 * coord.gpu.num_sms, b2 * coord.gpu.num_sms);
+                    let m = coord.simcache.pair(&ki.spec, s1, b1, &kj.spec, s2, b2);
+                    let cp = kernelet::model::co_scheduling_profit(&[ipc1, ipc2], &m.cipc);
+                    if cp < coord.cp_min {
+                        continue;
+                    }
+                    if best.as_ref().map_or(true, |(bcp, _)| cp > *bcp) {
+                        let (z1, z2) = kernelet::model::balanced_slice_sizes(
+                            &coord.gpu,
+                            &ki.spec,
+                            b1,
+                            m.cipc[0].max(1e-6),
+                            coord.min_slice(&ki.spec),
+                            &kj.spec,
+                            b2,
+                            m.cipc[1].max(1e-6),
+                            coord.min_slice(&kj.spec),
+                        );
+                        best = Some((
+                            cp,
+                            Decision { k1: ki.id, k2: kj.id, b1, b2, size1: z1, size2: z2 },
+                        ));
+                    }
+                }
+            }
+        }
+        best.map(|(_, d)| d)
+    }
+
+    fn select_random(
+        coord: &Coordinator,
+        pending: &[&KernelInstance],
+        rng: &mut Xoshiro256,
+    ) -> Option<Decision> {
+        let mut apps: Vec<&KernelInstance> = Vec::new();
+        for inst in pending {
+            if !apps.iter().any(|k| k.spec.name == inst.spec.name) {
+                apps.push(inst);
+            }
+        }
+        if apps.len() < 2 {
+            return None;
+        }
+        let i = rng.index(apps.len());
+        let mut j = rng.index(apps.len() - 1);
+        if j >= i {
+            j += 1;
+        }
+        let (ki, kj) = (apps[i], apps[j]);
+        let splits = feasible_splits(&coord.gpu, &ki.spec, &kj.spec);
+        if splits.is_empty() {
+            return None;
+        }
+        let &(b1, b2) = rng.choose(&splits);
+        let m1 = 1 + rng.below(6) as u32;
+        let m2 = 1 + rng.below(6) as u32;
+        Some(Decision {
+            k1: ki.id,
+            k2: kj.id,
+            b1,
+            b2,
+            size1: b1 * coord.gpu.num_sms * m1,
+            size2: b2 * coord.gpu.num_sms * m2,
+        })
+    }
+
+    fn measured_solo_ipc(coord: &Coordinator, spec: &KernelSpec) -> f64 {
+        coord.profile(spec).ipc
+    }
+
+    fn run_with_selector(
+        coord: &Coordinator,
+        stream: &Stream,
+        select: &mut dyn FnMut(&Coordinator, &[&KernelInstance]) -> Option<Decision>,
+    ) -> RefReport {
+        let gpu = coord.gpu.clone();
+        let mut queue: Vec<KernelInstance> = Vec::new();
+        let mut upcoming = stream.instances.clone();
+        upcoming.reverse();
+        let mut clock_cycles = 0.0f64;
+        let mut completion = HashMap::new();
+        let mut rounds = 0u64;
+        let mut solo_slices = 0u64;
+        let secs = |c: f64| gpu.cycles_to_secs(c);
+
+        loop {
+            while upcoming.last().map_or(false, |k| k.arrival_time <= secs(clock_cycles)) {
+                queue.push(upcoming.pop().unwrap());
+            }
+            if queue.is_empty() {
+                match upcoming.last() {
+                    Some(k) => {
+                        clock_cycles = k.arrival_time * gpu.clock_hz();
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            let refs: Vec<&KernelInstance> = queue.iter().collect();
+            match select(coord, &refs) {
+                Some(d) => {
+                    let i1 = queue.iter().position(|k| k.id == d.k1).unwrap();
+                    let i2 = queue.iter().position(|k| k.id == d.k2).unwrap();
+                    loop {
+                        let (lo, hi) = if i1 < i2 { (i1, i2) } else { (i2, i1) };
+                        let (a, b) = queue.split_at_mut(hi);
+                        let (ka, kb) = (&mut a[lo], &mut b[0]);
+                        let (k1, k2) = if i1 < i2 { (ka, kb) } else { (kb, ka) };
+                        let r1 = k1.take_slice(d.size1.min(k1.remaining_blocks().max(1)));
+                        let r2 = k2.take_slice(d.size2.min(k2.remaining_blocks().max(1)));
+                        let (n1, n2) = (r1.end - r1.start, r2.end - r2.start);
+                        let spec1 = queue[i1].spec.clone();
+                        let spec2 = queue[i2].spec.clone();
+                        let m = coord.simcache.pair(&spec1, n1, d.b1, &spec2, n2, d.b2);
+                        clock_cycles += m.cycles;
+                        rounds += 1;
+                        let t = secs(clock_cycles);
+                        if queue[i1].is_finished() {
+                            completion.insert(queue[i1].id, t);
+                        }
+                        if queue[i2].is_finished() {
+                            completion.insert(queue[i2].id, t);
+                        }
+                        let drained = queue[i1].is_finished() || queue[i2].is_finished();
+                        let arrival = upcoming.last().map_or(false, |k| k.arrival_time <= t);
+                        if drained || arrival {
+                            break;
+                        }
+                    }
+                    queue.retain(|k| !k.is_finished());
+                }
+                None => {
+                    solo_step(
+                        coord,
+                        &mut queue,
+                        &upcoming,
+                        &mut clock_cycles,
+                        &mut solo_slices,
+                        &mut completion,
+                    );
+                }
+            }
+        }
+        RefReport { total_cycles: clock_cycles, completion, rounds, solo_slices }
+    }
+
+    /// The shared solo-fallback step (identical in both seed loops).
+    fn solo_step(
+        coord: &Coordinator,
+        queue: &mut Vec<KernelInstance>,
+        upcoming: &[KernelInstance],
+        clock_cycles: &mut f64,
+        solo_slices: &mut u64,
+        completion: &mut HashMap<u64, f64>,
+    ) {
+        let head = queue
+            .iter_mut()
+            .min_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time))
+            .unwrap();
+        let slice = if upcoming.is_empty() {
+            head.remaining_blocks()
+        } else {
+            coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
+        };
+        let r = head.take_slice(slice.min(head.remaining_blocks().max(1)));
+        let n = r.end - r.start;
+        let spec = head.spec.clone();
+        let id = head.id;
+        let fin = head.is_finished();
+        *clock_cycles += coord.simcache.solo_cycles(&spec, n);
+        *solo_slices += 1;
+        if fin {
+            completion.insert(id, coord.gpu.cycles_to_secs(*clock_cycles));
+        }
+        queue.retain(|k| !k.is_finished());
+    }
+}
+
+/// DIFFERENTIAL: the unified engine reproduces the seed loops exactly —
+/// same total cycles, same completion times, same round/solo counts —
+/// for all four policies, on saturated and Poisson streams.
+#[test]
+fn engine_matches_seed_loops_differentially() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let streams = [
+        Stream::saturated(Mix::MIX, 2, 11),
+        Stream::saturated(Mix::ALL, 1, 12),
+        Stream::poisson(Mix::MIX, 2, 100.0, 13),
+    ];
+    for (si, stream) in streams.iter().enumerate() {
+        let cases: [(&str, kernelet::coordinator::ExecutionReport, reference::RefReport); 3] = [
+            ("kernelet", run_kernelet(&coord, stream), reference::run_kernelet(&coord, stream)),
+            ("base", run_base(&coord, stream), reference::run_base(&coord, stream)),
+            ("opt", run_opt(&coord, stream), reference::run_opt(&coord, stream)),
+        ];
+        for (name, engine, seed) in cases {
+            assert_eq!(
+                engine.total_cycles, seed.total_cycles,
+                "{name} stream {si}: total_cycles"
+            );
+            assert_eq!(engine.completion, seed.completion, "{name} stream {si}: completion");
+            assert_eq!(
+                engine.coschedule_rounds, seed.rounds,
+                "{name} stream {si}: rounds"
+            );
+            assert_eq!(engine.solo_slices, seed.solo_slices, "{name} stream {si}: solo");
+        }
+    }
+    // MC: identical per-plan seeds must yield identical sample vectors.
+    let stream = Stream::saturated(Mix::MIX, 1, 14);
+    assert_eq!(
+        run_monte_carlo(&coord, &stream, 4, 909),
+        reference::run_monte_carlo(&coord, &stream, 4, 909)
+    );
 }
 
 /// PROPERTY: take_slice covers each kernel's grid exactly once for

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI pipeline: format, lint, build, test, and record the scheduling
+# perf trajectory (BENCH_scheduling.json).
+#
+# Usage: ./scripts/ci.sh [--quick]
+#   --quick   lower bench instance count (CI smoke; default 50)
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+instances=200
+if [[ "${1:-}" == "--quick" ]]; then
+  instances=50
+fi
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo bench --bench scheduling (instances/app=${instances})"
+KERNELET_INSTANCES="${instances}" \
+KERNELET_BENCH_OUT="BENCH_scheduling.json" \
+  cargo bench --bench scheduling
+
+echo "==> perf record:"
+cat BENCH_scheduling.json
+echo "CI OK"
