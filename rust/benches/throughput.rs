@@ -1,0 +1,123 @@
+//! Load-sweep throughput benchmark: crosses arrival scenario ×
+//! offered-load factor × scheduling policy on the unified engine and
+//! records the saturation curves to `BENCH_throughput.json` — the
+//! repo's throughput trajectory, tracked by CI next to the latency
+//! trajectory in `BENCH_scheduling.json`.
+//!
+//! Run: `cargo bench --bench throughput`
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 50; the
+//!   saturation figure caps itself at 200 — here the caller chooses).
+//! - `KERNELET_THROUGHPUT_OUT` overrides the JSON output path (default
+//!   `BENCH_throughput.json` in the working directory).
+//!
+//! JSON schema (all rates in kernels/sec, times in seconds):
+//!
+//! ```json
+//! {
+//!   "bench": "throughput",
+//!   "gpu": "C2050",
+//!   "mix": "MIX",
+//!   "instances_per_app": 50,
+//!   "base_capacity_kps": 123.4,
+//!   "wall_ms": 456,
+//!   "curves": [
+//!     {
+//!       "scenario": "poisson",
+//!       "policy": "kernelet",
+//!       "points": [
+//!         {"load": 0.25, "offered_kps": 30.8, "throughput_kps": 30.1,
+//!          "mean_turnaround_s": 0.01, "utilization": 0.24,
+//!          "mean_queue_depth": 1.2, "peak_queue_depth": 4, "kernels": 200}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use kernelet::bench::once;
+use kernelet::figures::throughput::{
+    load_sweep, SweepPoint, DEFAULT_LOADS, SWEEP_POLICIES, SWEEP_SCENARIOS,
+};
+use kernelet::figures::FigOptions;
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let opts = FigOptions { instances_per_app: instances, ..Default::default() };
+
+    let ((points, capacity), dt) = once("throughput::load_sweep", || {
+        load_sweep(&opts, &DEFAULT_LOADS, &SWEEP_SCENARIOS)
+    });
+
+    println!(
+        "{:>10} {:>6} {:>9} {:>12} {:>15} {:>14} {:>6} {:>7}",
+        "scenario", "load", "policy", "offered_kps", "throughput_kps", "turnaround_s", "util", "peak_q"
+    );
+    for p in &points {
+        println!(
+            "{:>10} {:>6.2} {:>9} {:>12.1} {:>15.1} {:>14.5} {:>6.3} {:>7}",
+            p.scenario,
+            p.load,
+            p.policy,
+            p.offered_kps,
+            p.throughput_kps,
+            p.mean_turnaround_s,
+            p.utilization,
+            p.peak_queue_depth
+        );
+    }
+
+    let json = to_json(&points, instances, capacity, dt.as_millis());
+    let out = std::env::var("KERNELET_THROUGHPUT_OUT")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            // CI schema-checks this file next; a stale copy passing the
+            // check would silently freeze the recorded trajectory.
+            eprintln!("could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Group the flat point list into one curve per (scenario, policy).
+fn to_json(points: &[SweepPoint], instances: u32, capacity: f64, wall_ms: u128) -> String {
+    let mut curves = Vec::new();
+    for &scenario in &SWEEP_SCENARIOS {
+        for &policy in &SWEEP_POLICIES {
+            let pts: Vec<String> = points
+                .iter()
+                .filter(|p| p.scenario == scenario && p.policy == policy)
+                .map(|p| {
+                    format!(
+                        "{{\"load\":{},\"offered_kps\":{},\"throughput_kps\":{},\
+                         \"mean_turnaround_s\":{},\"utilization\":{},\
+                         \"mean_queue_depth\":{},\"peak_queue_depth\":{},\"kernels\":{}}}",
+                        p.load,
+                        p.offered_kps,
+                        p.throughput_kps,
+                        p.mean_turnaround_s,
+                        p.utilization,
+                        p.mean_queue_depth,
+                        p.peak_queue_depth,
+                        p.kernels
+                    )
+                })
+                .collect();
+            curves.push(format!(
+                "{{\"scenario\":\"{scenario}\",\"policy\":\"{policy}\",\"points\":[{}]}}",
+                pts.join(",")
+            ));
+        }
+    }
+    format!(
+        "{{\"bench\":\"throughput\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\
+         \"instances_per_app\":{instances},\"base_capacity_kps\":{capacity},\
+         \"wall_ms\":{wall_ms},\"curves\":[{}]}}\n",
+        curves.join(",")
+    )
+}

@@ -18,11 +18,15 @@
 //!   via `runtime::PjrtBackend`.
 //!
 //! The engine is a stepping state machine ([`Engine::submit`] /
-//! [`Engine::run_until`] / [`Engine::drain`]) so drivers can interleave
-//! admission with execution — the multi-GPU dispatcher routes arrivals
-//! *online* by consulting live engine load between steps — while
-//! [`Engine::run`] is the one-shot convenience that replays a whole
-//! [`Stream`]. Tracing goes through a pluggable [`Observer`]; the
+//! [`Engine::run_until`] / [`Engine::drain`] / [`Engine::step`]) so
+//! drivers can interleave admission with execution — the multi-GPU
+//! dispatcher routes arrivals *online* by consulting live engine load
+//! between steps. [`Engine::run`] is the one-shot convenience that
+//! replays a whole [`Stream`]; [`Engine::run_source`] pulls arrivals
+//! from a streaming [`ArrivalSource`] instead (bursty, diurnal,
+//! heavy-tailed, closed-loop, trace-replay scenarios), feeding
+//! completions back for closed-loop clients.
+//! Tracing goes through a pluggable [`Observer`]; the
 //! `KERNELET_TRACE` environment variable is read once at construction,
 //! never in the dispatch hot path.
 
@@ -31,7 +35,7 @@ use std::collections::HashMap;
 use super::greedy::{CoSchedule, Coordinator};
 use super::simcache::SimCache;
 use crate::kernel::{KernelInstance, KernelSpec};
-use crate::workload::Stream;
+use crate::workload::{ArrivalSource, Stream};
 
 /// A co-schedule decision produced by a [`Selector`]: the paper's
 /// `<K1, K2, size1, size2>` tuple plus the residency split behind it.
@@ -298,6 +302,13 @@ pub struct Engine<'a> {
     solo_slices: u64,
     slice_trace: Vec<SliceRecord>,
     queue_depth: Vec<(f64, usize)>,
+    /// (id, arrival time) of every submission, in submission order —
+    /// what [`Engine::finish_online`] computes turnaround against.
+    submitted: Vec<(u64, f64)>,
+    /// (id, completion time) in completion order; [`Engine::run_source`]
+    /// and the multi-GPU dispatcher drain this to feed closed-loop
+    /// sources.
+    completed_log: Vec<(u64, f64)>,
 }
 
 impl<'a> Engine<'a> {
@@ -322,6 +333,8 @@ impl<'a> Engine<'a> {
             solo_slices: 0,
             slice_trace: Vec::new(),
             queue_depth: Vec::new(),
+            submitted: Vec::new(),
+            completed_log: Vec::new(),
         }
     }
 
@@ -365,7 +378,31 @@ impl<'a> Engine<'a> {
                 self.clock_cycles = c;
             }
         }
+        self.submitted.push((k.id, k.arrival_time));
         self.queue.push(k);
+    }
+
+    /// Completions so far, in completion order. Callers that feed a
+    /// closed-loop source keep a cursor into this log.
+    pub fn completion_log(&self) -> &[(u64, f64)] {
+        &self.completed_log
+    }
+
+    /// One dispatch decision, exposed for drivers that interleave
+    /// engines (the multi-GPU dispatcher steps every device while a
+    /// closed-loop source waits on completions). Returns `false` if the
+    /// queue was empty and nothing could be dispatched.
+    pub fn step(
+        &mut self,
+        selector: &mut dyn Selector,
+        next_arrival: Option<f64>,
+        more_arrivals: bool,
+    ) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.dispatch_once(selector, next_arrival, more_arrivals);
+        true
     }
 
     /// Dispatch until the clock reaches `t_secs` (the next arrival) or
@@ -395,15 +432,80 @@ impl<'a> Engine<'a> {
         self.finish(stream)
     }
 
+    /// Stream arrivals from an online [`ArrivalSource`]: the engine
+    /// pulls the next arrival, dispatches up to it, admits it, and
+    /// pushes completions back so closed-loop sources can schedule
+    /// their next submission. Dispatch is one decision at a time while
+    /// an arrival is pending, so a completion-triggered arrival that
+    /// lands *earlier* than the currently peeked one is honored.
+    ///
+    /// For an open-loop source this is decision-for-decision identical
+    /// to [`Engine::run`] over the equivalent [`Stream`] — the
+    /// differential tests in `tests/arrival_sources.rs` pin that.
+    pub fn run_source(
+        mut self,
+        selector: &mut dyn Selector,
+        source: &mut dyn ArrivalSource,
+    ) -> ExecutionReport {
+        let mut fed = 0usize;
+        'outer: loop {
+            self.feed_completions(source, &mut fed);
+            let Some(t) = source.peek_time() else {
+                if self.queue.is_empty() {
+                    // All completions are delivered and the device is
+                    // idle: by the trait contract the source is done.
+                    break;
+                }
+                self.dispatch_once(&mut *selector, None, source.more_expected());
+                continue;
+            };
+            while !self.queue.is_empty() && self.secs(self.clock_cycles) < t {
+                self.dispatch_once(&mut *selector, Some(t), true);
+                self.feed_completions(source, &mut fed);
+                match source.peek_time() {
+                    Some(t2) if t2 >= t => {}
+                    // An earlier arrival was injected (or the source
+                    // emptied): re-evaluate from the top.
+                    _ => continue 'outer,
+                }
+            }
+            let k = source.next_arrival().expect("peeked arrival disappeared");
+            self.submit(k);
+        }
+        self.finish_online()
+    }
+
+    fn feed_completions(&mut self, source: &mut dyn ArrivalSource, fed: &mut usize) {
+        while *fed < self.completed_log.len() {
+            let (id, t) = self.completed_log[*fed];
+            source.on_completion(id, t);
+            *fed += 1;
+        }
+    }
+
     /// Close out the run and produce the report (turnaround is computed
     /// against the stream's arrival times).
     pub fn finish(self, stream: &Stream) -> ExecutionReport {
+        let arrivals: Vec<(u64, f64)> =
+            stream.instances.iter().map(|k| (k.id, k.arrival_time)).collect();
+        self.finish_with(&arrivals)
+    }
+
+    /// Close out a [`Engine::run_source`]/stepping run: turnaround is
+    /// computed against what was actually submitted (there may be no
+    /// materialized [`Stream`] anywhere).
+    pub fn finish_online(mut self) -> ExecutionReport {
+        let arrivals = std::mem::take(&mut self.submitted);
+        self.finish_with(&arrivals)
+    }
+
+    fn finish_with(self, arrivals: &[(u64, f64)]) -> ExecutionReport {
         let total_secs = self.secs(self.clock_cycles);
         let mut turn = 0.0;
         let mut completed_of_stream = 0usize;
-        for k in &stream.instances {
-            if let Some(&done) = self.completion.get(&k.id) {
-                turn += done - k.arrival_time;
+        for &(id, arrival_time) in arrivals {
+            if let Some(&done) = self.completion.get(&id) {
+                turn += done - arrival_time;
                 completed_of_stream += 1;
             }
         }
@@ -411,7 +513,7 @@ impl<'a> Engine<'a> {
             total_cycles: self.clock_cycles,
             total_secs,
             kernels_completed: self.completion.len(),
-            incomplete: stream.len().saturating_sub(completed_of_stream),
+            incomplete: arrivals.len().saturating_sub(completed_of_stream),
             coschedule_rounds: self.rounds,
             solo_slices: self.solo_slices,
             mean_turnaround_secs: turn / completed_of_stream.max(1) as f64,
@@ -555,6 +657,7 @@ impl<'a> Engine<'a> {
 
     fn complete(&mut self, id: u64, t: f64) {
         self.completion.insert(id, t);
+        self.completed_log.push((id, t));
         if let Some(obs) = self.observer.as_deref_mut() {
             obs.completed(id, t);
         }
@@ -645,6 +748,10 @@ mod tests {
             .run(&mut KerneletSelector, &stream);
         assert_eq!(*n.borrow(), r.kernels_completed);
     }
+
+    // run_source-vs-run differentials live in tests/arrival_sources.rs
+    // (engine_replay_source_is_identity and the Poisson bit-identity
+    // suite) — not duplicated here.
 
     #[test]
     fn stepping_api_matches_one_shot_run() {

@@ -7,14 +7,13 @@
 //! `<K1, K2, size1, size2>` with the maximum predicted profit and a
 //! balanced slice ratio (Eq. 8).
 
-use std::collections::HashMap;
-
 use super::pruning::{prune_pairs, PruneParams};
 use super::{feasible_splits, SimCache};
 use crate::config::GpuConfig;
 use crate::kernel::{KernelInstance, KernelSpec};
 use crate::model::{self, Granularity};
 use crate::profiler::{Profile, ProfileCache};
+use crate::sharded::ShardedMap;
 use crate::slicer::SliceSizeCache;
 
 /// A selected co-schedule: the paper's `<K1, K2, size1, size2>` tuple
@@ -52,10 +51,11 @@ pub struct Coordinator {
     pub cp_min: f64,
     /// Memoized model evaluations keyed by (k1, k2) name pair
     /// (characteristics are per-application, so the best split and CP
-    /// are reusable across instances).
-    model_cache: std::sync::Mutex<HashMap<(String, String), (u32, u32, [f64; 2], f64)>>,
+    /// are reusable across instances). Sharded so per-device engines
+    /// and prewarm threads never contend on one lock.
+    model_cache: ShardedMap<(String, String), (u32, u32, [f64; 2], f64)>,
     /// Memoized model-predicted solo IPCs by kernel name.
-    solo_model_cache: std::sync::Mutex<HashMap<String, f64>>,
+    solo_model_cache: ShardedMap<String, f64>,
 }
 
 impl Coordinator {
@@ -73,8 +73,8 @@ impl Coordinator {
             granularity: Granularity::Block,
             overhead_budget_pct: crate::slicer::DEFAULT_OVERHEAD_PCT,
             cp_min: 0.01,
-            model_cache: std::sync::Mutex::new(HashMap::new()),
-            solo_model_cache: std::sync::Mutex::new(HashMap::new()),
+            model_cache: ShardedMap::new(),
+            solo_model_cache: ShardedMap::new(),
         }
     }
 
@@ -89,7 +89,7 @@ impl Coordinator {
     /// pairs (the model does not see pipeline stalls, so its cIPC is
     /// optimistic; the bias cancels only if the denominator shares it).
     pub fn model_solo_ipc(&self, spec: &KernelSpec) -> f64 {
-        if let Some(&v) = self.solo_model_cache.lock().unwrap().get(spec.name) {
+        if let Some(v) = self.solo_model_cache.get(spec.name) {
             return v;
         }
         // Same chain family as the heterogeneous pair predictor
@@ -98,7 +98,7 @@ impl Coordinator {
         // the same approximations. (The 3-state model is used where
         // absolute solo accuracy matters: Figs. 7 and 10.)
         let v = model::predict_solo(&self.gpu, spec, self.granularity).ipc;
-        self.solo_model_cache.lock().unwrap().insert(spec.name.to_string(), v);
+        self.solo_model_cache.insert(spec.name.to_string(), v);
         v
     }
 
@@ -112,7 +112,7 @@ impl Coordinator {
     /// application pair.
     pub fn best_split(&self, k1: &KernelSpec, k2: &KernelSpec) -> Option<(u32, u32, [f64; 2], f64)> {
         let key = (k1.name.to_string(), k2.name.to_string());
-        if let Some(&v) = self.model_cache.lock().unwrap().get(&key) {
+        if let Some(v) = self.model_cache.get(&key) {
             return Some(v);
         }
         let s1 = self.model_solo_ipc(k1);
@@ -142,7 +142,7 @@ impl Coordinator {
             }
         }
         if let Some(v) = best {
-            self.model_cache.lock().unwrap().insert(key, v);
+            self.model_cache.insert(key, v);
         }
         best
     }

@@ -7,7 +7,10 @@
 //! [`Engine`] (Kernelet policy) and all engines share the one global
 //! arrival clock — before each arrival is routed, every engine advances
 //! to the arrival time, so routing observes *live* device state rather
-//! than a static pre-partition. Two routing policies:
+//! than a static pre-partition. [`MultiGpuDispatcher::run`] replays a
+//! pre-materialized [`Stream`]; [`MultiGpuDispatcher::run_source`]
+//! pulls a streaming [`ArrivalSource`] and feeds completions from every
+//! device back to it (closed-loop scenarios). Two routing policies:
 //!
 //! - [`DispatchPolicy::RoundRobin`] — oblivious, the baseline;
 //! - [`DispatchPolicy::LeastLoaded`] — route to the device whose live
@@ -22,7 +25,7 @@ use super::engine::{Engine, ExecutionReport, KerneletSelector};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
 use crate::kernel::KernelInstance;
-use crate::workload::Stream;
+use crate::workload::{ArrivalSource, Stream};
 
 /// Routing policy for arriving kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,57 +88,42 @@ impl MultiGpuDispatcher {
         overrun + queued
     }
 
-    /// Route and run the stream online; every device schedules its
-    /// queue with the Kernelet policy through its own engine.
-    pub fn run(&self, stream: &Stream) -> MultiGpuReport {
-        let n = self.devices.len();
-        let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
-        let mut selectors: Vec<KerneletSelector> =
-            self.devices.iter().map(|_| KerneletSelector).collect();
-        let mut routed: Vec<Vec<KernelInstance>> = vec![Vec::new(); n];
-
-        for (i, k) in stream.instances.iter().enumerate() {
-            let t = k.arrival_time;
-            // Advance every device to the arrival so routing sees live
-            // engine state, not the state at the previous arrival.
-            for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
-                engine.run_until(sel, t, true);
+    /// Pick the destination device for arrival `k`. `arrival_no` is
+    /// the 0-based global arrival index (round-robin's counter). For
+    /// least-loaded, one load evaluation per device per arrival (the
+    /// per-queue sum is O(pending), too heavy to repeat inside a
+    /// pairwise comparator).
+    fn route(&self, engines: &[Engine<'_>], arrival_no: usize, k: &KernelInstance) -> usize {
+        match self.policy {
+            DispatchPolicy::RoundRobin => arrival_no % self.devices.len(),
+            DispatchPolicy::LeastLoaded => {
+                let loads: Vec<f64> = (0..self.devices.len())
+                    .map(|d| self.live_load(d, &engines[d], k.arrival_time) + self.est_cost(d, k))
+                    .collect();
+                loads
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| a.total_cmp(b))
+                    .map(|(d, _)| d)
+                    .unwrap()
             }
-            let d = match self.policy {
-                DispatchPolicy::RoundRobin => i % n,
-                DispatchPolicy::LeastLoaded => {
-                    // One load evaluation per device per arrival (the
-                    // per-queue sum is O(pending), too heavy to repeat
-                    // inside a pairwise comparator).
-                    let loads: Vec<f64> = (0..n)
-                        .map(|d| self.live_load(d, &engines[d], t) + self.est_cost(d, k))
-                        .collect();
-                    loads
-                        .iter()
-                        .enumerate()
-                        .min_by(|(_, a), (_, b)| a.total_cmp(b))
-                        .map(|(d, _)| d)
-                        .unwrap()
-                }
-            };
-            routed[d].push(k.clone());
-            engines[d].submit(k.clone());
         }
+    }
 
+    /// Close out all engines into the fleet report. `routed[d]` is how
+    /// many kernels device `d` was handed; `total` the fleet-wide count.
+    fn assemble(
+        &self,
+        engines: Vec<Engine<'_>>,
+        routed: Vec<usize>,
+        total: usize,
+    ) -> MultiGpuReport {
         let mut per_device = Vec::new();
         let mut reports = Vec::new();
         let mut makespan = 0.0f64;
         let mut completed = 0usize;
-        for (((engine, sel), coord), part) in engines
-            .into_iter()
-            .zip(selectors.iter_mut())
-            .zip(&self.devices)
-            .zip(routed.into_iter())
-        {
-            let count = part.len();
-            let mut engine = engine;
-            engine.drain(sel);
-            let rep = engine.finish(&Stream { instances: part });
+        for ((engine, coord), count) in engines.into_iter().zip(&self.devices).zip(routed) {
+            let rep = engine.finish_online();
             assert_eq!(rep.kernels_completed, count, "{} lost kernels", coord.gpu.name);
             completed += rep.kernels_completed;
             if count > 0 {
@@ -144,13 +132,116 @@ impl MultiGpuDispatcher {
             per_device.push((coord.gpu.name.to_string(), count, rep.total_secs));
             reports.push(rep);
         }
-        assert_eq!(completed, stream.len(), "dispatcher lost kernels");
+        assert_eq!(completed, total, "dispatcher lost kernels");
         MultiGpuReport {
             makespan_secs: makespan,
             throughput_kps: completed as f64 / makespan.max(1e-12),
             per_device,
             reports,
         }
+    }
+
+    /// Route and run the stream online; every device schedules its
+    /// queue with the Kernelet policy through its own engine.
+    pub fn run(&self, stream: &Stream) -> MultiGpuReport {
+        let n = self.devices.len();
+        let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
+        let mut selectors: Vec<KerneletSelector> =
+            self.devices.iter().map(|_| KerneletSelector).collect();
+        let mut routed = vec![0usize; n];
+
+        for (i, k) in stream.instances.iter().enumerate() {
+            // Advance every device to the arrival so routing sees live
+            // engine state, not the state at the previous arrival.
+            for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
+                engine.run_until(sel, k.arrival_time, true);
+            }
+            let d = self.route(&engines, i, k);
+            routed[d] += 1;
+            engines[d].submit(k.clone());
+        }
+        for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
+            engine.drain(sel);
+        }
+        self.assemble(engines, routed, stream.len())
+    }
+
+    /// Route a streaming [`ArrivalSource`] online: same routing
+    /// policies as [`Self::run`], but arrivals are pulled one at a time
+    /// and completions from *every* device are fed back, so closed-loop
+    /// scenarios work across the fleet. While the source waits on
+    /// completions (no arrival scheduled), every busy engine advances
+    /// one dispatch decision per iteration, keeping the feedback loop
+    /// tight.
+    pub fn run_source(&self, source: &mut dyn ArrivalSource) -> MultiGpuReport {
+        let n = self.devices.len();
+        let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
+        let mut selectors: Vec<KerneletSelector> =
+            self.devices.iter().map(|_| KerneletSelector).collect();
+        let mut routed = vec![0usize; n];
+        let mut fed = vec![0usize; n];
+        let mut arrival_no = 0usize;
+
+        fn feed(engines: &[Engine<'_>], fed: &mut [usize], source: &mut dyn ArrivalSource) {
+            for (engine, cursor) in engines.iter().zip(fed.iter_mut()) {
+                let log = engine.completion_log();
+                while *cursor < log.len() {
+                    let (id, t) = log[*cursor];
+                    source.on_completion(id, t);
+                    *cursor += 1;
+                }
+            }
+        }
+
+        'outer: loop {
+            feed(&engines, &mut fed, source);
+            match source.peek_time() {
+                Some(t) => {
+                    // Advance devices toward the arrival one decision
+                    // at a time, feeding completions between rounds, so
+                    // a closed-loop resubmit that lands *earlier* than
+                    // `t` is admitted on time — the same guarantee
+                    // Engine::run_source gives single-device. Open-loop
+                    // sources never re-peek differently, making this
+                    // decision-for-decision identical to a run_until
+                    // sweep.
+                    loop {
+                        let mut advanced = false;
+                        for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
+                            if !engine.pending().is_empty() && engine.clock_secs() < t {
+                                engine.step(sel, Some(t), true);
+                                advanced = true;
+                            }
+                        }
+                        if !advanced {
+                            break;
+                        }
+                        feed(&engines, &mut fed, source);
+                        match source.peek_time() {
+                            Some(t2) if t2 >= t => {}
+                            // An earlier arrival was injected (or the
+                            // source emptied): re-evaluate from the top.
+                            _ => continue 'outer,
+                        }
+                    }
+                    let k = source.next_arrival().expect("peeked arrival disappeared");
+                    let d = self.route(&engines, arrival_no, &k);
+                    arrival_no += 1;
+                    routed[d] += 1;
+                    engines[d].submit(k);
+                }
+                None => {
+                    if engines.iter().all(|e| e.pending().is_empty()) {
+                        break;
+                    }
+                    let more = source.more_expected();
+                    for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
+                        engine.step(sel, None, more);
+                    }
+                }
+            }
+        }
+        self.assemble(engines, routed, arrival_no)
     }
 }
 
@@ -217,6 +308,31 @@ mod tests {
         // The faster device takes more kernels under least-loaded.
         let (c2050_n, gtx_n) = (b.per_device[0].1, b.per_device[1].1);
         assert!(gtx_n > c2050_n, "gtx={gtx_n} c2050={c2050_n}");
+    }
+
+    #[test]
+    fn streaming_source_matches_vec_routing() {
+        use crate::workload::{ClosedLoopSource, ReplaySource};
+        let gpus = [GpuConfig::c2050(), GpuConfig::gtx680()];
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
+            let d = MultiGpuDispatcher::new(&gpus, policy);
+            let stream = Stream::poisson(Mix::MIX, 3, 400.0, 77);
+            let by_vec = d.run(&stream);
+            let by_src = d.run_source(&mut ReplaySource::from_stream(&stream));
+            assert_eq!(by_src.makespan_secs, by_vec.makespan_secs, "{policy:?}");
+            for (a, b) in by_src.per_device.iter().zip(&by_vec.per_device) {
+                assert_eq!(a, b, "{policy:?}");
+            }
+        }
+        // Closed-loop clients across the fleet: every job completes,
+        // and backpressure bounds the fleet-wide in-flight population
+        // by the client count.
+        let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::LeastLoaded);
+        let mut src = ClosedLoopSource::new(Mix::MIX, 4, 50.0, 24, 5);
+        let rep = d.run_source(&mut src);
+        assert_eq!(rep.per_device.iter().map(|p| p.1).sum::<usize>(), 24);
+        assert!(rep.reports.iter().all(|r| r.incomplete == 0));
+        assert!(rep.reports.iter().all(|r| r.peak_queue_depth() <= 4));
     }
 
     #[test]

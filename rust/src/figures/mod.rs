@@ -20,11 +20,15 @@
 //! | `fig12`   | CP, predicted vs measured |
 //! | `fig13`   | BASE vs Kernelet vs OPT across workloads |
 //! | `fig14`   | CDF of MC(1000) schedule times |
+//!
+//! Repo-native telemetry ids: `qdepth` (pending-queue timeline) and
+//! `saturation` (offered-load sweep over the streaming scenarios).
 
 pub mod report;
 pub mod scheduling;
 pub mod slicing;
 pub mod tables;
+pub mod throughput;
 pub mod validation;
 
 pub use report::Report;
@@ -32,10 +36,10 @@ pub use report::Report;
 use anyhow::{bail, Result};
 
 /// All figure/table ids, in paper order, plus repo-native telemetry
-/// reports (`qdepth`).
-pub const ALL_IDS: [&str; 14] = [
+/// reports (`qdepth`, `saturation`).
+pub const ALL_IDS: [&str; 15] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table6", "fig14", "qdepth",
+    "fig13", "table6", "fig14", "qdepth", "saturation",
 ];
 
 /// Options shared by the generators.
@@ -80,6 +84,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "fig13" => scheduling::fig13(opts),
         "fig14" => scheduling::fig14(opts),
         "qdepth" => scheduling::qdepth(opts),
+        "saturation" => throughput::saturation(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

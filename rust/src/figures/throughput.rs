@@ -1,0 +1,240 @@
+//! Saturation curves (repo-native, not a paper artifact): delivered
+//! throughput, turnaround and utilization as the offered load sweeps
+//! from under- to over-subscription, per arrival scenario × scheduling
+//! policy.
+//!
+//! The load factor is defined against the device's BASE solo capacity
+//! (kernels/sec running the mix whole, back to back): load 1.0 offers
+//! exactly what a consolidation scheduler could sustain, so any
+//! throughput above the diagonal at load ≥ 1 is co-scheduling profit.
+//! `kernelet figure saturation` renders the table; the `throughput`
+//! bench serializes the same sweep to `BENCH_throughput.json` so CI
+//! tracks the trajectory.
+
+use super::report::{f, Report};
+use crate::config::GpuConfig;
+use crate::coordinator::{Coordinator, Engine, FifoSelector, KerneletSelector, Selector};
+use crate::kernel::KernelSpec;
+use crate::stats::split_seed;
+use crate::workload::{scenario_source, Mix};
+
+/// Scenarios the default sweep crosses (all streaming; "saturated" is
+/// fig13's territory).
+pub const SWEEP_SCENARIOS: [&str; 5] = ["poisson", "bursty", "diurnal", "heavytail", "closed"];
+
+/// Policies the sweep compares.
+pub const SWEEP_POLICIES: [&str; 2] = ["kernelet", "base"];
+
+/// Offered-load factors relative to BASE solo capacity.
+pub const DEFAULT_LOADS: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
+
+/// Build the selector for a sweep policy name — the one mapping every
+/// sweep/CLI/test site shares, so adding a policy to [`SWEEP_POLICIES`]
+/// is wired in exactly one place.
+pub fn selector_for(policy: &str) -> Box<dyn Selector> {
+    match policy {
+        "kernelet" => Box::new(KerneletSelector),
+        "base" => Box::new(FifoSelector),
+        other => panic!("unknown policy {other} (valid: {SWEEP_POLICIES:?})"),
+    }
+}
+
+/// One (scenario, load, policy) measurement.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub scenario: &'static str,
+    pub policy: &'static str,
+    pub load: f64,
+    /// Offered arrival rate (kernels/sec).
+    pub offered_kps: f64,
+    /// Kernels completed (always the whole scenario — the engine
+    /// drains).
+    pub kernels: usize,
+    pub throughput_kps: f64,
+    pub mean_turnaround_s: f64,
+    pub utilization: f64,
+    pub mean_queue_depth: f64,
+    pub peak_queue_depth: usize,
+}
+
+/// BASE solo capacity of `gpu` on `mix` in kernels/sec: the reciprocal
+/// mean whole-kernel service time.
+pub fn base_capacity_kps(coord: &Coordinator, mix: Mix) -> f64 {
+    let specs: Vec<KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
+    let mean_secs = specs
+        .iter()
+        .map(|s| coord.gpu.cycles_to_secs(coord.simcache.solo_full(s)))
+        .sum::<f64>()
+        / specs.len() as f64;
+    1.0 / mean_secs
+}
+
+/// Run the full scenario × load × policy cross on one C2050.
+/// `instances_per_app` comes from `opts`; both policies of a point see
+/// the identical arrival sequence (same derived seed). Returns the
+/// points plus the BASE capacity the load factors were scaled by.
+pub fn load_sweep(
+    opts: &super::FigOptions,
+    loads: &[f64],
+    scenarios: &[&'static str],
+) -> (Vec<SweepPoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let per_app = opts.instances_per_app;
+    let mut out = Vec::new();
+    for (si, &scenario) in scenarios.iter().enumerate() {
+        for (li, &load) in loads.iter().enumerate() {
+            let offered = load * capacity;
+            let seed = split_seed(opts.seed, (si * 1000 + li) as u64);
+            for &policy in &SWEEP_POLICIES {
+                let mut source = scenario_source(scenario, mix, per_app, offered, seed)
+                    .expect("sweep scenario names are valid");
+                let mut sel = selector_for(policy);
+                let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
+                assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
+                out.push(SweepPoint {
+                    scenario,
+                    policy,
+                    load,
+                    offered_kps: offered,
+                    kernels: rep.kernels_completed,
+                    throughput_kps: rep.throughput_kps,
+                    mean_turnaround_s: rep.mean_turnaround_secs,
+                    utilization: rep.utilization,
+                    mean_queue_depth: rep.mean_queue_depth(),
+                    peak_queue_depth: rep.peak_queue_depth(),
+                });
+            }
+        }
+    }
+    (out, capacity)
+}
+
+/// The `saturation` figure: the default sweep as a report table.
+pub fn saturation(opts: &super::FigOptions) -> Report {
+    // The sweep is (scenarios × loads × policies) full engine runs;
+    // cap the per-run size so `figure all` stays tractable while
+    // benches/CI pick their own scale via KERNELET_INSTANCES.
+    let opts = super::FigOptions {
+        instances_per_app: opts.instances_per_app.min(200),
+        ..opts.clone()
+    };
+    let (points, capacity) = load_sweep(&opts, &DEFAULT_LOADS, &SWEEP_SCENARIOS);
+    let mut r = Report::new(
+        "saturation",
+        "Saturation curves: offered load vs delivered throughput (scenario x policy)",
+        &[
+            "scenario",
+            "load",
+            "policy",
+            "offered_kps",
+            "throughput_kps",
+            "turnaround_s",
+            "util",
+            "mean_q",
+            "peak_q",
+        ],
+    );
+    for p in &points {
+        r.row(vec![
+            p.scenario.to_string(),
+            f(p.load, 2),
+            p.policy.to_string(),
+            f(p.offered_kps, 1),
+            f(p.throughput_kps, 1),
+            f(p.mean_turnaround_s, 4),
+            f(p.utilization, 3),
+            f(p.mean_queue_depth, 1),
+            p.peak_queue_depth.to_string(),
+        ]);
+    }
+    r.note(format!(
+        "load 1.0 = BASE solo capacity ({capacity:.1} kernels/s on C2050/MIX); instances/app = {}",
+        opts.instances_per_app
+    ));
+    r.note("closed-loop offered rate is think-limited: realized load self-throttles with service time");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigOptions;
+
+    fn small() -> FigOptions {
+        FigOptions { instances_per_app: 6, mc_samples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_completes_every_kernel_and_covers_the_cross() {
+        let scenarios: [&'static str; 3] = ["poisson", "bursty", "heavytail"];
+        let (points, capacity) = load_sweep(&small(), &[0.5, 2.0], &scenarios);
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), 3 * 2 * 2);
+        for p in &points {
+            assert!(p.kernels > 0, "{p:?}");
+            assert!(p.throughput_kps > 0.0, "{p:?}");
+            assert!(p.utilization > 0.0 && p.utilization <= 1.0 + 1e-9, "{p:?}");
+            assert!(p.mean_turnaround_s.is_finite() && p.mean_turnaround_s > 0.0, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn underload_tracks_offered_overload_saturates() {
+        // At load 0.25 the device keeps up: delivered ≈ offered. At
+        // load 4.0 the queue is the bottleneck: delivered is far below
+        // offered, and the queue grows much deeper. 40 instances/app
+        // keeps the arrival-span noise (~1/√160) well inside the
+        // tolerance.
+        let opts = FigOptions { instances_per_app: 40, mc_samples: 1, ..Default::default() };
+        let (points, _) = load_sweep(&opts, &[0.25, 4.0], &["poisson"]);
+        let at = |load: f64, policy: &str| {
+            points
+                .iter()
+                .find(|p| p.load == load && p.policy == policy)
+                .unwrap()
+        };
+        let low = at(0.25, "base");
+        let high = at(4.0, "base");
+        assert!(
+            (low.throughput_kps / low.offered_kps - 1.0).abs() < 0.35,
+            "underload should track offered: {low:?}"
+        );
+        assert!(high.throughput_kps < high.offered_kps * 0.75, "overload must saturate: {high:?}");
+        assert!(high.mean_queue_depth > low.mean_queue_depth, "queue must build up");
+        assert!(high.utilization > low.utilization);
+    }
+
+    #[test]
+    fn kernelet_not_worse_than_base_when_saturated() {
+        let (points, _) = load_sweep(&small(), &[2.0], &["poisson", "bursty"]);
+        for scenario in ["poisson", "bursty"] {
+            let get = |policy: &str| {
+                points
+                    .iter()
+                    .find(|p| p.scenario == scenario && p.policy == policy)
+                    .unwrap()
+                    .throughput_kps
+            };
+            assert!(
+                get("kernelet") >= get("base") * 0.95,
+                "{scenario}: kernelet {} vs base {}",
+                get("kernelet"),
+                get("base")
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_report_is_complete() {
+        let r = saturation(&small());
+        assert_eq!(r.rows.len(), SWEEP_SCENARIOS.len() * DEFAULT_LOADS.len() * 2);
+        let sc = r.col("scenario");
+        for s in SWEEP_SCENARIOS {
+            assert!(r.rows.iter().any(|row| row[sc] == s), "missing {s}");
+        }
+        assert_eq!(r.notes.len(), 2);
+    }
+}

@@ -36,6 +36,8 @@
 //! - [`workload`] — Poisson-arrival workload generation (Table 5).
 //! - [`runtime`] — PJRT artifact loading, sliced real-compute dispatch,
 //!   and the real-execution `TimingBackend` for the engine.
+//! - [`sharded`] — sharded read-optimized maps + atomic counters the
+//!   hot-path caches are built on.
 //! - [`figures`] — regenerators for every paper table and figure.
 //! - [`bench`] — the micro-benchmark harness used by `cargo bench`
 //!   (criterion is unavailable offline).
@@ -49,6 +51,7 @@ pub mod model;
 pub mod profiler;
 pub mod ptx;
 pub mod runtime;
+pub mod sharded;
 pub mod sim;
 pub mod slicer;
 pub mod stats;

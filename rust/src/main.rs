@@ -7,6 +7,7 @@
 //! kernelet figure <4|6|...|14|all> [--out DIR] [--quick]
 //! kernelet profile <bench|all> [--gpu c2050|gtx680]
 //! kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu ...] [--instances N]
+//!                   [--scenario NAME] [--load X] [--trace FILE]
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
 //! kernelet serve [--requests N]           E2E sliced serving demo (PJRT)
 //! ```
@@ -17,12 +18,13 @@ use anyhow::{bail, Context, Result};
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::{run_base, run_opt};
-use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::coordinator::{run_kernelet, Coordinator, Engine};
+use kernelet::figures::throughput::{base_capacity_kps, selector_for};
 use kernelet::figures::{self, FigOptions};
 use kernelet::kernel::BenchmarkApp;
 use kernelet::profiler;
 use kernelet::runtime::{ArtifactRegistry, SlicedRunner};
-use kernelet::workload::{Mix, Stream};
+use kernelet::workload::{ArrivalSource, Mix, Stream};
 
 fn main() {
     if let Err(e) = run() {
@@ -53,11 +55,20 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|all> [--out DIR] [--quick]
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|all> [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
+                    [--scenario saturated|poisson|bursty|diurnal|heavytail|closed|trace]
+                    [--load X] [--trace FILE] [--seed N]
   kernelet slice-ptx <file.ptx> [--dims 1|2]
   kernelet serve [--requests N]
+
+`schedule --scenario` streams arrivals online (load X = offered rate as
+a multiple of the device's BASE solo capacity; default 1.0) and compares
+BASE vs Kernelet from the same seed — open-loop scenarios see identical
+arrival sequences; closed-loop arrivals are completion-driven, so each
+policy shapes its own. Without --scenario the classic saturated-queue
+BASE/Kernelet/OPT comparison runs.
 ";
 
 fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
@@ -144,6 +155,9 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
     let gpu = parse_gpu(args)?;
     let mix = Mix::from_name(flag_value(args, "--mix").unwrap_or("ALL")).context("bad --mix")?;
     let instances: u32 = flag_value(args, "--instances").unwrap_or("100").parse()?;
+    if let Some(scenario) = flag_value(args, "--scenario") {
+        return cmd_schedule_scenario(args, &gpu, mix, instances, scenario);
+    }
     let coord = Coordinator::new(&gpu);
     let stream = Stream::saturated(mix, instances, kernelet::sim::DEFAULT_SEED);
     println!(
@@ -170,6 +184,68 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
         opt.throughput_kps,
         (ours.total_secs - opt.total_secs) / opt.total_secs * 100.0
     );
+    Ok(())
+}
+
+/// `schedule --scenario NAME`: stream arrivals online and compare BASE
+/// vs Kernelet from the same seed. Open-loop scenarios give both
+/// policies the identical arrival sequence; the closed loop reacts to
+/// each policy's own completions, so only the clients (not the
+/// sequence) are shared.
+fn cmd_schedule_scenario(
+    args: &[String],
+    gpu: &GpuConfig,
+    mix: Mix,
+    instances: u32,
+    scenario: &str,
+) -> Result<()> {
+    let load: f64 = flag_value(args, "--load").unwrap_or("1.0").parse()?;
+    let seed: u64 = match flag_value(args, "--seed") {
+        Some(s) => s.parse()?,
+        None => kernelet::sim::DEFAULT_SEED,
+    };
+    let coord = Coordinator::new(gpu);
+    let capacity = base_capacity_kps(&coord, mix);
+    let offered = load * capacity;
+
+    let make_source = |seed: u64| -> Result<Box<dyn ArrivalSource>> {
+        if scenario == "trace" {
+            let path = flag_value(args, "--trace").context("--scenario trace needs --trace FILE")?;
+            let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            Ok(Box::new(kernelet::workload::trace_source(&src)?))
+        } else {
+            kernelet::workload::scenario_source(scenario, mix, instances, offered, seed)
+        }
+    };
+
+    println!(
+        "streaming scenario {scenario} on {} (mix {}, {} instances/app, load {:.2} = {:.1} kernels/s offered; BASE capacity {:.1} kernels/s)",
+        gpu.name,
+        mix.name(),
+        instances,
+        load,
+        offered,
+        capacity
+    );
+    println!(
+        "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7}",
+        "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds"
+    );
+    for policy in ["base", "kernelet"] {
+        let mut source = make_source(seed)?;
+        let mut sel = selector_for(policy);
+        let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
+        println!(
+            "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7}",
+            policy,
+            rep.total_secs,
+            rep.throughput_kps,
+            rep.mean_turnaround_secs,
+            rep.utilization,
+            rep.mean_queue_depth(),
+            rep.coschedule_rounds
+        );
+    }
     Ok(())
 }
 

@@ -106,6 +106,13 @@ pub fn steady_state_power(t: &Transition, tol: f64, max_iter: usize) -> Vec<f64>
 }
 
 /// Steady state by direct linear solve: πP = π, Σπ = 1.
+///
+/// A reducible chain (more than one closed communicating class) makes
+/// the system singular — the stationary distribution is not unique.
+/// Rather than aborting the whole run from library code, a near-zero
+/// pivot falls back to power iteration on the *lazy* chain (I + P)/2
+/// (same stationary vectors, guaranteed aperiodic), which converges to
+/// *a* stationary distribution (the uniform start mixes the classes).
 pub fn steady_state_dense(t: &Transition) -> Vec<f64> {
     let n = t.n;
     // Build A = Pᵀ − I with the last equation replaced by Σπ = 1.
@@ -123,7 +130,21 @@ pub fn steady_state_dense(t: &Transition) -> Vec<f64> {
         a[n - 1][j] = 1.0;
     }
     b[n - 1] = 1.0;
-    gauss(&mut a, &mut b);
+    if !gauss(&mut a, &mut b) {
+        // Run the fallback on the lazy chain (I + P)/2: it has the same
+        // stationary vectors but every state gains a self-loop, so the
+        // iteration cannot oscillate on a periodic closed class (plain
+        // P would ping-pong forever and return a non-stationary
+        // iterate).
+        let mut lazy = t.clone();
+        for i in 0..n {
+            for j in 0..n {
+                lazy.p[i * n + j] *= 0.5;
+            }
+            lazy.p[i * n + i] += 0.5;
+        }
+        return steady_state_power(&lazy, 1e-10, 20_000);
+    }
     // Numerical noise can leave tiny negatives; clamp + renormalize.
     for x in b.iter_mut() {
         if *x < 0.0 {
@@ -135,7 +156,12 @@ pub fn steady_state_dense(t: &Transition) -> Vec<f64> {
     b
 }
 
-fn gauss(a: &mut [Vec<f64>], b: &mut [f64]) {
+/// Gauss-Jordan elimination with partial pivoting. Returns `false`
+/// (leaving `a`/`b` partially eliminated) when the best available pivot
+/// is numerically zero — the system is singular or near-singular and
+/// the answer would be garbage.
+fn gauss(a: &mut [Vec<f64>], b: &mut [f64]) -> bool {
+    const PIVOT_MIN: f64 = 1e-12;
     let n = b.len();
     for col in 0..n {
         let mut piv = col;
@@ -147,7 +173,9 @@ fn gauss(a: &mut [Vec<f64>], b: &mut [f64]) {
         a.swap(col, piv);
         b.swap(col, piv);
         let d = a[col][col];
-        assert!(d.abs() > 1e-14, "singular transition system");
+        if d.abs() <= PIVOT_MIN {
+            return false;
+        }
         for r in 0..n {
             if r == col {
                 continue;
@@ -165,6 +193,7 @@ fn gauss(a: &mut [Vec<f64>], b: &mut [f64]) {
     for i in 0..n {
         b[i] /= a[i][i];
     }
+    true
 }
 
 /// Binomial PMF table: `out[k] = C(n,k) p^k (1-p)^(n-k)` for k in 0..=n.
@@ -238,6 +267,56 @@ mod tests {
         let b = steady_state_dense(&t);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-8, "power={x} dense={y}");
+        }
+    }
+
+    #[test]
+    fn reducible_chain_falls_back_without_panicking() {
+        // Two disconnected 2-state chains: the stationary distribution
+        // is not unique, so the dense system is singular. The seed
+        // `assert!`ed "singular transition system" here, killing the
+        // whole run; now the solver must fall back to power iteration
+        // and return a valid distribution.
+        let mut t = Transition::new(4);
+        t.row_mut(0)[0] = 0.7;
+        t.row_mut(0)[1] = 0.3;
+        t.row_mut(1)[0] = 0.1;
+        t.row_mut(1)[1] = 0.9;
+        t.row_mut(2)[2] = 0.5;
+        t.row_mut(2)[3] = 0.5;
+        t.row_mut(3)[2] = 0.2;
+        t.row_mut(3)[3] = 0.8;
+        t.validate(1e-12);
+        let pi = steady_state_dense(&t);
+        assert_eq!(pi.len(), 4);
+        assert!((pi.iter().sum::<f64>() - 1.0).abs() < 1e-8, "{pi:?}");
+        assert!(pi.iter().all(|&x| x.is_finite() && x >= 0.0), "{pi:?}");
+        // Each closed class carries the mass the uniform start gave it,
+        // distributed by that class's own stationary vector.
+        assert!((pi[0] + pi[1] - 0.5).abs() < 1e-6, "{pi:?}");
+        assert!((pi[0] - 0.5 * 0.1 / 0.4).abs() < 1e-6, "{pi:?}");
+    }
+
+    #[test]
+    fn periodic_reducible_chain_converges_via_lazy_fallback() {
+        // A periodic closed class {0,1} (deterministic 0<->1 swap) plus
+        // a disjoint aperiodic class {2,3}: power iteration on plain P
+        // would oscillate on the first class forever; the lazy-chain
+        // fallback must still land on a stationary distribution.
+        let mut t = Transition::new(4);
+        t.row_mut(0)[1] = 1.0;
+        t.row_mut(1)[0] = 1.0;
+        t.row_mut(2)[2] = 0.6;
+        t.row_mut(2)[3] = 0.4;
+        t.row_mut(3)[2] = 0.4;
+        t.row_mut(3)[3] = 0.6;
+        t.validate(1e-12);
+        let pi = steady_state_dense(&t);
+        assert!((pi.iter().sum::<f64>() - 1.0).abs() < 1e-8, "{pi:?}");
+        // Stationarity: πP = π.
+        for j in 0..4 {
+            let pij: f64 = (0..4).map(|i| pi[i] * t.row(i)[j]).sum();
+            assert!((pij - pi[j]).abs() < 1e-6, "column {j}: {pi:?}");
         }
     }
 

@@ -1,0 +1,201 @@
+//! Sharded, read-optimized concurrent maps for the scheduler's hot-path
+//! caches.
+//!
+//! The seed guarded every memoization table (`SimCache`, the greedy
+//! model caches, `SliceSizeCache`) with a single `Mutex<HashMap>`, so
+//! `prewarm_pairs`/`prewarm_solo` worker threads and per-device engines
+//! serialized on one lock — and the warm path (a pure read) paid a
+//! writer lock per probe. [`ShardedMap`] splits the key space over
+//! `N` independent `RwLock<HashMap>` shards (key-hash → shard), so
+//! readers on different shards never touch the same lock and readers on
+//! the *same* shard share it. Hit/miss telemetry moves to
+//! [`CacheCounters`] (two `AtomicU64`s) instead of two more mutexes per
+//! lookup.
+//!
+//! Values are returned by clone; cached entries are small `Copy`-ish
+//! measurement records. Concurrent fill of the same key is benign: the
+//! backing computations are deterministic, so the last writer stores
+//! the same value the first did.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Default shard count. Power of two so the hash can be masked; 16 is
+/// comfortably past the thread counts `prewarm_*` spawns.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// A concurrent hash map split into power-of-two lock shards.
+pub struct ShardedMap<K, V> {
+    shards: Vec<RwLock<HashMap<K, V>>>,
+    mask: usize,
+}
+
+impl<K: Hash + Eq, V: Clone> ShardedMap<K, V> {
+    pub fn new() -> Self {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(n: usize) -> Self {
+        let n = n.max(1).next_power_of_two();
+        Self { shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(), mask: n - 1 }
+    }
+
+    fn shard<Q>(&self, key: &Q) -> &RwLock<HashMap<K, V>>
+    where
+        Q: Hash + ?Sized,
+    {
+        // DefaultHasher::new() uses fixed keys: shard placement is
+        // deterministic across runs (only placement — results never
+        // depend on it). The `Borrow` contract guarantees a borrowed
+        // form hashes identically to the owned key, so lookups land on
+        // the shard the insert chose.
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & self.mask]
+    }
+
+    /// Read a value (shared lock on one shard only). Accepts any
+    /// borrowed form of the key, like [`HashMap::get`] — so a `&str`
+    /// probes a `String`-keyed map without allocating on the hit path.
+    pub fn get<Q>(&self, key: &Q) -> Option<V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        self.shard(key).read().unwrap().get(key).cloned()
+    }
+
+    /// Insert a value (exclusive lock on one shard only).
+    pub fn insert(&self, key: K, value: V) {
+        self.shard(&key).write().unwrap().insert(key, value);
+    }
+
+    /// Total entries across shards (telemetry; takes each read lock in
+    /// turn, so the count is only a snapshot under concurrency).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K: Hash + Eq, V: Clone> Default for ShardedMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Lock-free hit/miss counters for a cache.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (hits, misses) snapshot.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_insert_roundtrip() {
+        let m: ShardedMap<(String, u32), f64> = ShardedMap::new();
+        assert!(m.get(&("a".to_string(), 1)).is_none());
+        m.insert(("a".to_string(), 1), 2.5);
+        m.insert(("b".to_string(), 2), 3.5);
+        assert_eq!(m.get(&("a".to_string(), 1)), Some(2.5));
+        assert_eq!(m.get(&("b".to_string(), 2)), Some(3.5));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn borrowed_key_lookup() {
+        let m: ShardedMap<String, u32> = ShardedMap::new();
+        m.insert("alpha".to_string(), 7);
+        // &str probes a String-keyed map (no allocation on the hit
+        // path) and must land on the shard the insert chose.
+        assert_eq!(m.get("alpha"), Some(7));
+        assert_eq!(m.get("beta"), None);
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        let m: ShardedMap<u64, u64> = ShardedMap::with_shards(5);
+        assert_eq!(m.shards.len(), 8);
+        let m: ShardedMap<u64, u64> = ShardedMap::with_shards(0);
+        assert_eq!(m.shards.len(), 1);
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let m: ShardedMap<u64, u64> = ShardedMap::with_shards(16);
+        for k in 0..256u64 {
+            m.insert(k, k);
+        }
+        let occupied = m.shards.iter().filter(|s| !s.read().unwrap().is_empty()).count();
+        assert!(occupied >= 8, "only {occupied}/16 shards used");
+        assert_eq!(m.len(), 256);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers() {
+        let m: ShardedMap<u64, u64> = ShardedMap::new();
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let m = &m;
+                scope.spawn(move || {
+                    for i in 0..200u64 {
+                        let k = t * 1000 + i;
+                        m.insert(k, k * 2);
+                        assert_eq!(m.get(&k), Some(k * 2));
+                    }
+                });
+            }
+        });
+        assert_eq!(m.len(), 8 * 200);
+    }
+
+    #[test]
+    fn counters_are_atomic() {
+        let c = CacheCounters::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = &c;
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.hit();
+                    }
+                    for _ in 0..500 {
+                        c.miss();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.snapshot(), (4000, 2000));
+    }
+}

@@ -14,11 +14,9 @@
 //! rectification on PTX — lives in [`crate::ptx::rectify`]; this module
 //! only decides *sizes*.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
+use crate::sharded::ShardedMap;
 use crate::sim;
 
 /// Default overhead budget: 2% (paper §4.1).
@@ -56,10 +54,19 @@ pub fn min_slice_size(gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64, seed:
     spec.grid_blocks
 }
 
-/// Cache of minimum slice sizes keyed by (gpu, kernel name).
+/// Cache of minimum slice sizes keyed by (gpu, kernel name, grid,
+/// budget).
+///
+/// The budget is part of the key as its exact f64 bit pattern: the seed
+/// omitted it, so whichever budget probed a kernel first silently won
+/// for every later query with a different budget. The grid is in the
+/// key too — [`min_slice_size`] breaks and falls back on
+/// `spec.grid_blocks`, and trace replay can submit same-name kernels
+/// with overridden grids. Sharded storage (see [`crate::sharded`])
+/// keeps concurrent engines off a single lock.
 #[derive(Default)]
 pub struct SliceSizeCache {
-    map: Mutex<HashMap<(String, String), u32>>,
+    map: ShardedMap<(String, String, u32, u64), u32>,
 }
 
 impl SliceSizeCache {
@@ -68,12 +75,17 @@ impl SliceSizeCache {
     }
 
     pub fn get(&self, gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64) -> u32 {
-        let key = (gpu.name.to_string(), spec.name.to_string());
-        if let Some(&s) = self.map.lock().unwrap().get(&key) {
+        let key = (
+            gpu.name.to_string(),
+            spec.name.to_string(),
+            spec.grid_blocks,
+            budget_pct.to_bits(),
+        );
+        if let Some(s) = self.map.get(&key) {
             return s;
         }
         let s = min_slice_size(gpu, spec, budget_pct, sim::DEFAULT_SEED ^ 0x511CE);
-        self.map.lock().unwrap().insert(key, s);
+        self.map.insert(key, s);
         s
     }
 }
@@ -123,5 +135,41 @@ mod tests {
         let cache = SliceSizeCache::new();
         let spec = BenchmarkApp::ST.spec();
         assert_eq!(cache.get(&gpu, &spec, 2.0), cache.get(&gpu, &spec, 2.0));
+    }
+
+    #[test]
+    fn budget_is_part_of_cache_key() {
+        // Regression: the seed keyed only (gpu, kernel), so the first
+        // caller's budget won for every later budget. A near-zero
+        // budget admits no candidate (falls back to the whole grid); a
+        // huge budget admits the very first (one SM generation). Both
+        // queried through one cache must disagree.
+        let gpu = GpuConfig::c2050();
+        let cache = SliceSizeCache::new();
+        let spec = BenchmarkApp::TEA.spec();
+        let tight = cache.get(&gpu, &spec, 1e-9);
+        let generous = cache.get(&gpu, &spec, 1e9);
+        assert_eq!(tight, spec.grid_blocks, "tight budget must degenerate to non-sliced");
+        assert_eq!(generous, gpu.num_sms, "generous budget must take the smallest candidate");
+        assert_ne!(tight, generous, "budget ignored in the cache key");
+        // And each budget's answer is itself cached stably.
+        assert_eq!(cache.get(&gpu, &spec, 1e-9), tight);
+        assert_eq!(cache.get(&gpu, &spec, 1e9), generous);
+    }
+
+    #[test]
+    fn grid_is_part_of_cache_key() {
+        // Trace replay can submit same-name kernels with overridden
+        // grids; the whole-grid fallback makes the answer depend on the
+        // grid, so the key must too.
+        let gpu = GpuConfig::c2050();
+        let cache = SliceSizeCache::new();
+        let spec = BenchmarkApp::MM.spec();
+        let tiny = spec.with_grid(gpu.num_sms);
+        let a = cache.get(&gpu, &tiny, 1e-9);
+        let b = cache.get(&gpu, &spec, 1e-9);
+        assert_eq!(a, tiny.grid_blocks);
+        assert_eq!(b, spec.grid_blocks);
+        assert_ne!(a, b, "grid ignored in the cache key");
     }
 }

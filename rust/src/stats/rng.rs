@@ -128,6 +128,21 @@ impl Xoshiro256 {
         mean + std * z
     }
 
+    /// Log-normally distributed sample: `exp(N(mu, sigma))`. Median is
+    /// `exp(mu)`; heavy right tail grows with `sigma`.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        assert!(sigma >= 0.0);
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Pareto-distributed sample with shape `alpha` and scale `xm`
+    /// (support `[xm, ∞)`; mean is infinite for `alpha <= 1`).
+    pub fn pareto(&mut self, alpha: f64, xm: f64) -> f64 {
+        assert!(alpha > 0.0 && xm > 0.0);
+        let u = 1.0 - self.f64(); // in (0, 1]: avoid div by zero
+        xm / u.powf(1.0 / alpha)
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -203,6 +218,33 @@ mod tests {
         let n = 50_000;
         let mean: f64 = (0..n).map(|_| r.poisson(100.0) as f64).sum::<f64>() / n as f64;
         assert!((mean - 100.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut r = Xoshiro256::new(23);
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(1.0, 0.8)).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let median = xs[n / 2];
+        let expect = 1.0f64.exp();
+        assert!((median / expect - 1.0).abs() < 0.05, "median={median}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn pareto_support_and_tail() {
+        let mut r = Xoshiro256::new(29);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.pareto(2.0, 1.5)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.5));
+        // Median of Pareto(alpha, xm) is xm * 2^(1/alpha).
+        let mut s = xs.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let expect = 1.5 * 2.0f64.powf(0.5);
+        assert!((s[n / 2] / expect - 1.0).abs() < 0.05, "median={}", s[n / 2]);
+        // Heavy tail: the max dwarfs the median.
+        assert!(s[n - 1] > 10.0 * s[n / 2]);
     }
 
     #[test]

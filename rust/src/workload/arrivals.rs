@@ -1,0 +1,943 @@
+//! Online arrival sources — streaming workload scenarios.
+//!
+//! The seed pre-materialized every workload as a sorted
+//! [`Stream`](super::Stream) `Vec`, which can only express what fits in
+//! memory and is known up front. An [`ArrivalSource`] is pulled by the
+//! engine one arrival at a time ([`crate::coordinator::Engine::run_source`]),
+//! which admits scenarios a pre-sorted `Vec` cannot:
+//!
+//! - [`PoissonSource`] — the paper's Table 5 mixes, streamed. Kept
+//!   **bit-identical** to [`Stream::poisson`](super::Stream::poisson)
+//!   (same RNG draw order, same ids, same tie-breaking) so the frozen
+//!   `Vec` path remains the differential oracle.
+//! - [`BurstySource`] — Markov-modulated Poisson (calm/burst states
+//!   with exponential sojourns): the diurnal-scale "thundering herd".
+//! - [`DiurnalSource`] — sinusoidal rate curve sampled by thinning.
+//! - [`HeavyTailSource`] — Poisson arrivals whose *service demand* is
+//!   heavy-tailed: grids scaled by a bucketed Pareto factor.
+//! - [`ClosedLoopSource`] — N clients with exponential think time;
+//!   arrivals depend on completions via [`ArrivalSource::on_completion`].
+//! - [`ReplaySource`] — any prebuilt instance list, including JSON
+//!   traces via [`parse_trace`].
+//!
+//! All sources draw from the crate's deterministic
+//! [`Xoshiro256`](crate::stats::Xoshiro256), so every scenario is
+//! reproducible from its seed.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Mix, Stream};
+use crate::kernel::{BenchmarkApp, KernelInstance, KernelSpec};
+use crate::stats::Xoshiro256;
+
+/// An online arrival process. The engine *pulls*: it peeks the next
+/// arrival time to know how far to run, pops the instance when the
+/// clock gets there, and pushes completions back for closed-loop
+/// sources.
+///
+/// Contract: [`peek_time`](Self::peek_time) returns the time of the
+/// instance the next [`next_arrival`](Self::next_arrival) call will
+/// yield. A source may answer `None` while earlier submissions are
+/// still in flight (closed-loop clients all waiting), but once the
+/// device is idle *and* all completions have been delivered, `None`
+/// means exhausted.
+pub trait ArrivalSource {
+    /// Scenario name (reports, benches, traces).
+    fn scenario(&self) -> &'static str;
+
+    /// Arrival time (seconds) of the next instance, if one is
+    /// currently scheduled.
+    fn peek_time(&self) -> Option<f64>;
+
+    /// Pop the next instance (the one [`Self::peek_time`] described).
+    fn next_arrival(&mut self) -> Option<KernelInstance>;
+
+    /// Completion feedback: instance `id` finished at `t_secs`.
+    /// Open-loop sources ignore it.
+    fn on_completion(&mut self, _id: u64, _t_secs: f64) {}
+
+    /// Whether the source may still produce arrivals (drives the solo
+    /// dispatcher's chunk-vs-run-whole decision). The default treats a
+    /// scheduled arrival as the only evidence; closed-loop sources
+    /// override with their remaining-job count.
+    fn more_expected(&self) -> bool {
+        self.peek_time().is_some()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------
+
+/// Streams a prebuilt instance list (a [`Stream`], a parsed trace, a
+/// hand-rolled test fixture) in order.
+pub struct ReplaySource {
+    name: &'static str,
+    instances: Vec<KernelInstance>,
+    cursor: usize,
+}
+
+impl ReplaySource {
+    pub fn from_stream(stream: &Stream) -> Self {
+        Self::from_instances("replay", stream.instances.clone())
+    }
+
+    /// `instances` must be sorted by arrival time (a [`Stream`] is).
+    pub fn from_instances(name: &'static str, instances: Vec<KernelInstance>) -> Self {
+        for w in instances.windows(2) {
+            debug_assert!(w[0].arrival_time <= w[1].arrival_time, "replay not sorted");
+        }
+        Self { name, instances, cursor: 0 }
+    }
+}
+
+impl ArrivalSource for ReplaySource {
+    fn scenario(&self) -> &'static str {
+        self.name
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.instances.get(self.cursor).map(|k| k.arrival_time)
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let k = self.instances.get(self.cursor).cloned();
+        if k.is_some() {
+            self.cursor += 1;
+        }
+        k
+    }
+}
+
+// ---------------------------------------------------------------------
+// Poisson (bit-identical to the frozen Vec path)
+// ---------------------------------------------------------------------
+
+/// The paper's Poisson mixes as a stream: a lazy k-way merge over the
+/// per-application arrival processes.
+///
+/// RNG consumption is *identical* to [`Stream::poisson`] — one
+/// generator, drawn application-major — and the merge tie-breaks the
+/// way that path's stable sort does (lower application index first), so
+/// ids, times and order match the frozen `Vec` bit-for-bit. Only the
+/// per-application arrival times are buffered; instances are
+/// constructed lazily as the engine pulls.
+pub struct PoissonSource {
+    specs: Vec<KernelSpec>,
+    times: Vec<Vec<f64>>,
+    cursors: Vec<usize>,
+    per_app: u32,
+}
+
+impl PoissonSource {
+    pub fn new(mix: Mix, per_app: u32, lambda: f64, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let specs: Vec<KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
+        let times: Vec<Vec<f64>> = specs
+            .iter()
+            .map(|_| {
+                let mut t = 0.0f64;
+                (0..per_app)
+                    .map(|_| {
+                        t += rng.exponential(lambda);
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { cursors: vec![0; specs.len()], specs, times, per_app }
+    }
+
+    /// Index of the app whose head arrival is earliest. Strict `<`
+    /// keeps the lowest app index on ties — exactly what the frozen
+    /// path's stable sort over app-major generation order does.
+    fn head(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (a, &cur) in self.cursors.iter().enumerate() {
+            if let Some(&t) = self.times[a].get(cur) {
+                if best.map_or(true, |(_, bt)| t < bt) {
+                    best = Some((a, t));
+                }
+            }
+        }
+        best.map(|(a, _)| a)
+    }
+}
+
+impl ArrivalSource for PoissonSource {
+    fn scenario(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.head().map(|a| self.times[a][self.cursors[a]])
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let a = self.head()?;
+        let k = self.cursors[a];
+        self.cursors[a] += 1;
+        // Same id scheme as the frozen path: app-major, then arrival.
+        let id = a as u64 * self.per_app as u64 + k as u64;
+        Some(KernelInstance::new(id, self.specs[a].clone(), self.times[a][k]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Markov-modulated (bursty)
+// ---------------------------------------------------------------------
+
+/// Two-state Markov-modulated Poisson process: the arrival rate jumps
+/// between a calm and a burst state, with exponentially distributed
+/// sojourns in each. Both the arrival draws and the state switches are
+/// memoryless, so interleaving them by competing exponentials is exact.
+pub struct BurstySource {
+    specs: Vec<KernelSpec>,
+    rng: Xoshiro256,
+    total: u64,
+    emitted: u64,
+    /// Arrival rate (kernels/sec) in each state.
+    rates: [f64; 2],
+    /// Mean sojourn (sec) in each state.
+    sojourn_secs: [f64; 2],
+    state: usize,
+    sojourn_left: f64,
+    t: f64,
+    pending: Option<KernelInstance>,
+}
+
+impl BurstySource {
+    pub fn new(mix: Mix, total: u64, rates: [f64; 2], sojourn_secs: [f64; 2], seed: u64) -> Self {
+        assert!(rates[0] > 0.0 && rates[1] > 0.0);
+        assert!(sojourn_secs[0] > 0.0 && sojourn_secs[1] > 0.0);
+        let mut rng = Xoshiro256::new(seed);
+        let sojourn_left = rng.exponential(1.0 / sojourn_secs[0]);
+        let mut src = Self {
+            specs: mix.apps().iter().map(|a| a.spec()).collect(),
+            rng,
+            total,
+            emitted: 0,
+            rates,
+            sojourn_secs,
+            state: 0,
+            sojourn_left,
+            t: 0.0,
+            pending: None,
+        };
+        src.pending = src.generate();
+        src
+    }
+
+    fn generate(&mut self) -> Option<KernelInstance> {
+        if self.emitted == self.total {
+            return None;
+        }
+        loop {
+            let dt = self.rng.exponential(self.rates[self.state]);
+            if dt < self.sojourn_left {
+                self.sojourn_left -= dt;
+                self.t += dt;
+                let spec = self.rng.choose(&self.specs).clone();
+                let id = self.emitted;
+                self.emitted += 1;
+                return Some(KernelInstance::new(id, spec, self.t));
+            }
+            // State switch fires first; restart the (memoryless)
+            // arrival draw in the new state.
+            self.t += self.sojourn_left;
+            self.state = 1 - self.state;
+            self.sojourn_left = self.rng.exponential(1.0 / self.sojourn_secs[self.state]);
+        }
+    }
+}
+
+impl ArrivalSource for BurstySource {
+    fn scenario(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.pending.as_ref().map(|k| k.arrival_time)
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let out = self.pending.take();
+        if out.is_some() {
+            self.pending = self.generate();
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Diurnal
+// ---------------------------------------------------------------------
+
+/// Sinusoidal rate curve λ(t) = base · (1 + amp · sin(2πt/period)),
+/// sampled exactly by thinning a Poisson process at λ_max.
+pub struct DiurnalSource {
+    specs: Vec<KernelSpec>,
+    rng: Xoshiro256,
+    total: u64,
+    emitted: u64,
+    base: f64,
+    amp: f64,
+    period: f64,
+    lambda_max: f64,
+    t: f64,
+    pending: Option<KernelInstance>,
+}
+
+impl DiurnalSource {
+    pub fn new(mix: Mix, total: u64, base: f64, amp: f64, period: f64, seed: u64) -> Self {
+        assert!(base > 0.0 && period > 0.0);
+        assert!((0.0..1.0).contains(&amp), "amp must be in [0,1) so the rate stays positive");
+        let mut src = Self {
+            specs: mix.apps().iter().map(|a| a.spec()).collect(),
+            rng: Xoshiro256::new(seed),
+            total,
+            emitted: 0,
+            base,
+            amp,
+            period,
+            lambda_max: base * (1.0 + amp),
+            t: 0.0,
+            pending: None,
+        };
+        src.pending = src.generate();
+        src
+    }
+
+    fn rate_at(&self, t: f64) -> f64 {
+        self.base * (1.0 + self.amp * (2.0 * std::f64::consts::PI * t / self.period).sin())
+    }
+
+    fn generate(&mut self) -> Option<KernelInstance> {
+        if self.emitted == self.total {
+            return None;
+        }
+        loop {
+            self.t += self.rng.exponential(self.lambda_max);
+            if self.rng.f64() * self.lambda_max < self.rate_at(self.t) {
+                let spec = self.rng.choose(&self.specs).clone();
+                let id = self.emitted;
+                self.emitted += 1;
+                return Some(KernelInstance::new(id, spec, self.t));
+            }
+        }
+    }
+}
+
+impl ArrivalSource for DiurnalSource {
+    fn scenario(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.pending.as_ref().map(|k| k.arrival_time)
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let out = self.pending.take();
+        if out.is_some() {
+            self.pending = self.generate();
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Heavy-tailed service demand
+// ---------------------------------------------------------------------
+
+/// Grid-size multipliers for the heavy-tail buckets. Bucketing keeps
+/// the kernel population finite so the measurement caches stay warm
+/// (each bucket is a distinct named kernel variant).
+const HEAVY_TAIL_BUCKETS: [u32; 4] = [1, 2, 4, 8];
+
+/// Intern a scaled-variant kernel name (`"MMx4"`). `KernelSpec.name`
+/// is `&'static str`, so the string must be leaked — interning in a
+/// process-wide registry bounds the leak to one allocation per
+/// (benchmark, multiplier) pair no matter how many sources a
+/// long-lived process constructs.
+fn variant_name(base: &'static str, m: u32) -> &'static str {
+    use std::sync::{Mutex, OnceLock};
+    static INTERN: OnceLock<Mutex<HashMap<(&'static str, u32), &'static str>>> = OnceLock::new();
+    let mut map = INTERN.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    *map.entry((base, m))
+        .or_insert_with(|| Box::leak(format!("{base}x{m}").into_boxed_str()))
+}
+
+/// Poisson arrivals whose *service demand* is heavy-tailed: each
+/// arrival's grid is scaled by `2^⌊log2(Pareto(alpha))⌋`, clamped to the
+/// bucket set — most kernels are base-sized, a tail is 8× elephants.
+pub struct HeavyTailSource {
+    variants: Vec<KernelSpec>, // apps × buckets, app-major
+    buckets: usize,
+    rng: Xoshiro256,
+    lambda: f64,
+    alpha: f64,
+    total: u64,
+    emitted: u64,
+    t: f64,
+    pending: Option<KernelInstance>,
+}
+
+impl HeavyTailSource {
+    pub fn new(mix: Mix, total: u64, lambda: f64, alpha: f64, seed: u64) -> Self {
+        assert!(lambda > 0.0 && alpha > 0.0);
+        let mut variants = Vec::new();
+        for app in mix.apps() {
+            let base = app.spec();
+            for &m in &HEAVY_TAIL_BUCKETS {
+                let mut s = base.with_grid(base.grid_blocks * m);
+                if m > 1 {
+                    s.name = variant_name(base.name, m);
+                }
+                variants.push(s);
+            }
+        }
+        let mut src = Self {
+            variants,
+            buckets: HEAVY_TAIL_BUCKETS.len(),
+            rng: Xoshiro256::new(seed),
+            lambda,
+            alpha,
+            total,
+            emitted: 0,
+            t: 0.0,
+            pending: None,
+        };
+        src.pending = src.generate();
+        src
+    }
+
+    fn generate(&mut self) -> Option<KernelInstance> {
+        if self.emitted == self.total {
+            return None;
+        }
+        self.t += self.rng.exponential(self.lambda);
+        let napps = self.variants.len() / self.buckets;
+        let app = self.rng.index(napps);
+        let factor = self.rng.pareto(self.alpha, 1.0);
+        let bucket = (factor.log2().floor() as i64).clamp(0, self.buckets as i64 - 1) as usize;
+        let spec = self.variants[app * self.buckets + bucket].clone();
+        let id = self.emitted;
+        self.emitted += 1;
+        Some(KernelInstance::new(id, spec, self.t))
+    }
+}
+
+impl ArrivalSource for HeavyTailSource {
+    fn scenario(&self) -> &'static str {
+        "heavytail"
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.pending.as_ref().map(|k| k.arrival_time)
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let out = self.pending.take();
+        if out.is_some() {
+            self.pending = self.generate();
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Closed loop
+// ---------------------------------------------------------------------
+
+/// N clients, each cycling submit → wait for completion → think
+/// (exponential) → resubmit, until `total` jobs have been issued
+/// fleet-wide. The offered load self-throttles with service time — the
+/// canonical interactive-user model.
+pub struct ClosedLoopSource {
+    specs: Vec<KernelSpec>,
+    rng: Xoshiro256,
+    think_rate: f64,
+    total: u64,
+    issued: u64,
+    /// (next submit time, client) for clients currently thinking.
+    thinking: Vec<(f64, usize)>,
+    /// instance id → owning client, for jobs in flight.
+    owner: HashMap<u64, usize>,
+}
+
+impl ClosedLoopSource {
+    pub fn new(mix: Mix, clients: usize, think_rate: f64, total: u64, seed: u64) -> Self {
+        assert!(clients >= 1 && think_rate > 0.0);
+        let mut rng = Xoshiro256::new(seed);
+        let thinking = (0..clients).map(|c| (rng.exponential(think_rate), c)).collect();
+        Self {
+            specs: mix.apps().iter().map(|a| a.spec()).collect(),
+            rng,
+            think_rate,
+            total,
+            issued: 0,
+            thinking,
+            owner: HashMap::new(),
+        }
+    }
+
+    fn head(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &(t, _)) in self.thinking.iter().enumerate() {
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((i, t));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+impl ArrivalSource for ClosedLoopSource {
+    fn scenario(&self) -> &'static str {
+        "closed"
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        if self.issued >= self.total {
+            return None;
+        }
+        self.head().map(|i| self.thinking[i].0)
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        if self.issued >= self.total {
+            return None;
+        }
+        let i = self.head()?;
+        let (t, client) = self.thinking.remove(i);
+        let id = self.issued;
+        self.issued += 1;
+        self.owner.insert(id, client);
+        let spec = self.rng.choose(&self.specs).clone();
+        Some(KernelInstance::new(id, spec, t))
+    }
+
+    fn on_completion(&mut self, id: u64, t_secs: f64) {
+        if let Some(client) = self.owner.remove(&id) {
+            if self.issued < self.total {
+                self.thinking.push((t_secs + self.rng.exponential(self.think_rate), client));
+            }
+        }
+    }
+
+    fn more_expected(&self) -> bool {
+        self.issued < self.total
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON trace replay
+// ---------------------------------------------------------------------
+
+/// Parse a submission trace: a JSON array of flat objects
+///
+/// ```json
+/// [
+///   {"app": "MM", "t": 0.0},
+///   {"app": "PC", "t": 0.5, "grid": 512}
+/// ]
+/// ```
+///
+/// `app` is a Table 3 benchmark name, `t` the arrival time in seconds,
+/// `grid` an optional grid-size override. Ids follow file order;
+/// instances are then sorted (stably) by arrival time. The parser is
+/// deliberately minimal — serde is unavailable offline.
+pub fn parse_trace(src: &str) -> Result<Vec<KernelInstance>> {
+    let mut p = JsonCursor { b: src.as_bytes(), i: 0 };
+    p.ws();
+    p.expect(b'[')?;
+    let mut instances = Vec::new();
+    p.ws();
+    if p.peek() == Some(b']') {
+        p.i += 1;
+    } else {
+        loop {
+            let obj = p.object().with_context(|| format!("trace entry {}", instances.len()))?;
+            let mut app: Option<String> = None;
+            let mut t: Option<f64> = None;
+            let mut grid: Option<f64> = None;
+            for (k, v) in obj {
+                match (k.as_str(), v) {
+                    ("app", JsonVal::Str(s)) => app = Some(s),
+                    ("t", JsonVal::Num(x)) => t = Some(x),
+                    ("grid", JsonVal::Num(x)) => grid = Some(x),
+                    (other, _) => bail!("unknown or mistyped trace field {other:?}"),
+                }
+            }
+            let app = app.context("trace entry missing \"app\"")?;
+            let t = t.context("trace entry missing \"t\"")?;
+            if !t.is_finite() || t < 0.0 {
+                bail!("trace arrival time {t} out of range");
+            }
+            let bench = BenchmarkApp::from_name(&app)
+                .with_context(|| format!("unknown benchmark {app:?}"))?;
+            let mut spec = bench.spec();
+            if let Some(g) = grid {
+                if g < 1.0 || g > u32::MAX as f64 || g.fract() != 0.0 {
+                    bail!("trace grid {g} is not a positive integer");
+                }
+                spec = spec.with_grid(g as u32);
+            }
+            instances.push(KernelInstance::new(instances.len() as u64, spec, t));
+            p.ws();
+            match p.next_byte()? {
+                b',' => p.ws(),
+                b']' => break,
+                other => bail!("expected ',' or ']', found {:?}", other as char),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing garbage after trace array");
+    }
+    instances.sort_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time));
+    Ok(instances)
+}
+
+/// Parse a JSON trace straight into a [`ReplaySource`].
+pub fn trace_source(src: &str) -> Result<ReplaySource> {
+    Ok(ReplaySource::from_instances("trace", parse_trace(src)?))
+}
+
+enum JsonVal {
+    Str(String),
+    Num(f64),
+}
+
+/// Just enough JSON for [`parse_trace`]: arrays of flat objects whose
+/// values are strings or numbers.
+struct JsonCursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonCursor<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next_byte(&mut self) -> Result<u8> {
+        let c = self.peek().context("unexpected end of trace JSON")?;
+        self.i += 1;
+        Ok(c)
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        let got = self.next_byte()?;
+        if got != want {
+            bail!("expected {:?}, found {:?}", want as char, got as char);
+        }
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c == b'\\' {
+                bail!("escape sequences are not supported in trace strings");
+            }
+            if c == b'"' {
+                let s = std::str::from_utf8(&self.b[start..self.i])
+                    .context("non-UTF8 trace string")?
+                    .to_string();
+                self.i += 1;
+                return Ok(s);
+            }
+            self.i += 1;
+        }
+        bail!("unterminated string in trace JSON")
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .with_context(|| format!("bad number at byte {start}"))
+    }
+
+    fn value(&mut self) -> Result<JsonVal> {
+        self.ws();
+        match self.peek().context("unexpected end of trace JSON")? {
+            b'"' => Ok(JsonVal::Str(self.string()?)),
+            _ => Ok(JsonVal::Num(self.number()?)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Vec<(String, JsonVal)>> {
+        self.ws();
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            out.push((key, val));
+            self.ws();
+            match self.next_byte()? {
+                b',' => continue,
+                b'}' => return Ok(out),
+                other => bail!("expected ',' or '}}', found {:?}", other as char),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario factory
+// ---------------------------------------------------------------------
+
+/// Names accepted by [`scenario_source`].
+pub const SCENARIO_NAMES: [&str; 6] =
+    ["saturated", "poisson", "bursty", "diurnal", "heavytail", "closed"];
+
+/// Build a named scenario over `mix` offering roughly `agg_rate_kps`
+/// kernels/sec in aggregate, with `per_app` instances per application
+/// (total = per_app × |apps|). The one factory the CLI, the saturation
+/// figure and the throughput bench all share, so a scenario name means
+/// the same workload everywhere.
+pub fn scenario_source(
+    scenario: &str,
+    mix: Mix,
+    per_app: u32,
+    agg_rate_kps: f64,
+    seed: u64,
+) -> Result<Box<dyn ArrivalSource>> {
+    let apps = mix.apps().len();
+    let total = per_app as u64 * apps as u64;
+    if scenario != "saturated" {
+        anyhow::ensure!(agg_rate_kps > 0.0, "scenario {scenario} needs a positive arrival rate");
+    }
+    Ok(match scenario {
+        "saturated" => Box::new(ReplaySource::from_stream(&Stream::saturated(mix, per_app, seed))),
+        "poisson" => Box::new(PoissonSource::new(mix, per_app, agg_rate_kps / apps as f64, seed)),
+        // Calm at half the offered rate, bursts at 1.5× — equal mean
+        // sojourns of ~20 arrivals keep the long-run rate at the target.
+        "bursty" => Box::new(BurstySource::new(
+            mix,
+            total,
+            [0.5 * agg_rate_kps, 1.5 * agg_rate_kps],
+            [20.0 / agg_rate_kps, 20.0 / agg_rate_kps],
+            seed,
+        )),
+        // ~3 day/night cycles over the run's expected span.
+        "diurnal" => Box::new(DiurnalSource::new(
+            mix,
+            total,
+            agg_rate_kps,
+            0.8,
+            (total as f64 / agg_rate_kps) / 3.0,
+            seed,
+        )),
+        "heavytail" => Box::new(HeavyTailSource::new(mix, total, agg_rate_kps, 1.1, seed)),
+        // 8 clients whose think-limited aggregate rate is the target;
+        // service time then throttles the realized rate below it.
+        "closed" => Box::new(ClosedLoopSource::new(mix, 8, agg_rate_kps / 8.0, total, seed)),
+        other => bail!("unknown scenario {other} (valid: {})", SCENARIO_NAMES.join(" ")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(src: &mut dyn ArrivalSource) -> Vec<KernelInstance> {
+        let mut out = Vec::new();
+        while let Some(t) = src.peek_time() {
+            let k = src.next_arrival().expect("peeked arrival vanished");
+            assert_eq!(k.arrival_time, t, "peek/pop disagree");
+            out.push(k);
+        }
+        out
+    }
+
+    #[test]
+    fn poisson_source_matches_frozen_stream() {
+        for (mix, per_app, lambda, seed) in
+            [(Mix::MIX, 40, 120.0, 7u64), (Mix::ALL, 15, 55.0, 42), (Mix::CI, 1, 9.0, 3)]
+        {
+            let frozen = Stream::poisson(mix, per_app, lambda, seed);
+            let mut src = PoissonSource::new(mix, per_app, lambda, seed);
+            let streamed = drain(&mut src);
+            assert_eq!(streamed.len(), frozen.len());
+            for (a, b) in streamed.iter().zip(&frozen.instances) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.arrival_time.to_bits(), b.arrival_time.to_bits());
+                assert_eq!(a.spec.name, b.spec.name);
+                assert_eq!(a.spec.grid_blocks, b.spec.grid_blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn replay_source_yields_stream_in_order() {
+        let stream = Stream::poisson(Mix::MI, 10, 80.0, 5);
+        let mut src = ReplaySource::from_stream(&stream);
+        let out = drain(&mut src);
+        assert_eq!(out.len(), stream.len());
+        assert!(src.next_arrival().is_none());
+        for (a, b) in out.iter().zip(&stream.instances) {
+            assert_eq!(a.id, b.id);
+        }
+    }
+
+    #[test]
+    fn bursty_emits_total_monotone_arrivals() {
+        let mut src = BurstySource::new(Mix::MIX, 300, [50.0, 400.0], [0.2, 0.05], 11);
+        let out = drain(&mut src);
+        assert_eq!(out.len(), 300);
+        for w in out.windows(2) {
+            assert!(w[0].arrival_time <= w[1].arrival_time);
+        }
+        let ids: std::collections::HashSet<u64> = out.iter().map(|k| k.id).collect();
+        assert_eq!(ids.len(), 300);
+        // Determinism given the seed.
+        let mut again = BurstySource::new(Mix::MIX, 300, [50.0, 400.0], [0.2, 0.05], 11);
+        let out2 = drain(&mut again);
+        assert_eq!(out[299].arrival_time, out2[299].arrival_time);
+    }
+
+    #[test]
+    fn bursty_long_run_rate_near_mean() {
+        // Equal sojourns at rates (0.5λ, 1.5λ) must average λ.
+        let lambda = 200.0;
+        let n = 4000;
+        let mut src =
+            BurstySource::new(Mix::ALL, n, [0.5 * lambda, 1.5 * lambda], [0.1, 0.1], 17);
+        let out = drain(&mut src);
+        let span = out.last().unwrap().arrival_time;
+        let rate = n as f64 / span;
+        assert!((rate / lambda - 1.0).abs() < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn diurnal_rate_tracks_the_curve() {
+        let base = 100.0;
+        let period = 10.0;
+        let mut src = DiurnalSource::new(Mix::MIX, 3000, base, 0.8, period, 23);
+        let out = drain(&mut src);
+        assert_eq!(out.len(), 3000);
+        for w in out.windows(2) {
+            assert!(w[0].arrival_time <= w[1].arrival_time);
+        }
+        // Peak-phase quarters of the cycle must out-arrive trough
+        // phases by a wide margin (amp = 0.8 → 9:1 instantaneous).
+        let phase = |t: f64| (t / period).fract();
+        let peak = out.iter().filter(|k| (0.0..0.5).contains(&phase(k.arrival_time))).count();
+        let trough = out.len() - peak;
+        assert!(peak > trough * 2, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn heavytail_buckets_decay() {
+        let mut src = HeavyTailSource::new(Mix::MIX, 2000, 100.0, 1.1, 31);
+        let out = drain(&mut src);
+        assert_eq!(out.len(), 2000);
+        let base: usize = out.iter().filter(|k| !k.spec.name.contains('x')).count();
+        let elephants: usize = out.iter().filter(|k| k.spec.name.ends_with("x8")).count();
+        assert!(base > out.len() / 3, "base={base}");
+        assert!(elephants > 0, "no elephants drawn");
+        assert!(elephants < base, "tail heavier than body");
+        // Scaled variants really carry scaled grids.
+        let sample = out.iter().find(|k| k.spec.name.ends_with("x8")).unwrap();
+        let orig =
+            Mix::MIX.apps().iter().map(|a| a.spec()).find(|s| sample.spec.name.starts_with(s.name) && sample.spec.threads_per_block == s.threads_per_block).unwrap();
+        assert_eq!(sample.spec.grid_blocks, orig.grid_blocks * 8);
+    }
+
+    #[test]
+    fn closed_loop_waits_for_completions() {
+        let mut src = ClosedLoopSource::new(Mix::MIX, 2, 10.0, 6, 41);
+        // Two clients submit immediately...
+        let a = src.next_arrival().unwrap();
+        let b = src.next_arrival().unwrap();
+        // ...then the fleet is blocked until something completes.
+        assert!(src.peek_time().is_none());
+        assert!(src.more_expected());
+        src.on_completion(a.id, a.arrival_time + 1.0);
+        let t3 = src.peek_time().expect("completion must schedule a resubmit");
+        assert!(t3 > a.arrival_time + 1.0);
+        src.on_completion(b.id, b.arrival_time + 2.0);
+        // Drain the remaining 4 jobs by completing everything instantly.
+        let mut done = 2;
+        while let Some(k) = src.next_arrival() {
+            done += 1;
+            src.on_completion(k.id, k.arrival_time + 0.5);
+        }
+        assert_eq!(done, 6);
+        assert!(!src.more_expected());
+    }
+
+    #[test]
+    fn trace_parses_sorts_and_overrides_grid() {
+        let json = r#"
+            [
+              {"app": "MM", "t": 2.0},
+              {"app": "PC", "t": 0.5, "grid": 512},
+              {"app": "tea", "t": 1.25e0}
+            ]
+        "#;
+        let out = parse_trace(json).unwrap();
+        assert_eq!(out.len(), 3);
+        // Sorted by time; ids keep file order.
+        assert_eq!(out[0].spec.name, "PC");
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[0].spec.grid_blocks, 512);
+        assert_eq!(out[1].spec.name, "TEA");
+        assert_eq!(out[2].spec.name, "MM");
+        assert_eq!(out[2].arrival_time, 2.0);
+        // Empty trace is fine.
+        assert!(parse_trace("[]").unwrap().is_empty());
+    }
+
+    #[test]
+    fn trace_rejects_malformed_input() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("[{\"app\": \"MM\"}]").is_err()); // missing t
+        assert!(parse_trace("[{\"app\": \"NOPE\", \"t\": 1}]").is_err());
+        assert!(parse_trace("[{\"app\": \"MM\", \"t\": -1.0}]").is_err());
+        assert!(parse_trace("[{\"app\": \"MM\", \"t\": 1, \"grid\": 0}]").is_err());
+        assert!(parse_trace("[{\"app\": \"MM\", \"t\": 1}] junk").is_err());
+        assert!(parse_trace("[{\"app\": \"MM\", \"t\": 1, \"bogus\": 2}]").is_err());
+    }
+
+    #[test]
+    fn scenario_factory_covers_all_names() {
+        for name in SCENARIO_NAMES {
+            let src = scenario_source(name, Mix::MIX, 3, 50.0, 9).unwrap();
+            assert!(!src.scenario().is_empty());
+        }
+        assert!(scenario_source("nope", Mix::MIX, 3, 50.0, 9).is_err());
+        assert!(scenario_source("poisson", Mix::MIX, 3, 0.0, 9).is_err());
+    }
+}

@@ -5,6 +5,18 @@
 //! The paper initiates 1000 instances of each kernel in the mix and
 //! submits them according to the Poisson process, with λ large enough
 //! that at least two kernels are always pending.
+//!
+//! [`Stream`] is the frozen pre-materialized form; the [`arrivals`]
+//! module streams workloads into the engine online ([`ArrivalSource`]),
+//! including scenarios a sorted `Vec` cannot express (bursty, diurnal,
+//! heavy-tailed, closed-loop, trace replay).
+
+pub mod arrivals;
+
+pub use arrivals::{
+    parse_trace, scenario_source, trace_source, ArrivalSource, BurstySource, ClosedLoopSource,
+    DiurnalSource, HeavyTailSource, PoissonSource, ReplaySource, SCENARIO_NAMES,
+};
 
 use crate::kernel::{BenchmarkApp, KernelInstance};
 use crate::stats::Xoshiro256;

@@ -1,0 +1,204 @@
+//! Differential and property tests over the streaming arrival layer.
+//!
+//! The load-bearing guarantee: an engine *pulled* by the Poisson
+//! [`ArrivalSource`] reproduces the frozen pre-materialized-`Vec`
+//! schedule bit-for-bit — the `Stream` path stays the oracle, so every
+//! streaming scenario inherits the engine semantics the PR-1
+//! differential tests pinned against the seed loops.
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{Coordinator, Engine, KerneletSelector};
+use kernelet::figures::throughput::selector_for;
+use kernelet::model::hetero::build_hetero_chain;
+use kernelet::model::params::{ChainParams, SmEnv};
+use kernelet::workload::{
+    ArrivalSource, BurstySource, ClosedLoopSource, DiurnalSource, HeavyTailSource, Mix,
+    PoissonSource, ReplaySource, Stream,
+};
+
+/// SATELLITE PROPERTY: `Stream::poisson` and the streaming Poisson
+/// source produce identical instance sequences for the same seed —
+/// ids, bit-exact arrival times, specs, order.
+#[test]
+fn poisson_source_and_stream_identical_sequences() {
+    for (mix, per_app, lambda, seed) in [
+        (Mix::CI, 100, 40.0, 1u64),
+        (Mix::MI, 37, 250.0, 2),
+        (Mix::MIX, 64, 999.0, 3),
+        (Mix::ALL, 25, 77.7, 0xDEADBEEF),
+    ] {
+        let frozen = Stream::poisson(mix, per_app, lambda, seed);
+        let mut src = PoissonSource::new(mix, per_app, lambda, seed);
+        let mut streamed = Vec::new();
+        while let Some(k) = src.next_arrival() {
+            streamed.push(k);
+        }
+        assert_eq!(streamed.len(), frozen.len(), "{mix:?}");
+        for (a, b) in streamed.iter().zip(&frozen.instances) {
+            assert_eq!(a.id, b.id, "{mix:?}");
+            assert_eq!(a.arrival_time.to_bits(), b.arrival_time.to_bits(), "{mix:?}");
+            assert_eq!(a.spec, b.spec, "{mix:?}");
+        }
+    }
+}
+
+fn assert_reports_identical(
+    name: &str,
+    a: &kernelet::coordinator::ExecutionReport,
+    b: &kernelet::coordinator::ExecutionReport,
+) {
+    assert_eq!(a.total_cycles, b.total_cycles, "{name}: total_cycles");
+    assert_eq!(a.completion, b.completion, "{name}: completion map");
+    assert_eq!(a.coschedule_rounds, b.coschedule_rounds, "{name}: rounds");
+    assert_eq!(a.solo_slices, b.solo_slices, "{name}: solo slices");
+    assert_eq!(a.slice_trace, b.slice_trace, "{name}: slice trace");
+    assert_eq!(a.queue_depth, b.queue_depth, "{name}: queue depth timeline");
+    assert_eq!(a.mean_turnaround_secs, b.mean_turnaround_secs, "{name}: turnaround");
+    assert_eq!(a.utilization, b.utilization, "{name}: utilization");
+    assert_eq!(a.incomplete, b.incomplete, "{name}: incomplete");
+}
+
+/// DIFFERENTIAL (acceptance): the engine driven by the Poisson
+/// `ArrivalSource` reproduces the frozen pre-materialized-`Vec`
+/// schedule bit-for-bit, for both policies, on both GPUs.
+#[test]
+fn engine_streamed_poisson_matches_frozen_vec_schedule() {
+    for (gpu, seed) in [(GpuConfig::c2050(), 13u64), (GpuConfig::gtx680(), 14)] {
+        let coord = Coordinator::new(&gpu);
+        for (per_app, lambda) in [(6u32, 150.0), (10, 2000.0)] {
+            let stream = Stream::poisson(Mix::MIX, per_app, lambda, seed);
+            for policy in ["kernelet", "base"] {
+                let by_vec = Engine::new(&coord).run(selector_for(policy).as_mut(), &stream);
+                let mut src = PoissonSource::new(Mix::MIX, per_app, lambda, seed);
+                let by_src =
+                    Engine::new(&coord).run_source(selector_for(policy).as_mut(), &mut src);
+                assert_reports_identical(
+                    &format!("{}/{policy}/λ{lambda}", gpu.name),
+                    &by_src,
+                    &by_vec,
+                );
+            }
+        }
+    }
+}
+
+/// DIFFERENTIAL: replaying any stream through the source path is the
+/// identity transform (saturated streams exercise the no-gap path).
+#[test]
+fn engine_replay_source_is_identity() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    for stream in [Stream::saturated(Mix::ALL, 3, 21), Stream::poisson(Mix::CI, 8, 90.0, 22)] {
+        let by_vec = Engine::new(&coord).run(&mut KerneletSelector, &stream);
+        let by_src = Engine::new(&coord)
+            .run_source(&mut KerneletSelector, &mut ReplaySource::from_stream(&stream));
+        assert_reports_identical("replay", &by_src, &by_vec);
+    }
+}
+
+/// PROPERTY: every streaming scenario drains completely through the
+/// engine — all emitted kernels complete, work is conserved, the
+/// report is internally consistent.
+#[test]
+fn streaming_scenarios_complete_all_work() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let total = 60u64;
+    let sources: Vec<Box<dyn ArrivalSource>> = vec![
+        Box::new(BurstySource::new(Mix::MIX, total, [200.0, 1500.0], [0.05, 0.01], 51)),
+        Box::new(DiurnalSource::new(Mix::MIX, total, 400.0, 0.9, 0.1, 52)),
+        Box::new(HeavyTailSource::new(Mix::MIX, total, 300.0, 1.1, 53)),
+        Box::new(ClosedLoopSource::new(Mix::MIX, 5, 1000.0, total, 54)),
+    ];
+    for mut src in sources {
+        let name = src.scenario();
+        let rep = Engine::new(&coord).run_source(&mut KerneletSelector, src.as_mut());
+        assert_eq!(rep.kernels_completed, total as usize, "{name}");
+        assert_eq!(rep.incomplete, 0, "{name}");
+        assert!(rep.utilization > 0.0 && rep.utilization <= 1.0 + 1e-9, "{name}");
+        // Slice trace timestamps stay monotone under streamed admission.
+        for w in rep.slice_trace.windows(2) {
+            assert!(w[0].end_cycles <= w[1].start_cycles + 1e-9, "{name}");
+        }
+        let dispatched: u64 = rep.blocks_dispatched().values().sum();
+        assert!(dispatched > 0, "{name}");
+    }
+}
+
+/// PROPERTY: a closed loop of N clients never has more than N kernels
+/// pending, and its arrivals strictly follow the completions that
+/// triggered them.
+#[test]
+fn closed_loop_backpressure_bounds_the_queue() {
+    let coord = Coordinator::new(&GpuConfig::gtx680());
+    for clients in [1usize, 2, 4] {
+        let mut src = ClosedLoopSource::new(Mix::ALL, clients, 200.0, 40, 60 + clients as u64);
+        let rep = Engine::new(&coord).run_source(&mut KerneletSelector, &mut src);
+        assert_eq!(rep.kernels_completed, 40, "clients={clients}");
+        assert!(
+            rep.peak_queue_depth() <= clients,
+            "clients={clients}: peak depth {}",
+            rep.peak_queue_depth()
+        );
+    }
+}
+
+/// PROPERTY: determinism — every scenario replays bit-identically from
+/// its seed through the full engine.
+#[test]
+fn streaming_scenarios_deterministic() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let build: [fn() -> Box<dyn ArrivalSource>; 3] = [
+        || Box::new(BurstySource::new(Mix::MIX, 40, [150.0, 900.0], [0.08, 0.02], 71)),
+        || Box::new(DiurnalSource::new(Mix::MIX, 40, 300.0, 0.8, 0.15, 72)),
+        || Box::new(ClosedLoopSource::new(Mix::MIX, 3, 500.0, 40, 73)),
+    ];
+    for make in build {
+        let mut a_src = make();
+        let mut b_src = make();
+        let a = Engine::new(&coord).run_source(&mut KerneletSelector, a_src.as_mut());
+        let b = Engine::new(&coord).run_source(&mut KerneletSelector, b_src.as_mut());
+        assert_reports_identical(a_src.scenario(), &a, &b);
+    }
+}
+
+/// SATELLITE PROPERTY: heterogeneous product chains are row-stochastic
+/// (rows sum to 1, no negative mass) across a grid of `ChainParams`,
+/// under both SM environments.
+#[test]
+fn hetero_chain_stochastic_over_chainparams_grid() {
+    let gpu = GpuConfig::c2050();
+    let envs = [SmEnv::virtual_sm(&gpu), SmEnv::single_scheduler(&gpu)];
+    let mut grid = Vec::new();
+    for &units in &[1u32, 2, 5, 9] {
+        for &group in &[1.0f64, 4.0, 8.0] {
+            for &p_mem in &[0.0f64, 0.05, 0.35, 1.0] {
+                for &sectors in &[4.0f64, 16.0] {
+                    grid.push(ChainParams {
+                        units,
+                        group,
+                        p_mem,
+                        sectors_per_idle_unit: sectors,
+                        uncoal_frac: 0.0,
+                        sectors_coal: 4.0,
+                        sectors_uncoal: 16.0,
+                    });
+                }
+            }
+        }
+    }
+    // Pair each grid point with a strided sample of partners (the full
+    // cross is ~9k chains; a coprime stride still covers every
+    // parameter combination on both sides).
+    let mut checked = 0;
+    for (i, p1) in grid.iter().enumerate() {
+        for k in 0..5 {
+            let p2 = &grid[(i + 1 + k * 19) % grid.len()];
+            for env in &envs {
+                let t = build_hetero_chain(p1, p2, env);
+                assert_eq!(t.n, (p1.units as usize + 1) * (p2.units as usize + 1));
+                t.validate(1e-8);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= grid.len() * 5);
+}

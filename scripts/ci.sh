@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
-# CI pipeline: format, lint, build, test, and record the scheduling
-# perf trajectory (BENCH_scheduling.json).
+# CI pipeline: format, lint, build, test, and record the perf
+# trajectories (BENCH_scheduling.json latency, BENCH_throughput.json
+# saturation curves).
 #
 # Usage: ./scripts/ci.sh [--quick]
-#   --quick   lower bench instance count (CI smoke; default 50)
+#   --quick   lower bench instance counts (CI smoke; default 50/8)
 set -euo pipefail
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "error: cargo not found in PATH — this pipeline needs a Rust toolchain." >&2
+  echo "       Install one via https://rustup.rs or run inside the CI image." >&2
+  exit 1
+fi
 
 cd "$(dirname "$0")/../rust"
 
 instances=200
+tp_instances=50
 if [[ "${1:-}" == "--quick" ]]; then
   instances=50
+  tp_instances=8
 fi
 
 echo "==> cargo fmt --check"
@@ -29,6 +38,37 @@ echo "==> cargo bench --bench scheduling (instances/app=${instances})"
 KERNELET_INSTANCES="${instances}" \
 KERNELET_BENCH_OUT="BENCH_scheduling.json" \
   cargo bench --bench scheduling
+
+echo "==> cargo bench --bench throughput (instances/app=${tp_instances})"
+KERNELET_INSTANCES="${tp_instances}" \
+KERNELET_THROUGHPUT_OUT="BENCH_throughput.json" \
+  cargo bench --bench throughput
+
+echo "==> checking BENCH_throughput.json"
+if command -v python3 >/dev/null 2>&1; then
+  python3 - <<'EOF'
+import json
+
+with open("BENCH_throughput.json") as fh:
+    d = json.load(fh)
+assert d["bench"] == "throughput", "wrong bench tag"
+curves = d["curves"]
+assert curves, "no curves recorded"
+scenarios = {c["scenario"] for c in curves}
+policies = {c["policy"] for c in curves}
+assert len(scenarios) >= 3, f"need >=3 scenarios, got {sorted(scenarios)}"
+assert len(policies) >= 2, f"need >=2 policies, got {sorted(policies)}"
+for c in curves:
+    assert c["points"], f"empty curve {c['scenario']}/{c['policy']}"
+    for p in c["points"]:
+        assert p["throughput_kps"] > 0, f"dead point in {c['scenario']}/{c['policy']}"
+print(f"BENCH_throughput.json OK: {len(curves)} curves "
+      f"({len(scenarios)} scenarios x {len(policies)} policies)")
+EOF
+else
+  echo "warning: python3 unavailable — skipping BENCH_throughput.json schema check"
+  grep -q '"bench":"throughput"' BENCH_throughput.json
+fi
 
 echo "==> perf record:"
 cat BENCH_scheduling.json
