@@ -1,0 +1,144 @@
+//! QoS benchmark: crosses arrival scenario × offered load × scheduling
+//! policy (class-blind Kernelet vs EDF-gated deadline) under a
+//! latency/batch mix and records per-class turnaround percentiles and
+//! deadline misses to `BENCH_qos.json` — the repo's tail-latency
+//! trajectory, tracked by CI next to `BENCH_throughput.json`.
+//!
+//! Run: `cargo bench --bench qos`
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 40).
+//! - `KERNELET_QOS_OUT` overrides the JSON output path (default
+//!   `BENCH_qos.json` in the working directory).
+//!
+//! JSON schema (times in seconds, rates in kernels/sec):
+//!
+//! ```json
+//! {
+//!   "bench": "qos",
+//!   "gpu": "C2050",
+//!   "mix": "MIX",
+//!   "instances_per_app": 40,
+//!   "latency_fraction": 0.3,
+//!   "deadline_scale": 4.0,
+//!   "base_capacity_kps": 123.4,
+//!   "wall_ms": 456,
+//!   "curves": [
+//!     {
+//!       "scenario": "bursty",
+//!       "policy": "deadline",
+//!       "points": [
+//!         {"load": 2.0, "kernels": 160, "throughput_kps": 100.1,
+//!          "latency": {"completed": 48, "p50_s": 0.01, "p95_s": 0.02,
+//!                      "p99_s": 0.03, "mean_s": 0.012,
+//!                      "deadline_misses": 1, "with_deadline": 48},
+//!          "batch": {...same shape...}}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use kernelet::bench::once;
+use kernelet::coordinator::ClassStats;
+use kernelet::figures::qos::{
+    qos_sweep, QosPoint, DEFAULT_DEADLINE_SCALE, DEFAULT_LATENCY_FRACTION, QOS_LOADS,
+    QOS_POLICIES, QOS_SCENARIOS,
+};
+use kernelet::figures::FigOptions;
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    let opts = FigOptions { instances_per_app: instances, ..Default::default() };
+
+    let ((points, capacity), dt) = once("qos::qos_sweep", || {
+        qos_sweep(
+            &opts,
+            &QOS_LOADS,
+            &QOS_SCENARIOS,
+            DEFAULT_LATENCY_FRACTION,
+            DEFAULT_DEADLINE_SCALE,
+        )
+    });
+
+    println!(
+        "{:>9} {:>6} {:>9} {:>9} {:>12} {:>12} {:>9} {:>9}",
+        "scenario", "load", "policy", "p50_lat", "p99_lat", "p99_batch", "miss_lat", "kernels"
+    );
+    for p in &points {
+        println!(
+            "{:>9} {:>6.2} {:>9} {:>9.5} {:>12.5} {:>12.5} {:>9} {:>9}",
+            p.scenario,
+            p.load,
+            p.policy,
+            p.latency.p50_turnaround_secs,
+            p.latency.p99_turnaround_secs,
+            p.batch.p99_turnaround_secs,
+            p.latency.deadline_misses,
+            p.kernels
+        );
+    }
+
+    let json = to_json(&points, instances, capacity, dt.as_millis());
+    let out = std::env::var("KERNELET_QOS_OUT").unwrap_or_else(|_| "BENCH_qos.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            // CI schema-checks this file next; a stale copy passing the
+            // check would silently freeze the recorded trajectory.
+            eprintln!("could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn class_json(c: &ClassStats) -> String {
+    format!(
+        "{{\"completed\":{},\"p50_s\":{},\"p95_s\":{},\"p99_s\":{},\"mean_s\":{},\
+         \"deadline_misses\":{},\"with_deadline\":{}}}",
+        c.completed,
+        c.p50_turnaround_secs,
+        c.p95_turnaround_secs,
+        c.p99_turnaround_secs,
+        c.mean_turnaround_secs,
+        c.deadline_misses,
+        c.with_deadline
+    )
+}
+
+/// Group the flat point list into one curve per (scenario, policy).
+fn to_json(points: &[QosPoint], instances: u32, capacity: f64, wall_ms: u128) -> String {
+    let mut curves = Vec::new();
+    for &scenario in &QOS_SCENARIOS {
+        for &policy in &QOS_POLICIES {
+            let pts: Vec<String> = points
+                .iter()
+                .filter(|p| p.scenario == scenario && p.policy == policy)
+                .map(|p| {
+                    format!(
+                        "{{\"load\":{},\"kernels\":{},\"throughput_kps\":{},\
+                         \"latency\":{},\"batch\":{}}}",
+                        p.load,
+                        p.kernels,
+                        p.throughput_kps,
+                        class_json(&p.latency),
+                        class_json(&p.batch)
+                    )
+                })
+                .collect();
+            curves.push(format!(
+                "{{\"scenario\":\"{scenario}\",\"policy\":\"{policy}\",\"points\":[{}]}}",
+                pts.join(",")
+            ));
+        }
+    }
+    format!(
+        "{{\"bench\":\"qos\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\
+         \"instances_per_app\":{instances},\"latency_fraction\":{DEFAULT_LATENCY_FRACTION},\
+         \"deadline_scale\":{DEFAULT_DEADLINE_SCALE},\"base_capacity_kps\":{capacity},\
+         \"wall_ms\":{wall_ms},\"curves\":[{}]}}\n",
+        curves.join(",")
+    )
+}

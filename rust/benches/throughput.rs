@@ -1,13 +1,18 @@
 //! Load-sweep throughput benchmark: crosses arrival scenario ×
-//! offered-load factor × scheduling policy on the unified engine and
-//! records the saturation curves to `BENCH_throughput.json` — the
-//! repo's throughput trajectory, tracked by CI next to the latency
-//! trajectory in `BENCH_scheduling.json`.
+//! offered-load factor × scheduling policy on the unified engine
+//! (single-device saturation curves) **and** scenario × load × fleet
+//! size × routing policy through `MultiGpuDispatcher::run_source`
+//! (fleet-scaling curves: RoundRobin vs LeastLoaded vs SloAware on
+//! homogeneous C2050 fleets), recording both to
+//! `BENCH_throughput.json` — the repo's throughput trajectory, tracked
+//! by CI next to the latency trajectory in `BENCH_scheduling.json`.
 //!
 //! Run: `cargo bench --bench throughput`
 //! Environment:
 //! - `KERNELET_INSTANCES` overrides instances/app (default 50; the
 //!   saturation figure caps itself at 200 — here the caller chooses).
+//!   The fleet sweep runs at a quarter of it (min 2): it multiplies
+//!   the whole single-device cross by |fleets| × |routing policies|.
 //! - `KERNELET_THROUGHPUT_OUT` overrides the JSON output path (default
 //!   `BENCH_throughput.json` in the working directory).
 //!
@@ -31,15 +36,33 @@
 //!          "mean_queue_depth": 1.2, "peak_queue_depth": 4, "kernels": 200}
 //!       ]
 //!     }
+//!   ],
+//!   "fleet_curves": [
+//!     {
+//!       "scenario": "poisson",
+//!       "policy": "sloaware",
+//!       "gpus": 2,
+//!       "points": [
+//!         {"load": 0.5, "offered_kps": 123.4, "throughput_kps": 118.8,
+//!          "makespan_secs": 1.2, "kernels": 96,
+//!          "latency_p99_s": 0.02, "deadline_misses": 0}
+//!       ]
+//!     }
 //!   ]
 //! }
 //! ```
 
 use kernelet::bench::once;
 use kernelet::figures::throughput::{
-    load_sweep, SweepPoint, DEFAULT_LOADS, SWEEP_POLICIES, SWEEP_SCENARIOS,
+    fleet_sweep, load_sweep, FleetPoint, SweepPoint, DEFAULT_FLEETS, DEFAULT_LOADS,
+    FLEET_POLICIES, SWEEP_POLICIES, SWEEP_SCENARIOS,
 };
 use kernelet::figures::FigOptions;
+
+/// Scenarios the fleet sweep crosses (a slice of the single-device
+/// set: the fleet cross multiplies every point by |fleets| ×
+/// |routing policies|).
+const FLEET_SCENARIOS: [&str; 2] = ["poisson", "bursty"];
 
 fn main() {
     let instances: u32 = std::env::var("KERNELET_INSTANCES")
@@ -50,6 +73,12 @@ fn main() {
 
     let ((points, capacity), dt) = once("throughput::load_sweep", || {
         load_sweep(&opts, &DEFAULT_LOADS, &SWEEP_SCENARIOS)
+    });
+
+    let fleet_opts =
+        FigOptions { instances_per_app: (instances / 4).max(2), ..Default::default() };
+    let ((fleet_points, _), fleet_dt) = once("throughput::fleet_sweep", || {
+        fleet_sweep(&fleet_opts, &[0.5, 2.0], &FLEET_SCENARIOS, &DEFAULT_FLEETS)
     });
 
     println!(
@@ -70,7 +99,30 @@ fn main() {
         );
     }
 
-    let json = to_json(&points, instances, capacity, dt.as_millis());
+    println!(
+        "{:>9} {:>6} {:>12} {:>5} {:>15} {:>13} {:>10}",
+        "scenario", "load", "routing", "gpus", "throughput_kps", "makespan_s", "p99_lat_s"
+    );
+    for p in &fleet_points {
+        println!(
+            "{:>9} {:>6.2} {:>12} {:>5} {:>15.1} {:>13.5} {:>10.5}",
+            p.scenario,
+            p.load,
+            p.policy,
+            p.gpus,
+            p.throughput_kps,
+            p.makespan_secs,
+            p.latency.p99_turnaround_secs
+        );
+    }
+
+    let json = to_json(
+        &points,
+        &fleet_points,
+        instances,
+        capacity,
+        (dt + fleet_dt).as_millis(),
+    );
     let out = std::env::var("KERNELET_THROUGHPUT_OUT")
         .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
     match std::fs::write(&out, &json) {
@@ -84,8 +136,15 @@ fn main() {
     }
 }
 
-/// Group the flat point list into one curve per (scenario, policy).
-fn to_json(points: &[SweepPoint], instances: u32, capacity: f64, wall_ms: u128) -> String {
+/// Group the flat point lists into one curve per (scenario, policy)
+/// and one fleet curve per (scenario, routing policy, fleet size).
+fn to_json(
+    points: &[SweepPoint],
+    fleet_points: &[FleetPoint],
+    instances: u32,
+    capacity: f64,
+    wall_ms: u128,
+) -> String {
     let mut curves = Vec::new();
     for &scenario in &SWEEP_SCENARIOS {
         for &policy in &SWEEP_POLICIES {
@@ -114,10 +173,41 @@ fn to_json(points: &[SweepPoint], instances: u32, capacity: f64, wall_ms: u128) 
             ));
         }
     }
+    let mut fleet_curves = Vec::new();
+    for &scenario in &FLEET_SCENARIOS {
+        for &policy in &FLEET_POLICIES {
+            for &gpus in &DEFAULT_FLEETS {
+                let pts: Vec<String> = fleet_points
+                    .iter()
+                    .filter(|p| p.scenario == scenario && p.policy == policy && p.gpus == gpus)
+                    .map(|p| {
+                        format!(
+                            "{{\"load\":{},\"offered_kps\":{},\"throughput_kps\":{},\
+                             \"makespan_secs\":{},\"kernels\":{},\
+                             \"latency_p99_s\":{},\"deadline_misses\":{}}}",
+                            p.load,
+                            p.offered_kps,
+                            p.throughput_kps,
+                            p.makespan_secs,
+                            p.kernels,
+                            p.latency.p99_turnaround_secs,
+                            p.latency.deadline_misses + p.batch.deadline_misses
+                        )
+                    })
+                    .collect();
+                fleet_curves.push(format!(
+                    "{{\"scenario\":\"{scenario}\",\"policy\":\"{policy}\",\"gpus\":{gpus},\
+                     \"points\":[{}]}}",
+                    pts.join(",")
+                ));
+            }
+        }
+    }
     format!(
         "{{\"bench\":\"throughput\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\
          \"instances_per_app\":{instances},\"base_capacity_kps\":{capacity},\
-         \"wall_ms\":{wall_ms},\"curves\":[{}]}}\n",
-        curves.join(",")
+         \"wall_ms\":{wall_ms},\"curves\":[{}],\"fleet_curves\":[{}]}}\n",
+        curves.join(","),
+        fleet_curves.join(",")
     )
 }

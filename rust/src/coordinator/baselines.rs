@@ -13,7 +13,7 @@
 //!   random schedule plans (random pair, random feasible split, random
 //!   slice multiple); the distribution of their total times is Fig. 14.
 
-use super::engine::{Decision, Engine, FifoSelector, Selector};
+use super::engine::{Decision, Engine, FifoSelector, SchedCtx, Selector};
 use super::greedy::Coordinator;
 use super::{feasible_splits, ExecutionReport};
 use crate::kernel::{KernelInstance, KernelSpec};
@@ -55,8 +55,8 @@ impl Selector for OptSelector {
         "opt"
     }
 
-    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
-        select_opt(coord, pending)
+    fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+        select_opt(ctx.coord, ctx.pending)
     }
 }
 
@@ -77,8 +77,8 @@ impl Selector for RandomSelector {
         "mc"
     }
 
-    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
-        select_random(coord, pending, &mut self.rng)
+    fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+        select_random(ctx.coord, ctx.pending, &mut self.rng)
     }
 }
 
@@ -136,6 +136,7 @@ fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decisi
                             size2: z2,
                             cipc: m.cipc,
                             cp,
+                            rounds_cap: None,
                         },
                     ));
                 }
@@ -177,6 +178,7 @@ fn select_random(
         size2: b2 * coord.gpu.num_sms * m2,
         cipc: [0.0, 0.0],
         cp: 0.0,
+        rounds_cap: None,
     })
 }
 

@@ -1,0 +1,306 @@
+//! Deadline-aware scheduling: EDF-gated Kernelet.
+//!
+//! [`DeadlineSelector`] keeps the paper's greedy profit pick as long as
+//! every deadline is comfortably ahead, and switches to
+//! earliest-deadline-first the moment one is at risk — the slicing
+//! mechanism is exactly what makes this cheap (Pai et al.'s preemptive
+//! thread-block scheduling makes the same observation): an urgent
+//! kernel "preempts" at the next slice boundary, no hardware support
+//! needed.
+//!
+//! A kernel is **urgent** when its time-to-deadline falls within
+//! `urgency_factor ×` its estimated remaining solo service time (the
+//! cached whole-kernel measurement scaled by the residual,
+//! [`SchedCtx::est_remaining_secs`]). While an urgent kernel exists:
+//!
+//! - the greedy co-schedule is kept only if it *includes* the most
+//!   urgent kernel (then capped at one round so urgency is
+//!   re-evaluated at slice granularity);
+//! - otherwise the urgent kernel jumps the pairing and runs solo, in
+//!   EDF order (minimum slack first).
+//!
+//! While any deadlined kernel is pending — urgent or not — dispatch is
+//! held at slice granularity (chunked solos, single-round pair blocks)
+//! even after the arrival stream goes dry, so a kernel can *turn*
+//! urgent at the next decision boundary instead of waiting out an
+//! uninterruptible whole-residual run.
+//!
+//! With no deadlines in the pending set the selector defers to
+//! [`KerneletSelector`] wholesale, so an all-batch, no-deadline
+//! workload is decision-identical to the plain Kernelet policy — the
+//! differential tests in `tests/scheduling_invariants.rs` pin that.
+
+use super::engine::{Decision, KerneletSelector, SchedCtx, Selector};
+use crate::kernel::KernelInstance;
+
+/// EDF-gated Kernelet (see module docs).
+pub struct DeadlineSelector {
+    inner: KerneletSelector,
+    /// A kernel turns urgent when `deadline − now` is within this
+    /// multiple of its estimated remaining service time. 1.0 waits for
+    /// the last possible moment (any estimate error causes a miss);
+    /// larger factors yield earlier, safer jumps at a throughput cost.
+    pub urgency_factor: f64,
+    /// Urgency scan memo for the current dispatch decision, keyed by
+    /// (clock bits, backlog): the engine calls `select` and then
+    /// `solo_pick` on the same context, and the scan costs one
+    /// simulator-cache lookup per deadlined kernel — too much to pay
+    /// twice per decision in exactly the overloaded regime this policy
+    /// targets.
+    cached: Option<((u64, usize), Option<u64>)>,
+}
+
+impl DeadlineSelector {
+    pub const DEFAULT_URGENCY_FACTOR: f64 = 2.0;
+
+    pub fn new() -> Self {
+        Self::with_urgency_factor(Self::DEFAULT_URGENCY_FACTOR)
+    }
+
+    pub fn with_urgency_factor(urgency_factor: f64) -> Self {
+        assert!(urgency_factor >= 1.0, "urgency factor {urgency_factor} < 1 always misses");
+        Self { inner: KerneletSelector, urgency_factor, cached: None }
+    }
+
+    /// Id of the most urgent deadlined kernel — minimum slack among
+    /// those whose time-to-deadline is within `urgency_factor ×` their
+    /// remaining service estimate. Ties break toward queue order
+    /// (strict `<`), which is also arrival order for a single stream.
+    fn scan_urgent(&self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for &k in ctx.pending {
+            let Some(ttd) = k.time_to_deadline(ctx.now_secs) else { continue };
+            let est = ctx.est_remaining_secs(k);
+            if ttd > self.urgency_factor * est {
+                continue; // comfortably ahead of its deadline
+            }
+            let slack = ttd - est;
+            if best.map_or(true, |(s, _)| slack < s) {
+                best = Some((slack, k.id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    fn decision_key(ctx: &SchedCtx<'_, '_>) -> (u64, usize) {
+        (ctx.now_secs.to_bits(), ctx.backlog())
+    }
+
+    /// Whether any pending kernel carries a deadline. While true, the
+    /// selector keeps dispatch at slice granularity (chunked solos,
+    /// single-round pair blocks) so a not-yet-urgent kernel can turn
+    /// urgent at the next decision boundary — even after the arrival
+    /// stream has gone dry, when the default dispatch would otherwise
+    /// run whole residuals and uncapped pair blocks uninterruptibly.
+    fn deadline_pending(ctx: &SchedCtx<'_, '_>) -> bool {
+        ctx.pending.iter().any(|k| k.qos.deadline.is_some())
+    }
+}
+
+impl Default for DeadlineSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Selector for DeadlineSelector {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+        let urgent = self.scan_urgent(ctx);
+        // Memoize for the solo_pick the engine issues on this same
+        // decision when we return None — the scan costs a simulator
+        // lookup per deadlined kernel and must not run twice per
+        // dispatch in the overloaded regime this policy targets.
+        self.cached = Some((Self::decision_key(ctx), urgent));
+        match urgent {
+            // Nothing at risk *yet*: the throughput-optimal plan
+            // stands, but while deadlines are pending a pair block is
+            // capped at one round — a deadlined kernel outside the pair
+            // must be able to turn urgent at the next slice boundary,
+            // not after the pair drains.
+            None => match self.inner.select(ctx) {
+                Some(d) if Self::deadline_pending(ctx) => {
+                    Some(Decision { rounds_cap: Some(1), ..d })
+                }
+                other => other,
+            },
+            Some(u) => {
+                // Keep the greedy profit pick only when it advances the
+                // urgent kernel — co-scheduling it beats running it
+                // solo — re-gated every round.
+                match self.inner.select(ctx) {
+                    Some(d) if d.k1 == u || d.k2 == u => {
+                        Some(Decision { rounds_cap: Some(1), ..d })
+                    }
+                    // Jump the pairing: solo_pick routes the urgent
+                    // kernel in EDF order.
+                    _ => None,
+                }
+            }
+        }
+    }
+
+    fn solo_pick(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+        // Consume the memo `select` left for this decision; a key
+        // mismatch, a standalone call, or an id no longer pending falls
+        // back to a fresh scan.
+        let urgent = match self.cached.take() {
+            Some((key, hit))
+                if key == Self::decision_key(ctx)
+                    && hit.map_or(true, |id| ctx.pending.iter().any(|p| p.id == id)) =>
+            {
+                hit
+            }
+            _ => self.scan_urgent(ctx),
+        };
+        match urgent {
+            Some(u) => Some(u),
+            None => self.inner.solo_pick(ctx),
+        }
+    }
+
+    fn solo_slice(&mut self, ctx: &SchedCtx<'_, '_>, head: &KernelInstance) -> u32 {
+        // Keep solos chunked while any deadline is pending, even once
+        // the stream is dry: the default would dispatch the whole
+        // residual as one uninterruptible slice, hiding a kernel that
+        // turns urgent mid-run until it is too late to meet.
+        if Self::deadline_pending(ctx) || ctx.more_arrivals {
+            ctx.coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
+        } else {
+            head.remaining_blocks()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::coordinator::{Coordinator, Engine};
+    use crate::kernel::{BenchmarkApp, Qos};
+    use crate::workload::{Mix, ReplaySource, Stream};
+
+    fn ctx_over<'a, 'q>(
+        coord: &'a Coordinator,
+        pending: &'q [&'q KernelInstance],
+        now_secs: f64,
+    ) -> SchedCtx<'a, 'q> {
+        SchedCtx { coord, pending, now_secs, more_arrivals: true }
+    }
+
+    #[test]
+    fn no_deadlines_defers_to_kernelet() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let insts: Vec<KernelInstance> = [BenchmarkApp::TEA, BenchmarkApp::PC]
+            .iter()
+            .enumerate()
+            .map(|(i, a)| KernelInstance::new(i as u64, a.spec(), 0.0))
+            .collect();
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let mut dl = DeadlineSelector::new();
+        let mut kern = KerneletSelector;
+        let a = dl.select(&ctx).expect("TEA+PC co-schedule");
+        let b = kern.select(&ctx).expect("TEA+PC co-schedule");
+        assert_eq!((a.k1, a.k2, a.b1, a.b2, a.size1, a.size2), (b.k1, b.k2, b.b1, b.b2, b.size1, b.size2));
+        assert_eq!(a.rounds_cap, None, "no urgency, no cap");
+        assert_eq!(dl.solo_pick(&ctx), kern.solo_pick(&ctx));
+    }
+
+    #[test]
+    fn urgent_kernel_jumps_the_queue() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        // Two instances of the same app (no pairing possible): the
+        // second-arriving one carries a deadline that is already tight.
+        let a = KernelInstance::new(0, BenchmarkApp::MM.spec(), 0.0);
+        let est = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&BenchmarkApp::MM.spec()));
+        let b = KernelInstance::new(1, BenchmarkApp::MM.spec(), 0.0)
+            .with_qos(Qos::latency(Some(est * 1.5)));
+        let insts = [a, b];
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let mut dl = DeadlineSelector::new();
+        assert!(dl.select(&ctx).is_none(), "same-app pending never pairs");
+        // FIFO order would run id 0 first; EDF jumps the deadlined id 1.
+        assert_eq!(dl.solo_pick(&ctx), Some(1));
+        // Far-future deadline: not urgent, FIFO order returns.
+        let c = KernelInstance::new(1, BenchmarkApp::MM.spec(), 0.0)
+            .with_qos(Qos::latency(Some(est * 1e4)));
+        let insts2 = [insts[0].clone(), c];
+        let refs2: Vec<&KernelInstance> = insts2.iter().collect();
+        let ctx2 = ctx_over(&coord, &refs2, 0.0);
+        assert_eq!(dl.solo_pick(&ctx2), Some(0));
+    }
+
+    #[test]
+    fn urgent_pair_member_keeps_the_pair_but_caps_rounds() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let tea = KernelInstance::new(0, BenchmarkApp::TEA.spec(), 0.0);
+        let est_pc = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&BenchmarkApp::PC.spec()));
+        let pc = KernelInstance::new(1, BenchmarkApp::PC.spec(), 0.0)
+            .with_qos(Qos::latency(Some(est_pc))); // maximally tight
+        let insts = [tea, pc];
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let mut dl = DeadlineSelector::new();
+        let d = dl.select(&ctx).expect("TEA+PC pair survives urgency");
+        assert!(d.k1 == 1 || d.k2 == 1, "pair must include the urgent kernel");
+        assert_eq!(d.rounds_cap, Some(1));
+    }
+
+    #[test]
+    fn dry_stream_still_preempts_at_slice_boundaries() {
+        // REGRESSION: with no further arrivals the default dispatch
+        // runs whole residuals, so a kernel that turns urgent mid-run
+        // would miss a deadline the chunked policy meets. Two same-app
+        // kernels (no pairing possible), both pending at t=0, stream
+        // dry: a big batch kernel ahead of a small latency kernel whose
+        // deadline is beyond the urgency window at t=0 but well inside
+        // the batch kernel's whole-residual runtime.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let small = BenchmarkApp::MM.spec();
+        let big = small.with_grid(small.grid_blocks * 8);
+        let est_small = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&small));
+        let est_big = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&big));
+        let deadline = 0.45 * est_big;
+        // Craft preconditions: not urgent at t=0, impossible if the
+        // batch kernel runs whole, and meetable via the first chunk
+        // boundary (~est_big/4) plus the latency kernel's own runtime.
+        assert!(deadline > 2.0 * est_small, "craft: urgent too early");
+        assert!(deadline < est_big, "craft: whole-residual run must miss");
+        assert!(0.25 * est_big + 1.2 * est_small < deadline, "craft: chunked run must meet");
+        let instances = vec![
+            KernelInstance::new(0, big, 0.0),
+            KernelInstance::new(1, small, 0.0).with_qos(Qos::latency(Some(deadline))),
+        ];
+        let rep = Engine::new(&coord).run_source(
+            &mut DeadlineSelector::new(),
+            &mut ReplaySource::from_instances("dry", instances),
+        );
+        assert_eq!(rep.kernels_completed, 2);
+        assert_eq!(
+            rep.qos.latency.deadline_misses, 0,
+            "latency kernel completed at {} vs deadline {deadline}",
+            rep.completion[&1]
+        );
+    }
+
+    #[test]
+    fn engine_run_meets_generous_deadlines() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let mut stream = Stream::saturated(Mix::MIX, 2, 9);
+        // Every kernel latency-class with a deadline far beyond the
+        // whole run: zero misses expected.
+        for k in &mut stream.instances {
+            k.qos = Qos::latency(Some(1e9));
+        }
+        let rep = Engine::new(&coord)
+            .run_source(&mut DeadlineSelector::new(), &mut ReplaySource::from_stream(&stream));
+        assert_eq!(rep.kernels_completed, stream.len());
+        assert_eq!(rep.qos.total_deadline_misses(), 0);
+        assert_eq!(rep.qos.latency.completed, stream.len());
+    }
+}

@@ -11,11 +11,24 @@
 //! - [`Selector`] — *which work runs next*: Kernelet's model-driven
 //!   greedy pick ([`KerneletSelector`]), the measured oracle
 //!   (`baselines::OptSelector`), Monte-Carlo random plans
-//!   (`baselines::RandomSelector`), or plain consolidation
-//!   ([`FifoSelector`]).
+//!   (`baselines::RandomSelector`), plain consolidation
+//!   ([`FifoSelector`]), or the EDF-gated QoS policy
+//!   (`deadline::DeadlineSelector`). Selectors see one [`SchedCtx`]
+//!   value — coordinator, pending set, sim clock, backlog depth and
+//!   `more_arrivals` — so growing the policy-input surface never
+//!   breaks every implementation again.
 //! - [`TimingBackend`] — *how long it takes*: the cycle-level simulator
 //!   via [`super::SimCache`] (default), or real PJRT slice executions
 //!   via `runtime::PjrtBackend`.
+//!
+//! QoS is a first-class dimension: every [`KernelInstance`] carries a
+//! [`Qos`] (service class + optional deadline), the report breaks
+//! turnaround percentiles and deadline misses out per class
+//! ([`QosReport`]), and a selector can pick the solo kernel
+//! ([`Selector::solo_pick`]) or cap a pair's rounds
+//! ([`Decision::rounds_cap`]) to react to urgency. With everything
+//! batch and no deadlines the engine is decision-identical to the
+//! pre-QoS implementation (pinned by `tests/scheduling_invariants.rs`).
 //!
 //! The engine is a stepping state machine ([`Engine::submit`] /
 //! [`Engine::run_until`] / [`Engine::drain`] / [`Engine::step`]) so
@@ -34,7 +47,8 @@ use std::collections::HashMap;
 
 use super::greedy::{CoSchedule, Coordinator};
 use super::simcache::SimCache;
-use crate::kernel::{KernelInstance, KernelSpec};
+use crate::kernel::{KernelInstance, KernelSpec, Qos, ServiceClass};
+use crate::stats::percentile;
 use crate::workload::{ArrivalSource, Stream};
 
 /// A co-schedule decision produced by a [`Selector`]: the paper's
@@ -55,6 +69,12 @@ pub struct Decision {
     pub cipc: [f64; 2],
     /// Co-scheduling profit the selector expects; informational.
     pub cp: f64,
+    /// Cap on the alternating slice rounds dispatched before the engine
+    /// asks the selector again. `None` (the default, and the paper's
+    /// Algorithm 1) repeats rounds until a kernel drains or an arrival
+    /// becomes due; a deadline-aware selector sets a small cap so
+    /// urgency is re-evaluated at slice granularity.
+    pub rounds_cap: Option<u32>,
 }
 
 impl From<CoSchedule> for Decision {
@@ -68,7 +88,44 @@ impl From<CoSchedule> for Decision {
             size2: cs.size2,
             cipc: cs.cipc,
             cp: cs.cp,
+            rounds_cap: None,
         }
+    }
+}
+
+/// Everything a scheduling policy sees at one dispatch decision.
+///
+/// Selectors used to take `(&Coordinator, &[&KernelInstance])`
+/// positionally, so every new policy input (the sim clock for deadline
+/// slack, backlog depth for admission pressure, `more_arrivals` for the
+/// chunking choice) broke all implementations at once. New inputs now
+/// land here as fields; existing selectors keep compiling.
+pub struct SchedCtx<'a, 'q> {
+    /// Device coordinator: model caches, simulator, GPU config.
+    pub coord: &'a Coordinator,
+    /// The pending set, in queue (submission) order.
+    pub pending: &'q [&'q KernelInstance],
+    /// Simulation clock at the decision point, in seconds — the epoch
+    /// kernel deadlines are expressed in.
+    pub now_secs: f64,
+    /// Whether the arrival stream may still produce kernels (drives the
+    /// chunk-vs-run-whole solo decision).
+    pub more_arrivals: bool,
+}
+
+impl SchedCtx<'_, '_> {
+    /// Pending-queue depth at the decision point (admission-pressure
+    /// input for load-shedding policies).
+    pub fn backlog(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Estimated seconds to drain `k`'s residual blocks solo on this
+    /// device (cached whole-kernel measurement scaled by the residual) —
+    /// the load model deadline slack is computed against.
+    pub fn est_remaining_secs(&self, k: &KernelInstance) -> f64 {
+        let full = self.coord.gpu.cycles_to_secs(self.coord.simcache.solo_full(&k.spec));
+        full * f64::from(k.remaining_blocks()) / f64::from(k.spec.grid_blocks)
     }
 }
 
@@ -77,18 +134,29 @@ pub trait Selector {
     /// Policy name (reports, traces).
     fn name(&self) -> &'static str;
 
-    /// Pick a co-schedule from the pending set, or `None` to run the
-    /// head kernel solo.
-    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision>;
+    /// Pick a co-schedule from the pending set, or `None` to run one
+    /// kernel solo ([`Self::solo_pick`] chooses which).
+    fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision>;
 
-    /// Blocks to dispatch when the head kernel runs solo. The default
-    /// keeps chunks at a quarter of the original grid while arrivals
-    /// are still expected — so a newcomer can co-schedule with the
+    /// Instance id to dispatch solo when [`Self::select`] returns
+    /// `None`. The default is the earliest arrival (first in queue
+    /// order on ties) — the pre-QoS engine behavior; deadline-aware
+    /// policies override with EDF order.
+    fn solo_pick(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+        ctx.pending
+            .iter()
+            .min_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time))
+            .map(|k| k.id)
+    }
+
+    /// Blocks to dispatch when `head` runs solo. The default keeps
+    /// chunks at a quarter of the original grid while arrivals are
+    /// still expected — so a newcomer can co-schedule with the
     /// residual — and runs the whole residual once the stream is dry
     /// (solo == BASE; chunking would buy nothing but launch overhead).
-    fn solo_slice(&mut self, coord: &Coordinator, head: &KernelInstance, more_arrivals: bool) -> u32 {
-        if more_arrivals {
-            coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
+    fn solo_slice(&mut self, ctx: &SchedCtx<'_, '_>, head: &KernelInstance) -> u32 {
+        if ctx.more_arrivals {
+            ctx.coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
         } else {
             head.remaining_blocks()
         }
@@ -104,8 +172,8 @@ impl Selector for KerneletSelector {
         "kernelet"
     }
 
-    fn select(&mut self, coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decision> {
-        coord.find_coschedule(pending).map(Decision::from)
+    fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+        ctx.coord.find_coschedule(ctx.pending).map(Decision::from)
     }
 }
 
@@ -118,11 +186,11 @@ impl Selector for FifoSelector {
         "base"
     }
 
-    fn select(&mut self, _coord: &Coordinator, _pending: &[&KernelInstance]) -> Option<Decision> {
+    fn select(&mut self, _ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
         None
     }
 
-    fn solo_slice(&mut self, _coord: &Coordinator, head: &KernelInstance, _more: bool) -> u32 {
+    fn solo_slice(&mut self, _ctx: &SchedCtx<'_, '_>, head: &KernelInstance) -> u32 {
         head.remaining_blocks()
     }
 }
@@ -227,6 +295,91 @@ impl Observer for StderrTrace {
     }
 }
 
+/// Per-service-class outcome: turnaround percentiles over completed
+/// kernels of the class plus deadline accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassStats {
+    /// Kernels of the class that completed.
+    pub completed: usize,
+    /// Kernels of the class that carried a deadline.
+    pub with_deadline: usize,
+    /// Deadlined kernels that finished after their deadline — or never
+    /// finished at all (an incomplete deadlined kernel is a miss).
+    pub deadline_misses: usize,
+    /// Mean turnaround over completed kernels of the class, seconds.
+    pub mean_turnaround_secs: f64,
+    /// Nearest-rank turnaround percentiles (0.0 when nothing of the
+    /// class completed).
+    pub p50_turnaround_secs: f64,
+    pub p95_turnaround_secs: f64,
+    pub p99_turnaround_secs: f64,
+    /// Turnarounds of completed kernels, sorted ascending — kept so
+    /// fleet-level reports can merge devices and recompute percentiles
+    /// exactly instead of averaging them.
+    pub turnarounds: Vec<f64>,
+}
+
+impl ClassStats {
+    /// Build from raw turnarounds (any order) plus deadline counts.
+    pub fn from_parts(
+        mut turnarounds: Vec<f64>,
+        with_deadline: usize,
+        deadline_misses: usize,
+    ) -> ClassStats {
+        turnarounds.sort_by(|a, b| a.total_cmp(b));
+        let completed = turnarounds.len();
+        let mean = if completed == 0 {
+            0.0
+        } else {
+            turnarounds.iter().sum::<f64>() / completed as f64
+        };
+        let pct = |q: f64| percentile(&turnarounds, q).unwrap_or(0.0);
+        ClassStats {
+            completed,
+            with_deadline,
+            deadline_misses,
+            mean_turnaround_secs: mean,
+            p50_turnaround_secs: pct(0.50),
+            p95_turnaround_secs: pct(0.95),
+            p99_turnaround_secs: pct(0.99),
+            turnarounds,
+        }
+    }
+
+    /// Exact merge of two devices' class outcomes (samples are pooled
+    /// and the percentiles recomputed).
+    pub fn merge(&self, other: &ClassStats) -> ClassStats {
+        let mut t = self.turnarounds.clone();
+        t.extend_from_slice(&other.turnarounds);
+        ClassStats::from_parts(
+            t,
+            self.with_deadline + other.with_deadline,
+            self.deadline_misses + other.deadline_misses,
+        )
+    }
+}
+
+/// The QoS breakdown of a run: one [`ClassStats`] per service class.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QosReport {
+    pub latency: ClassStats,
+    pub batch: ClassStats,
+}
+
+impl QosReport {
+    pub fn total_deadline_misses(&self) -> usize {
+        self.latency.deadline_misses + self.batch.deadline_misses
+    }
+
+    /// Exact per-class merge (fleet reports).
+    pub fn merge(&self, other: &QosReport) -> QosReport {
+        QosReport {
+            latency: self.latency.merge(&other.latency),
+            batch: self.batch.merge(&other.batch),
+        }
+    }
+}
+
 /// Outcome of running a stream to completion under some policy.
 #[derive(Debug, Clone)]
 pub struct ExecutionReport {
@@ -258,6 +411,8 @@ pub struct ExecutionReport {
     pub queue_depth: Vec<(f64, usize)>,
     /// Per-round slice trace, in dispatch order.
     pub slice_trace: Vec<SliceRecord>,
+    /// Per-service-class turnaround percentiles and deadline misses.
+    pub qos: QosReport,
 }
 
 impl ExecutionReport {
@@ -302,9 +457,10 @@ pub struct Engine<'a> {
     solo_slices: u64,
     slice_trace: Vec<SliceRecord>,
     queue_depth: Vec<(f64, usize)>,
-    /// (id, arrival time) of every submission, in submission order —
-    /// what [`Engine::finish_online`] computes turnaround against.
-    submitted: Vec<(u64, f64)>,
+    /// (id, arrival time, qos) of every submission, in submission order
+    /// — what [`Engine::finish_online`] computes turnaround and
+    /// deadline misses against.
+    submitted: Vec<(u64, f64, Qos)>,
     /// (id, completion time) in completion order; [`Engine::run_source`]
     /// and the multi-GPU dispatcher drain this to feed closed-loop
     /// sources.
@@ -378,7 +534,7 @@ impl<'a> Engine<'a> {
                 self.clock_cycles = c;
             }
         }
-        self.submitted.push((k.id, k.arrival_time));
+        self.submitted.push((k.id, k.arrival_time, k.qos));
         self.queue.push(k);
     }
 
@@ -486,8 +642,8 @@ impl<'a> Engine<'a> {
     /// Close out the run and produce the report (turnaround is computed
     /// against the stream's arrival times).
     pub fn finish(self, stream: &Stream) -> ExecutionReport {
-        let arrivals: Vec<(u64, f64)> =
-            stream.instances.iter().map(|k| (k.id, k.arrival_time)).collect();
+        let arrivals: Vec<(u64, f64, Qos)> =
+            stream.instances.iter().map(|k| (k.id, k.arrival_time, k.qos)).collect();
         self.finish_with(&arrivals)
     }
 
@@ -499,17 +655,48 @@ impl<'a> Engine<'a> {
         self.finish_with(&arrivals)
     }
 
-    fn finish_with(self, arrivals: &[(u64, f64)]) -> ExecutionReport {
+    fn finish_with(self, arrivals: &[(u64, f64, Qos)]) -> ExecutionReport {
         let total_secs = self.secs(self.clock_cycles);
         let mut turn = 0.0;
         let mut completed_of_stream = 0usize;
-        for &(id, arrival_time) in arrivals {
-            if let Some(&done) = self.completion.get(&id) {
-                turn += done - arrival_time;
-                completed_of_stream += 1;
+        // Per-class accumulators (turnarounds, deadline counts).
+        let mut turns = [Vec::new(), Vec::new()];
+        let mut with_deadline = [0usize; 2];
+        let mut misses = [0usize; 2];
+        let class_idx = |c: ServiceClass| match c {
+            ServiceClass::Latency => 0usize,
+            ServiceClass::Batch => 1,
+        };
+        for &(id, arrival_time, qos) in arrivals {
+            let c = class_idx(qos.class);
+            if qos.deadline.is_some() {
+                with_deadline[c] += 1;
+            }
+            match self.completion.get(&id) {
+                Some(&done) => {
+                    let t = done - arrival_time;
+                    turn += t;
+                    completed_of_stream += 1;
+                    turns[c].push(t);
+                    if qos.deadline.map_or(false, |d| done > d) {
+                        misses[c] += 1;
+                    }
+                }
+                None => {
+                    // Never finished: a deadlined kernel is a miss.
+                    if qos.deadline.is_some() {
+                        misses[c] += 1;
+                    }
+                }
             }
         }
+        let [lat_turns, batch_turns] = turns;
+        let qos = QosReport {
+            latency: ClassStats::from_parts(lat_turns, with_deadline[0], misses[0]),
+            batch: ClassStats::from_parts(batch_turns, with_deadline[1], misses[1]),
+        };
         ExecutionReport {
+            qos,
             total_cycles: self.clock_cycles,
             total_secs,
             kernels_completed: self.completion.len(),
@@ -529,29 +716,52 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// One dispatch decision: ask the selector, run a co-schedule block
-    /// of rounds or a single solo slice.
+    /// One dispatch decision: build the [`SchedCtx`], ask the selector,
+    /// run a co-schedule block of rounds or a single solo slice. The
+    /// whole plan (pair, or solo pick + slice size) is resolved against
+    /// the immutable context before any queue mutation.
     fn dispatch_once(
         &mut self,
         selector: &mut dyn Selector,
         next_arrival: Option<f64>,
         more_arrivals: bool,
     ) {
-        self.queue_depth.push((self.secs(self.clock_cycles), self.queue.len()));
-        let decision = {
+        let now_secs = self.secs(self.clock_cycles);
+        self.queue_depth.push((now_secs, self.queue.len()));
+        enum Plan {
+            Pair(Decision),
+            Solo { id: u64, size: u32 },
+        }
+        let plan = {
             let refs: Vec<&KernelInstance> = self.queue.iter().collect();
-            selector.select(self.coord, &refs)
+            let ctx = SchedCtx { coord: self.coord, pending: &refs, now_secs, more_arrivals };
+            match selector.select(&ctx) {
+                Some(d) => Plan::Pair(d),
+                None => {
+                    let id = selector
+                        .solo_pick(&ctx)
+                        .expect("solo_pick returned None on a non-empty queue");
+                    let head = refs
+                        .iter()
+                        .find(|k| k.id == id)
+                        .expect("solo_pick chose a kernel not in the pending queue");
+                    let size = selector.solo_slice(&ctx, head);
+                    Plan::Solo { id, size }
+                }
+            }
         };
-        match decision {
-            Some(d) => self.dispatch_pair(&d, next_arrival),
-            None => self.dispatch_solo(&mut *selector, more_arrivals),
+        match plan {
+            Plan::Pair(d) => self.dispatch_pair(&d, next_arrival),
+            Plan::Solo { id, size } => self.dispatch_solo(id, size),
         }
     }
 
     /// Dispatch alternating balanced slices of a selected pair "while R
     /// does not change, or K1 and K2 both still have thread blocks"
-    /// (Algorithm 1, line 8): rounds repeat until either kernel drains
-    /// or the next arrival becomes due.
+    /// (Algorithm 1, line 8): rounds repeat until either kernel drains,
+    /// the next arrival becomes due, or the decision's
+    /// [`Decision::rounds_cap`] is reached (deadline-aware selectors
+    /// cap rounds so urgency is re-evaluated at slice granularity).
     fn dispatch_pair(&mut self, d: &Decision, next_arrival: Option<f64>) {
         let i1 = self
             .queue
@@ -567,6 +777,7 @@ impl<'a> Engine<'a> {
         if let Some(obs) = self.observer.as_deref_mut() {
             obs.coschedule(self.queue[i1].spec.name, self.queue[i2].spec.name, d);
         }
+        let mut rounds_in_block = 0u32;
         loop {
             let r1 = {
                 let k = &mut self.queue[i1];
@@ -608,23 +819,23 @@ impl<'a> Engine<'a> {
             }
             let drained = self.queue[i1].is_finished() || self.queue[i2].is_finished();
             let arrival_due = next_arrival.map_or(false, |ta| ta <= t);
-            if drained || arrival_due {
+            rounds_in_block += 1;
+            let capped = d.rounds_cap.map_or(false, |cap| rounds_in_block >= cap);
+            if drained || arrival_due || capped {
                 break;
             }
         }
         self.queue.retain(|k| !k.is_finished());
     }
 
-    /// Dispatch one solo slice of the head (earliest-arrival) kernel.
-    fn dispatch_solo(&mut self, selector: &mut dyn Selector, more_arrivals: bool) {
+    /// Dispatch one solo slice of `size` blocks of kernel `id` (chosen
+    /// by the selector's [`Selector::solo_pick`]).
+    fn dispatch_solo(&mut self, id: u64, size: u32) {
         let head = self
             .queue
             .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| a.arrival_time.total_cmp(&b.arrival_time))
-            .map(|(i, _)| i)
-            .expect("dispatch_solo on an empty queue");
-        let size = selector.solo_slice(self.coord, &self.queue[head], more_arrivals);
+            .position(|k| k.id == id)
+            .expect("dispatch_solo target left the pending queue");
         let (r, id, fin) = {
             let k = &mut self.queue[head];
             let r = k.take_slice(size.min(k.remaining_blocks().max(1)));
@@ -752,6 +963,62 @@ mod tests {
     // run_source-vs-run differentials live in tests/arrival_sources.rs
     // (engine_replay_source_is_identity and the Poisson bit-identity
     // suite) — not duplicated here.
+
+    #[test]
+    fn per_class_stats_partition_the_run() {
+        use crate::kernel::Qos;
+
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let mut stream = Stream::saturated(Mix::MIX, 2, 3);
+        // Alternate classes; give latency kernels generous deadlines and
+        // one batch kernel an impossible deadline.
+        for (i, k) in stream.instances.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                k.qos = Qos::latency(Some(k.arrival_time + 1e6));
+            }
+        }
+        stream.instances[1].qos = Qos { deadline: Some(1e-9), ..stream.instances[1].qos };
+        let n = stream.len();
+        let r = Engine::new(&coord).run(&mut KerneletSelector, &stream);
+        let q = &r.qos;
+        assert_eq!(q.latency.completed + q.batch.completed, r.kernels_completed);
+        assert_eq!(q.latency.completed, n / 2);
+        assert_eq!(q.latency.with_deadline, n / 2);
+        // The generous latency deadlines are all met; the impossible
+        // batch deadline is the lone miss.
+        assert_eq!(q.latency.deadline_misses, 0);
+        assert_eq!(q.batch.with_deadline, 1);
+        assert_eq!(q.batch.deadline_misses, 1);
+        assert_eq!(q.total_deadline_misses(), 1);
+        // Percentiles are ordered and drawn from the samples.
+        for c in [&q.latency, &q.batch] {
+            assert!(c.p50_turnaround_secs <= c.p95_turnaround_secs);
+            assert!(c.p95_turnaround_secs <= c.p99_turnaround_secs);
+            assert_eq!(c.turnarounds.len(), c.completed);
+            assert!(c.turnarounds.iter().all(|t| *t >= 0.0));
+        }
+        // Class means recombine into the overall mean.
+        let total = q.latency.mean_turnaround_secs * q.latency.completed as f64
+            + q.batch.mean_turnaround_secs * q.batch.completed as f64;
+        assert!((total / n as f64 - r.mean_turnaround_secs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_stats_merge_is_exact() {
+        let a = ClassStats::from_parts(vec![3.0, 1.0, 2.0], 2, 1);
+        let b = ClassStats::from_parts(vec![5.0, 4.0], 1, 0);
+        let m = a.merge(&b);
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.with_deadline, 3);
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.turnarounds, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(m.p50_turnaround_secs, 3.0);
+        assert_eq!(m.p99_turnaround_secs, 5.0);
+        assert!((m.mean_turnaround_secs - 3.0).abs() < 1e-12);
+        // Empty classes merge as identities.
+        let e = ClassStats::default();
+        assert_eq!(e.merge(&a), a);
+    }
 
     #[test]
     fn stepping_api_matches_one_shot_run() {

@@ -7,11 +7,12 @@
 //! ```text
 //!   arrivals ──► Engine (clock, pending queue, slice dispatch,
 //!               │        completion bookkeeping, trace observer)
-//!               ├─ Selector      .. which work runs next
+//!               ├─ Selector (sees one SchedCtx) .. which work runs next
 //!               │    KerneletSelector   model-driven greedy (Alg. 1)
 //!               │    OptSelector        measured oracle
 //!               │    RandomSelector     Monte-Carlo plans
 //!               │    FifoSelector       BASE consolidation
+//!               │    DeadlineSelector   EDF-gated Kernelet (QoS)
 //!               └─ TimingBackend  .. how long a slice takes
 //!                    SimCache            cycle-level simulator
 //!                    runtime::PjrtBackend real PJRT slice executions
@@ -23,6 +24,7 @@
 //! load. There is no other clock-advancing dispatch loop in the crate.
 
 pub mod baselines;
+pub mod deadline;
 pub mod engine;
 pub mod executor;
 pub mod greedy;
@@ -31,9 +33,10 @@ pub mod pruning;
 pub mod simcache;
 
 pub use baselines::{run_base, run_monte_carlo, run_opt, OptSelector, RandomSelector};
+pub use deadline::DeadlineSelector;
 pub use engine::{
-    Decision, Engine, ExecutionReport, FifoSelector, KerneletSelector, Observer, PairTiming,
-    Selector, SliceRecord, StderrTrace, TimingBackend,
+    ClassStats, Decision, Engine, ExecutionReport, FifoSelector, KerneletSelector, Observer,
+    PairTiming, QosReport, SchedCtx, Selector, SliceRecord, StderrTrace, TimingBackend,
 };
 pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};

@@ -10,7 +10,7 @@
 //! than a static pre-partition. [`MultiGpuDispatcher::run`] replays a
 //! pre-materialized [`Stream`]; [`MultiGpuDispatcher::run_source`]
 //! pulls a streaming [`ArrivalSource`] and feeds completions from every
-//! device back to it (closed-loop scenarios). Two routing policies:
+//! device back to it (closed-loop scenarios). Three routing policies:
 //!
 //! - [`DispatchPolicy::RoundRobin`] — oblivious, the baseline;
 //! - [`DispatchPolicy::LeastLoaded`] — route to the device whose live
@@ -20,11 +20,19 @@
 //!   measurements, so heterogeneous fleets (a C2050 and a GTX680
 //!   disagree on every kernel's cost, and on *which* kernels they are
 //!   relatively good at) are handled.
+//! - [`DispatchPolicy::SloAware`] — QoS-split routing: latency-class
+//!   kernels go to the least-backlogged device (the shortest wait the
+//!   fleet can offer right now), batch kernels spread round-robin on
+//!   their own counter so bulk work cannot pile onto the device the
+//!   next latency arrival will need. Devices under this policy also
+//!   schedule with the deadline-aware selector instead of plain
+//!   Kernelet.
 
-use super::engine::{Engine, ExecutionReport, KerneletSelector};
+use super::deadline::DeadlineSelector;
+use super::engine::{Engine, ExecutionReport, KerneletSelector, QosReport, Selector};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
-use crate::kernel::KernelInstance;
+use crate::kernel::{KernelInstance, ServiceClass};
 use crate::workload::{ArrivalSource, Stream};
 
 /// Routing policy for arriving kernels.
@@ -32,6 +40,9 @@ use crate::workload::{ArrivalSource, Stream};
 pub enum DispatchPolicy {
     RoundRobin,
     LeastLoaded,
+    /// Latency class → least backlogged device; batch class →
+    /// round-robin. Per-device engines run the deadline-aware selector.
+    SloAware,
 }
 
 /// Result of a multi-GPU run.
@@ -44,14 +55,32 @@ pub struct MultiGpuReport {
     /// Aggregate throughput over the makespan.
     pub throughput_kps: f64,
     /// Full per-device engine reports (slice traces, queue depth,
-    /// utilization), aligned with `per_device`.
+    /// utilization, per-class QoS), aligned with `per_device`.
     pub reports: Vec<ExecutionReport>,
+}
+
+impl MultiGpuReport {
+    /// Fleet-wide QoS breakdown: the per-device class samples pooled
+    /// and the percentiles recomputed exactly (never averaged).
+    pub fn fleet_qos(&self) -> QosReport {
+        self.reports
+            .iter()
+            .fold(QosReport::default(), |acc, r| acc.merge(&r.qos))
+    }
 }
 
 /// One coordinator (and so one engine) per device plus routing state.
 pub struct MultiGpuDispatcher {
     devices: Vec<Coordinator>,
     policy: DispatchPolicy,
+}
+
+/// Per-run routing counters: the global arrival index (round-robin's
+/// wheel) and the batch-only index (SLO-aware's separate wheel).
+#[derive(Default)]
+struct RouteCounters {
+    arrivals: usize,
+    batch: usize,
 }
 
 impl MultiGpuDispatcher {
@@ -88,26 +117,63 @@ impl MultiGpuDispatcher {
         overrun + queued
     }
 
-    /// Pick the destination device for arrival `k`. `arrival_no` is
-    /// the 0-based global arrival index (round-robin's counter). For
-    /// least-loaded, one load evaluation per device per arrival (the
-    /// per-queue sum is O(pending), too heavy to repeat inside a
-    /// pairwise comparator).
-    fn route(&self, engines: &[Engine<'_>], arrival_no: usize, k: &KernelInstance) -> usize {
-        match self.policy {
-            DispatchPolicy::RoundRobin => arrival_no % self.devices.len(),
-            DispatchPolicy::LeastLoaded => {
-                let loads: Vec<f64> = (0..self.devices.len())
-                    .map(|d| self.live_load(d, &engines[d], k.arrival_time) + self.est_cost(d, k))
-                    .collect();
-                loads
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, a), (_, b)| a.total_cmp(b))
-                    .map(|(d, _)| d)
-                    .unwrap()
+    /// The per-device scheduling policy this routing policy pairs with:
+    /// deadline-aware engines under [`DispatchPolicy::SloAware`], plain
+    /// Kernelet otherwise.
+    fn make_selectors(&self) -> Vec<Box<dyn Selector>> {
+        self.devices
+            .iter()
+            .map(|_| -> Box<dyn Selector> {
+                match self.policy {
+                    DispatchPolicy::SloAware => Box::new(DeadlineSelector::new()),
+                    _ => Box::new(KerneletSelector),
+                }
+            })
+            .collect()
+    }
+
+    /// Least-loaded destination for `k`: one load evaluation per device
+    /// per arrival (the per-queue sum is O(pending), too heavy to
+    /// repeat inside a pairwise comparator).
+    fn least_loaded(&self, engines: &[Engine<'_>], k: &KernelInstance) -> usize {
+        let loads: Vec<f64> = (0..self.devices.len())
+            .map(|d| self.live_load(d, &engines[d], k.arrival_time) + self.est_cost(d, k))
+            .collect();
+        loads
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.total_cmp(b))
+            .map(|(d, _)| d)
+            .unwrap()
+    }
+
+    /// Pick the destination device for arrival `k`, advancing the run's
+    /// routing counters.
+    fn route(
+        &self,
+        engines: &[Engine<'_>],
+        counters: &mut RouteCounters,
+        k: &KernelInstance,
+    ) -> usize {
+        let n = self.devices.len();
+        let d = match self.policy {
+            DispatchPolicy::RoundRobin => counters.arrivals % n,
+            DispatchPolicy::LeastLoaded => self.least_loaded(engines, k),
+            DispatchPolicy::SloAware => {
+                if k.qos.class == ServiceClass::Latency {
+                    // The shortest wait the fleet can offer right now.
+                    self.least_loaded(engines, k)
+                } else {
+                    // Batch spreads on its own wheel so bulk work does
+                    // not chase the latency kernels onto one device.
+                    let d = counters.batch % n;
+                    counters.batch += 1;
+                    d
+                }
             }
-        }
+        };
+        counters.arrivals += 1;
+        d
     }
 
     /// Close out all engines into the fleet report. `routed[d]` is how
@@ -146,22 +212,22 @@ impl MultiGpuDispatcher {
     pub fn run(&self, stream: &Stream) -> MultiGpuReport {
         let n = self.devices.len();
         let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
-        let mut selectors: Vec<KerneletSelector> =
-            self.devices.iter().map(|_| KerneletSelector).collect();
+        let mut selectors = self.make_selectors();
         let mut routed = vec![0usize; n];
+        let mut counters = RouteCounters::default();
 
-        for (i, k) in stream.instances.iter().enumerate() {
+        for k in &stream.instances {
             // Advance every device to the arrival so routing sees live
             // engine state, not the state at the previous arrival.
             for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
-                engine.run_until(sel, k.arrival_time, true);
+                engine.run_until(sel.as_mut(), k.arrival_time, true);
             }
-            let d = self.route(&engines, i, k);
+            let d = self.route(&engines, &mut counters, k);
             routed[d] += 1;
             engines[d].submit(k.clone());
         }
         for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
-            engine.drain(sel);
+            engine.drain(sel.as_mut());
         }
         self.assemble(engines, routed, stream.len())
     }
@@ -176,11 +242,10 @@ impl MultiGpuDispatcher {
     pub fn run_source(&self, source: &mut dyn ArrivalSource) -> MultiGpuReport {
         let n = self.devices.len();
         let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
-        let mut selectors: Vec<KerneletSelector> =
-            self.devices.iter().map(|_| KerneletSelector).collect();
+        let mut selectors = self.make_selectors();
         let mut routed = vec![0usize; n];
         let mut fed = vec![0usize; n];
-        let mut arrival_no = 0usize;
+        let mut counters = RouteCounters::default();
 
         fn feed(engines: &[Engine<'_>], fed: &mut [usize], source: &mut dyn ArrivalSource) {
             for (engine, cursor) in engines.iter().zip(fed.iter_mut()) {
@@ -209,7 +274,7 @@ impl MultiGpuDispatcher {
                         let mut advanced = false;
                         for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
                             if !engine.pending().is_empty() && engine.clock_secs() < t {
-                                engine.step(sel, Some(t), true);
+                                engine.step(sel.as_mut(), Some(t), true);
                                 advanced = true;
                             }
                         }
@@ -225,8 +290,7 @@ impl MultiGpuDispatcher {
                         }
                     }
                     let k = source.next_arrival().expect("peeked arrival disappeared");
-                    let d = self.route(&engines, arrival_no, &k);
-                    arrival_no += 1;
+                    let d = self.route(&engines, &mut counters, &k);
                     routed[d] += 1;
                     engines[d].submit(k);
                 }
@@ -236,12 +300,12 @@ impl MultiGpuDispatcher {
                     }
                     let more = source.more_expected();
                     for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
-                        engine.step(sel, None, more);
+                        engine.step(sel.as_mut(), None, more);
                     }
                 }
             }
         }
-        self.assemble(engines, routed, arrival_no)
+        self.assemble(engines, routed, counters.arrivals)
     }
 }
 
@@ -333,6 +397,35 @@ mod tests {
         assert_eq!(rep.per_device.iter().map(|p| p.1).sum::<usize>(), 24);
         assert!(rep.reports.iter().all(|r| r.incomplete == 0));
         assert!(rep.reports.iter().all(|r| r.peak_queue_depth() <= 4));
+    }
+
+    #[test]
+    fn slo_aware_splits_classes_and_conserves_kernels() {
+        use crate::workload::{PoissonSource, QosMix};
+
+        let gpus = [GpuConfig::c2050(), GpuConfig::c2050()];
+        let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::SloAware);
+        let qos = QosMix::latency_share(0.5, 0.5);
+        let mut src = PoissonSource::new(Mix::MIX, 6, 100.0, 77).with_qos(qos);
+        let rep = d.run_source(&mut src);
+        let total: usize = rep.per_device.iter().map(|p| p.1).sum();
+        assert_eq!(total, 24);
+        assert!(rep.reports.iter().all(|r| r.incomplete == 0));
+        // Batch round-robin guarantees both devices get work.
+        assert!(rep.per_device.iter().all(|p| p.1 > 0), "{:?}", rep.per_device);
+        // Fleet-wide QoS aggregation covers every kernel once.
+        let fleet = rep.fleet_qos();
+        assert_eq!(fleet.latency.completed + fleet.batch.completed, 24);
+        assert_eq!(fleet.latency.completed, 12);
+        assert_eq!(fleet.latency.with_deadline, 12);
+        // Exact merge: fleet percentiles come from the pooled samples.
+        let mut pooled: Vec<f64> = rep
+            .reports
+            .iter()
+            .flat_map(|r| r.qos.latency.turnarounds.iter().copied())
+            .collect();
+        pooled.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(fleet.latency.turnarounds, pooled);
     }
 
     #[test]

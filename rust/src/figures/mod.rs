@@ -21,9 +21,11 @@
 //! | `fig13`   | BASE vs Kernelet vs OPT across workloads |
 //! | `fig14`   | CDF of MC(1000) schedule times |
 //!
-//! Repo-native telemetry ids: `qdepth` (pending-queue timeline) and
-//! `saturation` (offered-load sweep over the streaming scenarios).
+//! Repo-native telemetry ids: `qdepth` (pending-queue timeline),
+//! `saturation` (offered-load sweep over the streaming scenarios) and
+//! `qos` (per-class turnaround percentiles + deadline misses).
 
+pub mod qos;
 pub mod report;
 pub mod scheduling;
 pub mod slicing;
@@ -36,10 +38,10 @@ pub use report::Report;
 use anyhow::{bail, Result};
 
 /// All figure/table ids, in paper order, plus repo-native telemetry
-/// reports (`qdepth`, `saturation`).
-pub const ALL_IDS: [&str; 15] = [
+/// reports (`qdepth`, `saturation`, `qos`).
+pub const ALL_IDS: [&str; 16] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table6", "fig14", "qdepth", "saturation",
+    "fig13", "table6", "fig14", "qdepth", "saturation", "qos",
 ];
 
 /// Options shared by the generators.
@@ -85,6 +87,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "fig14" => scheduling::fig14(opts),
         "qdepth" => scheduling::qdepth(opts),
         "saturation" => throughput::saturation(opts),
+        "qos" => qos::qos(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

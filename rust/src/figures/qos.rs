@@ -1,0 +1,208 @@
+//! QoS sweep (repo-native): per-class turnaround percentiles and
+//! deadline misses as scenario × load × policy × QoS mix crosses the
+//! engine — the tail-latency story `saturation`'s means hide.
+//!
+//! Latency-class arrivals carry deadlines at `deadline_scale ×` the
+//! mix's mean whole-kernel service time (so a scale of 2.0 means "done
+//! within twice a typical kernel's solo run"). The sweep compares the
+//! class-blind Kernelet policy against the EDF-gated
+//! [`DeadlineSelector`](crate::coordinator::DeadlineSelector): under
+//! bursty overload the deadline policy must deliver a lower
+//! latency-class p99 and fewer misses — the acceptance criterion the
+//! `qos` bench records into `BENCH_qos.json`.
+
+use super::report::{f, Report};
+use super::throughput::{base_capacity_kps, selector_for};
+use crate::config::GpuConfig;
+use crate::coordinator::{ClassStats, Coordinator, Engine};
+use crate::stats::split_seed;
+use crate::workload::{scenario_source, Mix, QosMix};
+
+/// Policies the QoS sweep compares.
+pub const QOS_POLICIES: [&str; 2] = ["kernelet", "deadline"];
+
+/// Scenarios the QoS sweep crosses (bursty is the headline: tails are
+/// where class-blind scheduling hurts).
+pub const QOS_SCENARIOS: [&str; 2] = ["poisson", "bursty"];
+
+/// Offered-load factors for the QoS sweep.
+pub const QOS_LOADS: [f64; 3] = [0.5, 1.0, 2.0];
+
+/// Default latency-class share of arrivals.
+pub const DEFAULT_LATENCY_FRACTION: f64 = 0.3;
+
+/// Default deadline scale (× mean whole-kernel service time).
+pub const DEFAULT_DEADLINE_SCALE: f64 = 4.0;
+
+/// One (scenario, load, policy) measurement under a QoS mix.
+#[derive(Debug, Clone)]
+pub struct QosPoint {
+    pub scenario: &'static str,
+    pub policy: &'static str,
+    pub load: f64,
+    pub offered_kps: f64,
+    pub kernels: usize,
+    pub throughput_kps: f64,
+    /// Latency-class outcome (percentiles, misses).
+    pub latency: ClassStats,
+    /// Batch-class outcome.
+    pub batch: ClassStats,
+}
+
+/// Run the scenario × load × policy cross on one C2050 under a
+/// `latency_fraction` / `deadline_scale` QoS mix. Both policies of a
+/// point see the identical annotated arrival sequence (same derived
+/// seed; stamping is RNG-free). Returns the points plus the BASE
+/// capacity the loads and deadlines were scaled by.
+pub fn qos_sweep(
+    opts: &super::FigOptions,
+    loads: &[f64],
+    scenarios: &[&'static str],
+    latency_fraction: f64,
+    deadline_scale: f64,
+) -> (Vec<QosPoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let qos = QosMix::latency_share(latency_fraction, deadline_scale / capacity);
+    let per_app = opts.instances_per_app;
+    let mut out = Vec::new();
+    for (si, &scenario) in scenarios.iter().enumerate() {
+        for (li, &load) in loads.iter().enumerate() {
+            let offered = load * capacity;
+            let seed = split_seed(opts.seed ^ 0x0905, (si * 1000 + li) as u64);
+            for &policy in &QOS_POLICIES {
+                let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+                    .expect("qos sweep scenario names are valid");
+                let mut sel = selector_for(policy);
+                let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
+                assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
+                out.push(QosPoint {
+                    scenario,
+                    policy,
+                    load,
+                    offered_kps: offered,
+                    kernels: rep.kernels_completed,
+                    throughput_kps: rep.throughput_kps,
+                    latency: rep.qos.latency,
+                    batch: rep.qos.batch,
+                });
+            }
+        }
+    }
+    (out, capacity)
+}
+
+/// The `qos` figure: the default QoS sweep, one row per (point, class).
+pub fn qos(opts: &super::FigOptions) -> Report {
+    // Full engine runs per point; cap like `saturation` does so
+    // `figure all` stays tractable.
+    let opts =
+        super::FigOptions { instances_per_app: opts.instances_per_app.min(100), ..opts.clone() };
+    let (points, capacity) = qos_sweep(
+        &opts,
+        &QOS_LOADS,
+        &QOS_SCENARIOS,
+        DEFAULT_LATENCY_FRACTION,
+        DEFAULT_DEADLINE_SCALE,
+    );
+    let mut r = Report::new(
+        "qos",
+        "QoS sweep: per-class turnaround percentiles and deadline misses (scenario x load x policy)",
+        &[
+            "scenario", "load", "policy", "class", "done", "p50_s", "p95_s", "p99_s", "miss",
+            "deadlined",
+        ],
+    );
+    for p in &points {
+        for (class, c) in [("latency", &p.latency), ("batch", &p.batch)] {
+            r.row(vec![
+                p.scenario.to_string(),
+                f(p.load, 2),
+                p.policy.to_string(),
+                class.to_string(),
+                c.completed.to_string(),
+                f(c.p50_turnaround_secs, 4),
+                f(c.p95_turnaround_secs, 4),
+                f(c.p99_turnaround_secs, 4),
+                c.deadline_misses.to_string(),
+                c.with_deadline.to_string(),
+            ]);
+        }
+    }
+    r.note(format!(
+        "mix {}% latency-class; deadlines = arrival + {:.1}x mean whole-kernel service time \
+         ({:.1} kernels/s BASE capacity on C2050/MIX); instances/app = {}",
+        (DEFAULT_LATENCY_FRACTION * 100.0) as u32,
+        DEFAULT_DEADLINE_SCALE,
+        capacity,
+        opts.instances_per_app
+    ));
+    r.note("deadline = EDF-gated Kernelet: urgent kernels jump the co-schedule pairing");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigOptions;
+
+    fn small() -> FigOptions {
+        FigOptions { instances_per_app: 8, mc_samples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_covers_the_cross_and_partitions_classes() {
+        let (points, capacity) = qos_sweep(&small(), &[0.5, 2.0], &["poisson"], 0.5, 4.0);
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), 2 * QOS_POLICIES.len());
+        for p in &points {
+            assert_eq!(p.latency.completed + p.batch.completed, p.kernels, "{p:?}");
+            assert_eq!(p.latency.completed, p.kernels / 2, "{p:?}");
+            assert_eq!(p.latency.with_deadline, p.latency.completed, "{p:?}");
+            assert_eq!(p.batch.with_deadline, 0, "{p:?}");
+            assert!(p.latency.p50_turnaround_secs <= p.latency.p99_turnaround_secs, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn deadline_policy_wins_the_latency_class_under_bursty_overload() {
+        // The tentpole acceptance: with a latency/batch mix under
+        // bursty overload, EDF gating must beat class-blind Kernelet on
+        // the latency class — lower p99 and no more misses, strictly
+        // better on at least one of the two.
+        let opts = FigOptions { instances_per_app: 40, mc_samples: 1, ..Default::default() };
+        let (points, _) = qos_sweep(&opts, &[2.0], &["bursty"], 0.3, 2.0);
+        let get = |policy: &str| points.iter().find(|p| p.policy == policy).unwrap();
+        let k = get("kernelet");
+        let d = get("deadline");
+        assert!(
+            d.latency.p99_turnaround_secs <= k.latency.p99_turnaround_secs,
+            "deadline p99 {} > kernelet p99 {}",
+            d.latency.p99_turnaround_secs,
+            k.latency.p99_turnaround_secs
+        );
+        assert!(
+            d.latency.deadline_misses <= k.latency.deadline_misses,
+            "deadline misses {} > kernelet misses {}",
+            d.latency.deadline_misses,
+            k.latency.deadline_misses
+        );
+        assert!(
+            d.latency.p99_turnaround_secs < k.latency.p99_turnaround_secs
+                || d.latency.deadline_misses < k.latency.deadline_misses,
+            "EDF gating bought nothing: {d:?} vs {k:?}"
+        );
+    }
+
+    #[test]
+    fn qos_report_shape() {
+        let r = qos(&small());
+        assert_eq!(r.rows.len(), QOS_SCENARIOS.len() * QOS_LOADS.len() * QOS_POLICIES.len() * 2);
+        let class = r.col("class");
+        assert!(r.rows.iter().any(|row| row[class] == "latency"));
+        assert!(r.rows.iter().any(|row| row[class] == "batch"));
+        assert_eq!(r.notes.len(), 2);
+    }
+}

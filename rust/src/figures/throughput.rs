@@ -13,10 +13,13 @@
 
 use super::report::{f, Report};
 use crate::config::GpuConfig;
-use crate::coordinator::{Coordinator, Engine, FifoSelector, KerneletSelector, Selector};
+use crate::coordinator::{
+    ClassStats, Coordinator, DeadlineSelector, DispatchPolicy, Engine, FifoSelector,
+    KerneletSelector, MultiGpuDispatcher, Selector,
+};
 use crate::kernel::KernelSpec;
 use crate::stats::split_seed;
-use crate::workload::{scenario_source, Mix};
+use crate::workload::{scenario_source, Mix, QosMix};
 
 /// Scenarios the default sweep crosses (all streaming; "saturated" is
 /// fig13's territory).
@@ -28,14 +31,32 @@ pub const SWEEP_POLICIES: [&str; 2] = ["kernelet", "base"];
 /// Offered-load factors relative to BASE solo capacity.
 pub const DEFAULT_LOADS: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
 
+/// Routing policies the fleet sweep compares.
+pub const FLEET_POLICIES: [&str; 3] = ["roundrobin", "leastloaded", "sloaware"];
+
+/// Fleet sizes (homogeneous C2050s) the fleet sweep scales across.
+pub const DEFAULT_FLEETS: [usize; 3] = [1, 2, 4];
+
 /// Build the selector for a sweep policy name — the one mapping every
-/// sweep/CLI/test site shares, so adding a policy to [`SWEEP_POLICIES`]
-/// is wired in exactly one place.
+/// sweep/CLI/test site shares, so adding a policy is wired in exactly
+/// one place. Valid: `kernelet`, `base`, `deadline`.
 pub fn selector_for(policy: &str) -> Box<dyn Selector> {
     match policy {
         "kernelet" => Box::new(KerneletSelector),
         "base" => Box::new(FifoSelector),
-        other => panic!("unknown policy {other} (valid: {SWEEP_POLICIES:?})"),
+        "deadline" => Box::new(DeadlineSelector::new()),
+        other => panic!("unknown policy {other} (valid: kernelet base deadline)"),
+    }
+}
+
+/// Routing-policy name → [`DispatchPolicy`] (the fleet-sweep analogue
+/// of [`selector_for`]).
+pub fn dispatch_policy_for(policy: &str) -> DispatchPolicy {
+    match policy {
+        "roundrobin" => DispatchPolicy::RoundRobin,
+        "leastloaded" => DispatchPolicy::LeastLoaded,
+        "sloaware" => DispatchPolicy::SloAware,
+        other => panic!("unknown routing policy {other} (valid: {FLEET_POLICIES:?})"),
     }
 }
 
@@ -89,8 +110,9 @@ pub fn load_sweep(
             let offered = load * capacity;
             let seed = split_seed(opts.seed, (si * 1000 + li) as u64);
             for &policy in &SWEEP_POLICIES {
-                let mut source = scenario_source(scenario, mix, per_app, offered, seed)
-                    .expect("sweep scenario names are valid");
+                let mut source =
+                    scenario_source(scenario, mix, per_app, offered, seed, QosMix::ALL_BATCH)
+                        .expect("sweep scenario names are valid");
                 let mut sel = selector_for(policy);
                 let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
                 assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
@@ -106,6 +128,81 @@ pub fn load_sweep(
                     mean_queue_depth: rep.mean_queue_depth(),
                     peak_queue_depth: rep.peak_queue_depth(),
                 });
+            }
+        }
+    }
+    (out, capacity)
+}
+
+/// One (scenario, load, routing policy, fleet size) measurement from
+/// [`fleet_sweep`].
+#[derive(Debug, Clone)]
+pub struct FleetPoint {
+    pub scenario: &'static str,
+    pub policy: &'static str,
+    /// Homogeneous C2050 count.
+    pub gpus: usize,
+    /// Offered load relative to the *fleet's* BASE capacity (per-device
+    /// capacity × gpus).
+    pub load: f64,
+    pub offered_kps: f64,
+    pub kernels: usize,
+    pub throughput_kps: f64,
+    pub makespan_secs: f64,
+    /// Fleet-wide latency-class outcome (pooled across devices).
+    pub latency: ClassStats,
+    /// Fleet-wide batch-class outcome.
+    pub batch: ClassStats,
+}
+
+/// Cross scenario × load × routing policy × fleet size through
+/// [`MultiGpuDispatcher::run_source`] on homogeneous C2050 fleets —
+/// the saturation story for fleet scaling and routing, where
+/// [`load_sweep`] tells it for one device. Arrivals carry a 30%
+/// latency share with deadlines at 4× the mean whole-kernel service
+/// time, so `sloaware` has classes to split on; `roundrobin` and
+/// `leastloaded` see the identical annotated workload.
+pub fn fleet_sweep(
+    opts: &super::FigOptions,
+    loads: &[f64],
+    scenarios: &[&'static str],
+    fleets: &[usize],
+) -> (Vec<FleetPoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let qos = QosMix::latency_share(0.3, 4.0 / capacity);
+    let per_app = opts.instances_per_app;
+    let mut out = Vec::new();
+    for (si, &scenario) in scenarios.iter().enumerate() {
+        for (li, &load) in loads.iter().enumerate() {
+            for &gpus in fleets {
+                let offered = load * capacity * gpus as f64;
+                let seed = split_seed(opts.seed, (si * 10_000 + li * 100 + gpus) as u64);
+                for &policy in &FLEET_POLICIES {
+                    let dispatcher = MultiGpuDispatcher::new(
+                        &vec![GpuConfig::c2050(); gpus],
+                        dispatch_policy_for(policy),
+                    );
+                    let mut source =
+                        scenario_source(scenario, mix, per_app, offered, seed, qos)
+                            .expect("fleet sweep scenario names are valid");
+                    let rep = dispatcher.run_source(source.as_mut());
+                    let fleet = rep.fleet_qos();
+                    out.push(FleetPoint {
+                        scenario,
+                        policy,
+                        gpus,
+                        load,
+                        offered_kps: offered,
+                        kernels: rep.per_device.iter().map(|p| p.1).sum(),
+                        throughput_kps: rep.throughput_kps,
+                        makespan_secs: rep.makespan_secs,
+                        latency: fleet.latency,
+                        batch: fleet.batch,
+                    });
+                }
             }
         }
     }
@@ -138,13 +235,22 @@ pub fn saturation(opts: &super::FigOptions) -> Report {
         ],
     );
     for p in &points {
+        // A point that completed nothing has no turnaround to report:
+        // emit an explicit marker instead of a misleading 0.0 (the
+        // engine's mean divides by max(completed, 1)). `column_f64`
+        // skips the marker, so numeric consumers see only real samples.
+        let turnaround = if p.kernels == 0 {
+            "n/a(0done)".to_string()
+        } else {
+            f(p.mean_turnaround_s, 4)
+        };
         r.row(vec![
             p.scenario.to_string(),
             f(p.load, 2),
             p.policy.to_string(),
             f(p.offered_kps, 1),
             f(p.throughput_kps, 1),
-            f(p.mean_turnaround_s, 4),
+            turnaround,
             f(p.utilization, 3),
             f(p.mean_queue_depth, 1),
             p.peak_queue_depth.to_string(),
@@ -223,6 +329,54 @@ mod tests {
                 "{scenario}: kernelet {} vs base {}",
                 get("kernelet"),
                 get("base")
+            );
+        }
+    }
+
+    #[test]
+    fn zero_completion_points_render_with_marker() {
+        // REGRESSION: a load point that completes zero kernels used to
+        // reach the report as turnaround 0.0 (the engine divides by
+        // max(completed, 1)), tripping every >0 assertion downstream.
+        // The figure now emits an explicit marker and must not panic.
+        let opts = FigOptions { instances_per_app: 0, mc_samples: 1, ..Default::default() };
+        let (points, _) = load_sweep(&opts, &[1.0], &["poisson", "bursty"]);
+        assert!(points.iter().all(|p| p.kernels == 0));
+        let r = saturation(&opts);
+        let t = r.col("turnaround_s");
+        assert!(r.rows.iter().all(|row| row[t] == "n/a(0done)"), "{:?}", r.rows[0]);
+        // Numeric consumers see no fake zeros.
+        assert!(r.column_f64("turnaround_s").is_empty());
+        let rendered = r.render();
+        assert!(rendered.contains("n/a(0done)"));
+    }
+
+    #[test]
+    fn fleet_sweep_scales_and_covers_routing_policies() {
+        let opts = FigOptions { instances_per_app: 4, mc_samples: 1, ..Default::default() };
+        let (points, capacity) = fleet_sweep(&opts, &[1.0], &["poisson"], &[1, 2]);
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), 2 * FLEET_POLICIES.len());
+        for p in &points {
+            assert_eq!(p.kernels, 16, "{p:?}");
+            assert!(p.throughput_kps > 0.0, "{p:?}");
+            assert!(p.makespan_secs > 0.0, "{p:?}");
+            // 30% latency share: ⌊0.3·16⌋ latency-class kernels, all
+            // deadlined, every kernel accounted to exactly one class.
+            assert_eq!(p.latency.completed, 4, "{p:?}");
+            assert_eq!(p.latency.with_deadline, 4, "{p:?}");
+            assert_eq!(p.latency.completed + p.batch.completed, p.kernels, "{p:?}");
+        }
+        // Two devices finish the same offered-per-device work no slower
+        // (wide margin: this is a smoke bound, not a perf assertion).
+        for policy in FLEET_POLICIES {
+            let one = points.iter().find(|p| p.gpus == 1 && p.policy == policy).unwrap();
+            let two = points.iter().find(|p| p.gpus == 2 && p.policy == policy).unwrap();
+            assert!(
+                two.throughput_kps > one.throughput_kps * 0.8,
+                "{policy}: two={} one={}",
+                two.throughput_kps,
+                one.throughput_kps
             );
         }
     }

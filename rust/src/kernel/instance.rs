@@ -3,6 +3,59 @@
 
 use super::spec::KernelSpec;
 
+/// Service class of a submitted kernel — the QoS dimension the
+/// scheduler, router and reports thread through every layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ServiceClass {
+    /// Latency-sensitive: interactive or SLO-bound submissions.
+    Latency,
+    /// Throughput batch work — the default. An all-batch, no-deadline
+    /// workload is decision-identical to the pre-QoS engine (pinned by
+    /// the differential tests in `tests/scheduling_invariants.rs`).
+    #[default]
+    Batch,
+}
+
+impl ServiceClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceClass::Latency => "latency",
+            ServiceClass::Batch => "batch",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ServiceClass> {
+        match s {
+            "latency" => Some(ServiceClass::Latency),
+            "batch" => Some(ServiceClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Quality-of-service annotation carried by a kernel instance.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Qos {
+    pub class: ServiceClass,
+    /// Absolute completion deadline in seconds on the run clock (same
+    /// epoch as `arrival_time`); `None` means best effort.
+    pub deadline: Option<f64>,
+}
+
+impl Qos {
+    /// The default annotation: batch, no deadline.
+    pub const BATCH: Qos = Qos { class: ServiceClass::Batch, deadline: None };
+
+    /// A latency-class annotation, optionally deadlined.
+    pub fn latency(deadline: Option<f64>) -> Qos {
+        Qos { class: ServiceClass::Latency, deadline }
+    }
+
+    pub fn is_latency(&self) -> bool {
+        self.class == ServiceClass::Latency
+    }
+}
+
 /// Lifecycle of a submitted kernel instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelStatus {
@@ -27,6 +80,8 @@ pub struct KernelInstance {
     pub spec: KernelSpec,
     /// Submission time in seconds (Poisson arrival process).
     pub arrival_time: f64,
+    /// Service class + optional deadline ([`Qos::BATCH`] by default).
+    pub qos: Qos,
     /// First not-yet-dispatched block id.
     next_block: u32,
 }
@@ -34,7 +89,23 @@ pub struct KernelInstance {
 impl KernelInstance {
     pub fn new(id: u64, spec: KernelSpec, arrival_time: f64) -> Self {
         spec.validate();
-        Self { id, spec, arrival_time, next_block: 0 }
+        Self { id, spec, arrival_time, qos: Qos::BATCH, next_block: 0 }
+    }
+
+    /// Annotate with a QoS class/deadline (builder; arrival sources
+    /// stamp instances through this).
+    pub fn with_qos(mut self, qos: Qos) -> Self {
+        if let Some(d) = qos.deadline {
+            assert!(d.is_finite() && d >= 0.0, "kernel {}: bad deadline {d}", self.id);
+        }
+        self.qos = qos;
+        self
+    }
+
+    /// Seconds between this kernel's deadline and `now` (negative once
+    /// the deadline has passed); `None` when best-effort.
+    pub fn time_to_deadline(&self, now_secs: f64) -> Option<f64> {
+        self.qos.deadline.map(|d| d - now_secs)
     }
 
     /// Blocks not yet dispatched.
@@ -130,5 +201,31 @@ mod tests {
         let mut k = inst();
         k.take_slice(100);
         k.take_slice(1);
+    }
+
+    #[test]
+    fn qos_defaults_to_batch_best_effort() {
+        let k = inst();
+        assert_eq!(k.qos, Qos::BATCH);
+        assert!(!k.qos.is_latency());
+        assert_eq!(k.time_to_deadline(5.0), None);
+    }
+
+    #[test]
+    fn qos_annotation_round_trips() {
+        let k = inst().with_qos(Qos::latency(Some(2.5)));
+        assert!(k.qos.is_latency());
+        assert_eq!(k.time_to_deadline(1.0), Some(1.5));
+        assert_eq!(k.time_to_deadline(4.0), Some(-1.5));
+        for class in [ServiceClass::Latency, ServiceClass::Batch] {
+            assert_eq!(ServiceClass::from_name(class.name()), Some(class));
+        }
+        assert_eq!(ServiceClass::from_name("bulk"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_finite_deadline_rejected() {
+        let _ = inst().with_qos(Qos::latency(Some(f64::NAN)));
     }
 }

@@ -58,4 +58,4 @@ pub mod stats;
 pub mod workload;
 
 pub use config::{Arch, GpuConfig};
-pub use kernel::{benchmark_suite, BenchmarkApp, KernelInstance, KernelSpec};
+pub use kernel::{benchmark_suite, BenchmarkApp, KernelInstance, KernelSpec, Qos, ServiceClass};

@@ -8,6 +8,9 @@
 //! kernelet profile <bench|all> [--gpu c2050|gtx680]
 //! kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu ...] [--instances N]
 //!                   [--scenario NAME] [--load X] [--trace FILE]
+//!                   [--qos-mix F] [--deadline-scale S]
+//! kernelet trace record --scenario NAME [--out FILE]   dump a scenario
+//!                   to the JSON trace format (incl. QoS annotations)
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
 //! kernelet serve [--requests N]           E2E sliced serving demo (PJRT)
 //! ```
@@ -24,7 +27,7 @@ use kernelet::figures::{self, FigOptions};
 use kernelet::kernel::BenchmarkApp;
 use kernelet::profiler;
 use kernelet::runtime::{ArtifactRegistry, SlicedRunner};
-use kernelet::workload::{ArrivalSource, Mix, Stream};
+use kernelet::workload::{ArrivalSource, Mix, QosMix, RecordingSource, Stream};
 
 fn main() {
     if let Err(e) = run() {
@@ -40,6 +43,7 @@ fn run() -> Result<()> {
         Some("figure") => cmd_figure(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("schedule") => cmd_schedule(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("slice-ptx") => cmd_slice_ptx(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("help") | None => {
@@ -55,11 +59,15 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|all> [--out DIR] [--quick]
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|all> [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
                     [--scenario saturated|poisson|bursty|diurnal|heavytail|closed|trace]
                     [--load X] [--trace FILE] [--seed N]
+                    [--qos-mix F] [--deadline-scale S]
+  kernelet trace record --scenario NAME [--mix M] [--gpu G] [--instances N]
+                    [--load X] [--qos-mix F] [--deadline-scale S] [--seed N]
+                    [--out FILE]
   kernelet slice-ptx <file.ptx> [--dims 1|2]
   kernelet serve [--requests N]
 
@@ -69,6 +77,15 @@ BASE vs Kernelet from the same seed — open-loop scenarios see identical
 arrival sequences; closed-loop arrivals are completion-driven, so each
 policy shapes its own. Without --scenario the classic saturated-queue
 BASE/Kernelet/OPT comparison runs.
+
+`--qos-mix F` stamps fraction F of arrivals latency-class with deadlines
+at `--deadline-scale` (default 4.0) x the mix's mean whole-kernel
+service time, adds the deadline-aware policy to the comparison, and
+reports per-class p99 turnaround + deadline misses.
+
+`trace record` replays the scenario through the engine and dumps the
+realized arrival sequence (app, t, grid, class, deadline) as a JSON
+trace for `schedule --scenario trace --trace FILE` replay.
 ";
 
 fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
@@ -187,11 +204,26 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared QoS flags: `--qos-mix F` (latency fraction,
+/// default 0 = QoS off) and `--deadline-scale S` (relative deadline as
+/// a multiple of the mix's mean whole-kernel service time, default 4).
+fn parse_qos_mix(args: &[String], capacity_kps: f64) -> Result<QosMix> {
+    let fraction: f64 = flag_value(args, "--qos-mix").unwrap_or("0").parse()?;
+    anyhow::ensure!((0.0..=1.0).contains(&fraction), "--qos-mix {fraction} out of [0,1]");
+    let scale: f64 = flag_value(args, "--deadline-scale").unwrap_or("4.0").parse()?;
+    anyhow::ensure!(scale > 0.0, "--deadline-scale {scale} must be positive");
+    Ok(if fraction > 0.0 {
+        QosMix::latency_share(fraction, scale / capacity_kps)
+    } else {
+        QosMix::ALL_BATCH
+    })
+}
+
 /// `schedule --scenario NAME`: stream arrivals online and compare BASE
-/// vs Kernelet from the same seed. Open-loop scenarios give both
-/// policies the identical arrival sequence; the closed loop reacts to
-/// each policy's own completions, so only the clients (not the
-/// sequence) are shared.
+/// vs Kernelet (plus the deadline policy under `--qos-mix`) from the
+/// same seed. Open-loop scenarios give every policy the identical
+/// arrival sequence; the closed loop reacts to each policy's own
+/// completions, so only the clients (not the sequence) are shared.
 fn cmd_schedule_scenario(
     args: &[String],
     gpu: &GpuConfig,
@@ -207,14 +239,36 @@ fn cmd_schedule_scenario(
     let coord = Coordinator::new(gpu);
     let capacity = base_capacity_kps(&coord, mix);
     let offered = load * capacity;
+    let qos = parse_qos_mix(args, capacity)?;
+
+    // A replayed trace carries its own annotations: honor them (and the
+    // QoS comparison they imply) unless the user explicitly re-stamps
+    // with --qos-mix, which overrides the recorded labels.
+    let trace_instances: Option<Vec<kernelet::KernelInstance>> = if scenario == "trace" {
+        let path = flag_value(args, "--trace").context("--scenario trace needs --trace FILE")?;
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut parsed = kernelet::workload::parse_trace(&src)?;
+        if !qos.is_all_batch() {
+            for k in &mut parsed {
+                k.qos = qos.stamp(k.id, k.arrival_time);
+            }
+        }
+        Some(parsed)
+    } else {
+        None
+    };
+    let qos_on = !qos.is_all_batch()
+        || trace_instances
+            .as_ref()
+            .map_or(false, |ks| ks.iter().any(|k| k.qos != kernelet::Qos::BATCH));
 
     let make_source = |seed: u64| -> Result<Box<dyn ArrivalSource>> {
-        if scenario == "trace" {
-            let path = flag_value(args, "--trace").context("--scenario trace needs --trace FILE")?;
-            let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-            Ok(Box::new(kernelet::workload::trace_source(&src)?))
-        } else {
-            kernelet::workload::scenario_source(scenario, mix, instances, offered, seed)
+        match &trace_instances {
+            Some(ks) => Ok(Box::new(kernelet::workload::ReplaySource::from_instances(
+                "trace",
+                ks.clone(),
+            ))),
+            None => kernelet::workload::scenario_source(scenario, mix, instances, offered, seed, qos),
         }
     };
 
@@ -227,24 +281,114 @@ fn cmd_schedule_scenario(
         offered,
         capacity
     );
-    println!(
-        "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7}",
-        "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds"
-    );
-    for policy in ["base", "kernelet"] {
+    if !qos.is_all_batch() {
+        println!(
+            "QoS mix: {:.0}% latency-class, deadlines = arrival + {:.4}s",
+            qos.latency_fraction * 100.0,
+            qos.latency_deadline_secs.unwrap_or(0.0)
+        );
+    } else if let Some(ks) = &trace_instances {
+        if qos_on {
+            println!(
+                "QoS from trace annotations: {} latency-class, {} deadlined of {} arrivals",
+                ks.iter().filter(|k| k.qos.is_latency()).count(),
+                ks.iter().filter(|k| k.qos.deadline.is_some()).count(),
+                ks.len()
+            );
+        }
+    }
+    let policies: &[&str] =
+        if qos_on { &["base", "kernelet", "deadline"] } else { &["base", "kernelet"] };
+    if qos_on {
+        println!(
+            "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7} {:>12} {:>6}",
+            "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds",
+            "p99_lat_s", "miss"
+        );
+    } else {
+        println!(
+            "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7}",
+            "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds"
+        );
+    }
+    for &policy in policies {
         let mut source = make_source(seed)?;
         let mut sel = selector_for(policy);
         let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
-        println!(
-            "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7}",
-            policy,
-            rep.total_secs,
-            rep.throughput_kps,
-            rep.mean_turnaround_secs,
-            rep.utilization,
-            rep.mean_queue_depth(),
-            rep.coschedule_rounds
-        );
+        if qos_on {
+            println!(
+                "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7} {:>12.5} {:>6}",
+                policy,
+                rep.total_secs,
+                rep.throughput_kps,
+                rep.mean_turnaround_secs,
+                rep.utilization,
+                rep.mean_queue_depth(),
+                rep.coschedule_rounds,
+                rep.qos.latency.p99_turnaround_secs,
+                rep.qos.total_deadline_misses()
+            );
+        } else {
+            println!(
+                "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7}",
+                policy,
+                rep.total_secs,
+                rep.throughput_kps,
+                rep.mean_turnaround_secs,
+                rep.utilization,
+                rep.mean_queue_depth(),
+                rep.coschedule_rounds
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `trace record`: replay a scenario through the engine (Kernelet
+/// policy) and dump the realized arrival sequence — times, grids and
+/// QoS annotations — as a JSON trace for later `--scenario trace`
+/// replay. Open-loop scenarios record their policy-independent
+/// sequence; closed-loop arrivals are completion-driven, so the trace
+/// pins the sequence this run realized.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("record") => {}
+        _ => bail!("usage: kernelet trace record --scenario NAME [--out FILE] (see help)"),
+    }
+    let args = &args[1..];
+    let gpu = parse_gpu(args)?;
+    let mix = Mix::from_name(flag_value(args, "--mix").unwrap_or("MIX")).context("bad --mix")?;
+    let instances: u32 = flag_value(args, "--instances").unwrap_or("50").parse()?;
+    let load: f64 = flag_value(args, "--load").unwrap_or("1.0").parse()?;
+    let seed: u64 = match flag_value(args, "--seed") {
+        Some(s) => s.parse()?,
+        None => kernelet::sim::DEFAULT_SEED,
+    };
+    let scenario = flag_value(args, "--scenario").context("trace record needs --scenario")?;
+    let coord = Coordinator::new(&gpu);
+    let capacity = base_capacity_kps(&coord, mix);
+    let qos = parse_qos_mix(args, capacity)?;
+    let mut source =
+        kernelet::workload::scenario_source(scenario, mix, instances, load * capacity, seed, qos)?;
+    let mut recorder = RecordingSource::new(source.as_mut());
+    let rep = Engine::new(&coord)
+        .run_source(&mut kernelet::coordinator::KerneletSelector, &mut recorder);
+    let log = recorder.into_log();
+    let json = kernelet::workload::write_trace(&log)?;
+    match flag_value(args, "--out") {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+            eprintln!(
+                "recorded {} arrivals from scenario {scenario} (mix {}, load {:.2}) to {path}; \
+                 replay completed {} kernels in {:.3}s",
+                log.len(),
+                mix.name(),
+                load,
+                rep.kernels_completed,
+                rep.total_secs
+            );
+        }
+        None => print!("{json}"),
     }
     Ok(())
 }

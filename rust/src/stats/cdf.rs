@@ -1,4 +1,24 @@
-//! Empirical cumulative distribution functions (Fig. 14 of the paper).
+//! Empirical cumulative distribution functions (Fig. 14 of the paper)
+//! and the nearest-rank percentile helper the QoS reports use.
+
+/// Nearest-rank percentile of an **ascending-sorted** sample: the
+/// smallest element `x` such that at least `⌈q·n⌉` samples are `≤ x`
+/// (the same convention as [`Cdf::quantile`], without building a
+/// [`Cdf`]). `None` on an empty sample; a single-element sample answers
+/// that element for every `q`.
+pub fn percentile(sorted: &[f64], q: f64) -> Option<f64> {
+    assert!((0.0..=1.0).contains(&q), "percentile {q} out of [0,1]");
+    if sorted.is_empty() {
+        return None;
+    }
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile input must be sorted ascending"
+    );
+    let n = sorted.len();
+    let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+    Some(sorted[idx])
+}
 
 /// An empirical CDF over a sample of f64 observations.
 #[derive(Debug, Clone)]
@@ -22,12 +42,10 @@ impl Cdf {
         count as f64 / self.sorted.len() as f64
     }
 
-    /// The q-quantile (q in [0,1]) using nearest-rank.
+    /// The q-quantile (q in [0,1]) using nearest-rank (one formula for
+    /// the whole crate: this delegates to [`percentile`]).
     pub fn quantile(&self, q: f64) -> f64 {
-        assert!((0.0..=1.0).contains(&q));
-        let n = self.sorted.len();
-        let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
-        self.sorted[idx]
+        percentile(&self.sorted, q).expect("Cdf is never empty")
     }
 
     pub fn min(&self) -> f64 {
@@ -96,5 +114,44 @@ mod tests {
     #[should_panic]
     fn rejects_empty() {
         let _ = Cdf::new(vec![]);
+    }
+
+    #[test]
+    fn percentile_empty_is_none() {
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(percentile(&[], 0.0), None);
+    }
+
+    #[test]
+    fn percentile_single_sample_answers_every_q() {
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&[4.2], q), Some(4.2), "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_tied_samples() {
+        let xs = [1.0, 2.0, 2.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.5), Some(2.0));
+        assert_eq!(percentile(&xs, 0.2), Some(1.0));
+        assert_eq!(percentile(&xs, 0.21), Some(2.0));
+        assert_eq!(percentile(&xs, 1.0), Some(3.0));
+        // All-tied: every percentile is the tie.
+        assert_eq!(percentile(&[7.0; 9], 0.99), Some(7.0));
+    }
+
+    #[test]
+    fn percentile_matches_cdf_quantile() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let c = Cdf::new(xs.clone());
+        for q in [0.01, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&xs, q), Some(c.quantile(q)), "q={q}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_q() {
+        let _ = percentile(&[1.0], 1.5);
     }
 }

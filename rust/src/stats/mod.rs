@@ -10,7 +10,7 @@ pub mod regression;
 pub mod rng;
 pub mod summary;
 
-pub use cdf::Cdf;
+pub use cdf::{percentile, Cdf};
 pub use regression::{linear_fit, pearson};
 pub use rng::{split_seed, Xoshiro256};
 pub use summary::Summary;

@@ -23,13 +23,21 @@
 //! All sources draw from the crate's deterministic
 //! [`Xoshiro256`](crate::stats::Xoshiro256), so every scenario is
 //! reproducible from its seed.
+//!
+//! Every source accepts a [`QosMix`] (`with_qos` builder) and stamps
+//! class/deadline annotations on its arrivals **at emission time,
+//! without consuming RNG** — so a [`QosMix::ALL_BATCH`] source is
+//! bit-identical to an un-annotated one, and any other mix changes only
+//! the [`Qos`] labels, never the arrival sequence. The JSON trace
+//! format round-trips the annotations ([`parse_trace`] /
+//! [`write_trace`]).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use super::{Mix, Stream};
-use crate::kernel::{BenchmarkApp, KernelInstance, KernelSpec};
+use super::{Mix, QosMix, Stream};
+use crate::kernel::{BenchmarkApp, KernelInstance, KernelSpec, Qos, ServiceClass};
 use crate::stats::Xoshiro256;
 
 /// An online arrival process. The engine *pulls*: it peeks the next
@@ -91,6 +99,18 @@ impl ReplaySource {
         }
         Self { name, instances, cursor: 0 }
     }
+
+    /// Re-stamp the replayed instances with a QoS mix (by instance id).
+    /// [`QosMix::ALL_BATCH`] is a no-op so annotations already carried
+    /// by a parsed trace are preserved.
+    pub fn with_qos(mut self, qos: QosMix) -> Self {
+        if !qos.is_all_batch() {
+            for k in &mut self.instances {
+                k.qos = qos.stamp(k.id, k.arrival_time);
+            }
+        }
+        self
+    }
 }
 
 impl ArrivalSource for ReplaySource {
@@ -129,6 +149,7 @@ pub struct PoissonSource {
     times: Vec<Vec<f64>>,
     cursors: Vec<usize>,
     per_app: u32,
+    qos: QosMix,
 }
 
 impl PoissonSource {
@@ -147,7 +168,14 @@ impl PoissonSource {
                     .collect()
             })
             .collect();
-        Self { cursors: vec![0; specs.len()], specs, times, per_app }
+        Self { cursors: vec![0; specs.len()], specs, times, per_app, qos: QosMix::ALL_BATCH }
+    }
+
+    /// Stamp arrivals with a QoS mix (emission-time, RNG-free — the
+    /// arrival sequence stays bit-identical to the frozen `Vec` path).
+    pub fn with_qos(mut self, qos: QosMix) -> Self {
+        self.qos = qos;
+        self
     }
 
     /// Index of the app whose head arrival is earliest. Strict `<`
@@ -181,7 +209,8 @@ impl ArrivalSource for PoissonSource {
         self.cursors[a] += 1;
         // Same id scheme as the frozen path: app-major, then arrival.
         let id = a as u64 * self.per_app as u64 + k as u64;
-        Some(KernelInstance::new(id, self.specs[a].clone(), self.times[a][k]))
+        let t = self.times[a][k];
+        Some(KernelInstance::new(id, self.specs[a].clone(), t).with_qos(self.qos.stamp(id, t)))
     }
 }
 
@@ -206,6 +235,7 @@ pub struct BurstySource {
     sojourn_left: f64,
     t: f64,
     pending: Option<KernelInstance>,
+    qos: QosMix,
 }
 
 impl BurstySource {
@@ -225,9 +255,16 @@ impl BurstySource {
             sojourn_left,
             t: 0.0,
             pending: None,
+            qos: QosMix::ALL_BATCH,
         };
         src.pending = src.generate();
         src
+    }
+
+    /// Stamp arrivals with a QoS mix (emission-time, RNG-free).
+    pub fn with_qos(mut self, qos: QosMix) -> Self {
+        self.qos = qos;
+        self
     }
 
     fn generate(&mut self) -> Option<KernelInstance> {
@@ -267,7 +304,10 @@ impl ArrivalSource for BurstySource {
         if out.is_some() {
             self.pending = self.generate();
         }
-        out
+        out.map(|k| {
+            let q = self.qos.stamp(k.id, k.arrival_time);
+            k.with_qos(q)
+        })
     }
 }
 
@@ -288,6 +328,7 @@ pub struct DiurnalSource {
     lambda_max: f64,
     t: f64,
     pending: Option<KernelInstance>,
+    qos: QosMix,
 }
 
 impl DiurnalSource {
@@ -305,9 +346,16 @@ impl DiurnalSource {
             lambda_max: base * (1.0 + amp),
             t: 0.0,
             pending: None,
+            qos: QosMix::ALL_BATCH,
         };
         src.pending = src.generate();
         src
+    }
+
+    /// Stamp arrivals with a QoS mix (emission-time, RNG-free).
+    pub fn with_qos(mut self, qos: QosMix) -> Self {
+        self.qos = qos;
+        self
     }
 
     fn rate_at(&self, t: f64) -> f64 {
@@ -344,7 +392,10 @@ impl ArrivalSource for DiurnalSource {
         if out.is_some() {
             self.pending = self.generate();
         }
-        out
+        out.map(|k| {
+            let q = self.qos.stamp(k.id, k.arrival_time);
+            k.with_qos(q)
+        })
     }
 }
 
@@ -383,6 +434,7 @@ pub struct HeavyTailSource {
     emitted: u64,
     t: f64,
     pending: Option<KernelInstance>,
+    qos: QosMix,
 }
 
 impl HeavyTailSource {
@@ -409,9 +461,16 @@ impl HeavyTailSource {
             emitted: 0,
             t: 0.0,
             pending: None,
+            qos: QosMix::ALL_BATCH,
         };
         src.pending = src.generate();
         src
+    }
+
+    /// Stamp arrivals with a QoS mix (emission-time, RNG-free).
+    pub fn with_qos(mut self, qos: QosMix) -> Self {
+        self.qos = qos;
+        self
     }
 
     fn generate(&mut self) -> Option<KernelInstance> {
@@ -444,7 +503,10 @@ impl ArrivalSource for HeavyTailSource {
         if out.is_some() {
             self.pending = self.generate();
         }
-        out
+        out.map(|k| {
+            let q = self.qos.stamp(k.id, k.arrival_time);
+            k.with_qos(q)
+        })
     }
 }
 
@@ -466,6 +528,7 @@ pub struct ClosedLoopSource {
     thinking: Vec<(f64, usize)>,
     /// instance id → owning client, for jobs in flight.
     owner: HashMap<u64, usize>,
+    qos: QosMix,
 }
 
 impl ClosedLoopSource {
@@ -481,7 +544,14 @@ impl ClosedLoopSource {
             issued: 0,
             thinking,
             owner: HashMap::new(),
+            qos: QosMix::ALL_BATCH,
         }
+    }
+
+    /// Stamp arrivals with a QoS mix (emission-time, RNG-free).
+    pub fn with_qos(mut self, qos: QosMix) -> Self {
+        self.qos = qos;
+        self
     }
 
     fn head(&self) -> Option<usize> {
@@ -517,7 +587,7 @@ impl ArrivalSource for ClosedLoopSource {
         self.issued += 1;
         self.owner.insert(id, client);
         let spec = self.rng.choose(&self.specs).clone();
-        Some(KernelInstance::new(id, spec, t))
+        Some(KernelInstance::new(id, spec, t).with_qos(self.qos.stamp(id, t)))
     }
 
     fn on_completion(&mut self, id: u64, t_secs: f64) {
@@ -542,14 +612,17 @@ impl ArrivalSource for ClosedLoopSource {
 /// ```json
 /// [
 ///   {"app": "MM", "t": 0.0},
-///   {"app": "PC", "t": 0.5, "grid": 512}
+///   {"app": "PC", "t": 0.5, "grid": 512, "class": "latency", "deadline": 1.5}
 /// ]
 /// ```
 ///
 /// `app` is a Table 3 benchmark name, `t` the arrival time in seconds,
-/// `grid` an optional grid-size override. Ids follow file order;
-/// instances are then sorted (stably) by arrival time. The parser is
-/// deliberately minimal — serde is unavailable offline.
+/// `grid` an optional grid-size override, `class` an optional service
+/// class (`"latency"` / `"batch"`, default batch) and `deadline` an
+/// optional absolute completion deadline in seconds (same clock as
+/// `t`). Ids follow file order; instances are then sorted (stably) by
+/// arrival time. The parser is deliberately minimal — serde is
+/// unavailable offline.
 pub fn parse_trace(src: &str) -> Result<Vec<KernelInstance>> {
     let mut p = JsonCursor { b: src.as_bytes(), i: 0 };
     p.ws();
@@ -564,11 +637,15 @@ pub fn parse_trace(src: &str) -> Result<Vec<KernelInstance>> {
             let mut app: Option<String> = None;
             let mut t: Option<f64> = None;
             let mut grid: Option<f64> = None;
+            let mut class: Option<String> = None;
+            let mut deadline: Option<f64> = None;
             for (k, v) in obj {
                 match (k.as_str(), v) {
                     ("app", JsonVal::Str(s)) => app = Some(s),
                     ("t", JsonVal::Num(x)) => t = Some(x),
                     ("grid", JsonVal::Num(x)) => grid = Some(x),
+                    ("class", JsonVal::Str(s)) => class = Some(s),
+                    ("deadline", JsonVal::Num(x)) => deadline = Some(x),
                     (other, _) => bail!("unknown or mistyped trace field {other:?}"),
                 }
             }
@@ -586,7 +663,20 @@ pub fn parse_trace(src: &str) -> Result<Vec<KernelInstance>> {
                 }
                 spec = spec.with_grid(g as u32);
             }
-            instances.push(KernelInstance::new(instances.len() as u64, spec, t));
+            let class = match class.as_deref() {
+                None => ServiceClass::Batch,
+                Some(s) => ServiceClass::from_name(s)
+                    .with_context(|| format!("unknown service class {s:?}"))?,
+            };
+            if let Some(d) = deadline {
+                if !d.is_finite() || d < t {
+                    bail!("trace deadline {d} precedes arrival {t} (or is not finite)");
+                }
+            }
+            let qos = Qos { class, deadline };
+            instances.push(
+                KernelInstance::new(instances.len() as u64, spec, t).with_qos(qos),
+            );
             p.ws();
             match p.next_byte()? {
                 b',' => p.ws(),
@@ -601,6 +691,104 @@ pub fn parse_trace(src: &str) -> Result<Vec<KernelInstance>> {
     }
     instances.sort_by(|a, b| a.arrival_time.total_cmp(&b.arrival_time));
     Ok(instances)
+}
+
+/// Serialize instances to the JSON trace format [`parse_trace`] reads —
+/// the `kernelet trace record` artifact.
+///
+/// Specs must be benchmark applications, possibly grid-scaled: a
+/// heavy-tail variant like `"MMx8"` is written as its base app with the
+/// (already scaled) grid as an override, which is exactly how the trace
+/// format expresses scaled grids (the replayed instance keeps the base
+/// name, so model caches treat it as the base application — the same
+/// semantics a hand-written `"grid"` override has always had).
+pub fn write_trace(instances: &[KernelInstance]) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::from("[\n");
+    for (i, k) in instances.iter().enumerate() {
+        let (app, write_grid) = match BenchmarkApp::from_name(k.spec.name) {
+            Some(bench) => (bench.name(), k.spec.grid_blocks != bench.spec().grid_blocks),
+            None => {
+                // Heavy-tail bucket variant: "<base>x<multiplier>".
+                let base = k
+                    .spec
+                    .name
+                    .rsplit_once('x')
+                    .and_then(|(base, m)| {
+                        m.parse::<u32>().ok()?;
+                        BenchmarkApp::from_name(base)
+                    })
+                    .with_context(|| {
+                        format!("kernel {}: {:?} is not a benchmark app", k.id, k.spec.name)
+                    })?;
+                (base.name(), true)
+            }
+        };
+        write!(out, "  {{\"app\": \"{app}\", \"t\": {}", k.arrival_time).unwrap();
+        if write_grid {
+            write!(out, ", \"grid\": {}", k.spec.grid_blocks).unwrap();
+        }
+        if k.qos.class == ServiceClass::Latency {
+            write!(out, ", \"class\": \"{}\"", k.qos.class.name()).unwrap();
+        }
+        if let Some(d) = k.qos.deadline {
+            write!(out, ", \"deadline\": {d}").unwrap();
+        }
+        out.push('}');
+        if i + 1 < instances.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    Ok(out)
+}
+
+/// Tees every arrival popped from the wrapped source into a log.
+/// `kernelet trace record` drives a normal engine run through this and
+/// dumps the log — so completion-driven (closed-loop) scenarios record
+/// the arrival sequence their run actually realized, and open-loop
+/// scenarios record their policy-independent sequence.
+pub struct RecordingSource<'a> {
+    inner: &'a mut dyn ArrivalSource,
+    log: Vec<KernelInstance>,
+}
+
+impl<'a> RecordingSource<'a> {
+    pub fn new(inner: &'a mut dyn ArrivalSource) -> Self {
+        Self { inner, log: Vec::new() }
+    }
+
+    /// The arrivals popped so far, in emission order.
+    pub fn into_log(self) -> Vec<KernelInstance> {
+        self.log
+    }
+}
+
+impl ArrivalSource for RecordingSource<'_> {
+    fn scenario(&self) -> &'static str {
+        self.inner.scenario()
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.inner.peek_time()
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let k = self.inner.next_arrival();
+        if let Some(k) = &k {
+            self.log.push(k.clone());
+        }
+        k
+    }
+
+    fn on_completion(&mut self, id: u64, t_secs: f64) {
+        self.inner.on_completion(id, t_secs);
+    }
+
+    fn more_expected(&self) -> bool {
+        self.inner.more_expected()
+    }
 }
 
 /// Parse a JSON trace straight into a [`ReplaySource`].
@@ -723,15 +911,18 @@ pub const SCENARIO_NAMES: [&str; 6] =
 
 /// Build a named scenario over `mix` offering roughly `agg_rate_kps`
 /// kernels/sec in aggregate, with `per_app` instances per application
-/// (total = per_app × |apps|). The one factory the CLI, the saturation
-/// figure and the throughput bench all share, so a scenario name means
-/// the same workload everywhere.
+/// (total = per_app × |apps|), arrivals stamped with `qos`
+/// ([`QosMix::ALL_BATCH`] for the QoS-agnostic workloads). The one
+/// factory the CLI, the saturation figure and the throughput/QoS
+/// benches all share, so a scenario name means the same workload
+/// everywhere.
 pub fn scenario_source(
     scenario: &str,
     mix: Mix,
     per_app: u32,
     agg_rate_kps: f64,
     seed: u64,
+    qos: QosMix,
 ) -> Result<Box<dyn ArrivalSource>> {
     let apps = mix.apps().len();
     let total = per_app as u64 * apps as u64;
@@ -739,30 +930,46 @@ pub fn scenario_source(
         anyhow::ensure!(agg_rate_kps > 0.0, "scenario {scenario} needs a positive arrival rate");
     }
     Ok(match scenario {
-        "saturated" => Box::new(ReplaySource::from_stream(&Stream::saturated(mix, per_app, seed))),
-        "poisson" => Box::new(PoissonSource::new(mix, per_app, agg_rate_kps / apps as f64, seed)),
+        "saturated" => Box::new(
+            ReplaySource::from_stream(&Stream::saturated(mix, per_app, seed)).with_qos(qos),
+        ),
+        "poisson" => Box::new(
+            PoissonSource::new(mix, per_app, agg_rate_kps / apps as f64, seed).with_qos(qos),
+        ),
         // Calm at half the offered rate, bursts at 1.5× — equal mean
         // sojourns of ~20 arrivals keep the long-run rate at the target.
-        "bursty" => Box::new(BurstySource::new(
-            mix,
-            total,
-            [0.5 * agg_rate_kps, 1.5 * agg_rate_kps],
-            [20.0 / agg_rate_kps, 20.0 / agg_rate_kps],
-            seed,
-        )),
-        // ~3 day/night cycles over the run's expected span.
-        "diurnal" => Box::new(DiurnalSource::new(
-            mix,
-            total,
-            agg_rate_kps,
-            0.8,
-            (total as f64 / agg_rate_kps) / 3.0,
-            seed,
-        )),
-        "heavytail" => Box::new(HeavyTailSource::new(mix, total, agg_rate_kps, 1.1, seed)),
+        "bursty" => Box::new(
+            BurstySource::new(
+                mix,
+                total,
+                [0.5 * agg_rate_kps, 1.5 * agg_rate_kps],
+                [20.0 / agg_rate_kps, 20.0 / agg_rate_kps],
+                seed,
+            )
+            .with_qos(qos),
+        ),
+        // ~3 day/night cycles over the run's expected span (the max(1)
+        // keeps the period positive for a zero-instance scenario, whose
+        // sinusoid never gets sampled anyway).
+        "diurnal" => Box::new(
+            DiurnalSource::new(
+                mix,
+                total,
+                agg_rate_kps,
+                0.8,
+                ((total.max(1)) as f64 / agg_rate_kps) / 3.0,
+                seed,
+            )
+            .with_qos(qos),
+        ),
+        "heavytail" => {
+            Box::new(HeavyTailSource::new(mix, total, agg_rate_kps, 1.1, seed).with_qos(qos))
+        }
         // 8 clients whose think-limited aggregate rate is the target;
         // service time then throttles the realized rate below it.
-        "closed" => Box::new(ClosedLoopSource::new(mix, 8, agg_rate_kps / 8.0, total, seed)),
+        "closed" => Box::new(
+            ClosedLoopSource::new(mix, 8, agg_rate_kps / 8.0, total, seed).with_qos(qos),
+        ),
         other => bail!("unknown scenario {other} (valid: {})", SCENARIO_NAMES.join(" ")),
     })
 }
@@ -934,10 +1141,120 @@ mod tests {
     #[test]
     fn scenario_factory_covers_all_names() {
         for name in SCENARIO_NAMES {
-            let src = scenario_source(name, Mix::MIX, 3, 50.0, 9).unwrap();
+            let src = scenario_source(name, Mix::MIX, 3, 50.0, 9, QosMix::ALL_BATCH).unwrap();
             assert!(!src.scenario().is_empty());
         }
-        assert!(scenario_source("nope", Mix::MIX, 3, 50.0, 9).is_err());
-        assert!(scenario_source("poisson", Mix::MIX, 3, 0.0, 9).is_err());
+        assert!(scenario_source("nope", Mix::MIX, 3, 50.0, 9, QosMix::ALL_BATCH).is_err());
+        assert!(scenario_source("poisson", Mix::MIX, 3, 0.0, 9, QosMix::ALL_BATCH).is_err());
+    }
+
+    #[test]
+    fn qos_mix_stamps_without_perturbing_arrivals() {
+        // Same seed with and without a latency share: identical arrival
+        // sequences (ids, bit-exact times, specs) — only the Qos labels
+        // differ, and they hit the requested fraction.
+        let mix = QosMix::latency_share(0.5, 2.0);
+        for name in SCENARIO_NAMES {
+            if name == "closed" {
+                continue; // completion-driven; drained below without an engine
+            }
+            let mut plain = scenario_source(name, Mix::MIX, 4, 80.0, 77, QosMix::ALL_BATCH)
+                .unwrap();
+            let mut stamped = scenario_source(name, Mix::MIX, 4, 80.0, 77, mix).unwrap();
+            let a = drain(plain.as_mut());
+            let b = drain(stamped.as_mut());
+            assert_eq!(a.len(), b.len(), "{name}");
+            let mut latency = 0;
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id, "{name}");
+                assert_eq!(x.arrival_time.to_bits(), y.arrival_time.to_bits(), "{name}");
+                assert_eq!(x.spec.name, y.spec.name, "{name}");
+                assert_eq!(x.qos, Qos::BATCH, "{name}: un-stamped arrival not batch");
+                if y.qos.is_latency() {
+                    latency += 1;
+                    assert_eq!(y.qos.deadline, Some(y.arrival_time + 2.0), "{name}");
+                } else {
+                    assert_eq!(y.qos.deadline, None, "{name}");
+                }
+            }
+            assert_eq!(latency, a.len() / 2, "{name}: latency share off");
+        }
+    }
+
+    #[test]
+    fn closed_loop_stamps_qos_too() {
+        let mut src =
+            ClosedLoopSource::new(Mix::MIX, 2, 10.0, 8, 41).with_qos(QosMix::latency_share(1.0, 0.5));
+        let mut seen = 0;
+        while let Some(k) = src.next_arrival() {
+            assert!(k.qos.is_latency());
+            assert_eq!(k.qos.deadline, Some(k.arrival_time + 0.5));
+            seen += 1;
+            src.on_completion(k.id, k.arrival_time + 0.1);
+        }
+        assert_eq!(seen, 8);
+    }
+
+    #[test]
+    fn trace_round_trips_qos_fields() {
+        let json = r#"
+            [
+              {"app": "MM", "t": 0.0},
+              {"app": "PC", "t": 0.5, "grid": 512, "class": "latency", "deadline": 2.5},
+              {"app": "TEA", "t": 1.0, "class": "batch", "deadline": 9.0}
+            ]
+        "#;
+        let out = parse_trace(json).unwrap();
+        assert_eq!(out[0].qos, Qos::BATCH);
+        assert!(out[1].qos.is_latency());
+        assert_eq!(out[1].qos.deadline, Some(2.5));
+        assert_eq!(out[2].qos.class, ServiceClass::Batch);
+        assert_eq!(out[2].qos.deadline, Some(9.0));
+        // write → parse is the identity on times, specs and QoS.
+        let written = write_trace(&out).unwrap();
+        let back = parse_trace(&written).unwrap();
+        assert_eq!(back.len(), out.len());
+        for (a, b) in back.iter().zip(&out) {
+            assert_eq!(a.arrival_time.to_bits(), b.arrival_time.to_bits());
+            assert_eq!(a.spec.name, b.spec.name);
+            assert_eq!(a.spec.grid_blocks, b.spec.grid_blocks);
+            assert_eq!(a.qos, b.qos);
+        }
+    }
+
+    #[test]
+    fn write_trace_maps_heavytail_variants_to_base_apps() {
+        let mut src = HeavyTailSource::new(Mix::MIX, 400, 100.0, 1.1, 31)
+            .with_qos(QosMix::latency_share(0.25, 1.0));
+        let out = drain(&mut src);
+        let written = write_trace(&out).unwrap();
+        assert!(!written.contains('x'), "variant names must not leak into traces");
+        let back = parse_trace(&written).unwrap();
+        assert_eq!(back.len(), out.len());
+        // Grids (including scaled elephants) survive the round trip.
+        for (a, b) in back.iter().zip(&out) {
+            assert_eq!(a.spec.grid_blocks, b.spec.grid_blocks);
+            assert_eq!(a.qos, b.qos);
+        }
+    }
+
+    #[test]
+    fn trace_rejects_bad_qos_fields() {
+        assert!(parse_trace("[{\"app\": \"MM\", \"t\": 1, \"class\": \"vip\"}]").is_err());
+        assert!(parse_trace("[{\"app\": \"MM\", \"t\": 1, \"deadline\": 0.5}]").is_err());
+    }
+
+    #[test]
+    fn recording_source_tees_arrivals() {
+        let stream = Stream::poisson(Mix::MIX, 3, 100.0, 5);
+        let mut inner = ReplaySource::from_stream(&stream);
+        let mut rec = RecordingSource::new(&mut inner);
+        let out = drain(&mut rec);
+        let log = rec.into_log();
+        assert_eq!(log.len(), out.len());
+        for (a, b) in log.iter().zip(&stream.instances) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_time.to_bits(), b.arrival_time.to_bits());
+        }
     }
 }

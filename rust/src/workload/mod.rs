@@ -12,11 +12,14 @@
 //! heavy-tailed, closed-loop, trace replay).
 
 pub mod arrivals;
+pub mod qos;
 
 pub use arrivals::{
-    parse_trace, scenario_source, trace_source, ArrivalSource, BurstySource, ClosedLoopSource,
-    DiurnalSource, HeavyTailSource, PoissonSource, ReplaySource, SCENARIO_NAMES,
+    parse_trace, scenario_source, trace_source, write_trace, ArrivalSource, BurstySource,
+    ClosedLoopSource, DiurnalSource, HeavyTailSource, PoissonSource, RecordingSource,
+    ReplaySource, SCENARIO_NAMES,
 };
+pub use qos::QosMix;
 
 use crate::kernel::{BenchmarkApp, KernelInstance};
 use crate::stats::Xoshiro256;

@@ -1,0 +1,135 @@
+//! QoS mix specs for arrival sources.
+//!
+//! A [`QosMix`] tells a source what fraction of its arrivals are
+//! latency-class and how their deadlines are stamped. Class assignment
+//! is **deterministic in the arrival index** (no RNG is consumed), so
+//! installing a mix on a source never perturbs its arrival-time draw
+//! sequence: with [`QosMix::ALL_BATCH`] every source stays bit-identical
+//! to its un-annotated form — the QoS-off differential the invariants
+//! suite pins.
+
+use crate::kernel::{Qos, ServiceClass};
+
+/// The QoS mix a source stamps onto its arrivals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosMix {
+    /// Fraction of arrivals stamped latency-class, in `[0, 1]`.
+    pub latency_fraction: f64,
+    /// Relative deadline (seconds after arrival) stamped on
+    /// latency-class arrivals; `None` leaves them best-effort.
+    pub latency_deadline_secs: Option<f64>,
+    /// Relative deadline for batch arrivals (usually `None`).
+    pub batch_deadline_secs: Option<f64>,
+}
+
+impl Default for QosMix {
+    fn default() -> Self {
+        Self::ALL_BATCH
+    }
+}
+
+impl QosMix {
+    /// The QoS-agnostic mix: everything batch, nothing deadlined.
+    pub const ALL_BATCH: QosMix = QosMix {
+        latency_fraction: 0.0,
+        latency_deadline_secs: None,
+        batch_deadline_secs: None,
+    };
+
+    /// A two-class mix: `fraction` of arrivals are latency-class with a
+    /// relative deadline of `deadline_secs`; the rest are best-effort
+    /// batch.
+    pub fn latency_share(fraction: f64, deadline_secs: f64) -> QosMix {
+        assert!((0.0..=1.0).contains(&fraction), "latency fraction {fraction} out of [0,1]");
+        assert!(
+            deadline_secs.is_finite() && deadline_secs > 0.0,
+            "relative deadline {deadline_secs} must be positive"
+        );
+        QosMix {
+            latency_fraction: fraction,
+            latency_deadline_secs: Some(deadline_secs),
+            batch_deadline_secs: None,
+        }
+    }
+
+    /// Whether this mix stamps anything other than the default
+    /// annotation.
+    pub fn is_all_batch(&self) -> bool {
+        self.latency_fraction == 0.0 && self.batch_deadline_secs.is_none()
+    }
+
+    /// Class/deadline for arrival `id` at `arrival_secs`.
+    ///
+    /// Arrival `id` is latency-class iff the integer part of
+    /// `latency_fraction × id` advances at `id + 1` — an evenly spaced
+    /// interleave with exactly `⌊n·fraction⌋` latency arrivals in every
+    /// prefix of `n`. Deterministic and RNG-free by design: sources call
+    /// this at emission time without touching their generators.
+    pub fn stamp(&self, id: u64, arrival_secs: f64) -> Qos {
+        let is_latency = self.latency_fraction > 0.0 && {
+            let lo = (self.latency_fraction * id as f64).floor();
+            let hi = (self.latency_fraction * (id + 1) as f64).floor();
+            hi > lo
+        };
+        if is_latency {
+            Qos {
+                class: ServiceClass::Latency,
+                deadline: self.latency_deadline_secs.map(|d| arrival_secs + d),
+            }
+        } else {
+            Qos {
+                class: ServiceClass::Batch,
+                deadline: self.batch_deadline_secs.map(|d| arrival_secs + d),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_batch_stamps_the_default() {
+        let mix = QosMix::ALL_BATCH;
+        assert!(mix.is_all_batch());
+        for id in 0..100 {
+            assert_eq!(mix.stamp(id, id as f64), Qos::BATCH);
+        }
+    }
+
+    #[test]
+    fn latency_share_hits_the_fraction_exactly() {
+        for (frac, n) in [(0.3, 1000u64), (0.5, 101), (1.0, 64), (0.25, 7)] {
+            let mix = QosMix::latency_share(frac, 1.0);
+            let latency =
+                (0..n).filter(|&id| mix.stamp(id, 0.0).is_latency()).count() as u64;
+            assert_eq!(latency, (frac * n as f64).floor() as u64, "frac={frac} n={n}");
+        }
+    }
+
+    #[test]
+    fn latency_arrivals_are_evenly_interleaved() {
+        let mix = QosMix::latency_share(0.5, 2.0);
+        let classes: Vec<bool> = (0..10).map(|id| mix.stamp(id, 0.0).is_latency()).collect();
+        // Every other arrival, not a front-loaded block.
+        assert_eq!(classes, [false, true, false, true, false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn deadlines_are_relative_to_arrival() {
+        let mix = QosMix::latency_share(1.0, 3.0);
+        let q = mix.stamp(4, 10.0);
+        assert!(q.is_latency());
+        assert_eq!(q.deadline, Some(13.0));
+        // Batch arrivals of a latency mix stay best-effort.
+        let half = QosMix::latency_share(0.5, 3.0);
+        assert_eq!(half.stamp(0, 10.0).deadline, None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_fraction_rejected() {
+        let _ = QosMix::latency_share(1.5, 1.0);
+    }
+}

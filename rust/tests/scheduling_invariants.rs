@@ -6,8 +6,12 @@
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::{run_base, run_monte_carlo, run_opt};
-use kernelet::coordinator::{coresident_feasible, feasible_splits, run_kernelet, Coordinator};
-use kernelet::kernel::{BenchmarkApp, InstructionMix, KernelInstance, KernelSpec};
+use kernelet::coordinator::{
+    coresident_feasible, feasible_splits, run_kernelet, Coordinator, DeadlineSelector, Engine,
+    FifoSelector, KerneletSelector,
+};
+use kernelet::kernel::{BenchmarkApp, InstructionMix, KernelInstance, KernelSpec, Qos};
+use kernelet::workload::ReplaySource;
 use kernelet::model::chain::{steady_state_dense, steady_state_power};
 use kernelet::model::homo::build_homo_chain;
 use kernelet::model::params::{ChainParams, Granularity, SmEnv};
@@ -595,6 +599,112 @@ fn engine_matches_seed_loops_differentially() {
         run_monte_carlo(&coord, &stream, 4, 909),
         reference::run_monte_carlo(&coord, &stream, 4, 909)
     );
+}
+
+/// DIFFERENTIAL (QoS tentpole): with QoS disabled — a 100%-batch,
+/// no-deadline workload — the refactored engine and the deadline-aware
+/// selector are bit-identical to the pre-refactor behavior: the
+/// DeadlineSelector defers wholesale to Kernelet, which the frozen
+/// `reference` module pins against the seed loops. Whole reports are
+/// compared: completion map, slice trace, round/solo counts, queue
+/// timeline.
+#[test]
+fn qos_disabled_is_bit_identical_to_pre_refactor_engine() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let streams = [
+        Stream::saturated(Mix::MIX, 2, 31),
+        Stream::poisson(Mix::ALL, 2, 120.0, 32),
+        Stream::poisson(Mix::MIX, 3, 900.0, 33),
+    ];
+    for (si, stream) in streams.iter().enumerate() {
+        assert!(
+            stream.instances.iter().all(|k| k.qos == Qos::BATCH),
+            "stream {si}: default workloads must be all-batch/no-deadline"
+        );
+        let kern = Engine::new(&coord).run(&mut KerneletSelector, stream);
+        let dl = Engine::new(&coord).run(&mut DeadlineSelector::new(), stream);
+        assert_eq!(dl.total_cycles, kern.total_cycles, "stream {si}: total_cycles");
+        assert_eq!(dl.completion, kern.completion, "stream {si}: completion map");
+        assert_eq!(dl.coschedule_rounds, kern.coschedule_rounds, "stream {si}: rounds");
+        assert_eq!(dl.solo_slices, kern.solo_slices, "stream {si}: solo slices");
+        assert_eq!(dl.slice_trace, kern.slice_trace, "stream {si}: slice trace");
+        assert_eq!(dl.queue_depth, kern.queue_depth, "stream {si}: queue depth");
+        assert_eq!(
+            dl.mean_turnaround_secs, kern.mean_turnaround_secs,
+            "stream {si}: turnaround"
+        );
+        // ...and the shared schedule is the pre-refactor one (the
+        // frozen seed loop), closing the chain to the seed behavior.
+        let frozen = reference::run_kernelet(&coord, stream);
+        assert_eq!(dl.total_cycles, frozen.total_cycles, "stream {si}: vs frozen");
+        assert_eq!(dl.completion, frozen.completion, "stream {si}: vs frozen completion");
+        assert_eq!(dl.coschedule_rounds, frozen.rounds, "stream {si}: vs frozen rounds");
+        assert_eq!(dl.solo_slices, frozen.solo_slices, "stream {si}: vs frozen solo");
+        // All-batch runs put every kernel in the batch class.
+        assert_eq!(dl.qos.batch.completed, stream.len());
+        assert_eq!(dl.qos.latency.completed, 0);
+        assert_eq!(dl.qos.total_deadline_misses(), 0);
+    }
+}
+
+/// PROPERTY (crafted two-kernel trace): the deadline-aware selector
+/// never misses a deadline FIFO meets, and meets deadlines FIFO
+/// misses. A big batch kernel arrives at t=0; a small latency kernel
+/// arrives while it runs. FIFO makes the latecomer wait out the whole
+/// batch (completion `c_fifo`); co-scheduling/EDF finishes it at
+/// `c_qos << c_fifo`. Any deadline ≥ c_fifo is met by both; a deadline
+/// between the two is missed by FIFO and met by the deadline policy.
+#[test]
+fn deadline_selector_never_misses_what_fifo_meets() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let batch_spec = {
+        let s = BenchmarkApp::TEA.spec();
+        s.with_grid(s.grid_blocks * 8)
+    };
+    let lat_spec = BenchmarkApp::PC.spec();
+    let batch_secs = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&batch_spec));
+    let t_arr = 0.3 * batch_secs;
+    let trace = |deadline: Option<f64>| -> Vec<KernelInstance> {
+        vec![
+            KernelInstance::new(0, batch_spec.clone(), 0.0),
+            KernelInstance::new(1, lat_spec.clone(), t_arr).with_qos(Qos::latency(deadline)),
+        ]
+    };
+    let run = |sel: &mut dyn kernelet::coordinator::Selector, deadline: Option<f64>| {
+        Engine::new(&coord)
+            .run_source(sel, &mut ReplaySource::from_instances("crafted", trace(deadline)))
+    };
+
+    // Calibrate both policies' latency-kernel completions, deadline-free.
+    let c_fifo = run(&mut FifoSelector, None).completion[&1];
+    let c_qos = run(&mut DeadlineSelector::new(), None).completion[&1];
+    // Craft precondition (and the point of QoS scheduling): the
+    // latecomer finishes far earlier than behind-the-batch FIFO.
+    assert!(
+        c_qos < 0.8 * c_fifo,
+        "craft broken: deadline policy {c_qos} not well under fifo {c_fifo}"
+    );
+
+    // Deadlines FIFO meets (≥ its completion): the deadline policy
+    // must meet every one of them too.
+    for scale in [1.0, 1.1, 2.0, 10.0] {
+        let dl = c_fifo * scale;
+        let fifo = run(&mut FifoSelector, Some(dl));
+        let qos = run(&mut DeadlineSelector::new(), Some(dl));
+        assert_eq!(fifo.qos.latency.deadline_misses, 0, "scale {scale}: fifo must meet");
+        assert_eq!(
+            qos.qos.latency.deadline_misses, 0,
+            "scale {scale}: deadline policy missed a deadline FIFO meets"
+        );
+        assert!(qos.completion[&1] <= fifo.completion[&1], "scale {scale}");
+    }
+
+    // A deadline between the two completions: FIFO misses, EDF meets.
+    let dl = 0.5 * (c_qos + c_fifo);
+    let fifo = run(&mut FifoSelector, Some(dl));
+    let qos = run(&mut DeadlineSelector::new(), Some(dl));
+    assert_eq!(fifo.qos.latency.deadline_misses, 1, "fifo must miss {dl}");
+    assert_eq!(qos.qos.latency.deadline_misses, 0, "deadline policy must meet {dl}");
 }
 
 /// PROPERTY: take_slice covers each kernel's grid exactly once for

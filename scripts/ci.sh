@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI pipeline: format, lint, build, test, and record the perf
 # trajectories (BENCH_scheduling.json latency, BENCH_throughput.json
-# saturation curves).
+# saturation + fleet curves, BENCH_qos.json per-class tail latency).
 #
 # Usage: ./scripts/ci.sh [--quick]
 #   --quick   lower bench instance counts (CI smoke; default 50/8)
@@ -17,9 +17,11 @@ cd "$(dirname "$0")/../rust"
 
 instances=200
 tp_instances=50
+qos_instances=40
 if [[ "${1:-}" == "--quick" ]]; then
   instances=50
   tp_instances=8
+  qos_instances=10
 fi
 
 echo "==> cargo fmt --check"
@@ -44,6 +46,11 @@ KERNELET_INSTANCES="${tp_instances}" \
 KERNELET_THROUGHPUT_OUT="BENCH_throughput.json" \
   cargo bench --bench throughput
 
+echo "==> cargo bench --bench qos (instances/app=${qos_instances})"
+KERNELET_INSTANCES="${qos_instances}" \
+KERNELET_QOS_OUT="BENCH_qos.json" \
+  cargo bench --bench qos
+
 echo "==> checking BENCH_throughput.json"
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
@@ -62,12 +69,68 @@ for c in curves:
     assert c["points"], f"empty curve {c['scenario']}/{c['policy']}"
     for p in c["points"]:
         assert p["throughput_kps"] > 0, f"dead point in {c['scenario']}/{c['policy']}"
-print(f"BENCH_throughput.json OK: {len(curves)} curves "
-      f"({len(scenarios)} scenarios x {len(policies)} policies)")
+fleet = d["fleet_curves"]
+assert fleet, "no fleet curves recorded"
+routing = {c["policy"] for c in fleet}
+assert routing >= {"roundrobin", "leastloaded", "sloaware"}, f"missing routing policies: {sorted(routing)}"
+gpus = {c["gpus"] for c in fleet}
+assert len(gpus) >= 2, f"fleet sweep must scale device counts, got {sorted(gpus)}"
+for c in fleet:
+    assert c["points"], f"empty fleet curve {c['scenario']}/{c['policy']}/x{c['gpus']}"
+    for p in c["points"]:
+        assert p["throughput_kps"] > 0, f"dead fleet point {c['scenario']}/{c['policy']}/x{c['gpus']}"
+print(f"BENCH_throughput.json OK: {len(curves)} curves + {len(fleet)} fleet curves "
+      f"({len(scenarios)} scenarios x {len(policies)} policies; fleets {sorted(gpus)})")
 EOF
 else
   echo "warning: python3 unavailable — skipping BENCH_throughput.json schema check"
   grep -q '"bench":"throughput"' BENCH_throughput.json
+  grep -q '"fleet_curves"' BENCH_throughput.json
+fi
+
+echo "==> checking BENCH_qos.json"
+if command -v python3 >/dev/null 2>&1; then
+  python3 - <<'EOF'
+import json
+
+with open("BENCH_qos.json") as fh:
+    d = json.load(fh)
+assert d["bench"] == "qos", "wrong bench tag"
+assert 0.0 < d["latency_fraction"] <= 1.0
+assert d["deadline_scale"] > 0.0
+curves = d["curves"]
+assert {c["policy"] for c in curves} >= {"kernelet", "deadline"}, "missing QoS policies"
+by = {(c["scenario"], c["policy"]): c["points"] for c in curves}
+for pts in by.values():
+    assert pts, "empty QoS curve"
+    for p in pts:
+        for cls in ("latency", "batch"):
+            c = p[cls]
+            assert c["deadline_misses"] <= max(c["with_deadline"], 1)
+            assert c["p50_s"] <= c["p99_s"] + 1e-12
+
+# Acceptance: under bursty overload the deadline policy is never worse
+# than class-blind Kernelet on the latency class, and strictly better
+# whenever Kernelet actually misses deadlines (a quiet quick-mode run
+# where nobody misses proves nothing either way and must not fail CI).
+def at_peak(policy):
+    pts = by[("bursty", policy)]
+    return max(pts, key=lambda p: p["load"])["latency"]
+
+k, dl = at_peak("kernelet"), at_peak("deadline")
+assert dl["p99_s"] <= k["p99_s"], f"deadline p99 {dl['p99_s']} > kernelet {k['p99_s']}"
+assert dl["deadline_misses"] <= k["deadline_misses"], \
+    f"deadline misses {dl['deadline_misses']} > kernelet {k['deadline_misses']}"
+if k["deadline_misses"] > 0:
+    assert dl["deadline_misses"] < k["deadline_misses"] or dl["p99_s"] < k["p99_s"], \
+        "EDF gating bought nothing under bursty overload"
+print(f"BENCH_qos.json OK: {len(curves)} curves; bursty peak latency-class "
+      f"p99 {dl['p99_s']:.5f}s vs {k['p99_s']:.5f}s, "
+      f"misses {dl['deadline_misses']} vs {k['deadline_misses']}")
+EOF
+else
+  echo "warning: python3 unavailable — skipping BENCH_qos.json schema check"
+  grep -q '"bench":"qos"' BENCH_qos.json
 fi
 
 echo "==> perf record:"
