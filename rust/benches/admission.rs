@@ -1,0 +1,162 @@
+//! Admission-control benchmark: crosses arrival scenario × offered
+//! load × admission policy (open door vs backlog cap vs SLO guard)
+//! under a latency/batch mix and records goodput, per-class tails and
+//! the shed/deferred accounting to `BENCH_admission.json` — the repo's
+//! overload trajectory, gated by CI (`scripts/check_bench.py`) next to
+//! `BENCH_throughput.json` and `BENCH_qos.json`.
+//!
+//! Run: `cargo bench --bench admission`
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 40).
+//! - `KERNELET_ADMISSION_OUT` overrides the JSON output path (default
+//!   `BENCH_admission.json` in the working directory).
+//!
+//! JSON schema (times in seconds, rates in kernels/sec). Per class and
+//! cell, `completed + shed + deferred_unfinished + incomplete` sums
+//! exactly to `arrivals` — the partition CI asserts:
+//!
+//! ```json
+//! {
+//!   "bench": "admission",
+//!   "gpu": "C2050",
+//!   "mix": "MIX",
+//!   "instances_per_app": 40,
+//!   "latency_fraction": 0.25,
+//!   "deadline_scale": 4.0,
+//!   "backlog_cap": 16,
+//!   "base_capacity_kps": 123.4,
+//!   "wall_ms": 456,
+//!   "curves": [
+//!     {
+//!       "scenario": "bursty",
+//!       "policy": "sloguard",
+//!       "points": [
+//!         {"load": 3.0, "arrivals": 160, "completed": 140,
+//!          "throughput_kps": 100.1, "goodput_kps": 98.0,
+//!          "latency": {"arrivals": 40, "completed": 40, "shed": 0,
+//!                      "deferred_unfinished": 0, "incomplete": 0,
+//!                      "p50_s": 0.01, "p95_s": 0.02, "p99_s": 0.03,
+//!                      "mean_s": 0.012, "deadline_misses": 1,
+//!                      "with_deadline": 40},
+//!          "batch": {...same shape...}}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use kernelet::bench::once;
+use kernelet::figures::admission::{
+    admission_sweep, AdmissionPoint, ClassOutcome, ADMISSION_LOADS, ADMISSION_POLICIES,
+    ADMISSION_SCENARIOS, DEFAULT_BACKLOG_CAP, DEFAULT_DEADLINE_SCALE, DEFAULT_LATENCY_FRACTION,
+};
+use kernelet::figures::FigOptions;
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    let opts = FigOptions { instances_per_app: instances, ..Default::default() };
+
+    let ((points, capacity), dt) = once("admission::admission_sweep", || {
+        admission_sweep(
+            &opts,
+            &ADMISSION_LOADS,
+            &ADMISSION_SCENARIOS,
+            DEFAULT_LATENCY_FRACTION,
+            DEFAULT_DEADLINE_SCALE,
+        )
+    });
+
+    println!(
+        "{:>9} {:>6} {:>10} {:>8} {:>8} {:>6} {:>9} {:>12} {:>9} {:>12}",
+        "scenario", "load", "policy", "arrivals", "done", "shed", "miss_lat", "p99_lat_s",
+        "tput_kps", "goodput_kps"
+    );
+    for p in &points {
+        println!(
+            "{:>9} {:>6.2} {:>10} {:>8} {:>8} {:>6} {:>9} {:>12.5} {:>9.1} {:>12.1}",
+            p.scenario,
+            p.load,
+            p.policy,
+            p.arrivals,
+            p.kernels,
+            p.latency.admission.shed + p.batch.admission.shed,
+            p.latency.stats.deadline_misses,
+            p.latency.stats.p99_turnaround_secs,
+            p.throughput_kps,
+            p.goodput_kps
+        );
+    }
+
+    let json = to_json(&points, instances, capacity, dt.as_millis());
+    let out = std::env::var("KERNELET_ADMISSION_OUT")
+        .unwrap_or_else(|_| "BENCH_admission.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            // CI gates this file next; a stale copy passing the check
+            // would silently freeze the recorded trajectory.
+            eprintln!("could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn class_json(c: &ClassOutcome) -> String {
+    format!(
+        "{{\"arrivals\":{},\"completed\":{},\"shed\":{},\"deferred_unfinished\":{},\
+         \"incomplete\":{},\"p50_s\":{},\"p95_s\":{},\"p99_s\":{},\"mean_s\":{},\
+         \"deadline_misses\":{},\"with_deadline\":{}}}",
+        c.admission.arrivals,
+        c.stats.completed,
+        c.admission.shed,
+        c.admission.deferred_unfinished,
+        c.incomplete(),
+        c.stats.p50_turnaround_secs,
+        c.stats.p95_turnaround_secs,
+        c.stats.p99_turnaround_secs,
+        c.stats.mean_turnaround_secs,
+        c.stats.deadline_misses,
+        c.stats.with_deadline
+    )
+}
+
+/// Group the flat point list into one curve per (scenario, policy).
+fn to_json(points: &[AdmissionPoint], instances: u32, capacity: f64, wall_ms: u128) -> String {
+    let mut curves = Vec::new();
+    for &scenario in &ADMISSION_SCENARIOS {
+        for &policy in &ADMISSION_POLICIES {
+            let pts: Vec<String> = points
+                .iter()
+                .filter(|p| p.scenario == scenario && p.policy == policy)
+                .map(|p| {
+                    format!(
+                        "{{\"load\":{},\"arrivals\":{},\"completed\":{},\
+                         \"throughput_kps\":{},\"goodput_kps\":{},\
+                         \"latency\":{},\"batch\":{}}}",
+                        p.load,
+                        p.arrivals,
+                        p.kernels,
+                        p.throughput_kps,
+                        p.goodput_kps,
+                        class_json(&p.latency),
+                        class_json(&p.batch)
+                    )
+                })
+                .collect();
+            curves.push(format!(
+                "{{\"scenario\":\"{scenario}\",\"policy\":\"{policy}\",\"points\":[{}]}}",
+                pts.join(",")
+            ));
+        }
+    }
+    format!(
+        "{{\"bench\":\"admission\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\
+         \"instances_per_app\":{instances},\"latency_fraction\":{DEFAULT_LATENCY_FRACTION},\
+         \"deadline_scale\":{DEFAULT_DEADLINE_SCALE},\"backlog_cap\":{DEFAULT_BACKLOG_CAP},\
+         \"base_capacity_kps\":{capacity},\"wall_ms\":{wall_ms},\"curves\":[{}]}}\n",
+        curves.join(",")
+    )
+}

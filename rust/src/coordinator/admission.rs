@@ -1,0 +1,650 @@
+//! Admission control — the scheduler's front door under overload.
+//!
+//! The engine used to accept every arrival unconditionally, so under
+//! bursty over-subscription the pending set grew without bound and
+//! latency-class tails collapsed — exactly the regime the paper's
+//! scheduling is supposed to protect. Production GPU-sharing systems
+//! pair scheduling with an admission decision *before* work lands on
+//! the device (Chen et al.'s compiler-guided sharing and Pai et al.'s
+//! preemptive TB scheduling both gate at submission); this module is
+//! that gate for the Kernelet engine.
+//!
+//! Every streamed arrival now passes through an [`AdmissionPolicy`]
+//! before entering the pending set and is **admitted**, **deferred**
+//! (parked in a bounded queue that re-admits when pressure drops) or
+//! **shed** (rejected outright, accounted per class):
+//!
+//! - [`AdmitAll`] — the open door. Decision-identical to the
+//!   pre-admission engine (pinned by `tests/admission_invariants.rs`).
+//! - [`BacklogCap`] — class-blind reject-over-threshold: shed any
+//!   arrival that would push the pending set past a fixed depth. The
+//!   blunt baseline every queueing system starts with.
+//! - [`SloGuard`] — QoS-aware load shedding: latency-class kernels are
+//!   always admitted; batch kernels are deferred whenever the projected
+//!   latency-class slack is at risk — the pending set's estimated drain
+//!   time ([`SchedCtx::est_remaining_secs`] summed over residuals)
+//!   exceeds the slack budget, or it threatens a pending deadline —
+//!   and shed once the deferred queue overflows. Deferred work
+//!   re-enters in deferral order as soon as pressure drops.
+//!
+//! The [`AdmissionController`] owns the policy, the deferred queue and
+//! the per-class accounting ([`AdmissionReport`]); the engine consults
+//! it in [`Engine::offer`](super::Engine::offer) and releases deferred
+//! work before every dispatch decision. The multi-GPU dispatcher
+//! supports shedding at the router (one fleet-wide controller judging
+//! each arrival against its destination device) or at the device (one
+//! controller per engine) — [`super::multigpu::ShedPoint`].
+//!
+//! Accounting invariant (the CI-gated partition): per class,
+//! `admitted + shed + deferred_unfinished == arrivals`, and since the
+//! engine drains everything admitted, `completed + incomplete ==
+//! admitted`. So `completed + shed + deferred_unfinished + incomplete`
+//! sums exactly to arrivals in every report.
+
+use std::collections::VecDeque;
+
+use super::engine::SchedCtx;
+use crate::kernel::{KernelInstance, ServiceClass};
+
+/// The fate of one arrival at the admission gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Enter the pending set now.
+    Admit,
+    /// Park in the deferred queue; re-admitted when pressure drops.
+    Defer,
+    /// Rejected outright; never runs.
+    Shed,
+}
+
+/// A load-shedding policy: decides the fate of each arrival from the
+/// same [`SchedCtx`] the scheduling selectors see (backlog depth,
+/// clock, per-kernel service estimates).
+pub trait AdmissionPolicy {
+    /// Policy name (reports, benches, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Decide the fate of arrival `k` under the current pressure.
+    fn decide(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> AdmissionDecision;
+
+    /// Whether the deferred kernel `k` can be re-admitted now. The
+    /// default re-runs [`Self::decide`] and releases on `Admit` — the
+    /// natural "pressure dropped" test.
+    fn release(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> bool {
+        matches!(self.decide(ctx, k), AdmissionDecision::Admit)
+    }
+
+    /// Deferred-queue capacity: a `Defer` verdict degrades to `Shed`
+    /// once this many kernels are already parked (bounded memory — the
+    /// point of shedding). Unbounded by default.
+    fn defer_capacity(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// The open door: every arrival admitted, nothing deferred or shed.
+/// Bit-identical to the pre-admission engine on every scenario.
+pub struct AdmitAll;
+
+impl AdmissionPolicy for AdmitAll {
+    fn name(&self) -> &'static str {
+        "admitall"
+    }
+
+    fn decide(&mut self, _ctx: &SchedCtx<'_, '_>, _k: &KernelInstance) -> AdmissionDecision {
+        AdmissionDecision::Admit
+    }
+}
+
+/// Class-blind reject-over-threshold: shed any arrival that would push
+/// the pending set past `cap` kernels. Bounds queue depth (and so the
+/// worst-case wait of everything behind it) at the cost of shedding
+/// latency work too.
+pub struct BacklogCap {
+    pub cap: usize,
+}
+
+impl BacklogCap {
+    pub const DEFAULT_CAP: usize = 32;
+
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "a zero backlog cap sheds everything");
+        Self { cap }
+    }
+}
+
+impl AdmissionPolicy for BacklogCap {
+    fn name(&self) -> &'static str {
+        "backlogcap"
+    }
+
+    fn decide(&mut self, ctx: &SchedCtx<'_, '_>, _k: &KernelInstance) -> AdmissionDecision {
+        if ctx.backlog() >= self.cap {
+            AdmissionDecision::Shed
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+}
+
+/// QoS-aware load shedding: protect latency-class slack by deferring
+/// (then shedding) batch work while the device's projected backlog
+/// endangers it.
+///
+/// Latency-class arrivals are **always admitted** — the guard exists
+/// for them. A batch arrival is deferred when either:
+///
+/// - the pending set's estimated drain time (sum of
+///   [`SchedCtx::est_remaining_secs`] over residuals) already exceeds
+///   `slack_budget_secs` — the headroom kept free so a latency kernel
+///   arriving *next* still has its deadline window; or
+/// - some pending deadlined kernel's time-to-deadline is inside the
+///   projected drain including the newcomer — admitting it would eat
+///   an identified kernel's slack.
+///
+/// Deferred kernels re-enter in deferral order as soon as neither
+/// condition holds; past `max_deferred` parked kernels, batch arrivals
+/// are shed outright.
+pub struct SloGuard {
+    /// Headroom budget (seconds of estimated backlog) kept free for
+    /// the latency class. Callers derive it from the workload's
+    /// deadline window (e.g. [`DEFAULT_SLACK_FRACTION`] of it).
+    pub slack_budget_secs: f64,
+    /// Safety multiplier on drain estimates; >1 defers earlier.
+    pub risk_factor: f64,
+    /// Deferred-queue capacity before batch arrivals are shed.
+    pub max_deferred: usize,
+}
+
+/// Default fraction of the latency class's relative deadline window
+/// used as [`SloGuard::slack_budget_secs`]: a quarter of the window
+/// leaves room for the in-flight slice, the queue ahead, and the
+/// kernel's own service time.
+pub const DEFAULT_SLACK_FRACTION: f64 = 0.25;
+
+impl SloGuard {
+    pub const DEFAULT_RISK_FACTOR: f64 = 1.0;
+    pub const DEFAULT_MAX_DEFERRED: usize = 64;
+
+    pub fn new(slack_budget_secs: f64, max_deferred: usize) -> Self {
+        assert!(
+            slack_budget_secs.is_finite() && slack_budget_secs > 0.0,
+            "slack budget {slack_budget_secs} must be positive"
+        );
+        assert!(max_deferred >= 1, "a zero deferred queue sheds every deferral");
+        Self { slack_budget_secs, risk_factor: Self::DEFAULT_RISK_FACTOR, max_deferred }
+    }
+
+    /// Whether admitting `extra` (or, with `None`, the pending set as
+    /// it stands) puts latency-class slack at risk.
+    fn at_risk(&self, ctx: &SchedCtx<'_, '_>, extra: Option<&KernelInstance>) -> bool {
+        let backlog_secs: f64 = ctx.pending.iter().map(|p| ctx.est_remaining_secs(p)).sum();
+        // Headroom: the queue itself (excluding the candidate, so one
+        // oversize kernel cannot starve itself out of an idle device)
+        // must stay inside the slack budget.
+        if backlog_secs * self.risk_factor > self.slack_budget_secs {
+            return true;
+        }
+        // Identified deadlines: the projected drain including the
+        // newcomer must not eat a pending kernel's time-to-deadline.
+        let projected = backlog_secs + extra.map_or(0.0, |k| ctx.est_remaining_secs(k));
+        ctx.pending.iter().any(|p| {
+            p.time_to_deadline(ctx.now_secs)
+                .map_or(false, |ttd| ttd < self.risk_factor * projected)
+        })
+    }
+}
+
+impl AdmissionPolicy for SloGuard {
+    fn name(&self) -> &'static str {
+        "sloguard"
+    }
+
+    fn decide(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> AdmissionDecision {
+        if k.qos.class == ServiceClass::Latency {
+            return AdmissionDecision::Admit; // never gate the class we protect
+        }
+        if self.at_risk(ctx, Some(k)) {
+            AdmissionDecision::Defer
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+
+    fn release(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> bool {
+        !self.at_risk(ctx, Some(k))
+    }
+
+    fn defer_capacity(&self) -> usize {
+        self.max_deferred
+    }
+}
+
+/// A cloneable policy configuration — what the CLI, the benches and
+/// the multi-GPU dispatcher (which needs one instance per device)
+/// build [`AdmissionPolicy`] values from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionSpec {
+    AdmitAll,
+    BacklogCap { cap: usize },
+    SloGuard { slack_budget_secs: f64, max_deferred: usize },
+}
+
+impl AdmissionSpec {
+    /// Policy names accepted by [`AdmissionSpec::from_name`].
+    pub const NAMES: [&'static str; 3] = ["admitall", "backlogcap", "sloguard"];
+
+    /// Parse a CLI/bench policy name. `backlog_cap` parameterizes
+    /// `backlogcap`; `slack_budget_secs` parameterizes `sloguard`.
+    pub fn from_name(name: &str, backlog_cap: usize, slack_budget_secs: f64) -> Option<Self> {
+        match name {
+            "admitall" => Some(AdmissionSpec::AdmitAll),
+            "backlogcap" => Some(AdmissionSpec::BacklogCap { cap: backlog_cap }),
+            "sloguard" => Some(AdmissionSpec::SloGuard {
+                slack_budget_secs,
+                max_deferred: SloGuard::DEFAULT_MAX_DEFERRED,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionSpec::AdmitAll => "admitall",
+            AdmissionSpec::BacklogCap { .. } => "backlogcap",
+            AdmissionSpec::SloGuard { .. } => "sloguard",
+        }
+    }
+
+    /// The canonical name → spec mapping every call site (CLI, bench,
+    /// figures, fleet) shares: `capacity_kps` and `deadline_scale`
+    /// size the [`SloGuard`] slack budget at [`DEFAULT_SLACK_FRACTION`]
+    /// of the latency deadline window; `backlog_cap` parameterizes
+    /// [`BacklogCap`]. Panics on an unknown name (use
+    /// [`AdmissionSpec::from_name`] to handle user input gracefully).
+    pub fn for_policy(
+        policy: &str,
+        capacity_kps: f64,
+        deadline_scale: f64,
+        backlog_cap: usize,
+    ) -> AdmissionSpec {
+        let budget = DEFAULT_SLACK_FRACTION * deadline_scale / capacity_kps;
+        AdmissionSpec::from_name(policy, backlog_cap, budget).unwrap_or_else(|| {
+            panic!("unknown admission policy {policy} (valid: {:?})", AdmissionSpec::NAMES)
+        })
+    }
+
+    /// Build a fresh policy instance.
+    pub fn build(&self) -> Box<dyn AdmissionPolicy> {
+        match *self {
+            AdmissionSpec::AdmitAll => Box::new(AdmitAll),
+            AdmissionSpec::BacklogCap { cap } => Box::new(BacklogCap::new(cap)),
+            AdmissionSpec::SloGuard { slack_budget_secs, max_deferred } => {
+                Box::new(SloGuard::new(slack_budget_secs, max_deferred))
+            }
+        }
+    }
+}
+
+/// Per-class admission accounting. Invariant at the end of a run:
+/// `admitted + shed + deferred_unfinished == arrivals`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassAdmission {
+    /// Arrivals of the class that reached the gate.
+    pub arrivals: usize,
+    /// Arrivals that entered the pending set (immediately or after a
+    /// deferral).
+    pub admitted: usize,
+    /// Arrivals rejected outright.
+    pub shed: usize,
+    /// Deferral events (each kernel is deferred at most once; it is
+    /// later either released — counted in `admitted` — or left in
+    /// `deferred_unfinished`).
+    pub deferrals: usize,
+    /// Kernels still parked in the deferred queue when the run closed.
+    pub deferred_unfinished: usize,
+}
+
+impl ClassAdmission {
+    /// All arrivals of the class admitted untouched (the accounting a
+    /// run without an admission controller reports).
+    pub fn all_admitted(arrivals: usize) -> Self {
+        Self { arrivals, admitted: arrivals, ..Default::default() }
+    }
+
+    pub fn merge(&self, other: &ClassAdmission) -> ClassAdmission {
+        ClassAdmission {
+            arrivals: self.arrivals + other.arrivals,
+            admitted: self.admitted + other.admitted,
+            shed: self.shed + other.shed,
+            deferrals: self.deferrals + other.deferrals,
+            deferred_unfinished: self.deferred_unfinished + other.deferred_unfinished,
+        }
+    }
+}
+
+/// The admission outcome of a run: per-class counts plus the policy
+/// that produced them ("none" when no controller was installed).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AdmissionReport {
+    pub policy: &'static str,
+    pub latency: ClassAdmission,
+    pub batch: ClassAdmission,
+}
+
+impl AdmissionReport {
+    /// Arrivals across both classes.
+    pub fn total_arrivals(&self) -> usize {
+        self.latency.arrivals + self.batch.arrivals
+    }
+
+    /// Shed across both classes.
+    pub fn total_shed(&self) -> usize {
+        self.latency.shed + self.batch.shed
+    }
+
+    /// Still-deferred across both classes.
+    pub fn total_deferred_unfinished(&self) -> usize {
+        self.latency.deferred_unfinished + self.batch.deferred_unfinished
+    }
+
+    /// Fleet merge (policy name kept from the first non-"none" side).
+    pub fn merge(&self, other: &AdmissionReport) -> AdmissionReport {
+        AdmissionReport {
+            policy: if self.policy.is_empty() || self.policy == "none" {
+                other.policy
+            } else {
+                self.policy
+            },
+            latency: self.latency.merge(&other.latency),
+            batch: self.batch.merge(&other.batch),
+        }
+    }
+}
+
+/// Owns one policy, the deferred queue and the per-class counters for
+/// one admission point (an engine, or the fleet router).
+pub struct AdmissionController {
+    policy: Box<dyn AdmissionPolicy>,
+    deferred: VecDeque<KernelInstance>,
+    latency: ClassAdmission,
+    batch: ClassAdmission,
+}
+
+impl AdmissionController {
+    pub fn new(policy: Box<dyn AdmissionPolicy>) -> Self {
+        Self {
+            policy,
+            deferred: VecDeque::new(),
+            latency: ClassAdmission::default(),
+            batch: ClassAdmission::default(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    fn class_mut(&mut self, class: ServiceClass) -> &mut ClassAdmission {
+        match class {
+            ServiceClass::Latency => &mut self.latency,
+            ServiceClass::Batch => &mut self.batch,
+        }
+    }
+
+    /// Judge one arrival and record the outcome. A `Defer` verdict
+    /// degrades to `Shed` when the deferred queue is at capacity. The
+    /// caller routes the kernel per the returned decision
+    /// ([`Self::push_deferred`] on `Defer`).
+    pub fn decide(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> AdmissionDecision {
+        let mut d = self.policy.decide(ctx, k);
+        if d == AdmissionDecision::Defer && self.deferred.len() >= self.policy.defer_capacity() {
+            d = AdmissionDecision::Shed;
+        }
+        let c = self.class_mut(k.qos.class);
+        c.arrivals += 1;
+        match d {
+            AdmissionDecision::Admit => c.admitted += 1,
+            AdmissionDecision::Defer => c.deferrals += 1,
+            AdmissionDecision::Shed => c.shed += 1,
+        }
+        d
+    }
+
+    /// Park a kernel the policy deferred.
+    pub fn push_deferred(&mut self, k: KernelInstance) {
+        self.deferred.push_back(k);
+    }
+
+    /// Head of the deferred queue (the next release candidate).
+    pub fn peek_deferred(&self) -> Option<&KernelInstance> {
+        self.deferred.front()
+    }
+
+    /// Kernels currently parked.
+    pub fn deferred_len(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// Try to release the deferred head under the current pressure.
+    /// Releases strictly in deferral order (head-of-line), and never
+    /// before the kernel's own arrival time — a released kernel is a
+    /// real submission at `ctx.now_secs`.
+    pub fn try_release(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<KernelInstance> {
+        let head = self.deferred.front()?;
+        if head.arrival_time > ctx.now_secs {
+            return None;
+        }
+        if !self.policy.release(ctx, head) {
+            return None;
+        }
+        let k = self.deferred.pop_front().expect("peeked head vanished");
+        self.class_mut(k.qos.class).admitted += 1;
+        Some(k)
+    }
+
+    /// Close out: whatever is still parked becomes `deferred_unfinished`.
+    pub fn into_report(self) -> AdmissionReport {
+        let mut report = AdmissionReport {
+            policy: self.policy.name(),
+            latency: self.latency,
+            batch: self.batch,
+        };
+        for k in &self.deferred {
+            match k.qos.class {
+                ServiceClass::Latency => report.latency.deferred_unfinished += 1,
+                ServiceClass::Batch => report.batch.deferred_unfinished += 1,
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::coordinator::Coordinator;
+    use crate::kernel::{BenchmarkApp, Qos};
+
+    fn ctx_over<'a, 'q>(
+        coord: &'a Coordinator,
+        pending: &'q [&'q KernelInstance],
+        now_secs: f64,
+    ) -> SchedCtx<'a, 'q> {
+        SchedCtx { coord, pending, now_secs, more_arrivals: true }
+    }
+
+    #[test]
+    fn admit_all_admits_everything() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let k = KernelInstance::new(0, BenchmarkApp::MM.spec(), 0.0);
+        let ctx = ctx_over(&coord, &[], 0.0);
+        assert_eq!(AdmitAll.decide(&ctx, &k), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn backlog_cap_sheds_over_threshold() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let insts: Vec<KernelInstance> = (0..3)
+            .map(|i| KernelInstance::new(i, BenchmarkApp::MM.spec(), 0.0))
+            .collect();
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let newcomer = KernelInstance::new(9, BenchmarkApp::PC.spec(), 0.0);
+        let mut cap = BacklogCap::new(3);
+        let full = ctx_over(&coord, &refs, 0.0);
+        assert_eq!(cap.decide(&full, &newcomer), AdmissionDecision::Shed);
+        let room = ctx_over(&coord, &refs[..2], 0.0);
+        assert_eq!(cap.decide(&room, &newcomer), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    #[should_panic]
+    fn backlog_cap_rejects_zero() {
+        let _ = BacklogCap::new(0);
+    }
+
+    #[test]
+    fn slo_guard_always_admits_latency_and_gates_batch_on_budget() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let spec = BenchmarkApp::MM.spec();
+        let est = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&spec));
+        let pending: Vec<KernelInstance> = (0..4)
+            .map(|i| KernelInstance::new(i, spec.clone(), 0.0))
+            .collect();
+        let refs: Vec<&KernelInstance> = pending.iter().collect();
+        // Budget below the 4-kernel backlog: batch deferred, latency
+        // admitted regardless.
+        let mut guard = SloGuard::new(2.0 * est, 8);
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let batch = KernelInstance::new(10, spec.clone(), 0.0);
+        let latency = KernelInstance::new(11, spec.clone(), 0.0).with_qos(Qos::latency(None));
+        assert_eq!(guard.decide(&ctx, &batch), AdmissionDecision::Defer);
+        assert_eq!(guard.decide(&ctx, &latency), AdmissionDecision::Admit);
+        // Release refuses while the backlog still exceeds the budget,
+        // and allows once it has drained below it.
+        assert!(!guard.release(&ctx_over(&coord, &refs, 0.0), &batch));
+        assert!(guard.release(&ctx_over(&coord, &refs[..1], 0.0), &batch));
+        // Empty device: batch flows again (and an oversize kernel can
+        // never starve itself — the budget tests the queue, not it).
+        let empty = ctx_over(&coord, &[], 0.0);
+        assert_eq!(guard.decide(&empty, &batch), AdmissionDecision::Admit);
+        let elephant = KernelInstance::new(12, spec.with_grid(spec.grid_blocks * 64), 0.0);
+        assert_eq!(guard.decide(&empty, &elephant), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn slo_guard_protects_pending_deadlines() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let spec = BenchmarkApp::MM.spec();
+        let est = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&spec));
+        // One deadlined latency kernel pending with slack for roughly
+        // one more kernel; a big budget keeps the headroom clause out
+        // of the way so only the deadline clause decides.
+        let pending =
+            [KernelInstance::new(0, spec.clone(), 0.0).with_qos(Qos::latency(Some(1.5 * est)))];
+        let refs: Vec<&KernelInstance> = pending.iter().collect();
+        let mut guard = SloGuard::new(1e9, 8);
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let small = KernelInstance::new(1, spec.clone(), 0.0);
+        // est(pending) + est(small) = 2 est > 1.5 est ttd: at risk.
+        assert_eq!(guard.decide(&ctx, &small), AdmissionDecision::Defer);
+        // Once the deadline has comfortable slack, batch flows again.
+        let relaxed =
+            [KernelInstance::new(0, spec.clone(), 0.0).with_qos(Qos::latency(Some(100.0 * est)))];
+        let refs2: Vec<&KernelInstance> = relaxed.iter().collect();
+        assert_eq!(
+            guard.decide(&ctx_over(&coord, &refs2, 0.0), &small),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn controller_partitions_arrivals_and_degrades_defer_to_shed() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let spec = BenchmarkApp::MM.spec();
+        let est = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&spec));
+        let pending: Vec<KernelInstance> =
+            (0..4).map(|i| KernelInstance::new(i, spec.clone(), 0.0)).collect();
+        let refs: Vec<&KernelInstance> = pending.iter().collect();
+        let mut ctrl =
+            AdmissionController::new(Box::new(SloGuard::new(0.5 * est, 2)));
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        for id in 10..15 {
+            let k = KernelInstance::new(id, spec.clone(), 0.0);
+            match ctrl.decide(&ctx, &k) {
+                AdmissionDecision::Defer => ctrl.push_deferred(k),
+                AdmissionDecision::Admit | AdmissionDecision::Shed => {}
+            }
+        }
+        // Capacity 2: first two deferred, the rest shed.
+        assert_eq!(ctrl.deferred_len(), 2);
+        let report = ctrl.into_report();
+        assert_eq!(report.batch.arrivals, 5);
+        assert_eq!(report.batch.deferrals, 2);
+        assert_eq!(report.batch.shed, 3);
+        assert_eq!(report.batch.deferred_unfinished, 2);
+        assert_eq!(
+            report.batch.admitted + report.batch.shed + report.batch.deferred_unfinished,
+            report.batch.arrivals
+        );
+    }
+
+    #[test]
+    fn controller_releases_in_order_when_pressure_drops() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let spec = BenchmarkApp::MM.spec();
+        let est = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&spec));
+        let mut ctrl = AdmissionController::new(Box::new(SloGuard::new(0.5 * est, 8)));
+        ctrl.push_deferred(KernelInstance::new(1, spec.clone(), 0.0));
+        ctrl.push_deferred(KernelInstance::new(2, spec.clone(), 0.0));
+        // Pressure still high: nothing released.
+        let busy: Vec<KernelInstance> =
+            (10..13).map(|i| KernelInstance::new(i, spec.clone(), 0.0)).collect();
+        let busy_refs: Vec<&KernelInstance> = busy.iter().collect();
+        assert!(ctrl.try_release(&ctx_over(&coord, &busy_refs, 1.0)).is_none());
+        // Idle: released head-of-line.
+        let idle = ctx_over(&coord, &[], 1.0);
+        assert_eq!(ctrl.try_release(&idle).map(|k| k.id), Some(1));
+        assert_eq!(ctrl.try_release(&idle).map(|k| k.id), Some(2));
+        assert!(ctrl.try_release(&idle).is_none());
+        // ...and never before the kernel's own arrival time.
+        ctrl.push_deferred(KernelInstance::new(3, spec.clone(), 9.0));
+        assert!(ctrl.try_release(&ctx_over(&coord, &[], 5.0)).is_none());
+        assert_eq!(ctrl.try_release(&ctx_over(&coord, &[], 9.5)).map(|k| k.id), Some(3));
+        let report = ctrl.into_report();
+        assert_eq!(report.batch.admitted, 3);
+        assert_eq!(report.batch.deferred_unfinished, 0);
+    }
+
+    #[test]
+    fn spec_round_trips_names() {
+        for name in AdmissionSpec::NAMES {
+            let spec = AdmissionSpec::from_name(name, 16, 0.5).unwrap();
+            assert_eq!(spec.name(), name);
+            assert_eq!(spec.build().name(), name);
+        }
+        assert!(AdmissionSpec::from_name("vip", 16, 0.5).is_none());
+    }
+
+    #[test]
+    fn class_admission_merge_adds_fields() {
+        let a = ClassAdmission {
+            arrivals: 5,
+            admitted: 3,
+            shed: 1,
+            deferrals: 2,
+            deferred_unfinished: 1,
+        };
+        let b = ClassAdmission::all_admitted(4);
+        let m = a.merge(&b);
+        assert_eq!(m.arrivals, 9);
+        assert_eq!(m.admitted, 7);
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.deferred_unfinished, 1);
+        let r1 = AdmissionReport { policy: "none", latency: a, batch: b };
+        let r2 = AdmissionReport { policy: "sloguard", latency: b, batch: a };
+        assert_eq!(r1.merge(&r2).policy, "sloguard");
+        assert_eq!(r1.merge(&r2).total_arrivals(), r1.total_arrivals() + r2.total_arrivals());
+    }
+}

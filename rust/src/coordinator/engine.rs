@@ -34,7 +34,12 @@
 //! [`Engine::run_until`] / [`Engine::drain`] / [`Engine::step`]) so
 //! drivers can interleave admission with execution — the multi-GPU
 //! dispatcher routes arrivals *online* by consulting live engine load
-//! between steps. [`Engine::run`] is the one-shot convenience that
+//! between steps. Under overload an admission gate
+//! ([`Engine::with_admission`], [`super::admission`]) sits in front of
+//! the pending set: every [`Engine::offer`] is admitted, deferred or
+//! shed, deferred work re-enters as pressure drops, and the report
+//! carries the per-class accounting plus goodput
+//! (completed-within-deadline throughput). [`Engine::run`] is the one-shot convenience that
 //! replays a whole [`Stream`]; [`Engine::run_source`] pulls arrivals
 //! from a streaming [`ArrivalSource`] instead (bursty, diurnal,
 //! heavy-tailed, closed-loop, trace-replay scenarios), feeding
@@ -45,6 +50,9 @@
 
 use std::collections::HashMap;
 
+use super::admission::{
+    AdmissionController, AdmissionDecision, AdmissionPolicy, AdmissionReport, ClassAdmission,
+};
 use super::greedy::{CoSchedule, Coordinator};
 use super::simcache::SimCache;
 use crate::kernel::{KernelInstance, KernelSpec, Qos, ServiceClass};
@@ -413,6 +421,19 @@ pub struct ExecutionReport {
     pub slice_trace: Vec<SliceRecord>,
     /// Per-service-class turnaround percentiles and deadline misses.
     pub qos: QosReport,
+    /// Admission outcome: per-class arrivals/admitted/shed/deferred
+    /// counts. Without a controller this reflects "everything offered
+    /// was admitted" (policy `"none"`), so the partition invariant
+    /// `completed + shed + deferred_unfinished + incomplete == arrivals`
+    /// holds for every run.
+    pub admission: AdmissionReport,
+    /// Completions that met their deadline (kernels without a deadline
+    /// always do) — the goodput numerator.
+    pub completed_in_deadline: usize,
+    /// Goodput: completed-within-deadline kernels per second of
+    /// makespan. Equals `throughput_kps` when nothing carries a
+    /// deadline or nothing misses.
+    pub goodput_kps: f64,
 }
 
 impl ExecutionReport {
@@ -465,6 +486,12 @@ pub struct Engine<'a> {
     /// and the multi-GPU dispatcher drain this to feed closed-loop
     /// sources.
     completed_log: Vec<(u64, f64)>,
+    /// Admission gate ([`Engine::with_admission`]): every
+    /// [`Engine::offer`] consults it, and deferred kernels are released
+    /// back into the pending set before each dispatch decision. `None`
+    /// (the default) admits everything — bit-identical to the
+    /// pre-admission engine.
+    admission: Option<AdmissionController>,
 }
 
 impl<'a> Engine<'a> {
@@ -491,12 +518,21 @@ impl<'a> Engine<'a> {
             queue_depth: Vec::new(),
             submitted: Vec::new(),
             completed_log: Vec::new(),
+            admission: None,
         }
     }
 
     /// Swap the timing backend (e.g. `runtime::PjrtBackend`).
     pub fn with_timing(mut self, timing: &'a dyn TimingBackend) -> Self {
         self.timing = timing;
+        self
+    }
+
+    /// Install an admission policy: every [`Engine::offer`] passes
+    /// through it before the pending set, and deferred kernels are
+    /// re-admitted as pressure drops.
+    pub fn with_admission(mut self, policy: Box<dyn AdmissionPolicy>) -> Self {
+        self.admission = Some(AdmissionController::new(policy));
         self
     }
 
@@ -538,6 +574,74 @@ impl<'a> Engine<'a> {
         self.queue.push(k);
     }
 
+    /// Offer an arrival to the admission gate: admitted kernels enter
+    /// the pending set ([`Engine::submit`]), deferred ones park in the
+    /// controller's queue, shed ones are dropped (all accounted per
+    /// class in [`ExecutionReport::admission`]). Without a controller
+    /// this *is* `submit` — the pre-admission behavior.
+    pub fn offer(&mut self, k: KernelInstance) -> AdmissionDecision {
+        if self.admission.is_none() {
+            self.submit(k);
+            return AdmissionDecision::Admit;
+        }
+        // Deferred work gets first claim on any capacity that freed up
+        // since the last decision (FIFO fairness across the gate).
+        self.pump_admission();
+        let mut ctrl = self.admission.take().expect("controller checked above");
+        let decision = {
+            let refs: Vec<&KernelInstance> = self.queue.iter().collect();
+            let ctx = SchedCtx {
+                coord: self.coord,
+                pending: &refs,
+                // The decision happens at the arrival instant, even if
+                // the device clock still lags it (idle device).
+                now_secs: self.secs(self.clock_cycles).max(k.arrival_time),
+                more_arrivals: true,
+            };
+            ctrl.decide(&ctx, &k)
+        };
+        match decision {
+            AdmissionDecision::Admit => self.submit(k),
+            AdmissionDecision::Defer => ctrl.push_deferred(k),
+            AdmissionDecision::Shed => {}
+        }
+        self.admission = Some(ctrl);
+        decision
+    }
+
+    /// Release deferred kernels back into the pending set while the
+    /// admission policy agrees pressure has dropped (no-op without a
+    /// controller, or with nothing deferred).
+    fn pump_admission(&mut self) {
+        // Fast path: nothing deferred (always true for AdmitAll and
+        // BacklogCap) — skip the per-dispatch context allocation. With
+        // kernels deferred the release check is O(pending), which the
+        // gate itself keeps small (SloGuard defers precisely to bound
+        // the backlog) and which dispatch already pays per decision.
+        match &self.admission {
+            Some(ctrl) if ctrl.deferred_len() > 0 => {}
+            _ => return,
+        }
+        let Some(mut ctrl) = self.admission.take() else { return };
+        loop {
+            let released = {
+                let refs: Vec<&KernelInstance> = self.queue.iter().collect();
+                let ctx = SchedCtx {
+                    coord: self.coord,
+                    pending: &refs,
+                    now_secs: self.secs(self.clock_cycles),
+                    more_arrivals: true,
+                };
+                ctrl.try_release(&ctx)
+            };
+            match released {
+                Some(k) => self.submit(k),
+                None => break,
+            }
+        }
+        self.admission = Some(ctrl);
+    }
+
     /// Completions so far, in completion order. Callers that feed a
     /// closed-loop source keep a cursor into this log.
     pub fn completion_log(&self) -> &[(u64, f64)] {
@@ -554,6 +658,7 @@ impl<'a> Engine<'a> {
         next_arrival: Option<f64>,
         more_arrivals: bool,
     ) -> bool {
+        self.pump_admission();
         if self.queue.is_empty() {
             return false;
         }
@@ -565,27 +670,36 @@ impl<'a> Engine<'a> {
     /// the queue drains. `more_arrivals` tells solo dispatch whether
     /// chunking can still buy a future co-scheduling opportunity.
     pub fn run_until(&mut self, selector: &mut dyn Selector, t_secs: f64, more_arrivals: bool) {
-        while !self.queue.is_empty() && self.secs(self.clock_cycles) < t_secs {
+        loop {
+            self.pump_admission();
+            if self.queue.is_empty() || self.secs(self.clock_cycles) >= t_secs {
+                break;
+            }
             self.dispatch_once(&mut *selector, Some(t_secs), more_arrivals);
         }
     }
 
-    /// Dispatch until the queue is empty (no further arrivals).
+    /// Dispatch until the queue is empty (no further arrivals) and
+    /// nothing deferred can be released.
     pub fn drain(&mut self, selector: &mut dyn Selector) {
-        while !self.queue.is_empty() {
+        loop {
+            self.pump_admission();
+            if self.queue.is_empty() {
+                break;
+            }
             self.dispatch_once(&mut *selector, None, false);
         }
     }
 
-    /// Replay a whole stream: admit each arrival at its time, then
+    /// Replay a whole stream: offer each arrival at its time, then
     /// drain. Consumes the engine; one engine per run.
     pub fn run(mut self, selector: &mut dyn Selector, stream: &Stream) -> ExecutionReport {
         for k in stream.arrivals() {
             self.run_until(&mut *selector, k.arrival_time, true);
-            self.submit(k);
+            self.offer(k);
         }
         self.drain(&mut *selector);
-        self.finish(stream)
+        self.finish_online()
     }
 
     /// Stream arrivals from an online [`ArrivalSource`]: the engine
@@ -606,10 +720,12 @@ impl<'a> Engine<'a> {
         let mut fed = 0usize;
         'outer: loop {
             self.feed_completions(source, &mut fed);
+            self.pump_admission();
             let Some(t) = source.peek_time() else {
                 if self.queue.is_empty() {
-                    // All completions are delivered and the device is
-                    // idle: by the trait contract the source is done.
+                    // All completions are delivered, the device is idle
+                    // and nothing deferred is releasable: by the trait
+                    // contract the source is done.
                     break;
                 }
                 self.dispatch_once(&mut *selector, None, source.more_expected());
@@ -618,6 +734,7 @@ impl<'a> Engine<'a> {
             while !self.queue.is_empty() && self.secs(self.clock_cycles) < t {
                 self.dispatch_once(&mut *selector, Some(t), true);
                 self.feed_completions(source, &mut fed);
+                self.pump_admission();
                 match source.peek_time() {
                     Some(t2) if t2 >= t => {}
                     // An earlier arrival was injected (or the source
@@ -626,7 +743,7 @@ impl<'a> Engine<'a> {
                 }
             }
             let k = source.next_arrival().expect("peeked arrival disappeared");
-            self.submit(k);
+            self.offer(k);
         }
         self.finish_online()
     }
@@ -640,7 +757,10 @@ impl<'a> Engine<'a> {
     }
 
     /// Close out the run and produce the report (turnaround is computed
-    /// against the stream's arrival times).
+    /// against the stream's arrival times). For stepping runs without
+    /// an admission gate — a gated engine should close with
+    /// [`Engine::finish_online`], which accounts against what was
+    /// actually admitted.
     pub fn finish(self, stream: &Stream) -> ExecutionReport {
         let arrivals: Vec<(u64, f64, Qos)> =
             stream.instances.iter().map(|k| (k.id, k.arrival_time, k.qos)).collect();
@@ -655,20 +775,23 @@ impl<'a> Engine<'a> {
         self.finish_with(&arrivals)
     }
 
-    fn finish_with(self, arrivals: &[(u64, f64, Qos)]) -> ExecutionReport {
+    fn finish_with(mut self, arrivals: &[(u64, f64, Qos)]) -> ExecutionReport {
         let total_secs = self.secs(self.clock_cycles);
         let mut turn = 0.0;
         let mut completed_of_stream = 0usize;
+        let mut completed_in_deadline = 0usize;
         // Per-class accumulators (turnarounds, deadline counts).
         let mut turns = [Vec::new(), Vec::new()];
         let mut with_deadline = [0usize; 2];
         let mut misses = [0usize; 2];
+        let mut submitted_of_class = [0usize; 2];
         let class_idx = |c: ServiceClass| match c {
             ServiceClass::Latency => 0usize,
             ServiceClass::Batch => 1,
         };
         for &(id, arrival_time, qos) in arrivals {
             let c = class_idx(qos.class);
+            submitted_of_class[c] += 1;
             if qos.deadline.is_some() {
                 with_deadline[c] += 1;
             }
@@ -680,6 +803,10 @@ impl<'a> Engine<'a> {
                     turns[c].push(t);
                     if qos.deadline.map_or(false, |d| done > d) {
                         misses[c] += 1;
+                    } else {
+                        // Met its deadline — or never carried one; both
+                        // count toward goodput.
+                        completed_in_deadline += 1;
                     }
                 }
                 None => {
@@ -695,8 +822,30 @@ impl<'a> Engine<'a> {
             latency: ClassStats::from_parts(lat_turns, with_deadline[0], misses[0]),
             batch: ClassStats::from_parts(batch_turns, with_deadline[1], misses[1]),
         };
+        // Admission accounting: the controller's counters when a gate
+        // was installed (shed/deferred work never reaches `arrivals`),
+        // else "everything offered was admitted".
+        let admission = match self.admission.take() {
+            Some(ctrl) => {
+                let report = ctrl.into_report();
+                debug_assert_eq!(
+                    report.latency.admitted + report.batch.admitted,
+                    arrivals.len(),
+                    "controller admitted-count disagrees with the engine's submissions"
+                );
+                report
+            }
+            None => AdmissionReport {
+                policy: "none",
+                latency: ClassAdmission::all_admitted(submitted_of_class[0]),
+                batch: ClassAdmission::all_admitted(submitted_of_class[1]),
+            },
+        };
         ExecutionReport {
             qos,
+            admission,
+            completed_in_deadline,
+            goodput_kps: completed_in_deadline as f64 / total_secs.max(1e-12),
             total_cycles: self.clock_cycles,
             total_secs,
             kernels_completed: self.completion.len(),

@@ -5,7 +5,10 @@
 //! Architecture — one event-driven loop, two plug-in axes:
 //!
 //! ```text
-//!   arrivals ──► Engine (clock, pending queue, slice dispatch,
+//!   arrivals ──► AdmissionPolicy (admit / defer / shed per class)
+//!               │   AdmitAll · BacklogCap · SloGuard
+//!               ▼
+//!               Engine (clock, pending queue, slice dispatch,
 //!               │        completion bookkeeping, trace observer)
 //!               ├─ Selector (sees one SchedCtx) .. which work runs next
 //!               │    KerneletSelector   model-driven greedy (Alg. 1)
@@ -23,6 +26,7 @@
 //! one engine per device and routes arrivals online off live engine
 //! load. There is no other clock-advancing dispatch loop in the crate.
 
+pub mod admission;
 pub mod baselines;
 pub mod deadline;
 pub mod engine;
@@ -32,6 +36,10 @@ pub mod multigpu;
 pub mod pruning;
 pub mod simcache;
 
+pub use admission::{
+    AdmissionController, AdmissionDecision, AdmissionPolicy, AdmissionReport, AdmissionSpec,
+    AdmitAll, BacklogCap, ClassAdmission, SloGuard,
+};
 pub use baselines::{run_base, run_monte_carlo, run_opt, OptSelector, RandomSelector};
 pub use deadline::DeadlineSelector;
 pub use engine::{
@@ -40,7 +48,7 @@ pub use engine::{
 };
 pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};
-pub use multigpu::{DispatchPolicy, MultiGpuDispatcher, MultiGpuReport};
+pub use multigpu::{DispatchPolicy, MultiGpuDispatcher, MultiGpuReport, ShedPoint};
 pub use pruning::{prune_pairs, PruneParams};
 pub use simcache::SimCache;
 

@@ -27,9 +27,17 @@
 //!   next latency arrival will need. Devices under this policy also
 //!   schedule with the deadline-aware selector instead of plain
 //!   Kernelet.
+//!
+//! Routing composes with admission control
+//! ([`MultiGpuDispatcher::with_admission`]): a fleet can shed at the
+//! router (one controller in front of routing, [`ShedPoint::Router`])
+//! or at each device ([`ShedPoint::Device`]); either way the fleet
+//! report carries the merged per-class shed/deferred accounting and
+//! goodput.
 
+use super::admission::{AdmissionController, AdmissionDecision, AdmissionReport, AdmissionSpec};
 use super::deadline::DeadlineSelector;
-use super::engine::{Engine, ExecutionReport, KerneletSelector, QosReport, Selector};
+use super::engine::{Engine, ExecutionReport, KerneletSelector, QosReport, SchedCtx, Selector};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
 use crate::kernel::{KernelInstance, ServiceClass};
@@ -45,6 +53,21 @@ pub enum DispatchPolicy {
     SloAware,
 }
 
+/// Where the admission gate sits in a multi-GPU deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPoint {
+    /// One fleet-wide controller in front of routing: each arrival is
+    /// routed, then judged against its destination device's live
+    /// state; shed work never reaches any device and deferred work
+    /// waits at the router, re-admitted to the least-loaded device
+    /// when its pressure drops.
+    Router,
+    /// One controller per device engine: routing is unchanged and each
+    /// destination admits/defers/sheds locally (deferred work stays
+    /// device-local).
+    Device,
+}
+
 /// Result of a multi-GPU run.
 #[derive(Debug, Clone)]
 pub struct MultiGpuReport {
@@ -54,8 +77,16 @@ pub struct MultiGpuReport {
     pub per_device: Vec<(String, usize, f64)>,
     /// Aggregate throughput over the makespan.
     pub throughput_kps: f64,
+    /// Fleet goodput: completed-within-deadline kernels over the
+    /// makespan.
+    pub goodput_kps: f64,
+    /// Fleet-wide admission accounting: the router controller's counts
+    /// under [`ShedPoint::Router`], the per-device controllers merged
+    /// under [`ShedPoint::Device`], all-admitted otherwise.
+    pub admission: AdmissionReport,
     /// Full per-device engine reports (slice traces, queue depth,
-    /// utilization, per-class QoS), aligned with `per_device`.
+    /// utilization, per-class QoS + admission), aligned with
+    /// `per_device`.
     pub reports: Vec<ExecutionReport>,
 }
 
@@ -73,6 +104,7 @@ impl MultiGpuReport {
 pub struct MultiGpuDispatcher {
     devices: Vec<Coordinator>,
     policy: DispatchPolicy,
+    admission: Option<(AdmissionSpec, ShedPoint)>,
 }
 
 /// Per-run routing counters: the global arrival index (round-robin's
@@ -86,11 +118,41 @@ struct RouteCounters {
 impl MultiGpuDispatcher {
     pub fn new(gpus: &[GpuConfig], policy: DispatchPolicy) -> Self {
         assert!(!gpus.is_empty(), "need at least one device");
-        Self { devices: gpus.iter().map(Coordinator::new).collect(), policy }
+        Self { devices: gpus.iter().map(Coordinator::new).collect(), policy, admission: None }
+    }
+
+    /// Gate arrivals through an admission policy, shed either at the
+    /// router (one fleet-wide controller) or at each device.
+    pub fn with_admission(mut self, spec: AdmissionSpec, point: ShedPoint) -> Self {
+        self.admission = Some((spec, point));
+        self
     }
 
     pub fn device_count(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Fresh per-device engines, with device-local admission gates
+    /// installed under [`ShedPoint::Device`].
+    fn make_engines(&self) -> Vec<Engine<'_>> {
+        self.devices
+            .iter()
+            .map(|coord| {
+                let engine = Engine::new(coord);
+                match &self.admission {
+                    Some((spec, ShedPoint::Device)) => engine.with_admission(spec.build()),
+                    _ => engine,
+                }
+            })
+            .collect()
+    }
+
+    /// Fresh router-level controller under [`ShedPoint::Router`].
+    fn make_router(&self) -> Option<AdmissionController> {
+        match &self.admission {
+            Some((spec, ShedPoint::Router)) => Some(AdmissionController::new(spec.build())),
+            _ => None,
+        }
     }
 
     /// Estimated cost (seconds) of one kernel instance on device `d`
@@ -176,32 +238,146 @@ impl MultiGpuDispatcher {
         d
     }
 
+    /// Route one arrival through the admission gate. Under
+    /// [`ShedPoint::Router`] the fleet controller judges the arrival
+    /// against its destination device; otherwise the destination
+    /// engine's [`Engine::offer`] decides (a no-op gate without
+    /// admission). `routed[d]` counts the kernels device `d` was
+    /// handed (including device-local sheds; router sheds reach no
+    /// device).
+    fn admit_route(
+        &self,
+        engines: &mut [Engine<'_>],
+        counters: &mut RouteCounters,
+        router: &mut Option<AdmissionController>,
+        routed: &mut [usize],
+        k: KernelInstance,
+    ) {
+        let d = self.route(&*engines, counters, &k);
+        match router {
+            Some(ctrl) => {
+                let decision = {
+                    let pending = engines[d].pending();
+                    let refs: Vec<&KernelInstance> = pending.iter().collect();
+                    let ctx = SchedCtx {
+                        coord: &self.devices[d],
+                        pending: &refs,
+                        now_secs: engines[d].clock_secs().max(k.arrival_time),
+                        more_arrivals: true,
+                    };
+                    ctrl.decide(&ctx, &k)
+                };
+                match decision {
+                    AdmissionDecision::Admit => {
+                        routed[d] += 1;
+                        engines[d].submit(k);
+                    }
+                    AdmissionDecision::Defer => ctrl.push_deferred(k),
+                    AdmissionDecision::Shed => {}
+                }
+            }
+            None => {
+                routed[d] += 1;
+                engines[d].offer(k);
+            }
+        }
+    }
+
+    /// Release router-deferred kernels while pressure allows, each to
+    /// the least-loaded device (the device whose state gates its
+    /// release). Returns how many were re-admitted.
+    fn pump_router(
+        &self,
+        engines: &mut [Engine<'_>],
+        router: &mut Option<AdmissionController>,
+        routed: &mut [usize],
+    ) -> usize {
+        let Some(ctrl) = router else { return 0 };
+        let mut released = 0usize;
+        loop {
+            let Some(head) = ctrl.peek_deferred() else { break };
+            let d = self.least_loaded(&*engines, head);
+            let got = {
+                let pending = engines[d].pending();
+                let refs: Vec<&KernelInstance> = pending.iter().collect();
+                let ctx = SchedCtx {
+                    coord: &self.devices[d],
+                    pending: &refs,
+                    now_secs: engines[d].clock_secs().max(head.arrival_time),
+                    more_arrivals: true,
+                };
+                ctrl.try_release(&ctx)
+            };
+            match got {
+                Some(k) => {
+                    routed[d] += 1;
+                    engines[d].submit(k);
+                    released += 1;
+                }
+                None => break,
+            }
+        }
+        released
+    }
+
     /// Close out all engines into the fleet report. `routed[d]` is how
-    /// many kernels device `d` was handed; `total` the fleet-wide count.
+    /// many kernels device `d` was handed; `total` the fleet-wide
+    /// arrival count (including shed/deferred work that never reached
+    /// a device).
     fn assemble(
         &self,
         engines: Vec<Engine<'_>>,
         routed: Vec<usize>,
         total: usize,
+        router: Option<AdmissionController>,
     ) -> MultiGpuReport {
         let mut per_device = Vec::new();
         let mut reports = Vec::new();
         let mut makespan = 0.0f64;
         let mut completed = 0usize;
+        let mut in_deadline = 0usize;
+        let mut admission = match router {
+            Some(ctrl) => ctrl.into_report(),
+            None => AdmissionReport::default(),
+        };
+        let router_arrivals = admission.total_arrivals();
         for ((engine, coord), count) in engines.into_iter().zip(&self.devices).zip(routed) {
             let rep = engine.finish_online();
-            assert_eq!(rep.kernels_completed, count, "{} lost kernels", coord.gpu.name);
+            let handed = rep.admission.total_arrivals();
+            assert_eq!(handed, count, "{} lost kernels", coord.gpu.name);
+            // Every kernel a device admitted runs to completion (the
+            // engines drain); the rest is accounted shed/deferred.
+            assert_eq!(
+                rep.kernels_completed + rep.admission.total_shed()
+                    + rep.admission.total_deferred_unfinished(),
+                count,
+                "{} kernels unaccounted",
+                coord.gpu.name
+            );
             completed += rep.kernels_completed;
+            in_deadline += rep.completed_in_deadline;
             if count > 0 {
                 makespan = makespan.max(rep.total_secs);
+            }
+            if router_arrivals == 0 {
+                // No fleet gate: the fleet accounting is the merge of
+                // the per-device reports (all-admitted without any
+                // admission configured).
+                admission = admission.merge(&rep.admission);
             }
             per_device.push((coord.gpu.name.to_string(), count, rep.total_secs));
             reports.push(rep);
         }
-        assert_eq!(completed, total, "dispatcher lost kernels");
+        assert_eq!(
+            completed + admission.total_shed() + admission.total_deferred_unfinished(),
+            total,
+            "dispatcher lost kernels"
+        );
         MultiGpuReport {
             makespan_secs: makespan,
             throughput_kps: completed as f64 / makespan.max(1e-12),
+            goodput_kps: in_deadline as f64 / makespan.max(1e-12),
+            admission,
             per_device,
             reports,
         }
@@ -211,8 +387,9 @@ impl MultiGpuDispatcher {
     /// queue with the Kernelet policy through its own engine.
     pub fn run(&self, stream: &Stream) -> MultiGpuReport {
         let n = self.devices.len();
-        let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
+        let mut engines = self.make_engines();
         let mut selectors = self.make_selectors();
+        let mut router = self.make_router();
         let mut routed = vec![0usize; n];
         let mut counters = RouteCounters::default();
 
@@ -222,14 +399,21 @@ impl MultiGpuDispatcher {
             for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
                 engine.run_until(sel.as_mut(), k.arrival_time, true);
             }
-            let d = self.route(&engines, &mut counters, k);
-            routed[d] += 1;
-            engines[d].submit(k.clone());
+            self.pump_router(&mut engines, &mut router, &mut routed);
+            self.admit_route(&mut engines, &mut counters, &mut router, &mut routed, k.clone());
         }
-        for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
-            engine.drain(sel.as_mut());
+        // Drain, releasing deferred work as the backlog empties, until
+        // the fleet settles (engines re-check their own gates inside
+        // drain; the router gate is pumped between rounds).
+        loop {
+            for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
+                engine.drain(sel.as_mut());
+            }
+            if self.pump_router(&mut engines, &mut router, &mut routed) == 0 {
+                break;
+            }
         }
-        self.assemble(engines, routed, stream.len())
+        self.assemble(engines, routed, stream.len(), router)
     }
 
     /// Route a streaming [`ArrivalSource`] online: same routing
@@ -241,8 +425,9 @@ impl MultiGpuDispatcher {
     /// tight.
     pub fn run_source(&self, source: &mut dyn ArrivalSource) -> MultiGpuReport {
         let n = self.devices.len();
-        let mut engines: Vec<Engine<'_>> = self.devices.iter().map(Engine::new).collect();
+        let mut engines = self.make_engines();
         let mut selectors = self.make_selectors();
+        let mut router = self.make_router();
         let mut routed = vec![0usize; n];
         let mut fed = vec![0usize; n];
         let mut counters = RouteCounters::default();
@@ -260,6 +445,7 @@ impl MultiGpuDispatcher {
 
         'outer: loop {
             feed(&engines, &mut fed, source);
+            self.pump_router(&mut engines, &mut router, &mut routed);
             match source.peek_time() {
                 Some(t) => {
                     // Advance devices toward the arrival one decision
@@ -290,22 +476,30 @@ impl MultiGpuDispatcher {
                         }
                     }
                     let k = source.next_arrival().expect("peeked arrival disappeared");
-                    let d = self.route(&engines, &mut counters, &k);
-                    routed[d] += 1;
-                    engines[d].submit(k);
+                    // Deferred work gets first claim on capacity freed
+                    // while the devices advanced (same FIFO contract as
+                    // run() and the engine-level gate).
+                    self.pump_router(&mut engines, &mut router, &mut routed);
+                    self.admit_route(&mut engines, &mut counters, &mut router, &mut routed, k);
                 }
                 None => {
-                    if engines.iter().all(|e| e.pending().is_empty()) {
-                        break;
-                    }
+                    // Step every engine (each pumps its own gate); stop
+                    // only when no device advanced and nothing deferred
+                    // was released — the fleet has settled.
                     let more = source.more_expected();
+                    let mut advanced = false;
                     for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
-                        engine.step(sel.as_mut(), None, more);
+                        advanced |= engine.step(sel.as_mut(), None, more);
+                    }
+                    if !advanced
+                        && self.pump_router(&mut engines, &mut router, &mut routed) == 0
+                    {
+                        break;
                     }
                 }
             }
         }
-        self.assemble(engines, routed, counters.arrivals)
+        self.assemble(engines, routed, counters.arrivals, router)
     }
 }
 
@@ -426,6 +620,46 @@ mod tests {
             .collect();
         pooled.sort_by(|a, b| a.total_cmp(b));
         assert_eq!(fleet.latency.turnarounds, pooled);
+    }
+
+    #[test]
+    fn fleet_admission_conserves_at_router_and_device() {
+        use crate::workload::{PoissonSource, QosMix};
+
+        let gpus = [GpuConfig::c2050(), GpuConfig::c2050()];
+        // A tight class-blind cap under a near-simultaneous burst must
+        // shed at either gate point, and the per-class accounting must
+        // partition the arrivals exactly.
+        let spec = AdmissionSpec::BacklogCap { cap: 2 };
+        for point in [ShedPoint::Router, ShedPoint::Device] {
+            let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::LeastLoaded)
+                .with_admission(spec, point);
+            let mut src = PoissonSource::new(Mix::MIX, 8, 5000.0, 7)
+                .with_qos(QosMix::latency_share(0.25, 0.01));
+            let rep = d.run_source(&mut src);
+            let a = &rep.admission;
+            assert_eq!(a.policy, "backlogcap", "{point:?}");
+            assert_eq!(a.total_arrivals(), 32, "{point:?}");
+            let completed: usize = rep.reports.iter().map(|r| r.kernels_completed).sum();
+            assert_eq!(
+                completed + a.total_shed() + a.total_deferred_unfinished(),
+                32,
+                "{point:?}"
+            );
+            assert!(a.total_shed() > 0, "{point:?}: burst over a cap of 2 must shed");
+            assert!(rep.goodput_kps > 0.0, "{point:?}");
+            assert!(rep.goodput_kps <= rep.throughput_kps + 1e-9, "{point:?}");
+        }
+        // AdmitAll at the router is identical to no admission at all.
+        let plain = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin);
+        let gated = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin)
+            .with_admission(AdmissionSpec::AdmitAll, ShedPoint::Router);
+        let stream = Stream::poisson(Mix::MIX, 3, 400.0, 77);
+        let a = plain.run(&stream);
+        let b = gated.run(&stream);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.per_device, b.per_device);
+        assert_eq!(b.admission.total_shed(), 0);
     }
 
     #[test]

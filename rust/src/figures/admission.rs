@@ -1,0 +1,247 @@
+//! Admission-control sweep (repo-native): goodput and per-class tail
+//! latency vs offered load, with and without load shedding — the
+//! overload story `saturation` (throughput) and `qos` (tails under one
+//! open door) cannot tell.
+//!
+//! The sweep crosses arrival scenario × offered load × admission
+//! policy on one C2050 under a latency/batch mix, scheduling with the
+//! class-blind Kernelet selector so the measured effect is the
+//! admission gate's alone. Latency-class arrivals carry deadlines at
+//! `deadline_scale ×` the mix's mean whole-kernel service time; the
+//! [`SloGuard`](crate::coordinator::SloGuard) slack budget is
+//! [`DEFAULT_SLACK_FRACTION`](crate::coordinator::admission::DEFAULT_SLACK_FRACTION)
+//! of that window. Under bursty overload the guard must beat the open
+//! door on latency-class p99 and deadline misses while shedding only
+//! batch work — the acceptance bar `benches/admission.rs` records into
+//! `BENCH_admission.json` and `scripts/check_bench.py` gates.
+
+use super::report::{f, Report};
+use super::throughput::base_capacity_kps;
+use crate::config::GpuConfig;
+use crate::coordinator::admission::DEFAULT_SLACK_FRACTION;
+use crate::coordinator::{
+    AdmissionSpec, ClassAdmission, ClassStats, Coordinator, Engine, KerneletSelector,
+};
+use crate::stats::split_seed;
+use crate::workload::{scenario_source, Mix, QosMix};
+
+/// Admission policies the sweep compares.
+pub const ADMISSION_POLICIES: [&str; 3] = ["admitall", "backlogcap", "sloguard"];
+
+/// Scenarios the sweep crosses (bursty overload is the headline).
+pub const ADMISSION_SCENARIOS: [&str; 2] = ["poisson", "bursty"];
+
+/// Offered-load factors: under, around and well past capacity.
+pub const ADMISSION_LOADS: [f64; 3] = [0.5, 1.5, 3.0];
+
+/// Default latency-class share of arrivals.
+pub const DEFAULT_LATENCY_FRACTION: f64 = 0.25;
+
+/// Default deadline scale (× mean whole-kernel service time).
+pub const DEFAULT_DEADLINE_SCALE: f64 = 4.0;
+
+/// Pending-set cap for the `backlogcap` policy in this sweep (tighter
+/// than the CLI default so the cap actually engages at bench scale).
+pub const DEFAULT_BACKLOG_CAP: usize = 16;
+
+/// Per-class outcome of one sweep cell: scheduling stats plus the
+/// admission accounting, with the partition invariant
+/// `completed + shed + deferred_unfinished + incomplete == arrivals`.
+#[derive(Debug, Clone)]
+pub struct ClassOutcome {
+    pub stats: ClassStats,
+    pub admission: ClassAdmission,
+}
+
+impl ClassOutcome {
+    /// Admitted kernels that never finished (0 whenever the engine
+    /// drains, which every open-loop sweep run does).
+    pub fn incomplete(&self) -> usize {
+        self.admission.admitted - self.stats.completed
+    }
+}
+
+/// One (scenario, load, admission policy) measurement.
+#[derive(Debug, Clone)]
+pub struct AdmissionPoint {
+    pub scenario: &'static str,
+    pub policy: &'static str,
+    pub load: f64,
+    pub offered_kps: f64,
+    /// Arrivals that reached the gate (both classes).
+    pub arrivals: usize,
+    /// Kernels completed.
+    pub kernels: usize,
+    pub throughput_kps: f64,
+    /// Completed-within-deadline throughput.
+    pub goodput_kps: f64,
+    pub latency: ClassOutcome,
+    pub batch: ClassOutcome,
+}
+
+/// Run the scenario × load × admission-policy cross on one C2050.
+/// Every policy of a cell sees the identical annotated arrival
+/// sequence (same derived seed; open-loop scenarios only). Returns the
+/// points plus the BASE capacity loads and deadlines were scaled by.
+pub fn admission_sweep(
+    opts: &super::FigOptions,
+    loads: &[f64],
+    scenarios: &[&'static str],
+    latency_fraction: f64,
+    deadline_scale: f64,
+) -> (Vec<AdmissionPoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let qos = QosMix::latency_share(latency_fraction, deadline_scale / capacity);
+    let per_app = opts.instances_per_app;
+    let mut out = Vec::new();
+    for (si, &scenario) in scenarios.iter().enumerate() {
+        for (li, &load) in loads.iter().enumerate() {
+            let offered = load * capacity;
+            let seed = split_seed(opts.seed ^ 0xAD31, (si * 1000 + li) as u64);
+            for &policy in &ADMISSION_POLICIES {
+                let spec = AdmissionSpec::for_policy(
+                    policy,
+                    capacity,
+                    deadline_scale,
+                    DEFAULT_BACKLOG_CAP,
+                );
+                let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+                    .expect("admission sweep scenario names are valid");
+                let mut sel = KerneletSelector;
+                let rep = Engine::new(&coord)
+                    .with_admission(spec.build())
+                    .run_source(&mut sel, source.as_mut());
+                assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left admitted kernels");
+                let a = rep.admission;
+                out.push(AdmissionPoint {
+                    scenario,
+                    policy,
+                    load,
+                    offered_kps: offered,
+                    arrivals: a.total_arrivals(),
+                    kernels: rep.kernels_completed,
+                    throughput_kps: rep.throughput_kps,
+                    goodput_kps: rep.goodput_kps,
+                    latency: ClassOutcome { stats: rep.qos.latency, admission: a.latency },
+                    batch: ClassOutcome { stats: rep.qos.batch, admission: a.batch },
+                });
+            }
+        }
+    }
+    (out, capacity)
+}
+
+/// The `admission` figure: goodput + per-class p99/misses/shed counts
+/// vs offered load, with and without shedding.
+pub fn admission(opts: &super::FigOptions) -> Report {
+    // Full engine runs per point; cap like `qos` does so `figure all`
+    // stays tractable.
+    let opts =
+        super::FigOptions { instances_per_app: opts.instances_per_app.min(100), ..opts.clone() };
+    let (points, capacity) = admission_sweep(
+        &opts,
+        &ADMISSION_LOADS,
+        &ADMISSION_SCENARIOS,
+        DEFAULT_LATENCY_FRACTION,
+        DEFAULT_DEADLINE_SCALE,
+    );
+    let mut r = Report::new(
+        "admission",
+        "Admission under overload: goodput + per-class tails and shed counts (scenario x load x policy)",
+        &[
+            "scenario", "load", "policy", "class", "arrivals", "done", "shed", "defer_unfin",
+            "p99_s", "miss", "goodput_kps",
+        ],
+    );
+    for p in &points {
+        for (class, c) in [("latency", &p.latency), ("batch", &p.batch)] {
+            r.row(vec![
+                p.scenario.to_string(),
+                f(p.load, 2),
+                p.policy.to_string(),
+                class.to_string(),
+                c.admission.arrivals.to_string(),
+                c.stats.completed.to_string(),
+                c.admission.shed.to_string(),
+                c.admission.deferred_unfinished.to_string(),
+                f(c.stats.p99_turnaround_secs, 4),
+                c.stats.deadline_misses.to_string(),
+                f(p.goodput_kps, 1),
+            ]);
+        }
+    }
+    r.note(format!(
+        "mix {}% latency-class; deadlines = arrival + {:.1}x mean whole-kernel service time \
+         ({:.1} kernels/s BASE capacity on C2050/MIX); selector = class-blind kernelet; \
+         sloguard slack budget = {:.0}% of the deadline window, backlogcap = {} kernels; \
+         instances/app = {}",
+        (DEFAULT_LATENCY_FRACTION * 100.0) as u32,
+        DEFAULT_DEADLINE_SCALE,
+        capacity,
+        DEFAULT_SLACK_FRACTION * 100.0,
+        DEFAULT_BACKLOG_CAP,
+        opts.instances_per_app
+    ));
+    r.note(
+        "goodput = completed-within-deadline kernels/s; per class, \
+         completed + shed + defer_unfin (+ incomplete) partitions arrivals exactly",
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigOptions;
+
+    fn small() -> FigOptions {
+        FigOptions { instances_per_app: 8, mc_samples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_covers_the_cross_and_partitions_every_cell() {
+        let (points, capacity) = admission_sweep(&small(), &[0.5, 3.0], &["bursty"], 0.25, 4.0);
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), 2 * ADMISSION_POLICIES.len());
+        for p in &points {
+            assert_eq!(p.arrivals, 32, "{p:?}");
+            for c in [&p.latency, &p.batch] {
+                assert_eq!(
+                    c.stats.completed
+                        + c.admission.shed
+                        + c.admission.deferred_unfinished
+                        + c.incomplete(),
+                    c.admission.arrivals,
+                    "{p:?}"
+                );
+            }
+            assert!(p.goodput_kps <= p.throughput_kps + 1e-9, "{p:?}");
+            if p.policy == "admitall" {
+                assert_eq!(p.kernels, p.arrivals, "admitall must run everything: {p:?}");
+            }
+            if p.policy == "sloguard" {
+                assert_eq!(p.latency.admission.shed, 0, "sloguard shed latency: {p:?}");
+                assert_eq!(
+                    p.latency.admission.deferred_unfinished, 0,
+                    "sloguard deferred latency: {p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admission_report_shape() {
+        let r = admission(&small());
+        assert_eq!(
+            r.rows.len(),
+            ADMISSION_SCENARIOS.len() * ADMISSION_LOADS.len() * ADMISSION_POLICIES.len() * 2
+        );
+        let class = r.col("class");
+        assert!(r.rows.iter().any(|row| row[class] == "latency"));
+        assert!(r.rows.iter().any(|row| row[class] == "batch"));
+        assert_eq!(r.notes.len(), 2);
+    }
+}

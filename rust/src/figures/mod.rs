@@ -22,9 +22,11 @@
 //! | `fig14`   | CDF of MC(1000) schedule times |
 //!
 //! Repo-native telemetry ids: `qdepth` (pending-queue timeline),
-//! `saturation` (offered-load sweep over the streaming scenarios) and
-//! `qos` (per-class turnaround percentiles + deadline misses).
+//! `saturation` (offered-load sweep over the streaming scenarios),
+//! `qos` (per-class turnaround percentiles + deadline misses) and
+//! `admission` (goodput + tails under load shedding).
 
+pub mod admission;
 pub mod qos;
 pub mod report;
 pub mod scheduling;
@@ -38,10 +40,10 @@ pub use report::Report;
 use anyhow::{bail, Result};
 
 /// All figure/table ids, in paper order, plus repo-native telemetry
-/// reports (`qdepth`, `saturation`, `qos`).
-pub const ALL_IDS: [&str; 16] = [
+/// reports (`qdepth`, `saturation`, `qos`, `admission`).
+pub const ALL_IDS: [&str; 17] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table6", "fig14", "qdepth", "saturation", "qos",
+    "fig13", "table6", "fig14", "qdepth", "saturation", "qos", "admission",
 ];
 
 /// Options shared by the generators.
@@ -88,6 +90,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "qdepth" => scheduling::qdepth(opts),
         "saturation" => throughput::saturation(opts),
         "qos" => qos::qos(opts),
+        "admission" => admission::admission(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

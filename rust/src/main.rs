@@ -9,6 +9,7 @@
 //! kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu ...] [--instances N]
 //!                   [--scenario NAME] [--load X] [--trace FILE]
 //!                   [--qos-mix F] [--deadline-scale S]
+//!                   [--admission POLICY] [--backlog-cap N]
 //! kernelet trace record --scenario NAME [--out FILE]   dump a scenario
 //!                   to the JSON trace format (incl. QoS annotations)
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
@@ -21,11 +22,12 @@ use anyhow::{bail, Context, Result};
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::{run_base, run_opt};
-use kernelet::coordinator::{run_kernelet, Coordinator, Engine};
+use kernelet::coordinator::{run_kernelet, AdmissionSpec, BacklogCap, Coordinator, Engine};
 use kernelet::figures::throughput::{base_capacity_kps, selector_for};
 use kernelet::figures::{self, FigOptions};
 use kernelet::kernel::BenchmarkApp;
 use kernelet::profiler;
+#[cfg(feature = "pjrt")]
 use kernelet::runtime::{ArtifactRegistry, SlicedRunner};
 use kernelet::workload::{ArrivalSource, Mix, QosMix, RecordingSource, Stream};
 
@@ -59,12 +61,13 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|all> [--out DIR] [--quick]
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|all> [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
                     [--scenario saturated|poisson|bursty|diurnal|heavytail|closed|trace]
                     [--load X] [--trace FILE] [--seed N]
                     [--qos-mix F] [--deadline-scale S]
+                    [--admission admitall|backlogcap|sloguard] [--backlog-cap N]
   kernelet trace record --scenario NAME [--mix M] [--gpu G] [--instances N]
                     [--load X] [--qos-mix F] [--deadline-scale S] [--seed N]
                     [--out FILE]
@@ -82,6 +85,12 @@ BASE/Kernelet/OPT comparison runs.
 at `--deadline-scale` (default 4.0) x the mix's mean whole-kernel
 service time, adds the deadline-aware policy to the comparison, and
 reports per-class p99 turnaround + deadline misses.
+
+`--admission` gates every arrival through a load-shedding policy before
+the pending set (admitall = open door; backlogcap = shed once the queue
+reaches --backlog-cap, default 32; sloguard = defer/shed batch kernels
+while projected latency-class slack is at risk) and adds shed/deferred
+counts plus goodput (completed-within-deadline kernels/s) to the table.
 
 `trace record` replays the scenario through the engine and dumps the
 realized arrival sequence (app, t, grid, class, deadline) as a JSON
@@ -175,6 +184,12 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
     if let Some(scenario) = flag_value(args, "--scenario") {
         return cmd_schedule_scenario(args, &gpu, mix, instances, scenario);
     }
+    // The saturated BASE/Kernelet/OPT comparison has no arrival stream
+    // to gate: refuse rather than silently ignore the flag.
+    anyhow::ensure!(
+        flag_value(args, "--admission").is_none(),
+        "--admission needs a streaming workload: add --scenario (e.g. --scenario bursty)"
+    );
     let coord = Coordinator::new(&gpu);
     let stream = Stream::saturated(mix, instances, kernelet::sim::DEFAULT_SEED);
     println!(
@@ -207,16 +222,40 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
 /// Parse the shared QoS flags: `--qos-mix F` (latency fraction,
 /// default 0 = QoS off) and `--deadline-scale S` (relative deadline as
 /// a multiple of the mix's mean whole-kernel service time, default 4).
-fn parse_qos_mix(args: &[String], capacity_kps: f64) -> Result<QosMix> {
+/// Returns the mix plus the parsed scale (the admission gate sizes its
+/// slack budget from it even when QoS stamping is off).
+fn parse_qos_mix(args: &[String], capacity_kps: f64) -> Result<(QosMix, f64)> {
     let fraction: f64 = flag_value(args, "--qos-mix").unwrap_or("0").parse()?;
     anyhow::ensure!((0.0..=1.0).contains(&fraction), "--qos-mix {fraction} out of [0,1]");
     let scale: f64 = flag_value(args, "--deadline-scale").unwrap_or("4.0").parse()?;
     anyhow::ensure!(scale > 0.0, "--deadline-scale {scale} must be positive");
-    Ok(if fraction > 0.0 {
+    let mix = if fraction > 0.0 {
         QosMix::latency_share(fraction, scale / capacity_kps)
     } else {
         QosMix::ALL_BATCH
-    })
+    };
+    Ok((mix, scale))
+}
+
+/// Parse `--admission NAME [--backlog-cap N]` into a policy spec
+/// (`None` when the flag is absent — the ungated legacy path).
+fn parse_admission(
+    args: &[String],
+    capacity_kps: f64,
+    deadline_scale: f64,
+) -> Result<Option<(AdmissionSpec, usize)>> {
+    let Some(name) = flag_value(args, "--admission") else { return Ok(None) };
+    let cap: usize = match flag_value(args, "--backlog-cap") {
+        Some(v) => v.parse()?,
+        None => BacklogCap::DEFAULT_CAP,
+    };
+    anyhow::ensure!(cap >= 1, "--backlog-cap {cap} must be at least 1");
+    anyhow::ensure!(
+        AdmissionSpec::NAMES.contains(&name),
+        "unknown --admission {name} (valid: {})",
+        AdmissionSpec::NAMES.join(" ")
+    );
+    Ok(Some((AdmissionSpec::for_policy(name, capacity_kps, deadline_scale, cap), cap)))
 }
 
 /// `schedule --scenario NAME`: stream arrivals online and compare BASE
@@ -239,7 +278,8 @@ fn cmd_schedule_scenario(
     let coord = Coordinator::new(gpu);
     let capacity = base_capacity_kps(&coord, mix);
     let offered = load * capacity;
-    let qos = parse_qos_mix(args, capacity)?;
+    let (qos, deadline_scale) = parse_qos_mix(args, capacity)?;
+    let admission = parse_admission(args, capacity, deadline_scale)?;
 
     // A replayed trace carries its own annotations: honor them (and the
     // QoS comparison they imply) unless the user explicitly re-stamps
@@ -297,26 +337,55 @@ fn cmd_schedule_scenario(
             );
         }
     }
+    if let Some((spec, cap)) = &admission {
+        match spec {
+            AdmissionSpec::AdmitAll => println!("admission: admitall (open door)"),
+            AdmissionSpec::BacklogCap { .. } => {
+                println!("admission: backlogcap (shed arrivals once {cap} kernels are pending)");
+            }
+            AdmissionSpec::SloGuard { slack_budget_secs, max_deferred } => {
+                println!(
+                    "admission: sloguard (slack budget {slack_budget_secs:.4}s = {:.0}% of the \
+                     deadline window; defer batch past it, shed past {max_deferred} deferred)",
+                    kernelet::coordinator::admission::DEFAULT_SLACK_FRACTION * 100.0
+                );
+                if !qos_on {
+                    eprintln!(
+                        "warning: --admission sloguard with an all-batch workload (no --qos-mix \
+                         and no trace annotations): there is no latency class to protect, but \
+                         batch work will still be deferred/shed behind the slack budget"
+                    );
+                }
+            }
+        }
+    }
     let policies: &[&str] =
         if qos_on { &["base", "kernelet", "deadline"] } else { &["base", "kernelet"] };
+    let admission_header =
+        if admission.is_some() { " shed defer goodput_kps" } else { "" };
     if qos_on {
         println!(
-            "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7} {:>12} {:>6}",
+            "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7} {:>12} {:>6}{}",
             "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds",
-            "p99_lat_s", "miss"
+            "p99_lat_s", "miss", admission_header
         );
     } else {
         println!(
-            "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7}",
-            "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds"
+            "{:>9} {:>9} {:>13} {:>14} {:>6} {:>7} {:>7}{}",
+            "policy", "total_s", "kernels/s", "turnaround_s", "util", "mean_q", "rounds",
+            admission_header
         );
     }
     for &policy in policies {
         let mut source = make_source(seed)?;
         let mut sel = selector_for(policy);
-        let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
-        if qos_on {
-            println!(
+        let mut engine = Engine::new(&coord);
+        if let Some((spec, _)) = &admission {
+            engine = engine.with_admission(spec.build());
+        }
+        let rep = engine.run_source(sel.as_mut(), source.as_mut());
+        let mut line = if qos_on {
+            format!(
                 "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7} {:>12.5} {:>6}",
                 policy,
                 rep.total_secs,
@@ -327,9 +396,9 @@ fn cmd_schedule_scenario(
                 rep.coschedule_rounds,
                 rep.qos.latency.p99_turnaround_secs,
                 rep.qos.total_deadline_misses()
-            );
+            )
         } else {
-            println!(
+            format!(
                 "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7}",
                 policy,
                 rep.total_secs,
@@ -338,8 +407,18 @@ fn cmd_schedule_scenario(
                 rep.utilization,
                 rep.mean_queue_depth(),
                 rep.coschedule_rounds
-            );
+            )
+        };
+        if admission.is_some() {
+            let a = &rep.admission;
+            line.push_str(&format!(
+                " {:>4} {:>5} {:>11.1}",
+                a.total_shed(),
+                a.latency.deferrals + a.batch.deferrals,
+                rep.goodput_kps
+            ));
         }
+        println!("{line}");
     }
     Ok(())
 }
@@ -367,7 +446,7 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     let scenario = flag_value(args, "--scenario").context("trace record needs --scenario")?;
     let coord = Coordinator::new(&gpu);
     let capacity = base_capacity_kps(&coord, mix);
-    let qos = parse_qos_mix(args, capacity)?;
+    let (qos, _scale) = parse_qos_mix(args, capacity)?;
     let mut source =
         kernelet::workload::scenario_source(scenario, mix, instances, load * capacity, seed, qos)?;
     let mut recorder = RecordingSource::new(source.as_mut());
@@ -403,6 +482,15 @@ fn cmd_slice_ptx(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &[String]) -> Result<()> {
+    bail!(
+        "this build has no PJRT runtime — rebuild with `cargo build --features pjrt` \
+         (needs the XLA extension library) to serve real sliced executions"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &[String]) -> Result<()> {
     let requests: u32 = flag_value(args, "--requests").unwrap_or("64").parse()?;
     if !kernelet::runtime::artifacts_available() {

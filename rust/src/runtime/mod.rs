@@ -10,11 +10,22 @@
 //! scheduling engine as a `TimingBackend`, so the coordinator's one
 //! dispatch loop can run on real compute instead of the simulator.
 
+//! The PJRT execution path (`client`, `dispatch`) is gated behind the
+//! `pjrt` cargo feature: the `xla` binding needs the native XLA
+//! extension library at build time, which CI machines and offline
+//! containers don't have. The manifest parser and artifact discovery
+//! stay available either way so tooling can inspect artifacts without
+//! the heavy dependency.
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod dispatch;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{ArtifactRegistry, Tensor};
+#[cfg(feature = "pjrt")]
 pub use dispatch::{PjrtBackend, SlicedRunner};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 

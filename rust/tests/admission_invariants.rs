@@ -1,0 +1,270 @@
+//! Admission-control invariants: the differential pin (an `AdmitAll`
+//! gate is bit-identical to the pre-admission engine on every
+//! scenario), the SLO-guard property (under bursty overload it sheds
+//! only batch kernels and strictly improves latency-class p99 and
+//! misses over the open door), and the accounting partition
+//! (completed + shed + deferred-unfinished + incomplete == arrivals,
+//! per class, always).
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{
+    AdmissionDecision, AdmissionSpec, Coordinator, Engine, KerneletSelector,
+};
+use kernelet::figures::throughput::base_capacity_kps;
+use kernelet::kernel::{BenchmarkApp, KernelInstance};
+use kernelet::workload::{scenario_source, ArrivalSource, Mix, QosMix, ReplaySource, SCENARIO_NAMES};
+
+const SEED: u64 = 0xAD_0415;
+
+fn drain_source(src: &mut dyn ArrivalSource) -> Vec<KernelInstance> {
+    let mut out = Vec::new();
+    while src.peek_time().is_some() {
+        out.push(src.next_arrival().expect("peeked arrival vanished"));
+    }
+    out
+}
+
+/// DIFFERENTIAL: with the `AdmitAll` policy installed, every scenario
+/// schedules bit-identically to the pre-admission engine — same
+/// completion map, slice trace, queue-depth timeline, round/solo
+/// counts — and the admission report degenerates to all-admitted.
+#[test]
+fn admit_all_is_bit_identical_to_unguarded_engine() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let qos = QosMix::latency_share(0.3, 4.0 / capacity);
+    for scenario in SCENARIO_NAMES {
+        let mk = || {
+            scenario_source(scenario, Mix::MIX, 4, 2.0 * capacity, SEED, qos)
+                .expect("valid scenario")
+        };
+        let plain = Engine::new(&coord).run_source(&mut KerneletSelector, mk().as_mut());
+        let gated = Engine::new(&coord)
+            .with_admission(AdmissionSpec::AdmitAll.build())
+            .run_source(&mut KerneletSelector, mk().as_mut());
+        assert_eq!(gated.total_cycles, plain.total_cycles, "{scenario}: total_cycles");
+        assert_eq!(gated.completion, plain.completion, "{scenario}: completion map");
+        assert_eq!(gated.slice_trace, plain.slice_trace, "{scenario}: slice trace");
+        assert_eq!(gated.queue_depth, plain.queue_depth, "{scenario}: queue depth");
+        assert_eq!(gated.coschedule_rounds, plain.coschedule_rounds, "{scenario}: rounds");
+        assert_eq!(gated.solo_slices, plain.solo_slices, "{scenario}: solo slices");
+        assert_eq!(gated.qos, plain.qos, "{scenario}: per-class stats");
+        // Open door: everything offered was admitted, nothing else.
+        let a = &gated.admission;
+        assert_eq!(a.policy, "admitall", "{scenario}");
+        assert_eq!(a.total_shed(), 0, "{scenario}");
+        assert_eq!(a.total_deferred_unfinished(), 0, "{scenario}");
+        assert_eq!(a.total_arrivals(), gated.kernels_completed + gated.incomplete, "{scenario}");
+        // The ungated engine reports the same partition under "none".
+        assert_eq!(plain.admission.policy, "none", "{scenario}");
+        assert_eq!(a.latency.arrivals, plain.admission.latency.arrivals, "{scenario}");
+        assert_eq!(a.batch.arrivals, plain.admission.batch.arrivals, "{scenario}");
+    }
+}
+
+/// PROPERTY (the tentpole acceptance): under bursty overload with a
+/// latency/batch mix and a class-blind scheduler, the SLO guard sheds
+/// or defers only batch-class kernels and strictly improves the
+/// latency class's p99 turnaround *and* deadline-miss count over the
+/// open door.
+#[test]
+fn slo_guard_sheds_only_batch_and_beats_admit_all_under_bursty_overload() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let deadline_scale = 4.0;
+    let qos = QosMix::latency_share(0.25, deadline_scale / capacity);
+    let offered = 3.0 * capacity; // sustained 3x over-subscription
+    let mk = || {
+        scenario_source("bursty", Mix::MIX, 30, offered, SEED, qos).expect("valid scenario")
+    };
+
+    let open = Engine::new(&coord).run_source(&mut KerneletSelector, mk().as_mut());
+    let spec = AdmissionSpec::for_policy("sloguard", capacity, deadline_scale, 16);
+    let guarded = Engine::new(&coord)
+        .with_admission(spec.build())
+        .run_source(&mut KerneletSelector, mk().as_mut());
+
+    // Craft check: the open door really is overloaded — a class-blind
+    // queue at 3x load makes late latency kernels wait out the whole
+    // backlog, far past deadlines at 4x the mean service time.
+    assert!(
+        open.qos.latency.deadline_misses > 0,
+        "craft broken: open door missed nothing at 3x bursty overload"
+    );
+
+    // The guard never touches the class it protects...
+    let a = &guarded.admission;
+    assert_eq!(a.latency.shed, 0, "sloguard shed a latency kernel");
+    assert_eq!(a.latency.deferrals, 0, "sloguard deferred a latency kernel");
+    assert_eq!(a.latency.admitted, a.latency.arrivals);
+    // ...and under this pressure it must actually push back on batch.
+    assert!(
+        a.batch.shed + a.batch.deferrals > 0,
+        "sloguard never engaged under 3x overload: {a:?}"
+    );
+
+    // Strictly better latency-class tail and misses.
+    assert!(
+        guarded.qos.latency.p99_turnaround_secs < open.qos.latency.p99_turnaround_secs,
+        "guarded p99 {} >= open p99 {}",
+        guarded.qos.latency.p99_turnaround_secs,
+        open.qos.latency.p99_turnaround_secs
+    );
+    assert!(
+        guarded.qos.latency.deadline_misses < open.qos.latency.deadline_misses,
+        "guarded misses {} >= open misses {}",
+        guarded.qos.latency.deadline_misses,
+        open.qos.latency.deadline_misses
+    );
+}
+
+/// PROPERTY: shed + deferred-unfinished + completed + incomplete
+/// exactly partitions the arrivals, per class, for every policy on
+/// open- and closed-loop scenarios alike (for open-loop scenarios the
+/// arrival counts are cross-checked against an engine-free twin drain
+/// of the same source).
+#[test]
+fn admission_counts_partition_arrivals_exactly() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let qos = QosMix::latency_share(0.25, 4.0 / capacity);
+    let specs = [
+        AdmissionSpec::BacklogCap { cap: 4 },
+        AdmissionSpec::for_policy("sloguard", capacity, 4.0, 8),
+    ];
+    for scenario in ["poisson", "bursty", "heavytail", "closed"] {
+        let mk = || {
+            scenario_source(scenario, Mix::MIX, 6, 2.5 * capacity, SEED ^ 7, qos)
+                .expect("valid scenario")
+        };
+        for spec in specs {
+            let rep = Engine::new(&coord)
+                .with_admission(spec.build())
+                .run_source(&mut KerneletSelector, mk().as_mut());
+            let a = &rep.admission;
+            for (class, stats, adm) in [
+                ("latency", &rep.qos.latency, &a.latency),
+                ("batch", &rep.qos.batch, &a.batch),
+            ] {
+                assert_eq!(
+                    adm.admitted + adm.shed + adm.deferred_unfinished,
+                    adm.arrivals,
+                    "{scenario}/{}/{class}: gate accounting",
+                    a.policy
+                );
+                let incomplete = adm.admitted - stats.completed;
+                assert_eq!(
+                    stats.completed + adm.shed + adm.deferred_unfinished + incomplete,
+                    adm.arrivals,
+                    "{scenario}/{}/{class}: partition",
+                    a.policy
+                );
+            }
+            // The engine drains everything it admits.
+            assert_eq!(rep.incomplete, 0, "{scenario}/{}", a.policy);
+            assert_eq!(
+                rep.kernels_completed + a.total_shed() + a.total_deferred_unfinished(),
+                a.total_arrivals(),
+                "{scenario}/{}",
+                a.policy
+            );
+            // Open-loop scenarios: the gate saw exactly the arrivals
+            // the source generates (closed loops are completion-driven,
+            // so shedding legitimately changes the arrival count).
+            if scenario != "closed" {
+                let twin = drain_source(mk().as_mut());
+                assert_eq!(a.total_arrivals(), twin.len(), "{scenario}/{}", a.policy);
+                let latency = twin.iter().filter(|k| k.qos.is_latency()).count();
+                assert_eq!(a.latency.arrivals, latency, "{scenario}/{}", a.policy);
+            }
+        }
+    }
+}
+
+/// PROPERTY: a backlog cap really bounds the pending set — the queue
+/// depth sampled at every dispatch decision never exceeds the cap.
+#[test]
+fn backlog_cap_bounds_queue_depth() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let cap = 5usize;
+    let mut source = scenario_source(
+        "bursty",
+        Mix::MIX,
+        20,
+        4.0 * capacity,
+        SEED ^ 99,
+        QosMix::ALL_BATCH,
+    )
+    .unwrap();
+    let rep = Engine::new(&coord)
+        .with_admission(AdmissionSpec::BacklogCap { cap }.build())
+        .run_source(&mut KerneletSelector, source.as_mut());
+    assert!(
+        rep.peak_queue_depth() <= cap,
+        "peak {} exceeds cap {cap}",
+        rep.peak_queue_depth()
+    );
+    // 4x overload against a cap of 5 must shed...
+    assert!(rep.admission.total_shed() > 0);
+    // ...and what it sheds it never runs.
+    assert_eq!(
+        rep.kernels_completed + rep.admission.total_shed(),
+        rep.admission.total_arrivals()
+    );
+}
+
+/// Deferred kernels re-enter when pressure drops: a crafted run where
+/// every batch kernel is deferred behind a head-of-queue kernel, then
+/// released and completed once it drains — nothing shed, nothing left
+/// deferred.
+#[test]
+fn deferred_kernels_are_released_and_complete() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let pc = BenchmarkApp::PC.spec();
+    let mm = BenchmarkApp::MM.spec();
+    let est_pc = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&pc));
+    // Budget below the head kernel's service estimate: every batch
+    // arrival behind it is deferred until it drains.
+    let spec = AdmissionSpec::SloGuard { slack_budget_secs: 0.5 * est_pc, max_deferred: 16 };
+    let instances = vec![
+        KernelInstance::new(0, pc, 0.0),
+        KernelInstance::new(1, mm.clone(), 0.0),
+        KernelInstance::new(2, mm.clone(), 0.0),
+        KernelInstance::new(3, mm, 0.0),
+    ];
+    let mut engine = Engine::new(&coord).with_admission(spec.build());
+    // The head is admitted; the rest defer at the gate.
+    for k in instances {
+        let d = engine.offer(k.clone());
+        if k.id == 0 {
+            assert_eq!(d, AdmissionDecision::Admit, "head kernel must be admitted");
+        } else {
+            assert_eq!(d, AdmissionDecision::Defer, "kernel {} should defer", k.id);
+        }
+    }
+    engine.drain(&mut KerneletSelector);
+    let rep = engine.finish_online();
+    assert_eq!(rep.kernels_completed, 4, "deferred kernels must complete");
+    let a = &rep.admission;
+    assert_eq!(a.batch.deferrals, 3);
+    assert_eq!(a.batch.deferred_unfinished, 0);
+    assert_eq!(a.total_shed(), 0);
+    // Head-of-line: the head finishes before any released kernel.
+    for id in 1..4 {
+        assert!(rep.completion[&0] <= rep.completion[&id], "kernel {id} jumped the head");
+    }
+
+    // Same run through run_source (the streaming front door).
+    let instances = vec![
+        KernelInstance::new(0, BenchmarkApp::PC.spec(), 0.0),
+        KernelInstance::new(1, BenchmarkApp::MM.spec(), 0.0),
+        KernelInstance::new(2, BenchmarkApp::MM.spec(), 0.0),
+    ];
+    let rep = Engine::new(&coord).with_admission(spec.build()).run_source(
+        &mut KerneletSelector,
+        &mut ReplaySource::from_instances("crafted", instances),
+    );
+    assert_eq!(rep.kernels_completed, 3);
+    assert_eq!(rep.admission.batch.deferred_unfinished, 0);
+}

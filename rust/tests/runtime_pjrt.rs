@@ -3,7 +3,10 @@
 //! markov artifact against the native model solver.
 //!
 //! These tests skip (pass vacuously, with a note) when `make artifacts`
-//! has not run — cargo test must stay green from a bare checkout.
+//! has not run — cargo test must stay green from a bare checkout — and
+//! the whole file compiles away without the `pjrt` cargo feature (the
+//! xla binding needs the native XLA extension library).
+#![cfg(feature = "pjrt")]
 
 use kernelet::model::chain::Transition;
 use kernelet::runtime::{artifacts_available, ArtifactRegistry, SlicedRunner};

@@ -1,0 +1,524 @@
+#!/usr/bin/env python3
+"""Gate the BENCH_*.json perf artifacts: schema checks + baseline drift.
+
+Stdlib only (runs in containers with nothing but python3). Two jobs:
+
+1. **Schema + acceptance checks** for every bench kind the repo emits
+   (`BENCH_scheduling.json`, `BENCH_throughput.json`, `BENCH_qos.json`,
+   `BENCH_admission.json`): structure, coverage (scenarios x policies x
+   fleets), and the semantic acceptance bars — the deadline policy must
+   not lose to class-blind Kernelet on the latency class under bursty
+   overload (qos), and the SLO guard must not lose to the open door
+   while shedding only batch-class kernels, with the per-class
+   completed + shed + deferred_unfinished + incomplete counts summing
+   exactly to arrivals in every cell (admission).
+
+2. **Baseline comparison**: fresh files are compared against committed
+   baselines (default `scripts/baselines/`) with a +/-15% tolerance on
+   the simulated throughput/goodput/p99 metrics. Wall-clock metrics
+   (BENCH_scheduling's *_ns, every file's wall_ms) are machine-dependent
+   and never compared. `--bless` records the fresh files as the new
+   baselines; a missing baseline is reported but does not fail (the
+   first CI machine blesses it).
+
+Usage:
+    check_bench.py [--baseline-dir DIR] [--bless] [--schema-only] [FILE...]
+
+`--schema-only` needs no toolchain and no fresh bench run: it
+self-tests the validators against embedded example documents and
+validates any committed baselines, so compile-review-only environments
+still validate the JSON shapes.
+"""
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+TOLERANCE = 0.15  # relative drift allowed on compared metrics
+ABS_EPS = 1e-6  # absolute slack for near-zero seconds values
+
+FAILURES = []
+QUIET = False  # suppress FAIL prints while running expected-negative self-tests
+
+
+def fail(msg):
+    FAILURES.append(msg)
+    if not QUIET:
+        print(f"FAIL: {msg}")
+
+
+def check(cond, msg):
+    if not cond:
+        fail(msg)
+    return cond
+
+
+# ---------------------------------------------------------------------
+# Schema + acceptance validators (one per "bench" tag)
+# ---------------------------------------------------------------------
+
+def validate_scheduling(d, name):
+    check(d.get("bench") == "scheduling", f"{name}: wrong bench tag {d.get('bench')!r}")
+    results = d.get("results", [])
+    check(bool(results), f"{name}: no results recorded")
+    for r in results:
+        check(r.get("iters", 0) >= 1, f"{name}: {r.get('name')}: bad iters")
+        check(r.get("mean_ns", 0) > 0, f"{name}: {r.get('name')}: bad mean_ns")
+
+
+def validate_throughput(d, name):
+    check(d.get("bench") == "throughput", f"{name}: wrong bench tag {d.get('bench')!r}")
+    curves = d.get("curves", [])
+    check(bool(curves), f"{name}: no curves recorded")
+    scenarios = {c["scenario"] for c in curves}
+    policies = {c["policy"] for c in curves}
+    check(len(scenarios) >= 3, f"{name}: need >=3 scenarios, got {sorted(scenarios)}")
+    check(len(policies) >= 2, f"{name}: need >=2 policies, got {sorted(policies)}")
+    for c in curves:
+        label = f"{name}: {c['scenario']}/{c['policy']}"
+        check(bool(c["points"]), f"{label}: empty curve")
+        for p in c["points"]:
+            check(p["throughput_kps"] > 0, f"{label}: dead point at load {p.get('load')}")
+    fleet = d.get("fleet_curves", [])
+    check(bool(fleet), f"{name}: no fleet curves recorded")
+    routing = {c["policy"] for c in fleet}
+    check(
+        routing >= {"roundrobin", "leastloaded", "sloaware"},
+        f"{name}: missing routing policies: {sorted(routing)}",
+    )
+    gpus = {c["gpus"] for c in fleet}
+    check(len(gpus) >= 2, f"{name}: fleet sweep must scale device counts, got {sorted(gpus)}")
+    for c in fleet:
+        label = f"{name}: {c['scenario']}/{c['policy']}/x{c['gpus']}"
+        check(bool(c["points"]), f"{label}: empty fleet curve")
+        for p in c["points"]:
+            check(p["throughput_kps"] > 0, f"{label}: dead fleet point")
+
+
+def validate_qos(d, name):
+    check(d.get("bench") == "qos", f"{name}: wrong bench tag {d.get('bench')!r}")
+    check(0.0 < d.get("latency_fraction", 0) <= 1.0, f"{name}: bad latency_fraction")
+    check(d.get("deadline_scale", 0) > 0.0, f"{name}: bad deadline_scale")
+    curves = d.get("curves", [])
+    check(
+        {c["policy"] for c in curves} >= {"kernelet", "deadline"},
+        f"{name}: missing QoS policies",
+    )
+    by = {(c["scenario"], c["policy"]): c["points"] for c in curves}
+    for key, pts in by.items():
+        check(bool(pts), f"{name}: empty QoS curve {key}")
+        for p in pts:
+            for cls in ("latency", "batch"):
+                c = p[cls]
+                check(
+                    c["deadline_misses"] <= max(c["with_deadline"], 1),
+                    f"{name}: {key} load {p['load']}: {cls} misses exceed deadlined",
+                )
+                check(
+                    c["p50_s"] <= c["p99_s"] + 1e-12,
+                    f"{name}: {key} load {p['load']}: {cls} percentiles unordered",
+                )
+
+    # Acceptance: under bursty overload the deadline policy is never
+    # worse than class-blind Kernelet on the latency class, and strictly
+    # better whenever Kernelet actually misses deadlines (a quiet
+    # quick-mode run where nobody misses proves nothing either way and
+    # must not fail CI).
+    if ("bursty", "kernelet") in by and ("bursty", "deadline") in by:
+        peak = lambda pol: max(by[("bursty", pol)], key=lambda p: p["load"])["latency"]
+        k, dl = peak("kernelet"), peak("deadline")
+        check(
+            dl["p99_s"] <= k["p99_s"] + ABS_EPS,
+            f"{name}: deadline p99 {dl['p99_s']} > kernelet {k['p99_s']} at bursty peak",
+        )
+        check(
+            dl["deadline_misses"] <= k["deadline_misses"],
+            f"{name}: deadline misses {dl['deadline_misses']} > kernelet {k['deadline_misses']}",
+        )
+        if k["deadline_misses"] > 0:
+            check(
+                dl["deadline_misses"] < k["deadline_misses"] or dl["p99_s"] < k["p99_s"],
+                f"{name}: EDF gating bought nothing under bursty overload",
+            )
+    else:
+        fail(f"{name}: bursty kernelet/deadline curves missing")
+
+
+def validate_admission(d, name):
+    check(d.get("bench") == "admission", f"{name}: wrong bench tag {d.get('bench')!r}")
+    check(0.0 < d.get("latency_fraction", 0) <= 1.0, f"{name}: bad latency_fraction")
+    check(d.get("deadline_scale", 0) > 0.0, f"{name}: bad deadline_scale")
+    check(d.get("backlog_cap", 0) >= 1, f"{name}: bad backlog_cap")
+    curves = d.get("curves", [])
+    policies = {c["policy"] for c in curves}
+    check(
+        policies >= {"admitall", "backlogcap", "sloguard"},
+        f"{name}: missing admission policies: {sorted(policies)}",
+    )
+    scenarios = {c["scenario"] for c in curves}
+    check(len(scenarios) >= 2, f"{name}: need >=2 scenarios, got {sorted(scenarios)}")
+    by = {(c["scenario"], c["policy"]): c["points"] for c in curves}
+    for (scenario, policy), pts in by.items():
+        check(bool(pts), f"{name}: empty admission curve {scenario}/{policy}")
+        for p in pts:
+            label = f"{name}: {scenario}/{policy} load {p['load']}"
+            total = 0
+            for cls in ("latency", "batch"):
+                c = p[cls]
+                # The CI-gated partition: every arrival is accounted
+                # exactly once.
+                parts = (
+                    c["completed"] + c["shed"] + c["deferred_unfinished"] + c["incomplete"]
+                )
+                check(
+                    parts == c["arrivals"],
+                    f"{label}: {cls} partition {parts} != arrivals {c['arrivals']}",
+                )
+                check(
+                    c["p50_s"] <= c["p99_s"] + 1e-12,
+                    f"{label}: {cls} percentiles unordered",
+                )
+                total += c["arrivals"]
+            check(total == p["arrivals"], f"{label}: class arrivals don't sum to total")
+            check(
+                p["goodput_kps"] <= p["throughput_kps"] + ABS_EPS,
+                f"{label}: goodput exceeds throughput",
+            )
+            if policy == "admitall":
+                check(
+                    p["completed"] == p["arrivals"],
+                    f"{label}: the open door must run everything",
+                )
+            if policy == "sloguard":
+                lat = p["latency"]
+                check(
+                    lat["shed"] == 0 and lat["deferred_unfinished"] == 0,
+                    f"{label}: sloguard touched the latency class",
+                )
+
+    # Acceptance: under bursty overload the SLO guard is never worse
+    # than the open door on latency-class p99 and misses, and strictly
+    # better whenever the open door actually misses.
+    if ("bursty", "admitall") in by and ("bursty", "sloguard") in by:
+        peak = lambda pol: max(by[("bursty", pol)], key=lambda p: p["load"])["latency"]
+        open_door, guard = peak("admitall"), peak("sloguard")
+        check(
+            guard["p99_s"] <= open_door["p99_s"] + ABS_EPS,
+            f"{name}: sloguard p99 {guard['p99_s']} > admitall {open_door['p99_s']} at bursty peak",
+        )
+        check(
+            guard["deadline_misses"] <= open_door["deadline_misses"],
+            f"{name}: sloguard misses {guard['deadline_misses']} > admitall {open_door['deadline_misses']}",
+        )
+        if open_door["deadline_misses"] > 0:
+            check(
+                guard["deadline_misses"] < open_door["deadline_misses"]
+                or guard["p99_s"] < open_door["p99_s"],
+                f"{name}: load shedding bought nothing under bursty overload",
+            )
+    else:
+        fail(f"{name}: bursty admitall/sloguard curves missing")
+
+
+VALIDATORS = {
+    "scheduling": validate_scheduling,
+    "throughput": validate_throughput,
+    "qos": validate_qos,
+    "admission": validate_admission,
+}
+
+
+# ---------------------------------------------------------------------
+# Baseline comparison
+# ---------------------------------------------------------------------
+
+# Dotted key paths compared per point, by bench kind. Simulated-time
+# metrics only: deterministic given the seed and scale, so drift means
+# a real behavior change, not machine noise.
+COMPARE_KEYS = {
+    "throughput": ["throughput_kps"],
+    "qos": ["throughput_kps", "latency.p99_s", "batch.p99_s"],
+    "admission": ["throughput_kps", "goodput_kps", "latency.p99_s"],
+}
+
+
+def dig(obj, dotted):
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def curve_index(d):
+    """(scenario, policy[, gpus]) -> {load -> point} for every curve
+    section present in the document."""
+    out = {}
+    for section in ("curves", "fleet_curves"):
+        for c in d.get(section, []):
+            key = (section, c.get("scenario"), c.get("policy"), c.get("gpus"))
+            out[key] = {p["load"]: p for p in c.get("points", [])}
+    return out
+
+
+def within(a, b):
+    if a is None or b is None:
+        return True  # key absent on one side: schema change, not drift
+    return abs(a - b) <= max(TOLERANCE * max(abs(a), abs(b)), ABS_EPS)
+
+
+def compare_to_baseline(fresh, base, kind, name):
+    if fresh.get("instances_per_app") != base.get("instances_per_app"):
+        print(
+            f"note: {name}: instances_per_app {fresh.get('instances_per_app')} != baseline "
+            f"{base.get('instances_per_app')} — different scale, skipping drift comparison"
+        )
+        return
+    keys = COMPARE_KEYS.get(kind, [])
+    if not keys:
+        print(f"note: {name}: wall-clock bench, schema-checked only (no drift comparison)")
+        return
+    fresh_idx, base_idx = curve_index(fresh), curve_index(base)
+    for ckey, base_pts in base_idx.items():
+        if ckey not in fresh_idx:
+            fail(f"{name}: curve {ckey} present in baseline but missing from fresh run")
+            continue
+        for load, bp in base_pts.items():
+            fp = fresh_idx[ckey].get(load)
+            if fp is None:
+                fail(f"{name}: point load={load} of {ckey} missing from fresh run")
+                continue
+            for key in keys:
+                a, b = dig(fp, key), dig(bp, key)
+                if not within(a, b):
+                    fail(
+                        f"{name}: {ckey} load={load} {key}: {a} drifted >"
+                        f"{TOLERANCE:.0%} from baseline {b}"
+                    )
+    print(f"{name}: baseline comparison done ({len(base_idx)} curves, keys {keys})")
+
+
+# ---------------------------------------------------------------------
+# Embedded self-test documents (--schema-only has real content even in
+# containers that never ran a bench)
+# ---------------------------------------------------------------------
+
+def _cls(arrivals, completed, shed=0, deferred=0, misses=0, deadlined=0, p99=0.03):
+    return {
+        "arrivals": arrivals,
+        "completed": completed,
+        "shed": shed,
+        "deferred_unfinished": deferred,
+        "incomplete": arrivals - completed - shed - deferred,
+        "p50_s": p99 / 3,
+        "p95_s": p99 / 2,
+        "p99_s": p99,
+        "mean_s": p99 / 3,
+        "deadline_misses": misses,
+        "with_deadline": deadlined,
+    }
+
+
+def _admission_point(load, policy):
+    if policy == "admitall":
+        lat = _cls(10, 10, misses=4, deadlined=10, p99=0.5)
+        bat = _cls(30, 30)
+    elif policy == "sloguard":
+        lat = _cls(10, 10, misses=1, deadlined=10, p99=0.1)
+        bat = _cls(30, 20, shed=6, deferred=4)
+    else:
+        lat = _cls(10, 8, shed=2, misses=2, deadlined=10, p99=0.2)
+        bat = _cls(30, 24, shed=6)
+    completed = lat["completed"] + bat["completed"]
+    return {
+        "load": load,
+        "arrivals": 40,
+        "completed": completed,
+        "throughput_kps": 100.0,
+        "goodput_kps": 90.0,
+        "latency": lat,
+        "batch": bat,
+    }
+
+
+def _qos_cls(p99, misses, deadlined):
+    return {
+        "completed": 40,
+        "p50_s": p99 / 3,
+        "p95_s": p99 / 2,
+        "p99_s": p99,
+        "mean_s": p99 / 3,
+        "deadline_misses": misses,
+        "with_deadline": deadlined,
+    }
+
+
+EXAMPLES = {
+    "scheduling": {
+        "bench": "scheduling",
+        "instances_per_app": 50,
+        "results": [
+            {"name": "generate::fig13", "iters": 1, "mean_ns": 5, "min_ns": 5, "max_ns": 5}
+        ],
+    },
+    "throughput": {
+        "bench": "throughput",
+        "instances_per_app": 50,
+        "curves": [
+            {
+                "scenario": s,
+                "policy": p,
+                "points": [{"load": 1.0, "throughput_kps": 100.0}],
+            }
+            for s in ("poisson", "bursty", "diurnal")
+            for p in ("kernelet", "base")
+        ],
+        "fleet_curves": [
+            {
+                "scenario": "poisson",
+                "policy": p,
+                "gpus": g,
+                "points": [{"load": 1.0, "throughput_kps": 100.0, "latency_p99_s": 0.01}],
+            }
+            for p in ("roundrobin", "leastloaded", "sloaware")
+            for g in (1, 2)
+        ],
+    },
+    "qos": {
+        "bench": "qos",
+        "instances_per_app": 40,
+        "latency_fraction": 0.3,
+        "deadline_scale": 4.0,
+        "curves": [
+            {
+                "scenario": s,
+                "policy": p,
+                "points": [
+                    {
+                        "load": 2.0,
+                        "latency": _qos_cls(0.1 if p == "deadline" else 0.5,
+                                            1 if p == "deadline" else 5, 40),
+                        "batch": _qos_cls(0.2, 0, 0),
+                    }
+                ],
+            }
+            for s in ("poisson", "bursty")
+            for p in ("kernelet", "deadline")
+        ],
+    },
+    "admission": {
+        "bench": "admission",
+        "instances_per_app": 40,
+        "latency_fraction": 0.25,
+        "deadline_scale": 4.0,
+        "backlog_cap": 16,
+        "curves": [
+            {
+                "scenario": s,
+                "policy": p,
+                "points": [_admission_point(3.0, p)],
+            }
+            for s in ("poisson", "bursty")
+            for p in ("admitall", "backlogcap", "sloguard")
+        ],
+    },
+}
+
+
+def self_test():
+    """Validators must accept the embedded examples and reject a
+    partition violation — run on every invocation (cheap), and the
+    whole payload of --schema-only in toolchain-free containers."""
+    for kind, doc in EXAMPLES.items():
+        before = len(FAILURES)
+        VALIDATORS[kind](doc, f"<example:{kind}>")
+        if len(FAILURES) != before:
+            fail(f"self-test: embedded {kind} example no longer validates")
+    # Negative: a partition violation must be caught.
+    global QUIET
+    broken = json.loads(json.dumps(EXAMPLES["admission"]))
+    broken["curves"][0]["points"][0]["latency"]["completed"] -= 1
+    before = len(FAILURES)
+    QUIET = True
+    validate_admission(broken, "<negative>")
+    QUIET = False
+    if len(FAILURES) == before:
+        fail("self-test: partition violation slipped through validate_admission")
+    else:
+        # Expected failures: drop them.
+        del FAILURES[before:]
+    print("validator self-test OK")
+
+
+# ---------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="fresh BENCH_*.json files to gate")
+    ap.add_argument(
+        "--baseline-dir",
+        default=str(pathlib.Path(__file__).parent / "baselines"),
+        help="committed baseline directory (default: scripts/baselines)",
+    )
+    ap.add_argument("--bless", action="store_true", help="record fresh files as baselines")
+    ap.add_argument(
+        "--schema-only",
+        action="store_true",
+        help="schema checks only: no bench run or baseline needed (toolchain-free)",
+    )
+    args = ap.parse_args()
+
+    self_test()
+
+    baseline_dir = pathlib.Path(args.baseline_dir)
+    files = [pathlib.Path(f) for f in args.files]
+    if args.schema_only and not files and baseline_dir.is_dir():
+        files = sorted(baseline_dir.glob("BENCH_*.json"))
+        if files:
+            print(f"schema-only: validating committed baselines in {baseline_dir}")
+
+    for path in files:
+        if not path.exists():
+            fail(f"{path}: missing")
+            continue
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            fail(f"{path}: not valid JSON ({e})")
+            continue
+        kind = doc.get("bench")
+        validator = VALIDATORS.get(kind)
+        if validator is None:
+            fail(f"{path}: unknown bench tag {kind!r}")
+            continue
+        before = len(FAILURES)
+        validator(doc, str(path))
+        if len(FAILURES) == before:
+            print(f"{path}: schema OK ({kind})")
+        if args.schema_only:
+            continue
+        baseline = baseline_dir / path.name
+        if args.bless:
+            baseline_dir.mkdir(parents=True, exist_ok=True)
+            shutil.copyfile(path, baseline)
+            print(f"{path}: blessed -> {baseline}")
+        elif baseline.exists():
+            compare_to_baseline(doc, json.loads(baseline.read_text()), kind, str(path))
+        else:
+            print(
+                f"note: {path}: no baseline at {baseline} — run with --bless on a "
+                f"trusted machine to record one"
+            )
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} bench-gate failure(s)")
+        return 1
+    print("bench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,28 +1,82 @@
 #!/usr/bin/env bash
-# CI pipeline: format, lint, build, test, and record the perf
+# CI pipeline: format, lint, build, test, and record + gate the perf
 # trajectories (BENCH_scheduling.json latency, BENCH_throughput.json
-# saturation + fleet curves, BENCH_qos.json per-class tail latency).
+# saturation + fleet curves, BENCH_qos.json per-class tail latency,
+# BENCH_admission.json goodput/shedding under overload). Schema and
+# baseline gating lives in scripts/check_bench.py.
 #
 # Usage: ./scripts/ci.sh [--quick]
-#   --quick   lower bench instance counts (CI smoke; default 50/8)
+#   --quick   lower bench instance counts (CI smoke; default 50/8/10)
 set -euo pipefail
+
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 
 if ! command -v cargo >/dev/null 2>&1; then
   echo "error: cargo not found in PATH — this pipeline needs a Rust toolchain." >&2
   echo "       Install one via https://rustup.rs or run inside the CI image." >&2
+  echo "       (Toolchain-free containers can still validate the BENCH JSON" >&2
+  echo "       shapes: python3 scripts/check_bench.py --schema-only)" >&2
   exit 1
 fi
 
-cd "$(dirname "$0")/../rust"
+cd "$SCRIPT_DIR/../rust"
 
 instances=200
 tp_instances=50
 qos_instances=40
+adm_instances=40
 if [[ "${1:-}" == "--quick" ]]; then
   instances=50
   tp_instances=8
   qos_instances=10
+  adm_instances=10
 fi
+
+# Known-failing tier-1 tests, one fully-qualified test name per line —
+# an EXPLICIT allowlist, never a silent skip. Keep this empty unless a
+# failure is understood and tracked in ROADMAP.md; with entries present
+# the test run still executes everything and fails on any test NOT
+# listed here.
+ALLOWED_TEST_FAILURES=()
+
+run_tests() {
+  if [[ ${#ALLOWED_TEST_FAILURES[@]} -eq 0 ]]; then
+    cargo test -q
+    return
+  fi
+  echo "NOTE: running with ${#ALLOWED_TEST_FAILURES[@]} allowlisted failure(s):"
+  printf '  - %s\n' "${ALLOWED_TEST_FAILURES[@]}"
+  local out status=0
+  out=$(cargo test 2>&1) || status=$?
+  echo "$out"
+  if [[ $status -eq 0 ]]; then
+    echo "NOTE: allowlisted tests passed — prune ALLOWED_TEST_FAILURES in scripts/ci.sh"
+    return
+  fi
+  local failed
+  failed=$(echo "$out" | sed -n 's/^test \(.*\) \.\.\. FAILED$/\1/p' | sort -u)
+  if [[ -z "$failed" ]]; then
+    # Non-zero exit but no parseable test failures: a test target
+    # failed to compile or a binary crashed — never allowlistable.
+    echo "cargo test failed without reporting test failures (compile error or crash)"
+    exit 1
+  fi
+  local unexpected=()
+  while IFS= read -r t; do
+    [[ -z "$t" ]] && continue
+    local ok=0
+    for a in "${ALLOWED_TEST_FAILURES[@]}"; do
+      [[ "$t" == "$a" ]] && ok=1
+    done
+    [[ $ok -eq 0 ]] && unexpected+=("$t")
+  done <<< "$failed"
+  if [[ ${#unexpected[@]} -gt 0 ]]; then
+    echo "unexpected test failures (not in the ci.sh allowlist):"
+    printf '  - %s\n' "${unexpected[@]}"
+    exit 1
+  fi
+  echo "all failures are allowlisted — continuing"
+}
 
 echo "==> cargo fmt --check"
 cargo fmt --check
@@ -34,7 +88,7 @@ echo "==> cargo build --release"
 cargo build --release
 
 echo "==> cargo test -q"
-cargo test -q
+run_tests
 
 echo "==> cargo bench --bench scheduling (instances/app=${instances})"
 KERNELET_INSTANCES="${instances}" \
@@ -51,86 +105,23 @@ KERNELET_INSTANCES="${qos_instances}" \
 KERNELET_QOS_OUT="BENCH_qos.json" \
   cargo bench --bench qos
 
-echo "==> checking BENCH_throughput.json"
-if command -v python3 >/dev/null 2>&1; then
-  python3 - <<'EOF'
-import json
+echo "==> cargo bench --bench admission (instances/app=${adm_instances})"
+KERNELET_INSTANCES="${adm_instances}" \
+KERNELET_ADMISSION_OUT="BENCH_admission.json" \
+  cargo bench --bench admission
 
-with open("BENCH_throughput.json") as fh:
-    d = json.load(fh)
-assert d["bench"] == "throughput", "wrong bench tag"
-curves = d["curves"]
-assert curves, "no curves recorded"
-scenarios = {c["scenario"] for c in curves}
-policies = {c["policy"] for c in curves}
-assert len(scenarios) >= 3, f"need >=3 scenarios, got {sorted(scenarios)}"
-assert len(policies) >= 2, f"need >=2 policies, got {sorted(policies)}"
-for c in curves:
-    assert c["points"], f"empty curve {c['scenario']}/{c['policy']}"
-    for p in c["points"]:
-        assert p["throughput_kps"] > 0, f"dead point in {c['scenario']}/{c['policy']}"
-fleet = d["fleet_curves"]
-assert fleet, "no fleet curves recorded"
-routing = {c["policy"] for c in fleet}
-assert routing >= {"roundrobin", "leastloaded", "sloaware"}, f"missing routing policies: {sorted(routing)}"
-gpus = {c["gpus"] for c in fleet}
-assert len(gpus) >= 2, f"fleet sweep must scale device counts, got {sorted(gpus)}"
-for c in fleet:
-    assert c["points"], f"empty fleet curve {c['scenario']}/{c['policy']}/x{c['gpus']}"
-    for p in c["points"]:
-        assert p["throughput_kps"] > 0, f"dead fleet point {c['scenario']}/{c['policy']}/x{c['gpus']}"
-print(f"BENCH_throughput.json OK: {len(curves)} curves + {len(fleet)} fleet curves "
-      f"({len(scenarios)} scenarios x {len(policies)} policies; fleets {sorted(gpus)})")
-EOF
+echo "==> bench gate (schemas + acceptance + baseline drift)"
+if command -v python3 >/dev/null 2>&1; then
+  python3 "$SCRIPT_DIR/check_bench.py" \
+    --baseline-dir "$SCRIPT_DIR/baselines" \
+    BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json BENCH_admission.json
 else
-  echo "warning: python3 unavailable — skipping BENCH_throughput.json schema check"
+  echo "warning: python3 unavailable — falling back to shape greps" >&2
+  grep -q '"bench":"scheduling"' BENCH_scheduling.json
   grep -q '"bench":"throughput"' BENCH_throughput.json
   grep -q '"fleet_curves"' BENCH_throughput.json
-fi
-
-echo "==> checking BENCH_qos.json"
-if command -v python3 >/dev/null 2>&1; then
-  python3 - <<'EOF'
-import json
-
-with open("BENCH_qos.json") as fh:
-    d = json.load(fh)
-assert d["bench"] == "qos", "wrong bench tag"
-assert 0.0 < d["latency_fraction"] <= 1.0
-assert d["deadline_scale"] > 0.0
-curves = d["curves"]
-assert {c["policy"] for c in curves} >= {"kernelet", "deadline"}, "missing QoS policies"
-by = {(c["scenario"], c["policy"]): c["points"] for c in curves}
-for pts in by.values():
-    assert pts, "empty QoS curve"
-    for p in pts:
-        for cls in ("latency", "batch"):
-            c = p[cls]
-            assert c["deadline_misses"] <= max(c["with_deadline"], 1)
-            assert c["p50_s"] <= c["p99_s"] + 1e-12
-
-# Acceptance: under bursty overload the deadline policy is never worse
-# than class-blind Kernelet on the latency class, and strictly better
-# whenever Kernelet actually misses deadlines (a quiet quick-mode run
-# where nobody misses proves nothing either way and must not fail CI).
-def at_peak(policy):
-    pts = by[("bursty", policy)]
-    return max(pts, key=lambda p: p["load"])["latency"]
-
-k, dl = at_peak("kernelet"), at_peak("deadline")
-assert dl["p99_s"] <= k["p99_s"], f"deadline p99 {dl['p99_s']} > kernelet {k['p99_s']}"
-assert dl["deadline_misses"] <= k["deadline_misses"], \
-    f"deadline misses {dl['deadline_misses']} > kernelet {k['deadline_misses']}"
-if k["deadline_misses"] > 0:
-    assert dl["deadline_misses"] < k["deadline_misses"] or dl["p99_s"] < k["p99_s"], \
-        "EDF gating bought nothing under bursty overload"
-print(f"BENCH_qos.json OK: {len(curves)} curves; bursty peak latency-class "
-      f"p99 {dl['p99_s']:.5f}s vs {k['p99_s']:.5f}s, "
-      f"misses {dl['deadline_misses']} vs {k['deadline_misses']}")
-EOF
-else
-  echo "warning: python3 unavailable — skipping BENCH_qos.json schema check"
   grep -q '"bench":"qos"' BENCH_qos.json
+  grep -q '"bench":"admission"' BENCH_admission.json
 fi
 
 echo "==> perf record:"
