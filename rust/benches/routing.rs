@@ -1,0 +1,183 @@
+//! Fleet-routing benchmark: crosses arrival scenario × offered load ×
+//! routing policy (roundrobin / leastloaded / sloaware / efc) on a
+//! homogeneous C2050 fleet under a latency/batch mix and records fleet
+//! deadline misses, per-class tails, goodput and per-device ETA
+//! calibration error to `BENCH_routing.json` — the repo's
+//! deadline-routing trajectory, gated by CI (`scripts/check_bench.py`)
+//! next to the other BENCH files.
+//!
+//! Run: `cargo bench --bench routing`
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 25; every
+//!   cell is four full fleet runs, so this bench scales harder than
+//!   the single-device sweeps).
+//! - `KERNELET_ROUTING_OUT` overrides the JSON output path (default
+//!   `BENCH_routing.json` in the working directory).
+//!
+//! JSON schema (times in seconds, rates in kernels/sec). The `eta`
+//! array is per device and non-empty only for `efc` points:
+//!
+//! ```json
+//! {
+//!   "bench": "routing",
+//!   "gpu": "C2050",
+//!   "mix": "MIX",
+//!   "gpus": 2,
+//!   "instances_per_app": 25,
+//!   "latency_fraction": 0.3,
+//!   "deadline_scale": 4.0,
+//!   "base_capacity_kps": 123.4,
+//!   "wall_ms": 456,
+//!   "curves": [
+//!     {
+//!       "scenario": "bursty",
+//!       "policy": "efc",
+//!       "gpus": 2,
+//!       "points": [
+//!         {"load": 3.0, "kernels": 200, "throughput_kps": 100.1,
+//!          "goodput_kps": 97.0, "preemptions": 4,
+//!          "latency": {"completed": 60, "p50_s": 0.01, "p95_s": 0.02,
+//!                      "p99_s": 0.03, "mean_s": 0.012,
+//!                      "deadline_misses": 1, "with_deadline": 60},
+//!          "batch": {...same shape...},
+//!          "eta": [{"samples": 100, "mean_abs_err_s": 0.004,
+//!                   "mean_err_s": -0.001, "correction": 0.92}, ...]}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Acceptance bar (checked by `scripts/check_bench.py`): at the bursty
+//! peak load, `efc` must not lose to `sloaware` on fleet latency-class
+//! deadline misses.
+
+use kernelet::bench::once;
+use kernelet::coordinator::{weighted_mean_abs_err_secs, ClassStats, EtaStats};
+use kernelet::figures::routing::{
+    routing_sweep, RoutingPoint, DEFAULT_DEADLINE_SCALE, DEFAULT_GPUS, DEFAULT_LATENCY_FRACTION,
+    ROUTING_LOADS, ROUTING_POLICIES, ROUTING_SCENARIOS,
+};
+use kernelet::figures::FigOptions;
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25);
+    let opts = FigOptions { instances_per_app: instances, ..Default::default() };
+
+    let ((points, capacity), dt) = once("routing::routing_sweep", || {
+        routing_sweep(
+            &opts,
+            &ROUTING_LOADS,
+            &ROUTING_SCENARIOS,
+            DEFAULT_LATENCY_FRACTION,
+            DEFAULT_DEADLINE_SCALE,
+            DEFAULT_GPUS,
+        )
+    });
+
+    println!(
+        "{:>9} {:>6} {:>12} {:>8} {:>9} {:>12} {:>12} {:>9} {:>11}",
+        "scenario", "load", "policy", "kernels", "miss_lat", "p99_lat_s", "goodput_kps",
+        "preempt", "eta_err_s"
+    );
+    for p in &points {
+        let eta_err = match weighted_mean_abs_err_secs(&p.eta) {
+            Some(e) => format!("{e:>11.5}"),
+            None => format!("{:>11}", "-"),
+        };
+        println!(
+            "{:>9} {:>6.2} {:>12} {:>8} {:>9} {:>12.5} {:>12.1} {:>9}{eta_err}",
+            p.scenario,
+            p.load,
+            p.policy,
+            p.kernels,
+            p.latency.deadline_misses,
+            p.latency.p99_turnaround_secs,
+            p.goodput_kps,
+            p.preemptions,
+        );
+    }
+
+    let json = to_json(&points, instances, capacity, dt.as_millis());
+    let out =
+        std::env::var("KERNELET_ROUTING_OUT").unwrap_or_else(|_| "BENCH_routing.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            // CI gates this file next; a stale copy passing the check
+            // would silently freeze the recorded trajectory.
+            eprintln!("could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn class_json(c: &ClassStats) -> String {
+    format!(
+        "{{\"completed\":{},\"p50_s\":{},\"p95_s\":{},\"p99_s\":{},\"mean_s\":{},\
+         \"deadline_misses\":{},\"with_deadline\":{}}}",
+        c.completed,
+        c.p50_turnaround_secs,
+        c.p95_turnaround_secs,
+        c.p99_turnaround_secs,
+        c.mean_turnaround_secs,
+        c.deadline_misses,
+        c.with_deadline
+    )
+}
+
+fn eta_json(eta: &[EtaStats]) -> String {
+    let entries: Vec<String> = eta
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"samples\":{},\"mean_abs_err_s\":{},\"mean_err_s\":{},\"correction\":{}}}",
+                e.samples, e.mean_abs_err_secs, e.mean_err_secs, e.correction
+            )
+        })
+        .collect();
+    format!("[{}]", entries.join(","))
+}
+
+/// Group the flat point list into one curve per (scenario, policy).
+fn to_json(points: &[RoutingPoint], instances: u32, capacity: f64, wall_ms: u128) -> String {
+    let mut curves = Vec::new();
+    for &scenario in &ROUTING_SCENARIOS {
+        for &policy in &ROUTING_POLICIES {
+            let pts: Vec<String> = points
+                .iter()
+                .filter(|p| p.scenario == scenario && p.policy == policy)
+                .map(|p| {
+                    format!(
+                        "{{\"load\":{},\"kernels\":{},\"throughput_kps\":{},\
+                         \"goodput_kps\":{},\"preemptions\":{},\
+                         \"latency\":{},\"batch\":{},\"eta\":{}}}",
+                        p.load,
+                        p.kernels,
+                        p.throughput_kps,
+                        p.goodput_kps,
+                        p.preemptions,
+                        class_json(&p.latency),
+                        class_json(&p.batch),
+                        eta_json(&p.eta)
+                    )
+                })
+                .collect();
+            curves.push(format!(
+                "{{\"scenario\":\"{scenario}\",\"policy\":\"{policy}\",\"gpus\":{DEFAULT_GPUS},\
+                 \"points\":[{}]}}",
+                pts.join(",")
+            ));
+        }
+    }
+    format!(
+        "{{\"bench\":\"routing\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\"gpus\":{DEFAULT_GPUS},\
+         \"instances_per_app\":{instances},\"latency_fraction\":{DEFAULT_LATENCY_FRACTION},\
+         \"deadline_scale\":{DEFAULT_DEADLINE_SCALE},\"base_capacity_kps\":{capacity},\
+         \"wall_ms\":{wall_ms},\"curves\":[{}]}}\n",
+        curves.join(",")
+    )
+}

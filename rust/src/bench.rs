@@ -11,14 +11,20 @@ use std::time::{Duration, Instant};
 /// One measured benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (`module::function` by convention).
     pub name: String,
+    /// Measured iterations (excluding warmup).
     pub iters: u32,
+    /// Mean wall-clock per iteration.
     pub mean: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// Criterion-style one-line summary.
     pub fn summary(&self) -> String {
         format!(
             "bench {:<44} {:>10.3?} /iter (min {:.3?}, max {:.3?}, n={})",

@@ -33,6 +33,7 @@ impl std::fmt::Display for Arch {
 pub struct GpuConfig {
     /// Marketing name, e.g. "Tesla C2050".
     pub name: &'static str,
+    /// Micro-architecture generation (drives model/simulator variants).
     pub arch: Arch,
     /// Number of streaming multiprocessors.
     pub num_sms: u32,

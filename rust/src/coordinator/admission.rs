@@ -101,12 +101,15 @@ impl AdmissionPolicy for AdmitAll {
 /// worst-case wait of everything behind it) at the cost of shedding
 /// latency work too.
 pub struct BacklogCap {
+    /// Maximum pending-set depth an arrival may be admitted into.
     pub cap: usize,
 }
 
 impl BacklogCap {
+    /// Default pending-set cap (the CLI's `--backlog-cap` default).
     pub const DEFAULT_CAP: usize = 32;
 
+    /// A cap policy shedding arrivals once `cap` kernels are pending.
     pub fn new(cap: usize) -> Self {
         assert!(cap >= 1, "a zero backlog cap sheds everything");
         Self { cap }
@@ -163,9 +166,14 @@ pub struct SloGuard {
 pub const DEFAULT_SLACK_FRACTION: f64 = 0.25;
 
 impl SloGuard {
+    /// Default multiplier on a pending deadline's time-to-deadline when
+    /// judging whether a batch admission would put it at risk.
     pub const DEFAULT_RISK_FACTOR: f64 = 1.0;
+    /// Default bound on the deferred queue; deferrals past it are shed.
     pub const DEFAULT_MAX_DEFERRED: usize = 64;
 
+    /// A guard deferring batch work past `slack_budget_secs` of
+    /// projected backlog and shedding past `max_deferred` deferrals.
     pub fn new(slack_budget_secs: f64, max_deferred: usize) -> Self {
         assert!(
             slack_budget_secs.is_finite() && slack_budget_secs > 0.0,
@@ -225,9 +233,20 @@ impl AdmissionPolicy for SloGuard {
 /// build [`AdmissionPolicy`] values from.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AdmissionSpec {
+    /// The open door ([`AdmitAll`]).
     AdmitAll,
-    BacklogCap { cap: usize },
-    SloGuard { slack_budget_secs: f64, max_deferred: usize },
+    /// Class-blind reject-over-threshold ([`BacklogCap`]).
+    BacklogCap {
+        /// Maximum pending-set depth.
+        cap: usize,
+    },
+    /// QoS-aware batch deferral/shedding ([`SloGuard`]).
+    SloGuard {
+        /// Projected-backlog budget batch admissions must fit in.
+        slack_budget_secs: f64,
+        /// Deferred-queue bound; deferrals past it are shed.
+        max_deferred: usize,
+    },
 }
 
 impl AdmissionSpec {
@@ -248,6 +267,7 @@ impl AdmissionSpec {
         }
     }
 
+    /// The spec's policy name (inverse of [`AdmissionSpec::from_name`]).
     pub fn name(&self) -> &'static str {
         match self {
             AdmissionSpec::AdmitAll => "admitall",
@@ -312,6 +332,7 @@ impl ClassAdmission {
         Self { arrivals, admitted: arrivals, ..Default::default() }
     }
 
+    /// Sum two devices' per-class counts (fleet reports).
     pub fn merge(&self, other: &ClassAdmission) -> ClassAdmission {
         ClassAdmission {
             arrivals: self.arrivals + other.arrivals,
@@ -327,8 +348,11 @@ impl ClassAdmission {
 /// that produced them ("none" when no controller was installed).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct AdmissionReport {
+    /// Gate policy name (`"none"` without a controller).
     pub policy: &'static str,
+    /// Latency-class accounting.
     pub latency: ClassAdmission,
+    /// Batch-class accounting.
     pub batch: ClassAdmission,
 }
 
@@ -372,6 +396,7 @@ pub struct AdmissionController {
 }
 
 impl AdmissionController {
+    /// A controller around `policy` with empty counters and queue.
     pub fn new(policy: Box<dyn AdmissionPolicy>) -> Self {
         Self {
             policy,
@@ -381,6 +406,7 @@ impl AdmissionController {
         }
     }
 
+    /// Name of the wrapped policy (reports).
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }

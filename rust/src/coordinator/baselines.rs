@@ -67,6 +67,7 @@ pub struct RandomSelector {
 }
 
 impl RandomSelector {
+    /// A random-plan selector drawing from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { rng: Xoshiro256::new(seed) }
     }
@@ -137,6 +138,7 @@ fn select_opt(coord: &Coordinator, pending: &[&KernelInstance]) -> Option<Decisi
                             cipc: m.cipc,
                             cp,
                             rounds_cap: None,
+                            preempt: None,
                         },
                     ));
                 }
@@ -179,6 +181,7 @@ fn select_random(
         cipc: [0.0, 0.0],
         cp: 0.0,
         rounds_cap: None,
+        preempt: None,
     })
 }
 

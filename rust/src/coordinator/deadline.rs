@@ -29,8 +29,26 @@
 //! [`KerneletSelector`] wholesale, so an all-batch, no-deadline
 //! workload is decision-identical to the plain Kernelet policy — the
 //! differential tests in `tests/scheduling_invariants.rs` pin that.
+//!
+//! # Mid-slice preemption
+//!
+//! The slice-granularity hold has a throughput tax: while *any*
+//! deadline is pending — even one hours away — every pair block is
+//! capped at a single round, so the selector (and its urgency scan)
+//! runs once per round. [`DeadlineSelector::with_preemption`] replaces
+//! the cap with a *preemption pin* priced by a [`PreemptCost`]: the
+//! block runs uncapped (the paper's Algorithm 1 dispatch), and the
+//! engine cuts it at the first round boundary past the moment the
+//! earliest pending deadline would turn urgent — minus the cost's
+//! break-even window (drain the in-flight round + relaunch the
+//! preempted residuals), because yielding later than that could no
+//! longer save the deadline. The cut charges the relaunch overhead to
+//! the device clock ([`ExecutionReport::preemptions`](super::ExecutionReport::preemptions)
+//! counts them). With no deadlines pending nothing is ever pinned, so
+//! zero-urgency workloads stay bit-identical to the preemption-free
+//! engine — `tests/routing_invariants.rs` pins that differentially.
 
-use super::engine::{Decision, KerneletSelector, SchedCtx, Selector};
+use super::engine::{Decision, KerneletSelector, PreemptCost, PreemptPoint, SchedCtx, Selector};
 use crate::kernel::KernelInstance;
 
 /// EDF-gated Kernelet (see module docs).
@@ -41,6 +59,11 @@ pub struct DeadlineSelector {
     /// the last possible moment (any estimate error causes a miss);
     /// larger factors yield earlier, safer jumps at a throughput cost.
     pub urgency_factor: f64,
+    /// Mid-slice preemption cost model. `None` (the default, the PR-4
+    /// behavior) holds dispatch at slice granularity while deadlines
+    /// are pending; `Some` lets pair blocks run uncapped with a
+    /// deadline-derived preemption pin instead (see the module docs).
+    preempt: Option<PreemptCost>,
     /// Urgency scan memo for the current dispatch decision, keyed by
     /// (clock bits, backlog): the engine calls `select` and then
     /// `solo_pick` on the same context, and the scan costs one
@@ -51,15 +74,83 @@ pub struct DeadlineSelector {
 }
 
 impl DeadlineSelector {
+    /// Default urgency factor: jump to EDF when the time-to-deadline
+    /// falls within twice the estimated remaining service time.
     pub const DEFAULT_URGENCY_FACTOR: f64 = 2.0;
 
+    /// The default EDF-gated selector (urgency factor 2, no
+    /// preemption).
     pub fn new() -> Self {
         Self::with_urgency_factor(Self::DEFAULT_URGENCY_FACTOR)
     }
 
+    /// An EDF-gated selector with an explicit urgency factor (≥ 1).
     pub fn with_urgency_factor(urgency_factor: f64) -> Self {
         assert!(urgency_factor >= 1.0, "urgency factor {urgency_factor} < 1 always misses");
-        Self { inner: KerneletSelector, urgency_factor, cached: None }
+        Self { inner: KerneletSelector, urgency_factor, preempt: None, cached: None }
+    }
+
+    /// Enable mid-slice preemption under `cost`: pair blocks run
+    /// uncapped while no deadline is urgent, pinned to yield (and pay
+    /// the relaunch overhead) just before the earliest pending
+    /// deadline's urgency point (see the module docs).
+    pub fn with_preemption(mut self, cost: PreemptCost) -> Self {
+        self.preempt = Some(cost);
+        self
+    }
+
+    /// Earliest moment any pending deadlined kernel turns urgent
+    /// (`deadline − urgency_factor × est_remaining`). In-pair
+    /// deadlined kernels count too: although the block is advancing
+    /// them, the greedy re-pick at a boundary may swap them out of the
+    /// pair (their residual shrinks, so a different pairing can win),
+    /// and only a boundary near their urgency point keeps that exact —
+    /// their residual only shrinks while the block runs, so an
+    /// estimate taken now is conservative (the true urgency moment can
+    /// only move later).
+    fn earliest_urgency_secs(&self, ctx: &SchedCtx<'_, '_>) -> Option<f64> {
+        let mut earliest: Option<f64> = None;
+        for &k in ctx.pending {
+            let Some(deadline) = k.qos.deadline else { continue };
+            let t_u = deadline - self.urgency_factor * ctx.est_remaining_secs(k);
+            if earliest.map_or(true, |e| t_u < e) {
+                earliest = Some(t_u);
+            }
+        }
+        earliest
+    }
+
+    /// The pair decision to dispatch while deadlines are pending but
+    /// nothing is urgent yet: a one-round cap without preemption (the
+    /// PR-4 slice-granularity hold), or an uncapped block pinned to
+    /// yield ahead of the earliest urgency point when a
+    /// [`PreemptCost`] is configured. A pin that would already have
+    /// fired (or fires inside the break-even window) degrades to the
+    /// free one-round cap — never pay relaunch for a boundary the cap
+    /// gives for free.
+    fn pending_deadline_pair(&self, ctx: &SchedCtx<'_, '_>, d: Decision) -> Decision {
+        let Some(cost) = self.preempt else {
+            return Decision { rounds_cap: Some(1), ..d };
+        };
+        match self.earliest_urgency_secs(ctx) {
+            Some(t_u) => {
+                let at = t_u - cost.break_even_secs();
+                if at <= ctx.now_secs {
+                    Decision { rounds_cap: Some(1), ..d }
+                } else {
+                    Decision {
+                        preempt: Some(PreemptPoint {
+                            at_secs: at,
+                            relaunch_secs: cost.relaunch_secs,
+                        }),
+                        ..d
+                    }
+                }
+            }
+            // Unreachable while deadline_pending gates the call, kept
+            // as the safe degenerate: re-gate each round.
+            None => Decision { rounds_cap: Some(1), ..d },
+        }
     }
 
     /// Id of the most urgent deadlined kernel — minimum slack among
@@ -117,13 +208,15 @@ impl Selector for DeadlineSelector {
         self.cached = Some((Self::decision_key(ctx), urgent));
         match urgent {
             // Nothing at risk *yet*: the throughput-optimal plan
-            // stands, but while deadlines are pending a pair block is
-            // capped at one round — a deadlined kernel outside the pair
-            // must be able to turn urgent at the next slice boundary,
-            // not after the pair drains.
+            // stands, but while deadlines are pending a pair block must
+            // stay interruptible — a deadlined kernel outside the pair
+            // has to be able to turn urgent before the pair drains.
+            // Without preemption that means a one-round cap; with a
+            // PreemptCost the block runs uncapped, pinned to yield
+            // ahead of the earliest urgency point.
             None => match self.inner.select(ctx) {
                 Some(d) if Self::deadline_pending(ctx) => {
-                    Some(Decision { rounds_cap: Some(1), ..d })
+                    Some(self.pending_deadline_pair(ctx, d))
                 }
                 other => other,
             },
@@ -286,6 +379,83 @@ mod tests {
             "latency kernel completed at {} vs deadline {deadline}",
             rep.completion[&1]
         );
+    }
+
+    #[test]
+    fn preemption_meets_the_deadline_the_uncut_block_would_miss() {
+        // Craft: a long-running TEA+PC pair block (grids x16) plus a
+        // small latency-class TEA whose deadline is beyond the urgency
+        // window at t=0 but far inside the block's natural drain. The
+        // latency kernel can never pair (same app as a pending TEA), so
+        // only cutting the block can save it:
+        // - plain Kernelet runs the block uninterrupted -> miss;
+        // - the PR-4 DeadlineSelector holds dispatch at one round per
+        //   block -> meets, at one decision per round;
+        // - the preemption-enabled selector runs the block uncapped and
+        //   cuts it at the pin -> meets too, with strictly fewer
+        //   dispatch decisions and at least one charged preemption.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let tea = BenchmarkApp::TEA.spec();
+        let pc = BenchmarkApp::PC.spec();
+        let tea_big = tea.with_grid(tea.grid_blocks * 16);
+        let pc_big = pc.with_grid(pc.grid_blocks * 16);
+        let est_small = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&tea));
+        let deadline = 6.0 * est_small;
+        let instances = vec![
+            KernelInstance::new(0, tea_big, 0.0),
+            KernelInstance::new(1, pc_big, 0.0),
+            KernelInstance::new(2, tea.clone(), 0.0).with_qos(Qos::latency(Some(deadline))),
+        ];
+        let run = |sel: &mut dyn crate::coordinator::Selector| {
+            Engine::new(&coord)
+                .run_source(sel, &mut ReplaySource::from_instances("crafted", instances.clone()))
+        };
+
+        let blind = run(&mut crate::coordinator::KerneletSelector);
+        assert_eq!(
+            blind.qos.latency.deadline_misses, 1,
+            "craft broken: the uncut block met the deadline (completion {:?} vs {deadline})",
+            blind.completion.get(&2)
+        );
+
+        let capped = run(&mut DeadlineSelector::new());
+        assert_eq!(capped.qos.latency.deadline_misses, 0, "PR-4 slice hold must meet");
+        assert_eq!(capped.preemptions, 0, "no preemption configured");
+
+        let cost = PreemptCost::for_gpu(&coord.gpu);
+        let preempting = run(&mut DeadlineSelector::new().with_preemption(cost));
+        assert_eq!(
+            preempting.qos.latency.deadline_misses, 0,
+            "preemption must still meet (completion {:?} vs {deadline})",
+            preempting.completion.get(&2)
+        );
+        assert!(preempting.preemptions >= 1, "the pin never fired");
+        assert!(
+            preempting.queue_depth.len() < capped.queue_depth.len(),
+            "uncapped blocks must need fewer dispatch decisions: {} >= {}",
+            preempting.queue_depth.len(),
+            capped.queue_depth.len()
+        );
+    }
+
+    #[test]
+    fn preemption_with_no_deadlines_is_identical() {
+        // Zero-urgency differential at the selector level: with no
+        // deadlines anywhere, the preemption-enabled selector defers to
+        // Kernelet wholesale exactly like the PR-4 selector.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 2, 9);
+        let cost = PreemptCost::for_gpu(&coord.gpu);
+        let a = Engine::new(&coord).run_source(
+            &mut DeadlineSelector::new().with_preemption(cost),
+            &mut ReplaySource::from_stream(&stream),
+        );
+        let b = Engine::new(&coord)
+            .run_source(&mut DeadlineSelector::new(), &mut ReplaySource::from_stream(&stream));
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.slice_trace, b.slice_trace);
+        assert_eq!(a.preemptions, 0);
     }
 
     #[test]

@@ -59,18 +59,81 @@ use crate::kernel::{KernelInstance, KernelSpec, Qos, ServiceClass};
 use crate::stats::percentile;
 use crate::workload::{ArrivalSource, Stream};
 
+/// The cost of cutting a running pair block short (mid-slice
+/// preemption), as a deadline-aware selector models it.
+///
+/// Preempting a co-schedule is not free on real hardware: the in-flight
+/// slice round must *drain* (thread blocks cannot be evicted), and the
+/// preempted kernels' residuals must be *relaunched* later as fresh
+/// slices. The drain half is modeled implicitly — the engine always
+/// finishes the round in flight before yielding — so the configured
+/// cost is the relaunch half, charged to the device clock at the
+/// preemption point, plus a drain *estimate* used on the selector side
+/// to size the break-even window ([`PreemptCost::break_even_secs`]):
+/// a deadline closer than `drain + relaunch` cannot be saved by
+/// preempting, so the selector yields that much ahead of urgency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptCost {
+    /// Relaunch overhead in seconds, charged when a block is cut short.
+    pub relaunch_secs: f64,
+    /// Estimated drain time of one in-flight round in seconds (the
+    /// selector-side half of the break-even window; the engine models
+    /// the actual drain by finishing the round).
+    pub drain_secs: f64,
+}
+
+impl PreemptCost {
+    /// Derive the cost from a device profile: the relaunch half is the
+    /// device's per-slice launch overhead for the *two* slices a
+    /// preempted pair re-launches; the drain estimate matches it (a
+    /// slice sized near the launch-overhead budget drains on the same
+    /// scale).
+    pub fn for_gpu(gpu: &crate::config::GpuConfig) -> Self {
+        let relaunch = gpu.cycles_to_secs(2.0 * gpu.launch_overhead_cycles);
+        Self { relaunch_secs: relaunch, drain_secs: relaunch }
+    }
+
+    /// A uniform cost knob (relaunch = drain = `secs`), the CLI's
+    /// `--preempt-cost` shape.
+    pub fn uniform(secs: f64) -> Self {
+        assert!(secs.is_finite() && secs >= 0.0, "preempt cost {secs} must be non-negative");
+        Self { relaunch_secs: secs, drain_secs: secs }
+    }
+
+    /// The window inside which preemption can no longer save a
+    /// deadline: drain the in-flight round, then relaunch.
+    pub fn break_even_secs(&self) -> f64 {
+        self.drain_secs + self.relaunch_secs
+    }
+}
+
+/// A preemption pin a selector attaches to a pair [`Decision`]: the
+/// engine cuts the block at the first round boundary at or past
+/// `at_secs` and charges `relaunch_secs` of overhead to the clock
+/// ([`ExecutionReport::preemptions`] counts the cuts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptPoint {
+    /// Absolute clock time (seconds) past which the block must yield.
+    pub at_secs: f64,
+    /// Relaunch overhead (seconds) charged when the cut happens.
+    pub relaunch_secs: f64,
+}
+
 /// A co-schedule decision produced by a [`Selector`]: the paper's
 /// `<K1, K2, size1, size2>` tuple plus the residency split behind it.
 #[derive(Debug, Clone)]
 pub struct Decision {
     /// Instance ids of the chosen kernels.
     pub k1: u64,
+    /// Partner instance id.
     pub k2: u64,
     /// Per-SM resident blocks for each kernel.
     pub b1: u32,
+    /// Per-SM resident blocks for the partner.
     pub b2: u32,
     /// Slice sizes in grid blocks.
     pub size1: u32,
+    /// Partner slice size in grid blocks.
     pub size2: u32,
     /// Concurrent IPCs the selector expects (model or measurement);
     /// informational, surfaced through the trace observer.
@@ -83,6 +146,11 @@ pub struct Decision {
     /// becomes due; a deadline-aware selector sets a small cap so
     /// urgency is re-evaluated at slice granularity.
     pub rounds_cap: Option<u32>,
+    /// Mid-slice preemption pin: cut the block at the first round
+    /// boundary past [`PreemptPoint::at_secs`], charging the relaunch
+    /// overhead. `None` (the default) never preempts — the block runs
+    /// to its natural boundary exactly as before preemption existed.
+    pub preempt: Option<PreemptPoint>,
 }
 
 impl From<CoSchedule> for Decision {
@@ -97,6 +165,7 @@ impl From<CoSchedule> for Decision {
             cipc: cs.cipc,
             cp: cs.cp,
             rounds_cap: None,
+            preempt: None,
         }
     }
 }
@@ -129,11 +198,11 @@ impl SchedCtx<'_, '_> {
     }
 
     /// Estimated seconds to drain `k`'s residual blocks solo on this
-    /// device (cached whole-kernel measurement scaled by the residual) —
-    /// the load model deadline slack is computed against.
+    /// device — the load model deadline slack is computed against
+    /// (delegates to [`Coordinator::est_remaining_secs`], the shared
+    /// cost model).
     pub fn est_remaining_secs(&self, k: &KernelInstance) -> f64 {
-        let full = self.coord.gpu.cycles_to_secs(self.coord.simcache.solo_full(&k.spec));
-        full * f64::from(k.remaining_blocks()) / f64::from(k.spec.grid_blocks)
+        self.coord.est_remaining_secs(k)
     }
 }
 
@@ -264,10 +333,13 @@ impl TimingBackend for SimCache {
 /// One dispatched slice (pair round or solo) in the execution trace.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SliceRecord {
+    /// Clock at dispatch, in cycles.
     pub start_cycles: f64,
+    /// Clock when the round drained, in cycles.
     pub end_cycles: f64,
     /// Primary kernel: (instance id implicit in `k1`), blocks dispatched.
     pub k1: u64,
+    /// Blocks of `k1` dispatched this round.
     pub blocks1: u32,
     /// Partner slice when the round was co-scheduled.
     pub k2: Option<(u64, u32)>,
@@ -319,7 +391,9 @@ pub struct ClassStats {
     /// Nearest-rank turnaround percentiles (0.0 when nothing of the
     /// class completed).
     pub p50_turnaround_secs: f64,
+    /// 95th-percentile turnaround (nearest rank), seconds.
     pub p95_turnaround_secs: f64,
+    /// 99th-percentile turnaround (nearest rank), seconds.
     pub p99_turnaround_secs: f64,
     /// Turnarounds of completed kernels, sorted ascending — kept so
     /// fleet-level reports can merge devices and recompute percentiles
@@ -370,11 +444,14 @@ impl ClassStats {
 /// The QoS breakdown of a run: one [`ClassStats`] per service class.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct QosReport {
+    /// Latency-class outcome.
     pub latency: ClassStats,
+    /// Batch-class outcome.
     pub batch: ClassStats,
 }
 
 impl QosReport {
+    /// Deadline misses across both classes.
     pub fn total_deadline_misses(&self) -> usize {
         self.latency.deadline_misses + self.batch.deadline_misses
     }
@@ -404,6 +481,10 @@ pub struct ExecutionReport {
     pub coschedule_rounds: u64,
     /// Solo slices dispatched (no partner available).
     pub solo_slices: u64,
+    /// Pair blocks cut short at a [`Decision::preempt`] pin (each cut
+    /// also charged its relaunch overhead to the clock). 0 whenever no
+    /// selector pins preemption — the pre-preemption engine exactly.
+    pub preemptions: u64,
     /// Per-instance completion times (seconds), by instance id.
     pub completion: HashMap<u64, f64>,
     /// Mean turnaround (completion − arrival) over completed kernels,
@@ -476,6 +557,7 @@ pub struct Engine<'a> {
     completion: HashMap<u64, f64>,
     rounds: u64,
     solo_slices: u64,
+    preemptions: u64,
     slice_trace: Vec<SliceRecord>,
     queue_depth: Vec<(f64, usize)>,
     /// (id, arrival time, qos) of every submission, in submission order
@@ -514,6 +596,7 @@ impl<'a> Engine<'a> {
             completion: HashMap::new(),
             rounds: 0,
             solo_slices: 0,
+            preemptions: 0,
             slice_trace: Vec::new(),
             queue_depth: Vec::new(),
             submitted: Vec::new(),
@@ -712,6 +795,21 @@ impl<'a> Engine<'a> {
     /// For an open-loop source this is decision-for-decision identical
     /// to [`Engine::run`] over the equivalent [`Stream`] — the
     /// differential tests in `tests/arrival_sources.rs` pin that.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use kernelet::config::GpuConfig;
+    /// use kernelet::coordinator::{Coordinator, Engine, KerneletSelector};
+    /// use kernelet::workload::{Mix, ReplaySource, Stream};
+    ///
+    /// let coord = Coordinator::new(&GpuConfig::c2050());
+    /// let stream = Stream::saturated(Mix::MIX, 1, 42);
+    /// let report = Engine::new(&coord)
+    ///     .run_source(&mut KerneletSelector, &mut ReplaySource::from_stream(&stream));
+    /// assert_eq!(report.kernels_completed, stream.len());
+    /// assert_eq!(report.incomplete, 0);
+    /// ```
     pub fn run_source(
         mut self,
         selector: &mut dyn Selector,
@@ -852,6 +950,7 @@ impl<'a> Engine<'a> {
             incomplete: arrivals.len().saturating_sub(completed_of_stream),
             coschedule_rounds: self.rounds,
             solo_slices: self.solo_slices,
+            preemptions: self.preemptions,
             mean_turnaround_secs: turn / completed_of_stream.max(1) as f64,
             throughput_kps: self.completion.len() as f64 / total_secs.max(1e-12),
             utilization: if self.clock_cycles > 0.0 {
@@ -971,7 +1070,22 @@ impl<'a> Engine<'a> {
             rounds_in_block += 1;
             let capped = d.rounds_cap.map_or(false, |cap| rounds_in_block >= cap);
             if drained || arrival_due || capped {
+                // Natural boundary: draining, an arrival, or a planned
+                // cap — no preemption cost, exactly the pre-preemption
+                // engine.
                 break;
+            }
+            if let Some(p) = d.preempt {
+                if t >= p.at_secs {
+                    // Mid-slice preemption: the round that just drained
+                    // was the "drain" half of the cost; charge the
+                    // relaunch half for resuming the residuals later.
+                    let cycles = p.relaunch_secs * self.coord.gpu.clock_hz();
+                    self.clock_cycles += cycles;
+                    self.busy_cycles += cycles;
+                    self.preemptions += 1;
+                    break;
+                }
             }
         }
         self.queue.retain(|k| !k.is_finished());
@@ -1167,6 +1281,75 @@ mod tests {
         // Empty classes merge as identities.
         let e = ClassStats::default();
         assert_eq!(e.merge(&a), a);
+    }
+
+    #[test]
+    fn preempt_pin_cuts_pair_blocks_and_charges_relaunch() {
+        // A selector that pins every pair block to yield immediately:
+        // each block is cut after its first round (the drain half) and
+        // pays the relaunch overhead. The dispatch sequence is
+        // otherwise identical to the unpinned engine (the greedy pick
+        // is deterministic in the unchanged pending set), so the whole
+        // makespan difference is exactly the charged overhead.
+        struct PinnedKernelet {
+            relaunch_secs: f64,
+        }
+        impl Selector for PinnedKernelet {
+            fn name(&self) -> &'static str {
+                "pinned"
+            }
+            fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+                ctx.coord.find_coschedule(ctx.pending).map(Decision::from).map(|d| Decision {
+                    preempt: Some(PreemptPoint {
+                        at_secs: 0.0,
+                        relaunch_secs: self.relaunch_secs,
+                    }),
+                    ..d
+                })
+            }
+        }
+
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::saturated(Mix::MIX, 2, 5);
+        let base = Engine::new(&coord).run(&mut KerneletSelector, &stream);
+        assert_eq!(base.preemptions, 0, "no pin, no preemption");
+        let relaunch_secs = 1e-4;
+        let rep =
+            Engine::new(&coord).run(&mut PinnedKernelet { relaunch_secs }, &stream);
+        assert!(rep.preemptions > 0, "always-due pin never fired");
+        assert_eq!(rep.kernels_completed, stream.len(), "preemption lost kernels");
+        let dispatched = rep.blocks_dispatched();
+        for k in &stream.instances {
+            assert_eq!(
+                dispatched.get(&k.id).copied().unwrap_or(0),
+                k.spec.grid_blocks as u64,
+                "kernel {} blocks after preemption",
+                k.id
+            );
+        }
+        let charged = rep.preemptions as f64 * relaunch_secs;
+        assert!(
+            (rep.total_secs - base.total_secs - charged).abs() < 1e-9,
+            "makespan delta {} != charged overhead {charged}",
+            rep.total_secs - base.total_secs
+        );
+        // A pin that never becomes due is a no-op: bit-identical run.
+        struct FuturePin;
+        impl Selector for FuturePin {
+            fn name(&self) -> &'static str {
+                "future-pin"
+            }
+            fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+                ctx.coord.find_coschedule(ctx.pending).map(Decision::from).map(|d| Decision {
+                    preempt: Some(PreemptPoint { at_secs: 1e12, relaunch_secs: 1.0 }),
+                    ..d
+                })
+            }
+        }
+        let never = Engine::new(&coord).run(&mut FuturePin, &stream);
+        assert_eq!(never.preemptions, 0);
+        assert_eq!(never.total_cycles, base.total_cycles);
+        assert_eq!(never.slice_trace, base.slice_trace);
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Per-device completion-horizon prediction (ETA) for deadline-aware
+//! routing.
+//!
+//! The fleet router used to see only *instantaneous backlog*
+//! ([`DispatchPolicy::LeastLoaded`](super::DispatchPolicy) sums queued
+//! residuals), which answers "who is least busy **now**" but not the
+//! question a deadline actually asks: "who would finish this kernel
+//! **soonest**". An [`EtaModel`] answers the second question: it
+//! projects a device's completion horizon from its live pending set —
+//! the same cached whole-kernel measurements
+//! [`SchedCtx::est_remaining_secs`](super::SchedCtx::est_remaining_secs)
+//! scales — and then *calibrates* that projection online against the
+//! completions the device actually reports (Pai et al.'s preemptive
+//! thread-block scheduling makes the same move: cheap static estimates,
+//! corrected by an online runtime predictor).
+//!
+//! The raw estimate is systematically biased: it prices every queued
+//! residual at its *solo* rate, but a Kernelet device co-schedules
+//! (finishing sooner than the solo sum) and pays launch overhead per
+//! slice (finishing later on short kernels). The bias is stable for a
+//! given device × workload, which is exactly what a multiplicative
+//! correction learns: every observed completion updates an EWMA of the
+//! observed/predicted ratio, and subsequent projections are scaled by
+//! it. [`EtaModel::stats`] exposes the error the model is still making
+//! ([`EtaStats`], surfaced per device in
+//! [`MultiGpuReport::eta`](super::MultiGpuReport::eta)) so calibration
+//! quality is observable, not assumed.
+//!
+//! Two properties the unit tests pin:
+//!
+//! - **Monotonicity** — adding pending work never shortens the
+//!   projected horizon (a router that believed otherwise would dogpile
+//!   a busy device).
+//! - **Calibration** — replaying the same trace twice, the second pass
+//!   (with the correction learned on the first) has a smaller mean
+//!   absolute prediction error.
+
+use std::collections::HashMap;
+
+use super::greedy::Coordinator;
+use crate::kernel::KernelInstance;
+
+/// EWMA gain for the observed/predicted correction ratio. Small enough
+/// to ride out single-kernel noise, large enough that a fleet-level
+/// bias is learned within a few dozen completions.
+pub const DEFAULT_CALIBRATION_GAIN: f64 = 0.2;
+
+/// Bounds on the learned correction factor: a ratio outside this range
+/// means the estimate is broken (or the observation is garbage), not
+/// that the device is really 100× slower than its cached solo runs.
+const CORRECTION_BOUNDS: (f64, f64) = (0.1, 10.0);
+
+/// Observable calibration quality of one device's [`EtaModel`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EtaStats {
+    /// Completions the model has scored (predicted at routing time,
+    /// observed at completion time).
+    pub samples: usize,
+    /// Mean absolute prediction error in seconds over those samples.
+    pub mean_abs_err_secs: f64,
+    /// Mean *signed* error in seconds (positive = kernels finish later
+    /// than projected — the model is optimistic).
+    pub mean_err_secs: f64,
+    /// The multiplicative correction currently applied to raw
+    /// solo-rate estimates (1.0 = uncalibrated).
+    pub correction: f64,
+}
+
+/// Sample-weighted mean absolute prediction error across a fleet's
+/// per-device [`EtaStats`] — the one aggregation the `routing` figure,
+/// bench and CLI all render. `None` when no device has scored a
+/// completion yet.
+pub fn weighted_mean_abs_err_secs(stats: &[EtaStats]) -> Option<f64> {
+    let samples: usize = stats.iter().map(|e| e.samples).sum();
+    if samples == 0 {
+        return None;
+    }
+    Some(
+        stats.iter().map(|e| e.mean_abs_err_secs * e.samples as f64).sum::<f64>()
+            / samples as f64,
+    )
+}
+
+/// Projects one device's completion horizon and calibrates the
+/// projection against observed completions.
+///
+/// The router drives the model with three calls per kernel:
+/// [`EtaModel::projected_finish_secs`] when weighing the device as a
+/// destination, [`EtaModel::record_dispatch`] once the kernel is
+/// actually routed there, and [`EtaModel::observe_completion`] when the
+/// device reports the kernel done (the completion event that re-checks
+/// feasibility: a device whose kernels keep finishing late grows its
+/// correction, projects later finishes, and stops winning urgent work).
+#[derive(Debug, Clone)]
+pub struct EtaModel {
+    /// Multiplicative correction on raw solo-rate estimates
+    /// (EWMA of observed/predicted duration ratios).
+    correction: f64,
+    /// EWMA gain for correction updates.
+    gain: f64,
+    /// Routed-but-not-yet-completed kernels: id → (routing-time clock,
+    /// predicted absolute finish).
+    in_flight: HashMap<u64, (f64, f64)>,
+    samples: usize,
+    abs_err_sum: f64,
+    err_sum: f64,
+}
+
+impl Default for EtaModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EtaModel {
+    /// An uncalibrated model (correction 1.0, default gain).
+    pub fn new() -> Self {
+        Self::with_gain(DEFAULT_CALIBRATION_GAIN)
+    }
+
+    /// An uncalibrated model with an explicit EWMA gain in `(0, 1]`
+    /// (0 would never learn; tests use 1.0 to make single observations
+    /// land immediately).
+    pub fn with_gain(gain: f64) -> Self {
+        assert!(gain > 0.0 && gain <= 1.0, "calibration gain {gain} out of (0, 1]");
+        Self {
+            correction: 1.0,
+            gain,
+            in_flight: HashMap::new(),
+            samples: 0,
+            abs_err_sum: 0.0,
+            err_sum: 0.0,
+        }
+    }
+
+    /// The calibration factor currently applied (1.0 until the first
+    /// observation lands).
+    pub fn correction(&self) -> f64 {
+        self.correction
+    }
+
+    /// Estimated seconds to drain `k`'s residual blocks solo on
+    /// `coord`'s device — [`Coordinator::est_remaining_secs`], the one
+    /// cost model deadline urgency and ETA projections share, so the
+    /// router and the scheduler price work identically.
+    pub fn est_remaining_secs(coord: &Coordinator, k: &KernelInstance) -> f64 {
+        coord.est_remaining_secs(k)
+    }
+
+    /// Calibrated completion horizon of a device at global time `now`:
+    /// how many seconds until everything it already holds is projected
+    /// to drain. `clock_secs` is the device engine's clock (it may run
+    /// ahead of `now` while draining a backlog); `pending` its live
+    /// queue. Monotone in the pending set: adding work never shortens
+    /// the horizon.
+    pub fn horizon_secs(
+        &self,
+        coord: &Coordinator,
+        pending: &[KernelInstance],
+        clock_secs: f64,
+        now: f64,
+    ) -> f64 {
+        let overrun = (clock_secs - now).max(0.0);
+        let queued: f64 = pending.iter().map(|k| Self::est_remaining_secs(coord, k)).sum();
+        overrun + self.correction * queued
+    }
+
+    /// Projected *absolute* completion time of arrival `k` if it were
+    /// routed to this device at `now`: the device's horizon plus the
+    /// kernel's own calibrated cost. This is what
+    /// [`DispatchPolicy::EarliestFeasible`](super::DispatchPolicy)
+    /// compares against the kernel's deadline.
+    pub fn projected_finish_secs(
+        &self,
+        coord: &Coordinator,
+        pending: &[KernelInstance],
+        clock_secs: f64,
+        now: f64,
+        k: &KernelInstance,
+    ) -> f64 {
+        now + self.horizon_secs(coord, pending, clock_secs, now)
+            + self.correction * Self::est_remaining_secs(coord, k)
+    }
+
+    /// Remember the projection made when `k` was routed here, so the
+    /// matching completion can be scored. `now` is the routing-time
+    /// global clock the projection was made at.
+    pub fn record_dispatch(&mut self, id: u64, now: f64, predicted_finish_secs: f64) {
+        self.in_flight.insert(id, (now, predicted_finish_secs));
+    }
+
+    /// Score a completion against the projection recorded at routing
+    /// time and fold the observed/predicted duration ratio into the
+    /// correction. Unknown ids (kernels routed before the model was
+    /// installed, or never recorded) are ignored.
+    pub fn observe_completion(&mut self, id: u64, t_secs: f64) {
+        let Some((routed_at, predicted)) = self.in_flight.remove(&id) else { return };
+        let err = t_secs - predicted;
+        self.samples += 1;
+        self.abs_err_sum += err.abs();
+        self.err_sum += err;
+        let predicted_span = predicted - routed_at;
+        let observed_span = t_secs - routed_at;
+        if predicted_span > 0.0 && observed_span > 0.0 {
+            let ratio = observed_span / predicted_span;
+            self.correction = (self.correction * ((1.0 - self.gain) + self.gain * ratio))
+                .clamp(CORRECTION_BOUNDS.0, CORRECTION_BOUNDS.1);
+        }
+    }
+
+    /// Calibration quality so far (zeroes before the first scored
+    /// completion).
+    pub fn stats(&self) -> EtaStats {
+        let n = self.samples.max(1) as f64;
+        EtaStats {
+            samples: self.samples,
+            mean_abs_err_secs: self.abs_err_sum / n,
+            mean_err_secs: self.err_sum / n,
+            correction: self.correction,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::coordinator::{Engine, KerneletSelector};
+    use crate::kernel::BenchmarkApp;
+    use crate::workload::{Mix, ReplaySource, Stream};
+
+    #[test]
+    fn horizon_is_monotone_in_pending_work() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let model = EtaModel::new();
+        let mut pending: Vec<KernelInstance> = Vec::new();
+        let mut last = model.horizon_secs(&coord, &pending, 0.0, 0.0);
+        assert_eq!(last, 0.0, "empty queue, no overrun: horizon must be zero");
+        for (i, app) in [BenchmarkApp::MM, BenchmarkApp::PC, BenchmarkApp::TEA, BenchmarkApp::MM]
+            .iter()
+            .enumerate()
+        {
+            pending.push(KernelInstance::new(i as u64, app.spec(), 0.0));
+            let h = model.horizon_secs(&coord, &pending, 0.0, 0.0);
+            assert!(h > last, "adding {} shortened the horizon: {h} <= {last}", app.name());
+            last = h;
+        }
+        // A partially drained residual costs less than a whole kernel
+        // but still never negative.
+        let mut half = KernelInstance::new(9, BenchmarkApp::MM.spec(), 0.0);
+        let grid = half.spec.grid_blocks;
+        let _ = half.take_slice(grid / 2);
+        let whole = EtaModel::est_remaining_secs(&coord, &pending[0]);
+        let part = EtaModel::est_remaining_secs(&coord, &half);
+        assert!(part > 0.0 && part < whole);
+        // Clock overrun past `now` extends the horizon too.
+        let ahead = model.horizon_secs(&coord, &pending, 5.0, 2.0);
+        assert!((ahead - (last + 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_beats_least_loaded_tiebreak_semantics() {
+        // The projected finish of an arrival is horizon + its own cost:
+        // strictly larger than the bare horizon, and monotone in the
+        // correction factor.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let pending = [KernelInstance::new(0, BenchmarkApp::PC.spec(), 0.0)];
+        let k = KernelInstance::new(1, BenchmarkApp::MM.spec(), 0.0);
+        let mut model = EtaModel::with_gain(1.0);
+        let p1 = model.projected_finish_secs(&coord, &pending, 0.0, 0.0, &k);
+        assert!(p1 > model.horizon_secs(&coord, &pending, 0.0, 0.0));
+        // Teach the model the device runs 2x slower than its estimate.
+        model.record_dispatch(7, 0.0, 1.0);
+        model.observe_completion(7, 2.0);
+        assert!((model.correction() - 2.0).abs() < 1e-9);
+        let p2 = model.projected_finish_secs(&coord, &pending, 0.0, 0.0, &k);
+        assert!((p2 - 2.0 * p1).abs() < 1e-9, "correction must scale the projection");
+    }
+
+    #[test]
+    fn observe_without_record_is_ignored() {
+        let mut model = EtaModel::new();
+        model.observe_completion(42, 1.0);
+        assert_eq!(model.stats().samples, 0);
+        assert_eq!(model.correction(), 1.0);
+    }
+
+    /// Replay the same trace twice; the second pass runs with the
+    /// correction the first pass learned and must predict better
+    /// (smaller mean absolute error).
+    #[test]
+    fn calibration_shrinks_error_on_the_replay_trace() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        // A backlogged stream: arrival-time projections are dominated
+        // by queue-drain estimates, which price co-scheduled work at
+        // its solo rate — a systematic bias for calibration to learn.
+        let stream = Stream::poisson(Mix::MIX, 12, 2000.0, 0xE7A);
+
+        let run_pass = |model: &mut EtaModel| -> f64 {
+            let mut engine = Engine::new(&coord);
+            let mut sel = KerneletSelector;
+            let mut observed = 0usize;
+            for k in stream.arrivals() {
+                engine.run_until(&mut sel, k.arrival_time, true);
+                // Score completions as they land (the router's cadence).
+                for &(id, t) in &engine.completion_log()[observed..] {
+                    model.observe_completion(id, t);
+                }
+                observed = engine.completion_log().len();
+                let now = engine.clock_secs().max(k.arrival_time);
+                let clock = engine.clock_secs();
+                let predicted =
+                    model.projected_finish_secs(&coord, engine.pending(), clock, now, &k);
+                model.record_dispatch(k.id, now, predicted);
+                engine.submit(k);
+            }
+            engine.drain(&mut sel);
+            for &(id, t) in &engine.completion_log()[observed..] {
+                model.observe_completion(id, t);
+            }
+            let s = model.stats();
+            assert_eq!(s.samples, stream.len());
+            s.mean_abs_err_secs
+        };
+
+        let mut cold = EtaModel::new();
+        let err_uncalibrated = run_pass(&mut cold);
+
+        // Second pass: fresh error counters, learned correction kept.
+        let mut warm = EtaModel::new();
+        warm.correction = cold.correction;
+        let err_calibrated = run_pass(&mut warm);
+
+        assert!(
+            cold.stats().correction != 1.0,
+            "first pass never learned anything: {:?}",
+            cold.stats()
+        );
+        assert!(
+            err_calibrated < err_uncalibrated,
+            "calibration must shrink replay error: {err_calibrated} >= {err_uncalibrated}"
+        );
+    }
+
+    #[test]
+    fn correction_stays_bounded() {
+        let mut model = EtaModel::with_gain(1.0);
+        for i in 0..50 {
+            model.record_dispatch(i, 0.0, 1e-6); // absurdly optimistic
+            model.observe_completion(i, 1e3);
+        }
+        assert!(model.correction() <= CORRECTION_BOUNDS.1);
+        let mut model = EtaModel::with_gain(1.0);
+        for i in 0..50 {
+            model.record_dispatch(i, 0.0, 1e3); // absurdly pessimistic
+            model.observe_completion(i, 1e-6);
+        }
+        assert!(model.correction() >= CORRECTION_BOUNDS.0);
+    }
+
+    #[test]
+    fn replay_source_projection_is_deterministic() {
+        // Same trace, same model state => identical projections (the
+        // router's decisions must be reproducible from the seed).
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let stream = Stream::poisson(Mix::MIX, 4, 300.0, 11);
+        let mut src = ReplaySource::from_stream(&stream);
+        let model = EtaModel::new();
+        let mut projections = Vec::new();
+        while let Some(k) = src.next_arrival() {
+            projections
+                .push(model.projected_finish_secs(&coord, &[], k.arrival_time, k.arrival_time, &k));
+        }
+        let mut src = ReplaySource::from_stream(&stream);
+        let mut again = Vec::new();
+        while let Some(k) = src.next_arrival() {
+            let t = k.arrival_time;
+            again.push(model.projected_finish_secs(&coord, &[], t, t, &k));
+        }
+        assert_eq!(projections, again);
+    }
+}

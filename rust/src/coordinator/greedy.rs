@@ -22,12 +22,15 @@ use crate::slicer::SliceSizeCache;
 pub struct CoSchedule {
     /// Instance ids of the chosen kernels.
     pub k1: u64,
+    /// Partner instance id.
     pub k2: u64,
     /// Per-SM resident blocks for each kernel.
     pub b1: u32,
+    /// Per-SM resident blocks for the partner.
     pub b2: u32,
     /// Slice sizes in grid blocks (balanced, Eq. 8).
     pub size1: u32,
+    /// Partner slice size in grid blocks (balanced, Eq. 8).
     pub size2: u32,
     /// Model-predicted concurrent IPCs.
     pub cipc: [f64; 2],
@@ -37,11 +40,17 @@ pub struct CoSchedule {
 
 /// The coordinator: owns the per-GPU caches and scheduling parameters.
 pub struct Coordinator {
+    /// The device this coordinator schedules for.
     pub gpu: GpuConfig,
+    /// Pre-execution profiling cache (PUR/MUR/IPC per kernel).
     pub profiles: ProfileCache,
+    /// Minimum-slice-size search cache.
     pub slice_sizes: SliceSizeCache,
+    /// Solo/pair simulator measurement cache (the timing substrate).
     pub simcache: SimCache,
+    /// Candidate-pair pruning thresholds (paper Table 6 defaults).
     pub prune: PruneParams,
+    /// Markov-model state granularity.
     pub granularity: Granularity,
     /// Slicing overhead budget in percent (paper default: 2%).
     pub overhead_budget_pct: f64,
@@ -59,6 +68,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// A coordinator for `gpu` with paper-default parameters and cold
+    /// caches.
     pub fn new(gpu: &GpuConfig) -> Self {
         let prune = match gpu.arch {
             crate::config::Arch::Fermi => PruneParams::paper_default_c2050(),
@@ -105,6 +116,18 @@ impl Coordinator {
     /// Minimum slice size (cached) for a kernel spec.
     pub fn min_slice(&self, spec: &KernelSpec) -> u32 {
         self.slice_sizes.get(&self.gpu, spec, self.overhead_budget_pct)
+    }
+
+    /// Estimated seconds to drain `k`'s residual blocks solo on this
+    /// device: the cached whole-kernel measurement scaled by the
+    /// residual fraction. The one cost model deadline urgency
+    /// ([`SchedCtx::est_remaining_secs`](super::SchedCtx::est_remaining_secs)),
+    /// router load estimates and ETA projections
+    /// ([`super::EtaModel`]) all share — changing the pricing here
+    /// changes all three together.
+    pub fn est_remaining_secs(&self, k: &KernelInstance) -> f64 {
+        let full = self.gpu.cycles_to_secs(self.simcache.solo_full(&k.spec));
+        full * f64::from(k.remaining_blocks()) / f64::from(k.spec.grid_blocks)
     }
 
     /// Evaluate the model over all feasible splits for a kernel pair;

@@ -24,12 +24,15 @@
 //! [`executor::run_kernelet`] and the [`baselines`] entry points are
 //! thin adapters binding a `Selector` to the engine; [`multigpu`] runs
 //! one engine per device and routes arrivals online off live engine
-//! load. There is no other clock-advancing dispatch loop in the crate.
+//! load ([`eta`] adds the calibrated per-device completion-horizon
+//! model `EarliestFeasible` routing consults). There is no other
+//! clock-advancing dispatch loop in the crate.
 
 pub mod admission;
 pub mod baselines;
 pub mod deadline;
 pub mod engine;
+pub mod eta;
 pub mod executor;
 pub mod greedy;
 pub mod multigpu;
@@ -44,8 +47,10 @@ pub use baselines::{run_base, run_monte_carlo, run_opt, OptSelector, RandomSelec
 pub use deadline::DeadlineSelector;
 pub use engine::{
     ClassStats, Decision, Engine, ExecutionReport, FifoSelector, KerneletSelector, Observer,
-    PairTiming, QosReport, SchedCtx, Selector, SliceRecord, StderrTrace, TimingBackend,
+    PairTiming, PreemptCost, PreemptPoint, QosReport, SchedCtx, Selector, SliceRecord,
+    StderrTrace, TimingBackend,
 };
+pub use eta::{weighted_mean_abs_err_secs, EtaModel, EtaStats};
 pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};
 pub use multigpu::{DispatchPolicy, MultiGpuDispatcher, MultiGpuReport, ShedPoint};

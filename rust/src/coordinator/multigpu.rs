@@ -27,6 +27,21 @@
 //!   next latency arrival will need. Devices under this policy also
 //!   schedule with the deadline-aware selector instead of plain
 //!   Kernelet.
+//! - [`DispatchPolicy::EarliestFeasible`] — ETA-driven deadline
+//!   routing: each device carries an [`EtaModel`] that projects its
+//!   completion horizon from the live pending set and *calibrates*
+//!   that projection against every completion the device reports.
+//!   Latency-class kernels go to the device whose projected finish
+//!   beats the deadline by the widest margin (the deadline is the same
+//!   everywhere, so that is the earliest projected finish — which is
+//!   also the objective for undeadlined latency work); batch kernels
+//!   keep `SloAware`'s round-robin wheel. Because the models re-score
+//!   on completion events, a device that falls behind its projections
+//!   grows its correction factor, projects later finishes, and stops
+//!   winning urgent work. Devices under this policy schedule with the
+//!   deadline-aware selector with mid-slice preemption enabled
+//!   ([`DeadlineSelector::with_preemption`]); the per-device
+//!   calibration error is surfaced in [`MultiGpuReport::eta`].
 //!
 //! Routing composes with admission control
 //! ([`MultiGpuDispatcher::with_admission`]): a fleet can shed at the
@@ -37,7 +52,10 @@
 
 use super::admission::{AdmissionController, AdmissionDecision, AdmissionReport, AdmissionSpec};
 use super::deadline::DeadlineSelector;
-use super::engine::{Engine, ExecutionReport, KerneletSelector, QosReport, SchedCtx, Selector};
+use super::engine::{
+    Engine, ExecutionReport, KerneletSelector, PreemptCost, QosReport, SchedCtx, Selector,
+};
+use super::eta::{EtaModel, EtaStats};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
 use crate::kernel::{KernelInstance, ServiceClass};
@@ -46,11 +64,19 @@ use crate::workload::{ArrivalSource, Stream};
 /// Routing policy for arriving kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchPolicy {
+    /// Oblivious rotation over the devices — the baseline.
     RoundRobin,
+    /// Route to the device whose live backlog plus the arrival's
+    /// estimated cost is smallest.
     LeastLoaded,
     /// Latency class → least backlogged device; batch class →
     /// round-robin. Per-device engines run the deadline-aware selector.
     SloAware,
+    /// Latency class → the device with the earliest *calibrated*
+    /// projected completion ([`EtaModel`]); batch class keeps the
+    /// `SloAware` round-robin wheel. Devices run the deadline-aware
+    /// selector with mid-slice preemption enabled.
+    EarliestFeasible,
 }
 
 /// Where the admission gate sits in a multi-GPU deployment.
@@ -84,6 +110,11 @@ pub struct MultiGpuReport {
     /// under [`ShedPoint::Router`], the per-device controllers merged
     /// under [`ShedPoint::Device`], all-admitted otherwise.
     pub admission: AdmissionReport,
+    /// Per-device ETA calibration quality (samples, mean absolute /
+    /// signed prediction error, learned correction), aligned with
+    /// `per_device`. Empty unless the run routed with
+    /// [`DispatchPolicy::EarliestFeasible`].
+    pub eta: Vec<EtaStats>,
     /// Full per-device engine reports (slice traces, queue depth,
     /// utilization, per-class QoS + admission), aligned with
     /// `per_device`.
@@ -105,20 +136,37 @@ pub struct MultiGpuDispatcher {
     devices: Vec<Coordinator>,
     policy: DispatchPolicy,
     admission: Option<(AdmissionSpec, ShedPoint)>,
+    /// Mid-slice preemption cost for the deadline-aware per-device
+    /// selectors. `None` uses each device's own profile-derived default
+    /// under [`DispatchPolicy::EarliestFeasible`] and disables
+    /// preemption under [`DispatchPolicy::SloAware`] (the PR-4
+    /// behavior).
+    preempt: Option<PreemptCost>,
 }
 
-/// Per-run routing counters: the global arrival index (round-robin's
-/// wheel) and the batch-only index (SLO-aware's separate wheel).
-#[derive(Default)]
-struct RouteCounters {
+/// Per-run routing state: the global arrival index (round-robin's
+/// wheel), the batch-only index (the SLO-aware / earliest-feasible
+/// batch wheel), and — under [`DispatchPolicy::EarliestFeasible`] —
+/// one [`EtaModel`] per device plus the completion-log cursors its
+/// calibration consumes.
+struct RouterState {
     arrivals: usize,
     batch: usize,
+    eta: Option<Vec<EtaModel>>,
+    scored: Vec<usize>,
 }
 
 impl MultiGpuDispatcher {
+    /// A dispatcher over `gpus` (one [`Coordinator`] each) routing with
+    /// `policy`.
     pub fn new(gpus: &[GpuConfig], policy: DispatchPolicy) -> Self {
         assert!(!gpus.is_empty(), "need at least one device");
-        Self { devices: gpus.iter().map(Coordinator::new).collect(), policy, admission: None }
+        Self {
+            devices: gpus.iter().map(Coordinator::new).collect(),
+            policy,
+            admission: None,
+            preempt: None,
+        }
     }
 
     /// Gate arrivals through an admission policy, shed either at the
@@ -128,6 +176,16 @@ impl MultiGpuDispatcher {
         self
     }
 
+    /// Override the mid-slice preemption cost used by the
+    /// deadline-aware per-device selectors (and enable preemption
+    /// under [`DispatchPolicy::SloAware`], which defaults to the
+    /// preemption-free PR-4 behavior).
+    pub fn with_preemption(mut self, cost: PreemptCost) -> Self {
+        self.preempt = Some(cost);
+        self
+    }
+
+    /// Number of devices in the fleet.
     pub fn device_count(&self) -> usize {
         self.devices.len()
     }
@@ -168,30 +226,147 @@ impl MultiGpuDispatcher {
     fn live_load(&self, d: usize, engine: &Engine<'_>, now: f64) -> f64 {
         let coord = &self.devices[d];
         let overrun = (engine.clock_secs() - now).max(0.0);
-        let queued: f64 = engine
-            .pending()
-            .iter()
-            .map(|k| {
-                let full = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&k.spec));
-                full * f64::from(k.remaining_blocks()) / f64::from(k.spec.grid_blocks)
-            })
-            .sum();
+        let queued: f64 =
+            engine.pending().iter().map(|k| coord.est_remaining_secs(k)).sum();
         overrun + queued
     }
 
     /// The per-device scheduling policy this routing policy pairs with:
-    /// deadline-aware engines under [`DispatchPolicy::SloAware`], plain
-    /// Kernelet otherwise.
+    /// deadline-aware engines under [`DispatchPolicy::SloAware`]
+    /// (preemption only when [`Self::with_preemption`] configured it)
+    /// and [`DispatchPolicy::EarliestFeasible`] (preemption always on,
+    /// at the configured or profile-derived cost); plain Kernelet
+    /// otherwise.
     fn make_selectors(&self) -> Vec<Box<dyn Selector>> {
         self.devices
             .iter()
-            .map(|_| -> Box<dyn Selector> {
+            .map(|coord| -> Box<dyn Selector> {
                 match self.policy {
-                    DispatchPolicy::SloAware => Box::new(DeadlineSelector::new()),
+                    DispatchPolicy::SloAware => match self.preempt {
+                        Some(cost) => Box::new(DeadlineSelector::new().with_preemption(cost)),
+                        None => Box::new(DeadlineSelector::new()),
+                    },
+                    DispatchPolicy::EarliestFeasible => {
+                        let cost =
+                            self.preempt.unwrap_or_else(|| PreemptCost::for_gpu(&coord.gpu));
+                        Box::new(DeadlineSelector::new().with_preemption(cost))
+                    }
                     _ => Box::new(KerneletSelector),
                 }
             })
             .collect()
+    }
+
+    /// Fresh per-run routing state (ETA models only under
+    /// [`DispatchPolicy::EarliestFeasible`]).
+    fn router_state(&self) -> RouterState {
+        RouterState {
+            arrivals: 0,
+            batch: 0,
+            eta: match self.policy {
+                DispatchPolicy::EarliestFeasible => {
+                    Some(self.devices.iter().map(|_| EtaModel::new()).collect())
+                }
+                _ => None,
+            },
+            scored: vec![0; self.devices.len()],
+        }
+    }
+
+    /// Score every new completion against the projection recorded at
+    /// routing time — the completion-event feasibility re-check: a
+    /// device whose kernels keep finishing late grows its correction,
+    /// projects later finishes, and stops winning urgent work. No-op
+    /// without ETA models.
+    fn observe_eta(&self, engines: &[Engine<'_>], st: &mut RouterState) {
+        let Some(models) = st.eta.as_mut() else { return };
+        for ((engine, model), cursor) in
+            engines.iter().zip(models.iter_mut()).zip(st.scored.iter_mut())
+        {
+            let log = engine.completion_log();
+            while *cursor < log.len() {
+                let (id, t) = log[*cursor];
+                model.observe_completion(id, t);
+                *cursor += 1;
+            }
+        }
+    }
+
+    /// Earliest-feasible destination for `k`: the device whose
+    /// calibrated projected completion is earliest, returned with that
+    /// projection (so the caller records exactly the value it acted
+    /// on, without recomputing it). The deadline is identical on every
+    /// device, so "beats the deadline by the widest margin" and
+    /// "earliest projected finish" pick the same device — and the
+    /// latter is also the objective when `k` carries no deadline (or
+    /// none is feasible, where the least-infeasible device degrades
+    /// the miss the least).
+    fn earliest_feasible(
+        &self,
+        engines: &[Engine<'_>],
+        models: &[EtaModel],
+        k: &KernelInstance,
+    ) -> (usize, f64) {
+        let now = k.arrival_time;
+        (0..self.devices.len())
+            .map(|d| {
+                models[d].projected_finish_secs(
+                    &self.devices[d],
+                    engines[d].pending(),
+                    engines[d].clock_secs(),
+                    now,
+                    k,
+                )
+            })
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.total_cmp(b))
+            .unwrap()
+    }
+
+    /// Projection for `k` on device `d` — `precomputed` when the
+    /// routing decision already made it (the EFC latency path), a
+    /// fresh evaluation otherwise. `None` without ETA models. Must be
+    /// called *before* `k` enters the device's pending set.
+    fn projection_for(
+        &self,
+        engines: &[Engine<'_>],
+        st: &RouterState,
+        d: usize,
+        precomputed: Option<f64>,
+        k: &KernelInstance,
+    ) -> Option<f64> {
+        let models = st.eta.as_ref()?;
+        Some(precomputed.unwrap_or_else(|| {
+            models[d].projected_finish_secs(
+                &self.devices[d],
+                engines[d].pending(),
+                engines[d].clock_secs(),
+                k.arrival_time,
+                k,
+            )
+        }))
+    }
+
+    /// Record the projection under which a kernel was actually handed
+    /// to device `d`. Call only once it is *admitted*: a shed kernel
+    /// never completes (its in-flight entry would dangle forever), and
+    /// a deferred kernel's completion time includes its gate wait —
+    /// scoring that against an admitted-now projection would blame the
+    /// device's speed for the gate's decision, so deferred kernels are
+    /// deliberately left unscored (their completions are dropped by
+    /// [`EtaModel::observe_completion`] as unknown ids; re-projecting
+    /// at release time is a ROADMAP idea).
+    fn record_routed(
+        &self,
+        st: &mut RouterState,
+        d: usize,
+        id: u64,
+        now: f64,
+        projected: Option<f64>,
+    ) {
+        if let (Some(models), Some(p)) = (st.eta.as_mut(), projected) {
+            models[d].record_dispatch(id, now, p);
+        }
     }
 
     /// Least-loaded destination for `k`: one load evaluation per device
@@ -210,32 +385,42 @@ impl MultiGpuDispatcher {
     }
 
     /// Pick the destination device for arrival `k`, advancing the run's
-    /// routing counters.
+    /// routing counters. Also returns the ETA projection the decision
+    /// was based on, when it made one (the EFC latency path), so the
+    /// caller can record exactly that value.
     fn route(
         &self,
         engines: &[Engine<'_>],
-        counters: &mut RouteCounters,
+        st: &mut RouterState,
         k: &KernelInstance,
-    ) -> usize {
+    ) -> (usize, Option<f64>) {
         let n = self.devices.len();
-        let d = match self.policy {
-            DispatchPolicy::RoundRobin => counters.arrivals % n,
-            DispatchPolicy::LeastLoaded => self.least_loaded(engines, k),
-            DispatchPolicy::SloAware => {
+        let (d, projected) = match self.policy {
+            DispatchPolicy::RoundRobin => (st.arrivals % n, None),
+            DispatchPolicy::LeastLoaded => (self.least_loaded(engines, k), None),
+            DispatchPolicy::SloAware | DispatchPolicy::EarliestFeasible => {
                 if k.qos.class == ServiceClass::Latency {
-                    // The shortest wait the fleet can offer right now.
-                    self.least_loaded(engines, k)
+                    match st.eta.as_ref() {
+                        // The earliest calibrated projected completion
+                        // across the fleet.
+                        Some(models) => {
+                            let (d, p) = self.earliest_feasible(engines, models, k);
+                            (d, Some(p))
+                        }
+                        // The shortest wait the fleet can offer right now.
+                        None => (self.least_loaded(engines, k), None),
+                    }
                 } else {
                     // Batch spreads on its own wheel so bulk work does
                     // not chase the latency kernels onto one device.
-                    let d = counters.batch % n;
-                    counters.batch += 1;
-                    d
+                    let d = st.batch % n;
+                    st.batch += 1;
+                    (d, None)
                 }
             }
         };
-        counters.arrivals += 1;
-        d
+        st.arrivals += 1;
+        (d, projected)
     }
 
     /// Route one arrival through the admission gate. Under
@@ -248,12 +433,12 @@ impl MultiGpuDispatcher {
     fn admit_route(
         &self,
         engines: &mut [Engine<'_>],
-        counters: &mut RouteCounters,
+        st: &mut RouterState,
         router: &mut Option<AdmissionController>,
         routed: &mut [usize],
         k: KernelInstance,
     ) {
-        let d = self.route(&*engines, counters, &k);
+        let (d, hint) = self.route(&*engines, st, &k);
         match router {
             Some(ctrl) => {
                 let decision = {
@@ -270,6 +455,8 @@ impl MultiGpuDispatcher {
                 match decision {
                     AdmissionDecision::Admit => {
                         routed[d] += 1;
+                        let projected = self.projection_for(&*engines, st, d, hint, &k);
+                        self.record_routed(st, d, k.id, k.arrival_time, projected);
                         engines[d].submit(k);
                     }
                     AdmissionDecision::Defer => ctrl.push_deferred(k),
@@ -278,17 +465,27 @@ impl MultiGpuDispatcher {
             }
             None => {
                 routed[d] += 1;
-                engines[d].offer(k);
+                // The projection must be taken before `k` enters the
+                // pending set, and recorded only if the device-level
+                // gate admits it (see `record_routed` for why sheds
+                // and deferrals are not scored).
+                let projected = self.projection_for(&*engines, st, d, hint, &k);
+                let (id, now) = (k.id, k.arrival_time);
+                if engines[d].offer(k) == AdmissionDecision::Admit {
+                    self.record_routed(st, d, id, now, projected);
+                }
             }
         }
     }
 
     /// Release router-deferred kernels while pressure allows, each to
-    /// the least-loaded device (the device whose state gates its
-    /// release). Returns how many were re-admitted.
+    /// the least-loaded device — or, with ETA models live, the device
+    /// with the earliest projected completion (the device whose state
+    /// gates its release). Returns how many were re-admitted.
     fn pump_router(
         &self,
         engines: &mut [Engine<'_>],
+        st: &mut RouterState,
         router: &mut Option<AdmissionController>,
         routed: &mut [usize],
     ) -> usize {
@@ -296,7 +493,13 @@ impl MultiGpuDispatcher {
         let mut released = 0usize;
         loop {
             let Some(head) = ctrl.peek_deferred() else { break };
-            let d = self.least_loaded(&*engines, head);
+            let (d, hint) = match st.eta.as_ref() {
+                Some(models) => {
+                    let (d, p) = self.earliest_feasible(&*engines, models, head);
+                    (d, Some(p))
+                }
+                None => (self.least_loaded(&*engines, head), None),
+            };
             let got = {
                 let pending = engines[d].pending();
                 let refs: Vec<&KernelInstance> = pending.iter().collect();
@@ -311,6 +514,8 @@ impl MultiGpuDispatcher {
             match got {
                 Some(k) => {
                     routed[d] += 1;
+                    let projected = self.projection_for(&*engines, st, d, hint, &k);
+                    self.record_routed(st, d, k.id, k.arrival_time, projected);
                     engines[d].submit(k);
                     released += 1;
                 }
@@ -330,7 +535,13 @@ impl MultiGpuDispatcher {
         routed: Vec<usize>,
         total: usize,
         router: Option<AdmissionController>,
+        mut st: RouterState,
     ) -> MultiGpuReport {
+        // Score the completions the final drain produced before the
+        // models are frozen into the report.
+        self.observe_eta(&engines, &mut st);
+        let eta: Vec<EtaStats> =
+            st.eta.map(|models| models.iter().map(EtaModel::stats).collect()).unwrap_or_default();
         let mut per_device = Vec::new();
         let mut reports = Vec::new();
         let mut makespan = 0.0f64;
@@ -378,6 +589,7 @@ impl MultiGpuDispatcher {
             throughput_kps: completed as f64 / makespan.max(1e-12),
             goodput_kps: in_deadline as f64 / makespan.max(1e-12),
             admission,
+            eta,
             per_device,
             reports,
         }
@@ -391,7 +603,7 @@ impl MultiGpuDispatcher {
         let mut selectors = self.make_selectors();
         let mut router = self.make_router();
         let mut routed = vec![0usize; n];
-        let mut counters = RouteCounters::default();
+        let mut st = self.router_state();
 
         for k in &stream.instances {
             // Advance every device to the arrival so routing sees live
@@ -399,8 +611,11 @@ impl MultiGpuDispatcher {
             for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
                 engine.run_until(sel.as_mut(), k.arrival_time, true);
             }
-            self.pump_router(&mut engines, &mut router, &mut routed);
-            self.admit_route(&mut engines, &mut counters, &mut router, &mut routed, k.clone());
+            // Completions since the last arrival re-score the ETA
+            // models before they weigh in on this routing decision.
+            self.observe_eta(&engines, &mut st);
+            self.pump_router(&mut engines, &mut st, &mut router, &mut routed);
+            self.admit_route(&mut engines, &mut st, &mut router, &mut routed, k.clone());
         }
         // Drain, releasing deferred work as the backlog empties, until
         // the fleet settles (engines re-check their own gates inside
@@ -409,11 +624,12 @@ impl MultiGpuDispatcher {
             for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
                 engine.drain(sel.as_mut());
             }
-            if self.pump_router(&mut engines, &mut router, &mut routed) == 0 {
+            self.observe_eta(&engines, &mut st);
+            if self.pump_router(&mut engines, &mut st, &mut router, &mut routed) == 0 {
                 break;
             }
         }
-        self.assemble(engines, routed, stream.len(), router)
+        self.assemble(engines, routed, stream.len(), router, st)
     }
 
     /// Route a streaming [`ArrivalSource`] online: same routing
@@ -430,7 +646,7 @@ impl MultiGpuDispatcher {
         let mut router = self.make_router();
         let mut routed = vec![0usize; n];
         let mut fed = vec![0usize; n];
-        let mut counters = RouteCounters::default();
+        let mut st = self.router_state();
 
         fn feed(engines: &[Engine<'_>], fed: &mut [usize], source: &mut dyn ArrivalSource) {
             for (engine, cursor) in engines.iter().zip(fed.iter_mut()) {
@@ -445,7 +661,8 @@ impl MultiGpuDispatcher {
 
         'outer: loop {
             feed(&engines, &mut fed, source);
-            self.pump_router(&mut engines, &mut router, &mut routed);
+            self.observe_eta(&engines, &mut st);
+            self.pump_router(&mut engines, &mut st, &mut router, &mut routed);
             match source.peek_time() {
                 Some(t) => {
                     // Advance devices toward the arrival one decision
@@ -478,9 +695,11 @@ impl MultiGpuDispatcher {
                     let k = source.next_arrival().expect("peeked arrival disappeared");
                     // Deferred work gets first claim on capacity freed
                     // while the devices advanced (same FIFO contract as
-                    // run() and the engine-level gate).
-                    self.pump_router(&mut engines, &mut router, &mut routed);
-                    self.admit_route(&mut engines, &mut counters, &mut router, &mut routed, k);
+                    // run() and the engine-level gate); completions from
+                    // that advance re-score the ETA models first.
+                    self.observe_eta(&engines, &mut st);
+                    self.pump_router(&mut engines, &mut st, &mut router, &mut routed);
+                    self.admit_route(&mut engines, &mut st, &mut router, &mut routed, k);
                 }
                 None => {
                     // Step every engine (each pumps its own gate); stop
@@ -491,15 +710,17 @@ impl MultiGpuDispatcher {
                     for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
                         advanced |= engine.step(sel.as_mut(), None, more);
                     }
+                    self.observe_eta(&engines, &mut st);
                     if !advanced
-                        && self.pump_router(&mut engines, &mut router, &mut routed) == 0
+                        && self.pump_router(&mut engines, &mut st, &mut router, &mut routed) == 0
                     {
                         break;
                     }
                 }
             }
         }
-        self.assemble(engines, routed, counters.arrivals, router)
+        let total = st.arrivals;
+        self.assemble(engines, routed, total, router, st)
     }
 }
 
@@ -660,6 +881,56 @@ mod tests {
         assert_eq!(a.makespan_secs, b.makespan_secs);
         assert_eq!(a.per_device, b.per_device);
         assert_eq!(b.admission.total_shed(), 0);
+    }
+
+    #[test]
+    fn earliest_feasible_conserves_kernels_and_reports_eta() {
+        use crate::workload::{PoissonSource, QosMix};
+
+        let gpus = [GpuConfig::c2050(), GpuConfig::gtx680()];
+        let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::EarliestFeasible);
+        let qos = QosMix::latency_share(0.5, 0.05);
+        let mut src = PoissonSource::new(Mix::MIX, 8, 200.0, 31).with_qos(qos);
+        let rep = d.run_source(&mut src);
+        assert_eq!(rep.per_device.iter().map(|p| p.1).sum::<usize>(), 32);
+        assert!(rep.reports.iter().all(|r| r.incomplete == 0));
+        // No duplicated ids across devices.
+        let mut ids: Vec<u64> =
+            rep.reports.iter().flat_map(|r| r.completion.keys().copied()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 32);
+        // ETA calibration is observable: one stats entry per device,
+        // jointly covering every routed kernel.
+        assert_eq!(rep.eta.len(), 2);
+        let scored: usize = rep.eta.iter().map(|e| e.samples).sum();
+        assert_eq!(scored, 32, "{:?}", rep.eta);
+        for e in &rep.eta {
+            assert!(e.mean_abs_err_secs >= 0.0, "{e:?}");
+            assert!(e.correction > 0.0, "{e:?}");
+        }
+        // Other policies leave the ETA section empty.
+        let ll = MultiGpuDispatcher::new(&gpus, DispatchPolicy::LeastLoaded);
+        let mut src = PoissonSource::new(Mix::MIX, 4, 200.0, 31).with_qos(qos);
+        assert!(ll.run_source(&mut src).eta.is_empty());
+    }
+
+    #[test]
+    fn earliest_feasible_matches_round_robin_on_all_batch() {
+        // With every arrival batch and undeadlined, EFC routes on the
+        // batch wheel (== the global round-robin wheel) and its
+        // preemption-enabled deadline selectors defer wholesale to
+        // Kernelet: the fleet is bit-identical to RoundRobin.
+        let gpus = [GpuConfig::c2050(), GpuConfig::gtx680()];
+        let stream = Stream::poisson(Mix::MIX, 4, 300.0, 91);
+        let rr = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin).run(&stream);
+        let efc = MultiGpuDispatcher::new(&gpus, DispatchPolicy::EarliestFeasible).run(&stream);
+        assert_eq!(efc.makespan_secs, rr.makespan_secs);
+        assert_eq!(efc.per_device, rr.per_device);
+        for (a, b) in efc.reports.iter().zip(&rr.reports) {
+            assert_eq!(a.completion, b.completion);
+            assert_eq!(a.preemptions, 0);
+        }
     }
 
     #[test]

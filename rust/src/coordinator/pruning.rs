@@ -13,15 +13,19 @@ use crate::profiler::Profile;
 /// α_p = 0.4 for both GPUs; α_m = 0.1 (C2050) / 0.105 (GTX680).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PruneParams {
+    /// PUR-difference threshold (pairs below it are kept).
     pub alpha_p: f64,
+    /// MUR-difference threshold.
     pub alpha_m: f64,
 }
 
 impl PruneParams {
+    /// Paper Table 6 thresholds for the C2050.
     pub fn paper_default_c2050() -> Self {
         PruneParams { alpha_p: 0.4, alpha_m: 0.1 }
     }
 
+    /// Paper Table 6 thresholds for the GTX680.
     pub fn paper_default_gtx680() -> Self {
         PruneParams { alpha_p: 0.4, alpha_m: 0.105 }
     }

@@ -28,12 +28,16 @@ pub struct SimCache {
 /// Slimmed-down pair measurement (what the executor needs per round).
 #[derive(Debug, Clone, Copy)]
 pub struct CachedPair {
+    /// Cycles until both slices drained.
     pub cycles: f64,
+    /// Per-kernel concurrent IPCs over the co-run.
     pub cipc: [f64; 2],
+    /// Aggregate IPC of the co-run.
     pub total_ipc: f64,
 }
 
 impl SimCache {
+    /// An empty cache simulating on `gpu`.
     pub fn new(gpu: &GpuConfig) -> Self {
         Self {
             gpu: gpu.clone(),
@@ -43,6 +47,7 @@ impl SimCache {
         }
     }
 
+    /// The device this cache simulates.
     pub fn gpu(&self) -> &GpuConfig {
         &self.gpu
     }

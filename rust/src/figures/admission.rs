@@ -49,7 +49,9 @@ pub const DEFAULT_BACKLOG_CAP: usize = 16;
 /// `completed + shed + deferred_unfinished + incomplete == arrivals`.
 #[derive(Debug, Clone)]
 pub struct ClassOutcome {
+    /// Scheduling outcome (percentiles, misses).
     pub stats: ClassStats,
+    /// Gate accounting (arrivals/admitted/shed/deferred).
     pub admission: ClassAdmission,
 }
 
@@ -64,18 +66,25 @@ impl ClassOutcome {
 /// One (scenario, load, admission policy) measurement.
 #[derive(Debug, Clone)]
 pub struct AdmissionPoint {
+    /// Arrival scenario name.
     pub scenario: &'static str,
+    /// Admission policy name.
     pub policy: &'static str,
+    /// Offered load relative to BASE capacity.
     pub load: f64,
+    /// Offered arrival rate (kernels/sec).
     pub offered_kps: f64,
     /// Arrivals that reached the gate (both classes).
     pub arrivals: usize,
     /// Kernels completed.
     pub kernels: usize,
+    /// Delivered throughput over the makespan.
     pub throughput_kps: f64,
     /// Completed-within-deadline throughput.
     pub goodput_kps: f64,
+    /// Latency-class outcome.
     pub latency: ClassOutcome,
+    /// Batch-class outcome.
     pub batch: ClassOutcome,
 }
 

@@ -23,12 +23,14 @@
 //!
 //! Repo-native telemetry ids: `qdepth` (pending-queue timeline),
 //! `saturation` (offered-load sweep over the streaming scenarios),
-//! `qos` (per-class turnaround percentiles + deadline misses) and
-//! `admission` (goodput + tails under load shedding).
+//! `qos` (per-class turnaround percentiles + deadline misses),
+//! `admission` (goodput + tails under load shedding) and `routing`
+//! (fleet deadline misses per routing policy, EFC vs backlog routing).
 
 pub mod admission;
 pub mod qos;
 pub mod report;
+pub mod routing;
 pub mod scheduling;
 pub mod slicing;
 pub mod tables;
@@ -40,10 +42,10 @@ pub use report::Report;
 use anyhow::{bail, Result};
 
 /// All figure/table ids, in paper order, plus repo-native telemetry
-/// reports (`qdepth`, `saturation`, `qos`, `admission`).
-pub const ALL_IDS: [&str; 17] = [
+/// reports (`qdepth`, `saturation`, `qos`, `admission`, `routing`).
+pub const ALL_IDS: [&str; 18] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table6", "fig14", "qdepth", "saturation", "qos", "admission",
+    "fig13", "table6", "fig14", "qdepth", "saturation", "qos", "admission", "routing",
 ];
 
 /// Options shared by the generators.
@@ -91,6 +93,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "saturation" => throughput::saturation(opts),
         "qos" => qos::qos(opts),
         "admission" => admission::admission(opts),
+        "routing" => routing::routing(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

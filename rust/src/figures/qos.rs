@@ -37,11 +37,17 @@ pub const DEFAULT_DEADLINE_SCALE: f64 = 4.0;
 /// One (scenario, load, policy) measurement under a QoS mix.
 #[derive(Debug, Clone)]
 pub struct QosPoint {
+    /// Arrival scenario name.
     pub scenario: &'static str,
+    /// Scheduling policy name.
     pub policy: &'static str,
+    /// Offered load relative to BASE capacity.
     pub load: f64,
+    /// Offered arrival rate (kernels/sec).
     pub offered_kps: f64,
+    /// Kernels completed.
     pub kernels: usize,
+    /// Delivered throughput over the makespan.
     pub throughput_kps: f64,
     /// Latency-class outcome (percentiles, misses).
     pub latency: ClassStats,

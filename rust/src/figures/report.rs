@@ -9,14 +9,20 @@ use anyhow::{Context, Result};
 /// notes (observations the paper's prose makes about the artifact).
 #[derive(Debug, Clone)]
 pub struct Report {
+    /// Artifact id (`fig13`, `qos`, ... — the CLI/file name).
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Cell grid, row-major; every row is `columns.len()` wide.
     pub rows: Vec<Vec<String>>,
+    /// Free-form observations appended under the table.
     pub notes: Vec<String>,
 }
 
 impl Report {
+    /// An empty report with the given id, title and column headers.
     pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
         Self {
             id: id.to_string(),
@@ -27,11 +33,13 @@ impl Report {
         }
     }
 
+    /// Append one row (must match the column count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.columns.len(), "ragged row in {}", self.id);
         self.rows.push(cells);
     }
 
+    /// Append a free-form note.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }
@@ -122,6 +130,7 @@ impl Report {
         )
     }
 
+    /// Write the table as `<dir>/<id>.tsv`.
     pub fn save_tsv(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.tsv", self.id));
@@ -143,6 +152,7 @@ pub fn f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }
 
+/// Format a fraction as a percentage with one decimal.
 pub fn pct(v: f64) -> String {
     format!("{:.1}", v * 100.0)
 }

@@ -1,0 +1,252 @@
+//! Fleet-routing sweep (repo-native): deadline misses, tails and
+//! goodput vs offered load per routing policy — the comparison that
+//! shows what ETA-driven routing buys over backlog-driven routing.
+//!
+//! The sweep crosses arrival scenario × offered load × routing policy
+//! ({`roundrobin`, `leastloaded`, `sloaware`, `efc`}) on a homogeneous
+//! C2050 fleet under a latency/batch mix. Every policy of a cell sees
+//! the identical annotated arrival sequence (same derived seed;
+//! open-loop scenarios). `efc`
+//! ([`DispatchPolicy::EarliestFeasible`](crate::coordinator::DispatchPolicy))
+//! routes latency kernels by calibrated projected completion and runs
+//! its devices with mid-slice preemption; under bursty overload it must
+//! not lose to `sloaware` on fleet deadline misses — the acceptance bar
+//! `benches/routing.rs` records into `BENCH_routing.json` and
+//! `scripts/check_bench.py` gates. Per-device ETA calibration error
+//! rides along in every `efc` point so the model's quality is
+//! observable in the trajectory, not just in unit tests.
+
+use super::report::{f, Report};
+use super::throughput::{base_capacity_kps, dispatch_policy_for};
+use crate::config::GpuConfig;
+use crate::coordinator::{
+    weighted_mean_abs_err_secs, ClassStats, Coordinator, EtaStats, MultiGpuDispatcher,
+};
+use crate::stats::split_seed;
+use crate::workload::{scenario_source, Mix, QosMix};
+
+/// Routing policies the sweep compares (`efc` is the tentpole).
+pub const ROUTING_POLICIES: [&str; 4] = ["roundrobin", "leastloaded", "sloaware", "efc"];
+
+/// Scenarios the sweep crosses (bursty overload is the headline).
+pub const ROUTING_SCENARIOS: [&str; 2] = ["poisson", "bursty"];
+
+/// Offered-load factors relative to the *fleet's* BASE capacity.
+pub const ROUTING_LOADS: [f64; 3] = [0.5, 1.5, 3.0];
+
+/// Default homogeneous fleet size.
+pub const DEFAULT_GPUS: usize = 2;
+
+/// Default latency-class share of arrivals.
+pub const DEFAULT_LATENCY_FRACTION: f64 = 0.3;
+
+/// Default deadline scale (× mean whole-kernel service time).
+pub const DEFAULT_DEADLINE_SCALE: f64 = 4.0;
+
+/// One (scenario, load, routing policy) fleet measurement.
+#[derive(Debug, Clone)]
+pub struct RoutingPoint {
+    /// Arrival scenario name.
+    pub scenario: &'static str,
+    /// Routing policy name.
+    pub policy: &'static str,
+    /// Offered load relative to fleet BASE capacity.
+    pub load: f64,
+    /// Fleet size the point ran on.
+    pub gpus: usize,
+    /// Offered arrival rate (kernels/sec).
+    pub offered_kps: f64,
+    /// Kernels routed fleet-wide.
+    pub kernels: usize,
+    /// Fleet throughput over the makespan.
+    pub throughput_kps: f64,
+    /// Fleet goodput (completed-within-deadline kernels/sec).
+    pub goodput_kps: f64,
+    /// Pair blocks cut short by mid-slice preemption, fleet-wide.
+    pub preemptions: u64,
+    /// Fleet-wide latency-class outcome (pooled across devices).
+    pub latency: ClassStats,
+    /// Fleet-wide batch-class outcome.
+    pub batch: ClassStats,
+    /// Per-device ETA calibration stats (empty except under `efc`).
+    pub eta: Vec<EtaStats>,
+}
+
+/// Run the scenario × load × routing-policy cross on a homogeneous
+/// C2050 fleet of `gpus` devices. Returns the points plus the
+/// *per-device* BASE capacity loads and deadlines were scaled by.
+pub fn routing_sweep(
+    opts: &super::FigOptions,
+    loads: &[f64],
+    scenarios: &[&'static str],
+    latency_fraction: f64,
+    deadline_scale: f64,
+    gpus: usize,
+) -> (Vec<RoutingPoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let qos = QosMix::latency_share(latency_fraction, deadline_scale / capacity);
+    let per_app = opts.instances_per_app;
+    let mut out = Vec::new();
+    for (si, &scenario) in scenarios.iter().enumerate() {
+        for (li, &load) in loads.iter().enumerate() {
+            let offered = load * capacity * gpus as f64;
+            let seed = split_seed(opts.seed ^ 0xEFC0, (si * 1000 + li) as u64);
+            for &policy in &ROUTING_POLICIES {
+                let dispatcher = MultiGpuDispatcher::new(
+                    &vec![GpuConfig::c2050(); gpus],
+                    dispatch_policy_for(policy),
+                );
+                let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+                    .expect("routing sweep scenario names are valid");
+                let rep = dispatcher.run_source(source.as_mut());
+                assert!(
+                    rep.reports.iter().all(|r| r.incomplete == 0),
+                    "{scenario}/{policy} left kernels behind"
+                );
+                let fleet = rep.fleet_qos();
+                out.push(RoutingPoint {
+                    scenario,
+                    policy,
+                    load,
+                    gpus,
+                    offered_kps: offered,
+                    kernels: rep.per_device.iter().map(|p| p.1).sum(),
+                    throughput_kps: rep.throughput_kps,
+                    goodput_kps: rep.goodput_kps,
+                    preemptions: rep.reports.iter().map(|r| r.preemptions).sum(),
+                    latency: fleet.latency,
+                    batch: fleet.batch,
+                    eta: rep.eta,
+                });
+            }
+        }
+    }
+    (out, capacity)
+}
+
+/// The `routing` figure: deadline misses and tails per routing policy,
+/// one row per (point, class), with the `efc` points' mean ETA error
+/// appended so calibration quality reads straight off the table.
+pub fn routing(opts: &super::FigOptions) -> Report {
+    // Four full fleet runs per cell; cap like `qos`/`admission` so
+    // `figure all` stays tractable.
+    let opts =
+        super::FigOptions { instances_per_app: opts.instances_per_app.min(60), ..opts.clone() };
+    let (points, capacity) = routing_sweep(
+        &opts,
+        &ROUTING_LOADS,
+        &ROUTING_SCENARIOS,
+        DEFAULT_LATENCY_FRACTION,
+        DEFAULT_DEADLINE_SCALE,
+        DEFAULT_GPUS,
+    );
+    let mut r = Report::new(
+        "routing",
+        "Fleet routing under deadlines: misses + tails vs load (scenario x load x policy)",
+        &[
+            "scenario", "load", "policy", "class", "done", "p99_s", "miss", "deadlined",
+            "goodput_kps", "preempt", "eta_err_s",
+        ],
+    );
+    for p in &points {
+        let eta_err = match weighted_mean_abs_err_secs(&p.eta) {
+            Some(e) => f(e, 5),
+            None => "-".to_string(),
+        };
+        for (class, c) in [("latency", &p.latency), ("batch", &p.batch)] {
+            r.row(vec![
+                p.scenario.to_string(),
+                f(p.load, 2),
+                p.policy.to_string(),
+                class.to_string(),
+                c.completed.to_string(),
+                f(c.p99_turnaround_secs, 4),
+                c.deadline_misses.to_string(),
+                c.with_deadline.to_string(),
+                f(p.goodput_kps, 1),
+                p.preemptions.to_string(),
+                eta_err.clone(),
+            ]);
+        }
+    }
+    r.note(format!(
+        "{DEFAULT_GPUS}x C2050 fleet; mix {}% latency-class; deadlines = arrival + {:.1}x mean \
+         whole-kernel service time ({capacity:.1} kernels/s BASE capacity per device); \
+         load 1.0 = fleet BASE capacity; instances/app = {}",
+        (DEFAULT_LATENCY_FRACTION * 100.0) as u32,
+        DEFAULT_DEADLINE_SCALE,
+        opts.instances_per_app
+    ));
+    r.note(
+        "efc = EarliestFeasible: latency kernels routed by calibrated projected completion \
+         (per-device EtaModel), devices preempt mid-slice; eta_err_s = sample-weighted mean \
+         absolute ETA error",
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigOptions;
+
+    fn small() -> FigOptions {
+        FigOptions { instances_per_app: 6, mc_samples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_covers_the_cross_and_conserves_kernels() {
+        let (points, capacity) = routing_sweep(&small(), &[0.5, 3.0], &["bursty"], 0.3, 4.0, 2);
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), 2 * ROUTING_POLICIES.len());
+        for p in &points {
+            assert_eq!(p.kernels, 24, "{p:?}");
+            assert_eq!(p.latency.completed + p.batch.completed, p.kernels, "{p:?}");
+            assert!(p.goodput_kps <= p.throughput_kps + 1e-9, "{p:?}");
+            assert!(p.latency.deadline_misses <= p.latency.with_deadline, "{p:?}");
+            if p.policy == "efc" {
+                assert_eq!(p.eta.len(), 2, "{p:?}");
+                assert_eq!(p.eta.iter().map(|e| e.samples).sum::<usize>(), 24, "{p:?}");
+            } else {
+                assert!(p.eta.is_empty(), "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn efc_not_worse_than_sloaware_on_misses_under_bursty_overload() {
+        // The tentpole acceptance bar (also encoded in check_bench.py):
+        // at the bursty peak load, ETA routing + preemption never loses
+        // to backlog routing on fleet latency-class deadline misses.
+        let opts = FigOptions { instances_per_app: 25, mc_samples: 1, ..Default::default() };
+        let (points, _) = routing_sweep(&opts, &[3.0], &["bursty"], 0.3, 4.0, 2);
+        let get = |policy: &str| points.iter().find(|p| p.policy == policy).unwrap();
+        let slo = get("sloaware");
+        let efc = get("efc");
+        assert!(
+            efc.latency.deadline_misses <= slo.latency.deadline_misses,
+            "efc misses {} > sloaware misses {}",
+            efc.latency.deadline_misses,
+            slo.latency.deadline_misses
+        );
+    }
+
+    #[test]
+    fn routing_report_shape() {
+        let r = routing(&small());
+        assert_eq!(
+            r.rows.len(),
+            ROUTING_SCENARIOS.len() * ROUTING_LOADS.len() * ROUTING_POLICIES.len() * 2
+        );
+        let pol = r.col("policy");
+        for p in ROUTING_POLICIES {
+            assert!(r.rows.iter().any(|row| row[pol] == p), "missing {p}");
+        }
+        let eta = r.col("eta_err_s");
+        assert!(r.rows.iter().any(|row| row[eta] != "-"), "no efc eta column rendered");
+        assert_eq!(r.notes.len(), 2);
+    }
+}

@@ -50,31 +50,43 @@ pub fn selector_for(policy: &str) -> Box<dyn Selector> {
 }
 
 /// Routing-policy name → [`DispatchPolicy`] (the fleet-sweep analogue
-/// of [`selector_for`]).
+/// of [`selector_for`]). Valid: `roundrobin`, `leastloaded`,
+/// `sloaware`, `efc` (the `routing` sweep's earliest-feasible policy).
 pub fn dispatch_policy_for(policy: &str) -> DispatchPolicy {
     match policy {
         "roundrobin" => DispatchPolicy::RoundRobin,
         "leastloaded" => DispatchPolicy::LeastLoaded,
         "sloaware" => DispatchPolicy::SloAware,
-        other => panic!("unknown routing policy {other} (valid: {FLEET_POLICIES:?})"),
+        "efc" => DispatchPolicy::EarliestFeasible,
+        other => panic!(
+            "unknown routing policy {other} (valid: roundrobin leastloaded sloaware efc)"
+        ),
     }
 }
 
 /// One (scenario, load, policy) measurement.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Arrival scenario name.
     pub scenario: &'static str,
+    /// Scheduling policy name.
     pub policy: &'static str,
+    /// Offered load relative to BASE capacity.
     pub load: f64,
     /// Offered arrival rate (kernels/sec).
     pub offered_kps: f64,
     /// Kernels completed (always the whole scenario — the engine
     /// drains).
     pub kernels: usize,
+    /// Delivered throughput over the makespan.
     pub throughput_kps: f64,
+    /// Mean turnaround over completed kernels (seconds).
     pub mean_turnaround_s: f64,
+    /// Fraction of the makespan the device executed slices.
     pub utilization: f64,
+    /// Mean pending-queue depth over dispatch decisions.
     pub mean_queue_depth: f64,
+    /// Largest pending-queue depth seen.
     pub peak_queue_depth: usize,
 }
 
@@ -138,16 +150,22 @@ pub fn load_sweep(
 /// [`fleet_sweep`].
 #[derive(Debug, Clone)]
 pub struct FleetPoint {
+    /// Arrival scenario name.
     pub scenario: &'static str,
+    /// Routing policy name.
     pub policy: &'static str,
     /// Homogeneous C2050 count.
     pub gpus: usize,
     /// Offered load relative to the *fleet's* BASE capacity (per-device
     /// capacity × gpus).
     pub load: f64,
+    /// Offered arrival rate (kernels/sec).
     pub offered_kps: f64,
+    /// Kernels routed fleet-wide.
     pub kernels: usize,
+    /// Fleet throughput over the makespan.
     pub throughput_kps: f64,
+    /// Slowest device's total time (seconds).
     pub makespan_secs: f64,
     /// Fleet-wide latency-class outcome (pooled across devices).
     pub latency: ClassStats,

@@ -31,6 +31,7 @@ pub enum BenchmarkApp {
 }
 
 impl BenchmarkApp {
+    /// All eight applications, in paper Table 3 order.
     pub const ALL: [BenchmarkApp; 8] = [
         BenchmarkApp::PC,
         BenchmarkApp::SAD,
@@ -42,6 +43,7 @@ impl BenchmarkApp {
         BenchmarkApp::TEA,
     ];
 
+    /// Table 3 short name.
     pub fn name(&self) -> &'static str {
         match self {
             BenchmarkApp::PC => "PC",
@@ -55,6 +57,7 @@ impl BenchmarkApp {
         }
     }
 
+    /// Case-insensitive lookup by Table 3 short name.
     pub fn from_name(name: &str) -> Option<Self> {
         Self::ALL.iter().copied().find(|a| a.name().eq_ignore_ascii_case(name))
     }

@@ -17,6 +17,7 @@ pub enum ServiceClass {
 }
 
 impl ServiceClass {
+    /// Lowercase class name (reports, traces, CLI).
     pub fn name(&self) -> &'static str {
         match self {
             ServiceClass::Latency => "latency",
@@ -24,6 +25,7 @@ impl ServiceClass {
         }
     }
 
+    /// Inverse of [`ServiceClass::name`].
     pub fn from_name(s: &str) -> Option<ServiceClass> {
         match s {
             "latency" => Some(ServiceClass::Latency),
@@ -36,6 +38,7 @@ impl ServiceClass {
 /// Quality-of-service annotation carried by a kernel instance.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Qos {
+    /// Service class (scheduling/routing/reporting dimension).
     pub class: ServiceClass,
     /// Absolute completion deadline in seconds on the run clock (same
     /// epoch as `arrival_time`); `None` means best effort.
@@ -51,6 +54,7 @@ impl Qos {
         Qos { class: ServiceClass::Latency, deadline }
     }
 
+    /// Whether the annotation is latency-class.
     pub fn is_latency(&self) -> bool {
         self.class == ServiceClass::Latency
     }
@@ -87,6 +91,8 @@ pub struct KernelInstance {
 }
 
 impl KernelInstance {
+    /// A fresh (nothing-dispatched) instance of `spec` submitted at
+    /// `arrival_time`, batch class by default.
     pub fn new(id: u64, spec: KernelSpec, arrival_time: f64) -> Self {
         spec.validate();
         Self { id, spec, arrival_time, qos: Qos::BATCH, next_block: 0 }
@@ -113,6 +119,7 @@ impl KernelInstance {
         self.spec.grid_blocks - self.next_block
     }
 
+    /// Lifecycle status derived from the slice cursor.
     pub fn status(&self) -> KernelStatus {
         if self.next_block == 0 {
             KernelStatus::Pending
@@ -123,6 +130,7 @@ impl KernelInstance {
         }
     }
 
+    /// Whether every block has been dispatched.
     pub fn is_finished(&self) -> bool {
         self.status() == KernelStatus::Finished
     }

@@ -31,8 +31,10 @@
 //! - [`slicer`] — minimum-slice-size search under an overhead budget.
 //! - [`coordinator`] — the event-driven scheduling engine
 //!   (`Engine`), its two plug-in axes (`Selector`: Kernelet / OPT /
-//!   MC / BASE policies; `TimingBackend`: simulator or PJRT), pruning,
-//!   greedy selection, and the online multi-GPU dispatcher.
+//!   MC / BASE / deadline policies; `TimingBackend`: simulator or
+//!   PJRT), admission control, pruning, greedy selection, mid-slice
+//!   preemption, the online multi-GPU dispatcher and its calibrated
+//!   per-device ETA model (`coordinator::eta`).
 //! - [`workload`] — Poisson-arrival workload generation (Table 5).
 //! - [`runtime`] — PJRT artifact loading, sliced real-compute dispatch,
 //!   and the real-execution `TimingBackend` for the engine.
@@ -41,6 +43,25 @@
 //! - [`figures`] — regenerators for every paper table and figure.
 //! - [`bench`] — the micro-benchmark harness used by `cargo bench`
 //!   (criterion is unavailable offline).
+//!
+//! ## Quick start
+//!
+//! Stream a scenario through the engine and read the report:
+//!
+//! ```
+//! use kernelet::config::GpuConfig;
+//! use kernelet::coordinator::{Coordinator, Engine, KerneletSelector};
+//! use kernelet::workload::{scenario_source, Mix, QosMix};
+//!
+//! let coord = Coordinator::new(&GpuConfig::c2050());
+//! let mut source = scenario_source("poisson", Mix::MIX, 2, 50.0, 7, QosMix::ALL_BATCH)?;
+//! let report = Engine::new(&coord).run_source(&mut KerneletSelector, source.as_mut());
+//! assert_eq!(report.incomplete, 0);
+//! assert!(report.throughput_kps > 0.0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod config;

@@ -10,6 +10,7 @@
 //!                   [--scenario NAME] [--load X] [--trace FILE]
 //!                   [--qos-mix F] [--deadline-scale S]
 //!                   [--admission POLICY] [--backlog-cap N]
+//!                   [--dispatch POLICY] [--gpus N] [--preempt-cost S]
 //! kernelet trace record --scenario NAME [--out FILE]   dump a scenario
 //!                   to the JSON trace format (incl. QoS annotations)
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
@@ -22,8 +23,11 @@ use anyhow::{bail, Context, Result};
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::{run_base, run_opt};
-use kernelet::coordinator::{run_kernelet, AdmissionSpec, BacklogCap, Coordinator, Engine};
-use kernelet::figures::throughput::{base_capacity_kps, selector_for};
+use kernelet::coordinator::{
+    run_kernelet, AdmissionSpec, BacklogCap, Coordinator, DeadlineSelector, Engine,
+    MultiGpuDispatcher, PreemptCost, Selector, ShedPoint,
+};
+use kernelet::figures::throughput::{base_capacity_kps, dispatch_policy_for, selector_for};
 use kernelet::figures::{self, FigOptions};
 use kernelet::kernel::BenchmarkApp;
 use kernelet::profiler;
@@ -61,13 +65,16 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|all> [--out DIR] [--quick]
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|routing|all>
+                    [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
                     [--scenario saturated|poisson|bursty|diurnal|heavytail|closed|trace]
                     [--load X] [--trace FILE] [--seed N]
                     [--qos-mix F] [--deadline-scale S]
                     [--admission admitall|backlogcap|sloguard] [--backlog-cap N]
+                    [--dispatch roundrobin|leastloaded|sloaware|efc|all] [--gpus N]
+                    [--preempt-cost SECS]
   kernelet trace record --scenario NAME [--mix M] [--gpu G] [--instances N]
                     [--load X] [--qos-mix F] [--deadline-scale S] [--seed N]
                     [--out FILE]
@@ -91,6 +98,14 @@ the pending set (admitall = open door; backlogcap = shed once the queue
 reaches --backlog-cap, default 32; sloguard = defer/shed batch kernels
 while projected latency-class slack is at risk) and adds shed/deferred
 counts plus goodput (completed-within-deadline kernels/s) to the table.
+
+`--dispatch` routes the scenario across a fleet of --gpus devices
+(default 2; load is then relative to the fleet's capacity) and prints
+one row per routing policy (`all` compares roundrobin / leastloaded /
+sloaware / efc). efc routes latency kernels by calibrated projected
+completion (per-device ETA model) and schedules its devices with
+mid-slice preemption; `--preempt-cost SECS` overrides the preemption
+cost (also applies to the single-device deadline policy row).
 
 `trace record` replays the scenario through the engine and dumps the
 realized arrival sequence (app, t, grid, class, deadline) as a JSON
@@ -185,10 +200,14 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
         return cmd_schedule_scenario(args, &gpu, mix, instances, scenario);
     }
     // The saturated BASE/Kernelet/OPT comparison has no arrival stream
-    // to gate: refuse rather than silently ignore the flag.
+    // to gate or route: refuse rather than silently ignore the flags.
     anyhow::ensure!(
         flag_value(args, "--admission").is_none(),
         "--admission needs a streaming workload: add --scenario (e.g. --scenario bursty)"
+    );
+    anyhow::ensure!(
+        flag_value(args, "--dispatch").is_none(),
+        "--dispatch routes a streaming workload: add --scenario (e.g. --scenario bursty)"
     );
     let coord = Coordinator::new(&gpu);
     let stream = Stream::saturated(mix, instances, kernelet::sim::DEFAULT_SEED);
@@ -275,6 +294,24 @@ fn cmd_schedule_scenario(
         Some(s) => s.parse()?,
         None => kernelet::sim::DEFAULT_SEED,
     };
+    let preempt_cost: Option<PreemptCost> = match flag_value(args, "--preempt-cost") {
+        Some(v) => {
+            let secs: f64 = v.parse()?;
+            anyhow::ensure!(
+                secs.is_finite() && secs >= 0.0,
+                "--preempt-cost {secs} must be non-negative seconds"
+            );
+            Some(PreemptCost::uniform(secs))
+        }
+        None => None,
+    };
+    if flag_value(args, "--dispatch").is_some() {
+        return cmd_schedule_fleet(args, gpu, mix, instances, scenario, load, seed, preempt_cost);
+    }
+    anyhow::ensure!(
+        flag_value(args, "--gpus").is_none(),
+        "--gpus routes a fleet: add --dispatch (roundrobin|leastloaded|sloaware|efc|all)"
+    );
     let coord = Coordinator::new(gpu);
     let capacity = base_capacity_kps(&coord, mix);
     let offered = load * capacity;
@@ -376,9 +413,20 @@ fn cmd_schedule_scenario(
             admission_header
         );
     }
+    if let Some(cost) = &preempt_cost {
+        println!(
+            "preemption: deadline policy may cut running pair blocks \
+             (relaunch {:.6}s, break-even {:.6}s)",
+            cost.relaunch_secs,
+            cost.break_even_secs()
+        );
+    }
     for &policy in policies {
         let mut source = make_source(seed)?;
-        let mut sel = selector_for(policy);
+        let mut sel: Box<dyn Selector> = match (policy, preempt_cost) {
+            ("deadline", Some(cost)) => Box::new(DeadlineSelector::new().with_preemption(cost)),
+            _ => selector_for(policy),
+        };
         let mut engine = Engine::new(&coord);
         if let Some((spec, _)) = &admission {
             engine = engine.with_admission(spec.build());
@@ -419,6 +467,106 @@ fn cmd_schedule_scenario(
             ));
         }
         println!("{line}");
+    }
+    Ok(())
+}
+
+/// `schedule --scenario NAME --dispatch POLICY`: route the scenario
+/// through a homogeneous fleet of `--gpus` devices (default 2) and
+/// print one row per routing policy (`--dispatch all` compares all
+/// four). `--load` is relative to the *fleet's* BASE capacity.
+/// `--preempt-cost` overrides the deadline selectors' mid-slice
+/// preemption cost (efc defaults to each device's profile-derived
+/// cost; sloaware defaults to preemption off). `--admission` gates at
+/// the router.
+#[allow(clippy::too_many_arguments)]
+fn cmd_schedule_fleet(
+    args: &[String],
+    gpu: &GpuConfig,
+    mix: Mix,
+    instances: u32,
+    scenario: &str,
+    load: f64,
+    seed: u64,
+    preempt_cost: Option<PreemptCost>,
+) -> Result<()> {
+    const DISPATCH_POLICIES: [&str; 4] = ["roundrobin", "leastloaded", "sloaware", "efc"];
+    let dispatch = flag_value(args, "--dispatch").expect("caller checked --dispatch");
+    let policies: Vec<&str> = if dispatch == "all" {
+        DISPATCH_POLICIES.to_vec()
+    } else {
+        anyhow::ensure!(
+            DISPATCH_POLICIES.contains(&dispatch),
+            "unknown --dispatch {dispatch} (valid: {} all)",
+            DISPATCH_POLICIES.join(" ")
+        );
+        vec![dispatch]
+    };
+    let gpus: usize = flag_value(args, "--gpus").unwrap_or("2").parse()?;
+    anyhow::ensure!(gpus >= 1, "--gpus {gpus} must be at least 1");
+    anyhow::ensure!(
+        scenario != "trace",
+        "--dispatch replays generated scenarios only (trace replay is single-device)"
+    );
+    let coord = Coordinator::new(gpu);
+    let capacity = base_capacity_kps(&coord, mix);
+    let offered = load * capacity * gpus as f64;
+    let (qos, deadline_scale) = parse_qos_mix(args, capacity)?;
+    let admission = parse_admission(args, capacity, deadline_scale)?;
+    println!(
+        "routing scenario {scenario} across {gpus}x {} (mix {}, {} instances/app, \
+         load {load:.2} = {offered:.1} kernels/s offered; fleet BASE capacity {:.1} kernels/s)",
+        gpu.name,
+        mix.name(),
+        instances,
+        capacity * gpus as f64,
+    );
+    if !qos.is_all_batch() {
+        println!(
+            "QoS mix: {:.0}% latency-class, deadlines = arrival + {:.4}s",
+            qos.latency_fraction * 100.0,
+            qos.latency_deadline_secs.unwrap_or(0.0)
+        );
+    } else {
+        println!(
+            "note: all-batch workload (no --qos-mix): efc and sloaware route everything \
+             on the batch wheel — add --qos-mix to exercise deadline routing"
+        );
+    }
+    println!(
+        "{:>11} {:>10} {:>13} {:>12} {:>12} {:>6} {:>8} {:>11}",
+        "dispatch", "makespan_s", "kernels/s", "goodput_kps", "p99_lat_s", "miss", "preempt",
+        "eta_err_s"
+    );
+    for policy in policies {
+        let mut dispatcher =
+            MultiGpuDispatcher::new(&vec![gpu.clone(); gpus], dispatch_policy_for(policy));
+        if let Some(cost) = preempt_cost {
+            dispatcher = dispatcher.with_preemption(cost);
+        }
+        if let Some((spec, _)) = &admission {
+            dispatcher = dispatcher.with_admission(*spec, ShedPoint::Router);
+        }
+        let mut source = kernelet::workload::scenario_source(
+            scenario, mix, instances, offered, seed, qos,
+        )?;
+        let rep = dispatcher.run_source(source.as_mut());
+        let fleet = rep.fleet_qos();
+        let eta_err = match kernelet::coordinator::weighted_mean_abs_err_secs(&rep.eta) {
+            Some(e) => format!("{e:.5}"),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:>11} {:>10.3} {:>13.1} {:>12.1} {:>12.5} {:>6} {:>8} {:>11}",
+            policy,
+            rep.makespan_secs,
+            rep.throughput_kps,
+            rep.goodput_kps,
+            fleet.latency.p99_turnaround_secs,
+            fleet.latency.deadline_misses + fleet.batch.deadline_misses,
+            rep.reports.iter().map(|r| r.preemptions).sum::<u64>(),
+            eta_err
+        );
     }
     Ok(())
 }

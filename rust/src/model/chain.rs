@@ -10,21 +10,26 @@
 /// A row-stochastic transition matrix, dense, row-major.
 #[derive(Debug, Clone)]
 pub struct Transition {
+    /// Number of states.
     pub n: usize,
+    /// Row-major transition probabilities (`n x n`).
     pub p: Vec<f64>,
 }
 
 impl Transition {
+    /// An all-zero `n x n` transition matrix.
     pub fn new(n: usize) -> Self {
         Self { n, p: vec![0.0; n * n] }
     }
 
     #[inline]
+    /// Transition probabilities out of state `i`.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.p[i * self.n..(i + 1) * self.n]
     }
 
     #[inline]
+    /// Mutable transition probabilities out of state `i`.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.p[i * self.n..(i + 1) * self.n]
     }

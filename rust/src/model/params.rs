@@ -31,6 +31,7 @@ pub struct ChainParams {
     pub uncoal_frac: f64,
     /// Sectors for a coalesced unit stall / an uncoalesced unit stall.
     pub sectors_coal: f64,
+    /// 32-byte sectors one uncoalesced request expands to.
     pub sectors_uncoal: f64,
 }
 

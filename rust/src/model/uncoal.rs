@@ -20,12 +20,14 @@ use crate::kernel::KernelSpec;
 /// Enumeration of (c, u) states with c + u ≤ w, plus index mapping.
 #[derive(Debug, Clone)]
 pub struct TriStateSpace {
+    /// Warps per SM the state space is built over.
     pub w: usize,
     states: Vec<(usize, usize)>,
     index: Vec<usize>, // (c * (w+1) + u) -> state id
 }
 
 impl TriStateSpace {
+    /// The (compute, uncoalesced-memory) state space for `w` warps.
     pub fn new(w: usize) -> Self {
         let mut states = Vec::new();
         let mut index = vec![usize::MAX; (w + 1) * (w + 1)];
@@ -38,18 +40,22 @@ impl TriStateSpace {
         Self { w, states, index }
     }
 
+    /// Number of states.
     pub fn len(&self) -> usize {
         self.states.len()
     }
 
+    /// Whether the state space is empty (never, for `w >= 1`).
     pub fn is_empty(&self) -> bool {
         self.states.is_empty()
     }
 
+    /// Decode a state id into (compute warps, uncoalesced warps).
     pub fn state(&self, id: usize) -> (usize, usize) {
         self.states[id]
     }
 
+    /// Encode (compute warps, uncoalesced warps) into a state id.
     pub fn id(&self, c: usize, u: usize) -> usize {
         let v = self.index[c * (self.w + 1) + u];
         debug_assert_ne!(v, usize::MAX);

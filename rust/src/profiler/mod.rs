@@ -69,6 +69,7 @@ pub struct ProfileCache {
 }
 
 impl ProfileCache {
+    /// An empty profile cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -84,10 +85,12 @@ impl ProfileCache {
         p
     }
 
+    /// Profiles cached so far.
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
 
+    /// Whether nothing has been profiled yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

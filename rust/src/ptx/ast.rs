@@ -5,14 +5,20 @@ use std::fmt;
 /// Scalar types (the subset the benchmarks need).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Type {
+    /// 32-bit unsigned integer.
     U32,
+    /// 32-bit signed integer.
     S32,
+    /// 64-bit unsigned integer (pointers).
     U64,
+    /// 32-bit IEEE float.
     F32,
+    /// Predicate register.
     Pred,
 }
 
 impl Type {
+    /// PTX type suffix, e.g. `u32` in `add.u32`.
     pub fn suffix(&self) -> &'static str {
         match self {
             Type::U32 => "u32",
@@ -23,6 +29,7 @@ impl Type {
         }
     }
 
+    /// Storage size in bytes.
     pub fn size_bytes(&self) -> u64 {
         match self {
             Type::U32 | Type::S32 | Type::F32 => 4,
@@ -31,6 +38,7 @@ impl Type {
         }
     }
 
+    /// Inverse of [`Type::suffix`].
     pub fn from_suffix(s: &str) -> Option<Type> {
         Some(match s {
             "u32" => Type::U32,
@@ -56,17 +64,26 @@ impl fmt::Display for Reg {
 /// Built-in special registers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Special {
+    /// Block id, x dimension (`%ctaid.x`).
     CtaIdX,
+    /// Block id, y dimension.
     CtaIdY,
+    /// Thread id within the block, x dimension (`%tid.x`).
     TidX,
+    /// Thread id within the block, y dimension.
     TidY,
+    /// Block size, x dimension (`%ntid.x`).
     NTidX,
+    /// Block size, y dimension.
     NTidY,
+    /// Grid size in blocks, x dimension (`%nctaid.x`).
     NCtaIdX,
+    /// Grid size in blocks, y dimension.
     NCtaIdY,
 }
 
 impl Special {
+    /// PTX spelling, e.g. `%ctaid.x`.
     pub fn name(&self) -> &'static str {
         match self {
             Special::CtaIdX => "%ctaid.x",
@@ -80,6 +97,7 @@ impl Special {
         }
     }
 
+    /// Inverse of [`Special::name`].
     pub fn from_name(s: &str) -> Option<Special> {
         Some(match s {
             "%ctaid.x" => Special::CtaIdX,
@@ -98,26 +116,35 @@ impl Special {
 /// Instruction operand.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Operand {
+    /// A virtual register.
     Reg(Reg),
     /// Integer immediate (also carries small negatives for s32).
     Imm(i64),
     /// f32 immediate, e.g. `0f3F800000` or a decimal literal.
     FImm(f32),
+    /// A built-in special register.
     Special(Special),
 }
 
 /// Comparison operators for `setp`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Cmp {
+    /// Equal.
     Eq,
+    /// Not equal.
     Ne,
+    /// Less than.
     Lt,
+    /// Less than or equal.
     Le,
+    /// Greater than.
     Gt,
+    /// Greater than or equal.
     Ge,
 }
 
 impl Cmp {
+    /// PTX comparison suffix, e.g. `lt` in `setp.lt.s32`.
     pub fn name(&self) -> &'static str {
         match self {
             Cmp::Eq => "eq",
@@ -129,6 +156,7 @@ impl Cmp {
         }
     }
 
+    /// Inverse of [`Cmp::name`].
     pub fn from_name(s: &str) -> Option<Cmp> {
         Some(match s {
             "eq" => Cmp::Eq,
@@ -145,21 +173,34 @@ impl Cmp {
 /// Binary ALU operations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BinOp {
+    /// Addition.
     Add,
+    /// Subtraction.
     Sub,
-    Mul, // `.lo` semantics for integers
+    /// Multiplication (`.lo` semantics for integers).
+    Mul,
+    /// Division.
     Div,
+    /// Remainder.
     Rem,
+    /// Minimum.
     Min,
+    /// Maximum.
     Max,
+    /// Bitwise and.
     And,
+    /// Bitwise or.
     Or,
+    /// Bitwise xor.
     Xor,
+    /// Shift left.
     Shl,
+    /// Shift right.
     Shr,
 }
 
 impl BinOp {
+    /// PTX mnemonic, e.g. `add` / `mul.lo`.
     pub fn name(&self) -> &'static str {
         match self {
             BinOp::Add => "add",
@@ -181,14 +222,18 @@ impl BinOp {
 /// Memory address: `[reg + offset]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Addr {
+    /// Base address register.
     pub base: Reg,
+    /// Constant byte offset.
     pub offset: i64,
 }
 
 /// State space for loads/stores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Space {
+    /// Kernel parameter space.
     Param,
+    /// Global device memory.
     Global,
 }
 
@@ -321,16 +366,19 @@ impl Inst {
 /// A `.entry` kernel: parameters, register declarations, body.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Kernel {
+    /// Entry name (the `.entry` symbol).
     pub name: String,
     /// (param name, type); all params are passed by value (pointers are
     /// u64).
     pub params: Vec<(String, Type)>,
     /// Declared registers (name -> type).
     pub regs: Vec<(Reg, Type)>,
+    /// Instruction sequence.
     pub body: Vec<Inst>,
 }
 
 impl Kernel {
+    /// Declared type of register `r`, if declared.
     pub fn reg_type(&self, r: &Reg) -> Option<Type> {
         self.regs.iter().find(|(n, _)| n == r).map(|(_, t)| *t)
     }

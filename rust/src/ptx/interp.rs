@@ -15,32 +15,38 @@ use super::ast::*;
 /// Global memory plus parameter values.
 #[derive(Debug, Clone)]
 pub struct Machine {
+    /// Flat global memory image (byte-addressed).
     pub memory: Vec<u8>,
 }
 
 impl Machine {
+    /// A machine with `bytes` of zeroed global memory.
     pub fn new(bytes: usize) -> Self {
         Self { memory: vec![0; bytes] }
     }
 
+    /// Store f32s little-endian starting at byte `addr`.
     pub fn write_f32s(&mut self, addr: usize, xs: &[f32]) {
         for (i, x) in xs.iter().enumerate() {
             self.memory[addr + 4 * i..addr + 4 * i + 4].copy_from_slice(&x.to_le_bytes());
         }
     }
 
+    /// Load `n` f32s starting at byte `addr`.
     pub fn read_f32s(&self, addr: usize, n: usize) -> Vec<f32> {
         (0..n)
             .map(|i| f32::from_le_bytes(self.memory[addr + 4 * i..addr + 4 * i + 4].try_into().unwrap()))
             .collect()
     }
 
+    /// Store u32s little-endian starting at byte `addr`.
     pub fn write_u32s(&mut self, addr: usize, xs: &[u32]) {
         for (i, x) in xs.iter().enumerate() {
             self.memory[addr + 4 * i..addr + 4 * i + 4].copy_from_slice(&x.to_le_bytes());
         }
     }
 
+    /// Load `n` u32s starting at byte `addr`.
     pub fn read_u32s(&self, addr: usize, n: usize) -> Vec<u32> {
         (0..n)
             .map(|i| u32::from_le_bytes(self.memory[addr + 4 * i..addr + 4 * i + 4].try_into().unwrap()))
@@ -85,7 +91,9 @@ pub type Args = Vec<u64>;
 /// Launch configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct LaunchConfig {
+    /// Grid size in blocks, (x, y).
     pub grid: (u32, u32),
+    /// Block size in threads, (x, y).
     pub block: (u32, u32),
 }
 

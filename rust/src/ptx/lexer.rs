@@ -15,21 +15,37 @@ pub enum Tok {
     Int(i64),
     /// Float literal (decimal or 0f-hex).
     Float(f32),
+    /// `(`
     LParen,
+    /// `)`
     RParen,
+    /// `{`
     LBrace,
+    /// `}`
     RBrace,
+    /// `[`
     LBracket,
+    /// `]`
     RBracket,
+    /// `,`
     Comma,
+    /// `;`
     Semi,
+    /// `:`
     Colon,
+    /// `@` (predication prefix)
     At,
+    /// `!` (predicate negation)
     Bang,
+    /// `+`
     Plus,
+    /// `-`
     Minus,
+    /// `.`
     Dot,
+    /// `<`
     Lt,
+    /// `>`
     Gt,
 }
 

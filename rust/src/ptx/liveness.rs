@@ -14,13 +14,16 @@ use super::ast::{Inst, Kernel, Reg};
 /// A basic block: a half-open instruction index range in the kernel body.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Block {
+    /// Instruction index range in the kernel body.
     pub range: std::ops::Range<usize>,
+    /// Successor block indices.
     pub succs: Vec<usize>,
 }
 
 /// The CFG over the kernel body.
 #[derive(Debug, Clone)]
 pub struct Cfg {
+    /// Basic blocks in body order.
     pub blocks: Vec<Block>,
 }
 

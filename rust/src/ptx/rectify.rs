@@ -33,10 +33,12 @@ pub struct RectifyOptions {
 }
 
 impl RectifyOptions {
+    /// Options for a 1-D grid.
     pub fn one_d() -> Self {
         Self { dims: 1 }
     }
 
+    /// Options for a 2-D grid.
     pub fn two_d() -> Self {
         Self { dims: 2 }
     }
@@ -44,8 +46,11 @@ impl RectifyOptions {
 
 /// Names of the injected parameters, in order.
 pub const OFFSET_X: &str = "__koff_x";
+/// Injected y-offset parameter name (2-D grids).
 pub const OFFSET_Y: &str = "__koff_y";
+/// Injected original-grid-x parameter name.
 pub const GRID_X: &str = "__kgrid_x";
+/// Injected original-grid-y parameter name (2-D grids).
 pub const GRID_Y: &str = "__kgrid_y";
 
 /// Apply index rectification, producing the sliced kernel.

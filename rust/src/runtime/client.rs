@@ -11,17 +11,21 @@ use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 /// A concrete tensor value crossing the runtime boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
+    /// f32 data plus dimensions.
     F32(Vec<f32>, Vec<i64>),
+    /// i32 data plus dimensions.
     I32(Vec<i32>, Vec<i64>),
 }
 
 impl Tensor {
+    /// Tensor dimensions.
     pub fn dims(&self) -> &[i64] {
         match self {
             Tensor::F32(_, d) | Tensor::I32(_, d) => d,
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32(v, _) => v.len(),
@@ -29,10 +33,12 @@ impl Tensor {
         }
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Whether dtype and dims match a manifest spec.
     pub fn matches(&self, spec: &TensorSpec) -> bool {
         let dt = match self {
             Tensor::F32(..) => DType::F32,
@@ -41,6 +47,7 @@ impl Tensor {
         dt == spec.dtype && self.dims() == spec.dims.as_slice()
     }
 
+    /// Borrow the f32 payload (errors on an i32 tensor).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32(v, _) => Ok(v),
@@ -48,6 +55,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the i32 payload (errors on an f32 tensor).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32(v, _) => Ok(v),
@@ -93,10 +101,12 @@ impl ArtifactRegistry {
         Self::open(super::artifacts_dir())
     }
 
+    /// The parsed artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

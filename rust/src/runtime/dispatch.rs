@@ -27,6 +27,7 @@ pub struct SlicedRunner<'a> {
 }
 
 impl<'a> SlicedRunner<'a> {
+    /// A runner over the registry's loaded artifacts.
     pub fn new(reg: &'a ArtifactRegistry) -> Self {
         Self { reg }
     }
@@ -202,6 +203,8 @@ pub struct PjrtBackend<'a> {
 }
 
 impl<'a> PjrtBackend<'a> {
+    /// A timing backend executing slices through `reg`, modeling `gpu`
+    /// and deferring to `fallback` for kernels without artifacts.
     pub fn new(reg: &'a ArtifactRegistry, gpu: &GpuConfig, fallback: &'a dyn TimingBackend) -> Self {
         Self {
             reg,

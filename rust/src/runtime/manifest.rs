@@ -11,11 +11,14 @@ use anyhow::{bail, Context, Result};
 /// Element type of a tensor argument.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 impl DType {
+    /// Parse a manifest dtype name (`float32`/`f32`, `int32`/`i32`).
     pub fn parse(s: &str) -> Result<DType> {
         Ok(match s {
             "float32" | "f32" => DType::F32,
@@ -28,11 +31,14 @@ impl DType {
 /// Shape + dtype of one argument or result.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions (empty = scalar).
     pub dims: Vec<i64>,
 }
 
 impl TensorSpec {
+    /// Parse a `dtype:AxBxC` (or `dtype:scalar`) manifest spec.
     pub fn parse(s: &str) -> Result<TensorSpec> {
         let (d, dims) = s.split_once(':').with_context(|| format!("bad tensor spec {s}"))?;
         let dtype = DType::parse(d)?;
@@ -46,6 +52,7 @@ impl TensorSpec {
         Ok(TensorSpec { dtype, dims })
     }
 
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.dims.iter().product::<i64>() as usize
     }
@@ -54,20 +61,27 @@ impl TensorSpec {
 /// One artifact entry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
+    /// Compiled artifact file name.
     pub file: String,
+    /// Kernel the artifact implements.
     pub kernel: String,
+    /// Grid blocks this variant covers.
     pub n_blocks: u32,
+    /// Input tensor shapes.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor shape.
     pub output: TensorSpec,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Artifact entries in file order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Parse the `manifest.txt` format (one artifact per line).
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut artifacts = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -96,6 +110,7 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// Load and parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.txt"))
             .with_context(|| format!("reading {}/manifest.txt", dir.display()))?;

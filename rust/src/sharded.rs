@@ -34,10 +34,12 @@ pub struct ShardedMap<K, V> {
 }
 
 impl<K: Hash + Eq, V: Clone> ShardedMap<K, V> {
+    /// A map with the default shard count.
     pub fn new() -> Self {
         Self::with_shards(DEFAULT_SHARDS)
     }
 
+    /// A map with `n` lock shards (rounded up to at least 1).
     pub fn with_shards(n: usize) -> Self {
         let n = n.max(1).next_power_of_two();
         Self { shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(), mask: n - 1 }
@@ -79,6 +81,7 @@ impl<K: Hash + Eq, V: Clone> ShardedMap<K, V> {
         self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
+    /// Whether every shard is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -98,16 +101,19 @@ pub struct CacheCounters {
 }
 
 impl CacheCounters {
+    /// Zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
 
     #[inline]
+    /// Record a cache hit.
     pub fn hit(&self) {
         self.hits.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
+    /// Record a cache miss.
     pub fn miss(&self) {
         self.misses.fetch_add(1, Ordering::Relaxed);
     }

@@ -19,7 +19,9 @@ use crate::stats::Xoshiro256;
 /// A kernel plus the number of its blocks assigned to this SM.
 #[derive(Debug, Clone)]
 pub struct Workload {
+    /// The kernel being simulated.
     pub spec: KernelSpec,
+    /// Blocks of it assigned to this SM.
     pub blocks: u32,
     /// Residency quota: at most this many blocks of this workload may
     /// be co-resident on the SM. This is how a co-schedule's (b1, b2)
@@ -30,11 +32,13 @@ pub struct Workload {
 }
 
 impl Workload {
+    /// An unquota'd workload of `blocks` blocks.
     pub fn new(spec: KernelSpec, blocks: u32) -> Self {
         assert!(blocks >= 1, "workload with zero blocks");
         Self { spec, blocks, quota: None }
     }
 
+    /// A workload capped at `quota` co-resident blocks.
     pub fn with_quota(spec: KernelSpec, blocks: u32, quota: u32) -> Self {
         assert!(blocks >= 1 && quota >= 1);
         Self { spec, blocks, quota: Some(quota) }
@@ -134,6 +138,7 @@ pub struct SmEngine {
 }
 
 impl SmEngine {
+    /// An empty SM simulator for `gpu`, seeded deterministically.
     pub fn new(gpu: &GpuConfig, seed: u64) -> Self {
         Self {
             gpu: gpu.clone(),

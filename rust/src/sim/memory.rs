@@ -25,6 +25,7 @@ pub struct MemoryPipe {
 }
 
 impl MemoryPipe {
+    /// A memory pipe with `gpu`'s latency/bandwidth parameters.
     pub fn new(gpu: &GpuConfig) -> Self {
         Self {
             base_latency: gpu.mem_latency_cycles,

@@ -19,6 +19,7 @@ pub struct KernelMetrics {
 }
 
 impl KernelMetrics {
+    /// Accumulate another SM's counters into this one.
     pub fn absorb(&mut self, other: &KernelMetrics) {
         self.insts += other.insts;
         self.mem_insts += other.mem_insts;

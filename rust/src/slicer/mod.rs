@@ -70,10 +70,13 @@ pub struct SliceSizeCache {
 }
 
 impl SliceSizeCache {
+    /// An empty slice-size cache.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Minimum slice size (cached) for `spec` on `gpu` under
+    /// `budget_pct` percent launch-overhead budget.
     pub fn get(&self, gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64) -> u32 {
         let key = (
             gpu.name.to_string(),

@@ -48,18 +48,22 @@ impl Cdf {
         percentile(&self.sorted, q).expect("Cdf is never empty")
     }
 
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         self.sorted[0]
     }
 
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         *self.sorted.last().unwrap()
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.sorted.len()
     }
 
+    /// Whether the CDF holds no samples.
     pub fn is_empty(&self) -> bool {
         self.sorted.is_empty()
     }

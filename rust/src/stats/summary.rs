@@ -11,10 +11,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -24,6 +26,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Summarize a whole slice.
     pub fn from_slice(xs: &[f64]) -> Self {
         let mut s = Self::new();
         for &x in xs {
@@ -32,10 +35,12 @@ impl Summary {
         s
     }
 
+    /// Samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -49,14 +54,17 @@ impl Summary {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }

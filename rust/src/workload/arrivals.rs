@@ -88,6 +88,7 @@ pub struct ReplaySource {
 }
 
 impl ReplaySource {
+    /// Replay a pre-materialized [`Stream`] in order.
     pub fn from_stream(stream: &Stream) -> Self {
         Self::from_instances("replay", stream.instances.clone())
     }
@@ -153,6 +154,8 @@ pub struct PoissonSource {
 }
 
 impl PoissonSource {
+    /// `per_app` arrivals per application at per-app rate `lambda`
+    /// (arrivals/sec), drawn exactly like [`Stream::poisson`].
     pub fn new(mix: Mix, per_app: u32, lambda: f64, seed: u64) -> Self {
         let mut rng = Xoshiro256::new(seed);
         let specs: Vec<KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
@@ -239,6 +242,8 @@ pub struct BurstySource {
 }
 
 impl BurstySource {
+    /// `total` arrivals from a 2-state MMPP with per-state rates and
+    /// mean sojourns.
     pub fn new(mix: Mix, total: u64, rates: [f64; 2], sojourn_secs: [f64; 2], seed: u64) -> Self {
         assert!(rates[0] > 0.0 && rates[1] > 0.0);
         assert!(sojourn_secs[0] > 0.0 && sojourn_secs[1] > 0.0);
@@ -332,6 +337,7 @@ pub struct DiurnalSource {
 }
 
 impl DiurnalSource {
+    /// `total` arrivals from λ(t) = `base`·(1 + `amp`·sin(2πt/`period`)).
     pub fn new(mix: Mix, total: u64, base: f64, amp: f64, period: f64, seed: u64) -> Self {
         assert!(base > 0.0 && period > 0.0);
         assert!((0.0..1.0).contains(&amp), "amp must be in [0,1) so the rate stays positive");
@@ -438,6 +444,8 @@ pub struct HeavyTailSource {
 }
 
 impl HeavyTailSource {
+    /// `total` Poisson arrivals at rate `lambda` whose grids scale by
+    /// a bucketed Pareto(`alpha`) factor.
     pub fn new(mix: Mix, total: u64, lambda: f64, alpha: f64, seed: u64) -> Self {
         assert!(lambda > 0.0 && alpha > 0.0);
         let mut variants = Vec::new();
@@ -532,6 +540,8 @@ pub struct ClosedLoopSource {
 }
 
 impl ClosedLoopSource {
+    /// `clients` clients with exponential think time at `think_rate`
+    /// (thinks/sec), issuing `total` jobs fleet-wide.
     pub fn new(mix: Mix, clients: usize, think_rate: f64, total: u64, seed: u64) -> Self {
         assert!(clients >= 1 && think_rate > 0.0);
         let mut rng = Xoshiro256::new(seed);
@@ -755,6 +765,7 @@ pub struct RecordingSource<'a> {
 }
 
 impl<'a> RecordingSource<'a> {
+    /// Wrap `inner`, logging every popped arrival.
     pub fn new(inner: &'a mut dyn ArrivalSource) -> Self {
         Self { inner, log: Vec::new() }
     }

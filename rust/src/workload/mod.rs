@@ -38,8 +38,10 @@ pub enum Mix {
 }
 
 impl Mix {
+    /// The four mixes, in paper order.
     pub const ALL_MIXES: [Mix; 4] = [Mix::CI, Mix::MI, Mix::MIX, Mix::ALL];
 
+    /// Table 5 mix name.
     pub fn name(&self) -> &'static str {
         match self {
             Mix::CI => "CI",
@@ -49,6 +51,7 @@ impl Mix {
         }
     }
 
+    /// Case-insensitive lookup by Table 5 mix name.
     pub fn from_name(s: &str) -> Option<Mix> {
         Self::ALL_MIXES.iter().copied().find(|m| m.name().eq_ignore_ascii_case(s))
     }
@@ -68,6 +71,7 @@ impl Mix {
 /// A generated submission stream: kernel instances sorted by arrival.
 #[derive(Debug, Clone)]
 pub struct Stream {
+    /// Instances sorted by arrival time.
     pub instances: Vec<KernelInstance>,
 }
 
@@ -115,10 +119,12 @@ impl Stream {
         self.instances.iter().cloned()
     }
 
+    /// Number of instances in the stream.
     pub fn len(&self) -> usize {
         self.instances.len()
     }
 
+    /// Whether the stream holds no instances.
     pub fn is_empty(&self) -> bool {
         self.instances.is_empty()
     }

@@ -11,6 +11,22 @@
 use crate::kernel::{Qos, ServiceClass};
 
 /// The QoS mix a source stamps onto its arrivals.
+///
+/// # Examples
+///
+/// A quarter of arrivals latency-class, deadlined 2 s after arrival:
+///
+/// ```
+/// use kernelet::workload::QosMix;
+///
+/// let mix = QosMix::latency_share(0.25, 2.0);
+/// let q = mix.stamp(3, 10.0); // arrival id 3 at t = 10 s
+/// assert!(q.is_latency());
+/// assert_eq!(q.deadline, Some(12.0));
+/// // Stamping is deterministic and hits the fraction exactly:
+/// let latency = (0..100).filter(|&id| mix.stamp(id, 0.0).is_latency()).count();
+/// assert_eq!(latency, 25);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QosMix {
     /// Fraction of arrivals stamped latency-class, in `[0, 1]`.

@@ -1,0 +1,187 @@
+//! ETA-routing and preemption invariants.
+//!
+//! The two guarantees this suite pins:
+//!
+//! 1. **Zero-urgency differential** — on all-batch, no-deadline
+//!    workloads the new machinery is invisible: a preemption-enabled
+//!    engine run is bit-identical to the frozen PR-4 paths (plain
+//!    Kernelet and the preemption-free `DeadlineSelector`), and an
+//!    `EarliestFeasible` fleet is bit-identical to the `RoundRobin`
+//!    fleet (all-batch work rides the same wheel, and the per-device
+//!    deadline selectors defer wholesale to Kernelet).
+//! 2. **Conservation** — `EarliestFeasible` routing partitions arrivals
+//!    exactly like the PR-4 invariant: every arrival is completed,
+//!    shed or left deferred, fleet-wide and per class, with no kernel
+//!    duplicated across devices — with and without an admission gate.
+
+use std::collections::HashSet;
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{
+    AdmissionSpec, Coordinator, DeadlineSelector, DispatchPolicy, Engine, KerneletSelector,
+    MultiGpuDispatcher, PreemptCost, ShedPoint,
+};
+use kernelet::figures::throughput::base_capacity_kps;
+use kernelet::workload::{scenario_source, Mix, QosMix};
+
+const SEED: u64 = 0xE7C_0515;
+
+/// DIFFERENTIAL: with nothing latency-class and nothing deadlined, the
+/// preemption-enabled deadline selector schedules bit-identically to
+/// plain Kernelet and to the preemption-free PR-4 selector on every
+/// open-loop scenario — same completion map, slice trace, clock, and
+/// zero preemptions.
+#[test]
+fn preemption_enabled_engine_is_bit_identical_on_zero_urgency_workloads() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    for scenario in ["poisson", "bursty", "diurnal", "heavytail"] {
+        let mk = || {
+            scenario_source(scenario, Mix::MIX, 5, 2.0 * capacity, SEED, QosMix::ALL_BATCH)
+                .expect("valid scenario")
+        };
+        let frozen = Engine::new(&coord).run_source(&mut KerneletSelector, mk().as_mut());
+        let pr4 = Engine::new(&coord)
+            .run_source(&mut DeadlineSelector::new(), mk().as_mut());
+        let preempting = Engine::new(&coord).run_source(
+            &mut DeadlineSelector::new().with_preemption(PreemptCost::for_gpu(&coord.gpu)),
+            mk().as_mut(),
+        );
+        for (name, rep) in [("pr4-deadline", &pr4), ("preempting", &preempting)] {
+            assert_eq!(rep.total_cycles, frozen.total_cycles, "{scenario}/{name}: clock");
+            assert_eq!(rep.completion, frozen.completion, "{scenario}/{name}: completions");
+            assert_eq!(rep.slice_trace, frozen.slice_trace, "{scenario}/{name}: slice trace");
+            assert_eq!(rep.queue_depth, frozen.queue_depth, "{scenario}/{name}: queue depth");
+            assert_eq!(
+                rep.coschedule_rounds, frozen.coschedule_rounds,
+                "{scenario}/{name}: rounds"
+            );
+            assert_eq!(rep.preemptions, 0, "{scenario}/{name}: phantom preemption");
+        }
+    }
+}
+
+/// DIFFERENTIAL: an `EarliestFeasible` fleet on an all-batch workload
+/// is bit-identical to the frozen `RoundRobin` fleet — batch work rides
+/// the same wheel, ETA models never decide anything, and the
+/// preemption-enabled per-device selectors defer wholesale to Kernelet.
+#[test]
+fn efc_fleet_is_bit_identical_to_round_robin_on_all_batch() {
+    let gpus = [GpuConfig::c2050(), GpuConfig::gtx680()];
+    let capacity = base_capacity_kps(&Coordinator::new(&gpus[0]), Mix::MIX);
+    for scenario in ["poisson", "bursty", "heavytail"] {
+        let mk = || {
+            scenario_source(scenario, Mix::MIX, 5, 2.5 * capacity, SEED ^ 3, QosMix::ALL_BATCH)
+                .expect("valid scenario")
+        };
+        let rr = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin)
+            .run_source(mk().as_mut());
+        let efc = MultiGpuDispatcher::new(&gpus, DispatchPolicy::EarliestFeasible)
+            .run_source(mk().as_mut());
+        assert_eq!(efc.makespan_secs, rr.makespan_secs, "{scenario}: makespan");
+        assert_eq!(efc.per_device, rr.per_device, "{scenario}: routing");
+        for (i, (a, b)) in efc.reports.iter().zip(&rr.reports).enumerate() {
+            assert_eq!(a.total_cycles, b.total_cycles, "{scenario}: device {i} clock");
+            assert_eq!(a.completion, b.completion, "{scenario}: device {i} completions");
+            assert_eq!(a.slice_trace, b.slice_trace, "{scenario}: device {i} trace");
+            assert_eq!(a.preemptions, 0, "{scenario}: device {i} phantom preemption");
+        }
+    }
+}
+
+/// PROPERTY: `EarliestFeasible` conserves arrivals exactly like the
+/// PR-4 partition invariant — across scenarios, every arrival is
+/// completed (or accounted shed/deferred under a router gate), no id
+/// lands on two devices, and the fleet QoS merge covers every
+/// completion once.
+#[test]
+fn efc_routing_conserves_arrivals_across_scenarios() {
+    let gpus = [GpuConfig::c2050(), GpuConfig::c2050(), GpuConfig::gtx680()];
+    let capacity = base_capacity_kps(&Coordinator::new(&gpus[0]), Mix::MIX);
+    let qos = QosMix::latency_share(0.4, 4.0 / capacity);
+    for scenario in ["poisson", "bursty", "diurnal", "heavytail", "closed"] {
+        let mut src =
+            scenario_source(scenario, Mix::MIX, 6, 2.0 * capacity * 3.0, SEED ^ 9, qos)
+                .expect("valid scenario");
+        let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::EarliestFeasible);
+        let rep = d.run_source(src.as_mut());
+        let routed: usize = rep.per_device.iter().map(|p| p.1).sum();
+        assert_eq!(routed, 24, "{scenario}: routed != arrivals");
+        assert!(rep.reports.iter().all(|r| r.incomplete == 0), "{scenario}");
+        let mut ids: Vec<u64> =
+            rep.reports.iter().flat_map(|r| r.completion.keys().copied()).collect();
+        ids.sort_unstable();
+        let unique: HashSet<u64> = ids.iter().copied().collect();
+        assert_eq!(unique.len(), ids.len(), "{scenario}: kernel ran on two devices");
+        assert_eq!(ids.len(), 24, "{scenario}: completions != arrivals");
+        let fleet = rep.fleet_qos();
+        assert_eq!(fleet.latency.completed + fleet.batch.completed, 24, "{scenario}");
+        // ETA stats exist per device and jointly cover the fleet.
+        assert_eq!(rep.eta.len(), gpus.len(), "{scenario}");
+        assert_eq!(
+            rep.eta.iter().map(|e| e.samples).sum::<usize>(),
+            24,
+            "{scenario}: unscored completions"
+        );
+    }
+}
+
+/// PROPERTY: the partition survives an admission gate at the router —
+/// completed + shed + deferred-unfinished == arrivals under
+/// `EarliestFeasible`, exactly as PR-4 pinned it for the other
+/// policies.
+#[test]
+fn efc_routing_conserves_under_router_admission() {
+    let gpus = [GpuConfig::c2050(), GpuConfig::c2050()];
+    let capacity = base_capacity_kps(&Coordinator::new(&gpus[0]), Mix::MIX);
+    let qos = QosMix::latency_share(0.25, 4.0 / capacity);
+    for spec in [
+        AdmissionSpec::BacklogCap { cap: 3 },
+        AdmissionSpec::for_policy("sloguard", capacity, 4.0, 8),
+    ] {
+        for point in [ShedPoint::Router, ShedPoint::Device] {
+            let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::EarliestFeasible)
+                .with_admission(spec, point);
+            let mut src =
+                scenario_source("bursty", Mix::MIX, 10, 6.0 * capacity, SEED ^ 77, qos)
+                    .expect("valid scenario");
+            let rep = d.run_source(src.as_mut());
+            let a = &rep.admission;
+            assert_eq!(a.total_arrivals(), 40, "{spec:?}/{point:?}");
+            let completed: usize = rep.reports.iter().map(|r| r.kernels_completed).sum();
+            assert_eq!(
+                completed + a.total_shed() + a.total_deferred_unfinished(),
+                40,
+                "{spec:?}/{point:?}: partition broken"
+            );
+            assert!(rep.goodput_kps <= rep.throughput_kps + 1e-9, "{spec:?}/{point:?}");
+        }
+    }
+}
+
+/// The headline property at fleet level (softer than the bench bar, on
+/// a fixed seed): under bursty overload with a latency/batch mix, EFC
+/// routing + preemption does not lose to SloAware on fleet
+/// latency-class deadline misses.
+#[test]
+fn efc_not_worse_than_sloaware_on_fleet_misses() {
+    let gpus = [GpuConfig::c2050(), GpuConfig::c2050()];
+    let capacity = base_capacity_kps(&Coordinator::new(&gpus[0]), Mix::MIX);
+    let qos = QosMix::latency_share(0.3, 4.0 / capacity);
+    let offered = 3.0 * capacity * 2.0;
+    let mk = || {
+        scenario_source("bursty", Mix::MIX, 25, offered, SEED ^ 21, qos).expect("valid scenario")
+    };
+    let slo = MultiGpuDispatcher::new(&gpus, DispatchPolicy::SloAware)
+        .run_source(mk().as_mut())
+        .fleet_qos();
+    let efc = MultiGpuDispatcher::new(&gpus, DispatchPolicy::EarliestFeasible)
+        .run_source(mk().as_mut())
+        .fleet_qos();
+    assert!(
+        efc.latency.deadline_misses <= slo.latency.deadline_misses,
+        "efc misses {} > sloaware misses {}",
+        efc.latency.deadline_misses,
+        slo.latency.deadline_misses
+    );
+}

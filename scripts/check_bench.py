@@ -5,13 +5,15 @@ Stdlib only (runs in containers with nothing but python3). Two jobs:
 
 1. **Schema + acceptance checks** for every bench kind the repo emits
    (`BENCH_scheduling.json`, `BENCH_throughput.json`, `BENCH_qos.json`,
-   `BENCH_admission.json`): structure, coverage (scenarios x policies x
-   fleets), and the semantic acceptance bars — the deadline policy must
-   not lose to class-blind Kernelet on the latency class under bursty
-   overload (qos), and the SLO guard must not lose to the open door
-   while shedding only batch-class kernels, with the per-class
-   completed + shed + deferred_unfinished + incomplete counts summing
-   exactly to arrivals in every cell (admission).
+   `BENCH_admission.json`, `BENCH_routing.json`): structure, coverage
+   (scenarios x policies x fleets), and the semantic acceptance bars —
+   the deadline policy must not lose to class-blind Kernelet on the
+   latency class under bursty overload (qos), the SLO guard must not
+   lose to the open door while shedding only batch-class kernels, with
+   the per-class completed + shed + deferred_unfinished + incomplete
+   counts summing exactly to arrivals in every cell (admission), and
+   ETA-driven routing (`efc`) must not lose to `sloaware` on fleet
+   latency-class deadline misses at the bursty peak load (routing).
 
 2. **Baseline comparison**: fresh files are compared against committed
    baselines (default `scripts/baselines/`) with a +/-15% tolerance on
@@ -222,11 +224,72 @@ def validate_admission(d, name):
         fail(f"{name}: bursty admitall/sloguard curves missing")
 
 
+def validate_routing(d, name):
+    check(d.get("bench") == "routing", f"{name}: wrong bench tag {d.get('bench')!r}")
+    check(0.0 < d.get("latency_fraction", 0) <= 1.0, f"{name}: bad latency_fraction")
+    check(d.get("deadline_scale", 0) > 0.0, f"{name}: bad deadline_scale")
+    gpus = d.get("gpus", 0)
+    check(gpus >= 2, f"{name}: routing needs a fleet, got gpus={gpus}")
+    curves = d.get("curves", [])
+    policies = {c["policy"] for c in curves}
+    check(
+        policies >= {"roundrobin", "leastloaded", "sloaware", "efc"},
+        f"{name}: missing routing policies: {sorted(policies)}",
+    )
+    scenarios = {c["scenario"] for c in curves}
+    check(len(scenarios) >= 2, f"{name}: need >=2 scenarios, got {sorted(scenarios)}")
+    by = {(c["scenario"], c["policy"]): c["points"] for c in curves}
+    for (scenario, policy), pts in by.items():
+        check(bool(pts), f"{name}: empty routing curve {scenario}/{policy}")
+        for p in pts:
+            label = f"{name}: {scenario}/{policy} load {p['load']}"
+            for cls in ("latency", "batch"):
+                c = p[cls]
+                check(
+                    c["deadline_misses"] <= max(c["with_deadline"], 1),
+                    f"{label}: {cls} misses exceed deadlined",
+                )
+                check(
+                    c["p50_s"] <= c["p99_s"] + 1e-12,
+                    f"{label}: {cls} percentiles unordered",
+                )
+            check(
+                p["goodput_kps"] <= p["throughput_kps"] + ABS_EPS,
+                f"{label}: goodput exceeds throughput",
+            )
+            eta = p.get("eta", [])
+            if policy == "efc":
+                # ETA calibration must be observable: one stats entry
+                # per device, non-negative error, bounded correction.
+                check(len(eta) == gpus, f"{label}: eta entries {len(eta)} != gpus {gpus}")
+                for e in eta:
+                    check(e["samples"] >= 0, f"{label}: negative eta samples")
+                    check(e["mean_abs_err_s"] >= 0.0, f"{label}: negative eta error")
+                    check(e["correction"] > 0.0, f"{label}: non-positive eta correction")
+            else:
+                check(not eta, f"{label}: non-efc point carries eta stats")
+
+    # Acceptance (the tentpole bar): at the bursty peak load, EFC
+    # routing must not lose to SloAware on fleet latency-class deadline
+    # misses.
+    if ("bursty", "sloaware") in by and ("bursty", "efc") in by:
+        peak = lambda pol: max(by[("bursty", pol)], key=lambda p: p["load"])["latency"]
+        slo, efc = peak("sloaware"), peak("efc")
+        check(
+            efc["deadline_misses"] <= slo["deadline_misses"],
+            f"{name}: efc misses {efc['deadline_misses']} > sloaware "
+            f"{slo['deadline_misses']} at bursty peak",
+        )
+    else:
+        fail(f"{name}: bursty sloaware/efc curves missing")
+
+
 VALIDATORS = {
     "scheduling": validate_scheduling,
     "throughput": validate_throughput,
     "qos": validate_qos,
     "admission": validate_admission,
+    "routing": validate_routing,
 }
 
 
@@ -241,6 +304,7 @@ COMPARE_KEYS = {
     "throughput": ["throughput_kps"],
     "qos": ["throughput_kps", "latency.p99_s", "batch.p99_s"],
     "admission": ["throughput_kps", "goodput_kps", "latency.p99_s"],
+    "routing": ["throughput_kps", "goodput_kps", "latency.p99_s"],
 }
 
 
@@ -343,6 +407,26 @@ def _admission_point(load, policy):
     }
 
 
+def _routing_point(load, policy):
+    misses = {"roundrobin": 9, "leastloaded": 6, "sloaware": 4, "efc": 2}[policy]
+    point = {
+        "load": load,
+        "kernels": 200,
+        "throughput_kps": 100.0,
+        "goodput_kps": 95.0,
+        "preemptions": 3 if policy == "efc" else 0,
+        "latency": _qos_cls(0.1 if policy == "efc" else 0.3, misses, 60),
+        "batch": _qos_cls(0.2, 0, 0),
+        "eta": [],
+    }
+    if policy == "efc":
+        point["eta"] = [
+            {"samples": 100, "mean_abs_err_s": 0.004, "mean_err_s": -0.001, "correction": 0.92}
+            for _ in range(2)
+        ]
+    return point
+
+
 def _qos_cls(p99, misses, deadlined):
     return {
         "completed": 40,
@@ -424,6 +508,23 @@ EXAMPLES = {
             for p in ("admitall", "backlogcap", "sloguard")
         ],
     },
+    "routing": {
+        "bench": "routing",
+        "gpus": 2,
+        "instances_per_app": 25,
+        "latency_fraction": 0.3,
+        "deadline_scale": 4.0,
+        "curves": [
+            {
+                "scenario": s,
+                "policy": p,
+                "gpus": 2,
+                "points": [_routing_point(3.0, p)],
+            }
+            for s in ("poisson", "bursty")
+            for p in ("roundrobin", "leastloaded", "sloaware", "efc")
+        ],
+    },
 }
 
 
@@ -448,6 +549,21 @@ def self_test():
         fail("self-test: partition violation slipped through validate_admission")
     else:
         # Expected failures: drop them.
+        del FAILURES[before:]
+    # Negative: EFC losing to SloAware on bursty-peak misses must be
+    # caught (the tentpole acceptance bar).
+    broken = json.loads(json.dumps(EXAMPLES["routing"]))
+    for c in broken["curves"]:
+        if c["scenario"] == "bursty" and c["policy"] == "efc":
+            c["points"][0]["latency"]["deadline_misses"] = 99
+            c["points"][0]["latency"]["with_deadline"] = 99
+    before = len(FAILURES)
+    QUIET = True
+    validate_routing(broken, "<negative>")
+    QUIET = False
+    if len(FAILURES) == before:
+        fail("self-test: efc-beats-sloaware violation slipped through validate_routing")
+    else:
         del FAILURES[before:]
     print("validator self-test OK")
 

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# CI pipeline: format, lint, build, test, and record + gate the perf
-# trajectories (BENCH_scheduling.json latency, BENCH_throughput.json
-# saturation + fleet curves, BENCH_qos.json per-class tail latency,
-# BENCH_admission.json goodput/shedding under overload). Schema and
+# CI pipeline: format, lint, docs, build, test, and record + gate the
+# perf trajectories (BENCH_scheduling.json latency,
+# BENCH_throughput.json saturation + fleet curves, BENCH_qos.json
+# per-class tail latency, BENCH_admission.json goodput/shedding under
+# overload, BENCH_routing.json fleet deadline routing). Schema and
 # baseline gating lives in scripts/check_bench.py.
 #
 # Usage: ./scripts/ci.sh [--quick]
@@ -25,11 +26,13 @@ instances=200
 tp_instances=50
 qos_instances=40
 adm_instances=40
+routing_instances=25
 if [[ "${1:-}" == "--quick" ]]; then
   instances=50
   tp_instances=8
   qos_instances=10
   adm_instances=10
+  routing_instances=8
 fi
 
 # Known-failing tier-1 tests, one fully-qualified test name per line —
@@ -84,6 +87,9 @@ cargo fmt --check
 echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 
+echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -110,11 +116,17 @@ KERNELET_INSTANCES="${adm_instances}" \
 KERNELET_ADMISSION_OUT="BENCH_admission.json" \
   cargo bench --bench admission
 
+echo "==> cargo bench --bench routing (instances/app=${routing_instances})"
+KERNELET_INSTANCES="${routing_instances}" \
+KERNELET_ROUTING_OUT="BENCH_routing.json" \
+  cargo bench --bench routing
+
 echo "==> bench gate (schemas + acceptance + baseline drift)"
 if command -v python3 >/dev/null 2>&1; then
   python3 "$SCRIPT_DIR/check_bench.py" \
     --baseline-dir "$SCRIPT_DIR/baselines" \
-    BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json BENCH_admission.json
+    BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json BENCH_admission.json \
+    BENCH_routing.json
 else
   echo "warning: python3 unavailable — falling back to shape greps" >&2
   grep -q '"bench":"scheduling"' BENCH_scheduling.json
@@ -122,6 +134,7 @@ else
   grep -q '"fleet_curves"' BENCH_throughput.json
   grep -q '"bench":"qos"' BENCH_qos.json
   grep -q '"bench":"admission"' BENCH_admission.json
+  grep -q '"bench":"routing"' BENCH_routing.json
 fi
 
 echo "==> perf record:"
