@@ -8,6 +8,11 @@
 //! - `KERNELET_BENCH_OUT` overrides the JSON output path (default
 //!   `BENCH_scheduling.json` in the working directory) so CI can record
 //!   the perf trajectory.
+//! - `KERNELET_CACHE_DIR` spills/reloads the simulation-measurement
+//!   cache (same files as the CLI's `--cache-dir`), so repeated bench
+//!   runs skip the cold-start simulation. Reloads are bit-exact, so the
+//!   cache cannot change what is scheduled — only how fast the substrate
+//!   answers.
 
 use kernelet::bench::{bench, once, BenchResult};
 use kernelet::config::GpuConfig;
@@ -44,6 +49,13 @@ fn main() {
     // unified engine.
     let gpu = GpuConfig::c2050();
     let coord = Coordinator::new(&gpu);
+    let cache_dir = std::env::var("KERNELET_CACHE_DIR").ok().map(std::path::PathBuf::from);
+    if let Some(dir) = &cache_dir {
+        match coord.simcache.reload(dir) {
+            Ok(n) => println!("simcache: {n} entries reloaded from {}", dir.display()),
+            Err(e) => eprintln!("simcache: reload from {} failed: {e}", dir.display()),
+        }
+    }
     let stream = Stream::saturated(Mix::ALL, 4, 7);
     // Warm the caches once so the steady-state cost is measured.
     run_kernelet(&coord, &stream);
@@ -72,10 +84,39 @@ fn main() {
         kernelet::bench::black_box(run_kernelet(&coord, &arrivals));
     }));
 
+    // Engine event rate: one warm timed run over the Poisson arrival
+    // stream, counting the discrete events the engine processed —
+    // arrivals, completions, and dispatch decisions (each decision is
+    // one queue-depth sample). events_per_sec is the headline "can the
+    // engine survive a 10M-arrival stream" number CI tracks.
+    let (erep, edt) = once("events::poisson_ALLx25", || run_kernelet(&coord, &arrivals));
+    let (e_arrivals, e_completions) = (erep.kernels_completed, erep.kernels_completed);
+    let e_decisions = erep.queue_depth.len();
+    let e_total = e_arrivals + e_completions + e_decisions;
+    let events_per_sec = e_total as f64 / edt.as_secs_f64();
+    println!(
+        "events::poisson_ALLx25: {e_total} events ({e_arrivals} arrivals + {e_completions} \
+         completions + {e_decisions} decisions) in {:.4}s -> {events_per_sec:.0} events/s",
+        edt.as_secs_f64()
+    );
+
+    if let Some(dir) = &cache_dir {
+        match coord.simcache.spill(dir) {
+            Ok(path) => println!("simcache: spilled to {}", path.display()),
+            Err(e) => eprintln!("simcache: spill to {} failed: {e}", dir.display()),
+        }
+    }
+
     // Record the perf trajectory for CI.
     let json = format!(
-        "{{\"bench\":\"scheduling\",\"instances_per_app\":{},\"results\":[{}]}}\n",
+        "{{\"bench\":\"scheduling\",\"instances_per_app\":{},\"events\":{{\"workload\":\"poisson_ALLx25\",\"arrivals\":{},\"completions\":{},\"decisions\":{},\"total\":{},\"wall_s\":{:.6},\"events_per_sec\":{:.1}}},\"results\":[{}]}}\n",
         instances,
+        e_arrivals,
+        e_completions,
+        e_decisions,
+        e_total,
+        edt.as_secs_f64(),
+        events_per_sec,
         results
             .iter()
             .map(|b| format!(

@@ -498,7 +498,7 @@ mod tests {
         pending: &'q [&'q KernelInstance],
         now_secs: f64,
     ) -> SchedCtx<'a, 'q> {
-        SchedCtx { coord, pending, now_secs, more_arrivals: true }
+        SchedCtx { coord, pending, now_secs, more_arrivals: true, admitted: &[], completed: &[] }
     }
 
     #[test]

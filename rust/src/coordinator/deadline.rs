@@ -30,6 +30,38 @@
 //! workload is decision-identical to the plain Kernelet policy — the
 //! differential tests in `tests/scheduling_invariants.rs` pin that.
 //!
+//! # The EDF index
+//!
+//! The selector runs once per dispatch decision, and a decision used
+//! to rescan the whole pending set: `deadline_pending` walked every
+//! kernel, and the urgency scan paid a simulator-cache lookup per
+//! deadlined kernel. On a 10M-arrival stream that is quadratic.
+//! [`EdfIndex`] makes the hot path incremental:
+//!
+//! - the engine's append-only admission/completion logs
+//!   ([`SchedCtx::admitted`] / [`SchedCtx::completed`]) are folded by
+//!   cursor, so per decision the index does O(new events) work, not
+//!   O(pending) — deadlined kernels enter an ordered set keyed by
+//!   `(deadline bits, id)` on admit and leave it on completion;
+//! - `deadline_pending` is an O(1) emptiness check, so the common
+//!   all-batch decision skips deadline bookkeeping entirely;
+//! - remaining-service estimates are memoized per `(id,
+//!   remaining_blocks)` — a kernel that did not run between two
+//!   decisions reuses its estimate instead of re-touching the
+//!   simulator cache.
+//!
+//! The urgency scans still *iterate* `ctx.pending` in queue order when
+//! the index is non-empty: urgency depends on the remaining-service
+//! estimate (which shrinks as a kernel runs), not on the deadline
+//! alone, and the slack tie-break is "first in queue order" — an
+//! iteration reordered by deadline would break bit-identity with the
+//! scan-based predecessor on exact slack ties. What the index removes
+//! is every lookup the scan used to pay, and the scan itself whenever
+//! no deadline is pending. `tests/hotpath_invariants.rs` pins the
+//! indexed selector decision- and report-identical to a frozen
+//! scan-based copy on all six arrival sources, and a `debug_assert`
+//! cross-checks the index against the pending set at every sync.
+//!
 //! # Mid-slice preemption
 //!
 //! The slice-granularity hold has a throughput tax: while *any*
@@ -47,9 +79,154 @@
 //! counts them). With no deadlines pending nothing is ever pinned, so
 //! zero-urgency workloads stay bit-identical to the preemption-free
 //! engine — `tests/routing_invariants.rs` pins that differentially.
+//!
+//! Solo residuals on the dry-stream path get the same treatment: the
+//! preemption-enabled selector dispatches the whole residual with a
+//! pin ahead of the earliest urgency point among the *other* deadlined
+//! kernels (the head cannot need to yield to itself), instead of
+//! holding the run at chunk granularity. A pin that is already due
+//! degrades to the chunked hold — never pay relaunch for a boundary
+//! the chunk gives for free.
+
+use std::collections::{BTreeSet, HashMap};
 
 use super::engine::{Decision, KerneletSelector, PreemptCost, PreemptPoint, SchedCtx, Selector};
 use crate::kernel::KernelInstance;
+
+/// Total-order bit pattern for a deadline, so `f64` deadlines can key
+/// an ordered set: negative values reversed, positives offset above
+/// them. Ascending `u64` order is ascending deadline order.
+fn deadline_order_bits(d: f64) -> u64 {
+    let b = d.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Incrementally-maintained view of the deadlined subset of the
+/// pending queue (see the module docs). Fed by cursors into the
+/// engine's append-only admission/completion logs; hand-built contexts
+/// without logs fall back to deriving it from the pending set each
+/// call.
+#[derive(Default)]
+struct EdfIndex {
+    /// Deadlined pending kernels ordered by `(deadline bits, id)` —
+    /// the EDF order. Emptiness is the O(1) `deadline_pending`.
+    by_deadline: BTreeSet<(u64, u64)>,
+    /// id → deadline bits, for O(log n) removal on completion.
+    deadline_of: HashMap<u64, u64>,
+    /// id → `(remaining_blocks, est_remaining_secs)` memo. The
+    /// estimate is a pure function of the spec and the residual, so a
+    /// hit is bit-identical to recomputing; a kernel that ran since
+    /// the last decision misses on `remaining_blocks` and recomputes.
+    est: HashMap<u64, (u32, f64)>,
+    admitted_cursor: usize,
+    completed_cursor: usize,
+}
+
+impl EdfIndex {
+    fn clear(&mut self) {
+        self.by_deadline.clear();
+        self.deadline_of.clear();
+        self.est.clear();
+        self.admitted_cursor = 0;
+        self.completed_cursor = 0;
+    }
+
+    fn insert(&mut self, id: u64, deadline: f64) {
+        let bits = deadline_order_bits(deadline);
+        if let Some(old) = self.deadline_of.insert(id, bits) {
+            self.by_deadline.remove(&(old, id));
+        }
+        self.by_deadline.insert((bits, id));
+    }
+
+    fn remove(&mut self, id: u64) {
+        if let Some(bits) = self.deadline_of.remove(&id) {
+            self.by_deadline.remove(&(bits, id));
+        }
+        self.est.remove(&id);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.by_deadline.is_empty()
+    }
+
+    /// Bring the index up to date with `ctx` by folding the log tails
+    /// past the cursors. A context without logs (unit tests, admission
+    /// probes build these by hand) rebuilds from the pending set; a
+    /// cursor past the end of a log means the selector was handed to a
+    /// different engine (logs restarted) — start over.
+    fn sync(&mut self, ctx: &SchedCtx<'_, '_>) {
+        if ctx.admitted.is_empty() {
+            if !ctx.pending.is_empty() || !self.by_deadline.is_empty() {
+                self.rebuild_from_pending(ctx);
+            }
+            return;
+        }
+        if self.admitted_cursor > ctx.admitted.len() || self.completed_cursor > ctx.completed.len()
+        {
+            self.clear();
+        }
+        for i in self.admitted_cursor..ctx.admitted.len() {
+            let (id, _arrival, qos) = ctx.admitted[i];
+            if let Some(d) = qos.deadline {
+                self.insert(id, d);
+            }
+        }
+        self.admitted_cursor = ctx.admitted.len();
+        for i in self.completed_cursor..ctx.completed.len() {
+            self.remove(ctx.completed[i].0);
+        }
+        self.completed_cursor = ctx.completed.len();
+        debug_assert!(
+            self.consistent_with(ctx),
+            "EDF index diverged from the pending set (selector reused across engines?)"
+        );
+    }
+
+    fn rebuild_from_pending(&mut self, ctx: &SchedCtx<'_, '_>) {
+        self.clear();
+        for &k in ctx.pending {
+            if let Some(d) = k.qos.deadline {
+                self.insert(k.id, d);
+            }
+        }
+        // Poison the cursors so the next log-backed context clears and
+        // refolds instead of trusting pending-derived entries.
+        self.admitted_cursor = usize::MAX;
+        self.completed_cursor = usize::MAX;
+    }
+
+    /// The invariant `sync` maintains: the index holds exactly the
+    /// deadlined subset of the pending set, with matching deadlines.
+    fn consistent_with(&self, ctx: &SchedCtx<'_, '_>) -> bool {
+        let deadlined = ctx.pending.iter().filter(|k| k.qos.deadline.is_some()).count();
+        deadlined == self.by_deadline.len()
+            && ctx.pending.iter().all(|k| match k.qos.deadline {
+                Some(d) => self.deadline_of.get(&k.id) == Some(&deadline_order_bits(d)),
+                None => true,
+            })
+    }
+
+    /// Memoized [`SchedCtx::est_remaining_secs`] — bit-identical to
+    /// the direct call (the estimate is a pure function of spec and
+    /// residual), cached until the kernel's residual changes.
+    fn est_remaining(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> f64 {
+        let rem = k.remaining_blocks();
+        if let Some(&(r, v)) = self.est.get(&k.id) {
+            if r == rem {
+                debug_assert_eq!(v.to_bits(), ctx.est_remaining_secs(k).to_bits());
+                return v;
+            }
+        }
+        let v = ctx.est_remaining_secs(k);
+        self.est.insert(k.id, (rem, v));
+        v
+    }
+}
 
 /// EDF-gated Kernelet (see module docs).
 pub struct DeadlineSelector {
@@ -64,12 +241,15 @@ pub struct DeadlineSelector {
     /// are pending; `Some` lets pair blocks run uncapped with a
     /// deadline-derived preemption pin instead (see the module docs).
     preempt: Option<PreemptCost>,
+    /// Incremental EDF view of the pending set (see the module docs);
+    /// synced against the engine logs at the top of every selector
+    /// entry point.
+    index: EdfIndex,
     /// Urgency scan memo for the current dispatch decision, keyed by
     /// (clock bits, backlog): the engine calls `select` and then
-    /// `solo_pick` on the same context, and the scan costs one
-    /// simulator-cache lookup per deadlined kernel — too much to pay
-    /// twice per decision in exactly the overloaded regime this policy
-    /// targets.
+    /// `solo_pick` on the same context, and the scan costs an estimate
+    /// per deadlined kernel — too much to pay twice per decision in
+    /// exactly the overloaded regime this policy targets.
     cached: Option<((u64, usize), Option<u64>)>,
 }
 
@@ -87,7 +267,13 @@ impl DeadlineSelector {
     /// An EDF-gated selector with an explicit urgency factor (≥ 1).
     pub fn with_urgency_factor(urgency_factor: f64) -> Self {
         assert!(urgency_factor >= 1.0, "urgency factor {urgency_factor} < 1 always misses");
-        Self { inner: KerneletSelector, urgency_factor, preempt: None, cached: None }
+        Self {
+            inner: KerneletSelector,
+            urgency_factor,
+            preempt: None,
+            index: EdfIndex::default(),
+            cached: None,
+        }
     }
 
     /// Enable mid-slice preemption under `cost`: pair blocks run
@@ -100,19 +286,30 @@ impl DeadlineSelector {
     }
 
     /// Earliest moment any pending deadlined kernel turns urgent
-    /// (`deadline − urgency_factor × est_remaining`). In-pair
-    /// deadlined kernels count too: although the block is advancing
-    /// them, the greedy re-pick at a boundary may swap them out of the
-    /// pair (their residual shrinks, so a different pairing can win),
-    /// and only a boundary near their urgency point keeps that exact —
+    /// (`deadline − urgency_factor × est_remaining`), skipping
+    /// `exclude` (pass `None` to consider all). In-pair deadlined
+    /// kernels count too: although the block is advancing them, the
+    /// greedy re-pick at a boundary may swap them out of the pair
+    /// (their residual shrinks, so a different pairing can win), and
+    /// only a boundary near their urgency point keeps that exact —
     /// their residual only shrinks while the block runs, so an
     /// estimate taken now is conservative (the true urgency moment can
     /// only move later).
-    fn earliest_urgency_secs(&self, ctx: &SchedCtx<'_, '_>) -> Option<f64> {
+    fn earliest_urgency_secs(
+        &mut self,
+        ctx: &SchedCtx<'_, '_>,
+        exclude: Option<u64>,
+    ) -> Option<f64> {
+        if self.index.is_empty() {
+            return None;
+        }
         let mut earliest: Option<f64> = None;
         for &k in ctx.pending {
             let Some(deadline) = k.qos.deadline else { continue };
-            let t_u = deadline - self.urgency_factor * ctx.est_remaining_secs(k);
+            if Some(k.id) == exclude {
+                continue;
+            }
+            let t_u = deadline - self.urgency_factor * self.index.est_remaining(ctx, k);
             if earliest.map_or(true, |e| t_u < e) {
                 earliest = Some(t_u);
             }
@@ -128,11 +325,11 @@ impl DeadlineSelector {
     /// fired (or fires inside the break-even window) degrades to the
     /// free one-round cap — never pay relaunch for a boundary the cap
     /// gives for free.
-    fn pending_deadline_pair(&self, ctx: &SchedCtx<'_, '_>, d: Decision) -> Decision {
+    fn pending_deadline_pair(&mut self, ctx: &SchedCtx<'_, '_>, d: Decision) -> Decision {
         let Some(cost) = self.preempt else {
             return Decision { rounds_cap: Some(1), ..d };
         };
-        match self.earliest_urgency_secs(ctx) {
+        match self.earliest_urgency_secs(ctx, None) {
             Some(t_u) => {
                 let at = t_u - cost.break_even_secs();
                 if at <= ctx.now_secs {
@@ -157,11 +354,15 @@ impl DeadlineSelector {
     /// those whose time-to-deadline is within `urgency_factor ×` their
     /// remaining service estimate. Ties break toward queue order
     /// (strict `<`), which is also arrival order for a single stream.
-    fn scan_urgent(&self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+    /// O(1) when no deadline is pending (the index is empty).
+    fn scan_urgent(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+        if self.index.is_empty() {
+            return None;
+        }
         let mut best: Option<(f64, u64)> = None;
         for &k in ctx.pending {
             let Some(ttd) = k.time_to_deadline(ctx.now_secs) else { continue };
-            let est = ctx.est_remaining_secs(k);
+            let est = self.index.est_remaining(ctx, k);
             if ttd > self.urgency_factor * est {
                 continue; // comfortably ahead of its deadline
             }
@@ -177,14 +378,16 @@ impl DeadlineSelector {
         (ctx.now_secs.to_bits(), ctx.backlog())
     }
 
-    /// Whether any pending kernel carries a deadline. While true, the
-    /// selector keeps dispatch at slice granularity (chunked solos,
-    /// single-round pair blocks) so a not-yet-urgent kernel can turn
-    /// urgent at the next decision boundary — even after the arrival
-    /// stream has gone dry, when the default dispatch would otherwise
-    /// run whole residuals and uncapped pair blocks uninterruptibly.
-    fn deadline_pending(ctx: &SchedCtx<'_, '_>) -> bool {
-        ctx.pending.iter().any(|k| k.qos.deadline.is_some())
+    /// Whether any pending kernel carries a deadline — an O(1) index
+    /// emptiness check (the index is synced at every selector entry
+    /// point). While true, the selector keeps dispatch at slice
+    /// granularity (chunked solos, single-round pair blocks) so a
+    /// not-yet-urgent kernel can turn urgent at the next decision
+    /// boundary — even after the arrival stream has gone dry, when the
+    /// default dispatch would otherwise run whole residuals and
+    /// uncapped pair blocks uninterruptibly.
+    fn deadline_pending(&self) -> bool {
+        !self.index.is_empty()
     }
 }
 
@@ -200,11 +403,12 @@ impl Selector for DeadlineSelector {
     }
 
     fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+        self.index.sync(ctx);
         let urgent = self.scan_urgent(ctx);
         // Memoize for the solo_pick the engine issues on this same
-        // decision when we return None — the scan costs a simulator
-        // lookup per deadlined kernel and must not run twice per
-        // dispatch in the overloaded regime this policy targets.
+        // decision when we return None — the scan costs an estimate
+        // per deadlined kernel and must not run twice per dispatch in
+        // the overloaded regime this policy targets.
         self.cached = Some((Self::decision_key(ctx), urgent));
         match urgent {
             // Nothing at risk *yet*: the throughput-optimal plan
@@ -215,9 +419,7 @@ impl Selector for DeadlineSelector {
             // PreemptCost the block runs uncapped, pinned to yield
             // ahead of the earliest urgency point.
             None => match self.inner.select(ctx) {
-                Some(d) if Self::deadline_pending(ctx) => {
-                    Some(self.pending_deadline_pair(ctx, d))
-                }
+                Some(d) if self.deadline_pending() => Some(self.pending_deadline_pair(ctx, d)),
                 other => other,
             },
             Some(u) => {
@@ -237,6 +439,7 @@ impl Selector for DeadlineSelector {
     }
 
     fn solo_pick(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+        self.index.sync(ctx);
         // Consume the memo `select` left for this decision; a key
         // mismatch, a standalone call, or an id no longer pending falls
         // back to a fresh scan.
@@ -256,15 +459,53 @@ impl Selector for DeadlineSelector {
     }
 
     fn solo_slice(&mut self, ctx: &SchedCtx<'_, '_>, head: &KernelInstance) -> u32 {
+        self.index.sync(ctx);
         // Keep solos chunked while any deadline is pending, even once
         // the stream is dry: the default would dispatch the whole
         // residual as one uninterruptible slice, hiding a kernel that
         // turns urgent mid-run until it is too late to meet.
-        if Self::deadline_pending(ctx) || ctx.more_arrivals {
+        if self.deadline_pending() || ctx.more_arrivals {
             ctx.coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
         } else {
             head.remaining_blocks()
         }
+    }
+
+    fn solo_plan(
+        &mut self,
+        ctx: &SchedCtx<'_, '_>,
+        head: &KernelInstance,
+    ) -> (u32, Option<PreemptPoint>) {
+        self.index.sync(ctx);
+        // Dry-stream solos under a PreemptCost run whole residuals
+        // pinned ahead of the earliest urgency point among the *other*
+        // deadlined kernels, instead of being held at chunk
+        // granularity (see "Mid-slice preemption" in the module docs).
+        if let Some(cost) = self.preempt {
+            if !ctx.more_arrivals && self.deadline_pending() {
+                match self.earliest_urgency_secs(ctx, Some(head.id)) {
+                    Some(t_u) => {
+                        let at = t_u - cost.break_even_secs();
+                        if at > ctx.now_secs {
+                            return (
+                                head.remaining_blocks(),
+                                Some(PreemptPoint {
+                                    at_secs: at,
+                                    relaunch_secs: cost.relaunch_secs,
+                                }),
+                            );
+                        }
+                        // Pin already due: the chunked hold reaches a
+                        // boundary sooner and costs no relaunch.
+                    }
+                    // The head is the only deadlined kernel: nothing
+                    // else can turn urgent mid-run, so the residual is
+                    // safe to run uninterrupted.
+                    None => return (head.remaining_blocks(), None),
+                }
+            }
+        }
+        (self.solo_slice(ctx, head), None)
     }
 }
 
@@ -281,7 +522,7 @@ mod tests {
         pending: &'q [&'q KernelInstance],
         now_secs: f64,
     ) -> SchedCtx<'a, 'q> {
-        SchedCtx { coord, pending, now_secs, more_arrivals: true }
+        SchedCtx { coord, pending, now_secs, more_arrivals: true, admitted: &[], completed: &[] }
     }
 
     #[test]
@@ -345,6 +586,39 @@ mod tests {
     }
 
     #[test]
+    fn index_survives_engine_handoff_and_interleaved_contexts() {
+        // The same selector instance is driven against a hand-built
+        // context (no logs -> pending-derived rebuild), then a real
+        // engine (log cursors), then a second engine (logs restart ->
+        // reset guard). The per-sync debug_assert cross-checks the
+        // index against the pending set at every decision, so a stale
+        // entry from any earlier phase would abort the run.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let est = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&BenchmarkApp::MM.spec()));
+        let insts = [
+            KernelInstance::new(7, BenchmarkApp::MM.spec(), 0.0),
+            KernelInstance::new(8, BenchmarkApp::MM.spec(), 0.0)
+                .with_qos(Qos::latency(Some(est * 1.5))),
+        ];
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let mut dl = DeadlineSelector::new();
+        assert_eq!(dl.solo_pick(&ctx_over(&coord, &refs, 0.0)), Some(8));
+
+        let mut stream = Stream::saturated(Mix::MIX, 2, 11);
+        for k in &mut stream.instances {
+            k.qos = Qos::latency(Some(1e9));
+        }
+        let rep =
+            Engine::new(&coord).run_source(&mut dl, &mut ReplaySource::from_stream(&stream));
+        assert_eq!(rep.kernels_completed, stream.len());
+
+        let rep2 =
+            Engine::new(&coord).run_source(&mut dl, &mut ReplaySource::from_stream(&stream));
+        assert_eq!(rep2.kernels_completed, stream.len());
+        assert_eq!(rep.total_cycles, rep2.total_cycles, "handoff must not leak state");
+    }
+
+    #[test]
     fn dry_stream_still_preempts_at_slice_boundaries() {
         // REGRESSION: with no further arrivals the default dispatch
         // runs whole residuals, so a kernel that turns urgent mid-run
@@ -378,6 +652,59 @@ mod tests {
             rep.qos.latency.deadline_misses, 0,
             "latency kernel completed at {} vs deadline {deadline}",
             rep.completion[&1]
+        );
+    }
+
+    #[test]
+    fn dry_stream_solo_preemption_pins_whole_residuals() {
+        // With a PreemptCost configured, dry-stream solos run whole
+        // residuals with a preemption pin instead of chunking. Craft:
+        // a big batch kernel (same app as the latency kernel, so
+        // pairing is impossible) ahead of a small deadlined kernel
+        // that is not urgent at t=0, misses if the big residual runs
+        // uncut, and meets via the pin (cut at its urgency point minus
+        // the break-even, then one chunk of the big kernel, then the
+        // latency kernel itself).
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let small = BenchmarkApp::MM.spec();
+        let big = small.with_grid(small.grid_blocks * 3);
+        let est_small = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&small));
+        let est_big = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&big));
+        let cost = PreemptCost::for_gpu(&coord.gpu);
+        let deadline = 0.85 * est_big;
+        assert!(deadline > 2.0 * est_small, "craft: urgent too early");
+        assert!(deadline < est_big, "craft: uncut residual must miss");
+        // Post-cut chain: cut at (deadline - 2*est_small) - break_even,
+        // then one big chunk (~est_big/4), then the latency kernel.
+        assert!(
+            (deadline - 2.0 * est_small) + 0.25 * est_big + 1.15 * est_small < deadline,
+            "craft: pinned run must meet (est_big {est_big} vs est_small {est_small})"
+        );
+        let instances = vec![
+            KernelInstance::new(0, big, 0.0),
+            KernelInstance::new(1, small, 0.0).with_qos(Qos::latency(Some(deadline))),
+        ];
+        let run = |sel: &mut dyn crate::coordinator::Selector| {
+            Engine::new(&coord)
+                .run_source(sel, &mut ReplaySource::from_instances("dry", instances.clone()))
+        };
+        let capped = run(&mut DeadlineSelector::new());
+        assert_eq!(capped.qos.latency.deadline_misses, 0, "chunked hold must meet");
+        assert_eq!(capped.preemptions, 0, "no preemption configured");
+
+        let preempting = run(&mut DeadlineSelector::new().with_preemption(cost));
+        assert_eq!(preempting.kernels_completed, 2);
+        assert_eq!(
+            preempting.qos.latency.deadline_misses, 0,
+            "pinned solo must still meet (completion {:?} vs {deadline})",
+            preempting.completion.get(&1)
+        );
+        assert!(preempting.preemptions >= 1, "the solo pin never fired");
+        assert!(
+            preempting.queue_depth.len() < capped.queue_depth.len(),
+            "whole-residual solos must need fewer dispatch decisions: {} >= {}",
+            preempting.queue_depth.len(),
+            capped.queue_depth.len()
         );
     }
 

@@ -188,6 +188,17 @@ pub struct SchedCtx<'a, 'q> {
     /// Whether the arrival stream may still produce kernels (drives the
     /// chunk-vs-run-whole solo decision).
     pub more_arrivals: bool,
+    /// Append-only admission log: `(id, arrival time, qos)` of every
+    /// kernel the engine admitted, in admission order. Index-maintaining
+    /// selectors keep a cursor into this and fold only the *new* tail
+    /// into their structures each decision, instead of rescanning the
+    /// pending set. Hand-built contexts (tests, admission probes) may
+    /// pass `&[]`; selectors then fall back to deriving state from
+    /// [`SchedCtx::pending`] directly.
+    pub admitted: &'q [(u64, f64, Qos)],
+    /// Append-only completion log `(id, completion time)`, the removal
+    /// side of the incremental index maintenance.
+    pub completed: &'q [(u64, f64)],
 }
 
 impl SchedCtx<'_, '_> {
@@ -237,6 +248,22 @@ pub trait Selector {
         } else {
             head.remaining_blocks()
         }
+    }
+
+    /// Full solo dispatch plan: the slice size plus an optional
+    /// mid-slice preemption pin. When a pin is returned and the slice
+    /// would run past [`PreemptPoint::at_secs`], the engine cuts the
+    /// slice proportionally at the pin and charges the relaunch
+    /// overhead — so a long residual run no longer blocks an upcoming
+    /// urgent kernel until its natural boundary. The default delegates
+    /// to [`Self::solo_slice`] and never preempts (the pre-preemption
+    /// engine, bit for bit).
+    fn solo_plan(
+        &mut self,
+        ctx: &SchedCtx<'_, '_>,
+        head: &KernelInstance,
+    ) -> (u32, Option<PreemptPoint>) {
+        (self.solo_slice(ctx, head), None)
     }
 }
 
@@ -680,6 +707,8 @@ impl<'a> Engine<'a> {
                 // the device clock still lags it (idle device).
                 now_secs: self.secs(self.clock_cycles).max(k.arrival_time),
                 more_arrivals: true,
+                admitted: &self.submitted,
+                completed: &self.completed_log,
             };
             ctrl.decide(&ctx, &k)
         };
@@ -714,6 +743,8 @@ impl<'a> Engine<'a> {
                     pending: &refs,
                     now_secs: self.secs(self.clock_cycles),
                     more_arrivals: true,
+                    admitted: &self.submitted,
+                    completed: &self.completed_log,
                 };
                 ctrl.try_release(&ctx)
             };
@@ -729,6 +760,14 @@ impl<'a> Engine<'a> {
     /// closed-loop source keep a cursor into this log.
     pub fn completion_log(&self) -> &[(u64, f64)] {
         &self.completed_log
+    }
+
+    /// Admissions so far — `(id, arrival time, qos)` in admission
+    /// order. External drivers that build a [`SchedCtx`] against this
+    /// engine (the multi-GPU router's admission probes) pass this as
+    /// [`SchedCtx::admitted`].
+    pub fn submitted_log(&self) -> &[(u64, f64, Qos)] {
+        &self.submitted
     }
 
     /// One dispatch decision, exposed for drivers that interleave
@@ -830,14 +869,24 @@ impl<'a> Engine<'a> {
                 continue;
             };
             while !self.queue.is_empty() && self.secs(self.clock_cycles) < t {
+                let seen = self.completed_log.len();
                 self.dispatch_once(&mut *selector, Some(t), true);
-                self.feed_completions(source, &mut fed);
+                // Batched completion handling: a source's schedule only
+                // changes on a completion event, so decisions that
+                // complete nothing skip the feed and the re-peek
+                // entirely (feeding would be a no-op and the peeked
+                // arrival cannot have moved).
+                if self.completed_log.len() > seen {
+                    self.feed_completions(source, &mut fed);
+                }
                 self.pump_admission();
-                match source.peek_time() {
-                    Some(t2) if t2 >= t => {}
-                    // An earlier arrival was injected (or the source
-                    // emptied): re-evaluate from the top.
-                    _ => continue 'outer,
+                if self.completed_log.len() > seen {
+                    match source.peek_time() {
+                        Some(t2) if t2 >= t => {}
+                        // An earlier arrival was injected (or the source
+                        // emptied): re-evaluate from the top.
+                        _ => continue 'outer,
+                    }
                 }
             }
             let k = source.next_arrival().expect("peeked arrival disappeared");
@@ -978,11 +1027,18 @@ impl<'a> Engine<'a> {
         self.queue_depth.push((now_secs, self.queue.len()));
         enum Plan {
             Pair(Decision),
-            Solo { id: u64, size: u32 },
+            Solo { id: u64, size: u32, preempt: Option<PreemptPoint> },
         }
         let plan = {
             let refs: Vec<&KernelInstance> = self.queue.iter().collect();
-            let ctx = SchedCtx { coord: self.coord, pending: &refs, now_secs, more_arrivals };
+            let ctx = SchedCtx {
+                coord: self.coord,
+                pending: &refs,
+                now_secs,
+                more_arrivals,
+                admitted: &self.submitted,
+                completed: &self.completed_log,
+            };
             match selector.select(&ctx) {
                 Some(d) => Plan::Pair(d),
                 None => {
@@ -993,14 +1049,14 @@ impl<'a> Engine<'a> {
                         .iter()
                         .find(|k| k.id == id)
                         .expect("solo_pick chose a kernel not in the pending queue");
-                    let size = selector.solo_slice(&ctx, head);
-                    Plan::Solo { id, size }
+                    let (size, preempt) = selector.solo_plan(&ctx, head);
+                    Plan::Solo { id, size, preempt }
                 }
             }
         };
         match plan {
             Plan::Pair(d) => self.dispatch_pair(&d, next_arrival),
-            Plan::Solo { id, size } => self.dispatch_solo(id, size),
+            Plan::Solo { id, size, preempt } => self.dispatch_solo(id, size, preempt),
         }
     }
 
@@ -1092,13 +1148,36 @@ impl<'a> Engine<'a> {
     }
 
     /// Dispatch one solo slice of `size` blocks of kernel `id` (chosen
-    /// by the selector's [`Selector::solo_pick`]).
-    fn dispatch_solo(&mut self, id: u64, size: u32) {
+    /// by the selector's [`Selector::solo_pick`]). A preemption pin
+    /// (from [`Selector::solo_plan`]) cuts the slice proportionally at
+    /// [`PreemptPoint::at_secs`] and charges the relaunch overhead, so
+    /// a full-residual run can be reclaimed before an urgency point.
+    fn dispatch_solo(&mut self, id: u64, mut size: u32, preempt: Option<PreemptPoint>) {
         let head = self
             .queue
             .iter()
             .position(|k| k.id == id)
             .expect("dispatch_solo target left the pending queue");
+        let mut preempted = false;
+        if let Some(p) = preempt {
+            let planned = {
+                let k = &self.queue[head];
+                size.min(k.remaining_blocks().max(1))
+            };
+            let now = self.secs(self.clock_cycles);
+            if planned > 1 && p.at_secs > now {
+                let full = self.timing.time_solo(&self.queue[head].spec, planned);
+                let end = self.secs(self.clock_cycles + full);
+                if end > p.at_secs {
+                    // Blocks are homogeneous within a kernel, so the
+                    // share that fits before the pin is the time share.
+                    let frac = (p.at_secs - now) / (end - now);
+                    let cut = ((planned as f64 * frac).floor() as u32).clamp(1, planned - 1);
+                    size = cut;
+                    preempted = true;
+                }
+            }
+        }
         let (r, id, fin) = {
             let k = &mut self.queue[head];
             let r = k.take_slice(size.min(k.remaining_blocks().max(1)));
@@ -1125,6 +1204,16 @@ impl<'a> Engine<'a> {
         );
         if fin {
             self.complete(id, t);
+        }
+        if preempted {
+            // Mirror the pair path: the slice that just drained is the
+            // "drain" half of the cost; charge the relaunch half for
+            // resuming the residual later.
+            let p = preempt.expect("preempted only with a pin");
+            let cycles = p.relaunch_secs * self.coord.gpu.clock_hz();
+            self.clock_cycles += cycles;
+            self.busy_cycles += cycles;
+            self.preemptions += 1;
         }
         self.queue.retain(|k| !k.is_finished());
     }

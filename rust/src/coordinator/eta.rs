@@ -34,6 +34,22 @@
 //! - **Calibration** — replaying the same trace twice, the second pass
 //!   (with the correction learned on the first) has a smaller mean
 //!   absolute prediction error.
+//!
+//! # Hot path
+//!
+//! The router projects every device for every arrival, and a
+//! projection used to recompute the solo-rate price of every queued
+//! residual — O(fleet × pending) simulator-cache lookups per routing
+//! decision. The model now memoizes each kernel's raw price per
+//! `(id, remaining_blocks)`: a kernel that did not run between two
+//! decisions reuses its price, so a projection costs one hash probe
+//! per queued kernel and prices are recomputed only for kernels whose
+//! residual actually changed. The price is a pure function of the
+//! spec and the residual (the correction is applied outside the sum),
+//! so a memo hit is bit-identical to recomputing, the queue-order sum
+//! is unchanged, and calibration is untouched —
+//! `tests/hotpath_invariants.rs` pins the memoized projections against
+//! a fresh model's, and a `debug_assert` cross-checks every hit.
 
 use std::collections::HashMap;
 
@@ -101,6 +117,12 @@ pub struct EtaModel {
     /// Routed-but-not-yet-completed kernels: id → (routing-time clock,
     /// predicted absolute finish).
     in_flight: HashMap<u64, (f64, f64)>,
+    /// Raw price memo: id → `(remaining_blocks, est_secs)`. Hits are
+    /// bit-identical to recomputing (the price is a pure function of
+    /// spec and residual); entries die on completion, and probe-only
+    /// entries (kernels priced here but routed elsewhere) are pruned
+    /// when the memo outgrows the pending set (see the module docs).
+    prices: HashMap<u64, (u32, f64)>,
     samples: usize,
     abs_err_sum: f64,
     err_sum: f64,
@@ -127,6 +149,7 @@ impl EtaModel {
             correction: 1.0,
             gain,
             in_flight: HashMap::new(),
+            prices: HashMap::new(),
             samples: 0,
             abs_err_sum: 0.0,
             err_sum: 0.0,
@@ -147,21 +170,47 @@ impl EtaModel {
         coord.est_remaining_secs(k)
     }
 
+    /// Memoized [`EtaModel::est_remaining_secs`] — bit-identical to
+    /// the direct call, cached until the kernel's residual changes.
+    fn price(&mut self, coord: &Coordinator, k: &KernelInstance) -> f64 {
+        let rem = k.remaining_blocks();
+        if let Some(&(r, v)) = self.prices.get(&k.id) {
+            if r == rem {
+                debug_assert_eq!(v.to_bits(), Self::est_remaining_secs(coord, k).to_bits());
+                return v;
+            }
+        }
+        let v = Self::est_remaining_secs(coord, k);
+        self.prices.insert(k.id, (rem, v));
+        v
+    }
+
     /// Calibrated completion horizon of a device at global time `now`:
     /// how many seconds until everything it already holds is projected
     /// to drain. `clock_secs` is the device engine's clock (it may run
     /// ahead of `now` while draining a backlog); `pending` its live
     /// queue. Monotone in the pending set: adding work never shortens
-    /// the horizon.
+    /// the horizon. `&mut` only to feed the price memo — the
+    /// projection itself mutates nothing observable.
     pub fn horizon_secs(
-        &self,
+        &mut self,
         coord: &Coordinator,
         pending: &[KernelInstance],
         clock_secs: f64,
         now: f64,
     ) -> f64 {
+        // Probe-only entries (kernels priced here but routed to another
+        // device) never see a completion; shed them once the memo
+        // clearly outgrows the queue it is caching for.
+        if self.prices.len() > 2 * pending.len() + 64 {
+            let live: std::collections::HashSet<u64> = pending.iter().map(|k| k.id).collect();
+            self.prices.retain(|id, _| live.contains(id));
+        }
         let overrun = (clock_secs - now).max(0.0);
-        let queued: f64 = pending.iter().map(|k| Self::est_remaining_secs(coord, k)).sum();
+        let mut queued = 0.0;
+        for k in pending {
+            queued += self.price(coord, k);
+        }
         overrun + self.correction * queued
     }
 
@@ -171,7 +220,7 @@ impl EtaModel {
     /// [`DispatchPolicy::EarliestFeasible`](super::DispatchPolicy)
     /// compares against the kernel's deadline.
     pub fn projected_finish_secs(
-        &self,
+        &mut self,
         coord: &Coordinator,
         pending: &[KernelInstance],
         clock_secs: f64,
@@ -179,7 +228,7 @@ impl EtaModel {
         k: &KernelInstance,
     ) -> f64 {
         now + self.horizon_secs(coord, pending, clock_secs, now)
-            + self.correction * Self::est_remaining_secs(coord, k)
+            + self.correction * self.price(coord, k)
     }
 
     /// Remember the projection made when `k` was routed here, so the
@@ -194,6 +243,7 @@ impl EtaModel {
     /// correction. Unknown ids (kernels routed before the model was
     /// installed, or never recorded) are ignored.
     pub fn observe_completion(&mut self, id: u64, t_secs: f64) {
+        self.prices.remove(&id);
         let Some((routed_at, predicted)) = self.in_flight.remove(&id) else { return };
         let err = t_secs - predicted;
         self.samples += 1;
@@ -232,7 +282,7 @@ mod tests {
     #[test]
     fn horizon_is_monotone_in_pending_work() {
         let coord = Coordinator::new(&GpuConfig::c2050());
-        let model = EtaModel::new();
+        let mut model = EtaModel::new();
         let mut pending: Vec<KernelInstance> = Vec::new();
         let mut last = model.horizon_secs(&coord, &pending, 0.0, 0.0);
         assert_eq!(last, 0.0, "empty queue, no overrun: horizon must be zero");
@@ -365,7 +415,7 @@ mod tests {
         let coord = Coordinator::new(&GpuConfig::c2050());
         let stream = Stream::poisson(Mix::MIX, 4, 300.0, 11);
         let mut src = ReplaySource::from_stream(&stream);
-        let model = EtaModel::new();
+        let mut model = EtaModel::new();
         let mut projections = Vec::new();
         while let Some(k) = src.next_arrival() {
             projections

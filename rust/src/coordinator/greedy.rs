@@ -16,6 +16,31 @@ use crate::profiler::{Profile, ProfileCache};
 use crate::sharded::ShardedMap;
 use crate::slicer::SliceSizeCache;
 
+/// One memoized `find_coschedule` outcome. Kernels are referenced by
+/// *position* in the deduplicated application list rather than by
+/// instance id, so a cache hit re-binds to whatever live instances
+/// currently head each application's queue — the model quantities are
+/// per-application, the ids are not.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct PairPick {
+    /// Index of the first kernel in the deduplicated application list.
+    i: usize,
+    /// Index of the partner.
+    j: usize,
+    /// Per-SM resident blocks for each kernel.
+    b1: u32,
+    /// Per-SM resident blocks for the partner.
+    b2: u32,
+    /// Slice sizes in grid blocks (balanced, Eq. 8).
+    size1: u32,
+    /// Partner slice size.
+    size2: u32,
+    /// Model-predicted concurrent IPCs.
+    cipc: [f64; 2],
+    /// Model-predicted co-scheduling profit.
+    cp: f64,
+}
+
 /// A selected co-schedule: the paper's `<K1, K2, size1, size2>` tuple
 /// plus the model quantities that chose it.
 #[derive(Debug, Clone)]
@@ -65,6 +90,14 @@ pub struct Coordinator {
     model_cache: ShardedMap<(String, String), (u32, u32, [f64; 2], f64)>,
     /// Memoized model-predicted solo IPCs by kernel name.
     solo_model_cache: ShardedMap<String, f64>,
+    /// Memoized pairing decisions for the greedy search, keyed by the
+    /// deduplicated application list (name + grid per app, in queue
+    /// order) and the tuning knobs. The backlog cycles through a small
+    /// set of application mixes, so after warm-up `find_coschedule` is
+    /// a single hash probe instead of a prune + model sweep. Knobs are
+    /// part of the key, so mutating [`Self::prune`] or [`Self::cp_min`]
+    /// mid-run cannot serve stale picks.
+    pick_cache: ShardedMap<String, Option<PairPick>>,
 }
 
 impl Coordinator {
@@ -86,6 +119,7 @@ impl Coordinator {
             cp_min: 0.01,
             model_cache: ShardedMap::new(),
             solo_model_cache: ShardedMap::new(),
+            pick_cache: ShardedMap::new(),
         }
     }
 
@@ -199,19 +233,62 @@ impl Coordinator {
     /// The paper's FindCoSchedule: pick the best co-schedule from the
     /// pending set, or None when no pair survives (single kernel, one
     /// application only, or nothing feasible).
+    ///
+    /// The search itself is memoized: the pick is a pure function of
+    /// the deduplicated application list (and the tuning knobs), so a
+    /// backlog that keeps presenting the same mix — the common case on
+    /// every decision of a saturated run — resolves with one hash
+    /// probe. Instance ids are re-bound on every call; only the model
+    /// outcome is cached.
     pub fn find_coschedule(&self, pending: &[&KernelInstance]) -> Option<CoSchedule> {
         // Candidate pairs: the earliest instance of each distinct
         // application (instances of one application are identical, and
         // same-app pairs have zero PUR/MUR difference — always pruned).
+        let mut seen = std::collections::HashSet::new();
         let mut first_of_app: Vec<&KernelInstance> = Vec::new();
         for inst in pending {
-            if !first_of_app.iter().any(|k| k.spec.name == inst.spec.name) {
+            if seen.insert(inst.spec.name) {
                 first_of_app.push(inst);
             }
         }
         if first_of_app.len() < 2 {
             return None;
         }
+        let key = self.pick_key(&first_of_app);
+        if let Some(hit) = self.pick_cache.get(key.as_str()) {
+            debug_assert_eq!(
+                hit,
+                self.compute_pick(&first_of_app),
+                "pick memo diverged from a fresh search"
+            );
+            return hit.map(|p| Self::bind(&first_of_app, p));
+        }
+        let pick = self.compute_pick(&first_of_app);
+        self.pick_cache.insert(key, pick);
+        pick.map(|p| Self::bind(&first_of_app, p))
+    }
+
+    /// Memo key for one deduplicated application list: the knobs that
+    /// steer the search, then each app's name and grid. The grid is
+    /// part of the key because balanced slice sizes (and the minimum
+    /// slice) depend on it, so two same-named specs with different
+    /// grids must not share a pick.
+    fn pick_key(&self, first_of_app: &[&KernelInstance]) -> String {
+        use std::fmt::Write;
+        let mut key = format!(
+            "{:?}|{:?}|{}|{}",
+            self.prune, self.granularity, self.overhead_budget_pct, self.cp_min
+        );
+        for k in first_of_app {
+            let _ = write!(key, "\u{1f}{}#{}", k.spec.name, k.spec.grid_blocks);
+        }
+        key
+    }
+
+    /// The uncached greedy search body: prune candidate pairs, model
+    /// the survivors, keep the highest-CP split. Byte-for-byte the
+    /// pre-memo loop, minus the id binding (done by [`Self::bind`]).
+    fn compute_pick(&self, first_of_app: &[&KernelInstance]) -> Option<PairPick> {
         let profiles: Vec<Profile> =
             first_of_app.iter().map(|k| self.profile(&k.spec)).collect();
         let mut pairs = Vec::new();
@@ -222,7 +299,7 @@ impl Coordinator {
         }
         let kept = prune_pairs(&profiles, &pairs, self.prune);
 
-        let mut best: Option<(f64, CoSchedule)> = None;
+        let mut best: Option<PairPick> = None;
         for (i, j) in kept {
             let (ki, kj) = (first_of_app[i], first_of_app[j]);
             let Some((b1, b2, cipc, cp)) = self.best_split(&ki.spec, &kj.spec) else {
@@ -231,7 +308,7 @@ impl Coordinator {
             if cp < self.cp_min {
                 continue; // not worth the slicing overhead
             }
-            if best.as_ref().map_or(true, |(bcp, _)| cp > *bcp) {
+            if best.map_or(true, |b| cp > b.cp) {
                 let (size1, size2) = model::balanced_slice_sizes(
                     &self.gpu,
                     &ki.spec,
@@ -243,13 +320,25 @@ impl Coordinator {
                     cipc[1].max(1e-6),
                     self.min_slice(&kj.spec),
                 );
-                best = Some((
-                    cp,
-                    CoSchedule { k1: ki.id, k2: kj.id, b1, b2, size1, size2, cipc, cp },
-                ));
+                best = Some(PairPick { i, j, b1, b2, size1, size2, cipc, cp });
             }
         }
-        best.map(|(_, cs)| cs)
+        best
+    }
+
+    /// Resolve a memoized pick against the live instances that head
+    /// each application's queue.
+    fn bind(first_of_app: &[&KernelInstance], p: PairPick) -> CoSchedule {
+        CoSchedule {
+            k1: first_of_app[p.i].id,
+            k2: first_of_app[p.j].id,
+            b1: p.b1,
+            b2: p.b2,
+            size1: p.size1,
+            size2: p.size2,
+            cipc: p.cipc,
+            cp: p.cp,
+        }
     }
 }
 
@@ -319,5 +408,41 @@ mod tests {
         let y = coord.best_split(&a, &b).unwrap();
         assert_eq!(x.0, y.0);
         assert_eq!(x.3, y.3);
+    }
+
+    #[test]
+    fn pick_memo_rebinds_to_live_instances() {
+        // A cache hit must return the *current* head instances' ids,
+        // not the ids seen when the pick was first computed.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let wave1 = instances(&[BenchmarkApp::TEA, BenchmarkApp::PC]);
+        let refs1: Vec<&KernelInstance> = wave1.iter().collect();
+        let cs1 = coord.find_coschedule(&refs1).unwrap();
+        let wave2: Vec<KernelInstance> = [BenchmarkApp::TEA, BenchmarkApp::PC]
+            .iter()
+            .enumerate()
+            .map(|(i, a)| KernelInstance::new(100 + i as u64, a.spec(), 0.0))
+            .collect();
+        let refs2: Vec<&KernelInstance> = wave2.iter().collect();
+        let cs2 = coord.find_coschedule(&refs2).unwrap();
+        assert_eq!(cs2.k1, cs1.k1 + 100);
+        assert_eq!(cs2.k2, cs1.k2 + 100);
+        // The model quantities are the memoized ones.
+        assert_eq!(cs2.cp.to_bits(), cs1.cp.to_bits());
+        assert_eq!((cs2.size1, cs2.size2), (cs1.size1, cs1.size2));
+    }
+
+    #[test]
+    fn pick_memo_keyed_by_knobs() {
+        // Raising cp_min above the best pair's profit must change the
+        // outcome even though the application list is unchanged.
+        let mut coord = Coordinator::new(&GpuConfig::c2050());
+        let insts = instances(&[BenchmarkApp::TEA, BenchmarkApp::PC]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let cs = coord.find_coschedule(&refs).expect("pair expected");
+        coord.cp_min = cs.cp + 1.0;
+        assert!(coord.find_coschedule(&refs).is_none());
+        coord.cp_min = 0.01;
+        assert!(coord.find_coschedule(&refs).is_some());
     }
 }

@@ -304,21 +304,25 @@ impl MultiGpuDispatcher {
     fn earliest_feasible(
         &self,
         engines: &[Engine<'_>],
-        models: &[EtaModel],
+        models: &mut [EtaModel],
         k: &KernelInstance,
     ) -> (usize, f64) {
         let now = k.arrival_time;
-        (0..self.devices.len())
-            .map(|d| {
-                models[d].projected_finish_secs(
-                    &self.devices[d],
-                    engines[d].pending(),
-                    engines[d].clock_secs(),
-                    now,
-                    k,
+        models
+            .iter_mut()
+            .enumerate()
+            .map(|(d, model)| {
+                (
+                    d,
+                    model.projected_finish_secs(
+                        &self.devices[d],
+                        engines[d].pending(),
+                        engines[d].clock_secs(),
+                        now,
+                        k,
+                    ),
                 )
             })
-            .enumerate()
             .min_by(|(_, a), (_, b)| a.total_cmp(b))
             .unwrap()
     }
@@ -330,12 +334,12 @@ impl MultiGpuDispatcher {
     fn projection_for(
         &self,
         engines: &[Engine<'_>],
-        st: &RouterState,
+        st: &mut RouterState,
         d: usize,
         precomputed: Option<f64>,
         k: &KernelInstance,
     ) -> Option<f64> {
-        let models = st.eta.as_ref()?;
+        let models = st.eta.as_mut()?;
         Some(precomputed.unwrap_or_else(|| {
             models[d].projected_finish_secs(
                 &self.devices[d],
@@ -400,7 +404,7 @@ impl MultiGpuDispatcher {
             DispatchPolicy::LeastLoaded => (self.least_loaded(engines, k), None),
             DispatchPolicy::SloAware | DispatchPolicy::EarliestFeasible => {
                 if k.qos.class == ServiceClass::Latency {
-                    match st.eta.as_ref() {
+                    match st.eta.as_mut() {
                         // The earliest calibrated projected completion
                         // across the fleet.
                         Some(models) => {
@@ -449,6 +453,8 @@ impl MultiGpuDispatcher {
                         pending: &refs,
                         now_secs: engines[d].clock_secs().max(k.arrival_time),
                         more_arrivals: true,
+                        admitted: engines[d].submitted_log(),
+                        completed: engines[d].completion_log(),
                     };
                     ctrl.decide(&ctx, &k)
                 };
@@ -493,7 +499,7 @@ impl MultiGpuDispatcher {
         let mut released = 0usize;
         loop {
             let Some(head) = ctrl.peek_deferred() else { break };
-            let (d, hint) = match st.eta.as_ref() {
+            let (d, hint) = match st.eta.as_mut() {
                 Some(models) => {
                     let (d, p) = self.earliest_feasible(&*engines, models, head);
                     (d, Some(p))
@@ -508,6 +514,8 @@ impl MultiGpuDispatcher {
                     pending: &refs,
                     now_secs: engines[d].clock_secs().max(head.arrival_time),
                     more_arrivals: true,
+                    admitted: engines[d].submitted_log(),
+                    completed: engines[d].completion_log(),
                 };
                 ctrl.try_release(&ctx)
             };
@@ -672,24 +680,35 @@ impl MultiGpuDispatcher {
                     // Engine::run_source gives single-device. Open-loop
                     // sources never re-peek differently, making this
                     // decision-for-decision identical to a run_until
-                    // sweep.
+                    // sweep. Completion events are processed in
+                    // batches: a round that completed nothing leaves
+                    // the source untouched (feeding is completion-
+                    // driven), so the feedback/re-peek work runs only
+                    // after rounds that produced events — bit-identical
+                    // to per-round feeding, since an empty feed cannot
+                    // change what the source peeks.
                     loop {
                         let mut advanced = false;
+                        let mut completed_any = false;
                         for (engine, sel) in engines.iter_mut().zip(selectors.iter_mut()) {
                             if !engine.pending().is_empty() && engine.clock_secs() < t {
+                                let seen = engine.completion_log().len();
                                 engine.step(sel.as_mut(), Some(t), true);
                                 advanced = true;
+                                completed_any |= engine.completion_log().len() > seen;
                             }
                         }
                         if !advanced {
                             break;
                         }
-                        feed(&engines, &mut fed, source);
-                        match source.peek_time() {
-                            Some(t2) if t2 >= t => {}
-                            // An earlier arrival was injected (or the
-                            // source emptied): re-evaluate from the top.
-                            _ => continue 'outer,
+                        if completed_any {
+                            feed(&engines, &mut fed, source);
+                            match source.peek_time() {
+                                Some(t2) if t2 >= t => {}
+                                // An earlier arrival was injected (or the
+                                // source emptied): re-evaluate from the top.
+                                _ => continue 'outer,
+                            }
                         }
                     }
                     let k = source.next_arrival().expect("peeked arrival disappeared");

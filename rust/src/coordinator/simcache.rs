@@ -11,11 +11,35 @@
 //! per-device engines probe concurrently, and the warm path is a shared
 //! read lock on one shard. Hit/miss telemetry is two `AtomicU64`s —
 //! the seed took two extra mutex locks per lookup just to count.
+//!
+//! # Disk persistence
+//!
+//! The cache spills to a versioned JSON file ([`SimCache::spill`]) and
+//! reloads it ([`SimCache::reload`]), so benches and repeated figure
+//! runs skip the cold-start simulation entirely (`--cache-dir` on the
+//! CLI, `KERNELET_CACHE_DIR` for the benches). Floats are serialized
+//! with Rust's shortest-round-trip `Display` and recovered with
+//! `str::parse`, which is **bit-exact** for finite values — a reloaded
+//! cache returns byte-identical measurements, so persistence cannot
+//! perturb any differential pin. The file header embeds the format
+//! version and the full `GpuConfig` debug fingerprint; any mismatch
+//! (or a corrupt file) makes the load a silent no-op rather than
+//! poisoning the cache with another device's timings.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
 use crate::sharded::{CacheCounters, ShardedMap};
 use crate::sim::{self, PairResult};
+
+/// On-disk format version; bumped on any layout change so stale files
+/// are ignored, never misparsed.
+const FORMAT_VERSION: u32 = 1;
+
+/// First line of every cache file.
+const HEADER_LINE: &str = "{\"format\":\"kernelet-simcache\",\"version\":1,";
 
 /// Cache of solo and pair simulation results for one GPU.
 pub struct SimCache {
@@ -134,6 +158,187 @@ impl SimCache {
         });
     }
 
+    /// The cache file for this device under `dir`: name + format
+    /// version, so devices never share files and format bumps start
+    /// cold instead of misparsing.
+    pub fn cache_file(&self, dir: &Path) -> PathBuf {
+        let tag: String = self
+            .gpu
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        dir.join(format!("simcache-v{FORMAT_VERSION}-{tag}.json"))
+    }
+
+    /// The `"gpu":…` header line: the full config's debug string,
+    /// JSON-escaped. Loads compare this line byte-for-byte, so *any*
+    /// field change (calibration constants included) invalidates the
+    /// file.
+    fn gpu_line(&self) -> String {
+        let dbg = format!("{:?}", self.gpu).replace('\\', "\\\\").replace('"', "\\\"");
+        format!("\"gpu\":\"{dbg}\",")
+    }
+
+    /// Serialize every cached measurement to `path` (atomically: temp
+    /// file + rename). Entries are sorted by key so the byte output is
+    /// deterministic regardless of fill order. Returns the entry count.
+    pub fn save_to(&self, path: &Path) -> std::io::Result<usize> {
+        let mut solo = self.solo.snapshot();
+        solo.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut pair = self.pair.snapshot();
+        pair.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out = String::new();
+        out.push_str(HEADER_LINE);
+        out.push('\n');
+        out.push_str(&self.gpu_line());
+        out.push('\n');
+        out.push_str("\"solo\":[\n");
+        for (i, ((name, blocks), cycles)) in solo.iter().enumerate() {
+            debug_assert!(!name.contains(['"', '\\', ',']), "unserializable kernel name {name:?}");
+            let sep = if i + 1 == solo.len() { "" } else { "," };
+            out.push_str(&format!("[\"{name}\",{blocks},\"{cycles}\"]{sep}\n"));
+        }
+        out.push_str("],\n\"pair\":[\n");
+        for (i, ((n1, s1, q1, n2, s2, q2), c)) in pair.iter().enumerate() {
+            let sep = if i + 1 == pair.len() { "" } else { "," };
+            out.push_str(&format!(
+                "[\"{n1}\",{s1},{q1},\"{n2}\",{s2},{q2},\"{}\",\"{}\",\"{}\",\"{}\"]{sep}\n",
+                c.cycles, c.cipc[0], c.cipc[1], c.total_ipc
+            ));
+        }
+        out.push_str("]}\n");
+        let tmp = path.with_extension("json.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(out.as_bytes())?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(solo.len() + pair.len())
+    }
+
+    /// Load measurements from `path` into this cache. A missing file,
+    /// a version/device mismatch, or any parse failure loads nothing
+    /// (all-or-nothing: entries are only inserted after the whole file
+    /// parses). Returns the number of entries loaded.
+    pub fn load_from(&self, path: &Path) -> std::io::Result<usize> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e),
+        };
+        let Some((solo, pair)) = self.parse_cache(&text) else {
+            return Ok(0);
+        };
+        let n = solo.len() + pair.len();
+        for (key, cycles) in solo {
+            self.solo.insert(key, cycles);
+        }
+        for (key, c) in pair {
+            self.pair.insert(key, c);
+        }
+        Ok(n)
+    }
+
+    /// Spill this cache into `dir` (created if absent); returns the
+    /// file written.
+    pub fn spill(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = self.cache_file(dir);
+        self.save_to(&path)?;
+        Ok(path)
+    }
+
+    /// Reload this device's spill file from `dir`, if present and
+    /// compatible. Returns the number of entries loaded (0 on miss).
+    pub fn reload(&self, dir: &Path) -> std::io::Result<usize> {
+        self.load_from(&self.cache_file(dir))
+    }
+
+    /// Parse a cache file; `None` on any structural problem.
+    #[allow(clippy::type_complexity)]
+    fn parse_cache(
+        &self,
+        text: &str,
+    ) -> Option<(
+        Vec<((String, u32), f64)>,
+        Vec<((String, u32, u32, String, u32, u32), CachedPair)>,
+    )> {
+        fn unquote(tok: &str) -> Option<&str> {
+            let t = tok.strip_prefix('"')?.strip_suffix('"')?;
+            if t.contains(['"', '\\']) {
+                return None;
+            }
+            Some(t)
+        }
+        fn entry_fields(line: &str) -> Option<Vec<&str>> {
+            let body = line.strip_suffix(',').unwrap_or(line);
+            let inner = body.strip_prefix('[')?.strip_suffix(']')?;
+            // Names and Display-formatted floats never contain commas
+            // (asserted at save time), so a flat split is a full parse.
+            Some(inner.split(',').collect())
+        }
+        fn finite(tok: &str) -> Option<f64> {
+            let v: f64 = unquote(tok)?.parse().ok()?;
+            v.is_finite().then_some(v)
+        }
+        let mut lines = text.lines();
+        if lines.next() != Some(HEADER_LINE) {
+            return None;
+        }
+        if lines.next() != Some(self.gpu_line().as_str()) {
+            return None;
+        }
+        if lines.next() != Some("\"solo\":[") {
+            return None;
+        }
+        let mut solo = Vec::new();
+        loop {
+            let line = lines.next()?;
+            if line == "]," {
+                break;
+            }
+            let f = entry_fields(line)?;
+            if f.len() != 3 {
+                return None;
+            }
+            let blocks: u32 = f[1].parse().ok()?;
+            if blocks < 1 {
+                return None;
+            }
+            solo.push(((unquote(f[0])?.to_string(), blocks), finite(f[2])?));
+        }
+        if lines.next() != Some("\"pair\":[") {
+            return None;
+        }
+        let mut pair = Vec::new();
+        loop {
+            let line = lines.next()?;
+            if line == "]}" {
+                break;
+            }
+            let f = entry_fields(line)?;
+            if f.len() != 10 {
+                return None;
+            }
+            let key = (
+                unquote(f[0])?.to_string(),
+                f[1].parse().ok()?,
+                f[2].parse().ok()?,
+                unquote(f[3])?.to_string(),
+                f[4].parse().ok()?,
+                f[5].parse().ok()?,
+            );
+            let c = CachedPair {
+                cycles: finite(f[6])?,
+                cipc: [finite(f[7])?, finite(f[8])?],
+                total_ipc: finite(f[9])?,
+            };
+            pair.push((key, c));
+        }
+        Some((solo, pair))
+    }
+
     /// Fill the solo cache for a set of (spec, blocks) runs in parallel.
     pub fn prewarm_solo(&self, runs: &[(KernelSpec, u32)]) {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -209,5 +414,66 @@ mod tests {
         assert_eq!(h + m, 8 * 4);
         // At least one miss per key; duplicate concurrent fills allowed.
         assert!(m >= 4, "misses={m}");
+    }
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("kernelet-simcache-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn spill_and_reload_are_bit_exact() {
+        let gpu = GpuConfig::c2050();
+        let cache = SimCache::new(&gpu);
+        let a = BenchmarkApp::TEA.spec();
+        let b = BenchmarkApp::PC.spec();
+        let solo = cache.solo_cycles(&a, 56);
+        let pair = cache.pair(&a, 28, 2, &b, 42, 3);
+        let dir = scratch_dir("roundtrip");
+        let path = cache.spill(&dir).unwrap();
+
+        let warm = SimCache::new(&gpu);
+        let n = warm.reload(&dir).unwrap();
+        assert_eq!(n, 2, "one solo + one pair entry");
+        // Reloaded values must be byte-identical measurements, served
+        // from the cache (hits, not re-simulation).
+        assert_eq!(warm.solo_cycles(&a, 56).to_bits(), solo.to_bits());
+        let wp = warm.pair(&a, 28, 2, &b, 42, 3);
+        assert_eq!(wp.cycles.to_bits(), pair.cycles.to_bits());
+        assert_eq!(wp.cipc[0].to_bits(), pair.cipc[0].to_bits());
+        assert_eq!(wp.cipc[1].to_bits(), pair.cipc[1].to_bits());
+        assert_eq!(wp.total_ipc.to_bits(), pair.total_ipc.to_bits());
+        assert_eq!(warm.stats(), (2, 0), "reloaded probes must all hit");
+
+        // The spill is deterministic: saving the warm cache reproduces
+        // the file byte-for-byte.
+        let path2 = dir.join("again.json");
+        warm.save_to(&path2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reload_rejects_other_devices_and_corrupt_files() {
+        let cache = SimCache::new(&GpuConfig::c2050());
+        cache.solo_cycles(&BenchmarkApp::TEA.spec(), 56);
+        let dir = scratch_dir("reject");
+        let path = cache.spill(&dir).unwrap();
+
+        // Another device must not swallow this device's timings, even
+        // if pointed at the same file directly.
+        let other = SimCache::new(&GpuConfig::gtx680());
+        assert_eq!(other.load_from(&path).unwrap(), 0);
+        // Same device, truncated file: all-or-nothing, nothing loads.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let fresh = SimCache::new(&GpuConfig::c2050());
+        assert_eq!(fresh.load_from(&path).unwrap(), 0);
+        // Garbage and absent files are silent no-ops too.
+        std::fs::write(&path, "not json").unwrap();
+        assert_eq!(fresh.load_from(&path).unwrap(), 0);
+        assert_eq!(fresh.load_from(&dir.join("missing.json")).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -89,42 +89,50 @@ pub fn routing_sweep(
     let capacity = base_capacity_kps(&coord, mix);
     let qos = QosMix::latency_share(latency_fraction, deadline_scale / capacity);
     let per_app = opts.instances_per_app;
-    let mut out = Vec::new();
+    let mut cells: Vec<(usize, &'static str, usize, f64)> = Vec::new();
     for (si, &scenario) in scenarios.iter().enumerate() {
         for (li, &load) in loads.iter().enumerate() {
-            let offered = load * capacity * gpus as f64;
-            let seed = split_seed(opts.seed ^ 0xEFC0, (si * 1000 + li) as u64);
-            for &policy in &ROUTING_POLICIES {
-                let dispatcher = MultiGpuDispatcher::new(
-                    &vec![GpuConfig::c2050(); gpus],
-                    dispatch_policy_for(policy),
-                );
-                let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
-                    .expect("routing sweep scenario names are valid");
-                let rep = dispatcher.run_source(source.as_mut());
-                assert!(
-                    rep.reports.iter().all(|r| r.incomplete == 0),
-                    "{scenario}/{policy} left kernels behind"
-                );
-                let fleet = rep.fleet_qos();
-                out.push(RoutingPoint {
-                    scenario,
-                    policy,
-                    load,
-                    gpus,
-                    offered_kps: offered,
-                    kernels: rep.per_device.iter().map(|p| p.1).sum(),
-                    throughput_kps: rep.throughput_kps,
-                    goodput_kps: rep.goodput_kps,
-                    preemptions: rep.reports.iter().map(|r| r.preemptions).sum(),
-                    latency: fleet.latency,
-                    batch: fleet.batch,
-                    eta: rep.eta,
-                });
-            }
+            cells.push((si, scenario, li, load));
         }
     }
-    (out, capacity)
+    // Parallel over (scenario × load) cells — per-cell seeds derive
+    // from grid coordinates, so the fan-out is bit-identical to the
+    // serial loop (see `crate::sweep`).
+    let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load)| {
+        let offered = load * capacity * gpus as f64;
+        let seed = split_seed(opts.seed ^ 0xEFC0, (si * 1000 + li) as u64);
+        let mut out = Vec::with_capacity(ROUTING_POLICIES.len());
+        for &policy in &ROUTING_POLICIES {
+            let dispatcher = MultiGpuDispatcher::new(
+                &vec![GpuConfig::c2050(); gpus],
+                dispatch_policy_for(policy),
+            );
+            let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+                .expect("routing sweep scenario names are valid");
+            let rep = dispatcher.run_source(source.as_mut());
+            assert!(
+                rep.reports.iter().all(|r| r.incomplete == 0),
+                "{scenario}/{policy} left kernels behind"
+            );
+            let fleet = rep.fleet_qos();
+            out.push(RoutingPoint {
+                scenario,
+                policy,
+                load,
+                gpus,
+                offered_kps: offered,
+                kernels: rep.per_device.iter().map(|p| p.1).sum(),
+                throughput_kps: rep.throughput_kps,
+                goodput_kps: rep.goodput_kps,
+                preemptions: rep.reports.iter().map(|r| r.preemptions).sum(),
+                latency: fleet.latency,
+                batch: fleet.batch,
+                eta: rep.eta,
+            });
+        }
+        out
+    });
+    (per_cell.into_iter().flatten().collect(), capacity)
 }
 
 /// The `routing` figure: deadline misses and tails per routing policy,

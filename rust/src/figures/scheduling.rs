@@ -92,20 +92,40 @@ pub fn fig14(opts: &super::FigOptions) -> Report {
 }
 
 /// Engine telemetry (not a paper artifact): pending-queue depth over
-/// time and device utilization for BASE vs Kernelet on the ALL mix —
-/// the view a production serving deployment monitors, regenerated from
-/// the engine's enriched [`crate::coordinator::ExecutionReport`].
+/// time, device utilization, and per-run preemption counts for BASE vs
+/// Kernelet vs the preempting deadline policy on the ALL mix — the view
+/// a production serving deployment monitors, regenerated from the
+/// engine's enriched [`crate::coordinator::ExecutionReport`].
 pub fn qdepth(opts: &super::FigOptions) -> Report {
+    use crate::coordinator::{DeadlineSelector, Engine, PreemptCost};
+    use crate::workload::QosMix;
+
     let gpu = GpuConfig::c2050();
     let coord = Coordinator::new(&gpu);
     let stream = Stream::saturated(Mix::ALL, opts.instances_per_app, opts.seed ^ 0x5D);
+    // The deadline run sees the same saturated stream with half the
+    // kernels stamped latency-class on tight deadlines, so mid-slice
+    // preemption has urgency to act on — its preemption count is the
+    // telemetry being recorded (base/kernelet never preempt: their
+    // zeros in the notes are the baseline the count reads against).
+    let mut dstream = Stream::saturated(Mix::ALL, opts.instances_per_app, opts.seed ^ 0x5D);
+    let capacity = super::throughput::base_capacity_kps(&coord, Mix::ALL);
+    let qos = QosMix::latency_share(0.5, 4.0 / capacity);
+    for k in &mut dstream.instances {
+        k.qos = qos.stamp(k.id, k.arrival_time);
+    }
+    let mut dsel = DeadlineSelector::new().with_preemption(PreemptCost::for_gpu(&coord.gpu));
+    let runs = [
+        ("base", run_base(&coord, &stream)),
+        ("kernelet", run_kernelet(&coord, &stream)),
+        ("deadline", Engine::new(&coord).run(&mut dsel, &dstream)),
+    ];
     let mut r = Report::new(
         "qdepth",
-        "Pending-queue depth over time: BASE vs Kernelet (engine telemetry)",
+        "Pending-queue depth over time: BASE vs Kernelet vs deadline (engine telemetry)",
         &["policy", "t_s", "depth"],
     );
-    for (name, rep) in [("base", run_base(&coord, &stream)), ("kernelet", run_kernelet(&coord, &stream))]
-    {
+    for (name, rep) in runs {
         // Down-sample the timeline to ~64 rows per policy, always
         // keeping the final sample so the drain tail stays visible.
         let step = (rep.queue_depth.len() / 64).max(1);
@@ -116,11 +136,13 @@ pub fn qdepth(opts: &super::FigOptions) -> Report {
             }
         }
         r.note(format!(
-            "{name}: utilization {:.3}, peak depth {}, mean depth {:.1}, incomplete {}",
+            "{name}: utilization {:.3}, peak depth {}, mean depth {:.1}, incomplete {}, \
+             preemptions {}",
             rep.utilization,
             rep.peak_queue_depth(),
             rep.mean_queue_depth(),
-            rep.incomplete
+            rep.incomplete,
+            rep.preemptions
         ));
     }
     r
@@ -132,17 +154,28 @@ mod tests {
     use crate::figures::FigOptions;
 
     #[test]
-    fn qdepth_reports_both_policies_fully_drained() {
+    fn qdepth_reports_all_policies_fully_drained_with_preemption_counts() {
         let t = qdepth(&FigOptions::quick());
         assert!(!t.rows.is_empty());
-        assert_eq!(t.notes.len(), 2);
+        assert_eq!(t.notes.len(), 3);
         for note in &t.notes {
-            assert!(note.ends_with("incomplete 0"), "{note}");
+            assert!(note.contains("incomplete 0,"), "{note}");
+            // Every run's note carries its preemption count.
+            let count: u64 = note
+                .rsplit("preemptions ")
+                .next()
+                .unwrap()
+                .parse()
+                .expect("preemption count must end the note");
+            if !note.starts_with("deadline") {
+                assert_eq!(count, 0, "only the deadline policy may preempt: {note}");
+            }
         }
-        // Both policies appear, and depths stay within the stream size.
+        // All three policies appear, and depths stay within the stream
+        // size.
         let pol = t.col("policy");
         let dep = t.col("depth");
-        for p in ["base", "kernelet"] {
+        for p in ["base", "kernelet", "deadline"] {
             assert!(t.rows.iter().any(|r| r[pol] == p), "missing {p}");
         }
         let total = 8 * FigOptions::quick().instances_per_app as usize;

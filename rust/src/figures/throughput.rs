@@ -106,6 +106,15 @@ pub fn base_capacity_kps(coord: &Coordinator, mix: Mix) -> f64 {
 /// `instances_per_app` comes from `opts`; both policies of a point see
 /// the identical arrival sequence (same derived seed). Returns the
 /// points plus the BASE capacity the load factors were scaled by.
+///
+/// Cells of the (scenario × load) grid run in parallel via
+/// [`crate::sweep::run_cells`]: every cell's seed is derived from its
+/// grid coordinates (not from shared RNG state), so cell results are
+/// independent and the parallel sweep is bit-identical to the serial
+/// loop (pinned in `tests/hotpath_invariants.rs`). The coordinator's
+/// memo caches are shared across workers — they only hold
+/// deterministic pure-function results, so population order is
+/// irrelevant.
 pub fn load_sweep(
     opts: &super::FigOptions,
     loads: &[f64],
@@ -116,34 +125,39 @@ pub fn load_sweep(
     let mix = Mix::MIX;
     let capacity = base_capacity_kps(&coord, mix);
     let per_app = opts.instances_per_app;
-    let mut out = Vec::new();
+    let mut cells: Vec<(usize, &'static str, usize, f64)> = Vec::new();
     for (si, &scenario) in scenarios.iter().enumerate() {
         for (li, &load) in loads.iter().enumerate() {
-            let offered = load * capacity;
-            let seed = split_seed(opts.seed, (si * 1000 + li) as u64);
-            for &policy in &SWEEP_POLICIES {
-                let mut source =
-                    scenario_source(scenario, mix, per_app, offered, seed, QosMix::ALL_BATCH)
-                        .expect("sweep scenario names are valid");
-                let mut sel = selector_for(policy);
-                let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
-                assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
-                out.push(SweepPoint {
-                    scenario,
-                    policy,
-                    load,
-                    offered_kps: offered,
-                    kernels: rep.kernels_completed,
-                    throughput_kps: rep.throughput_kps,
-                    mean_turnaround_s: rep.mean_turnaround_secs,
-                    utilization: rep.utilization,
-                    mean_queue_depth: rep.mean_queue_depth(),
-                    peak_queue_depth: rep.peak_queue_depth(),
-                });
-            }
+            cells.push((si, scenario, li, load));
         }
     }
-    (out, capacity)
+    let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load)| {
+        let offered = load * capacity;
+        let seed = split_seed(opts.seed, (si * 1000 + li) as u64);
+        let mut out = Vec::with_capacity(SWEEP_POLICIES.len());
+        for &policy in &SWEEP_POLICIES {
+            let mut source =
+                scenario_source(scenario, mix, per_app, offered, seed, QosMix::ALL_BATCH)
+                    .expect("sweep scenario names are valid");
+            let mut sel = selector_for(policy);
+            let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
+            assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
+            out.push(SweepPoint {
+                scenario,
+                policy,
+                load,
+                offered_kps: offered,
+                kernels: rep.kernels_completed,
+                throughput_kps: rep.throughput_kps,
+                mean_turnaround_s: rep.mean_turnaround_secs,
+                utilization: rep.utilization,
+                mean_queue_depth: rep.mean_queue_depth(),
+                peak_queue_depth: rep.peak_queue_depth(),
+            });
+        }
+        out
+    });
+    (per_cell.into_iter().flatten().collect(), capacity)
 }
 
 /// One (scenario, load, routing policy, fleet size) measurement from
@@ -192,39 +206,46 @@ pub fn fleet_sweep(
     let capacity = base_capacity_kps(&coord, mix);
     let qos = QosMix::latency_share(0.3, 4.0 / capacity);
     let per_app = opts.instances_per_app;
-    let mut out = Vec::new();
+    let mut cells: Vec<(usize, &'static str, usize, f64, usize)> = Vec::new();
     for (si, &scenario) in scenarios.iter().enumerate() {
         for (li, &load) in loads.iter().enumerate() {
             for &gpus in fleets {
-                let offered = load * capacity * gpus as f64;
-                let seed = split_seed(opts.seed, (si * 10_000 + li * 100 + gpus) as u64);
-                for &policy in &FLEET_POLICIES {
-                    let dispatcher = MultiGpuDispatcher::new(
-                        &vec![GpuConfig::c2050(); gpus],
-                        dispatch_policy_for(policy),
-                    );
-                    let mut source =
-                        scenario_source(scenario, mix, per_app, offered, seed, qos)
-                            .expect("fleet sweep scenario names are valid");
-                    let rep = dispatcher.run_source(source.as_mut());
-                    let fleet = rep.fleet_qos();
-                    out.push(FleetPoint {
-                        scenario,
-                        policy,
-                        gpus,
-                        load,
-                        offered_kps: offered,
-                        kernels: rep.per_device.iter().map(|p| p.1).sum(),
-                        throughput_kps: rep.throughput_kps,
-                        makespan_secs: rep.makespan_secs,
-                        latency: fleet.latency,
-                        batch: fleet.batch,
-                    });
-                }
+                cells.push((si, scenario, li, load, gpus));
             }
         }
     }
-    (out, capacity)
+    // Same parallel-cell scheme as `load_sweep`: per-cell seeds come
+    // from grid coordinates, so cells are order-independent. Each cell
+    // builds its own dispatcher fleet (engines are per-cell state).
+    let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load, gpus)| {
+        let offered = load * capacity * gpus as f64;
+        let seed = split_seed(opts.seed, (si * 10_000 + li * 100 + gpus) as u64);
+        let mut out = Vec::with_capacity(FLEET_POLICIES.len());
+        for &policy in &FLEET_POLICIES {
+            let dispatcher = MultiGpuDispatcher::new(
+                &vec![GpuConfig::c2050(); gpus],
+                dispatch_policy_for(policy),
+            );
+            let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+                .expect("fleet sweep scenario names are valid");
+            let rep = dispatcher.run_source(source.as_mut());
+            let fleet = rep.fleet_qos();
+            out.push(FleetPoint {
+                scenario,
+                policy,
+                gpus,
+                load,
+                offered_kps: offered,
+                kernels: rep.per_device.iter().map(|p| p.1).sum(),
+                throughput_kps: rep.throughput_kps,
+                makespan_secs: rep.makespan_secs,
+                latency: fleet.latency,
+                batch: fleet.batch,
+            });
+        }
+        out
+    });
+    (per_cell.into_iter().flatten().collect(), capacity)
 }
 
 /// The `saturation` figure: the default sweep as a report table.

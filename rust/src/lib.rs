@@ -40,6 +40,8 @@
 //!   and the real-execution `TimingBackend` for the engine.
 //! - [`sharded`] — sharded read-optimized maps + atomic counters the
 //!   hot-path caches are built on.
+//! - [`sweep`] — parallel sweep driver: fan independent figure/bench
+//!   cells across threads with deterministic, input-ordered results.
 //! - [`figures`] — regenerators for every paper table and figure.
 //! - [`bench`] — the micro-benchmark harness used by `cargo bench`
 //!   (criterion is unavailable offline).
@@ -76,6 +78,7 @@ pub mod sharded;
 pub mod sim;
 pub mod slicer;
 pub mod stats;
+pub mod sweep;
 pub mod workload;
 
 pub use config::{Arch, GpuConfig};

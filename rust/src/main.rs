@@ -11,6 +11,7 @@
 //!                   [--qos-mix F] [--deadline-scale S]
 //!                   [--admission POLICY] [--backlog-cap N]
 //!                   [--dispatch POLICY] [--gpus N] [--preempt-cost S]
+//!                   [--cache-dir DIR]
 //! kernelet trace record --scenario NAME [--out FILE]   dump a scenario
 //!                   to the JSON trace format (incl. QoS annotations)
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
@@ -74,7 +75,7 @@ USAGE:
                     [--qos-mix F] [--deadline-scale S]
                     [--admission admitall|backlogcap|sloguard] [--backlog-cap N]
                     [--dispatch roundrobin|leastloaded|sloaware|efc|all] [--gpus N]
-                    [--preempt-cost SECS]
+                    [--preempt-cost SECS] [--cache-dir DIR]
   kernelet trace record --scenario NAME [--mix M] [--gpu G] [--instances N]
                     [--load X] [--qos-mix F] [--deadline-scale S] [--seed N]
                     [--out FILE]
@@ -110,6 +111,12 @@ cost (also applies to the single-device deadline policy row).
 `trace record` replays the scenario through the engine and dumps the
 realized arrival sequence (app, t, grid, class, deadline) as a JSON
 trace for `schedule --scenario trace --trace FILE` replay.
+
+`--cache-dir DIR` persists the simulation-measurement cache across
+runs: reload at start, spill at exit (one versioned JSON file per
+device; incompatible files are ignored). Reloaded values are bit-exact,
+so cached and cold runs produce identical schedules. The benches honor
+the same directory via the KERNELET_CACHE_DIR env var.
 ";
 
 fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
@@ -122,6 +129,38 @@ fn parse_gpu(args: &[String]) -> Result<GpuConfig> {
         "gtx680" => Ok(GpuConfig::gtx680()),
         other => bail!("unknown gpu {other}"),
     }
+}
+
+/// Parse `--cache-dir DIR` and pre-load the coordinator's simulation
+/// cache from it (a missing or incompatible spill file loads nothing).
+/// Returns the directory so the caller can spill back before exit.
+fn load_cache_dir(args: &[String], coord: &Coordinator) -> Result<Option<PathBuf>> {
+    let Some(dir) = flag_value(args, "--cache-dir").map(PathBuf::from) else {
+        return Ok(None);
+    };
+    let n = coord
+        .simcache
+        .reload(&dir)
+        .with_context(|| format!("reloading simcache from {}", dir.display()))?;
+    eprintln!("simcache: {n} entries reloaded from {}", dir.display());
+    Ok(Some(dir))
+}
+
+/// Spill the coordinator's simulation cache back to `--cache-dir`, if
+/// one was given.
+fn spill_cache_dir(dir: &Option<PathBuf>, coord: &Coordinator) -> Result<()> {
+    if let Some(dir) = dir {
+        let path = coord
+            .simcache
+            .spill(dir)
+            .with_context(|| format!("spilling simcache to {}", dir.display()))?;
+        let (hits, misses) = coord.simcache.stats();
+        eprintln!(
+            "simcache: spilled to {} ({hits} hits / {misses} misses this run)",
+            path.display()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_table(args: &[String]) -> Result<()> {
@@ -210,6 +249,7 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
         "--dispatch routes a streaming workload: add --scenario (e.g. --scenario bursty)"
     );
     let coord = Coordinator::new(&gpu);
+    let cache_dir = load_cache_dir(args, &coord)?;
     let stream = Stream::saturated(mix, instances, kernelet::sim::DEFAULT_SEED);
     println!(
         "scheduling {} instances ({} apps x {}) on {} ...",
@@ -235,6 +275,7 @@ fn cmd_schedule(args: &[String]) -> Result<()> {
         opt.throughput_kps,
         (ours.total_secs - opt.total_secs) / opt.total_secs * 100.0
     );
+    spill_cache_dir(&cache_dir, &coord)?;
     Ok(())
 }
 
@@ -313,6 +354,7 @@ fn cmd_schedule_scenario(
         "--gpus routes a fleet: add --dispatch (roundrobin|leastloaded|sloaware|efc|all)"
     );
     let coord = Coordinator::new(gpu);
+    let cache_dir = load_cache_dir(args, &coord)?;
     let capacity = base_capacity_kps(&coord, mix);
     let offered = load * capacity;
     let (qos, deadline_scale) = parse_qos_mix(args, capacity)?;
@@ -468,6 +510,7 @@ fn cmd_schedule_scenario(
         }
         println!("{line}");
     }
+    spill_cache_dir(&cache_dir, &coord)?;
     Ok(())
 }
 

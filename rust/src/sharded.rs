@@ -75,6 +75,23 @@ impl<K: Hash + Eq, V: Clone> ShardedMap<K, V> {
         self.shard(&key).write().unwrap().insert(key, value);
     }
 
+    /// Clone every entry out of the map (each shard's read lock taken
+    /// in turn — a point-in-time view per shard, not a global one).
+    /// Order is unspecified (shard + `HashMap` iteration order);
+    /// callers wanting determinism sort the result. Built for the
+    /// cache-persistence layer, which snapshots, sorts, and serializes.
+    pub fn snapshot(&self) -> Vec<(K, V)>
+    where
+        K: Clone,
+    {
+        let mut out = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            let g = s.read().unwrap();
+            out.extend(g.iter().map(|(k, v)| (k.clone(), v.clone())));
+        }
+        out
+    }
+
     /// Total entries across shards (telemetry; takes each read lock in
     /// turn, so the count is only a snapshot under concurrency).
     pub fn len(&self) -> usize {

@@ -1,0 +1,169 @@
+//! Parallel sweep driver for the figure and bench harnesses.
+//!
+//! A sweep is a grid of independent cells — (scenario × load ×
+//! fleet) engine runs whose seeds are derived per cell with
+//! [`crate::stats::split_seed`], so no cell's result depends on any
+//! other's. Running them on one thread serializes minutes of
+//! simulation; this module fans the cells across a scoped thread pool
+//! while keeping the *output* bit-identical to the serial loop:
+//!
+//! - Results are returned in **input order** (each worker tags results
+//!   with the cell index; the driver re-assembles by index), so
+//!   downstream report rows never depend on scheduling jitter.
+//! - Workers share nothing but the cell function. Shared caches the
+//!   function touches (the coordinator's sharded memo maps) only store
+//!   deterministic pure-function results, so which thread populates an
+//!   entry first cannot change any value read from it.
+//!
+//! `tests/hotpath_invariants.rs` pins the parallel driver byte-for-byte
+//! against the serial loop on a real figure sweep.
+//!
+//! The pool is plain `std::thread::scope` with an atomic next-index
+//! counter — the same idiom as `SimCache::prewarm_*` — because the
+//! toolchain vendors no external crates (no rayon offline). Thread
+//! count comes from [`std::thread::available_parallelism`], overridable
+//! with the `KERNELET_SWEEP_THREADS` env var (`1` forces the serial
+//! path, useful for profiling and differential tests).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Env var overriding the worker-thread count (parsed as `usize`;
+/// values < 1 clamp to 1, unparsable values are ignored).
+pub const THREADS_ENV: &str = "KERNELET_SWEEP_THREADS";
+
+/// Worker count for a sweep of `cells` cells: the env override if set,
+/// otherwise available parallelism, never more workers than cells.
+pub fn sweep_threads(cells: usize) -> usize {
+    let hw = || {
+        std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1)
+    };
+    let n = match std::env::var(THREADS_ENV) {
+        Ok(v) => v.trim().parse::<usize>().map(|n| n.max(1)).unwrap_or_else(|_| hw()),
+        Err(_) => hw(),
+    };
+    n.min(cells.max(1))
+}
+
+/// Evaluate `f` over every cell and return the results **in input
+/// order**, fanning across [`sweep_threads`] workers.
+///
+/// `f` receives `(index, &cell)` — the index is the cell's position in
+/// `cells`, which callers typically fold into a per-cell seed. A panic
+/// in any cell propagates to the caller (the sweep does not silently
+/// drop cells).
+pub fn run_cells<T, R, F>(cells: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    run_cells_with(cells, sweep_threads(cells.len()), f)
+}
+
+/// [`run_cells`] with an explicit worker count. `threads <= 1` runs
+/// the plain serial loop on the calling thread (no pool, no atomics) —
+/// the reference the parallel path is pinned against.
+pub fn run_cells_with<T, R, F>(cells: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if threads <= 1 || cells.len() <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+    let workers = threads.min(cells.len());
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(cells.len());
+    slots.resize_with(cells.len(), || None);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    // Work stealing by atomic index: fast cells drain
+                    // more of the grid, so one slow cell cannot leave
+                    // the other workers idle behind a static partition.
+                    let mut got: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cells.len() {
+                            break;
+                        }
+                        got.push((i, f(i, &cells[i])));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every claimed cell produces exactly one result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_single_cell_grids() {
+        let none: Vec<u32> = run_cells(&[], |_, c: &u32| *c);
+        assert!(none.is_empty());
+        assert_eq!(run_cells(&[7u32], |i, c| (i, *c)), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        // Uneven per-cell work so threads finish out of order; the
+        // driver must still hand results back by input index.
+        let cells: Vec<u64> = (0..64).collect();
+        let out = run_cells_with(&cells, 8, |i, &c| {
+            let mut acc = c;
+            for _ in 0..((64 - i) * 1000) {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            (i as u64, c, acc)
+        });
+        assert_eq!(out.len(), 64);
+        for (i, (idx, c, _)) in out.iter().enumerate() {
+            assert_eq!(*idx, i as u64);
+            assert_eq!(*c, i as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let cells: Vec<u64> = (0..33).map(|i| i * 31 + 7).collect();
+        let f = |i: usize, c: &u64| -> f64 {
+            // Order-sensitive float accumulation inside one cell —
+            // identical per cell, so the sweep result must match.
+            let mut acc = 0.0f64;
+            for k in 0..(*c % 17 + 3) {
+                acc += 1.0 / (i as f64 + k as f64 + 1.5);
+            }
+            acc
+        };
+        let serial = run_cells_with(&cells, 1, f);
+        let parallel = run_cells_with(&cells, 6, f);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn thread_count_never_exceeds_cells() {
+        assert_eq!(sweep_threads(0), 1);
+        assert_eq!(sweep_threads(1), 1);
+        assert!(sweep_threads(4) <= 4);
+    }
+}

@@ -1,0 +1,382 @@
+//! Hot-path index invariants: every incrementally-maintained structure
+//! on the dispatch path is pinned **bit-identical** to the O(pending)
+//! scan it replaced.
+//!
+//! The `reference` module below is a frozen copy of the scan-based
+//! `DeadlineSelector` as it stood before the EDF index — it rescans the
+//! pending set at every entry point and re-touches the simulator cache
+//! for every estimate. The indexed selector must make exactly the same
+//! decisions, producing exactly the same reports, on every arrival
+//! scenario the crate ships. The other tests pin the ETA price memo
+//! against fresh-model projections, the batched `run_source` completion
+//! loop against the frozen `Engine::run` Vec path, and the parallel
+//! sweep driver against its serial loop.
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{
+    Coordinator, DeadlineSelector, Engine, EtaModel, ExecutionReport, KerneletSelector,
+    PreemptCost, Selector,
+};
+use kernelet::kernel::BenchmarkApp;
+use kernelet::sweep::run_cells_with;
+use kernelet::workload::{
+    scenario_source, ClosedLoopSource, Mix, QosMix, ReplaySource, Stream, SCENARIO_NAMES,
+};
+
+/// Frozen scan-based predecessor of the indexed `DeadlineSelector`.
+/// Deliberately naive: no EDF index, no estimate memo, no per-decision
+/// urgency cache — every entry point rescans `ctx.pending` and prices
+/// every deadlined kernel through `SchedCtx::est_remaining_secs`. This
+/// is the oracle the index must match decision for decision.
+mod reference {
+    use kernelet::coordinator::{
+        Decision, KerneletSelector, PreemptCost, PreemptPoint, SchedCtx, Selector,
+    };
+    use kernelet::kernel::KernelInstance;
+
+    pub struct ScanDeadlineSelector {
+        inner: KerneletSelector,
+        urgency_factor: f64,
+        preempt: Option<PreemptCost>,
+    }
+
+    impl ScanDeadlineSelector {
+        pub fn new() -> Self {
+            Self { inner: KerneletSelector, urgency_factor: 2.0, preempt: None }
+        }
+
+        pub fn with_preemption(mut self, cost: PreemptCost) -> Self {
+            self.preempt = Some(cost);
+            self
+        }
+    }
+
+    impl Default for ScanDeadlineSelector {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl ScanDeadlineSelector {
+        fn deadline_pending(ctx: &SchedCtx<'_, '_>) -> bool {
+            ctx.pending.iter().any(|k| k.qos.deadline.is_some())
+        }
+
+        fn scan_urgent(&self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+            let mut best: Option<(f64, u64)> = None;
+            for &k in ctx.pending {
+                let Some(ttd) = k.time_to_deadline(ctx.now_secs) else { continue };
+                let est = ctx.est_remaining_secs(k);
+                if ttd > self.urgency_factor * est {
+                    continue;
+                }
+                let slack = ttd - est;
+                if best.map_or(true, |(s, _)| slack < s) {
+                    best = Some((slack, k.id));
+                }
+            }
+            best.map(|(_, id)| id)
+        }
+
+        fn earliest_urgency_secs(
+            &self,
+            ctx: &SchedCtx<'_, '_>,
+            exclude: Option<u64>,
+        ) -> Option<f64> {
+            let mut earliest: Option<f64> = None;
+            for &k in ctx.pending {
+                let Some(deadline) = k.qos.deadline else { continue };
+                if Some(k.id) == exclude {
+                    continue;
+                }
+                let t_u = deadline - self.urgency_factor * ctx.est_remaining_secs(k);
+                if earliest.map_or(true, |e| t_u < e) {
+                    earliest = Some(t_u);
+                }
+            }
+            earliest
+        }
+
+        fn pending_deadline_pair(&self, ctx: &SchedCtx<'_, '_>, d: Decision) -> Decision {
+            let Some(cost) = self.preempt else {
+                return Decision { rounds_cap: Some(1), ..d };
+            };
+            match self.earliest_urgency_secs(ctx, None) {
+                Some(t_u) => {
+                    let at = t_u - cost.break_even_secs();
+                    if at <= ctx.now_secs {
+                        Decision { rounds_cap: Some(1), ..d }
+                    } else {
+                        Decision {
+                            preempt: Some(PreemptPoint {
+                                at_secs: at,
+                                relaunch_secs: cost.relaunch_secs,
+                            }),
+                            ..d
+                        }
+                    }
+                }
+                None => Decision { rounds_cap: Some(1), ..d },
+            }
+        }
+    }
+
+    impl Selector for ScanDeadlineSelector {
+        fn name(&self) -> &'static str {
+            "scan-deadline"
+        }
+
+        fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+            match self.scan_urgent(ctx) {
+                None => match self.inner.select(ctx) {
+                    Some(d) if Self::deadline_pending(ctx) => {
+                        Some(self.pending_deadline_pair(ctx, d))
+                    }
+                    other => other,
+                },
+                Some(u) => match self.inner.select(ctx) {
+                    Some(d) if d.k1 == u || d.k2 == u => {
+                        Some(Decision { rounds_cap: Some(1), ..d })
+                    }
+                    _ => None,
+                },
+            }
+        }
+
+        fn solo_pick(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+            match self.scan_urgent(ctx) {
+                Some(u) => Some(u),
+                None => self.inner.solo_pick(ctx),
+            }
+        }
+
+        fn solo_slice(&mut self, ctx: &SchedCtx<'_, '_>, head: &KernelInstance) -> u32 {
+            if Self::deadline_pending(ctx) || ctx.more_arrivals {
+                ctx.coord.min_slice(&head.spec).max(head.spec.grid_blocks / 4)
+            } else {
+                head.remaining_blocks()
+            }
+        }
+
+        fn solo_plan(
+            &mut self,
+            ctx: &SchedCtx<'_, '_>,
+            head: &KernelInstance,
+        ) -> (u32, Option<PreemptPoint>) {
+            if let Some(cost) = self.preempt {
+                if !ctx.more_arrivals && Self::deadline_pending(ctx) {
+                    match self.earliest_urgency_secs(ctx, Some(head.id)) {
+                        Some(t_u) => {
+                            let at = t_u - cost.break_even_secs();
+                            if at > ctx.now_secs {
+                                return (
+                                    head.remaining_blocks(),
+                                    Some(PreemptPoint {
+                                        at_secs: at,
+                                        relaunch_secs: cost.relaunch_secs,
+                                    }),
+                                );
+                            }
+                        }
+                        None => return (head.remaining_blocks(), None),
+                    }
+                }
+            }
+            (self.solo_slice(ctx, head), None)
+        }
+    }
+}
+
+fn assert_reports_identical(label: &str, a: &ExecutionReport, b: &ExecutionReport) {
+    assert_eq!(a.kernels_completed, b.kernels_completed, "{label}: completed diverged");
+    assert_eq!(a.incomplete, b.incomplete, "{label}: incomplete diverged");
+    assert_eq!(
+        a.total_cycles.to_bits(),
+        b.total_cycles.to_bits(),
+        "{label}: makespan diverged ({} vs {})",
+        a.total_cycles,
+        b.total_cycles
+    );
+    assert_eq!(a.completion, b.completion, "{label}: completion times diverged");
+    assert_eq!(a.slice_trace, b.slice_trace, "{label}: dispatch sequence diverged");
+    assert_eq!(a.queue_depth, b.queue_depth, "{label}: decision trace diverged");
+    assert_eq!(a.coschedule_rounds, b.coschedule_rounds, "{label}: rounds diverged");
+    assert_eq!(a.solo_slices, b.solo_slices, "{label}: solo slices diverged");
+    assert_eq!(a.preemptions, b.preemptions, "{label}: preemptions diverged");
+    assert_eq!(
+        a.qos.total_deadline_misses(),
+        b.qos.total_deadline_misses(),
+        "{label}: deadline misses diverged"
+    );
+}
+
+/// Latency share whose deadlines sit near the urgency window of a
+/// typical kernel, so the selectors exercise the urgent jump, the
+/// pending-deadline hold, and the comfortable-slack defer on the same
+/// run.
+fn test_qos(coord: &Coordinator) -> QosMix {
+    let est_mm = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&BenchmarkApp::MM.spec()));
+    QosMix::latency_share(0.5, 3.0 * est_mm)
+}
+
+/// Tentpole pin: the EDF-indexed `DeadlineSelector` is decision- and
+/// report-identical to the frozen scan-based predecessor on all six
+/// arrival scenarios, with and without mid-slice preemption.
+#[test]
+fn indexed_deadline_selector_matches_scan_reference_on_all_scenarios() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let qos = test_qos(&coord);
+    let est_mm = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&BenchmarkApp::MM.spec()));
+    // Offer work faster than one device drains it so the pending set
+    // (and the index) actually grows: ~6 kernels' worth per second.
+    let rate = 6.0 / est_mm;
+    let cost = PreemptCost::for_gpu(&coord.gpu);
+    for scenario in SCENARIO_NAMES {
+        for preempting in [false, true] {
+            let run = |sel: &mut dyn Selector| -> ExecutionReport {
+                let mut src = scenario_source(scenario, Mix::MIX, 4, rate, 0x1D8, qos)
+                    .expect("scenario source");
+                Engine::new(&coord).run_source(sel, src.as_mut())
+            };
+            let indexed = if preempting {
+                run(&mut DeadlineSelector::new().with_preemption(cost))
+            } else {
+                run(&mut DeadlineSelector::new())
+            };
+            let scanned = if preempting {
+                run(&mut reference::ScanDeadlineSelector::new().with_preemption(cost))
+            } else {
+                run(&mut reference::ScanDeadlineSelector::new())
+            };
+            let label = format!("{scenario} (preempting={preempting})");
+            assert!(indexed.kernels_completed > 0, "{label}: empty run proves nothing");
+            assert_reports_identical(&label, &indexed, &scanned);
+        }
+    }
+}
+
+/// A selector instance is reusable across engines (the fleet dispatcher
+/// does exactly that): the index's cursor-reset guard must keep the
+/// second run identical to the scan reference too.
+#[test]
+fn indexed_selector_reused_across_engines_matches_scan_reference() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let qos = test_qos(&coord);
+    let mut stream = Stream::saturated(Mix::MIX, 3, 0xBEE);
+    for k in &mut stream.instances {
+        k.qos = qos.stamp(k.id, k.arrival_time);
+    }
+    let mut indexed = DeadlineSelector::new();
+    let mut scanned = reference::ScanDeadlineSelector::new();
+    for pass in 0..3 {
+        let a = Engine::new(&coord)
+            .run_source(&mut indexed, &mut ReplaySource::from_stream(&stream));
+        let b = Engine::new(&coord)
+            .run_source(&mut scanned, &mut ReplaySource::from_stream(&stream));
+        assert_reports_identical(&format!("engine handoff pass {pass}"), &a, &b);
+    }
+}
+
+/// The ETA price memo is invisible: a model that has priced the same
+/// queue many times projects bit-identically to a brand-new model, and
+/// a repeated projection (a guaranteed memo hit) reproduces itself.
+#[test]
+fn eta_price_memo_projections_match_fresh_model() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let stream = Stream::poisson(Mix::MIX, 10, 1500.0, 0xE7A1);
+    let mut engine = Engine::new(&coord);
+    let mut sel = KerneletSelector;
+    let mut warm = EtaModel::new();
+    let mut projections = 0usize;
+    for k in stream.arrivals() {
+        engine.run_until(&mut sel, k.arrival_time, true);
+        let clock = engine.clock_secs();
+        let now = clock.max(k.arrival_time);
+        let hot = warm.projected_finish_secs(&coord, engine.pending(), clock, now, &k);
+        let fresh =
+            EtaModel::new().projected_finish_secs(&coord, engine.pending(), clock, now, &k);
+        assert_eq!(
+            hot.to_bits(),
+            fresh.to_bits(),
+            "price memo diverged from a fresh model at t={now} (pending={})",
+            engine.pending().len()
+        );
+        let again = warm.projected_finish_secs(&coord, engine.pending(), clock, now, &k);
+        assert_eq!(again.to_bits(), hot.to_bits(), "memo hit not idempotent at t={now}");
+        projections += 1;
+        engine.submit(k);
+    }
+    engine.drain(&mut sel);
+    assert_eq!(projections, stream.len());
+}
+
+/// The batched completion loop in `run_source` (feed + re-peek only
+/// when a decision actually completed something) stays bit-identical to
+/// the frozen `Engine::run` Vec path — including under preemption pins,
+/// whose cut-and-relaunch completions land mid-block.
+#[test]
+fn batched_run_source_matches_frozen_vec_path_under_preemption() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let qos = test_qos(&coord);
+    let cost = PreemptCost::for_gpu(&coord.gpu);
+    for (name, mut stream) in [
+        ("saturated", Stream::saturated(Mix::MIX, 4, 0x7E)),
+        ("poisson", Stream::poisson(Mix::MIX, 6, 900.0, 0x7F)),
+    ] {
+        for k in &mut stream.instances {
+            k.qos = qos.stamp(k.id, k.arrival_time);
+        }
+        let vec_path = Engine::new(&coord)
+            .run(&mut DeadlineSelector::new().with_preemption(cost), &stream);
+        let streamed = Engine::new(&coord).run_source(
+            &mut DeadlineSelector::new().with_preemption(cost),
+            &mut ReplaySource::from_stream(&stream),
+        );
+        assert_reports_identical(name, &vec_path, &streamed);
+    }
+}
+
+/// Closed-loop sources are the one case where batching could skew the
+/// feedback cadence (arrivals depend on completions): the run must be
+/// reproducible from its seed, and every issued job completes.
+#[test]
+fn batched_closed_loop_run_is_deterministic() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let run = || {
+        let mut src = ClosedLoopSource::new(Mix::MIX, 4, 50.0, 24, 0xC10);
+        Engine::new(&coord).run_source(&mut KerneletSelector, &mut src)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.kernels_completed, 24);
+    assert_reports_identical("closed-loop", &a, &b);
+}
+
+/// The parallel sweep driver is byte-identical to the serial loop on a
+/// real figure-style sweep: a scenario × load grid of full engine runs
+/// sharing one coordinator (so the parallel pass also exercises
+/// concurrent population of the shared measurement caches).
+#[test]
+fn parallel_sweep_matches_serial_on_engine_grid() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let est_mm = coord.gpu.cycles_to_secs(coord.simcache.solo_full(&BenchmarkApp::MM.spec()));
+    let mut cells: Vec<(&str, f64)> = Vec::new();
+    for scenario in SCENARIO_NAMES {
+        for load in [2.0, 6.0] {
+            cells.push((scenario, load / est_mm));
+        }
+    }
+    let cell = |i: usize, &(scenario, rate): &(&str, f64)| -> (u64, usize, Vec<(f64, usize)>) {
+        let mut src =
+            scenario_source(scenario, Mix::MIX, 3, rate, 0x5EED + i as u64, QosMix::ALL_BATCH)
+                .expect("scenario source");
+        let rep = Engine::new(&coord).run_source(&mut KerneletSelector, src.as_mut());
+        (rep.total_cycles.to_bits(), rep.kernels_completed, rep.queue_depth)
+    };
+    let serial = run_cells_with(&cells, 1, cell);
+    let parallel = run_cells_with(&cells, 4, cell);
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(s, p, "cell {i} ({:?}) diverged between serial and parallel", cells[i]);
+    }
+}

@@ -17,9 +17,10 @@ Stdlib only (runs in containers with nothing but python3). Two jobs:
 
 2. **Baseline comparison**: fresh files are compared against committed
    baselines (default `scripts/baselines/`) with a +/-15% tolerance on
-   the simulated throughput/goodput/p99 metrics. Wall-clock metrics
-   (BENCH_scheduling's *_ns, every file's wall_ms) are machine-dependent
-   and never compared. `--bless` records the fresh files as the new
+   the simulated throughput/goodput/p99 metrics; BENCH_scheduling's
+   deterministic event counts (`events.total`) get the same drift slot.
+   Wall-clock metrics (BENCH_scheduling's *_ns and events_per_sec,
+   every file's wall_ms) are machine-dependent and never compared. `--bless` records the fresh files as the new
    baselines; a missing baseline is reported but does not fail (the
    first CI machine blesses it).
 
@@ -68,6 +69,23 @@ def validate_scheduling(d, name):
     for r in results:
         check(r.get("iters", 0) >= 1, f"{name}: {r.get('name')}: bad iters")
         check(r.get("mean_ns", 0) > 0, f"{name}: {r.get('name')}: bad mean_ns")
+    # Engine event rate: arrivals + completions + dispatch decisions
+    # over one timed run. The counts are simulated-deterministic (drift
+    # gated against the baseline); events_per_sec is wall-clock and only
+    # schema-checked.
+    ev = d.get("events")
+    if check(isinstance(ev, dict), f"{name}: missing events block (events-per-second metric)"):
+        check(bool(ev.get("workload")), f"{name}: events.workload missing")
+        for k in ("arrivals", "completions", "decisions", "total"):
+            v = ev.get(k)
+            check(isinstance(v, int) and v >= 0, f"{name}: events.{k} bad: {v!r}")
+        check(
+            ev.get("total")
+            == ev.get("arrivals", 0) + ev.get("completions", 0) + ev.get("decisions", 0),
+            f"{name}: events.total {ev.get('total')} != arrivals+completions+decisions",
+        )
+        check(ev.get("wall_s", 0) > 0, f"{name}: events.wall_s bad")
+        check(ev.get("events_per_sec", 0) > 0, f"{name}: events.events_per_sec bad")
 
 
 def validate_throughput(d, name):
@@ -340,6 +358,22 @@ def compare_to_baseline(fresh, base, kind, name):
             f"{base.get('instances_per_app')} — different scale, skipping drift comparison"
         )
         return
+    if kind == "scheduling":
+        # The *_ns timings and events_per_sec are wall-clock (machine
+        # noise), but the event *counts* are simulated-deterministic:
+        # a drift in events.total means the engine made a different
+        # number of decisions — a behavior change, gate it.
+        a, b = dig(fresh, "events.total"), dig(base, "events.total")
+        if not within(a, b):
+            fail(
+                f"{name}: events.total {a} drifted >{TOLERANCE:.0%} from baseline {b} "
+                f"(decision-count change on the fixed workload)"
+            )
+        print(
+            f"{name}: events.total compared ({a} vs baseline {b}); wall-clock metrics "
+            f"(*_ns, events_per_sec) not compared"
+        )
+        return
     keys = COMPARE_KEYS.get(kind, [])
     if not keys:
         print(f"note: {name}: wall-clock bench, schema-checked only (no drift comparison)")
@@ -443,6 +477,15 @@ EXAMPLES = {
     "scheduling": {
         "bench": "scheduling",
         "instances_per_app": 50,
+        "events": {
+            "workload": "poisson_ALLx25",
+            "arrivals": 200,
+            "completions": 200,
+            "decisions": 450,
+            "total": 850,
+            "wall_s": 0.012,
+            "events_per_sec": 70833.3,
+        },
         "results": [
             {"name": "generate::fig13", "iters": 1, "mean_ns": 5, "min_ns": 5, "max_ns": 5}
         ],
@@ -565,6 +608,20 @@ def self_test():
         fail("self-test: efc-beats-sloaware violation slipped through validate_routing")
     else:
         del FAILURES[before:]
+    # Negative: an inconsistent (or absent) events block must be caught.
+    broken = json.loads(json.dumps(EXAMPLES["scheduling"]))
+    broken["events"]["total"] += 1
+    missing = json.loads(json.dumps(EXAMPLES["scheduling"]))
+    del missing["events"]
+    for doc, what in ((broken, "inconsistent"), (missing, "missing")):
+        before = len(FAILURES)
+        QUIET = True
+        validate_scheduling(doc, "<negative>")
+        QUIET = False
+        if len(FAILURES) == before:
+            fail(f"self-test: {what} events block slipped through validate_scheduling")
+        else:
+            del FAILURES[before:]
     print("validator self-test OK")
 
 

@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
 # CI pipeline: format, lint, docs, build, test, and record + gate the
-# perf trajectories (BENCH_scheduling.json latency,
-# BENCH_throughput.json saturation + fleet curves, BENCH_qos.json
-# per-class tail latency, BENCH_admission.json goodput/shedding under
-# overload, BENCH_routing.json fleet deadline routing). Schema and
-# baseline gating lives in scripts/check_bench.py.
+# perf trajectories (BENCH_scheduling.json latency + engine
+# events-per-second, BENCH_throughput.json saturation + fleet curves,
+# BENCH_qos.json per-class tail latency, BENCH_admission.json
+# goodput/shedding under overload, BENCH_routing.json fleet deadline
+# routing). Schema and baseline gating lives in scripts/check_bench.py.
 #
 # Usage: ./scripts/ci.sh [--quick]
 #   --quick   lower bench instance counts (CI smoke; default 50/8/10)
@@ -96,6 +96,9 @@ cargo build --release
 echo "==> cargo test -q"
 run_tests
 
+echo "==> cargo bench --bench hotpaths (smoke: microbenches + ablations)"
+cargo bench --bench hotpaths
+
 echo "==> cargo bench --bench scheduling (instances/app=${instances})"
 KERNELET_INSTANCES="${instances}" \
 KERNELET_BENCH_OUT="BENCH_scheduling.json" \
@@ -139,4 +142,15 @@ fi
 
 echo "==> perf record:"
 cat BENCH_scheduling.json
+if command -v python3 >/dev/null 2>&1; then
+  python3 - <<'EOF'
+import json
+ev = json.load(open("BENCH_scheduling.json")).get("events", {})
+if ev:
+    print(
+        f"engine event rate: {ev['events_per_sec']:.0f} events/s on {ev['workload']} "
+        f"({ev['total']} events in {ev['wall_s']:.4f}s)"
+    )
+EOF
+fi
 echo "CI OK"
