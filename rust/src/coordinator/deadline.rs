@@ -481,6 +481,12 @@ impl Selector for DeadlineSelector {
         // pinned ahead of the earliest urgency point among the *other*
         // deadlined kernels, instead of being held at chunk
         // granularity (see "Mid-slice preemption" in the module docs).
+        // An unsliceable kernel (analyzer verdict) cannot be stopped at
+        // a block boundary and relaunched: its whole grid is one
+        // indivisible launch, so no preempt pin and no chunked hold.
+        if !ctx.coord.is_sliceable(head.spec.name) {
+            return (head.remaining_blocks(), None);
+        }
         if let Some(cost) = self.preempt {
             if !ctx.more_arrivals && self.deadline_pending() {
                 match self.earliest_urgency_secs(ctx, Some(head.id)) {
@@ -783,6 +789,45 @@ mod tests {
         assert_eq!(a.completion, b.completion);
         assert_eq!(a.slice_trace, b.slice_trace);
         assert_eq!(a.preemptions, 0);
+    }
+
+    #[test]
+    fn unsliceable_solo_gets_no_preempt_pin() {
+        // A kernel the PTX analyzer ruled Unsliceable is one
+        // indivisible launch: even with a PreemptCost configured and a
+        // deadline pending elsewhere, solo_plan must dispatch the whole
+        // residual with no pin. Differential against an ungated
+        // coordinator to prove the setup would otherwise pin.
+        let small = BenchmarkApp::MM.spec();
+        let head = KernelInstance::new(0, small.clone(), 0.0);
+        let other =
+            KernelInstance::new(1, small.clone(), 0.0).with_qos(Qos::latency(Some(1e3)));
+        let pending = [&head, &other];
+        let plan = |coord: &Coordinator| {
+            let ctx = SchedCtx {
+                coord,
+                pending: &pending,
+                now_secs: 0.0,
+                more_arrivals: false,
+                admitted: &[],
+                completed: &[],
+            };
+            let mut dl =
+                DeadlineSelector::new().with_preemption(PreemptCost::for_gpu(&coord.gpu));
+            dl.solo_plan(&ctx, &head)
+        };
+
+        let open = Coordinator::new(&GpuConfig::c2050());
+        let (_, pin) = plan(&open);
+        assert!(pin.is_some(), "craft: the ungated plan must pin");
+
+        let gated = Coordinator::new(&GpuConfig::c2050());
+        let mut a = crate::ptx::analyze_ptx(crate::ptx::samples::HISTOGRAM).unwrap();
+        a.name = "MM".to_string();
+        gated.register_analysis("MM", a);
+        let (size, pin) = plan(&gated);
+        assert_eq!(size, head.remaining_blocks());
+        assert!(pin.is_none(), "unsliceable kernel must not be preempt-pinned");
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::config::GpuConfig;
 use crate::kernel::{KernelInstance, KernelSpec};
 use crate::model::{self, Granularity};
 use crate::profiler::{Profile, ProfileCache};
+use crate::ptx::KernelAnalysis;
 use crate::sharded::ShardedMap;
 use crate::slicer::SliceSizeCache;
 
@@ -98,6 +99,13 @@ pub struct Coordinator {
     /// part of the key, so mutating [`Self::prune`] or [`Self::cp_min`]
     /// mid-run cannot serve stale picks.
     pick_cache: ShardedMap<String, Option<PairPick>>,
+    /// Slice-safety verdicts from the static PTX analyzer
+    /// ([`crate::ptx::analyze`]), keyed by kernel name. Populated by
+    /// [`Self::register_analysis`] when a submission arrives with PTX;
+    /// a kernel with no entry is treated as sliceable (the statistical
+    /// benchmark specs have no PTX body to analyze, and the seed
+    /// behaved exactly that way).
+    analyses: ShardedMap<String, KernelAnalysis>,
 }
 
 impl Coordinator {
@@ -120,7 +128,29 @@ impl Coordinator {
             model_cache: ShardedMap::new(),
             solo_model_cache: ShardedMap::new(),
             pick_cache: ShardedMap::new(),
+            analyses: ShardedMap::new(),
         }
+    }
+
+    /// Record the static analyzer's verdict for a kernel (by name).
+    /// From here on, [`Self::min_slice`] pins an `Unsliceable` kernel
+    /// to its whole grid and [`Self::find_coschedule`] never offers it
+    /// as a pairing candidate.
+    pub fn register_analysis(&self, name: &str, analysis: KernelAnalysis) {
+        self.analyses.insert(name.to_string(), analysis);
+    }
+
+    /// The registered analysis for a kernel name, if any.
+    pub fn analysis(&self, name: &str) -> Option<KernelAnalysis> {
+        self.analyses.get(name)
+    }
+
+    /// Whether the scheduler may slice this kernel. Kernels without a
+    /// registered analysis are sliceable — the gate only ever
+    /// *restricts*, so submissions without PTX behave exactly as
+    /// before the analyzer existed.
+    pub fn is_sliceable(&self, name: &str) -> bool {
+        self.analyses.get(name).map_or(true, |a| a.sliceable())
     }
 
     /// Profile (cached) a kernel spec.
@@ -147,9 +177,16 @@ impl Coordinator {
         v
     }
 
-    /// Minimum slice size (cached) for a kernel spec.
+    /// Minimum slice size (cached) for a kernel spec, gated by the
+    /// analyzer's verdict: an `Unsliceable` kernel's minimum "slice" is
+    /// its whole grid.
     pub fn min_slice(&self, spec: &KernelSpec) -> u32 {
-        self.slice_sizes.get(&self.gpu, spec, self.overhead_budget_pct)
+        self.slice_sizes.get_gated(
+            &self.gpu,
+            spec,
+            self.overhead_budget_pct,
+            self.is_sliceable(spec.name),
+        )
     }
 
     /// Estimated seconds to drain `k`'s residual blocks solo on this
@@ -247,6 +284,14 @@ impl Coordinator {
         let mut seen = std::collections::HashSet::new();
         let mut first_of_app: Vec<&KernelInstance> = Vec::new();
         for inst in pending {
+            // Unsliceable kernels never pair: a co-schedule dispatches
+            // both kernels as interleaved slices, and this one must run
+            // as a single whole-grid launch. Filtered before the dedup
+            // insert so the memo key is built from the same candidate
+            // list the search sees.
+            if !self.is_sliceable(inst.spec.name) {
+                continue;
+            }
             if seen.insert(inst.spec.name) {
                 first_of_app.push(inst);
             }
@@ -430,6 +475,50 @@ mod tests {
         // The model quantities are the memoized ones.
         assert_eq!(cs2.cp.to_bits(), cs1.cp.to_bits());
         assert_eq!((cs2.size1, cs2.size2), (cs1.size1, cs1.size2));
+    }
+
+    fn unsliceable_analysis(name: &str) -> crate::ptx::KernelAnalysis {
+        // A real verdict from the real pass: histogram's global atomic.
+        let mut a = crate::ptx::analyze_ptx(crate::ptx::samples::HISTOGRAM).unwrap();
+        a.name = name.to_string();
+        a
+    }
+
+    #[test]
+    fn unsliceable_kernel_is_never_paired() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let insts = instances(&[BenchmarkApp::TEA, BenchmarkApp::PC]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        assert!(coord.find_coschedule(&refs).is_some(), "pair expected before gating");
+
+        // Same pending set, but TEA's PTX turns out to hold a global
+        // atomic: the pair must dissolve (PC alone cannot pair).
+        coord.register_analysis("TEA", unsliceable_analysis("TEA"));
+        assert!(!coord.is_sliceable("TEA"));
+        assert!(coord.is_sliceable("PC"), "absent analysis stays sliceable");
+        assert!(coord.find_coschedule(&refs).is_none());
+    }
+
+    #[test]
+    fn unsliceable_kernel_gets_whole_grid_min_slice() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let spec = BenchmarkApp::TEA.spec();
+        let open = coord.min_slice(&spec);
+        assert!(open < spec.grid_blocks, "TEA is sliceable by default");
+        coord.register_analysis("TEA", unsliceable_analysis("TEA"));
+        assert_eq!(coord.min_slice(&spec), spec.grid_blocks);
+    }
+
+    #[test]
+    fn gate_only_removes_the_flagged_app() {
+        // Three apps pending; gating MRIQ must still let TEA+PC pair.
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let insts = instances(&[BenchmarkApp::TEA, BenchmarkApp::MRIQ, BenchmarkApp::PC]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        coord.register_analysis("MRIQ", unsliceable_analysis("MRIQ"));
+        let cs = coord.find_coschedule(&refs).expect("TEA+PC must survive the gate");
+        let mriq_id = insts.iter().find(|k| k.spec.name == "MRIQ").unwrap().id;
+        assert!(cs.k1 != mriq_id && cs.k2 != mriq_id);
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! kernelet trace record --scenario NAME [--out FILE]   dump a scenario
 //!                   to the JSON trace format (incl. QoS annotations)
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
+//! kernelet analyze <file.ptx>|--samples [--gpu G] [--tpb N]
+//!                                         slice-safety verdict + resources
 //! kernelet serve [--requests N]           E2E sliced serving demo (PJRT)
 //! ```
 
@@ -52,6 +54,7 @@ fn run() -> Result<()> {
         Some("schedule") => cmd_schedule(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("slice-ptx") => cmd_slice_ptx(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("help") | None => {
             print!("{}", HELP);
@@ -80,6 +83,7 @@ USAGE:
                     [--load X] [--qos-mix F] [--deadline-scale S] [--seed N]
                     [--out FILE]
   kernelet slice-ptx <file.ptx> [--dims 1|2]
+  kernelet analyze <file.ptx>|--samples [--gpu c2050|gtx680] [--tpb N]
   kernelet serve [--requests N]
 
 `schedule --scenario` streams arrivals online (load X = offered rate as
@@ -111,6 +115,14 @@ cost (also applies to the single-device deadline policy row).
 `trace record` replays the scenario through the engine and dumps the
 realized arrival sequence (app, t, grid, class, deadline) as a JSON
 trace for `schedule --scenario trace --trace FILE` replay.
+
+`analyze` runs the static slice-safety pass over a PTX file (or the
+built-in sample kernels with --samples): one row per kernel with the
+verdict (sliceable / sliceable-with-rectify / UNSLICEABLE(reason)),
+register pressure, grid dims, barrier count and the occupancy ceiling
+on --gpu at --tpb threads/block (default 256), then every flagged
+instruction with its source line. The scheduler consumes the same
+verdicts via Coordinator::register_analysis.
 
 `--cache-dir DIR` persists the simulation-measurement cache across
 runs: reload at start, spill at exit (one versioned JSON file per
@@ -670,6 +682,59 @@ fn cmd_slice_ptx(args: &[String]) -> Result<()> {
     let opts = kernelet::ptx::RectifyOptions { dims };
     let out = kernelet::ptx::slice_ptx(&src, &opts)?;
     print!("{out}");
+    Ok(())
+}
+
+/// `analyze`: run the static slice-safety pass ([`kernelet::ptx::analyze`])
+/// over a PTX file or the built-in samples, and print one verdict row
+/// per kernel plus the flagged unsafe sites with source lines.
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let gpu = parse_gpu(args)?;
+    let tpb: u32 = flag_value(args, "--tpb").unwrap_or("256").parse()?;
+    anyhow::ensure!(tpb >= 1, "--tpb {tpb} must be at least 1");
+    let analyses: Vec<kernelet::ptx::KernelAnalysis> = if args.iter().any(|a| a == "--samples") {
+        kernelet::ptx::samples::all()
+            .iter()
+            .map(|(name, src)| {
+                kernelet::ptx::analyze_ptx(src)
+                    .with_context(|| format!("analyzing sample {name}"))
+            })
+            .collect::<Result<_>>()?
+    } else {
+        let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
+            bail!("usage: kernelet analyze <file.ptx>|--samples [--gpu c2050|gtx680] [--tpb N]");
+        };
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        vec![kernelet::ptx::analyze_ptx(&src)?]
+    };
+    println!(
+        "slice-safety analysis (occupancy ceiling on {} at {} threads/block)",
+        gpu.name, tpb
+    );
+    println!(
+        "{:>13} {:>32} {:>9} {:>9} {:>5} {:>9} {:>7}",
+        "kernel", "verdict", "pressure", "regs", "dims", "barriers", "occ/SM"
+    );
+    for a in &analyses {
+        println!(
+            "{:>13} {:>32} {:>9} {:>9} {:>5} {:>9} {:>7}",
+            a.name,
+            a.verdict.to_string(),
+            a.pressure,
+            a.regs_declared,
+            a.dims,
+            a.barriers,
+            a.occupancy_ceiling(&gpu, tpb)
+        );
+    }
+    if analyses.iter().any(|a| !a.sites.is_empty()) {
+        println!("\nunsafe sites:");
+        for a in &analyses {
+            for s in &a.sites {
+                println!("  {}: line {}: {}  -- {}", a.name, s.line, s.inst, s.reason);
+            }
+        }
+    }
     Ok(())
 }
 

@@ -39,7 +39,7 @@ pub mod uncoal;
 pub use chain::{steady_state_dense, steady_state_power, SteadyStateMethod};
 pub use hetero::{predict_pair, PairPrediction};
 pub use homo::predict_solo;
-pub use params::{ChainParams, Granularity, SoloPrediction};
+pub use params::{occupancy_ceiling_blocks, ChainParams, Granularity, SoloPrediction};
 
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;

@@ -136,6 +136,20 @@ impl SmEnv {
     }
 }
 
+/// Occupancy ceiling from measured register pressure: how many blocks
+/// of `threads_per_block` threads fit on one SM of `gpu` when each
+/// thread holds `pressure_regs` live registers. This is the bridge from
+/// the PTX analyzer's static pressure measure to the scheduler's
+/// residency arithmetic — a rectified kernel whose pressure grew would
+/// see its ceiling drop here, which is exactly what the paper's
+/// liveness-minimization argument says must not happen. `pressure_regs`
+/// of 0 (no register file constraint) is passed through unchanged;
+/// shared memory is not modeled by the analyzer, so it does not
+/// constrain the ceiling.
+pub fn occupancy_ceiling_blocks(gpu: &GpuConfig, threads_per_block: u32, pressure_regs: u32) -> u32 {
+    gpu.blocks_per_sm(threads_per_block, pressure_regs, 0)
+}
+
 /// Model output for a solo kernel.
 #[derive(Debug, Clone, Copy)]
 pub struct SoloPrediction {
@@ -202,6 +216,17 @@ mod tests {
         let env = SmEnv::virtual_sm(&gpu);
         assert_eq!(env.round_duration(0.0, 1.0), 1.0);
         assert!(env.round_duration(24.0, 1.0) > 1.0);
+    }
+
+    #[test]
+    fn occupancy_ceiling_tracks_register_pressure() {
+        let gpu = GpuConfig::c2050();
+        // Unconstrained by registers: thread limit dominates
+        // (1536 threads / 256 per block = 6 blocks, under the 8-block cap).
+        assert_eq!(occupancy_ceiling_blocks(&gpu, 256, 0), 6);
+        assert_eq!(occupancy_ceiling_blocks(&gpu, 256, 10), 6);
+        // Heavy pressure: 32768 regs / (256 threads * 128 regs) = 1 block.
+        assert_eq!(occupancy_ceiling_blocks(&gpu, 256, 128), 1);
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! Static slice-safety analysis over parsed PTX — the compiler-guidance
+//! layer in front of the slicer (ROADMAP item 4, "compiler-guided
+//! elastic slicing").
+//!
+//! The rectification transform ([`super::rectify`]) is only sound for
+//! kernels whose thread blocks are independent: a slice is a separate
+//! kernel launch, so anything that communicates *across* blocks — or
+//! that derives behaviour from the launch's grid shape — changes
+//! meaning when the grid is cut into slices interleaved with a
+//! co-runner's epochs. This pass rules on that statically, before the
+//! slicer ever prices a slice size:
+//!
+//! * **Global atomics / reductions** (`atom.global.*`, `red.global.*`)
+//!   accumulate across blocks; with slicing, a co-scheduled kernel can
+//!   observe partially accumulated state between slices. Unsafe.
+//! * **Device/system fences** (`membar.gl`, `membar.sys`, `fence.*.gpu`)
+//!   order memory against *other blocks*; slices launched later cannot
+//!   be ordered by a fence that already retired. `membar.cta` is
+//!   block-local and safe.
+//! * **Grid-dependent control flow**: a conditional branch whose
+//!   predicate data-flows from `%nctaid` (found by a taint walk over
+//!   [`Inst::uses`]/[`Inst::def`]) bakes the launch's grid shape into
+//!   behaviour. Rectify substitutes the *original* extent for
+//!   `%nctaid`, which repairs pure index arithmetic — but a branch on
+//!   it is how "last block" / "block count" idioms are written, and
+//!   those assume the flagged block runs *last*, an ordering slicing
+//!   plus co-scheduling does not preserve. Unsafe, conservatively.
+//! * **Block-invariant global stores**: a `st.global` whose address
+//!   depends on neither `%ctaid` nor `%tid` writes the same location
+//!   from every block (an inter-block rendezvous). Unsafe.
+//! * **Divergent barriers**: a `bar.sync` only re-converges correctly
+//!   if every thread of the block reaches it. A barrier reachable from
+//!   a thread-divergent branch (predicate tainted by `%tid` or loaded
+//!   data) that it does not post-dominate can deadlock or skip
+//!   threads. Unsafe. A barrier in uniform control flow is block-local
+//!   and slice-safe.
+//!
+//! The result is a [`KernelAnalysis`]: a [`SliceVerdict`] plus the
+//! resource metadata the scheduler consumes (register pressure from
+//! [`super::liveness::max_pressure`], an occupancy ceiling via
+//! [`crate::model::occupancy_ceiling_blocks`], grid dimensionality,
+//! barrier count) and the flagged [`UnsafeSite`]s with source lines.
+//! `coordinator::Coordinator` caches these in a `ShardedMap` and treats
+//! `Unsliceable` kernels as whole-grid/non-elastic; see
+//! `Coordinator::register_analysis`.
+//!
+//! The static pass pairs with a dynamic oracle: [`super::verify`] runs
+//! original-vs-rectified PTX through the interpreter and asserts
+//! bit-identical memory. The oracle is necessary but not sufficient —
+//! the interpreter executes threads sequentially, so cross-slice
+//! interleavings (exactly what atomics/fences are about) never occur
+//! in it. The analyzer is the authority on those; the oracle checks
+//! the index arithmetic the analyzer cannot.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::config::GpuConfig;
+
+use super::ast::{Inst, Kernel, MemScope, Reg, Space, Special};
+use super::emit::inst_text;
+use super::liveness::{build_cfg, max_pressure, postdominators, reachable_from};
+use super::parser::parse_kernel_lines;
+
+/// Taint bit: value derives from `%ctaid` (block index).
+const T_CTAID: u8 = 1 << 0;
+/// Taint bit: value derives from `%tid` (thread index — divergent
+/// within a block).
+const T_TID: u8 = 1 << 1;
+/// Taint bit: value derives from `%nctaid` (the launch's grid shape —
+/// the thing slicing changes).
+const T_NCTAID: u8 = 1 << 2;
+/// Taint bit: value derives from global memory (data-dependent, so
+/// potentially divergent within a block).
+const T_LOADED: u8 = 1 << 3;
+
+/// Why a kernel cannot be sliced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnsafeReason {
+    /// `atom.global.*` — cross-block read-modify-write; co-runners
+    /// observe partial accumulation between slices.
+    GlobalAtomic,
+    /// `red.global.*` — same hazard as [`UnsafeReason::GlobalAtomic`]
+    /// without a return value.
+    GlobalReduction,
+    /// `membar.gl` / `membar.sys` — a fence scoped beyond one block
+    /// cannot order slices that launch later.
+    GridFence,
+    /// A conditional branch whose predicate data-flows from `%nctaid`
+    /// (grid-shape-dependent behaviour, e.g. a "last block" idiom).
+    GridDependentBranch,
+    /// A `bar.sync` reachable from a thread-divergent branch it does
+    /// not post-dominate.
+    DivergentBarrier,
+    /// A `st.global` whose address depends on neither `%ctaid` nor
+    /// `%tid`: every block writes the same location.
+    BlockInvariantStore,
+}
+
+impl UnsafeReason {
+    /// Short human-readable slug, used in verdict rendering and CLI
+    /// diagnostics.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            UnsafeReason::GlobalAtomic => "global-atomic",
+            UnsafeReason::GlobalReduction => "global-reduction",
+            UnsafeReason::GridFence => "grid-fence",
+            UnsafeReason::GridDependentBranch => "grid-dependent-branch",
+            UnsafeReason::DivergentBarrier => "divergent-barrier",
+            UnsafeReason::BlockInvariantStore => "block-invariant-store",
+        }
+    }
+}
+
+impl fmt::Display for UnsafeReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.describe())
+    }
+}
+
+/// The analyzer's per-kernel ruling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceVerdict {
+    /// No grid-index reads at all: any contiguous block range computes
+    /// the same result without rewriting a single instruction.
+    Sliceable,
+    /// Reads `%ctaid`/`%nctaid`, but every effect is block-local —
+    /// legal to slice after index rectification. All real sample
+    /// kernels land here.
+    SliceableWithRectify,
+    /// Slicing would change semantics; the scheduler must dispatch the
+    /// whole grid in one launch.
+    Unsliceable(UnsafeReason),
+}
+
+impl SliceVerdict {
+    /// `true` unless the verdict is [`SliceVerdict::Unsliceable`].
+    pub fn sliceable(&self) -> bool {
+        !matches!(self, SliceVerdict::Unsliceable(_))
+    }
+}
+
+impl fmt::Display for SliceVerdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SliceVerdict::Sliceable => f.write_str("sliceable"),
+            SliceVerdict::SliceableWithRectify => f.write_str("sliceable-with-rectify"),
+            SliceVerdict::Unsliceable(r) => write!(f, "UNSLICEABLE({r})"),
+        }
+    }
+}
+
+/// One instruction the analyzer flagged as slicing-unsafe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnsafeSite {
+    /// 1-based source line (0 when the kernel was analyzed from an AST
+    /// without source positions).
+    pub line: u32,
+    /// Index into `Kernel::body`.
+    pub index: usize,
+    /// PTX rendering of the flagged instruction.
+    pub inst: String,
+    /// Why it is unsafe.
+    pub reason: UnsafeReason,
+}
+
+/// Everything the slicer and scheduler need to know about one kernel:
+/// the safety verdict plus static resource metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelAnalysis {
+    /// Kernel entry name.
+    pub name: String,
+    /// The slice-safety ruling.
+    pub verdict: SliceVerdict,
+    /// Peak live registers per thread ([`max_pressure`]) — what the
+    /// hardware allocator would see, and the input to the occupancy
+    /// ceiling.
+    pub pressure: usize,
+    /// Registers declared (before any liveness minimization).
+    pub regs_declared: usize,
+    /// Grid dimensionality implied by special-register reads (1 or 2).
+    pub dims: u32,
+    /// Number of `bar.sync` sites (legal or not).
+    pub barriers: usize,
+    /// Flagged instructions, in body order (empty unless the verdict
+    /// is `Unsliceable`).
+    pub sites: Vec<UnsafeSite>,
+}
+
+impl KernelAnalysis {
+    /// `true` unless the verdict is `Unsliceable`.
+    pub fn sliceable(&self) -> bool {
+        self.verdict.sliceable()
+    }
+
+    /// Upper bound on resident blocks per SM on `gpu`, using the
+    /// analyzer's register-pressure estimate as the per-thread register
+    /// count (see [`crate::model::occupancy_ceiling_blocks`]).
+    pub fn occupancy_ceiling(&self, gpu: &GpuConfig, threads_per_block: u32) -> u32 {
+        crate::model::occupancy_ceiling_blocks(gpu, threads_per_block, self.pressure as u32)
+    }
+}
+
+/// Grid dimensionality a kernel's special-register reads imply: 2 if
+/// any `.y` builtin is read, else 1. Shared with the rectify verifier
+/// so both pick the same [`super::RectifyOptions`].
+pub fn infer_dims(k: &Kernel) -> u32 {
+    let reads_y = k.body.iter().flat_map(|i| i.specials()).any(|s| {
+        matches!(s, Special::CtaIdY | Special::NCtaIdY | Special::TidY | Special::NTidY)
+    });
+    if reads_y {
+        2
+    } else {
+        1
+    }
+}
+
+/// Flow-insensitive taint fixpoint over [`Inst::uses`]/[`Inst::def`]:
+/// for each register, which index/data sources can reach it. `%ntid`
+/// and kernel parameters are launch constants identical across slices,
+/// so they contribute no taint; global loads mark their destination
+/// data-dependent ([`T_LOADED`]). Flow-insensitivity over-approximates
+/// (a register reused for unrelated values merges both taints), which
+/// only ever makes the verdict more conservative.
+fn taints(k: &Kernel) -> HashMap<Reg, u8> {
+    let mut t: HashMap<Reg, u8> = HashMap::new();
+    loop {
+        let mut changed = false;
+        for inst in &k.body {
+            let Some(d) = inst.def() else { continue };
+            let mut v = 0u8;
+            for sp in inst.specials() {
+                v |= match sp {
+                    Special::CtaIdX | Special::CtaIdY => T_CTAID,
+                    Special::TidX | Special::TidY => T_TID,
+                    Special::NCtaIdX | Special::NCtaIdY => T_NCTAID,
+                    // Block shape is a launch constant slicing keeps.
+                    Special::NTidX | Special::NTidY => 0,
+                };
+            }
+            for u in inst.uses() {
+                // Param-space loads use the param name as a pseudo base
+                // register; params never appear as defs, so they read
+                // as untainted here — exactly right, they are launch
+                // constants.
+                v |= t.get(u).copied().unwrap_or(0);
+            }
+            if matches!(inst, Inst::Ld { space: Space::Global, .. } | Inst::Atom { .. }) {
+                v |= T_LOADED;
+            }
+            let e = t.entry(d.clone()).or_insert(0);
+            if *e | v != *e {
+                *e |= v;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    t
+}
+
+/// Analyze a parsed kernel. `lines` is the per-instruction source-line
+/// vector from [`parse_kernel_lines`] (pass `&[]` when analyzing a
+/// synthesized AST; sites then report line 0).
+pub fn analyze_kernel(k: &Kernel, lines: &[u32]) -> KernelAnalysis {
+    let t = taints(k);
+    let taint_of = |r: &Reg| t.get(r).copied().unwrap_or(0);
+
+    let cfg = build_cfg(&k.body);
+    let pdom = postdominators(&cfg);
+    let block_of =
+        |idx: usize| cfg.blocks.iter().position(|b| b.range.contains(&idx)).unwrap_or(0);
+
+    // Blocks ending in a branch whose predicate can differ between
+    // threads of one block (tid- or loaded-data-dependent).
+    let divergent_blocks: Vec<usize> = k
+        .body
+        .iter()
+        .enumerate()
+        .filter_map(|(i, inst)| match inst {
+            Inst::Bra { pred: Some((p, _)), .. } if taint_of(p) & (T_TID | T_LOADED) != 0 => {
+                Some(block_of(i))
+            }
+            _ => None,
+        })
+        .collect();
+
+    let mut sites: Vec<UnsafeSite> = Vec::new();
+    let flag = |sites: &mut Vec<UnsafeSite>, i: usize, inst: &Inst, reason: UnsafeReason| {
+        sites.push(UnsafeSite {
+            line: lines.get(i).copied().unwrap_or(0),
+            index: i,
+            inst: inst_text(inst),
+            reason,
+        });
+    };
+
+    for (i, inst) in k.body.iter().enumerate() {
+        match inst {
+            Inst::Atom { .. } => flag(&mut sites, i, inst, UnsafeReason::GlobalAtomic),
+            Inst::Red { .. } => flag(&mut sites, i, inst, UnsafeReason::GlobalReduction),
+            Inst::Membar(MemScope::Gl | MemScope::Sys) => {
+                flag(&mut sites, i, inst, UnsafeReason::GridFence)
+            }
+            Inst::Bra { pred: Some((p, _)), .. } if taint_of(p) & T_NCTAID != 0 => {
+                flag(&mut sites, i, inst, UnsafeReason::GridDependentBranch)
+            }
+            Inst::St { space: Space::Global, addr, .. }
+                if taint_of(&addr.base) & (T_CTAID | T_TID) == 0 =>
+            {
+                flag(&mut sites, i, inst, UnsafeReason::BlockInvariantStore)
+            }
+            Inst::Bar { .. } => {
+                let b = block_of(i);
+                // Unsafe iff some divergent branch reaches this
+                // barrier without the barrier post-dominating it: then
+                // only a thread subset arrives. (A barrier *before*
+                // the branch in the same block is executed by all
+                // threads and stays safe — reachable_from excludes the
+                // branch block itself unless it sits on a cycle.)
+                let divergent = divergent_blocks
+                    .iter()
+                    .any(|&db| reachable_from(&cfg, db).contains(&b) && !pdom[db].contains(&b));
+                if divergent {
+                    flag(&mut sites, i, inst, UnsafeReason::DivergentBarrier);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let reads_grid = k.body.iter().flat_map(|i| i.specials()).any(|s| {
+        matches!(s, Special::CtaIdX | Special::CtaIdY | Special::NCtaIdX | Special::NCtaIdY)
+    });
+    let verdict = match sites.first() {
+        Some(first) => SliceVerdict::Unsliceable(first.reason),
+        None if reads_grid => SliceVerdict::SliceableWithRectify,
+        None => SliceVerdict::Sliceable,
+    };
+
+    KernelAnalysis {
+        name: k.name.clone(),
+        verdict,
+        pressure: max_pressure(k),
+        regs_declared: k.regs.len(),
+        dims: infer_dims(k),
+        barriers: k.body.iter().filter(|i| matches!(i, Inst::Bar { .. })).count(),
+        sites,
+    }
+}
+
+/// Parse PTX text and analyze it, threading source lines into the
+/// unsafe-site diagnostics. This is what `kernelet analyze` calls.
+pub fn analyze_ptx(src: &str) -> Result<KernelAnalysis> {
+    let (k, lines) = parse_kernel_lines(src)?;
+    Ok(analyze_kernel(&k, &lines))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::samples;
+
+    fn verdict_of(src: &str) -> SliceVerdict {
+        analyze_ptx(src).unwrap().verdict
+    }
+
+    #[test]
+    fn pure_kernel_is_sliceable_without_rectify() {
+        // No grid-index reads at all: every block does the same thing
+        // to a tid-indexed location... here, nothing at all.
+        let src = ".entry nop () { ret; }";
+        assert_eq!(verdict_of(src), SliceVerdict::Sliceable);
+    }
+
+    #[test]
+    fn index_arithmetic_needs_rectify_only() {
+        for name in ["matrix_add", "saxpy", "gather", "mix_rounds"] {
+            let src = samples::all().iter().find(|(n, _)| *n == name).unwrap().1;
+            assert_eq!(verdict_of(src), SliceVerdict::SliceableWithRectify, "{name}");
+        }
+    }
+
+    #[test]
+    fn global_atomic_is_unsliceable() {
+        let a = analyze_ptx(samples::HISTOGRAM).unwrap();
+        assert_eq!(a.verdict, SliceVerdict::Unsliceable(UnsafeReason::GlobalAtomic));
+        assert!(!a.sliceable());
+        assert_eq!(a.sites.len(), 1);
+        assert!(a.sites[0].inst.starts_with("atom.global.add"), "{}", a.sites[0].inst);
+        // The site's line must point at the atom in the source.
+        let src_line = samples::HISTOGRAM
+            .lines()
+            .position(|l| l.contains("atom.global"))
+            .unwrap() as u32
+            + 1;
+        assert_eq!(a.sites[0].line, src_line);
+    }
+
+    #[test]
+    fn reduction_is_unsliceable() {
+        let src = ".entry r ( .param .u64 p ) { .reg .u64 %rd0; .reg .u32 %r0; \
+                   ld.param.u64 %rd0, [p]; mov.u32 %r0, %tid.x; \
+                   red.global.add.u32 [%rd0], %r0; ret; }";
+        assert_eq!(verdict_of(src), SliceVerdict::Unsliceable(UnsafeReason::GlobalReduction));
+    }
+
+    #[test]
+    fn grid_dependent_branch_is_unsliceable() {
+        let a = analyze_ptx(samples::TAIL_FLAG).unwrap();
+        assert_eq!(a.verdict, SliceVerdict::Unsliceable(UnsafeReason::GridDependentBranch));
+        // Only the branch is flagged: the guarded store's address is
+        // tid-derived, so it is not block-invariant.
+        assert_eq!(a.sites.len(), 1);
+        assert_eq!(a.sites[0].reason, UnsafeReason::GridDependentBranch);
+    }
+
+    #[test]
+    fn nctaid_taint_flows_through_arithmetic() {
+        // nctaid -> sub -> mul -> setp predicate: the taint walk must
+        // chase the whole chain, not just direct reads.
+        let src = ".entry t () { .reg .u32 %r<4>; .reg .pred %p0; \
+                   mov.u32 %r0, %nctaid.x; sub.u32 %r1, %r0, 1; \
+                   mul.lo.u32 %r2, %r1, 4; setp.eq.u32 %p0, %r2, 0; \
+                   @%p0 bra L; L: ret; }";
+        assert_eq!(verdict_of(src), SliceVerdict::Unsliceable(UnsafeReason::GridDependentBranch));
+    }
+
+    #[test]
+    fn nctaid_in_pure_index_math_is_rectifiable() {
+        // Grid-stride addressing reads %nctaid but never branches on
+        // it: rectify substitutes the original extent, so this is
+        // safe. (Guards against over-flagging every %nctaid read.)
+        let src = ".entry t ( .param .u64 p ) { .reg .u32 %r<4>; .reg .u64 %rd<3>; \
+                   ld.param.u64 %rd0, [p]; \
+                   mov.u32 %r0, %ctaid.x; mov.u32 %r1, %nctaid.x; \
+                   mad.lo.u32 %r2, %r0, %r1, 0; \
+                   mul.wide.u32 %rd1, %r2, 4; add.u64 %rd2, %rd0, %rd1; \
+                   st.global.u32 [%rd2], %r2; ret; }";
+        assert_eq!(verdict_of(src), SliceVerdict::SliceableWithRectify);
+    }
+
+    #[test]
+    fn device_fence_unsafe_block_fence_safe() {
+        let gl = ".entry t () { membar.gl; ret; }";
+        assert_eq!(verdict_of(gl), SliceVerdict::Unsliceable(UnsafeReason::GridFence));
+        let sys = ".entry t () { fence.acq_rel.sys; ret; }";
+        assert_eq!(verdict_of(sys), SliceVerdict::Unsliceable(UnsafeReason::GridFence));
+        let cta = ".entry t () { membar.cta; ret; }";
+        assert_eq!(verdict_of(cta), SliceVerdict::Sliceable);
+    }
+
+    #[test]
+    fn block_invariant_store_is_unsliceable() {
+        // Address derives only from a param: every block writes the
+        // same cell.
+        let src = ".entry t ( .param .u64 p ) { .reg .u64 %rd0; .reg .u32 %r0; \
+                   ld.param.u64 %rd0, [p]; mov.u32 %r0, 1; \
+                   st.global.u32 [%rd0], %r0; ret; }";
+        assert_eq!(verdict_of(src), SliceVerdict::Unsliceable(UnsafeReason::BlockInvariantStore));
+        // But a tid-indexed store (gather's shape) is fine.
+        assert_eq!(verdict_of(samples::GATHER), SliceVerdict::SliceableWithRectify);
+    }
+
+    #[test]
+    fn uniform_barrier_is_safe_divergent_barrier_is_not() {
+        let a = analyze_ptx(samples::BLOCK_BARRIER).unwrap();
+        assert_eq!(a.verdict, SliceVerdict::SliceableWithRectify);
+        assert_eq!(a.barriers, 1);
+
+        // tid-dependent guard around a barrier: threads with tid >= 8
+        // skip it. Must be flagged.
+        let src = ".entry t () { .reg .u32 %r0; .reg .pred %p0; \
+                   mov.u32 %r0, %tid.x; setp.ge.u32 %p0, %r0, 8; \
+                   @%p0 bra SKIP; bar.sync 0; SKIP: ret; }";
+        let a = analyze_ptx(src).unwrap();
+        assert_eq!(a.verdict, SliceVerdict::Unsliceable(UnsafeReason::DivergentBarrier));
+
+        // Same shape but the barrier is *after* re-convergence (post-
+        // dominates the branch): safe.
+        let src = ".entry t ( .param .u64 p ) { .reg .u32 %r<2>; .reg .u64 %rd0; .reg .pred %p0; \
+                   ld.param.u64 %rd0, [p]; \
+                   mov.u32 %r0, %tid.x; setp.ge.u32 %p0, %r0, 8; \
+                   @%p0 bra JOIN; mov.u32 %r1, 5; JOIN: bar.sync 0; \
+                   mul.wide.u32 %rd0, %r0, 4; ret; }";
+        let a = analyze_ptx(src).unwrap();
+        assert!(a.verdict.sliceable(), "{:?}", a.verdict);
+        assert_eq!(a.barriers, 1);
+    }
+
+    #[test]
+    fn dims_inferred_from_special_reads() {
+        let a = analyze_ptx(samples::MATRIX_ADD).unwrap();
+        assert_eq!(a.dims, 2);
+        for name in ["saxpy", "gather", "mix_rounds", "histogram"] {
+            let src = samples::all().iter().find(|(n, _)| *n == name).unwrap().1;
+            assert_eq!(analyze_ptx(src).unwrap().dims, 1, "{name}");
+        }
+    }
+
+    #[test]
+    fn pressure_and_occupancy_ceiling() {
+        let a = analyze_ptx(samples::MATRIX_ADD).unwrap();
+        assert!(a.pressure > 0 && a.pressure <= a.regs_declared);
+        let gpu = GpuConfig::c2050();
+        let ceil = a.occupancy_ceiling(&gpu, 256);
+        // c2050: 1536 threads/SM caps at 6 blocks of 256; tiny
+        // register pressure must not cap below that.
+        assert_eq!(ceil, 6);
+        // A pathological pressure caps through the register file.
+        let fat = KernelAnalysis { pressure: 128, ..a };
+        assert!(fat.occupancy_ceiling(&gpu, 256) < 6);
+    }
+
+    #[test]
+    fn analyzing_without_lines_reports_line_zero() {
+        let (k, _) = crate::ptx::parser::parse_kernel_lines(samples::HISTOGRAM).unwrap();
+        let a = analyze_kernel(&k, &[]);
+        assert_eq!(a.sites[0].line, 0);
+        assert_eq!(a.verdict, SliceVerdict::Unsliceable(UnsafeReason::GlobalAtomic));
+    }
+}

@@ -219,6 +219,92 @@ impl BinOp {
     }
 }
 
+/// Atomic read-modify-write operations (`atom.global.<op>` /
+/// `red.global.<op>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomOp {
+    /// Addition.
+    Add,
+    /// Minimum.
+    Min,
+    /// Maximum.
+    Max,
+    /// Bitwise and.
+    And,
+    /// Bitwise or.
+    Or,
+    /// Bitwise xor.
+    Xor,
+    /// Exchange: store the source, return the old value.
+    Exch,
+}
+
+impl AtomOp {
+    /// PTX op name, e.g. `add` in `atom.global.add.u32`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AtomOp::Add => "add",
+            AtomOp::Min => "min",
+            AtomOp::Max => "max",
+            AtomOp::And => "and",
+            AtomOp::Or => "or",
+            AtomOp::Xor => "xor",
+            AtomOp::Exch => "exch",
+        }
+    }
+
+    /// Inverse of [`AtomOp::name`].
+    pub fn from_name(s: &str) -> Option<AtomOp> {
+        Some(match s {
+            "add" => AtomOp::Add,
+            "min" => AtomOp::Min,
+            "max" => AtomOp::Max,
+            "and" => AtomOp::And,
+            "or" => AtomOp::Or,
+            "xor" => AtomOp::Xor,
+            "exch" => AtomOp::Exch,
+            _ => return None,
+        })
+    }
+}
+
+/// Memory-ordering scope for `membar` (and its `fence` aliases).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemScope {
+    /// Block scope (`membar.cta`): orders accesses within one thread
+    /// block only — harmless to slicing, since a slice never splits a
+    /// block.
+    Cta,
+    /// Device scope (`membar.gl`, `fence.*.gpu`): orders accesses
+    /// across the whole grid.
+    Gl,
+    /// System scope (`membar.sys`): orders accesses across the device
+    /// and the host.
+    Sys,
+}
+
+impl MemScope {
+    /// PTX scope suffix, e.g. `gl` in `membar.gl`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemScope::Cta => "cta",
+            MemScope::Gl => "gl",
+            MemScope::Sys => "sys",
+        }
+    }
+
+    /// Inverse of [`MemScope::name`] (also accepts the `fence`
+    /// spelling `gpu` for device scope).
+    pub fn from_name(s: &str) -> Option<MemScope> {
+        Some(match s {
+            "cta" => MemScope::Cta,
+            "gl" | "gpu" => MemScope::Gl,
+            "sys" => MemScope::Sys,
+            _ => return None,
+        })
+    }
+}
+
 /// Memory address: `[reg + offset]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Addr {
@@ -258,6 +344,20 @@ pub enum Inst {
     Setp { cmp: Cmp, ty: Type, dst: Reg, a: Operand, b: Operand },
     /// `@p bra L` / `@!p bra L` / `bra L`
     Bra { pred: Option<(Reg, bool)>, target: String },
+    /// `bar.sync id` — block-wide execution barrier.
+    Bar {
+        /// Barrier resource id (always 0 in the subset's sources, but
+        /// parsed and re-emitted faithfully).
+        id: u32,
+    },
+    /// `atom.global.<op>.<ty> dst, [addr], src` — atomic
+    /// read-modify-write on global memory, returning the old value.
+    Atom { op: AtomOp, ty: Type, dst: Reg, addr: Addr, src: Operand },
+    /// `red.global.<op>.<ty> [addr], src` — reduction: an atomic RMW
+    /// whose old value is discarded.
+    Red { op: AtomOp, ty: Type, addr: Addr, src: Operand },
+    /// `membar.<scope>` / `fence.*` — memory-ordering fence.
+    Membar(MemScope),
     /// `L:`
     Label(String),
     /// `ret`
@@ -274,7 +374,8 @@ impl Inst {
             | Inst::MulWide { dst, .. }
             | Inst::Cvt { dst, .. }
             | Inst::Ld { dst, .. }
-            | Inst::Setp { dst, .. } => Some(dst),
+            | Inst::Setp { dst, .. }
+            | Inst::Atom { dst, .. } => Some(dst),
             _ => None,
         }
     }
@@ -304,7 +405,9 @@ impl Inst {
             }
             Inst::Cvt { src, .. } => op(src, &mut out),
             Inst::Ld { addr, .. } => out.push(&addr.base),
-            Inst::St { src, addr, .. } => {
+            Inst::St { src, addr, .. }
+            | Inst::Atom { src, addr, .. }
+            | Inst::Red { src, addr, .. } => {
                 op(src, &mut out);
                 out.push(&addr.base);
             }
@@ -337,7 +440,9 @@ impl Inst {
                 op(b, &mut out);
                 op(c, &mut out);
             }
-            Inst::St { src, .. } => op(src, &mut out),
+            Inst::St { src, .. } | Inst::Atom { src, .. } | Inst::Red { src, .. } => {
+                op(src, &mut out)
+            }
             _ => {}
         }
         out
@@ -357,7 +462,7 @@ impl Inst {
                 f(b);
                 f(c);
             }
-            Inst::St { src, .. } => f(src),
+            Inst::St { src, .. } | Inst::Atom { src, .. } | Inst::Red { src, .. } => f(src),
             _ => {}
         }
     }
@@ -439,6 +544,67 @@ mod tests {
     fn type_roundtrip() {
         for t in [Type::U32, Type::S32, Type::U64, Type::F32, Type::Pred] {
             assert_eq!(Type::from_suffix(t.suffix()), Some(t));
+        }
+    }
+
+    #[test]
+    fn atom_op_roundtrip() {
+        for op in [
+            AtomOp::Add,
+            AtomOp::Min,
+            AtomOp::Max,
+            AtomOp::And,
+            AtomOp::Or,
+            AtomOp::Xor,
+            AtomOp::Exch,
+        ] {
+            assert_eq!(AtomOp::from_name(op.name()), Some(op));
+        }
+        assert_eq!(AtomOp::from_name("cas"), None);
+    }
+
+    #[test]
+    fn mem_scope_roundtrip() {
+        for s in [MemScope::Cta, MemScope::Gl, MemScope::Sys] {
+            assert_eq!(MemScope::from_name(s.name()), Some(s));
+        }
+        // The `fence` spelling for device scope.
+        assert_eq!(MemScope::from_name("gpu"), Some(MemScope::Gl));
+    }
+
+    #[test]
+    fn atom_def_and_uses() {
+        let i = Inst::Atom {
+            op: AtomOp::Add,
+            ty: Type::U32,
+            dst: Reg("r1".into()),
+            addr: Addr { base: Reg("rd2".into()), offset: 8 },
+            src: Operand::Reg(Reg("r3".into())),
+        };
+        assert_eq!(i.def().unwrap().0, "r1");
+        let uses: Vec<&str> = i.uses().iter().map(|r| r.0.as_str()).collect();
+        assert_eq!(uses, vec!["r3", "rd2"]);
+    }
+
+    #[test]
+    fn red_has_no_def_but_uses_src_and_base() {
+        let i = Inst::Red {
+            op: AtomOp::Max,
+            ty: Type::S32,
+            addr: Addr { base: Reg("rd0".into()), offset: 0 },
+            src: Operand::Imm(7),
+        };
+        assert!(i.def().is_none());
+        let uses: Vec<&str> = i.uses().iter().map(|r| r.0.as_str()).collect();
+        assert_eq!(uses, vec!["rd0"]);
+    }
+
+    #[test]
+    fn barrier_and_fence_have_no_dataflow() {
+        for i in [Inst::Bar { id: 0 }, Inst::Membar(MemScope::Gl)] {
+            assert!(i.def().is_none());
+            assert!(i.uses().is_empty());
+            assert!(i.specials().is_empty());
         }
     }
 }

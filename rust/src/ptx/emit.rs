@@ -66,7 +66,10 @@ pub fn emit(k: &Kernel) -> String {
     s
 }
 
-fn inst_text(i: &Inst) -> String {
+/// One instruction as PTX text, without the trailing `;`. Public so
+/// the analyzer can render unsafe-site diagnostics; labels render as
+/// `L:` here even though [`emit`] formats them separately.
+pub fn inst_text(i: &Inst) -> String {
     match i {
         Inst::Mov { ty, dst, src } => format!("mov.{} {}, {}", ty.suffix(), dst, op(src)),
         Inst::Bin { op: o, ty, dst, a, b } => {
@@ -101,8 +104,16 @@ fn inst_text(i: &Inst) -> String {
         Inst::Bra { pred: None, target } => format!("bra {target}"),
         Inst::Bra { pred: Some((p, true)), target } => format!("@{p} bra {target}"),
         Inst::Bra { pred: Some((p, false)), target } => format!("@!{p} bra {target}"),
+        Inst::Bar { id } => format!("bar.sync {id}"),
+        Inst::Atom { op: o, ty, dst, addr: a, src } => {
+            format!("atom.global.{}.{} {}, {}, {}", o.name(), ty.suffix(), dst, addr(a), op(src))
+        }
+        Inst::Red { op: o, ty, addr: a, src } => {
+            format!("red.global.{}.{} {}, {}", o.name(), ty.suffix(), addr(a), op(src))
+        }
+        Inst::Membar(s) => format!("membar.{}", s.name()),
         Inst::Ret => "ret".into(),
-        Inst::Label(_) => unreachable!("labels handled by caller"),
+        Inst::Label(l) => format!("{l}:"),
     }
 }
 
@@ -124,6 +135,19 @@ mod tests {
             assert_eq!(k1.params, k2.params, "{name}");
             assert_eq!(k1.body, k2.body, "{name}");
         }
+    }
+
+    #[test]
+    fn sync_instructions_roundtrip() {
+        let src = ".entry t () { .reg .u32 %r<2>; .reg .u64 %rd0; \
+                   bar.sync 0; \
+                   atom.global.add.u32 %r1, [%rd0+4], %r0; \
+                   red.global.xor.u32 [%rd0], 3; \
+                   membar.gl; membar.cta; ret; }";
+        let k1 = parse_kernel(src).unwrap();
+        let text = emit(&k1);
+        let k2 = parse_kernel(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert_eq!(k1.body, k2.body);
     }
 
     #[test]

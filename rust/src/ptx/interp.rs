@@ -255,6 +255,33 @@ fn run_thread(
                 let t = eval_cmp(*cmp, *ty, x, y);
                 regs.insert(leak(&dst.0), t as u64);
             }
+            Inst::Bar { .. } | Inst::Membar(_) => {
+                // The interpreter runs each thread sequentially to
+                // completion, so barriers and fences are ordering
+                // no-ops here. Cross-thread interleavings they guard
+                // against cannot occur in this oracle — ruling on
+                // their slicing legality is the analyzer's job, not
+                // the interpreter's.
+            }
+            Inst::Atom { op, ty, dst, addr, src } => {
+                let base = *regs
+                    .get(addr.base.0.as_str())
+                    .ok_or_else(|| anyhow!("atom base %{} undefined", addr.base.0))?;
+                let a = base.wrapping_add(addr.offset as u64);
+                let old = m.load(*ty, a)?;
+                let new = eval_atom(*op, *ty, old, val!(src))?;
+                m.store(*ty, a, new)?;
+                regs.insert(leak(&dst.0), old);
+            }
+            Inst::Red { op, ty, addr, src } => {
+                let base = *regs
+                    .get(addr.base.0.as_str())
+                    .ok_or_else(|| anyhow!("red base %{} undefined", addr.base.0))?;
+                let a = base.wrapping_add(addr.offset as u64);
+                let old = m.load(*ty, a)?;
+                let new = eval_atom(*op, *ty, old, val!(src))?;
+                m.store(*ty, a, new)?;
+            }
             Inst::Bra { pred, target } => {
                 let take = match pred {
                     None => true,
@@ -296,6 +323,22 @@ fn leak(s: &str) -> &'static str {
     let v: &'static str = Box::leak(s.to_string().into_boxed_str());
     g.insert(v);
     v
+}
+
+/// One atomic read-modify-write step. Sequentially consistent by
+/// construction: the interpreter executes threads one at a time, so
+/// every RMW is trivially indivisible.
+fn eval_atom(op: AtomOp, ty: Type, old: u64, src: u64) -> Result<u64> {
+    let bin = match op {
+        AtomOp::Exch => return Ok(src),
+        AtomOp::Add => BinOp::Add,
+        AtomOp::Min => BinOp::Min,
+        AtomOp::Max => BinOp::Max,
+        AtomOp::And => BinOp::And,
+        AtomOp::Or => BinOp::Or,
+        AtomOp::Xor => BinOp::Xor,
+    };
+    eval_bin(bin, ty, old, src)
 }
 
 fn eval_bin(op: BinOp, ty: Type, x: u64, y: u64) -> Result<u64> {
@@ -476,6 +519,40 @@ mod tests {
         }
     }
 
+    #[test]
+    fn histogram_atomics_accumulate() {
+        let k = parse_kernel(samples::HISTOGRAM).unwrap();
+        let n = 64usize;
+        let mut m = Machine::new(4096);
+        let data: Vec<u32> = (0..n as u32).map(|i| i * 3).collect();
+        m.write_u32s(0, &data);
+        let args = vec![0u64, 1024];
+        launch(&k, LaunchConfig { grid: (4, 1), block: (16, 1) }, &args, &mut m).unwrap();
+        let bins = m.read_u32s(1024, 16);
+        let mut expect = [0u32; 16];
+        for &d in &data {
+            expect[(d & 15) as usize] += 1;
+        }
+        assert_eq!(bins, expect);
+        assert_eq!(bins.iter().sum::<u32>(), n as u32);
+    }
+
+    #[test]
+    fn atomic_ops_return_old_value() {
+        let src = ".entry t ( .param .u64 p ) { .reg .u32 %r<3>; .reg .u64 %rd0; \
+                   ld.param.u64 %rd0, [p]; \
+                   atom.global.exch.u32 %r0, [%rd0], 42; \
+                   atom.global.max.u32 %r1, [%rd0], 7; \
+                   st.global.u32 [%rd0+4], %r0; \
+                   st.global.u32 [%rd0+8], %r1; ret; }";
+        let k = parse_kernel(src).unwrap();
+        let mut m = Machine::new(64);
+        m.write_u32s(0, &[5]);
+        launch(&k, LaunchConfig { grid: (1, 1), block: (1, 1) }, &vec![0u64], &mut m).unwrap();
+        // exch stored 42 returning old 5; max(42, 7) kept 42 returning 42.
+        assert_eq!(m.read_u32s(0, 3), vec![42, 5, 42]);
+    }
+
     /// THE slicing-correctness test: rectified slices == original launch.
     #[test]
     fn sliced_execution_is_bit_identical() {
@@ -503,6 +580,9 @@ mod tests {
                 "saxpy" => vec![16 * 1024, 32 * 1024, (2.0f32).to_bits() as u64, total_threads as u64],
                 "gather" => vec![0, 16 * 1024, 32 * 1024],
                 "mix_rounds" => vec![0, 3],
+                "histogram" => vec![0, 48 * 1024],
+                "tail_flag" => vec![48 * 1024],
+                "block_barrier" => vec![0, 48 * 1024],
                 _ => unreachable!(),
             };
 

@@ -51,14 +51,35 @@ pub enum Tok {
 
 /// Tokenize PTX source; `//` comments and `/* */` blocks are skipped.
 pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
+    Ok(tokenize_spanned(src)?.into_iter().map(|(t, _)| t).collect())
+}
+
+/// Tokenize PTX source, pairing each token with its 1-based source
+/// line. The analyzer threads these through the parser so unsafe-site
+/// diagnostics can point back at the original `.ptx` line; [`tokenize`]
+/// is the line-free wrapper everything else uses.
+pub fn tokenize_spanned(src: &str) -> Result<Vec<(Tok, u32)>> {
     let b: Vec<char> = src.chars().collect();
     let mut i = 0;
     let n = b.len();
-    let mut out = Vec::new();
+    let mut line: u32 = 1;
+    let mut out: Vec<(Tok, u32)> = Vec::new();
+    // Every arm below pushes at most one token and never crosses a
+    // newline mid-token, so `line` at push time is the token's line.
+    macro_rules! push {
+        ($t:expr) => {
+            out.push(($t, line))
+        };
+    }
     while i < n {
         let c = b[i];
         match c {
-            c if c.is_whitespace() => i += 1,
+            c if c.is_whitespace() => {
+                if c == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
             '/' if i + 1 < n && b[i + 1] == '/' => {
                 while i < n && b[i] != '\n' {
                     i += 1;
@@ -67,6 +88,9 @@ pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
             '/' if i + 1 < n && b[i + 1] == '*' => {
                 i += 2;
                 while i + 1 < n && !(b[i] == '*' && b[i + 1] == '/') {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
                     i += 1;
                 }
                 i += 2;
@@ -79,10 +103,10 @@ pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
                     while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
                         j += 1;
                     }
-                    out.push(Tok::Directive(b[i + 1..j].iter().collect()));
+                    push!(Tok::Directive(b[i + 1..j].iter().collect()));
                     i = j;
                 } else {
-                    out.push(Tok::Dot);
+                    push!(Tok::Dot);
                     i += 1;
                 }
             }
@@ -98,7 +122,7 @@ pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
                 if j == i + 1 {
                     bail!("lone % at char {i}");
                 }
-                out.push(Tok::Reg(b[i + 1..j].iter().collect()));
+                push!(Tok::Reg(b[i + 1..j].iter().collect()));
                 i = j;
             }
             '0' if i + 1 < n && b[i + 1] == 'f' => {
@@ -109,7 +133,7 @@ pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
                     bail!("bad hex float at char {i}");
                 }
                 let bits = u32::from_str_radix(&hex, 16).unwrap();
-                out.push(Tok::Float(f32::from_bits(bits)));
+                push!(Tok::Float(f32::from_bits(bits)));
                 i = j + 8;
             }
             c if c.is_ascii_digit() => {
@@ -126,9 +150,9 @@ pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
                 }
                 let s: String = b[i..j].iter().collect();
                 if is_float {
-                    out.push(Tok::Float(s.parse()?));
+                    push!(Tok::Float(s.parse()?));
                 } else {
-                    out.push(Tok::Int(s.parse()?));
+                    push!(Tok::Int(s.parse()?));
                 }
                 i = j;
             }
@@ -137,67 +161,67 @@ pub fn tokenize(src: &str) -> Result<Vec<Tok>> {
                 while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_' || b[j] == '$') {
                     j += 1;
                 }
-                out.push(Tok::Ident(b[i..j].iter().collect()));
+                push!(Tok::Ident(b[i..j].iter().collect()));
                 i = j;
             }
             '(' => {
-                out.push(Tok::LParen);
+                push!(Tok::LParen);
                 i += 1;
             }
             ')' => {
-                out.push(Tok::RParen);
+                push!(Tok::RParen);
                 i += 1;
             }
             '{' => {
-                out.push(Tok::LBrace);
+                push!(Tok::LBrace);
                 i += 1;
             }
             '}' => {
-                out.push(Tok::RBrace);
+                push!(Tok::RBrace);
                 i += 1;
             }
             '[' => {
-                out.push(Tok::LBracket);
+                push!(Tok::LBracket);
                 i += 1;
             }
             ']' => {
-                out.push(Tok::RBracket);
+                push!(Tok::RBracket);
                 i += 1;
             }
             ',' => {
-                out.push(Tok::Comma);
+                push!(Tok::Comma);
                 i += 1;
             }
             ';' => {
-                out.push(Tok::Semi);
+                push!(Tok::Semi);
                 i += 1;
             }
             ':' => {
-                out.push(Tok::Colon);
+                push!(Tok::Colon);
                 i += 1;
             }
             '@' => {
-                out.push(Tok::At);
+                push!(Tok::At);
                 i += 1;
             }
             '!' => {
-                out.push(Tok::Bang);
+                push!(Tok::Bang);
                 i += 1;
             }
             '+' => {
-                out.push(Tok::Plus);
+                push!(Tok::Plus);
                 i += 1;
             }
             '-' => {
-                out.push(Tok::Minus);
+                push!(Tok::Minus);
                 i += 1;
             }
             '<' => {
-                out.push(Tok::Lt);
+                push!(Tok::Lt);
                 i += 1;
             }
             '>' => {
-                out.push(Tok::Gt);
+                push!(Tok::Gt);
                 i += 1;
             }
             other => bail!("unexpected character {other:?} at {i}"),
@@ -252,5 +276,24 @@ mod tests {
         assert!(toks.contains(&Tok::Plus));
         assert!(toks.contains(&Tok::Minus));
         assert!(toks.contains(&Tok::Int(4)));
+    }
+
+    #[test]
+    fn spanned_lines_track_newlines_and_comments() {
+        let src = "mov.u32 %r0, 1;\n// comment line\nret;\n/* multi\nline */ add.u32 %r1, %r0, 2;";
+        let toks = tokenize_spanned(src).unwrap();
+        let line_of = |t: &Tok| toks.iter().find(|(tt, _)| tt == t).map(|(_, l)| *l);
+        assert_eq!(line_of(&Tok::Ident("mov".into())), Some(1));
+        assert_eq!(line_of(&Tok::Ident("ret".into())), Some(3));
+        // The block comment spans lines 4-5, so `add` lands on line 5.
+        assert_eq!(line_of(&Tok::Ident("add".into())), Some(5));
+    }
+
+    #[test]
+    fn spanned_agrees_with_plain_tokenize() {
+        let src = ".entry f ( .param .u64 p ) {\n  mov.u32 %r0, %tid.x;\n  ret;\n}";
+        let plain = tokenize(src).unwrap();
+        let spanned = tokenize_spanned(src).unwrap();
+        assert_eq!(plain, spanned.into_iter().map(|(t, _)| t).collect::<Vec<_>>());
     }
 }

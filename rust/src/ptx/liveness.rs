@@ -139,6 +139,66 @@ pub fn liveness(body: &[Inst]) -> Vec<HashSet<Reg>> {
     per_inst
 }
 
+/// Post-dominator sets over the CFG: `postdominators(cfg)[b]` holds
+/// the blocks through which *every* path from `b` to an exit must pass
+/// (including `b` itself). Exit blocks (no successors) post-dominate
+/// only themselves. Standard iterative intersection dataflow,
+/// initialized to the full block set. The analyzer uses this for
+/// barrier-placement legality: a `bar.sync` reachable from a divergent
+/// branch is only safe if it post-dominates that branch (all threads
+/// re-converge at it).
+pub fn postdominators(cfg: &Cfg) -> Vec<HashSet<usize>> {
+    let nb = cfg.blocks.len();
+    let all: HashSet<usize> = (0..nb).collect();
+    let mut pdom: Vec<HashSet<usize>> = (0..nb)
+        .map(|b| {
+            if cfg.blocks[b].succs.is_empty() {
+                HashSet::from([b])
+            } else {
+                all.clone()
+            }
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for b in (0..nb).rev() {
+            if cfg.blocks[b].succs.is_empty() {
+                continue;
+            }
+            let mut inter: Option<HashSet<usize>> = None;
+            for &s in &cfg.blocks[b].succs {
+                inter = Some(match inter {
+                    None => pdom[s].clone(),
+                    Some(acc) => acc.intersection(&pdom[s]).copied().collect(),
+                });
+            }
+            let mut next = inter.unwrap_or_default();
+            next.insert(b);
+            if next != pdom[b] {
+                pdom[b] = next;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    pdom
+}
+
+/// Blocks reachable from `from` by following successor edges. `from`
+/// itself is included only if it sits on a cycle.
+pub fn reachable_from(cfg: &Cfg, from: usize) -> HashSet<usize> {
+    let mut seen = HashSet::new();
+    let mut stack: Vec<usize> = cfg.blocks[from].succs.clone();
+    while let Some(b) = stack.pop() {
+        if seen.insert(b) {
+            stack.extend(cfg.blocks[b].succs.iter().copied());
+        }
+    }
+    seen
+}
+
 /// Maximum number of simultaneously live registers — the pressure the
 /// hardware register allocator would see (per thread).
 pub fn max_pressure(k: &Kernel) -> usize {
@@ -209,6 +269,57 @@ mod tests {
             let p = max_pressure(&k);
             assert!(p > 0 && p <= k.regs.len(), "{name}: pressure {p} of {}", k.regs.len());
         }
+    }
+
+    #[test]
+    fn postdominators_of_diamond() {
+        // entry -> (guarded skip to DONE | fallthrough) -> DONE -> exit:
+        // saxpy's shape. DONE must post-dominate every block; the
+        // fallthrough body must not post-dominate the branch block.
+        let k = parse_kernel(samples::SAXPY).unwrap();
+        let cfg = build_cfg(&k.body);
+        let pdom = postdominators(&cfg);
+        assert_eq!(cfg.blocks.len(), 3, "{cfg:?}");
+        // Block 0 ends in the guarded bra; block 1 is the guarded
+        // body; block 2 is DONE..ret (the exit).
+        assert!(pdom[0].contains(&2), "exit must post-dominate entry");
+        assert!(!pdom[0].contains(&1), "guarded body must not post-dominate the branch");
+        assert_eq!(pdom[2], HashSet::from([2]));
+    }
+
+    #[test]
+    fn postdominators_of_loop() {
+        let k = parse_kernel(samples::MIX_ROUNDS).unwrap();
+        let cfg = build_cfg(&k.body);
+        let pdom = postdominators(&cfg);
+        // The DONE block (the one ending in Ret) post-dominates every
+        // block: all paths drain through it.
+        let exit = cfg.blocks.iter().position(|b| b.succs.is_empty()).unwrap();
+        for (b, p) in pdom.iter().enumerate() {
+            assert!(p.contains(&exit), "block {b} not post-dominated by exit {exit}");
+        }
+    }
+
+    #[test]
+    fn reachability_follows_edges() {
+        let k = parse_kernel(samples::MIX_ROUNDS).unwrap();
+        let cfg = build_cfg(&k.body);
+        // From the entry everything else is reachable; the loop head
+        // sits on a cycle, so it reaches itself.
+        let from_entry = reachable_from(&cfg, 0);
+        assert!(!from_entry.contains(&0), "entry is not on the loop cycle");
+        assert_eq!(from_entry.len(), cfg.blocks.len() - 1);
+        // The loop head sits on a cycle, so it reaches itself.
+        let (_, head) = cfg
+            .blocks
+            .iter()
+            .enumerate()
+            .find_map(|(i, b)| b.succs.iter().find(|&&s| s <= i).map(|&s| (i, s)))
+            .expect("mix_rounds has a back edge");
+        assert!(reachable_from(&cfg, head).contains(&head));
+        // The exit block reaches nothing.
+        let exit = cfg.blocks.iter().position(|b| b.succs.is_empty()).unwrap();
+        assert!(reachable_from(&cfg, exit).is_empty());
     }
 
     #[test]

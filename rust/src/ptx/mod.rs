@@ -11,21 +11,31 @@
 //! 1. [`lexer`] / [`parser`] — parse `.entry` kernels with `.param`s,
 //!    `.reg` declarations, the common arithmetic/memory/control
 //!    instructions and the `%ctaid`/`%tid`/`%ntid`/`%nctaid` specials;
-//! 2. [`liveness`] — CFG construction and backward live-range analysis,
-//!    powering the register-minimization the paper applies so that
-//!    "register usage by slicing keeps unchanged in most of our test
-//!    cases";
-//! 3. [`rectify`] — the slicing transform itself: inject
+//! 2. [`liveness`] — CFG construction, backward live-range analysis,
+//!    post-dominators and reachability, powering both the
+//!    register-minimization the paper applies ("register usage by
+//!    slicing keeps unchanged in most of our test cases") and the
+//!    analyzer's barrier-legality check;
+//! 3. [`analyze`] — the slice-safety gate: a static dataflow pass that
+//!    classifies each kernel `Sliceable` / `SliceableWithRectify` /
+//!    `Unsliceable(reason)` (global atomics, grid-dependent branches,
+//!    device-scope fences, …) and measures register pressure for the
+//!    scheduler's occupancy ceiling;
+//! 4. [`rectify`] — the slicing transform itself: inject
 //!    `__koff_x/__koff_y/__kgrid_x/__kgrid_y` parameters, compute the
 //!    rectified block indices (with the Fig. 3c wrap-around loop in 2-D),
 //!    and substitute every use of the built-in indices;
-//! 4. [`emit`] — print the transformed kernel back to PTX text;
-//! 5. [`interp`] — a per-thread PTX interpreter over a byte-addressed
+//! 5. [`emit`] — print the transformed kernel back to PTX text;
+//! 6. [`interp`] — a per-thread PTX interpreter over a byte-addressed
 //!    global memory, used by the test-suite to prove that sliced
 //!    execution is bit-identical to the original launch;
-//! 6. [`samples`] — PTX sources of representative kernels (the Fig. 3
-//!    MatrixAdd among them).
+//! 7. [`verify`] — the differential rectify-verifier built on the
+//!    interpreter: original full launch vs rectified slice-by-slice
+//!    launches on seeded memory, bit-compared;
+//! 8. [`samples`] — PTX sources of representative kernels (the Fig. 3
+//!    MatrixAdd among them, plus deliberately slicing-unsafe ones).
 
+pub mod analyze;
 pub mod ast;
 pub mod emit;
 pub mod interp;
@@ -34,11 +44,14 @@ pub mod liveness;
 pub mod parser;
 pub mod rectify;
 pub mod samples;
+pub mod verify;
 
+pub use analyze::{analyze_kernel, analyze_ptx, KernelAnalysis, SliceVerdict, UnsafeReason};
 pub use ast::{Inst, Kernel, Operand, Reg, Special, Type};
 pub use interp::{launch, Machine};
-pub use parser::parse_kernel;
+pub use parser::{parse_kernel, parse_kernel_lines};
 pub use rectify::{rectify, RectifyOptions};
+pub use verify::{rectify_differential, verify_rectify};
 
 use anyhow::Result;
 

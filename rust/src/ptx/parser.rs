@@ -3,16 +3,23 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::ast::*;
-use super::lexer::{tokenize, Tok};
+use super::lexer::{tokenize_spanned, Tok};
 
 struct P {
     toks: Vec<Tok>,
+    /// Source line of each token, parallel to `toks`.
+    lines: Vec<u32>,
     i: usize,
 }
 
 impl P {
     fn peek(&self) -> Option<&Tok> {
         self.toks.get(self.i)
+    }
+
+    /// Source line of the next token (0 past EOF).
+    fn line(&self) -> u32 {
+        self.lines.get(self.i).copied().unwrap_or(0)
     }
 
     fn next(&mut self) -> Result<Tok> {
@@ -109,8 +116,18 @@ impl P {
 /// Parse a single `.entry` kernel out of PTX text. Headers like
 /// `.version`/`.target`/`.address_size` are tolerated and skipped.
 pub fn parse_kernel(src: &str) -> Result<Kernel> {
-    let toks = tokenize(src).context("tokenizing")?;
-    let mut p = P { toks, i: 0 };
+    Ok(parse_kernel_lines(src)?.0)
+}
+
+/// [`parse_kernel`], additionally returning the 1-based source line of
+/// each body instruction (parallel to `Kernel::body`). The analyzer
+/// threads these into its unsafe-site diagnostics; `Kernel` itself
+/// stays position-free so structural equality (round-trip tests, the
+/// rectifier) is unaffected by formatting.
+pub fn parse_kernel_lines(src: &str) -> Result<(Kernel, Vec<u32>)> {
+    let spanned = tokenize_spanned(src).context("tokenizing")?;
+    let (toks, lines): (Vec<Tok>, Vec<u32>) = spanned.into_iter().unzip();
+    let mut p = P { toks, lines, i: 0 };
 
     // Skip module headers until `.entry` (optionally `.visible`).
     loop {
@@ -171,6 +188,7 @@ pub fn parse_kernel(src: &str) -> Result<Kernel> {
 
     // Body.
     let mut body = Vec::new();
+    let mut body_lines = Vec::new();
     loop {
         match p.peek() {
             Some(Tok::RBrace) => {
@@ -180,10 +198,12 @@ pub fn parse_kernel(src: &str) -> Result<Kernel> {
             None => bail!("unterminated kernel body"),
             _ => {}
         }
+        let line = p.line();
         body.push(parse_inst(&mut p)?);
+        body_lines.push(line);
     }
 
-    Ok(Kernel { name, params, regs, body })
+    Ok((Kernel { name, params, regs, body }, body_lines))
 }
 
 fn parse_inst(p: &mut P) -> Result<Inst> {
@@ -328,6 +348,67 @@ fn parse_inst(p: &mut P) -> Result<Inst> {
             let ty = Type::from_suffix(&d).ok_or_else(|| anyhow!("unknown type .{d}"))?;
             bin_rest(p, op, ty)?
         }
+        "bar" => {
+            let d = p.directive()?;
+            if d != "sync" {
+                bail!("only bar.sync is supported in this subset, got bar.{d}");
+            }
+            // The barrier id operand is optional in source; emit always
+            // prints it.
+            let id = match p.peek() {
+                Some(&Tok::Int(v)) => {
+                    p.i += 1;
+                    v as u32
+                }
+                _ => 0,
+            };
+            Inst::Bar { id }
+        }
+        "atom" | "red" => {
+            let space = p.directive()?;
+            if space != "global" {
+                bail!("only global-space atomics are supported, got {mn}.{space}");
+            }
+            let opd = p.directive()?;
+            let op = AtomOp::from_name(&opd).ok_or_else(|| anyhow!("unknown atomic op .{opd}"))?;
+            // Real PTX spells bitwise atomics .b32; map to u32 like the
+            // integer ALU arms do.
+            let mut d = p.directive()?;
+            if d == "b32" {
+                d = "u32".into();
+            }
+            let ty = Type::from_suffix(&d).ok_or_else(|| anyhow!("unknown type .{d}"))?;
+            if mn == "atom" {
+                let dst = p.reg()?;
+                p.expect(&Tok::Comma)?;
+                let addr = p.addr()?;
+                p.expect(&Tok::Comma)?;
+                let src = p.operand()?;
+                Inst::Atom { op, ty, dst, addr, src }
+            } else {
+                let addr = p.addr()?;
+                p.expect(&Tok::Comma)?;
+                let src = p.operand()?;
+                Inst::Red { op, ty, addr, src }
+            }
+        }
+        "membar" | "fence" => {
+            // `membar.<scope>`; `fence` carries ordering + scope
+            // directives (`fence.acq_rel.gpu`) — the last recognizable
+            // scope directive wins, other directives are tolerated.
+            let mut scope = None;
+            loop {
+                let Some(Tok::Directive(d)) = p.peek() else { break };
+                let d = d.clone();
+                p.i += 1;
+                if let Some(s) = MemScope::from_name(&d) {
+                    scope = Some(s);
+                }
+            }
+            let scope =
+                scope.ok_or_else(|| anyhow!("{mn} without a recognized memory scope"))?;
+            Inst::Membar(scope)
+        }
         other => bail!("unknown mnemonic {other}"),
     };
     p.expect(&Tok::Semi)?;
@@ -411,5 +492,69 @@ mod tests {
     fn rejects_garbage() {
         assert!(parse_kernel("not ptx at all").is_err());
         assert!(parse_kernel(".entry t () { frobnicate.u32 %r1; }").is_err());
+    }
+
+    #[test]
+    fn parses_barrier_with_and_without_id() {
+        let src = ".entry t () { bar.sync 0; bar.sync; ret; }";
+        let k = parse_kernel(src).unwrap();
+        assert_eq!(k.body[0], Inst::Bar { id: 0 });
+        assert_eq!(k.body[1], Inst::Bar { id: 0 });
+        assert!(parse_kernel(".entry t () { bar.arrive 0; ret; }").is_err());
+    }
+
+    #[test]
+    fn parses_atom_and_red() {
+        let src = ".entry t () { .reg .u32 %r<2>; .reg .u64 %rd0; \
+                   atom.global.add.u32 %r1, [%rd0+4], %r0; \
+                   red.global.max.u32 [%rd0], 7; ret; }";
+        let k = parse_kernel(src).unwrap();
+        assert!(matches!(
+            &k.body[0],
+            Inst::Atom { op: AtomOp::Add, ty: Type::U32, dst, addr, .. }
+                if dst.0 == "r1" && addr.offset == 4
+        ));
+        assert!(matches!(&k.body[1], Inst::Red { op: AtomOp::Max, .. }));
+        // b32 spelling maps to u32, like the ALU arms.
+        let k = parse_kernel(".entry t () { .reg .u32 %r0; .reg .u64 %rd0; \
+                              atom.global.and.b32 %r0, [%rd0], 15; ret; }")
+            .unwrap();
+        assert!(matches!(&k.body[0], Inst::Atom { op: AtomOp::And, ty: Type::U32, .. }));
+        // Only the global space is modeled.
+        assert!(parse_kernel(".entry t () { .reg .u32 %r0; \
+                              atom.shared.add.u32 %r0, [%r0], 1; ret; }")
+            .is_err());
+    }
+
+    #[test]
+    fn parses_membar_and_fence_scopes() {
+        let src = ".entry t () { membar.cta; membar.gl; membar.sys; fence.acq_rel.gpu; ret; }";
+        let k = parse_kernel(src).unwrap();
+        assert_eq!(k.body[0], Inst::Membar(MemScope::Cta));
+        assert_eq!(k.body[1], Inst::Membar(MemScope::Gl));
+        assert_eq!(k.body[2], Inst::Membar(MemScope::Sys));
+        assert_eq!(k.body[3], Inst::Membar(MemScope::Gl));
+        assert!(parse_kernel(".entry t () { membar.cluster; ret; }").is_err());
+    }
+
+    #[test]
+    fn body_lines_are_parallel_and_point_at_sources() {
+        let src = ".entry t () {\n.reg .u32 %r0;\nmov.u32 %r0, 1;\n\nL0:\nret;\n}";
+        let (k, lines) = parse_kernel_lines(src).unwrap();
+        assert_eq!(k.body.len(), lines.len());
+        // mov on line 3, label on line 5, ret on line 6.
+        assert_eq!(lines, vec![3, 5, 6]);
+    }
+
+    #[test]
+    fn all_samples_have_line_info() {
+        for (name, src) in samples::all() {
+            let (k, lines) = parse_kernel_lines(src).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(k.body.len(), lines.len(), "{name}");
+            assert!(lines.iter().all(|&l| l > 0), "{name}: zero line");
+            // Lines are non-decreasing: the parser walks the source
+            // top to bottom.
+            assert!(lines.windows(2).all(|w| w[0] <= w[1]), "{name}: lines not monotone");
+        }
     }
 }

@@ -166,6 +166,109 @@ DONE:
 }
 "#;
 
+/// Bucketed count (histogram flavour): bins[data[i] & 15] += 1 via a
+/// global atomic. The analyzer must classify this `Unsliceable`: with
+/// slices launched as separate kernels, a co-runner's epoch can
+/// observe a partially accumulated bin.
+pub const HISTOGRAM: &str = r#"
+.visible .entry histogram (
+    .param .u64 pData,
+    .param .u64 pBins
+) {
+    .reg .u32 %r<7>;
+    .reg .u64 %rd<5>;
+
+    ld.param.u64 %rd0, [pData];
+    ld.param.u64 %rd1, [pBins];
+
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mov.u32 %r2, %tid.x;
+    mad.lo.u32 %r3, %r0, %r1, 0;
+    add.u32 %r3, %r3, %r2;
+
+    mul.wide.u32 %rd2, %r3, 4;
+    add.u64 %rd3, %rd0, %rd2;
+    ld.global.u32 %r4, [%rd3];
+    and.b32 %r5, %r4, 15;
+    mul.wide.u32 %rd4, %r5, 4;
+    add.u64 %rd4, %rd1, %rd4;
+    atom.global.add.u32 %r6, [%rd4], 1;
+    ret;
+}
+"#;
+
+/// Grid-tail special case: every thread writes its index, and the
+/// last block (detected by comparing `%ctaid.x` against
+/// `%nctaid.x - 1`) additionally writes a completion flag. The branch
+/// predicate data-flows from `%nctaid`, so slicing (which launches
+/// with a smaller grid) would move the "last block" — the analyzer
+/// must classify this `Unsliceable`.
+pub const TAIL_FLAG: &str = r#"
+.visible .entry tail_flag (
+    .param .u64 pOut
+) {
+    .reg .u32 %r<7>;
+    .reg .u64 %rd<3>;
+    .reg .pred %p<1>;
+
+    ld.param.u64 %rd0, [pOut];
+
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mov.u32 %r2, %tid.x;
+    mad.lo.u32 %r3, %r0, %r1, 0;
+    add.u32 %r3, %r3, %r2;
+
+    mul.wide.u32 %rd1, %r3, 4;
+    add.u64 %rd2, %rd0, %rd1;
+    st.global.u32 [%rd2], %r3;
+
+    // Only the last block writes the flag.
+    sub.u32 %r4, %nctaid.x, 1;
+    setp.ne.u32 %p0, %r0, %r4;
+    @%p0 bra DONE;
+    mov.u32 %r5, 1;
+    st.global.u32 [%rd2+4096], %r5;
+DONE:
+    ret;
+}
+"#;
+
+/// Block-local barrier use: load, `bar.sync`, then a pure per-thread
+/// store. The barrier is uniform (no divergent branch reaches it) and
+/// block-scoped, so this stays `SliceableWithRectify` — the analyzer
+/// must not confuse block-level synchronization with grid-level
+/// communication.
+pub const BLOCK_BARRIER: &str = r#"
+.visible .entry block_barrier (
+    .param .u64 pIn,
+    .param .u64 pOut
+) {
+    .reg .u32 %r<6>;
+    .reg .u64 %rd<5>;
+
+    ld.param.u64 %rd0, [pIn];
+    ld.param.u64 %rd1, [pOut];
+
+    mov.u32 %r0, %ctaid.x;
+    mov.u32 %r1, %ntid.x;
+    mov.u32 %r2, %tid.x;
+    mad.lo.u32 %r3, %r0, %r1, 0;
+    add.u32 %r3, %r3, %r2;
+
+    mul.wide.u32 %rd2, %r3, 4;
+    add.u64 %rd3, %rd0, %rd2;
+    ld.global.u32 %r4, [%rd3];
+    bar.sync 0;
+    membar.cta;
+    add.u32 %r5, %r4, %r3;
+    add.u64 %rd4, %rd1, %rd2;
+    st.global.u32 [%rd4], %r5;
+    ret;
+}
+"#;
+
 /// All samples with names, for sweep tests.
 pub fn all() -> Vec<(&'static str, &'static str)> {
     vec![
@@ -173,5 +276,8 @@ pub fn all() -> Vec<(&'static str, &'static str)> {
         ("saxpy", SAXPY),
         ("gather", GATHER),
         ("mix_rounds", MIX_ROUNDS),
+        ("histogram", HISTOGRAM),
+        ("tail_flag", TAIL_FLAG),
+        ("block_barrier", BLOCK_BARRIER),
     ]
 }

@@ -1,0 +1,183 @@
+//! Differential rectify-verifier: the dynamic oracle paired with the
+//! static [`super::analyze`] pass.
+//!
+//! For a kernel `k`, run the ORIGINAL PTX over a full grid and the
+//! rectified PTX slice-by-slice (several slice sizes, several grid
+//! shapes) on identically seeded memory, and assert the final memory
+//! images are bit-identical. Arguments are synthesized from the
+//! parameter types, so the check needs no per-kernel knowledge and
+//! covers every sample in [`super::samples`] plus any user-supplied
+//! kernel.
+//!
+//! Scope: the interpreter executes threads sequentially, so this
+//! oracle proves the *index arithmetic* of rectification (offsets,
+//! wrap-around, `%nctaid` substitution) — it cannot observe the
+//! cross-slice interleavings that make atomics/fences unsafe. Those
+//! are the static analyzer's verdict to make; an `Unsliceable` kernel
+//! passing this oracle is expected, not a contradiction.
+
+use anyhow::{bail, Context, Result};
+
+use super::analyze::infer_dims;
+use super::ast::{Kernel, Type};
+use super::interp::{launch, Args, LaunchConfig, Machine};
+use super::rectify::{rectify, RectifyOptions};
+
+/// Global memory size for differential runs.
+const MEM_BYTES: usize = 256 * 1024;
+/// Stride between synthesized pointer arguments: each u64 parameter
+/// gets its own 32 KiB region (region 0 is left for index data read
+/// via small loaded values).
+const REGION: usize = 32 * 1024;
+
+/// Scalar value for synthesized u32/s32 parameters: large enough that
+/// bounds-checked kernels keep most threads active and loop kernels
+/// iterate a meaningful number of rounds, small enough to terminate
+/// instantly.
+const SCALAR: u64 = 64;
+
+/// Memory image both sides start from: every u32 word is a fixed
+/// pseudo-random value *bounded below 997*, so kernels that use loaded
+/// data as an index (gather) stay comfortably inside [`MEM_BYTES`].
+fn seeded_machine() -> Machine {
+    let mut m = Machine::new(MEM_BYTES);
+    let words: Vec<u32> =
+        (0..(MEM_BYTES / 4) as u32).map(|i| i.wrapping_mul(2_654_435_761) % 997).collect();
+    m.write_u32s(0, &words);
+    m
+}
+
+/// Synthesize one argument per kernel parameter from its type: u64
+/// params are treated as pointers and handed disjoint [`REGION`]-sized
+/// areas, integer scalars get [`SCALAR`], f32 scalars get 1.5.
+pub fn synth_args(k: &Kernel) -> Args {
+    let mut ptrs = 0u64;
+    k.params
+        .iter()
+        .map(|(_, ty)| match ty {
+            Type::U64 => {
+                ptrs += 1;
+                ptrs * REGION as u64
+            }
+            Type::U32 | Type::S32 => SCALAR,
+            Type::F32 => 1.5f32.to_bits() as u64,
+            Type::Pred => 0,
+        })
+        .collect()
+}
+
+/// Differential check of `sliced` (a rectified form of `k`) against
+/// `k` itself: compare a whole-grid launch of the original with
+/// slice-by-slice launches of the rectified kernel (slice sizes 1, 2
+/// and 3 blocks over two grid shapes). Returns the number of
+/// (grid, slice-size) configurations compared; errors on the first
+/// byte-level divergence. Exposed separately from [`verify_rectify`]
+/// so tests can feed a deliberately broken transform and watch it
+/// fail.
+pub fn rectify_differential(k: &Kernel, sliced: &Kernel, dims: u32) -> Result<usize> {
+    let args = synth_args(k);
+    let init = seeded_machine();
+    let grids: &[(u32, u32)] = if dims == 2 { &[(3, 2), (4, 4)] } else { &[(5, 1), (8, 1)] };
+    let block = if dims == 2 { (4, 4) } else { (8, 1) };
+    let mut compared = 0usize;
+    for &grid in grids {
+        // Reference: one full launch of the ORIGINAL kernel.
+        let mut whole = init.clone();
+        launch(k, LaunchConfig { grid, block }, &args, &mut whole)
+            .with_context(|| format!("{}: reference launch grid {grid:?}", k.name))?;
+        for slice_blocks in [1u32, 2, 3] {
+            let mut m = init.clone();
+            let total = grid.0 * grid.1;
+            let mut next = 0u32;
+            while next < total {
+                let this = slice_blocks.min(total - next);
+                let mut sargs = args.clone();
+                if dims == 2 {
+                    // Linearized offset; the rectifier's Fig. 3c wrap
+                    // loop folds x-overflow into y.
+                    sargs.extend([
+                        (next % grid.0) as u64,
+                        grid.0 as u64,
+                        (next / grid.0) as u64,
+                        grid.1 as u64,
+                    ]);
+                } else {
+                    sargs.extend([next as u64, grid.0 as u64]);
+                }
+                launch(sliced, LaunchConfig { grid: (this, 1), block }, &sargs, &mut m)
+                    .with_context(|| {
+                        format!("{}: slice of {this} blocks at offset {next}", k.name)
+                    })?;
+                next += this;
+            }
+            if m.memory != whole.memory {
+                let at =
+                    m.memory.iter().zip(&whole.memory).position(|(a, b)| a != b).unwrap_or(0);
+                bail!(
+                    "{}: grid {grid:?}, slice {slice_blocks}: sliced memory diverges \
+                     from the reference at byte {at}",
+                    k.name
+                );
+            }
+            compared += 1;
+        }
+    }
+    Ok(compared)
+}
+
+/// Rectify `k` (dimensionality inferred from its special-register
+/// reads) and differentially verify the transform. Returns the number
+/// of configurations compared.
+pub fn verify_rectify(k: &Kernel) -> Result<usize> {
+    let dims = infer_dims(k);
+    let opts = if dims == 2 { RectifyOptions::two_d() } else { RectifyOptions::one_d() };
+    rectify_differential(k, &rectify(k, &opts), dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::ast::{BinOp, Inst, Operand, Special};
+    use crate::ptx::parser::parse_kernel;
+    use crate::ptx::samples;
+
+    #[test]
+    fn saxpy_and_matrix_add_verify() {
+        for src in [samples::SAXPY, samples::MATRIX_ADD] {
+            let k = parse_kernel(src).unwrap();
+            let compared = verify_rectify(&k).unwrap();
+            assert_eq!(compared, 6, "{}: 2 grids x 3 slice sizes", k.name);
+        }
+    }
+
+    #[test]
+    fn synthesized_pointers_are_disjoint_regions() {
+        let k = parse_kernel(samples::GATHER).unwrap();
+        let args = synth_args(&k);
+        assert_eq!(args, vec![32 * 1024, 64 * 1024, 96 * 1024]);
+    }
+
+    #[test]
+    fn tampered_transform_is_caught() {
+        let k = parse_kernel(samples::SAXPY).unwrap();
+        let mut bad = rectify(&k, &RectifyOptions::one_d());
+        // Sabotage the prologue's index rebase: rx = off - ctaid
+        // instead of off + ctaid. Slices of 1 block happen to survive
+        // (ctaid is 0), so the multi-size sweep is what catches it.
+        let rebase = bad
+            .body
+            .iter_mut()
+            .find(|i| {
+                matches!(
+                    i,
+                    Inst::Bin { op: BinOp::Add, b: Operand::Special(Special::CtaIdX), .. }
+                )
+            })
+            .expect("rectified saxpy has the ctaid rebase add");
+        if let Inst::Bin { op, .. } = rebase {
+            *op = BinOp::Sub;
+        }
+        let err = rectify_differential(&k, &bad, 1).unwrap_err();
+        assert!(err.to_string().contains("diverges"), "{err:#}");
+    }
+}

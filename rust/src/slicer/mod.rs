@@ -91,6 +91,24 @@ impl SliceSizeCache {
         self.map.insert(key, s);
         s
     }
+
+    /// [`SliceSizeCache::get`] behind the analyzer's safety gate: an
+    /// unsliceable kernel's "slice" is its whole grid, bypassing both
+    /// the sweep and the cache (no point memoizing a constant, and the
+    /// sweep's simulated slicing would be meaningless for a kernel
+    /// that must never be sliced).
+    pub fn get_gated(
+        &self,
+        gpu: &GpuConfig,
+        spec: &KernelSpec,
+        budget_pct: f64,
+        sliceable: bool,
+    ) -> u32 {
+        if !sliceable {
+            return spec.grid_blocks;
+        }
+        self.get(gpu, spec, budget_pct)
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +156,18 @@ mod tests {
         let cache = SliceSizeCache::new();
         let spec = BenchmarkApp::ST.spec();
         assert_eq!(cache.get(&gpu, &spec, 2.0), cache.get(&gpu, &spec, 2.0));
+    }
+
+    #[test]
+    fn gated_lookup_pins_whole_grid_for_unsliceable() {
+        let gpu = GpuConfig::c2050();
+        let cache = SliceSizeCache::new();
+        let spec = BenchmarkApp::TEA.spec();
+        // Unsliceable: whole grid, regardless of budget, and nothing
+        // is cached that a later sliceable query could pick up.
+        assert_eq!(cache.get_gated(&gpu, &spec, 1e9, false), spec.grid_blocks);
+        let open = cache.get_gated(&gpu, &spec, 1e9, true);
+        assert_eq!(open, gpu.num_sms, "gate must not poison the cache");
     }
 
     #[test]

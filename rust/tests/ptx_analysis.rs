@@ -1,0 +1,189 @@
+//! Integration tests for the PTX slice-safety analyzer and its wiring
+//! into the scheduler: text round-trips, liveness soundness, pinned
+//! sample verdicts, the differential rectify-verifier, and the
+//! end-to-end guarantee that an `Unsliceable` kernel is never
+//! dispatched sliced or co-scheduled.
+
+use std::collections::HashMap;
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::{run_kernelet, Coordinator};
+use kernelet::kernel::{BenchmarkApp, KernelInstance};
+use kernelet::ptx::ast::Kernel;
+use kernelet::ptx::liveness::{build_cfg, liveness};
+use kernelet::ptx::{
+    analyze_ptx, emit, parse_kernel, rectify, samples, verify_rectify, RectifyOptions,
+    SliceVerdict, UnsafeReason,
+};
+use kernelet::workload::Stream;
+
+/// Kernel equality modulo register-declaration order: emit groups
+/// `.reg` lines by type, so a parse -> emit -> parse trip may reorder
+/// declarations without changing meaning.
+fn assert_same_kernel(a: &Kernel, b: &Kernel, ctx: &str) {
+    assert_eq!(a.name, b.name, "{ctx}: name");
+    assert_eq!(a.params, b.params, "{ctx}: params");
+    assert_eq!(a.body, b.body, "{ctx}: body");
+    let mut ra = a.regs.clone();
+    let mut rb = b.regs.clone();
+    ra.sort_by(|x, y| x.0.cmp(&y.0));
+    rb.sort_by(|x, y| x.0.cmp(&y.0));
+    assert_eq!(ra, rb, "{ctx}: register declarations");
+}
+
+/// Parse -> emit -> parse is the identity (modulo register grouping)
+/// for every sample, and for every rectified form of every sample —
+/// the property that makes "hand the rewritten PTX back to the driver"
+/// safe.
+#[test]
+fn parse_emit_parse_roundtrip_every_sample() {
+    for (name, src) in samples::all() {
+        let k = parse_kernel(src).unwrap();
+        let re = parse_kernel(&emit::emit(&k)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_same_kernel(&k, &re, name);
+        for (dims, opts) in [(1, RectifyOptions::one_d()), (2, RectifyOptions::two_d())] {
+            let s = rectify(&k, &opts);
+            let re = parse_kernel(&emit::emit(&s))
+                .unwrap_or_else(|e| panic!("{name} rectified {dims}-D: {e}"));
+            assert_same_kernel(&s, &re, &format!("{name} rectified {dims}-D"));
+        }
+    }
+}
+
+/// Liveness soundness: a register read by an instruction must be live
+/// immediately before it on every path that reaches it — within a
+/// block that is the live-out of the previous instruction, and across
+/// a CFG edge it is the live-out of the predecessor block's last
+/// instruction. This exercises the fixpoint propagation, not just the
+/// local transfer function.
+#[test]
+fn liveness_covers_every_use_on_every_path() {
+    for (name, src) in samples::all() {
+        let k = parse_kernel(src).unwrap();
+        let live_out = liveness(&k.body);
+        let cfg = build_cfg(&k.body);
+        for block in &cfg.blocks {
+            // Within-block: uses of body[i] are live out of body[i-1].
+            for i in block.range.clone().skip(1) {
+                for u in k.body[i].uses() {
+                    assert!(
+                        live_out[i - 1].contains(u),
+                        "{name}: use of {u:?} at inst {i} not live out of inst {}",
+                        i - 1
+                    );
+                }
+            }
+            // Cross-edge: uses of each successor's first instruction
+            // are live out of this block's last instruction.
+            if block.range.is_empty() {
+                continue;
+            }
+            let last = block.range.end - 1;
+            for &s in &block.succs {
+                let srange = &cfg.blocks[s].range;
+                if srange.is_empty() {
+                    continue;
+                }
+                for u in k.body[srange.start].uses() {
+                    assert!(
+                        live_out[last].contains(u),
+                        "{name}: use of {u:?} at block-{s} entry not live across \
+                         the edge from inst {last}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every sample kernel has a pinned analyzer verdict. These are the
+/// ground-truth classifications the CLI table and the scheduler gate
+/// are built on; a verdict drift here is a behaviour change, not a
+/// refactor.
+#[test]
+fn sample_verdicts_are_pinned() {
+    let expected: &[(&str, SliceVerdict)] = &[
+        ("matrix_add", SliceVerdict::SliceableWithRectify),
+        ("saxpy", SliceVerdict::SliceableWithRectify),
+        ("gather", SliceVerdict::SliceableWithRectify),
+        ("mix_rounds", SliceVerdict::SliceableWithRectify),
+        ("histogram", SliceVerdict::Unsliceable(UnsafeReason::GlobalAtomic)),
+        ("tail_flag", SliceVerdict::Unsliceable(UnsafeReason::GridDependentBranch)),
+        ("block_barrier", SliceVerdict::SliceableWithRectify),
+    ];
+    let mut seen = HashMap::new();
+    for (name, src) in samples::all() {
+        seen.insert(name, analyze_ptx(src).unwrap().verdict);
+    }
+    assert_eq!(seen.len(), expected.len(), "sample set changed; re-pin verdicts");
+    for (name, want) in expected {
+        assert_eq!(seen[name], *want, "{name}: verdict drifted");
+    }
+}
+
+/// The differential rectify-verifier proves bit-identical memory for
+/// every sample under the sequential interpreter (2 grids x 3 slice
+/// sizes each). The unsliceable samples pass too — sequential
+/// execution hides their concurrency hazards, which is exactly why
+/// the static verdict, not this oracle, gates the scheduler.
+#[test]
+fn rectify_verifier_covers_every_sample() {
+    for (name, src) in samples::all() {
+        let k = parse_kernel(src).unwrap();
+        let compared = verify_rectify(&k).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(compared, 6, "{name}: expected 2 grids x 3 slice sizes");
+    }
+}
+
+/// End-to-end scheduler differential: with no analysis registered a
+/// TEA+PC stream co-schedules (TEA appears in a paired slice record);
+/// after registering an `Unsliceable` analysis under TEA's name, the
+/// same stream never dispatches TEA sliced or paired — every TEA
+/// record is a solo whole-grid launch.
+#[test]
+fn scheduler_never_dispatches_unsliceable_sliced() {
+    let gpu = GpuConfig::c2050();
+    let stream = Stream {
+        instances: vec![
+            KernelInstance::new(0, BenchmarkApp::TEA.spec(), 0.0),
+            KernelInstance::new(1, BenchmarkApp::PC.spec(), 0.0),
+        ],
+    };
+    let tea_grid = BenchmarkApp::TEA.spec().grid_blocks;
+
+    // Ungated: the pair is profitable (pinned by the greedy tests), so
+    // TEA must show up co-scheduled.
+    let coord = Coordinator::new(&gpu);
+    let r = run_kernelet(&coord, &stream);
+    assert_eq!(r.kernels_completed, 2);
+    let tea_paired = r
+        .slice_trace
+        .iter()
+        .any(|s| (s.k1 == 0 && s.k2.is_some()) || s.k2.map_or(false, |(id, _)| id == 0));
+    assert!(tea_paired, "ungated run should co-schedule TEA with PC");
+
+    // Gated: an Unsliceable verdict registered under TEA's name. The
+    // verdict itself comes from the analyzer (run on the global-atomic
+    // histogram sample), not hand-rolled.
+    let gated = Coordinator::new(&gpu);
+    let mut analysis = analyze_ptx(samples::HISTOGRAM).unwrap();
+    assert!(!analysis.sliceable());
+    analysis.name = "TEA".to_string();
+    gated.register_analysis("TEA", analysis);
+    let r = run_kernelet(&gated, &stream);
+    assert_eq!(r.kernels_completed, 2);
+    for s in &r.slice_trace {
+        if s.k1 == 0 {
+            assert_eq!(s.k2, None, "unsliceable TEA must never be paired");
+            assert_eq!(
+                s.blocks1, tea_grid,
+                "unsliceable TEA must dispatch its whole grid in one launch"
+            );
+        }
+        if let Some((id, _)) = s.k2 {
+            assert_ne!(id, 0, "unsliceable TEA must never appear as a partner slice");
+        }
+    }
+    let tea_records = r.slice_trace.iter().filter(|s| s.k1 == 0).count();
+    assert_eq!(tea_records, 1, "whole-grid dispatch means exactly one TEA record");
+}

@@ -42,6 +42,15 @@ fn args_for(name: &str, grid: (u32, u32), block: (u32, u32), threads: usize) -> 
         "saxpy" => vec![16 * 1024, 32 * 1024, (1.5f32).to_bits() as u64, threads as u64],
         "gather" => vec![0, 16 * 1024, 32 * 1024],
         "mix_rounds" => vec![0, 5],
+        // The slicing-unsafe samples still pass the *sequential*
+        // differential: the interpreter runs blocks in the same global
+        // order either way, and rectification substitutes the original
+        // grid extent for %nctaid. This is exactly why the static
+        // analyzer, not this oracle, is the authority on their
+        // verdicts (see ptx::analyze).
+        "histogram" => vec![0, 48 * 1024],
+        "tail_flag" => vec![48 * 1024],
+        "block_barrier" => vec![0, 48 * 1024],
         other => panic!("unknown sample {other}"),
     }
 }

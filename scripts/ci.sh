@@ -12,6 +12,16 @@ set -euo pipefail
 
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 
+# Toolchain-free static lint first: it needs only python3, so it runs
+# (and can fail the pipeline) even where cargo is absent.
+if command -v python3 >/dev/null 2>&1; then
+  echo "==> lint.py (self-test + rust tree)"
+  python3 "$SCRIPT_DIR/lint.py" --self-test
+  python3 "$SCRIPT_DIR/lint.py"
+else
+  echo "warning: python3 unavailable — skipping static lint" >&2
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
   echo "error: cargo not found in PATH — this pipeline needs a Rust toolchain." >&2
   echo "       Install one via https://rustup.rs or run inside the CI image." >&2
@@ -92,6 +102,14 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "==> cargo build --release"
 cargo build --release
+
+echo "==> kernelet analyze --samples (slice-safety smoke)"
+analyze_out=$(./target/release/kernelet analyze --samples)
+echo "$analyze_out"
+echo "$analyze_out" | grep -Eq 'histogram +UNSLICEABLE\(global-atomic\)' \
+  || { echo "analyze smoke: histogram not flagged UNSLICEABLE(global-atomic)"; exit 1; }
+echo "$analyze_out" | grep -Eq 'matrix_add +sliceable-with-rectify' \
+  || { echo "analyze smoke: matrix_add not sliceable-with-rectify"; exit 1; }
 
 echo "==> cargo test -q"
 run_tests

@@ -1,0 +1,300 @@
+#!/usr/bin/env python3
+"""Toolchain-free static lint for the Rust tree.
+
+CI runs `cargo fmt/clippy/rustdoc` when a toolchain exists, but the
+repo must also be checkable from containers that only have python3
+(the same constraint behind `check_bench.py --schema-only`). This
+script covers the subset of those gates that can be checked purely
+textually, stdlib only:
+
+1. **Rustdoc coverage** — every file starts with a `//!` module doc,
+   and every `pub` item (`fn`, `struct`, `enum`, `trait`, `const`,
+   `static`, `type`, `union`) is preceded by a `///` doc comment
+   (attributes in between are fine). `pub use` / `pub mod` re-exports
+   and `pub(crate)`/`pub(super)` items are exempt, as are items inside
+   `#[cfg(test)]` modules. This mirrors the `RUSTDOCFLAGS="-D
+   warnings"` + `missing_docs` bar the full pipeline enforces.
+2. **Delimiter balance** — `{}`, `()`, `[]` must balance per file,
+   counted on a comment/string/char-literal-stripped view of the
+   source (so `"}"`, `'{'` and commented braces don't miscount). An
+   imbalance is almost always a truncated or mis-merged file.
+3. **Stray debug macros** — `dbg!(`, `todo!(` and `unimplemented!(`
+   never belong in committed code (clippy would reject the first;
+   the others are unfinished work).
+
+Usage:
+    lint.py [--root DIR] [--self-test]
+
+`--self-test` runs the checkers against embedded good/bad snippets and
+exits non-zero if any bad snippet passes or any good snippet fails —
+the same trust-but-verify pattern as `check_bench.py`'s schema
+self-test. Exit status 0 = clean, 1 = findings (or self-test failure).
+"""
+
+import argparse
+import pathlib
+import re
+import sys
+
+PUB_ITEM = re.compile(
+    r"^\s*pub\s+(?:unsafe\s+)?(?:async\s+)?(?:extern\s+\"[^\"]*\"\s+)?"
+    r"(?:fn|struct|enum|trait|const|static|type|union)\b"
+)
+STRAY_MACROS = ("dbg!(", "todo!(", "unimplemented!(")
+
+
+def strip_code(src):
+    """Return `src` with comments, strings and char literals blanked.
+
+    Preserves line structure (newlines survive) so findings can still
+    be reported by line number. Handles nested `/* */`, raw strings
+    (`r"..."`, `r#"..."#`), escapes inside strings, and the ambiguity
+    between char literals and lifetimes (`'a` has no closing quote).
+    """
+    out = []
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        two = src[i : i + 2]
+        if two == "//":
+            while i < n and src[i] != "\n":
+                i += 1
+        elif two == "/*":
+            depth = 1
+            i += 2
+            while i < n and depth:
+                if src[i : i + 2] == "/*":
+                    depth += 1
+                    i += 2
+                elif src[i : i + 2] == "*/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        out.append("\n")
+                    i += 1
+        elif c == '"' or (c == "r" and re.match(r'r#*"', src[i:])):
+            if c == "r":
+                hashes = 0
+                i += 1
+                while src[i] == "#":
+                    hashes += 1
+                    i += 1
+                i += 1  # opening quote
+                close = '"' + "#" * hashes
+                end = src.find(close, i)
+                end = n if end < 0 else end + len(close)
+                out.extend("\n" * src.count("\n", i, end))
+                i = end
+            else:
+                i += 1
+                while i < n and src[i] != '"':
+                    if src[i] == "\n":
+                        out.append("\n")
+                    i += 2 if src[i] == "\\" else 1
+                i += 1
+        elif c == "'":
+            # Char literal iff a closing quote follows within a short
+            # window ('x', '\n', '\u{1F600}'); otherwise a lifetime.
+            m = re.match(r"'(\\u\{[0-9a-fA-F]{1,6}\}|\\.|[^\\'])'", src[i:])
+            i += m.end() if m else 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def check_balance(path, code, findings):
+    pairs = {"}": "{", ")": "(", "]": "["}
+    stack = []
+    line = 1
+    for c in code:
+        if c == "\n":
+            line += 1
+        elif c in "{([":
+            stack.append((c, line))
+        elif c in "})]":
+            if not stack or stack[-1][0] != pairs[c]:
+                findings.append(f"{path}:{line}: unbalanced '{c}'")
+                return
+            stack.pop()
+    if stack:
+        c, line = stack[-1]
+        findings.append(f"{path}:{line}: unclosed '{c}'")
+
+
+def check_stray_macros(path, code, findings):
+    for lineno, text in enumerate(code.splitlines(), 1):
+        for m in STRAY_MACROS:
+            if m in text:
+                findings.append(f"{path}:{lineno}: stray {m[:-1]}")
+
+
+def test_mod_ranges(lines):
+    """Line ranges (1-based, inclusive) of `#[cfg(test)] mod` bodies."""
+    ranges = []
+    for idx, text in enumerate(lines):
+        if text.strip() != "#[cfg(test)]":
+            continue
+        j = idx + 1
+        while j < len(lines) and lines[j].strip().startswith("#["):
+            j += 1
+        if j >= len(lines) or not re.match(r"\s*(pub\s+)?mod\b", lines[j]):
+            continue
+        depth = 0
+        for k in range(j, len(lines)):
+            depth += lines[k].count("{") - lines[k].count("}")
+            if depth == 0 and "{" in "".join(lines[j : k + 1]):
+                ranges.append((idx + 1, k + 1))
+                break
+    return ranges
+
+
+def check_doc_coverage(path, src, findings):
+    lines = src.splitlines()
+    if not lines or not lines[0].startswith("//!"):
+        findings.append(f"{path}:1: missing //! module doc on line 1")
+    stripped = strip_code(src).splitlines()
+    # Pad: strip_code drops trailing newline-less remainders evenly.
+    while len(stripped) < len(lines):
+        stripped.append("")
+    skip = test_mod_ranges(stripped)
+    for idx, text in enumerate(stripped):
+        lineno = idx + 1
+        if any(lo <= lineno <= hi for lo, hi in skip):
+            continue
+        if not PUB_ITEM.match(text):
+            continue
+        # Walk back over attributes only; a doc comment must sit
+        # directly above them (a blank line breaks the attachment,
+        # matching rustdoc). Comments are blanked in `stripped`, so
+        # the doc check reads the ORIGINAL line.
+        j = idx - 1
+        while j >= 0 and (
+            stripped[j].strip().startswith("#[") or stripped[j].strip() == "]"
+        ):
+            j -= 1
+        if j < 0 or not lines[j].lstrip().startswith(("///", "//!")):
+            item = text.strip().split("{")[0].strip()
+            findings.append(f"{path}:{lineno}: undocumented pub item: {item}")
+
+
+def lint_file(path, findings):
+    src = path.read_text(encoding="utf-8")
+    code = strip_code(src)
+    check_balance(path, code, findings)
+    check_stray_macros(path, code, findings)
+    if "src" in path.parts:  # doc bar applies to the library, not tests/benches
+        check_doc_coverage(path, src, findings)
+
+
+def run(root):
+    findings = []
+    files = sorted(
+        p
+        for sub in ("rust/src", "rust/tests", "rust/benches")
+        for p in (root / sub).rglob("*.rs")
+    )
+    if not files:
+        findings.append(f"{root}: no .rs files found (wrong --root?)")
+    for path in files:
+        lint_file(path, findings)
+    return findings, len(files)
+
+
+# --- self-test -------------------------------------------------------------
+
+GOOD_SNIPPET = '''//! A documented module.
+
+/// Doc'd function with tricky tokens: "}" and '{' and // inline.
+#[inline]
+pub fn fine(x: u32) -> u32 {
+    let _s = "a string with dbg-looking text: todo is a word";
+    let _c = '}';
+    x + 1 /* nested /* comment */ with brace { */
+}
+
+pub(crate) fn internal_no_doc_needed() {}
+
+#[cfg(test)]
+mod tests {
+    pub fn helpers_in_tests_need_no_docs() {}
+}
+'''
+
+BAD_UNDOC = """//! Module doc present.
+
+pub fn missing_docs() {}
+"""
+
+BAD_NO_MODULE_DOC = """/// An item doc is not a module doc.
+pub struct S;
+"""
+
+BAD_UNBALANCED = """//! Module doc.
+
+/// Doc.
+pub fn f() { if true { }
+"""
+
+BAD_STRAY = """//! Module doc.
+
+/// Doc.
+pub fn f() {
+    dbg!(42);
+    todo!()
+}
+"""
+
+
+def self_test():
+    failures = []
+
+    def lint_snippet(src, name):
+        findings = []
+        path = pathlib.Path(f"src/{name}.rs")  # 'src' part => doc bar applies
+        code = strip_code(src)
+        check_balance(path, code, findings)
+        check_stray_macros(path, code, findings)
+        check_doc_coverage(path, src, findings)
+        return findings
+
+    good = lint_snippet(GOOD_SNIPPET, "good")
+    if good:
+        failures.append(f"good snippet flagged: {good}")
+    for src, name, want in (
+        (BAD_UNDOC, "undoc", "undocumented"),
+        (BAD_NO_MODULE_DOC, "nomod", "module doc"),
+        (BAD_UNBALANCED, "unbal", "unclosed"),
+        (BAD_STRAY, "stray", "stray"),
+    ):
+        findings = lint_snippet(src, name)
+        if not any(want in f for f in findings):
+            failures.append(f"bad snippet {name!r} not caught (wanted {want!r}, got {findings})")
+    if failures:
+        for f in failures:
+            print(f"SELF-TEST FAIL: {f}")
+        return 1
+    print("lint.py self-test OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=None, help="repo root (default: script's parent dir)")
+    ap.add_argument("--self-test", action="store_true", help="verify the checkers themselves")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    root = pathlib.Path(args.root) if args.root else pathlib.Path(__file__).resolve().parents[1]
+    findings, nfiles = run(root)
+    for f in findings:
+        print(f"FAIL: {f}")
+    if findings:
+        print(f"lint: {len(findings)} finding(s) across {nfiles} files")
+        sys.exit(1)
+    print(f"lint OK ({nfiles} files)")
+
+
+if __name__ == "__main__":
+    main()
