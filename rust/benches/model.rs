@@ -1,0 +1,219 @@
+//! Cold-path benchmarks: Markov steady-state solves, the binary-search
+//! slicer, and sweep-wide cache prewarming.
+//!
+//! Run: `cargo bench --bench model`
+//! Environment:
+//! - `KERNELET_MODEL_OUT` overrides the JSON output path (default
+//!   `BENCH_model.json` in the working directory).
+//!
+//! The JSON separates two kinds of numbers:
+//! - wall-clock figures (`solves_per_sec`, the `results` array) that CI
+//!   records but never compares across runs;
+//! - deterministic work counters (`counters`) that CI *does* gate: how
+//!   many candidates each slicer search simulated, what the prewarm
+//!   dedup found, how the serial model section hit the transition memo.
+//!   The memo counters are snapshotted before any parallel section so
+//!   racing double-fills cannot perturb them.
+//!
+//! The bench is also a differential test: it asserts the binary-search
+//! slicer and the frozen linear reference agree on every (gpu, app)
+//! cell it counts, and that a warm-started power solve matches the
+//! dense solve within 1e-9.
+
+use kernelet::bench::{bench, black_box, once, BenchResult};
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::Coordinator;
+use kernelet::kernel::BenchmarkApp;
+use kernelet::model::homo::build_homo_chain;
+use kernelet::model::params::SmEnv;
+use kernelet::model::{self, ChainParams, Granularity, SolveScratch, Transition};
+use kernelet::workload::Mix;
+use kernelet::{sim, slicer};
+
+/// Block-granularity chains for every benchmark app on one device —
+/// the chain population the scheduler's hot path actually solves.
+fn app_chains(gpu: &GpuConfig) -> Vec<Transition> {
+    let env = SmEnv::virtual_sm(gpu);
+    BenchmarkApp::ALL
+        .iter()
+        .map(|a| {
+            let spec = a.spec();
+            let p = ChainParams::from_kernel(
+                gpu,
+                &spec,
+                spec.blocks_per_sm(gpu),
+                Granularity::Block,
+                env.vsm_count,
+            );
+            build_homo_chain(&p, &env)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let c2050 = GpuConfig::c2050();
+    let gtx680 = GpuConfig::gtx680();
+
+    // ---- Structured steady-state solves (serial section) ----
+    let chains = app_chains(&c2050);
+    let mut scratch = SolveScratch::new();
+
+    // Warm-start validation: a power solve seeded from a neighboring π
+    // must land within 1e-9 (L1) of the dense answer on every chain.
+    for t in &chains {
+        let dense: Vec<f64> = scratch.dense(t).to_vec();
+        let warm: Vec<f64> = scratch.power_warm(t, 1e-12, 20_000).to_vec();
+        let l1: f64 = dense.iter().zip(&warm).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 <= 1e-9, "warm-start drifted {l1:.3e} from dense");
+    }
+
+    // Headline: steady-state solves per second through the production
+    // `auto` path with a reused scratch (what `predict_solo`'s
+    // thread-local does), across the 8-app chain population.
+    const SOLVE_ITERS: u32 = 200;
+    let r = bench("solve::auto_8_chains_reused_scratch", 20, SOLVE_ITERS, || {
+        for t in &chains {
+            black_box(scratch.auto(t));
+        }
+    });
+    let solves = u128::from(SOLVE_ITERS) * chains.len() as u128;
+    let solves_per_sec =
+        solves as f64 / (r.mean.as_secs_f64() * f64::from(SOLVE_ITERS)).max(1e-12);
+    println!("solve::auto: {solves_per_sec:.0} solves/s over {} chains", chains.len());
+    results.push(r);
+
+    results.push(bench("solve::dense_8_chains_reused_scratch", 20, 200, || {
+        for t in &chains {
+            black_box(scratch.dense(t));
+        }
+    }));
+    results.push(bench("solve::power_8_chains_cold_start", 2, 5, || {
+        for t in &chains {
+            black_box(scratch.power(t, 1e-10, 20_000));
+        }
+    }));
+
+    // End-to-end prediction (memoized chain construction + solve), both
+    // devices, serial — so the memo counters below are deterministic.
+    for (tag, gpu) in [("c2050", &c2050), ("gtx680", &gtx680)] {
+        results.push(bench(&format!("predict_solo::all_8_apps_{tag}"), 5, 50, || {
+            for a in &BenchmarkApp::ALL {
+                black_box(model::predict_solo(gpu, &a.spec(), Granularity::Block));
+            }
+        }));
+    }
+    let (memo_hits, memo_misses) = model::transition_memo_stats();
+
+    // ---- Binary-search slicer vs. the frozen linear reference ----
+    let seed = sim::DEFAULT_SEED ^ 0x511CE;
+    let budget = slicer::DEFAULT_OVERHEAD_PCT;
+    let mut linear_candidates = 0usize;
+    let mut binary_candidates = 0usize;
+    let (linear_sizes, lin_dt) = once("min_slice::linear_all_apps_both_gpus", || {
+        let mut sizes = Vec::new();
+        for gpu in [&c2050, &gtx680] {
+            for a in &BenchmarkApp::ALL {
+                let (size, n) =
+                    slicer::min_slice_size_linear_counted(gpu, &a.spec(), budget, seed);
+                linear_candidates += n;
+                sizes.push(size);
+            }
+        }
+        sizes
+    });
+    let (binary_sizes, bin_dt) = once("min_slice::binary_all_apps_both_gpus", || {
+        let mut sizes = Vec::new();
+        for gpu in [&c2050, &gtx680] {
+            for a in &BenchmarkApp::ALL {
+                let (size, n) = slicer::min_slice_size_counted(gpu, &a.spec(), budget, seed);
+                binary_candidates += n;
+                sizes.push(size);
+            }
+        }
+        sizes
+    });
+    assert_eq!(binary_sizes, linear_sizes, "binary search diverged from the linear reference");
+    assert!(
+        binary_candidates <= linear_candidates,
+        "binary search simulated more candidates ({binary_candidates}) than the linear scan \
+         ({linear_candidates})"
+    );
+    for (name, dt) in [
+        ("min_slice::linear_all_apps_both_gpus", lin_dt),
+        ("min_slice::binary_all_apps_both_gpus", bin_dt),
+    ] {
+        results.push(BenchResult { name: name.to_string(), iters: 1, mean: dt, min: dt, max: dt });
+    }
+
+    // ---- Sweep-wide prewarm + warm transfer ----
+    let donor = Coordinator::new(&c2050);
+    let specs: Vec<kernelet::kernel::KernelSpec> =
+        Mix::MIX.apps().iter().map(|a| a.spec()).collect();
+    let (stats, warm_dt) = once("coordinator::prewarm_mix_cold", || donor.prewarm(&specs));
+    results.push(BenchResult {
+        name: "coordinator::prewarm_mix_cold".to_string(),
+        iters: 1,
+        mean: warm_dt,
+        min: warm_dt,
+        max: warm_dt,
+    });
+    println!(
+        "prewarm: {} requested, {} distinct, {} filled",
+        stats.requested, stats.distinct, stats.filled
+    );
+    let consumer = Coordinator::new(&c2050);
+    let (absorbed, absorb_dt) = once("coordinator::warm_from_donor", || consumer.warm_from(&donor));
+    results.push(BenchResult {
+        name: "coordinator::warm_from_donor".to_string(),
+        iters: 1,
+        mean: absorb_dt,
+        min: absorb_dt,
+        max: absorb_dt,
+    });
+    // The transfer must leave the consumer answering from cache.
+    let (_, misses_before) = consumer.simcache.stats();
+    for s in &specs {
+        consumer.simcache.solo_full(s);
+    }
+    let (_, misses_after) = consumer.simcache.stats();
+    assert_eq!(misses_before, misses_after, "warm_from left the solo cache cold");
+
+    let nonconverged = model::nonconvergence_count();
+
+    // Record the perf trajectory for CI. `solves_per_sec` and every
+    // `*_ns` figure are wall-clock (never compared); `counters` are
+    // deterministic work counts (gated exactly).
+    let json = format!(
+        "{{\"bench\":\"model\",\"solves_per_sec\":{:.1},\"counters\":{{\"memo_hits\":{},\"memo_misses\":{},\"linear_candidates\":{},\"binary_candidates\":{},\"prewarm_requested\":{},\"prewarm_distinct\":{},\"prewarm_already_cached\":{},\"prewarm_filled\":{},\"warm_absorbed\":{},\"nonconverged\":{}}},\"results\":[{}]}}\n",
+        solves_per_sec,
+        memo_hits,
+        memo_misses,
+        linear_candidates,
+        binary_candidates,
+        stats.requested,
+        stats.distinct,
+        stats.already_cached,
+        stats.filled,
+        absorbed,
+        nonconverged,
+        results
+            .iter()
+            .map(|b| format!(
+                "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"min_ns\":{},\"max_ns\":{}}}",
+                b.name,
+                b.iters,
+                b.mean.as_nanos(),
+                b.min.as_nanos(),
+                b.max.as_nanos()
+            ))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let out =
+        std::env::var("KERNELET_MODEL_OUT").unwrap_or_else(|_| "BENCH_model.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -55,7 +55,7 @@ pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};
 pub use multigpu::{DispatchPolicy, MultiGpuDispatcher, MultiGpuReport, ShedPoint};
 pub use pruning::{prune_pairs, PruneParams};
-pub use simcache::SimCache;
+pub use simcache::{PrewarmStats, SimCache};
 
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;

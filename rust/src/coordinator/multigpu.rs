@@ -185,6 +185,19 @@ impl MultiGpuDispatcher {
         self
     }
 
+    /// Seed every device's caches from a prewarmed donor coordinator
+    /// (see [`Coordinator::warm_from`] for what transfers and what is
+    /// gated on a matching device). Sweeps that build one dispatcher
+    /// per cell per policy pay the cold simulation cost once on the
+    /// donor; results are unchanged — every absorbed value is exactly
+    /// what the consumer's own deterministic fill would compute.
+    pub fn with_warm_from(self, donor: &Coordinator) -> Self {
+        for device in &self.devices {
+            device.warm_from(donor);
+        }
+        self
+    }
+
     /// Number of devices in the fleet.
     pub fn device_count(&self) -> usize {
         self.devices.len()

@@ -60,6 +60,32 @@ pub struct CachedPair {
     pub total_ipc: f64,
 }
 
+/// What one [`SimCache::prewarm`] call did: how many cells were asked
+/// for, how many were distinct, how many the cache already held, and
+/// how many were actually simulated. `filled = distinct −
+/// already_cached`; `requested − distinct` is the duplication the sweep
+/// handed in (the dedup ratio `BENCH_model.json` reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrewarmStats {
+    /// Cells requested, duplicates included.
+    pub requested: usize,
+    /// Distinct cells after key canonicalization.
+    pub distinct: usize,
+    /// Distinct cells the cache already held.
+    pub already_cached: usize,
+    /// Cells cold-filled by simulation.
+    pub filled: usize,
+}
+
+/// One deduplicated prewarm work item (borrowing the caller's probe
+/// lists so the sweep cells stay `Sync` without cloning specs).
+enum PrewarmCell<'a> {
+    /// A solo (spec, blocks) run.
+    Solo(&'a (KernelSpec, u32)),
+    /// A pair probe (k1, s1, q1, k2, s2, q2).
+    Pair(&'a (KernelSpec, u32, u32, KernelSpec, u32, u32)),
+}
+
 impl SimCache {
     /// An empty cache simulating on `gpu`.
     pub fn new(gpu: &GpuConfig) -> Self {
@@ -99,17 +125,31 @@ impl SimCache {
         self.solo_cycles(spec, spec.grid_blocks)
     }
 
-    /// Measured co-run of an (s1, s2)-block slice pair at residency
-    /// quotas (q1, q2).
-    pub fn pair(&self, k1: &KernelSpec, s1: u32, q1: u32, k2: &KernelSpec, s2: u32, q2: u32) -> CachedPair {
-        assert!(s1 >= 1 && s2 >= 1);
-        // Canonicalize the key order so (A,B) and (B,A) share entries.
+    /// Canonicalized pair-cache key plus whether the probe's kernel
+    /// order was flipped to reach it ((A,B) and (B,A) share entries).
+    #[allow(clippy::type_complexity)]
+    fn pair_key(
+        k1: &KernelSpec,
+        s1: u32,
+        q1: u32,
+        k2: &KernelSpec,
+        s2: u32,
+        q2: u32,
+    ) -> ((String, u32, u32, String, u32, u32), bool) {
         let flip = (k1.name, s1, q1) > (k2.name, s2, q2);
         let key = if flip {
             (k2.name.to_string(), s2, q2, k1.name.to_string(), s1, q1)
         } else {
             (k1.name.to_string(), s1, q1, k2.name.to_string(), s2, q2)
         };
+        (key, flip)
+    }
+
+    /// Measured co-run of an (s1, s2)-block slice pair at residency
+    /// quotas (q1, q2).
+    pub fn pair(&self, k1: &KernelSpec, s1: u32, q1: u32, k2: &KernelSpec, s2: u32, q2: u32) -> CachedPair {
+        assert!(s1 >= 1 && s2 >= 1);
+        let (key, flip) = Self::pair_key(k1, s1, q1, k2, s2, q2);
         if let Some(c) = self.pair.get(&key) {
             self.counters.hit();
             return if flip { CachedPair { cipc: [c.cipc[1], c.cipc[0]], ..c } } else { c };
@@ -140,22 +180,97 @@ impl SimCache {
         self.counters.snapshot()
     }
 
+    /// Total cached measurements (solo + pair entries).
+    pub fn len(&self) -> usize {
+        self.solo.len() + self.pair.len()
+    }
+
+    /// Whether nothing has been measured yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill the cache for a mixed batch of solo runs and pair probes in
+    /// one deduplicated parallel sweep — the cold-path front door.
+    ///
+    /// Sweep harnesses request the same cells many times over (every
+    /// policy of every grid cell wants the same solo measurements and
+    /// probe pairs); this entry point canonicalizes the keys, drops
+    /// duplicates and already-cached cells, and cold-fills only the
+    /// remainder via [`crate::sweep::run_cells`] (so
+    /// `KERNELET_SWEEP_THREADS` governs it like every other sweep).
+    /// Returns what happened, for the dedup-ratio counters in
+    /// `BENCH_model.json`. Values are identical to on-demand fills —
+    /// every cell is the same deterministic simulation either way.
+    pub fn prewarm(
+        &self,
+        solos: &[(KernelSpec, u32)],
+        pairs: &[(KernelSpec, u32, u32, KernelSpec, u32, u32)],
+    ) -> PrewarmStats {
+        use std::collections::HashSet;
+        let requested = solos.len() + pairs.len();
+        let mut seen_solo: HashSet<(String, u32)> = HashSet::new();
+        let mut seen_pair: HashSet<(String, u32, u32, String, u32, u32)> = HashSet::new();
+        let mut cells: Vec<PrewarmCell> = Vec::new();
+        let mut distinct = 0usize;
+        let mut already_cached = 0usize;
+        for run in solos {
+            let key = (run.0.name.to_string(), run.1);
+            if !seen_solo.insert(key.clone()) {
+                continue;
+            }
+            distinct += 1;
+            if self.solo.get(&key).is_some() {
+                already_cached += 1;
+            } else {
+                cells.push(PrewarmCell::Solo(run));
+            }
+        }
+        for probe in pairs {
+            let (key, _) = Self::pair_key(&probe.0, probe.1, probe.2, &probe.3, probe.4, probe.5);
+            if !seen_pair.insert(key.clone()) {
+                continue;
+            }
+            distinct += 1;
+            if self.pair.get(&key).is_some() {
+                already_cached += 1;
+            } else {
+                cells.push(PrewarmCell::Pair(probe));
+            }
+        }
+        let filled = cells.len();
+        crate::sweep::run_cells(&cells, |_, cell| match cell {
+            PrewarmCell::Solo((spec, blocks)) => {
+                self.solo_cycles(spec, *blocks);
+            }
+            PrewarmCell::Pair((k1, s1, q1, k2, s2, q2)) => {
+                self.pair(k1, *s1, *q1, k2, *s2, *q2);
+            }
+        });
+        PrewarmStats { requested, distinct, already_cached, filled }
+    }
+
+    /// Copy every cached measurement of `other` into this cache.
+    ///
+    /// Caches are device-specific; a donor simulating a different
+    /// device (any `GpuConfig` field differing, same fingerprint rule
+    /// as disk persistence) is ignored and 0 is returned. With a
+    /// matching donor this is how per-cell dispatcher fleets start warm
+    /// instead of each re-simulating the sweep's shared cells.
+    pub fn absorb(&self, other: &SimCache) -> usize {
+        if format!("{:?}", self.gpu) != format!("{:?}", other.gpu) {
+            return 0;
+        }
+        self.solo.absorb(&other.solo) + self.pair.absorb(&other.pair)
+    }
+
     /// Fill the cache for a set of pair probes in parallel (the §Perf
     /// pass's second optimization: OPT's pre-execution probes dominated
     /// Fig. 13 wall time when simulated serially inside the scheduling
-    /// loop). Each probe is (k1, s1, q1, k2, s2, q2).
+    /// loop). Each probe is (k1, s1, q1, k2, s2, q2). Delegates to
+    /// [`SimCache::prewarm`].
     pub fn prewarm_pairs(&self, probes: &[(KernelSpec, u32, u32, KernelSpec, u32, u32)]) {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(probes.len().max(1)) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let Some((k1, s1, q1, k2, s2, q2)) = probes.get(i) else { break };
-                    self.pair(k1, *s1, *q1, k2, *s2, *q2);
-                });
-            }
-        });
+        self.prewarm(&[], probes);
     }
 
     /// The cache file for this device under `dir`: name + format
@@ -339,19 +454,10 @@ impl SimCache {
         Some((solo, pair))
     }
 
-    /// Fill the solo cache for a set of (spec, blocks) runs in parallel.
+    /// Fill the solo cache for a set of (spec, blocks) runs in
+    /// parallel. Delegates to [`SimCache::prewarm`].
     pub fn prewarm_solo(&self, runs: &[(KernelSpec, u32)]) {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(runs.len().max(1)) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let Some((spec, blocks)) = runs.get(i) else { break };
-                    self.solo_cycles(spec, *blocks);
-                });
-            }
-        });
+        self.prewarm(runs, &[]);
     }
 }
 
@@ -414,6 +520,61 @@ mod tests {
         assert_eq!(h + m, 8 * 4);
         // At least one miss per key; duplicate concurrent fills allowed.
         assert!(m >= 4, "misses={m}");
+    }
+
+    #[test]
+    fn prewarm_dedups_and_reports_stats() {
+        let cache = SimCache::new(&GpuConfig::c2050());
+        let a = BenchmarkApp::TEA.spec();
+        let b = BenchmarkApp::PC.spec();
+        // 3 solo requests over 2 distinct cells; 3 pair requests over 2
+        // distinct cells ((a,b) and (b,a) canonicalize together).
+        let solos = vec![(a.clone(), 56), (a.clone(), 56), (b.clone(), 56)];
+        let pairs = vec![
+            (a.clone(), 28, 2, b.clone(), 42, 3),
+            (b.clone(), 42, 3, a.clone(), 28, 2),
+            (a.clone(), 14, 1, b.clone(), 14, 1),
+        ];
+        let s = cache.prewarm(&solos, &pairs);
+        assert_eq!(
+            s,
+            PrewarmStats { requested: 6, distinct: 4, already_cached: 0, filled: 4 }
+        );
+        // Re-requesting the same batch fills nothing.
+        let again = cache.prewarm(&solos, &pairs);
+        assert_eq!(
+            again,
+            PrewarmStats { requested: 6, distinct: 4, already_cached: 4, filled: 0 }
+        );
+        // And the prewarmed values are exactly the on-demand ones.
+        let serial = SimCache::new(&GpuConfig::c2050());
+        assert_eq!(
+            cache.solo_cycles(&a, 56).to_bits(),
+            serial.solo_cycles(&a, 56).to_bits()
+        );
+        let (wp, sp) = (cache.pair(&a, 28, 2, &b, 42, 3), serial.pair(&a, 28, 2, &b, 42, 3));
+        assert_eq!(wp.cycles.to_bits(), sp.cycles.to_bits());
+        assert_eq!(wp.cipc[0].to_bits(), sp.cipc[0].to_bits());
+    }
+
+    #[test]
+    fn absorb_transfers_entries_and_rejects_other_devices() {
+        let gpu = GpuConfig::c2050();
+        let donor = SimCache::new(&gpu);
+        let a = BenchmarkApp::TEA.spec();
+        let b = BenchmarkApp::PC.spec();
+        let solo = donor.solo_cycles(&a, 56);
+        let pair = donor.pair(&a, 28, 2, &b, 42, 3);
+        let warm = SimCache::new(&gpu);
+        assert_eq!(warm.absorb(&donor), 2);
+        // Absorbed probes must all hit, with byte-identical values.
+        assert_eq!(warm.solo_cycles(&a, 56).to_bits(), solo.to_bits());
+        let wp = warm.pair(&a, 28, 2, &b, 42, 3);
+        assert_eq!(wp.cycles.to_bits(), pair.cycles.to_bits());
+        assert_eq!(warm.stats(), (2, 0));
+        // A different device must not swallow these timings.
+        let other = SimCache::new(&GpuConfig::gtx680());
+        assert_eq!(other.absorb(&donor), 0);
     }
 
     fn scratch_dir(tag: &str) -> std::path::PathBuf {

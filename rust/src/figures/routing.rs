@@ -87,6 +87,12 @@ pub fn routing_sweep(
     let coord = Coordinator::new(&gpu);
     let mix = Mix::MIX;
     let capacity = base_capacity_kps(&coord, mix);
+    // Every cell's every policy wants the same solo measurements, probe
+    // pairs and minimum slices: cold-fill them once on the master
+    // coordinator and seed each per-cell dispatcher from it below
+    // (values are deterministic, so warm starts are bit-identical).
+    let specs: Vec<crate::kernel::KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
+    coord.prewarm(&specs);
     let qos = QosMix::latency_share(latency_fraction, deadline_scale / capacity);
     let per_app = opts.instances_per_app;
     let mut cells: Vec<(usize, &'static str, usize, f64)> = Vec::new();
@@ -106,7 +112,8 @@ pub fn routing_sweep(
             let dispatcher = MultiGpuDispatcher::new(
                 &vec![GpuConfig::c2050(); gpus],
                 dispatch_policy_for(policy),
-            );
+            )
+            .with_warm_from(&coord);
             let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
                 .expect("routing sweep scenario names are valid");
             let rep = dispatcher.run_source(source.as_mut());

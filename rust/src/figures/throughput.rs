@@ -204,6 +204,11 @@ pub fn fleet_sweep(
     let coord = Coordinator::new(&gpu);
     let mix = Mix::MIX;
     let capacity = base_capacity_kps(&coord, mix);
+    // Cold-fill the shared cells once; each per-cell dispatcher below
+    // starts from this warm donor instead of re-simulating them
+    // (deterministic fills, so results are bit-identical either way).
+    let specs: Vec<crate::kernel::KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
+    coord.prewarm(&specs);
     let qos = QosMix::latency_share(0.3, 4.0 / capacity);
     let per_app = opts.instances_per_app;
     let mut cells: Vec<(usize, &'static str, usize, f64, usize)> = Vec::new();
@@ -225,7 +230,8 @@ pub fn fleet_sweep(
             let dispatcher = MultiGpuDispatcher::new(
                 &vec![GpuConfig::c2050(); gpus],
                 dispatch_policy_for(policy),
-            );
+            )
+            .with_warm_from(&coord);
             let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
                 .expect("fleet sweep scenario names are valid");
             let rep = dispatcher.run_source(source.as_mut());

@@ -7,10 +7,35 @@
 //! each row of the product chain is the outer product of two marginal
 //! rows.
 
-use super::chain::{binomial_pmf, steady_state_auto, Transition};
+use super::chain::{binomial_pmf, with_scratch, Transition, TransitionMemo};
 use super::params::{ChainParams, Granularity, SmEnv};
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
+use std::sync::{Arc, OnceLock};
+
+/// Process-wide memo of built product chains, keyed by both kernels'
+/// parameter bit patterns in order (the product chain is not symmetric
+/// under swapping the pair, so order is part of the key).
+fn hetero_memo() -> &'static TransitionMemo {
+    static MEMO: OnceLock<TransitionMemo> = OnceLock::new();
+    MEMO.get_or_init(TransitionMemo::new)
+}
+
+/// (hits, misses) of the product-chain construction memo.
+pub(crate) fn memo_stats() -> (u64, u64) {
+    hetero_memo().stats()
+}
+
+/// Memoized [`build_hetero_chain`]: returns the shared prebuilt chain
+/// when an identical (params₁, params₂, env) triple was built before.
+fn build_hetero_chain_memo(p1: &ChainParams, p2: &ChainParams, env: &SmEnv) -> Arc<Transition> {
+    let mut key = Vec::with_capacity(19);
+    key.push(2); // tag: heterogeneous product chain
+    p1.memo_key_into(&mut key);
+    p2.memo_key_into(&mut key);
+    env.memo_key_into(&mut key);
+    hetero_memo().get_or_build(&key, || build_hetero_chain(p1, p2, env))
+}
 
 /// Model output for a co-scheduled kernel pair at a given residency.
 #[derive(Debug, Clone, Copy)]
@@ -135,9 +160,11 @@ pub fn predict_pair(
     let env = SmEnv::virtual_sm(gpu);
     let p1 = ChainParams::from_kernel(gpu, k1, b1, granularity, env.vsm_count);
     let p2 = ChainParams::from_kernel(gpu, k2, b2, granularity, env.vsm_count);
-    let chain = build_hetero_chain(&p1, &p2, &env);
-    let pi = steady_state_auto(&chain);
-    let vsm = pair_ipc_from_steady(&pi, &p1, &p2, &env);
+    let chain = build_hetero_chain_memo(&p1, &p2, &env);
+    let vsm = with_scratch(|scratch| {
+        let pi = scratch.auto(&chain);
+        pair_ipc_from_steady(pi, &p1, &p2, &env)
+    });
     let cipc = [vsm[0] * env.vsm_count as f64, vsm[1] * env.vsm_count as f64];
     let total_ipc = cipc[0] + cipc[1];
     let cp = super::co_scheduling_profit(&[solo_ipc1, solo_ipc2], &cipc);

@@ -1,10 +1,34 @@
 //! Homogeneous-workload model: one kernel on the SM (paper §4.4,
 //! Eqs. 2-4).
 
-use super::chain::{binomial_pmf, steady_state_dense, steady_state_power, SteadyStateMethod, Transition};
+use super::chain::{binomial_pmf, with_scratch, SteadyStateMethod, Transition, TransitionMemo};
 use super::params::{ChainParams, Granularity, SmEnv, SoloPrediction};
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
+use std::sync::{Arc, OnceLock};
+
+/// Process-wide memo of built homogeneous chains: occupancy sweeps and
+/// figure cells rebuild the same (params, env) chains constantly, and
+/// construction is a pure function of the memo key.
+fn homo_memo() -> &'static TransitionMemo {
+    static MEMO: OnceLock<TransitionMemo> = OnceLock::new();
+    MEMO.get_or_init(TransitionMemo::new)
+}
+
+/// (hits, misses) of the homogeneous-chain construction memo.
+pub(crate) fn memo_stats() -> (u64, u64) {
+    homo_memo().stats()
+}
+
+/// Memoized [`build_homo_chain`]: returns the shared prebuilt chain
+/// when an identical (params, env) pair was built before.
+fn build_homo_chain_memo(p: &ChainParams, env: &SmEnv) -> Arc<Transition> {
+    let mut key = Vec::with_capacity(12);
+    key.push(1); // tag: homogeneous 2-state chain
+    p.memo_key_into(&mut key);
+    env.memo_key_into(&mut key);
+    homo_memo().get_or_build(&key, || build_homo_chain(p, env))
+}
 
 /// Build the 2-state-per-unit chain's transition matrix over SM states
 /// S_0..S_W (number of idle units).
@@ -81,13 +105,16 @@ pub fn predict_solo_at(
 ) -> SoloPrediction {
     let env = if virtual_sm { SmEnv::virtual_sm(gpu) } else { SmEnv::single_scheduler(gpu) };
     let params = ChainParams::from_kernel(gpu, spec, blocks, granularity, env.vsm_count);
-    let chain = build_homo_chain(&params, &env);
-    let pi = match method {
-        SteadyStateMethod::PowerIteration => steady_state_power(&chain, 1e-12, 20_000),
-        SteadyStateMethod::DenseSolve => steady_state_dense(&chain),
-        SteadyStateMethod::Auto => super::chain::steady_state_auto(&chain),
-    };
-    let vsm_ipc = ipc_from_steady(&pi, &params, &env);
+    let chain = build_homo_chain_memo(&params, &env);
+    let vsm_ipc = with_scratch(|scratch| {
+        let pi = match method {
+            SteadyStateMethod::PowerIteration => scratch.power(&chain, 1e-12, 20_000),
+            SteadyStateMethod::DenseSolve => scratch.dense(&chain),
+            SteadyStateMethod::Auto => scratch.auto(&chain),
+            SteadyStateMethod::WarmStart => scratch.power_warm(&chain, 1e-12, 20_000),
+        };
+        ipc_from_steady(pi, &params, &env)
+    });
     let ipc = vsm_ipc * env.vsm_count as f64;
     let pur = ipc / gpu.peak_ipc();
     // Sector rate = IPC * sectors per instruction.
@@ -176,6 +203,43 @@ mod tests {
         let a = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::PowerIteration, true);
         let b = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::DenseSolve, true);
         assert!((a.ipc - b.ipc).abs() < 1e-6, "power={} dense={}", a.ipc, b.ipc);
+    }
+
+    #[test]
+    fn warm_start_matches_dense_prediction() {
+        // The opt-in WarmStart path must agree with the dense reference
+        // within 1e-9 even when consecutive predictions reseed each
+        // other across different kernels and residencies.
+        let gpu = GpuConfig::c2050();
+        for mem in [0.02, 0.1, 0.3] {
+            for blocks in [2, 4, 6] {
+                let k = spec(mem);
+                let d =
+                    predict_solo_at(&gpu, &k, blocks, Granularity::Warp, SteadyStateMethod::DenseSolve, true);
+                let w =
+                    predict_solo_at(&gpu, &k, blocks, Granularity::Warp, SteadyStateMethod::WarmStart, true);
+                assert!(
+                    (w.ipc - d.ipc).abs() <= 1e-9 * d.ipc.max(1.0),
+                    "mem={mem} blocks={blocks}: warm={} dense={}",
+                    w.ipc,
+                    d.ipc
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memoized_chain_prediction_is_stable() {
+        // Construction memoization must not change the prediction:
+        // back-to-back identical calls (second one a guaranteed memo
+        // hit) return bit-identical results.
+        let gpu = GpuConfig::c2050();
+        let k = spec(0.15);
+        let a = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::Auto, true);
+        let b = predict_solo_at(&gpu, &k, 6, Granularity::Warp, SteadyStateMethod::Auto, true);
+        assert_eq!(a.ipc.to_bits(), b.ipc.to_bits());
+        assert_eq!(a.pur.to_bits(), b.pur.to_bits());
+        assert_eq!(a.mur.to_bits(), b.mur.to_bits());
     }
 
     #[test]

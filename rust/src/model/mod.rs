@@ -36,13 +36,27 @@ pub mod homo;
 pub mod params;
 pub mod uncoal;
 
-pub use chain::{steady_state_dense, steady_state_power, SteadyStateMethod};
+pub use chain::{
+    nonconvergence_count, steady_state_dense, steady_state_power, steady_state_power_tracked,
+    Convergence, SolveScratch, SteadyStateMethod, Transition, TransitionMemo,
+};
 pub use hetero::{predict_pair, PairPrediction};
 pub use homo::predict_solo;
 pub use params::{occupancy_ceiling_blocks, ChainParams, Granularity, SoloPrediction};
 
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
+
+/// Aggregate (hits, misses) across the homogeneous, heterogeneous and
+/// 3-state transition-construction memos. `hits` counts chain
+/// constructions avoided since process start — the deterministic
+/// counter `BENCH_model.json` tracks.
+pub fn transition_memo_stats() -> (u64, u64) {
+    let (h1, m1) = homo::memo_stats();
+    let (h2, m2) = hetero::memo_stats();
+    let (h3, m3) = uncoal::memo_stats();
+    (h1 + h2 + h3, m1 + m2 + m3)
+}
 
 /// Co-scheduling profit (paper Eq. 1).
 ///

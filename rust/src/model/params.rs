@@ -82,6 +82,20 @@ impl ChainParams {
             sectors_uncoal,
         }
     }
+
+    /// Append this parameter set's exact bit patterns to a
+    /// transition-memo key (see [`crate::model::chain::TransitionMemo`]).
+    /// Two parameter sets with equal keys build bit-identical chains,
+    /// because chain construction is a pure function of these fields.
+    pub(crate) fn memo_key_into(&self, key: &mut Vec<u64>) {
+        key.push(self.units as u64);
+        key.push(self.group.to_bits());
+        key.push(self.p_mem.to_bits());
+        key.push(self.sectors_per_idle_unit.to_bits());
+        key.push(self.uncoal_frac.to_bits());
+        key.push(self.sectors_coal.to_bits());
+        key.push(self.sectors_uncoal.to_bits());
+    }
 }
 
 /// Shared (virtual-)SM environment for a chain evaluation.
@@ -133,6 +147,16 @@ impl SmEnv {
     /// cycle, per the paper).
     pub fn round_duration(&self, ready_units: f64, group: f64) -> f64 {
         (ready_units * group / self.issue_rate).max(1.0)
+    }
+
+    /// Append this environment's exact bit patterns to a
+    /// transition-memo key (companion to
+    /// [`ChainParams::memo_key_into`]).
+    pub(crate) fn memo_key_into(&self, key: &mut Vec<u64>) {
+        key.push(self.issue_rate.to_bits());
+        key.push(self.l0.to_bits());
+        key.push(self.bw.to_bits());
+        key.push(self.vsm_count as u64);
     }
 }
 

@@ -12,10 +12,33 @@
 //! evaluating the plain 2-state model on a kernel whose
 //! `uncoalesced_frac` was zeroed out.
 
-use super::chain::{binomial_pmf, steady_state_auto, Transition};
+use super::chain::{binomial_pmf, with_scratch, Transition, TransitionMemo};
 use super::params::{ChainParams, Granularity, SmEnv, SoloPrediction};
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
+use std::sync::{Arc, OnceLock};
+
+/// Process-wide memo of built 3-state chains (state space + transition
+/// matrix together: the space enumeration is as deterministic as the
+/// rows).
+fn tri_memo() -> &'static TransitionMemo<(TriStateSpace, Transition)> {
+    static MEMO: OnceLock<TransitionMemo<(TriStateSpace, Transition)>> = OnceLock::new();
+    MEMO.get_or_init(TransitionMemo::new)
+}
+
+/// (hits, misses) of the 3-state-chain construction memo.
+pub(crate) fn memo_stats() -> (u64, u64) {
+    tri_memo().stats()
+}
+
+/// Memoized [`build_tri_chain`].
+fn build_tri_chain_memo(p: &ChainParams, env: &SmEnv) -> Arc<(TriStateSpace, Transition)> {
+    let mut key = Vec::with_capacity(12);
+    key.push(3); // tag: uncoalesced 3-state chain
+    p.memo_key_into(&mut key);
+    env.memo_key_into(&mut key);
+    tri_memo().get_or_build(&key, || build_tri_chain(p, env))
+}
 
 /// Enumeration of (c, u) states with c + u ≤ w, plus index mapping.
 #[derive(Debug, Clone)]
@@ -142,18 +165,25 @@ pub fn predict_solo_tri(gpu: &GpuConfig, spec: &KernelSpec, granularity: Granula
     let env = SmEnv::virtual_sm(gpu);
     let blocks = spec.blocks_per_sm(gpu);
     let p = ChainParams::from_kernel(gpu, spec, blocks, granularity, env.vsm_count);
-    let (space, chain) = build_tri_chain(&p, &env);
-    let pi = steady_state_auto(&chain);
-    let mut insts = 0.0;
-    let mut cycles = 0.0;
-    for (id, &g) in pi.iter().enumerate() {
-        let (c, u) = space.state(id);
-        let ready = (space.w - c - u) as f64;
-        let d = env.round_duration(ready, p.group);
-        insts += g * ready * p.group;
-        cycles += g * d;
-    }
-    let vsm_ipc = if cycles == 0.0 { 0.0 } else { insts / cycles };
+    let built = build_tri_chain_memo(&p, &env);
+    let (space, chain) = (&built.0, &built.1);
+    let vsm_ipc = with_scratch(|scratch| {
+        let pi = scratch.auto(chain);
+        let mut insts = 0.0;
+        let mut cycles = 0.0;
+        for (id, &g) in pi.iter().enumerate() {
+            let (c, u) = space.state(id);
+            let ready = (space.w - c - u) as f64;
+            let d = env.round_duration(ready, p.group);
+            insts += g * ready * p.group;
+            cycles += g * d;
+        }
+        if cycles == 0.0 {
+            0.0
+        } else {
+            insts / cycles
+        }
+    });
     let ipc = vsm_ipc * env.vsm_count as f64;
     let sectors_per_inst = spec.mix.mem_ratio
         * ((1.0 - spec.mix.uncoalesced_frac) * 4.0

@@ -92,6 +92,24 @@ impl<K: Hash + Eq, V: Clone> ShardedMap<K, V> {
         out
     }
 
+    /// Copy every entry of `other` into this map (existing keys are
+    /// overwritten — with deterministic fills both sides hold the same
+    /// value anyway). Returns the number of entries copied. This is the
+    /// substrate of cache *sharing*: sweeps that build one dispatcher
+    /// per cell seed each fresh cache from a prewarmed donor instead of
+    /// re-simulating the same cells per policy.
+    pub fn absorb(&self, other: &Self) -> usize
+    where
+        K: Clone,
+    {
+        let entries = other.snapshot();
+        let n = entries.len();
+        for (k, v) in entries {
+            self.insert(k, v);
+        }
+        n
+    }
+
     /// Total entries across shards (telemetry; takes each read lock in
     /// turn, so the count is only a snapshot under concurrency).
     pub fn len(&self) -> usize {
@@ -164,6 +182,21 @@ mod tests {
         // path) and must land on the shard the insert chose.
         assert_eq!(m.get("alpha"), Some(7));
         assert_eq!(m.get("beta"), None);
+    }
+
+    #[test]
+    fn absorb_copies_all_entries() {
+        let a: ShardedMap<u64, u64> = ShardedMap::new();
+        let b: ShardedMap<u64, u64> = ShardedMap::new();
+        for k in 0..32u64 {
+            a.insert(k, k * 3);
+        }
+        b.insert(1, 3); // overlapping key, same deterministic value
+        assert_eq!(b.absorb(&a), 32);
+        assert_eq!(b.len(), 32);
+        for k in 0..32u64 {
+            assert_eq!(b.get(&k), Some(k * 3));
+        }
     }
 
     #[test]

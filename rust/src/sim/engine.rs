@@ -128,6 +128,9 @@ pub struct SmEngine {
     /// Warps stalled on arithmetic dependencies, one sorted FIFO per
     /// workload (constant gap per workload keeps each sorted).
     arith_sleep: Vec<VecDeque<(f64, usize)>>,
+    /// Emptied per-workload sleep FIFOs parked between [`SmEngine::reset`]s
+    /// so their ring buffers keep their capacity across engine reuse.
+    spare_arith: Vec<VecDeque<(f64, usize)>>,
     /// Warps stalled on memory, one shared sorted FIFO (the pipe's
     /// completion times are nondecreasing).
     mem_sleep: VecDeque<(f64, usize)>,
@@ -153,11 +156,42 @@ impl SmEngine {
             resources: SmResources::default(),
             ready: VecDeque::new(),
             arith_sleep: Vec::new(),
+            spare_arith: Vec::new(),
             mem_sleep: VecDeque::new(),
             memory: MemoryPipe::new(gpu),
             metrics: Vec::new(),
             refill_cursor: 0,
         }
+    }
+
+    /// Reset to the state [`SmEngine::new`] would produce for
+    /// `(gpu, seed)` while keeping every internal buffer's allocated
+    /// capacity. The cold path re-runs thousands of short simulations
+    /// back to back (slice probes, pair rounds); reusing one engine via
+    /// [`super::SimScratch`] removes their per-run allocations, and the
+    /// results stay bitwise identical to a fresh engine because every
+    /// piece of run state — RNG, memory pipe, cursors, counters — is
+    /// reinitialized exactly as `new` does.
+    pub fn reset(&mut self, gpu: &GpuConfig, seed: u64) {
+        self.gpu.clone_from(gpu);
+        self.rng = Xoshiro256::new(seed);
+        self.workloads.clear();
+        self.pending_blocks.clear();
+        self.resident_blocks.clear();
+        self.warps.clear();
+        self.free_warps.clear();
+        self.slots.clear();
+        self.free_slots.clear();
+        self.resources = SmResources::default();
+        self.ready.clear();
+        while let Some(mut q) = self.arith_sleep.pop() {
+            q.clear();
+            self.spare_arith.push(q);
+        }
+        self.mem_sleep.clear();
+        self.memory = MemoryPipe::new(gpu);
+        self.metrics.clear();
+        self.refill_cursor = 0;
     }
 
     /// Register a workload before `run`. The first workload registered
@@ -168,7 +202,7 @@ impl SmEngine {
         self.pending_blocks.push(w.blocks);
         self.resident_blocks.push(0);
         self.metrics.push(KernelMetrics::default());
-        self.arith_sleep.push(VecDeque::new());
+        self.arith_sleep.push(self.spare_arith.pop().unwrap_or_default());
         self.workloads.push(w);
     }
 
@@ -184,6 +218,7 @@ impl SmEngine {
     }
 
     /// Move every warp due by `now` to the ready ring.
+    // lint: no-alloc
     fn wake_due(&mut self, now: f64) {
         while let Some(&(at, w)) = self.mem_sleep.front() {
             if at <= now {
@@ -209,6 +244,7 @@ impl SmEngine {
     /// Round-robin over workloads starting at `refill_cursor` so two
     /// co-scheduled kernels interleave their residency fairly (this is
     /// what slice-size tuning controls occupancy *through*).
+    // lint: no-alloc
     fn refill(&mut self) {
         let n = self.workloads.len();
         if n == 0 {
@@ -216,18 +252,23 @@ impl SmEngine {
         }
         // A quota only binds while some OTHER workload still has work:
         // once the partner slice drains, the hardware block dispatcher
-        // lets the survivor expand into the freed slots.
-        let others_active: Vec<bool> = (0..n)
-            .map(|i| {
-                (0..n).any(|j| {
-                    j != i && (self.pending_blocks[j] > 0 || self.resident_blocks[j] > 0)
-                })
-            })
-            .collect();
+        // lets the survivor expand into the freed slots. A workload's
+        // activity cannot change inside this loop (admitting a block
+        // moves it pending→resident, never to drained), so one count
+        // up front replaces the seed's per-workload `Vec<bool>` — this
+        // runs on every block completion.
+        let mut total_active = 0usize;
+        for j in 0..n {
+            if self.pending_blocks[j] > 0 || self.resident_blocks[j] > 0 {
+                total_active += 1;
+            }
+        }
         let mut stalled = 0usize;
         let mut i = self.refill_cursor % n;
         while stalled < n {
-            let under_quota = !others_active[i]
+            let self_active = self.pending_blocks[i] > 0 || self.resident_blocks[i] > 0;
+            let others_active = total_active - usize::from(self_active) > 0;
+            let under_quota = !others_active
                 || self.workloads[i]
                     .quota
                     .map_or(true, |q| self.resident_blocks[i] < q);
@@ -274,6 +315,7 @@ impl SmEngine {
     /// Run until every workload's blocks have completed. Returns the
     /// accumulated metrics; `cycles` does NOT include launch overhead
     /// (callers add it — see [`super::simulate_solo`]).
+    // lint: no-alloc
     pub fn run(&mut self) -> SimResult {
         assert!(!self.workloads.is_empty(), "no workloads");
         self.refill();
@@ -316,6 +358,7 @@ impl SmEngine {
     }
 
     /// Issue one instruction of warp `w` at cycle `now`.
+    // lint: no-alloc
     fn issue(&mut self, w: usize, now: f64) {
         let (kernel, slot) = (self.warps[w].kernel, self.warps[w].block_slot);
         let spec = &self.workloads[kernel].spec;
@@ -441,6 +484,27 @@ mod tests {
         lo.add_workload(Workload::new(k, 24));
         let r_lo = lo.run();
         assert!(r_lo.cycles > r_hi.cycles * 1.5, "lo={} hi={}", r_lo.cycles, r_hi.cycles);
+    }
+
+    #[test]
+    fn reset_engine_matches_fresh_engine_bitwise() {
+        // `reset` must leave no trace of the previous run: a dirtied,
+        // reset engine replays a simulation bit-for-bit identically to
+        // a freshly constructed one (the SimScratch correctness
+        // contract).
+        let gpu = GpuConfig::c2050();
+        let mut fresh = SmEngine::new(&gpu, 7);
+        fresh.add_workload(Workload::new(spec(0.3, 1.5), 12));
+        let a = fresh.run();
+        let mut reused = SmEngine::new(&GpuConfig::gtx680(), 99);
+        reused.add_workload(Workload::new(spec(0.1, 2.0), 5));
+        reused.add_workload(Workload::new(spec(0.4, 1.0), 5));
+        let _ = reused.run();
+        reused.reset(&gpu, 7);
+        reused.add_workload(Workload::new(spec(0.3, 1.5), 12));
+        let b = reused.run();
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.kernels, b.kernels);
     }
 
     #[test]

@@ -35,9 +35,54 @@ pub use metrics::{KernelMetrics, SimResult};
 
 use crate::config::GpuConfig;
 use crate::kernel::KernelSpec;
+use std::cell::RefCell;
 
 /// Default RNG seed for measurement runs (fixed for reproducibility).
 pub const DEFAULT_SEED: u64 = 0xC2050_680;
+
+/// Reusable simulation buffers: one [`SmEngine`] whose internal vectors
+/// and rings keep their capacity across runs.
+///
+/// The cold path (slice-size probing, pair-round aggregation, cache
+/// prewarming) runs thousands of short simulations; constructing a
+/// fresh engine for each reallocates every buffer. The `*_with` entry
+/// points below thread a `SimScratch` through instead, and the plain
+/// entry points delegate to a thread-local one — results are bitwise
+/// identical either way ([`SmEngine::reset`]'s contract, pinned by
+/// tests here and in `tests/coldpath_invariants.rs`).
+#[derive(Default)]
+pub struct SimScratch {
+    engine: Option<SmEngine>,
+}
+
+impl SimScratch {
+    /// An empty scratch; buffers are grown on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A reset engine for `(gpu, seed)`, reusing the previous run's
+    /// buffers when they exist.
+    fn engine(&mut self, gpu: &GpuConfig, seed: u64) -> &mut SmEngine {
+        match &mut self.engine {
+            Some(e) => e.reset(gpu, seed),
+            None => self.engine = Some(SmEngine::new(gpu, seed)),
+        }
+        self.engine.as_mut().expect("engine ensured above")
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch backing the scratch-less entry points.
+    static SIM_SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::new());
+}
+
+/// Run `f` with this thread's simulation scratch. Not re-entrant: `f`
+/// must not call the scratch-less `simulate_*` entry points (the
+/// `*_with` variants it can call take the scratch explicitly).
+fn with_sim_scratch<R>(f: impl FnOnce(&mut SimScratch) -> R) -> R {
+    SIM_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
 
 /// Blocks the representative SM receives out of a `total` distributed
 /// round-robin over the GPU.
@@ -50,8 +95,18 @@ pub fn blocks_on_sm(gpu: &GpuConfig, total: u32) -> u32 {
 /// Returns per-SM metrics; execution time in cycles includes one kernel
 /// launch overhead.
 pub fn simulate_solo(gpu: &GpuConfig, spec: &KernelSpec, seed: u64) -> SimResult {
+    with_sim_scratch(|s| simulate_solo_with(s, gpu, spec, seed))
+}
+
+/// [`simulate_solo`] against caller-owned scratch buffers.
+pub fn simulate_solo_with(
+    scratch: &mut SimScratch,
+    gpu: &GpuConfig,
+    spec: &KernelSpec,
+    seed: u64,
+) -> SimResult {
     let blocks = blocks_on_sm(gpu, spec.grid_blocks);
-    let mut eng = SmEngine::new(gpu, seed);
+    let eng = scratch.engine(gpu, seed);
     eng.add_workload(Workload::new(spec.clone(), blocks));
     let mut res = eng.run();
     res.cycles += gpu.launch_overhead_cycles;
@@ -69,6 +124,18 @@ pub fn simulate_solo(gpu: &GpuConfig, spec: &KernelSpec, seed: u64) -> SimResult
 ///   slice's blocks start filling as the previous drains, so the drain
 ///   bubbles vanish and only the (cheap) per-launch costs remain.
 pub fn simulate_solo_sliced(gpu: &GpuConfig, spec: &KernelSpec, slice_size: u32, seed: u64) -> SimResult {
+    with_sim_scratch(|s| simulate_solo_sliced_with(s, gpu, spec, slice_size, seed))
+}
+
+/// [`simulate_solo_sliced`] against caller-owned scratch buffers: the
+/// Fermi path resets one engine per slice instead of constructing one.
+pub fn simulate_solo_sliced_with(
+    scratch: &mut SimScratch,
+    gpu: &GpuConfig,
+    spec: &KernelSpec,
+    slice_size: u32,
+    seed: u64,
+) -> SimResult {
     assert!(slice_size >= 1);
     let n_slices = spec.grid_blocks.div_ceil(slice_size) as f64;
     match gpu.arch {
@@ -80,7 +147,7 @@ pub fn simulate_solo_sliced(gpu: &GpuConfig, spec: &KernelSpec, slice_size: u32,
                 let this = remaining.min(slice_size);
                 remaining -= this;
                 let blocks = blocks_on_sm(gpu, this);
-                let mut eng = SmEngine::new(gpu, seed ^ (0x51ce << 16) ^ slice_idx);
+                let eng = scratch.engine(gpu, seed ^ (0x51ce << 16) ^ slice_idx);
                 eng.add_workload(Workload::new(spec.clone(), blocks));
                 let r = eng.run();
                 agg.absorb(&r);
@@ -93,7 +160,7 @@ pub fn simulate_solo_sliced(gpu: &GpuConfig, spec: &KernelSpec, slice_size: u32,
             // Pipelined launches: blocks stream continuously; per-slice
             // launch costs accumulate but the SM never drains.
             let blocks = blocks_on_sm(gpu, spec.grid_blocks);
-            let mut eng = SmEngine::new(gpu, seed ^ (0x51ce << 16));
+            let eng = scratch.engine(gpu, seed ^ (0x51ce << 16));
             eng.add_workload(Workload::new(spec.clone(), blocks));
             let mut r = eng.run();
             r.cycles += gpu.launch_overhead_cycles * n_slices;
@@ -143,8 +210,24 @@ pub fn simulate_pair(
     q2: u32,
     seed: u64,
 ) -> PairResult {
+    with_sim_scratch(|sc| simulate_pair_with(sc, gpu, k1, s1, q1, k2, s2, q2, seed))
+}
+
+/// [`simulate_pair`] against caller-owned scratch buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pair_with(
+    scratch: &mut SimScratch,
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    s1: u32,
+    q1: u32,
+    k2: &KernelSpec,
+    s2: u32,
+    q2: u32,
+    seed: u64,
+) -> PairResult {
     assert!(s1 >= 1 && s2 >= 1);
-    let mut eng = SmEngine::new(gpu, seed);
+    let eng = scratch.engine(gpu, seed);
     eng.add_workload(Workload::with_quota(k1.clone(), blocks_on_sm(gpu, s1), q1));
     eng.add_workload(Workload::with_quota(k2.clone(), blocks_on_sm(gpu, s2), q2));
     let res = eng.run();
@@ -169,11 +252,41 @@ pub fn simulate_pair_rounds(
     rounds: u32,
     seed: u64,
 ) -> PairResult {
+    with_sim_scratch(|sc| {
+        simulate_pair_rounds_with(sc, gpu, k1, s1, q1, k2, s2, q2, rounds, seed)
+    })
+}
+
+/// [`simulate_pair_rounds`] against caller-owned scratch buffers: all
+/// `rounds` runs share one engine.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pair_rounds_with(
+    scratch: &mut SimScratch,
+    gpu: &GpuConfig,
+    k1: &KernelSpec,
+    s1: u32,
+    q1: u32,
+    k2: &KernelSpec,
+    s2: u32,
+    q2: u32,
+    rounds: u32,
+    seed: u64,
+) -> PairResult {
     assert!(rounds >= 1);
     let mut cycles = 0.0;
     let mut agg = [KernelMetrics::default(), KernelMetrics::default()];
     for r in 0..rounds {
-        let pr = simulate_pair(gpu, k1, s1, q1, k2, s2, q2, seed.wrapping_add(r as u64 * 0x9E37));
+        let pr = simulate_pair_with(
+            scratch,
+            gpu,
+            k1,
+            s1,
+            q1,
+            k2,
+            s2,
+            q2,
+            seed.wrapping_add(r as u64 * 0x9E37),
+        );
         cycles += pr.cycles;
         agg[0].absorb(&pr.per_kernel[0]);
         agg[1].absorb(&pr.per_kernel[1]);
@@ -276,6 +389,33 @@ mod tests {
             pair.cycles,
             serial
         );
+    }
+
+    #[test]
+    fn scratch_variants_match_fresh_engines_bitwise() {
+        // Each `*_with` entry point run against a heavily dirtied
+        // scratch must reproduce the scratch-less result bit for bit —
+        // solo, sliced (both arches exercise through the two gpus) and
+        // multi-round pair.
+        let fermi = GpuConfig::c2050();
+        let kepler = GpuConfig::gtx680();
+        let (a, b) = (mini(0.1), mini(0.4));
+        let mut dirty = SimScratch::new();
+        let _ = simulate_pair_rounds_with(&mut dirty, &kepler, &a, 56, 2, &b, 56, 2, 3, 77);
+        for gpu in [&fermi, &kepler] {
+            let solo = simulate_solo(gpu, &a, 42);
+            let solo_s = simulate_solo_with(&mut dirty, gpu, &a, 42);
+            assert_eq!(solo.cycles.to_bits(), solo_s.cycles.to_bits());
+            assert_eq!(solo.kernels, solo_s.kernels);
+            let sliced = simulate_solo_sliced(gpu, &a, gpu.num_sms * 2, 42);
+            let sliced_s = simulate_solo_sliced_with(&mut dirty, gpu, &a, gpu.num_sms * 2, 42);
+            assert_eq!(sliced.cycles.to_bits(), sliced_s.cycles.to_bits());
+            assert_eq!(sliced.kernels, sliced_s.kernels);
+            let pair = simulate_pair_rounds(gpu, &a, 56, 3, &b, 56, 3, 4, 9);
+            let pair_s = simulate_pair_rounds_with(&mut dirty, gpu, &a, 56, 3, &b, 56, 3, 4, 9);
+            assert_eq!(pair.cycles.to_bits(), pair_s.cycles.to_bits());
+            assert_eq!(pair.per_kernel, pair_s.per_kernel);
+        }
     }
 
     #[test]

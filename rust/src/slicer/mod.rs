@@ -42,16 +42,83 @@ pub fn candidate_sizes(gpu: &GpuConfig, spec: &KernelSpec) -> Vec<u32> {
 /// Falls back to the whole grid if even the largest candidate exceeds
 /// the budget (degenerates to non-sliced execution, as the paper notes
 /// for the extreme).
+///
+/// Since the cold-path perf pass this runs a monotone binary search —
+/// overhead decreases with slice size (fewer launches, fewer partial
+/// tails), so the budget predicate over the ordered candidate list is
+/// `false… true…` and a lower-bound search returns the same answer as
+/// the seed's linear scan (kept as [`min_slice_size_linear`] and pinned
+/// bit-identical by an exhaustive differential test) while simulating
+/// O(log n) candidates.
 pub fn min_slice_size(gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64, seed: u64) -> u32 {
+    min_slice_size_counted(gpu, spec, budget_pct, seed).0
+}
+
+/// [`min_slice_size`] plus the number of candidate slice sizes actually
+/// simulated — the deterministic work counter `BENCH_model.json`
+/// compares against the linear reference.
+pub fn min_slice_size_counted(
+    gpu: &GpuConfig,
+    spec: &KernelSpec,
+    budget_pct: f64,
+    seed: u64,
+) -> (u32, usize) {
+    let candidates: Vec<u32> = candidate_sizes(gpu, spec)
+        .into_iter()
+        .take_while(|&size| size < spec.grid_blocks)
+        .collect();
+    if candidates.is_empty() {
+        return (spec.grid_blocks, 0);
+    }
+    // The whole-grid run is candidate-independent: simulate it once
+    // instead of once per probe (deterministic, so the per-candidate
+    // overhead value is float-identical to `slicing_overhead`'s).
+    let whole = sim::simulate_solo(gpu, spec, seed);
+    let mut simulated = 0usize;
+    let (mut lo, mut hi) = (0usize, candidates.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        simulated += 1;
+        let sliced = sim::simulate_solo_sliced(gpu, spec, candidates[mid], seed);
+        let within = (sliced.cycles / whole.cycles - 1.0) * 100.0 <= budget_pct;
+        if within {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    if lo == candidates.len() {
+        (spec.grid_blocks, simulated)
+    } else {
+        (candidates[lo], simulated)
+    }
+}
+
+/// The seed's linear scan, kept verbatim as the frozen reference the
+/// binary search is differentially pinned against
+/// (`tests/coldpath_invariants.rs`). Prefer [`min_slice_size`].
+pub fn min_slice_size_linear(gpu: &GpuConfig, spec: &KernelSpec, budget_pct: f64, seed: u64) -> u32 {
+    min_slice_size_linear_counted(gpu, spec, budget_pct, seed).0
+}
+
+/// [`min_slice_size_linear`] plus the number of candidates simulated.
+pub fn min_slice_size_linear_counted(
+    gpu: &GpuConfig,
+    spec: &KernelSpec,
+    budget_pct: f64,
+    seed: u64,
+) -> (u32, usize) {
+    let mut simulated = 0usize;
     for size in candidate_sizes(gpu, spec) {
         if size >= spec.grid_blocks {
             break;
         }
+        simulated += 1;
         if slicing_overhead(gpu, spec, size, seed) * 100.0 <= budget_pct {
-            return size;
+            return (size, simulated);
         }
     }
-    spec.grid_blocks
+    (spec.grid_blocks, simulated)
 }
 
 /// Cache of minimum slice sizes keyed by (gpu, kernel name, grid,
@@ -90,6 +157,24 @@ impl SliceSizeCache {
         let s = min_slice_size(gpu, spec, budget_pct, sim::DEFAULT_SEED ^ 0x511CE);
         self.map.insert(key, s);
         s
+    }
+
+    /// Copy every cached slice size of `other` into this cache. The
+    /// key carries the GPU name, kernel, grid and budget, so entries
+    /// from any donor are safe to hold — lookups for other
+    /// configurations can never alias them. Returns the entry count.
+    pub fn absorb(&self, other: &SliceSizeCache) -> usize {
+        self.map.absorb(&other.map)
+    }
+
+    /// Cached slice sizes so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 
     /// [`SliceSizeCache::get`] behind the analyzer's safety gate: an

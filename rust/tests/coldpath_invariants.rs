@@ -1,0 +1,199 @@
+//! Cold-path invariants: the fast paths introduced for sweep startup
+//! must be *undetectable* in results.
+//!
+//! Four pins, mirroring the four pieces of the cold-path work:
+//! 1. DIFFERENTIAL — the monotone binary search in
+//!    `slicer::min_slice_size` returns the exact slice size of the
+//!    frozen linear reference on an exhaustive (gpu, app, budget,
+//!    seed) grid, while never simulating more candidates.
+//! 2. PROPERTY — simulations through a reused (dirty) [`SimScratch`]
+//!    are bitwise identical to fresh-engine runs for every entry
+//!    point.
+//! 3. PROPERTY — the structured solver's warm-started power method
+//!    lands within 1e-9 (L1) of the dense solve, and a reused
+//!    [`SolveScratch`] reproduces a fresh one's `auto` answer bit for
+//!    bit.
+//! 4. PROPERTY — `Coordinator::prewarm` + `warm_from` change cache
+//!    temperature only: a warmed consumer answers `min_slice` and
+//!    `best_split` bit-identically to a cold coordinator, and the
+//!    prewarm accounting stays consistent (`filled = distinct −
+//!    already_cached`, a second prewarm fills nothing).
+
+use kernelet::config::GpuConfig;
+use kernelet::coordinator::Coordinator;
+use kernelet::kernel::BenchmarkApp;
+use kernelet::model::homo::build_homo_chain;
+use kernelet::model::params::SmEnv;
+use kernelet::model::{ChainParams, Granularity, SolveScratch, Transition};
+use kernelet::sim::{
+    self, simulate_pair_rounds, simulate_pair_rounds_with, simulate_solo, simulate_solo_sliced,
+    simulate_solo_sliced_with, simulate_solo_with, SimResult, SimScratch,
+};
+use kernelet::{slicer, workload::Mix};
+
+const PROBE_SEED: u64 = sim::DEFAULT_SEED ^ 0x511CE;
+
+fn gpus() -> [GpuConfig; 2] {
+    [GpuConfig::c2050(), GpuConfig::gtx680()]
+}
+
+fn assert_bitwise_eq(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.cycles.to_bits(), b.cycles.to_bits(), "{ctx}: cycles diverged");
+    assert_eq!(a.kernels, b.kernels, "{ctx}: per-kernel metrics diverged");
+}
+
+/// DIFFERENTIAL: binary search == frozen linear scan on every cell of
+/// an exhaustive grid spanning degenerate budgets (nothing fits /
+/// everything fits) and both the production probe seed and an
+/// arbitrary one — same slice size, never more simulated candidates.
+#[test]
+fn binary_search_matches_linear_reference_exhaustively() {
+    for gpu in &gpus() {
+        for app in &BenchmarkApp::ALL {
+            let spec = app.spec();
+            for budget in [1e-9, 0.5, 2.0, slicer::DEFAULT_OVERHEAD_PCT, 8.0, 1e9] {
+                for seed in [PROBE_SEED, 1] {
+                    let (lin, lin_n) =
+                        slicer::min_slice_size_linear_counted(gpu, &spec, budget, seed);
+                    let (bin, bin_n) = slicer::min_slice_size_counted(gpu, &spec, budget, seed);
+                    let ctx = format!("{} {} budget={budget} seed={seed}", gpu.name, spec.name);
+                    assert_eq!(bin, lin, "{ctx}: sizes diverged");
+                    assert!(
+                        bin_n <= lin_n,
+                        "{ctx}: binary simulated {bin_n} candidates, linear {lin_n}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: one dirty scratch threaded through every simulation entry
+/// point reproduces the fresh-engine answers bit for bit, in every
+/// order. The scratch is deliberately polluted by a large pair-rounds
+/// run before each comparison so stale buffer contents would show.
+#[test]
+fn scratch_reuse_is_bitwise_identical_to_fresh() {
+    let mut dirty = SimScratch::new();
+    for gpu in &gpus() {
+        for app in &BenchmarkApp::ALL {
+            let a = app.spec();
+            let b = BenchmarkApp::MM.spec();
+            // Pollute with a differently-shaped workload first.
+            let _ = simulate_pair_rounds_with(&mut dirty, gpu, &b, 48, 3, &a, 48, 3, 2, 99);
+
+            let solo = simulate_solo(gpu, &a, 42);
+            let solo_s = simulate_solo_with(&mut dirty, gpu, &a, 42);
+            assert_bitwise_eq(&solo, &solo_s, &format!("solo {} {}", gpu.name, a.name));
+
+            let sliced = simulate_solo_sliced(gpu, &a, gpu.num_sms * 2, 42);
+            let sliced_s = simulate_solo_sliced_with(&mut dirty, gpu, &a, gpu.num_sms * 2, 42);
+            assert_bitwise_eq(&sliced, &sliced_s, &format!("sliced {} {}", gpu.name, a.name));
+
+            let pair = simulate_pair_rounds(gpu, &a, 56, 3, &b, 56, 3, 4, 7);
+            let pair_s = simulate_pair_rounds_with(&mut dirty, gpu, &a, 56, 3, &b, 56, 3, 4, 7);
+            let ctx = format!("pair {} {}", gpu.name, a.name);
+            assert_eq!(pair.cycles.to_bits(), pair_s.cycles.to_bits(), "{ctx}: cycles diverged");
+            assert_eq!(pair.per_kernel, pair_s.per_kernel, "{ctx}: per-kernel metrics diverged");
+        }
+    }
+}
+
+/// Block-granularity chains for every app on `gpu` (the population the
+/// scheduler's model layer solves).
+fn app_chains(gpu: &GpuConfig) -> Vec<Transition> {
+    let env = SmEnv::virtual_sm(gpu);
+    BenchmarkApp::ALL
+        .iter()
+        .map(|a| {
+            let spec = a.spec();
+            let p = ChainParams::from_kernel(
+                gpu,
+                &spec,
+                spec.blocks_per_sm(gpu),
+                Granularity::Block,
+                env.vsm_count,
+            );
+            build_homo_chain(&p, &env)
+        })
+        .collect()
+}
+
+/// PROPERTY: warm-started power iteration agrees with the dense solve
+/// within 1e-9 (L1) on every app chain of both devices, and a reused
+/// scratch's `auto` answer is bitwise equal to a fresh scratch's.
+#[test]
+fn warm_start_and_scratch_reuse_match_dense_solver() {
+    for gpu in &gpus() {
+        let chains = app_chains(gpu);
+        let mut reused = SolveScratch::new();
+        for t in &chains {
+            let dense: Vec<f64> = reused.dense(t).to_vec();
+            let warm: Vec<f64> = reused.power_warm(t, 1e-12, 20_000).to_vec();
+            let l1: f64 = dense.iter().zip(&warm).map(|(a, b)| (a - b).abs()).sum();
+            assert!(l1 <= 1e-9, "{}: warm start drifted {l1:.3e} from dense", gpu.name);
+
+            let fresh: Vec<f64> = SolveScratch::new().auto(t).to_vec();
+            let auto: Vec<f64> = reused.auto(t).to_vec();
+            let same = fresh.len() == auto.len()
+                && fresh.iter().zip(&auto).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{}: reused-scratch auto diverged from fresh", gpu.name);
+        }
+    }
+}
+
+/// PROPERTY: prewarm + warm_from only move cache temperature. A warmed
+/// consumer answers `min_slice` and `best_split` bit-identically to a
+/// cold coordinator, the transfer leaves the solo cache answering
+/// without new misses, and the prewarm accounting is self-consistent.
+#[test]
+fn prewarm_and_warm_from_are_result_invisible() {
+    let gpu = GpuConfig::c2050();
+    let specs: Vec<_> = Mix::MIX.apps().iter().map(|a| a.spec()).collect();
+
+    let donor = Coordinator::new(&gpu);
+    let stats = donor.prewarm(&specs);
+    assert_eq!(stats.filled, stats.distinct - stats.already_cached, "prewarm arithmetic");
+    assert!(stats.distinct <= stats.requested, "dedup grew the request set");
+    assert!(stats.filled > 0, "cold prewarm filled nothing");
+    let again = donor.prewarm(&specs);
+    assert_eq!(again.filled, 0, "second prewarm refilled cells");
+    assert_eq!(again.already_cached, again.distinct, "second prewarm saw cold cells");
+
+    let consumer = Coordinator::new(&gpu);
+    let absorbed = consumer.warm_from(&donor);
+    assert!(absorbed > 0, "nothing transferred");
+
+    // Warm answers == cold answers, bit for bit.
+    let cold = Coordinator::new(&gpu);
+    for s in &specs {
+        assert_eq!(consumer.min_slice(s), cold.min_slice(s), "{}: min_slice", s.name);
+    }
+    for i in 0..specs.len() {
+        for j in i + 1..specs.len() {
+            let warm = consumer.best_split(&specs[i], &specs[j]);
+            let cold_v = cold.best_split(&specs[i], &specs[j]);
+            match (warm, cold_v) {
+                (None, None) => {}
+                (Some((b1, b2, cipc, cp)), Some((c1, c2, cipc2, cp2))) => {
+                    assert_eq!((b1, b2), (c1, c2), "split blocks diverged");
+                    assert_eq!(cp.to_bits(), cp2.to_bits(), "cp diverged");
+                    assert_eq!(
+                        [cipc[0].to_bits(), cipc[1].to_bits()],
+                        [cipc2[0].to_bits(), cipc2[1].to_bits()],
+                        "cipc diverged"
+                    );
+                }
+                (w, c) => panic!("feasibility diverged: warm={w:?} cold={c:?}"),
+            }
+        }
+    }
+
+    // The transfer left the solo cache warm: reads hit, no new misses.
+    let (_, misses_before) = consumer.simcache.stats();
+    for s in &specs {
+        consumer.simcache.solo_full(s);
+    }
+    let (_, misses_after) = consumer.simcache.stats();
+    assert_eq!(misses_before, misses_after, "warm_from left the solo cache cold");
+}

@@ -4,8 +4,9 @@
 Stdlib only (runs in containers with nothing but python3). Two jobs:
 
 1. **Schema + acceptance checks** for every bench kind the repo emits
-   (`BENCH_scheduling.json`, `BENCH_throughput.json`, `BENCH_qos.json`,
-   `BENCH_admission.json`, `BENCH_routing.json`): structure, coverage
+   (`BENCH_model.json`, `BENCH_scheduling.json`, `BENCH_throughput.json`,
+   `BENCH_qos.json`, `BENCH_admission.json`, `BENCH_routing.json`):
+   structure, coverage
    (scenarios x policies x fleets), and the semantic acceptance bars —
    the deadline policy must not lose to class-blind Kernelet on the
    latency class under bursty overload (qos), the SLO guard must not
@@ -302,7 +303,62 @@ def validate_routing(d, name):
         fail(f"{name}: bursty sloaware/efc curves missing")
 
 
+MODEL_COUNTERS = (
+    "memo_hits",
+    "memo_misses",
+    "linear_candidates",
+    "binary_candidates",
+    "prewarm_requested",
+    "prewarm_distinct",
+    "prewarm_already_cached",
+    "prewarm_filled",
+    "warm_absorbed",
+    "nonconverged",
+)
+
+
+def validate_model(d, name):
+    check(d.get("bench") == "model", f"{name}: wrong bench tag {d.get('bench')!r}")
+    # Headline solve rate: wall-clock, so schema-checked only (positive),
+    # never compared across runs.
+    check(d.get("solves_per_sec", 0) > 0, f"{name}: bad solves_per_sec")
+    results = d.get("results", [])
+    check(bool(results), f"{name}: no results recorded")
+    for r in results:
+        check(r.get("iters", 0) >= 1, f"{name}: {r.get('name')}: bad iters")
+        check(r.get("mean_ns", 0) > 0, f"{name}: {r.get('name')}: bad mean_ns")
+    c = d.get("counters")
+    if not check(isinstance(c, dict), f"{name}: missing counters block"):
+        return
+    for k in MODEL_COUNTERS:
+        v = c.get(k)
+        check(isinstance(v, int) and v >= 0, f"{name}: counters.{k} bad: {v!r}")
+    # The deterministic consistency bars: the binary search must never
+    # simulate more candidates than the linear scan it replaced, and the
+    # prewarm arithmetic must partition exactly.
+    check(
+        0 < c.get("binary_candidates", 0) <= c.get("linear_candidates", 0),
+        f"{name}: binary search simulated {c.get('binary_candidates')} candidates vs "
+        f"linear {c.get('linear_candidates')}",
+    )
+    check(
+        c.get("prewarm_distinct", 0) <= c.get("prewarm_requested", 0),
+        f"{name}: prewarm distinct exceeds requested",
+    )
+    check(
+        c.get("prewarm_filled", -1)
+        == c.get("prewarm_distinct", 0) - c.get("prewarm_already_cached", 0),
+        f"{name}: prewarm filled {c.get('prewarm_filled')} != distinct - already_cached",
+    )
+    check(
+        c.get("warm_absorbed", 0) >= c.get("prewarm_distinct", 0),
+        f"{name}: warm transfer absorbed {c.get('warm_absorbed')} entries, fewer than the "
+        f"{c.get('prewarm_distinct')} the donor prewarmed",
+    )
+
+
 VALIDATORS = {
+    "model": validate_model,
     "scheduling": validate_scheduling,
     "throughput": validate_throughput,
     "qos": validate_qos,
@@ -356,6 +412,26 @@ def compare_to_baseline(fresh, base, kind, name):
         print(
             f"note: {name}: instances_per_app {fresh.get('instances_per_app')} != baseline "
             f"{base.get('instances_per_app')} — different scale, skipping drift comparison"
+        )
+        return
+    if kind == "model":
+        # solves_per_sec and every *_ns figure are wall-clock (machine
+        # noise, never compared), but the work counters are exactly
+        # deterministic: the bench snapshots the memo stats before any
+        # parallel section, the slicer candidate counts are a pure
+        # function of the fixed (gpu, app, budget) grid, and the
+        # prewarm/absorb counts are cache-entry arithmetic. Any change
+        # is a behavior change: gate exactly, not with the drift slot.
+        for key in MODEL_COUNTERS:
+            a, b = dig(fresh, f"counters.{key}"), dig(base, f"counters.{key}")
+            if a != b:
+                fail(
+                    f"{name}: counters.{key} {a} != baseline {b} "
+                    f"(deterministic work count changed)"
+                )
+        print(
+            f"{name}: {len(MODEL_COUNTERS)} deterministic counters compared exactly; "
+            f"wall-clock metrics (solves_per_sec, *_ns) not compared"
         )
         return
     if kind == "scheduling":
@@ -474,6 +550,31 @@ def _qos_cls(p99, misses, deadlined):
 
 
 EXAMPLES = {
+    "model": {
+        "bench": "model",
+        "solves_per_sec": 850000.0,
+        "counters": {
+            "memo_hits": 850,
+            "memo_misses": 30,
+            "linear_candidates": 120,
+            "binary_candidates": 52,
+            "prewarm_requested": 140,
+            "prewarm_distinct": 96,
+            "prewarm_already_cached": 0,
+            "prewarm_filled": 96,
+            "warm_absorbed": 130,
+            "nonconverged": 0,
+        },
+        "results": [
+            {
+                "name": "solve::auto_8_chains_reused_scratch",
+                "iters": 200,
+                "mean_ns": 9500,
+                "min_ns": 9000,
+                "max_ns": 12000,
+            }
+        ],
+    },
     "scheduling": {
         "bench": "scheduling",
         "instances_per_app": 50,
@@ -608,6 +709,21 @@ def self_test():
         fail("self-test: efc-beats-sloaware violation slipped through validate_routing")
     else:
         del FAILURES[before:]
+    # Negative: a binary search that simulates more candidates than the
+    # linear scan, or broken prewarm arithmetic, must be caught.
+    worse = json.loads(json.dumps(EXAMPLES["model"]))
+    worse["counters"]["binary_candidates"] = worse["counters"]["linear_candidates"] + 1
+    unbalanced = json.loads(json.dumps(EXAMPLES["model"]))
+    unbalanced["counters"]["prewarm_filled"] += 1
+    for doc, what in ((worse, "candidate regression"), (unbalanced, "prewarm arithmetic")):
+        before = len(FAILURES)
+        QUIET = True
+        validate_model(doc, "<negative>")
+        QUIET = False
+        if len(FAILURES) == before:
+            fail(f"self-test: {what} slipped through validate_model")
+        else:
+            del FAILURES[before:]
     # Negative: an inconsistent (or absent) events block must be caught.
     broken = json.loads(json.dumps(EXAMPLES["scheduling"]))
     broken["events"]["total"] += 1

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI pipeline: format, lint, docs, build, test, and record + gate the
-# perf trajectories (BENCH_scheduling.json latency + engine
+# perf trajectories (BENCH_model.json cold-path solves + slicer search +
+# prewarm counters, BENCH_scheduling.json latency + engine
 # events-per-second, BENCH_throughput.json saturation + fleet curves,
 # BENCH_qos.json per-class tail latency, BENCH_admission.json
 # goodput/shedding under overload, BENCH_routing.json fleet deadline
@@ -117,6 +118,10 @@ run_tests
 echo "==> cargo bench --bench hotpaths (smoke: microbenches + ablations)"
 cargo bench --bench hotpaths
 
+echo "==> cargo bench --bench model (cold path: solves, slicer search, prewarm)"
+KERNELET_MODEL_OUT="BENCH_model.json" \
+  cargo bench --bench model
+
 echo "==> cargo bench --bench scheduling (instances/app=${instances})"
 KERNELET_INSTANCES="${instances}" \
 KERNELET_BENCH_OUT="BENCH_scheduling.json" \
@@ -146,10 +151,12 @@ echo "==> bench gate (schemas + acceptance + baseline drift)"
 if command -v python3 >/dev/null 2>&1; then
   python3 "$SCRIPT_DIR/check_bench.py" \
     --baseline-dir "$SCRIPT_DIR/baselines" \
-    BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json BENCH_admission.json \
-    BENCH_routing.json
+    BENCH_model.json BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json \
+    BENCH_admission.json BENCH_routing.json
 else
   echo "warning: python3 unavailable — falling back to shape greps" >&2
+  grep -q '"bench":"model"' BENCH_model.json
+  grep -q '"solves_per_sec"' BENCH_model.json
   grep -q '"bench":"scheduling"' BENCH_scheduling.json
   grep -q '"bench":"throughput"' BENCH_throughput.json
   grep -q '"fleet_curves"' BENCH_throughput.json

@@ -21,6 +21,11 @@ textually, stdlib only:
 3. **Stray debug macros** — `dbg!(`, `todo!(` and `unimplemented!(`
    never belong in committed code (clippy would reject the first;
    the others are unfinished work).
+4. **No-alloc markers** — a `// lint: no-alloc` comment directly above
+   a `fn` promises the body performs no heap allocation on the steady
+   path; the checker flags `Vec::new(`, `vec![` and `.to_vec()` inside
+   the marked body (scratch-reuse hot loops like the simulator engine
+   and the Markov solver carry these markers).
 
 Usage:
     lint.py [--root DIR] [--self-test]
@@ -91,7 +96,16 @@ def strip_code(src):
                 while i < n and src[i] != '"':
                     if src[i] == "\n":
                         out.append("\n")
-                    i += 2 if src[i] == "\\" else 1
+                        i += 1
+                    elif src[i] == "\\":
+                        # Keep the newline of a backslash line
+                        # continuation: dropping it would shift every
+                        # later finding's line number by one.
+                        if i + 1 < n and src[i + 1] == "\n":
+                            out.append("\n")
+                        i += 2
+                    else:
+                        i += 1
                 i += 1
         elif c == "'":
             # Char literal iff a closing quote follows within a short
@@ -130,6 +144,57 @@ def check_stray_macros(path, code, findings):
                 findings.append(f"{path}:{lineno}: stray {m[:-1]}")
 
 
+ALLOC_PATTERNS = ("Vec::new(", "vec![", ".to_vec()")
+NO_ALLOC_MARKER = "// lint: no-alloc"
+
+
+def check_no_alloc(path, src, code, findings):
+    """Flag heap allocation inside `// lint: no-alloc` marked fns.
+
+    The marker goes on its own line directly above the `fn` (attributes
+    and further comments in between are fine). The body is located by
+    brace matching on the stripped view, so braces in strings or
+    comments cannot derail it.
+    """
+    lines = src.splitlines()
+    stripped = code.splitlines()
+    while len(stripped) < len(lines):
+        stripped.append("")
+    for idx, text in enumerate(lines):
+        if text.strip() != NO_ALLOC_MARKER:
+            continue
+        # Find the fn the marker annotates.
+        j = idx + 1
+        while j < len(stripped) and not re.search(r"\bfn\s+\w+", stripped[j]):
+            if stripped[j].strip() and not stripped[j].strip().startswith(("#[", "]")):
+                j = len(stripped)  # hit real code that isn't a fn
+                break
+            j += 1
+        if j >= len(stripped):
+            findings.append(f"{path}:{idx + 1}: no-alloc marker with no following fn")
+            continue
+        # Brace-match the fn body on the stripped view.
+        depth = 0
+        opened = False
+        k = j
+        while k < len(stripped):
+            for ch in stripped[k]:
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+            if opened:
+                for pat in ALLOC_PATTERNS:
+                    if pat in stripped[k]:
+                        findings.append(
+                            f"{path}:{k + 1}: allocation in `{NO_ALLOC_MARKER}` fn: {pat}"
+                        )
+            if opened and depth <= 0:
+                break
+            k += 1
+
+
 def test_mod_ranges(lines):
     """Line ranges (1-based, inclusive) of `#[cfg(test)] mod` bodies."""
     ranges = []
@@ -165,13 +230,20 @@ def check_doc_coverage(path, src, findings):
             continue
         if not PUB_ITEM.match(text):
             continue
-        # Walk back over attributes only; a doc comment must sit
-        # directly above them (a blank line breaks the attachment,
-        # matching rustdoc). Comments are blanked in `stripped`, so
-        # the doc check reads the ORIGINAL line.
+        # Walk back over attributes and plain `//` comments (rustdoc
+        # attaches docs through both — `// lint: no-alloc` markers sit
+        # between the doc and the fn); a doc comment must sit directly
+        # above them (a blank line breaks the attachment, matching
+        # rustdoc). Comments are blanked in `stripped`, so both the
+        # comment test and the doc check read the ORIGINAL line.
         j = idx - 1
         while j >= 0 and (
-            stripped[j].strip().startswith("#[") or stripped[j].strip() == "]"
+            stripped[j].strip().startswith("#[")
+            or stripped[j].strip() == "]"
+            or (
+                lines[j].lstrip().startswith("//")
+                and not lines[j].lstrip().startswith(("///", "//!"))
+            )
         ):
             j -= 1
         if j < 0 or not lines[j].lstrip().startswith(("///", "//!")):
@@ -184,6 +256,7 @@ def lint_file(path, findings):
     code = strip_code(src)
     check_balance(path, code, findings)
     check_stray_macros(path, code, findings)
+    check_no_alloc(path, src, code, findings)
     if "src" in path.parts:  # doc bar applies to the library, not tests/benches
         check_doc_coverage(path, src, findings)
 
@@ -216,6 +289,18 @@ pub fn fine(x: u32) -> u32 {
 
 pub(crate) fn internal_no_doc_needed() {}
 
+/// Marked hot fn that reuses scratch instead of allocating; the line
+/// continuation in the string exercises newline accounting: "a \\
+/// b".
+// lint: no-alloc
+pub fn hot(buf: &mut Vec<u32>) -> usize {
+    let _msg = "wrapped \
+                line";
+    buf.clear();
+    buf.extend(0..4);
+    buf.len()
+}
+
 #[cfg(test)]
 mod tests {
     pub fn helpers_in_tests_need_no_docs() {}
@@ -246,6 +331,27 @@ pub fn f() {
 }
 """
 
+BAD_ALLOC = """//! Module doc.
+
+/// Doc.
+// lint: no-alloc
+pub fn f() -> Vec<u32> {
+    let v = Vec::new();
+    v
+}
+
+/// Doc.
+pub fn unmarked_may_alloc() -> Vec<u32> {
+    vec![1, 2, 3]
+}
+"""
+
+BAD_ORPHAN_MARKER = """//! Module doc.
+
+// lint: no-alloc
+const X: u32 = 1;
+"""
+
 
 def self_test():
     failures = []
@@ -256,6 +362,7 @@ def self_test():
         code = strip_code(src)
         check_balance(path, code, findings)
         check_stray_macros(path, code, findings)
+        check_no_alloc(path, src, code, findings)
         check_doc_coverage(path, src, findings)
         return findings
 
@@ -267,10 +374,17 @@ def self_test():
         (BAD_NO_MODULE_DOC, "nomod", "module doc"),
         (BAD_UNBALANCED, "unbal", "unclosed"),
         (BAD_STRAY, "stray", "stray"),
+        (BAD_ALLOC, "alloc", "allocation in"),
+        (BAD_ORPHAN_MARKER, "orphan", "no following fn"),
     ):
         findings = lint_snippet(src, name)
         if not any(want in f for f in findings):
             failures.append(f"bad snippet {name!r} not caught (wanted {want!r}, got {findings})")
+    # The no-alloc bar must apply only to MARKED fns: BAD_ALLOC also
+    # contains an unmarked `vec![` fn that must stay unflagged.
+    alloc_hits = [f for f in lint_snippet(BAD_ALLOC, "alloc") if "allocation in" in f]
+    if len(alloc_hits) != 1:
+        failures.append(f"no-alloc checker flagged {len(alloc_hits)} sites, expected 1: {alloc_hits}")
     if failures:
         for f in failures:
             print(f"SELF-TEST FAIL: {f}")
