@@ -29,7 +29,7 @@ use std::time::Instant;
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::run_base;
-use kernelet::coordinator::{run_kernelet, Coordinator, Engine, KerneletSelector};
+use kernelet::coordinator::{run_kernelet, Coordinator, EngineBuilder, KerneletSelector};
 use kernelet::kernel::BenchmarkApp;
 use kernelet::runtime::{artifacts_available, ArtifactRegistry, PjrtBackend, SlicedRunner};
 use kernelet::stats::Summary;
@@ -105,7 +105,7 @@ fn main() {
     // to the simulator cache.
     let timing = PjrtBackend::new(&reg, &gpu, &coord.simcache);
     let small = Stream::saturated(Mix::ALL, 1, 0xE2E);
-    let rep = Engine::new(&coord).with_timing(&timing).run(&mut KerneletSelector, &small);
+    let rep = EngineBuilder::new(&coord).timing(&timing).build().run(&mut KerneletSelector, &small);
     assert_eq!(rep.kernels_completed, small.len());
     println!(
         "\nengine on the PJRT timing backend ({} kernel instances):\n\

@@ -1,0 +1,168 @@
+//! Multi-tenant fairness benchmark: crosses arrival scenario × offered
+//! load × selector policy (tenant-blind deadline vs weighted-fair
+//! fairshare) under a 10× tenant flood and records per-tenant service
+//! shares, tails and deadline misses to `BENCH_tenancy.json` — the
+//! repo's isolation trajectory, tracked by CI next to `BENCH_qos.json`.
+//!
+//! Run: `cargo bench --bench tenancy`
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 40).
+//! - `KERNELET_TENANCY_OUT` overrides the JSON output path (default
+//!   `BENCH_tenancy.json` in the working directory).
+//!
+//! JSON schema (times in seconds, rates in kernels/sec):
+//!
+//! ```json
+//! {
+//!   "bench": "tenancy",
+//!   "gpu": "C2050",
+//!   "mix": "MIX",
+//!   "instances_per_app": 40,
+//!   "tenant_shares": [10.0, 1.0],
+//!   "fair_weights": [1.0, 1.0],
+//!   "latency_fraction": 0.3,
+//!   "deadline_scale": 4.0,
+//!   "base_capacity_kps": 123.4,
+//!   "wall_ms": 456,
+//!   "curves": [
+//!     {
+//!       "scenario": "bursty",
+//!       "policy": "fairshare",
+//!       "points": [
+//!         {"load": 3.0, "kernels": 160, "throughput_kps": 100.1,
+//!          "tenants": [
+//!            {"tenant": 0, "submitted": 145, "completed": 145,
+//!             "share": 0.9, "service_secs": 1.2, "shed": 0,
+//!             "p50_s": 0.01, "p99_s": 0.03, "deadline_misses": 1,
+//!             "goodput_kps": 90.0}
+//!          ]}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use kernelet::bench::once;
+use kernelet::figures::tenancy::{
+    tenancy_sweep, TenancyPoint, DEFAULT_DEADLINE_SCALE, DEFAULT_FAIR_WEIGHTS,
+    DEFAULT_LATENCY_FRACTION, DEFAULT_TENANT_SHARES, TENANCY_LOADS, TENANCY_POLICIES,
+    TENANCY_SCENARIOS,
+};
+use kernelet::figures::FigOptions;
+use kernelet::kernel::TenantId;
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    let opts = FigOptions { instances_per_app: instances, ..Default::default() };
+
+    let ((points, capacity), dt) = once("tenancy::tenancy_sweep", || {
+        tenancy_sweep(
+            &opts,
+            &TENANCY_LOADS,
+            &TENANCY_SCENARIOS,
+            &DEFAULT_TENANT_SHARES,
+            &DEFAULT_FAIR_WEIGHTS,
+            DEFAULT_LATENCY_FRACTION,
+            DEFAULT_DEADLINE_SCALE,
+        )
+    });
+
+    println!(
+        "{:>9} {:>6} {:>10} {:>7} {:>6} {:>7} {:>10} {:>6} {:>5}",
+        "scenario", "load", "policy", "tenant", "done", "share", "p99_s", "miss", "shed"
+    );
+    for p in &points {
+        for row in &p.tenants {
+            println!(
+                "{:>9} {:>6.2} {:>10} {:>7} {:>6} {:>7.3} {:>10.5} {:>6} {:>5}",
+                p.scenario,
+                p.load,
+                p.policy,
+                row.tenant,
+                row.stats.completed,
+                p.service_share(row.tenant),
+                row.stats.p99_turnaround_secs,
+                row.stats.deadline_misses,
+                row.shed
+            );
+        }
+    }
+
+    let json = to_json(&points, instances, capacity, dt.as_millis());
+    let out = std::env::var("KERNELET_TENANCY_OUT")
+        .unwrap_or_else(|_| "BENCH_tenancy.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            // CI schema-checks this file next; a stale copy passing the
+            // check would silently freeze the recorded trajectory.
+            eprintln!("could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn tenant_json(p: &TenancyPoint, t: TenantId) -> String {
+    let row = p.tenants.iter().find(|r| r.tenant == t).expect("tenant row present");
+    format!(
+        "{{\"tenant\":{},\"submitted\":{},\"completed\":{},\"share\":{},\
+         \"service_secs\":{},\"shed\":{},\"p50_s\":{},\"p99_s\":{},\
+         \"deadline_misses\":{},\"goodput_kps\":{}}}",
+        row.tenant.0,
+        row.submitted,
+        row.stats.completed,
+        p.service_share(t),
+        row.service_secs,
+        row.shed,
+        row.stats.p50_turnaround_secs,
+        row.stats.p99_turnaround_secs,
+        row.stats.deadline_misses,
+        row.goodput_kps
+    )
+}
+
+/// Group the flat point list into one curve per (scenario, policy).
+fn to_json(points: &[TenancyPoint], instances: u32, capacity: f64, wall_ms: u128) -> String {
+    let mut curves = Vec::new();
+    for &scenario in &TENANCY_SCENARIOS {
+        for &policy in &TENANCY_POLICIES {
+            let pts: Vec<String> = points
+                .iter()
+                .filter(|p| p.scenario == scenario && p.policy == policy)
+                .map(|p| {
+                    let tenants: Vec<String> = p
+                        .tenants
+                        .iter()
+                        .map(|row| tenant_json(p, row.tenant))
+                        .collect();
+                    format!(
+                        "{{\"load\":{},\"kernels\":{},\"throughput_kps\":{},\"tenants\":[{}]}}",
+                        p.load,
+                        p.kernels,
+                        p.throughput_kps,
+                        tenants.join(",")
+                    )
+                })
+                .collect();
+            curves.push(format!(
+                "{{\"scenario\":\"{scenario}\",\"policy\":\"{policy}\",\"points\":[{}]}}",
+                pts.join(",")
+            ));
+        }
+    }
+    let shares: Vec<String> = DEFAULT_TENANT_SHARES.iter().map(|s| s.to_string()).collect();
+    let weights: Vec<String> = DEFAULT_FAIR_WEIGHTS.iter().map(|w| w.to_string()).collect();
+    format!(
+        "{{\"bench\":\"tenancy\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\
+         \"instances_per_app\":{instances},\"tenant_shares\":[{}],\"fair_weights\":[{}],\
+         \"latency_fraction\":{DEFAULT_LATENCY_FRACTION},\
+         \"deadline_scale\":{DEFAULT_DEADLINE_SCALE},\"base_capacity_kps\":{capacity},\
+         \"wall_ms\":{wall_ms},\"curves\":[{}]}}\n",
+        shares.join(","),
+        weights.join(","),
+        curves.join(",")
+    )
+}

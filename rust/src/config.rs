@@ -1,4 +1,5 @@
-//! GPU architecture configurations (paper Table 2).
+//! GPU architecture configurations (paper Table 2) and the unified
+//! spec layer every experiment is configured through.
 //!
 //! Kernelet is evaluated on an NVIDIA Tesla C2050 (Fermi GF110) and a
 //! GTX680 (Kepler GK104). Since no such hardware exists in this
@@ -6,6 +7,24 @@
 //! [`crate::sim`] and the Markov model in [`crate::model`]. Values marked
 //! "calibrated" are not in Table 2 and were chosen to reproduce the
 //! paper's *shapes* (see DESIGN.md §2).
+//!
+//! The spec layer ([`WorkloadSpec`] + [`PolicySpec`]) is the single
+//! place where experiment configuration strings become objects: every
+//! name→policy mapping the CLI, the figure sweeps and the benches
+//! share lives here (or in
+//! [`AdmissionSpec`](crate::coordinator::AdmissionSpec), which the
+//! layer re-groups), so adding a selector, routing policy or admission
+//! policy is wired in exactly one place. [`SelectorSpec`] and
+//! [`DispatchSpec`] follow `AdmissionSpec`'s `from_name`/`name`/`build`
+//! contract; [`WorkloadSpec`] bundles scenario + mix + load + seed +
+//! [`QosMix`] + [`TenantMix`] and builds the arrival source.
+
+use crate::coordinator::admission::AdmissionSpec;
+use crate::coordinator::deadline::DeadlineSelector;
+use crate::coordinator::engine::{FifoSelector, KerneletSelector, PreemptCost, Selector};
+use crate::coordinator::fairshare::FairShareSelector;
+use crate::coordinator::multigpu::DispatchPolicy;
+use crate::workload::{scenario_source, ArrivalSource, Mix, QosMix, TenantMix};
 
 /// GPU micro-architecture generation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -212,6 +231,264 @@ impl GpuConfig {
     }
 }
 
+// ---------------------------------------------------------------------
+// The unified spec layer
+// ---------------------------------------------------------------------
+
+/// Scheduling-selector configuration — the single name→selector
+/// mapping the CLI, the figure sweeps and the benches share (the
+/// [`AdmissionSpec`] pattern applied to the selector axis).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectorSpec {
+    /// Model-driven greedy co-scheduling
+    /// ([`KerneletSelector`], Alg. 1).
+    Kernelet,
+    /// BASE consolidation ([`FifoSelector`]).
+    Base,
+    /// EDF-gated Kernelet ([`DeadlineSelector`]), optionally with
+    /// mid-slice preemption at the given cost.
+    Deadline {
+        /// Mid-slice preemption cost; `None` disables preemption.
+        preempt: Option<PreemptCost>,
+    },
+    /// Weighted-fair tenancy gate over the deadline selector
+    /// ([`FairShareSelector`]).
+    FairShare {
+        /// Per-tenant weights indexed by [`crate::kernel::TenantId`];
+        /// fewer than two entries leaves the gate inert.
+        weights: Vec<f64>,
+        /// Virtual-time lead window in slice-seconds; `None` uses
+        /// [`FairShareSelector::DEFAULT_MAX_LEAD_SECS`].
+        max_lead_secs: Option<f64>,
+    },
+}
+
+impl SelectorSpec {
+    /// Every name [`SelectorSpec::from_name`] accepts.
+    pub const NAMES: [&'static str; 4] = ["kernelet", "base", "deadline", "fairshare"];
+
+    /// Name → spec with default parameters (`deadline` without
+    /// preemption; `fairshare` over two equal-weight tenants). `None`
+    /// on an unknown name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "kernelet" => Some(SelectorSpec::Kernelet),
+            "base" => Some(SelectorSpec::Base),
+            "deadline" => Some(SelectorSpec::Deadline { preempt: None }),
+            "fairshare" => Some(SelectorSpec::FairShare {
+                weights: vec![1.0, 1.0],
+                max_lead_secs: None,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The spec's policy name (inverse of [`SelectorSpec::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorSpec::Kernelet => "kernelet",
+            SelectorSpec::Base => "base",
+            SelectorSpec::Deadline { .. } => "deadline",
+            SelectorSpec::FairShare { .. } => "fairshare",
+        }
+    }
+
+    /// Build a fresh selector instance.
+    pub fn build(&self) -> Box<dyn Selector> {
+        match self {
+            SelectorSpec::Kernelet => Box::new(KerneletSelector),
+            SelectorSpec::Base => Box::new(FifoSelector),
+            SelectorSpec::Deadline { preempt: None } => Box::new(DeadlineSelector::new()),
+            SelectorSpec::Deadline { preempt: Some(cost) } => {
+                Box::new(DeadlineSelector::new().with_preemption(*cost))
+            }
+            SelectorSpec::FairShare { weights, max_lead_secs } => {
+                let sel = FairShareSelector::new(weights);
+                Box::new(match max_lead_secs {
+                    Some(lead) => sel.with_max_lead_secs(*lead),
+                    None => sel,
+                })
+            }
+        }
+    }
+}
+
+/// Fleet-routing configuration — the name→[`DispatchPolicy`] mapping
+/// every call site shares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchSpec {
+    /// Oblivious rotation ([`DispatchPolicy::RoundRobin`]).
+    RoundRobin,
+    /// Live-backlog routing ([`DispatchPolicy::LeastLoaded`]).
+    LeastLoaded,
+    /// QoS-split routing ([`DispatchPolicy::SloAware`]).
+    SloAware,
+    /// Calibrated-ETA deadline routing
+    /// ([`DispatchPolicy::EarliestFeasible`], name `efc`).
+    EarliestFeasible,
+}
+
+impl DispatchSpec {
+    /// Every name [`DispatchSpec::from_name`] accepts.
+    pub const NAMES: [&'static str; 4] = ["roundrobin", "leastloaded", "sloaware", "efc"];
+
+    /// Name → spec; `None` on an unknown name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "roundrobin" => Some(DispatchSpec::RoundRobin),
+            "leastloaded" => Some(DispatchSpec::LeastLoaded),
+            "sloaware" => Some(DispatchSpec::SloAware),
+            "efc" => Some(DispatchSpec::EarliestFeasible),
+            _ => None,
+        }
+    }
+
+    /// The spec's policy name (inverse of [`DispatchSpec::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchSpec::RoundRobin => "roundrobin",
+            DispatchSpec::LeastLoaded => "leastloaded",
+            DispatchSpec::SloAware => "sloaware",
+            DispatchSpec::EarliestFeasible => "efc",
+        }
+    }
+
+    /// The routing policy the spec names.
+    pub fn build(&self) -> DispatchPolicy {
+        match self {
+            DispatchSpec::RoundRobin => DispatchPolicy::RoundRobin,
+            DispatchSpec::LeastLoaded => DispatchPolicy::LeastLoaded,
+            DispatchSpec::SloAware => DispatchPolicy::SloAware,
+            DispatchSpec::EarliestFeasible => DispatchPolicy::EarliestFeasible,
+        }
+    }
+}
+
+/// Everything policy-shaped about one experiment under one roof: the
+/// scheduling selector, optional fleet routing, optional admission
+/// gate. Construct with [`PolicySpec::new`] and chain the `with_*`
+/// setters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    /// Per-device scheduling selector.
+    pub selector: SelectorSpec,
+    /// Fleet routing; `None` runs single-device.
+    pub dispatch: Option<DispatchSpec>,
+    /// Admission gate; `None` admits everything (the exact pre-gate
+    /// engine, not an `AdmitAll` instance).
+    pub admission: Option<AdmissionSpec>,
+}
+
+impl PolicySpec {
+    /// A single-device, ungated policy around `selector`.
+    pub fn new(selector: SelectorSpec) -> Self {
+        Self { selector, dispatch: None, admission: None }
+    }
+
+    /// Route across a fleet with `dispatch` (builder style, matching
+    /// [`EngineBuilder`](crate::coordinator::EngineBuilder)).
+    pub fn dispatch(mut self, dispatch: DispatchSpec) -> Self {
+        self.dispatch = Some(dispatch);
+        self
+    }
+
+    /// Gate arrivals through `admission`.
+    pub fn admission(mut self, admission: AdmissionSpec) -> Self {
+        self.admission = Some(admission);
+        self
+    }
+}
+
+/// Everything workload-shaped about one experiment: scenario name,
+/// application mix, per-app instance count, offered load factor, seed,
+/// QoS stamping and tenant stamping. [`WorkloadSpec::source`] is the
+/// one place arrival sources are built from configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Scenario name (see
+    /// [`SCENARIO_NAMES`](crate::workload::SCENARIO_NAMES)).
+    pub scenario: String,
+    /// Application mix (paper Table 5).
+    pub mix: Mix,
+    /// Kernel instances per application.
+    pub instances_per_app: u32,
+    /// Offered load relative to the capacity passed to
+    /// [`WorkloadSpec::source`].
+    pub load: f64,
+    /// RNG seed for the arrival process.
+    pub seed: u64,
+    /// Service-class stamping ([`QosMix::ALL_BATCH`] = off).
+    pub qos: QosMix,
+    /// Tenant stamping ([`TenantMix::SINGLE`] = off; single-tenant
+    /// attachment returns the source object unchanged, so tenancy-off
+    /// is bit-identical to the pre-tenant pipeline).
+    pub tenants: TenantMix,
+}
+
+impl WorkloadSpec {
+    /// A `scenario` over `mix` with the crate defaults: 100
+    /// instances/app, load 1.0, [`crate::sim::DEFAULT_SEED`], no QoS
+    /// stamping, single tenant.
+    pub fn new(scenario: &str, mix: Mix) -> Self {
+        Self {
+            scenario: scenario.to_string(),
+            mix,
+            instances_per_app: 100,
+            load: 1.0,
+            seed: crate::sim::DEFAULT_SEED,
+            qos: QosMix::ALL_BATCH,
+            tenants: TenantMix::SINGLE,
+        }
+    }
+
+    /// Set the per-application instance count.
+    pub fn instances(mut self, per_app: u32) -> Self {
+        self.instances_per_app = per_app;
+        self
+    }
+
+    /// Set the offered load factor.
+    pub fn load(mut self, load: f64) -> Self {
+        self.load = load;
+        self
+    }
+
+    /// Set the arrival seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Stamp arrivals with `qos`.
+    pub fn qos(mut self, qos: QosMix) -> Self {
+        self.qos = qos;
+        self
+    }
+
+    /// Stamp arrivals with `tenants`.
+    pub fn tenants(mut self, tenants: TenantMix) -> Self {
+        self.tenants = tenants;
+        self
+    }
+
+    /// Build the arrival source: the scenario factory at
+    /// `load × capacity_kps` offered kernels/sec, tenant-stamped.
+    /// `capacity_kps` is the caller's capacity reference — per-device
+    /// BASE capacity for single-device runs, fleet capacity for
+    /// routing sweeps.
+    pub fn source(&self, capacity_kps: f64) -> anyhow::Result<Box<dyn ArrivalSource>> {
+        let src = scenario_source(
+            &self.scenario,
+            self.mix,
+            self.instances_per_app,
+            self.load * capacity_kps,
+            self.seed,
+            self.qos,
+        )?;
+        Ok(self.tenants.attach(src))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,5 +557,72 @@ mod tests {
         // SAD-like: occupancy 8 warps/48 = 16.7% (paper Table 4).
         let occ = c.occupancy(32, 16, 0);
         assert!((occ - 8.0 / 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn selector_spec_round_trips_names_and_builds() {
+        for name in SelectorSpec::NAMES {
+            let spec = SelectorSpec::from_name(name).unwrap();
+            assert_eq!(spec.name(), name);
+            assert_eq!(spec.build().name(), name);
+        }
+        assert!(SelectorSpec::from_name("nope").is_none());
+        // Parameterized variants keep their names.
+        let d = SelectorSpec::Deadline { preempt: Some(PreemptCost::uniform(1e-5)) };
+        assert_eq!(d.build().name(), "deadline");
+        let fs = SelectorSpec::FairShare { weights: vec![3.0, 1.0], max_lead_secs: Some(0.1) };
+        assert_eq!(fs.build().name(), "fairshare");
+    }
+
+    #[test]
+    fn dispatch_spec_round_trips_names() {
+        for name in DispatchSpec::NAMES {
+            let spec = DispatchSpec::from_name(name).unwrap();
+            assert_eq!(spec.name(), name);
+        }
+        assert!(DispatchSpec::from_name("nope").is_none());
+        assert_eq!(DispatchSpec::from_name("efc").unwrap().build(), DispatchPolicy::EarliestFeasible);
+    }
+
+    #[test]
+    fn policy_spec_composes_the_three_axes() {
+        let p = PolicySpec::new(SelectorSpec::Kernelet)
+            .dispatch(DispatchSpec::LeastLoaded)
+            .admission(AdmissionSpec::BacklogCap { cap: 8 });
+        assert_eq!(p.selector.name(), "kernelet");
+        assert_eq!(p.dispatch.unwrap().name(), "leastloaded");
+        assert_eq!(p.admission.unwrap().name(), "backlogcap");
+        let bare = PolicySpec::new(SelectorSpec::Base);
+        assert!(bare.dispatch.is_none() && bare.admission.is_none());
+    }
+
+    #[test]
+    fn workload_spec_builds_stamped_sources() {
+        use crate::kernel::TenantId;
+        // Scenario factory behind the spec: same scenario, same
+        // arrivals; the tenant mix stamps without perturbing them.
+        let spec = WorkloadSpec::new("poisson", Mix::MIX)
+            .instances(3)
+            .load(2.0)
+            .seed(9)
+            .qos(QosMix::latency_share(0.5, 1.0))
+            .tenants(TenantMix::split(&[3.0, 1.0]));
+        let mut src = spec.source(25.0).unwrap();
+        let mut plain = scenario_source(
+            "poisson", Mix::MIX, 3, 50.0, 9, QosMix::latency_share(0.5, 1.0),
+        )
+        .unwrap();
+        let mut tenants = std::collections::BTreeSet::new();
+        while let Some(k) = src.next_arrival() {
+            let p = plain.next_arrival().unwrap();
+            assert_eq!(k.id, p.id);
+            assert_eq!(k.arrival_time.to_bits(), p.arrival_time.to_bits());
+            tenants.insert(k.tenant);
+        }
+        assert!(plain.next_arrival().is_none());
+        assert_eq!(tenants.len(), 2, "both tenants stamped");
+        assert!(tenants.contains(&TenantId(0)) && tenants.contains(&TenantId(1)));
+        // Unknown scenarios surface the factory's error.
+        assert!(WorkloadSpec::new("nope", Mix::MIX).source(25.0).is_err());
     }
 }

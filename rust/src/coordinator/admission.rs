@@ -26,6 +26,15 @@
 //!   exceeds the slack budget, or it threatens a pending deadline —
 //!   and shed once the deferred queue overflows. Deferred work
 //!   re-enters in deferral order as soon as pressure drops.
+//! - [`TenantQuota`] — per-tenant quotas wrapped around [`SloGuard`]:
+//!   before the class-based gate runs, an arrival whose tenant already
+//!   holds more than its share of the pending set is deferred,
+//!   whatever its class — client-visible backpressure against a
+//!   flooding tenant (closed-loop sources observe the shed via
+//!   [`ArrivalSource::on_shed`](crate::workload::ArrivalSource::on_shed)
+//!   and retry with jittered think-time). With every pending kernel
+//!   belonging to one tenant the quota is vacuous and the policy *is*
+//!   [`SloGuard`].
 //!
 //! The [`AdmissionController`] owns the policy, the deferred queue and
 //! the per-class accounting ([`AdmissionReport`]); the engine consults
@@ -228,6 +237,80 @@ impl AdmissionPolicy for SloGuard {
     }
 }
 
+/// Per-tenant admission quotas layered on [`SloGuard`] (see the module
+/// docs): an arrival whose tenant would exceed `max_backlog_share` of
+/// the pending set is deferred before the class-based gate even runs.
+/// Latency-class work is *not* exempt — the quota is precisely the
+/// protection against a tenant flooding the protected class.
+///
+/// The quota engages only once the backlog is deep enough to make a
+/// share meaningful ([`TenantQuota::MIN_BACKLOG`]) and only while the
+/// pending set holds more than one tenant — a sole tenant harms nobody
+/// by queueing, so single-tenant runs see exactly [`SloGuard`].
+pub struct TenantQuota {
+    guard: SloGuard,
+    /// Largest fraction of the pending set one tenant may hold before
+    /// its arrivals are deferred.
+    pub max_backlog_share: f64,
+}
+
+impl TenantQuota {
+    /// Default per-tenant cap on the pending-set share.
+    pub const DEFAULT_MAX_BACKLOG_SHARE: f64 = 0.6;
+    /// Backlog depth below which the quota never engages (shares over
+    /// a handful of kernels are noise, and an idle device should take
+    /// anyone's work).
+    pub const MIN_BACKLOG: usize = 8;
+
+    /// A quota policy capping each tenant at `max_backlog_share` of
+    /// the pending set, over a [`SloGuard`] with the given slack
+    /// budget and deferred-queue bound.
+    pub fn new(slack_budget_secs: f64, max_deferred: usize, max_backlog_share: f64) -> Self {
+        assert!(
+            max_backlog_share > 0.0 && max_backlog_share <= 1.0,
+            "backlog share {max_backlog_share} must be in (0, 1]"
+        );
+        Self { guard: SloGuard::new(slack_budget_secs, max_deferred), max_backlog_share }
+    }
+
+    /// Whether admitting `k` keeps its tenant inside the quota.
+    fn quota_ok(&self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> bool {
+        let backlog = ctx.backlog();
+        if backlog < Self::MIN_BACKLOG {
+            return true;
+        }
+        let mine = ctx.pending.iter().filter(|p| p.tenant == k.tenant).count();
+        if mine == backlog {
+            // The whole queue is already this tenant's: nobody else is
+            // waiting, so queueing deeper harms no other tenant (and
+            // single-tenant runs reduce to the plain SloGuard).
+            return true;
+        }
+        (mine + 1) as f64 <= self.max_backlog_share * (backlog + 1) as f64
+    }
+}
+
+impl AdmissionPolicy for TenantQuota {
+    fn name(&self) -> &'static str {
+        "tenantquota"
+    }
+
+    fn decide(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> AdmissionDecision {
+        if !self.quota_ok(ctx, k) {
+            return AdmissionDecision::Defer;
+        }
+        self.guard.decide(ctx, k)
+    }
+
+    fn release(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance) -> bool {
+        self.quota_ok(ctx, k) && self.guard.decide(ctx, k) == AdmissionDecision::Admit
+    }
+
+    fn defer_capacity(&self) -> usize {
+        self.guard.max_deferred
+    }
+}
+
 /// A cloneable policy configuration — what the CLI, the benches and
 /// the multi-GPU dispatcher (which needs one instance per device)
 /// build [`AdmissionPolicy`] values from.
@@ -247,14 +330,24 @@ pub enum AdmissionSpec {
         /// Deferred-queue bound; deferrals past it are shed.
         max_deferred: usize,
     },
+    /// Per-tenant quotas over a [`SloGuard`] ([`TenantQuota`]).
+    TenantQuota {
+        /// Projected-backlog budget batch admissions must fit in.
+        slack_budget_secs: f64,
+        /// Deferred-queue bound; deferrals past it are shed.
+        max_deferred: usize,
+        /// Largest pending-set fraction one tenant may hold.
+        max_backlog_share: f64,
+    },
 }
 
 impl AdmissionSpec {
     /// Policy names accepted by [`AdmissionSpec::from_name`].
-    pub const NAMES: [&'static str; 3] = ["admitall", "backlogcap", "sloguard"];
+    pub const NAMES: [&'static str; 4] = ["admitall", "backlogcap", "sloguard", "tenantquota"];
 
     /// Parse a CLI/bench policy name. `backlog_cap` parameterizes
-    /// `backlogcap`; `slack_budget_secs` parameterizes `sloguard`.
+    /// `backlogcap`; `slack_budget_secs` parameterizes `sloguard` and
+    /// `tenantquota`.
     pub fn from_name(name: &str, backlog_cap: usize, slack_budget_secs: f64) -> Option<Self> {
         match name {
             "admitall" => Some(AdmissionSpec::AdmitAll),
@@ -262,6 +355,11 @@ impl AdmissionSpec {
             "sloguard" => Some(AdmissionSpec::SloGuard {
                 slack_budget_secs,
                 max_deferred: SloGuard::DEFAULT_MAX_DEFERRED,
+            }),
+            "tenantquota" => Some(AdmissionSpec::TenantQuota {
+                slack_budget_secs,
+                max_deferred: SloGuard::DEFAULT_MAX_DEFERRED,
+                max_backlog_share: TenantQuota::DEFAULT_MAX_BACKLOG_SHARE,
             }),
             _ => None,
         }
@@ -273,6 +371,7 @@ impl AdmissionSpec {
             AdmissionSpec::AdmitAll => "admitall",
             AdmissionSpec::BacklogCap { .. } => "backlogcap",
             AdmissionSpec::SloGuard { .. } => "sloguard",
+            AdmissionSpec::TenantQuota { .. } => "tenantquota",
         }
     }
 
@@ -301,6 +400,9 @@ impl AdmissionSpec {
             AdmissionSpec::BacklogCap { cap } => Box::new(BacklogCap::new(cap)),
             AdmissionSpec::SloGuard { slack_budget_secs, max_deferred } => {
                 Box::new(SloGuard::new(slack_budget_secs, max_deferred))
+            }
+            AdmissionSpec::TenantQuota { slack_budget_secs, max_deferred, max_backlog_share } => {
+                Box::new(TenantQuota::new(slack_budget_secs, max_deferred, max_backlog_share))
             }
         }
     }
@@ -581,6 +683,49 @@ mod tests {
         let refs2: Vec<&KernelInstance> = relaxed.iter().collect();
         assert_eq!(
             guard.decide(&ctx_over(&coord, &refs2, 0.0), &small),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn tenant_quota_defers_the_flooder_and_spares_the_victim() {
+        use crate::kernel::TenantId;
+
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let spec = BenchmarkApp::MM.spec();
+        // Tenant 0 holds 7 of 8 pending slots, tenant 1 holds one; a
+        // huge slack budget keeps the SloGuard half out of the way.
+        let pending: Vec<KernelInstance> = (0..8)
+            .map(|i| {
+                KernelInstance::new(i, spec.clone(), 0.0)
+                    .with_tenant(TenantId(u32::from(i == 7)))
+            })
+            .collect();
+        let refs: Vec<&KernelInstance> = pending.iter().collect();
+        let mut quota = TenantQuota::new(1e9, 8, 0.6);
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let flood = KernelInstance::new(20, spec.clone(), 0.0).with_tenant(TenantId(0));
+        let victim = KernelInstance::new(21, spec.clone(), 0.0).with_tenant(TenantId(1));
+        // 8/9 > 0.6: deferred, even latency-class flood traffic.
+        assert_eq!(quota.decide(&ctx, &flood), AdmissionDecision::Defer);
+        let flood_latency = flood.clone().with_qos(Qos::latency(None));
+        assert_eq!(quota.decide(&ctx, &flood_latency), AdmissionDecision::Defer);
+        // 2/9 <= 0.6: the under-served tenant flows.
+        assert_eq!(quota.decide(&ctx, &victim), AdmissionDecision::Admit);
+        // Release follows the same quota: refused while the flooder
+        // still saturates the queue, granted once it has drained.
+        assert!(!quota.release(&ctx, &flood));
+        assert!(quota.release(&ctx_over(&coord, &refs[5..], 0.0), &flood));
+        // Shallow backlogs never engage the quota...
+        let shallow = ctx_over(&coord, &refs[..4], 0.0);
+        assert_eq!(quota.decide(&shallow, &flood), AdmissionDecision::Admit);
+        // ...and a queue wholly owned by one tenant harms nobody.
+        let solo_pending: Vec<KernelInstance> = (0..8)
+            .map(|i| KernelInstance::new(i, spec.clone(), 0.0).with_tenant(TenantId(0)))
+            .collect();
+        let solo_refs: Vec<&KernelInstance> = solo_pending.iter().collect();
+        assert_eq!(
+            quota.decide(&ctx_over(&coord, &solo_refs, 0.0), &flood),
             AdmissionDecision::Admit
         );
     }

@@ -47,15 +47,26 @@
 //! Tracing goes through a pluggable [`Observer`]; the
 //! `KERNELET_TRACE` environment variable is read once at construction,
 //! never in the dispatch hot path.
+//!
+//! Construction goes through [`EngineBuilder`] — timing backend,
+//! observer and admission gate configured in one place — with the old
+//! `Engine::with_*` constructors kept as thin deprecated shims.
+//! Tenancy is likewise first-class: every [`KernelInstance`] carries a
+//! [`TenantId`], and the report breaks completions, shed counts,
+//! service seconds and goodput out per tenant ([`TenantStats`]) so
+//! fair-share policies are measurable. With a single tenant the extra
+//! accounting collapses to one [`TenantId::SOLE`] row and the dispatch
+//! sequence is bit-identical to the pre-tenant engine (pinned
+//! differentially in `tests/tenancy_invariants.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::admission::{
     AdmissionController, AdmissionDecision, AdmissionPolicy, AdmissionReport, ClassAdmission,
 };
 use super::greedy::{CoSchedule, Coordinator};
 use super::simcache::SimCache;
-use crate::kernel::{KernelInstance, KernelSpec, Qos, ServiceClass};
+use crate::kernel::{KernelInstance, KernelSpec, Qos, ServiceClass, TenantId};
 use crate::stats::percentile;
 use crate::workload::{ArrivalSource, Stream};
 
@@ -492,6 +503,60 @@ impl QosReport {
     }
 }
 
+/// Per-tenant outcome of a run: turnaround percentiles pooled across
+/// service classes, plus the shed count, the device seconds consumed
+/// and the goodput credited to the tenant. The fairness figures and
+/// `check_bench.py validate_tenancy` read shares of
+/// [`TenantStats::service_secs`] to check a weighted-fair selector
+/// bounds a flooding tenant.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantStats {
+    /// The tenant the row describes.
+    pub tenant: TenantId,
+    /// Submissions by this tenant that reached the engine (admitted or
+    /// deferred-then-released; shed ones are only in
+    /// [`TenantStats::shed`]).
+    pub submitted: usize,
+    /// Turnaround percentiles and deadline accounting over the tenant's
+    /// completed kernels, both service classes pooled.
+    pub stats: ClassStats,
+    /// The tenant's arrivals rejected outright at the admission gate.
+    pub shed: u64,
+    /// Device service seconds consumed by the tenant's slices. A
+    /// co-scheduled round charges *both* kernels the full round
+    /// duration (each occupied the device for it), so across tenants
+    /// these can sum past the makespan — shares, not absolute seconds,
+    /// are the fairness signal.
+    pub service_secs: f64,
+    /// Completions that met their deadline (no deadline counts as met)
+    /// — the numerator behind [`TenantStats::goodput_kps`], kept so
+    /// fleet merges can recompute goodput against the fleet makespan.
+    pub completed_in_deadline: usize,
+    /// Completed-within-deadline kernels of this tenant per second of
+    /// makespan.
+    pub goodput_kps: f64,
+}
+
+impl TenantStats {
+    /// Exact merge of the same tenant's rows from two devices (samples
+    /// pooled, counters summed). Goodput is recomputed by the caller
+    /// against the fleet makespan from the merged
+    /// [`TenantStats::completed_in_deadline`]; here it is zeroed to
+    /// make an un-recomputed merge obvious.
+    pub fn merge(&self, other: &TenantStats) -> TenantStats {
+        debug_assert_eq!(self.tenant, other.tenant, "merging rows of different tenants");
+        TenantStats {
+            tenant: self.tenant,
+            submitted: self.submitted + other.submitted,
+            stats: self.stats.merge(&other.stats),
+            shed: self.shed + other.shed,
+            service_secs: self.service_secs + other.service_secs,
+            completed_in_deadline: self.completed_in_deadline + other.completed_in_deadline,
+            goodput_kps: 0.0,
+        }
+    }
+}
+
 /// Outcome of running a stream to completion under some policy.
 #[derive(Debug, Clone)]
 pub struct ExecutionReport {
@@ -542,6 +607,14 @@ pub struct ExecutionReport {
     /// makespan. Equals `throughput_kps` when nothing carries a
     /// deadline or nothing misses.
     pub goodput_kps: f64,
+    /// Per-tenant breakdown, sorted by tenant id. A tenancy-agnostic
+    /// run collapses to one [`TenantId::SOLE`] row whose numbers equal
+    /// the run-wide ones.
+    pub tenants: Vec<TenantStats>,
+    /// Shed submissions the arrival source re-queued for another try
+    /// ([`ArrivalSource::retries`]) — client-visible backpressure, 0
+    /// for open-loop sources and [`Engine::run`] replays.
+    pub shed_retries: u64,
 }
 
 impl ExecutionReport {
@@ -557,6 +630,11 @@ impl ExecutionReport {
         }
         self.queue_depth.iter().map(|&(_, d)| d as f64).sum::<f64>()
             / self.queue_depth.len() as f64
+    }
+
+    /// The per-tenant row for `tenant`, if it submitted or was shed.
+    pub fn tenant(&self, tenant: TenantId) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.tenant == tenant)
     }
 
     /// Blocks dispatched per instance id (work-conservation checks).
@@ -595,6 +673,16 @@ pub struct Engine<'a> {
     /// and the multi-GPU dispatcher drain this to feed closed-loop
     /// sources.
     completed_log: Vec<(u64, f64)>,
+    /// Tenant of every submitted id — the join key turning the
+    /// tenant-less `submitted` tuples and the slice trace into
+    /// [`TenantStats`] rows at close.
+    tenant_of: HashMap<u64, TenantId>,
+    /// Arrivals shed at the gate, counted per tenant (shed kernels
+    /// never reach `submitted`, so this is the only record of them).
+    tenant_shed: BTreeMap<TenantId, u64>,
+    /// Shed submissions the source re-queued, read off the source at
+    /// the end of [`Engine::run_source`].
+    shed_retries: u64,
     /// Admission gate ([`Engine::with_admission`]): every
     /// [`Engine::offer`] consults it, and deferred kernels are released
     /// back into the pending set before each dispatch decision. `None`
@@ -628,11 +716,15 @@ impl<'a> Engine<'a> {
             queue_depth: Vec::new(),
             submitted: Vec::new(),
             completed_log: Vec::new(),
+            tenant_of: HashMap::new(),
+            tenant_shed: BTreeMap::new(),
+            shed_retries: 0,
             admission: None,
         }
     }
 
     /// Swap the timing backend (e.g. `runtime::PjrtBackend`).
+    #[deprecated(note = "configure through EngineBuilder::timing instead")]
     pub fn with_timing(mut self, timing: &'a dyn TimingBackend) -> Self {
         self.timing = timing;
         self
@@ -641,12 +733,14 @@ impl<'a> Engine<'a> {
     /// Install an admission policy: every [`Engine::offer`] passes
     /// through it before the pending set, and deferred kernels are
     /// re-admitted as pressure drops.
+    #[deprecated(note = "configure through EngineBuilder::admission instead")]
     pub fn with_admission(mut self, policy: Box<dyn AdmissionPolicy>) -> Self {
         self.admission = Some(AdmissionController::new(policy));
         self
     }
 
     /// Install a trace observer (replaces any `KERNELET_TRACE` default).
+    #[deprecated(note = "configure through EngineBuilder::observer instead")]
     pub fn with_observer(mut self, obs: Box<dyn Observer + 'a>) -> Self {
         self.observer = Some(obs);
         self
@@ -681,6 +775,7 @@ impl<'a> Engine<'a> {
             }
         }
         self.submitted.push((k.id, k.arrival_time, k.qos));
+        self.tenant_of.insert(k.id, k.tenant);
         self.queue.push(k);
     }
 
@@ -715,7 +810,9 @@ impl<'a> Engine<'a> {
         match decision {
             AdmissionDecision::Admit => self.submit(k),
             AdmissionDecision::Defer => ctrl.push_deferred(k),
-            AdmissionDecision::Shed => {}
+            AdmissionDecision::Shed => {
+                *self.tenant_shed.entry(k.tenant).or_insert(0) += 1;
+            }
         }
         self.admission = Some(ctrl);
         decision
@@ -890,8 +987,17 @@ impl<'a> Engine<'a> {
                 }
             }
             let k = source.next_arrival().expect("peeked arrival disappeared");
-            self.offer(k);
+            let (id, at) = (k.id, k.arrival_time);
+            if self.offer(k) == AdmissionDecision::Shed {
+                // Client-visible backpressure: tell the source its
+                // submission was rejected (the decision happens at the
+                // arrival instant, like the admission context) so
+                // closed-loop clients can re-queue instead of losing
+                // the kernel silently.
+                source.on_shed(id, self.secs(self.clock_cycles).max(at));
+            }
         }
+        self.shed_retries = source.retries();
         self.finish_online()
     }
 
@@ -936,11 +1042,26 @@ impl<'a> Engine<'a> {
             ServiceClass::Latency => 0usize,
             ServiceClass::Batch => 1,
         };
+        // Per-tenant accumulators, classes pooled:
+        // (submitted, turnarounds, with_deadline, misses, in_deadline).
+        #[derive(Default)]
+        struct TenantAcc {
+            submitted: usize,
+            turnarounds: Vec<f64>,
+            with_deadline: usize,
+            misses: usize,
+            in_deadline: usize,
+        }
+        let mut by_tenant: BTreeMap<TenantId, TenantAcc> = BTreeMap::new();
         for &(id, arrival_time, qos) in arrivals {
             let c = class_idx(qos.class);
             submitted_of_class[c] += 1;
+            let tenant = self.tenant_of.get(&id).copied().unwrap_or(TenantId::SOLE);
+            let acc = by_tenant.entry(tenant).or_default();
+            acc.submitted += 1;
             if qos.deadline.is_some() {
                 with_deadline[c] += 1;
+                acc.with_deadline += 1;
             }
             match self.completion.get(&id) {
                 Some(&done) => {
@@ -948,22 +1069,56 @@ impl<'a> Engine<'a> {
                     turn += t;
                     completed_of_stream += 1;
                     turns[c].push(t);
+                    acc.turnarounds.push(t);
                     if qos.deadline.map_or(false, |d| done > d) {
                         misses[c] += 1;
+                        acc.misses += 1;
                     } else {
                         // Met its deadline — or never carried one; both
                         // count toward goodput.
                         completed_in_deadline += 1;
+                        acc.in_deadline += 1;
                     }
                 }
                 None => {
                     // Never finished: a deadlined kernel is a miss.
                     if qos.deadline.is_some() {
                         misses[c] += 1;
+                        acc.misses += 1;
                     }
                 }
             }
         }
+        // Device seconds per tenant: every slice charges its kernel's
+        // tenant the round duration; a pair round charges both sides.
+        let mut service: BTreeMap<TenantId, f64> = BTreeMap::new();
+        for rec in &self.slice_trace {
+            let dur = self.secs(rec.end_cycles - rec.start_cycles);
+            let t1 = self.tenant_of.get(&rec.k1).copied().unwrap_or(TenantId::SOLE);
+            *service.entry(t1).or_insert(0.0) += dur;
+            if let Some((id2, _)) = rec.k2 {
+                let t2 = self.tenant_of.get(&id2).copied().unwrap_or(TenantId::SOLE);
+                *service.entry(t2).or_insert(0.0) += dur;
+            }
+        }
+        // One row per tenant that submitted *or* was shed (a fully
+        // shed-out tenant still shows up, with empty stats).
+        for &tenant in self.tenant_shed.keys() {
+            by_tenant.entry(tenant).or_default();
+        }
+        let tenant_total_secs = self.secs(self.clock_cycles);
+        let tenant_rows: Vec<TenantStats> = by_tenant
+            .into_iter()
+            .map(|(tenant, acc)| TenantStats {
+                tenant,
+                submitted: acc.submitted,
+                stats: ClassStats::from_parts(acc.turnarounds, acc.with_deadline, acc.misses),
+                shed: self.tenant_shed.get(&tenant).copied().unwrap_or(0),
+                service_secs: service.get(&tenant).copied().unwrap_or(0.0),
+                completed_in_deadline: acc.in_deadline,
+                goodput_kps: acc.in_deadline as f64 / tenant_total_secs.max(1e-12),
+            })
+            .collect();
         let [lat_turns, batch_turns] = turns;
         let qos = QosReport {
             latency: ClassStats::from_parts(lat_turns, with_deadline[0], misses[0]),
@@ -991,6 +1146,8 @@ impl<'a> Engine<'a> {
         ExecutionReport {
             qos,
             admission,
+            tenants: tenant_rows,
+            shed_retries: self.shed_retries,
             completed_in_deadline,
             goodput_kps: completed_in_deadline as f64 / total_secs.max(1e-12),
             total_cycles: self.clock_cycles,
@@ -1234,6 +1391,73 @@ impl<'a> Engine<'a> {
     }
 }
 
+/// The one way to configure an [`Engine`]: timing backend, observer
+/// and admission gate under a single builder instead of the
+/// `Engine::with_*` constructor sprawl (now deprecated shims).
+///
+/// [`EngineBuilder::build`] with nothing set is exactly
+/// [`Engine::new`] — same `KERNELET_TRACE` handling, bit-identical
+/// runs (pinned in `tests/scheduling_invariants.rs`). Slice-cache
+/// persistence (the CLI's `--cache-dir`) stays a *coordinator*
+/// concern — the [`super::SimCache`] is shared across every engine on
+/// the device — so it deliberately does not appear in this per-run
+/// builder.
+///
+/// # Examples
+///
+/// ```
+/// use kernelet::config::GpuConfig;
+/// use kernelet::coordinator::{
+///     AdmissionSpec, Coordinator, EngineBuilder, KerneletSelector,
+/// };
+/// use kernelet::workload::{Mix, Stream};
+///
+/// let coord = Coordinator::new(&GpuConfig::c2050());
+/// let engine = EngineBuilder::new(&coord)
+///     .admission(AdmissionSpec::BacklogCap { cap: 64 }.build())
+///     .build();
+/// let stream = Stream::saturated(Mix::MIX, 1, 42);
+/// let report = engine.run(&mut KerneletSelector, &stream);
+/// assert_eq!(report.incomplete, 0);
+/// ```
+pub struct EngineBuilder<'a> {
+    engine: Engine<'a>,
+}
+
+impl<'a> EngineBuilder<'a> {
+    /// Start from the defaults of [`Engine::new`]: simulator timing,
+    /// `KERNELET_TRACE`-driven observer, no admission gate.
+    pub fn new(coord: &'a Coordinator) -> Self {
+        Self { engine: Engine::new(coord) }
+    }
+
+    /// Swap the timing backend (e.g. `runtime::PjrtBackend`).
+    pub fn timing(mut self, timing: &'a dyn TimingBackend) -> Self {
+        self.engine.timing = timing;
+        self
+    }
+
+    /// Install a trace observer (replaces any `KERNELET_TRACE`
+    /// default).
+    pub fn observer(mut self, obs: Box<dyn Observer + 'a>) -> Self {
+        self.engine.observer = Some(obs);
+        self
+    }
+
+    /// Install an admission policy in front of the pending set
+    /// ([`Engine::offer`] consults it; deferred kernels re-enter as
+    /// pressure drops).
+    pub fn admission(mut self, policy: Box<dyn AdmissionPolicy>) -> Self {
+        self.engine.admission = Some(AdmissionController::new(policy));
+        self
+    }
+
+    /// Finish configuration and hand over the engine.
+    pub fn build(self) -> Engine<'a> {
+        self.engine
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1306,8 +1530,9 @@ mod tests {
         let coord = Coordinator::new(&GpuConfig::c2050());
         let stream = Stream::saturated(Mix::MIX, 1, 9);
         let n = Rc::new(RefCell::new(0));
-        let r = Engine::new(&coord)
-            .with_observer(Box::new(Count(n.clone())))
+        let r = EngineBuilder::new(&coord)
+            .observer(Box::new(Count(n.clone())))
+            .build()
             .run(&mut KerneletSelector, &stream);
         assert_eq!(*n.borrow(), r.kernels_completed);
     }
@@ -1370,6 +1595,35 @@ mod tests {
         // Empty classes merge as identities.
         let e = ClassStats::default();
         assert_eq!(e.merge(&a), a);
+    }
+
+    #[test]
+    fn tenant_rows_partition_the_run() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let mut stream = Stream::saturated(Mix::MIX, 2, 7);
+        for (i, k) in stream.instances.iter_mut().enumerate() {
+            k.tenant = TenantId((i % 2) as u32);
+        }
+        let r = Engine::new(&coord).run(&mut KerneletSelector, &stream);
+        assert_eq!(r.tenants.len(), 2);
+        let completed: usize = r.tenants.iter().map(|t| t.stats.completed).sum();
+        assert_eq!(completed, r.kernels_completed);
+        let submitted: usize = r.tenants.iter().map(|t| t.submitted).sum();
+        assert_eq!(submitted, stream.len());
+        for t in &r.tenants {
+            assert!(t.service_secs > 0.0, "tenant {} ran nothing", t.tenant);
+            assert_eq!(t.shed, 0);
+            assert_eq!(t.completed_in_deadline, t.stats.completed, "no deadlines set");
+        }
+        // A tenancy-agnostic run collapses to one SOLE row that mirrors
+        // the run-wide numbers.
+        let plain = Stream::saturated(Mix::MIX, 2, 7);
+        let solo = Engine::new(&coord).run(&mut KerneletSelector, &plain);
+        assert_eq!(solo.tenants.len(), 1);
+        let row = solo.tenant(TenantId::SOLE).expect("SOLE row missing");
+        assert_eq!(row.stats.completed, solo.kernels_completed);
+        assert_eq!(row.submitted, plain.len());
+        assert_eq!(solo.shed_retries, 0);
     }
 
     #[test]

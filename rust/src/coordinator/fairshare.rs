@@ -1,0 +1,367 @@
+//! Weighted fair-share scheduling across tenants.
+//!
+//! [`FairShareSelector`] layers tenant fairness on
+//! [`DeadlineSelector`] the same way the deadline policy layers EDF on
+//! [`KerneletSelector`](super::KerneletSelector): the inner policy
+//! proposes the throughput-optimal dispatch, and the outer layer gates
+//! it — here, against per-tenant *virtual service time*.
+//!
+//! Every dispatch charges the served kernels' tenants their expected
+//! slice-seconds (the residual-scaled
+//! [`SchedCtx::est_remaining_secs`] estimate, the same cost model the
+//! deadline policy prices urgency with) divided by the tenant's
+//! weight. While two or more tenants are backlogged, the greedy profit
+//! pick survives only if it advances the most-behind tenant (minimum
+//! virtual time) or if every tenant it serves is within a small lead
+//! window of the minimum; otherwise the pick is discarded and the
+//! most-behind tenant's head runs instead (earliest deadline first
+//! within the tenant, then arrival order). That is weighted fair
+//! queueing at slice granularity: a tenant flooding the queue can
+//! drift at most the lead window past its weighted share while any
+//! other tenant has work pending, because each excess charge makes its
+//! virtual time larger and the gate picks the minimum.
+//!
+//! A tenant entering (or re-entering) the backlog starts at the
+//! minimum virtual time of the tenants already backlogged — idle time
+//! earns no credit, so a returning tenant cannot monopolize the device
+//! to repay a deficit accumulated while it had nothing to run.
+//!
+//! **Fairness costs nothing when off:** while at most one tenant is
+//! backlogged — in particular for every pre-tenant workload, where all
+//! kernels carry [`TenantId::SOLE`] — every entry point delegates to
+//! the inner [`DeadlineSelector`] wholesale and no virtual time is
+//! charged, so the selector is decision- and report-identical to the
+//! tenant-blind policy (`tests/tenancy_invariants.rs` pins it
+//! differentially on every scenario).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::deadline::DeadlineSelector;
+use super::engine::{Decision, PreemptPoint, SchedCtx, Selector};
+use crate::kernel::{KernelInstance, TenantId};
+
+/// Weighted fair-share gate over [`DeadlineSelector`] (see module
+/// docs).
+pub struct FairShareSelector {
+    inner: DeadlineSelector,
+    /// Normalized fair-share weight per tenant (by tenant index).
+    weights: Vec<f64>,
+    /// Virtual service time per tenant: charged slice-seconds divided
+    /// by the tenant's weight. The gate serves the minimum.
+    vtime: BTreeMap<TenantId, f64>,
+    /// Tenants backlogged at the previous decision, to detect idle →
+    /// backlogged transitions (which reset the tenant to the current
+    /// minimum — no credit for idle time).
+    backlogged: BTreeSet<TenantId>,
+    /// How far (in weighted virtual seconds) a tenant served by the
+    /// greedy pick may lead the minimum before the pick is discarded.
+    max_lead_secs: f64,
+    /// Forced solo pick memo for the `solo_pick` the engine issues on
+    /// the same decision after `select` returned `None`, keyed by
+    /// (clock bits, backlog).
+    cached: Option<((u64, usize), Option<u64>)>,
+}
+
+impl FairShareSelector {
+    /// Default lead window: a pick serving only ahead-of-share tenants
+    /// survives while they lead the most-behind tenant by less than
+    /// this much weighted service time. Small enough that a flooder is
+    /// gated within a few slices; large enough that near-balanced
+    /// tenants keep the throughput-optimal pairing.
+    pub const DEFAULT_MAX_LEAD_SECS: f64 = 0.02;
+
+    /// A fair-share gate with the given relative per-tenant weights
+    /// (normalized internally; tenant `i` gets `weights[i]`) over the
+    /// default [`DeadlineSelector`]. Zero or one weight means every
+    /// kernel is one tenant's and the gate never engages.
+    pub fn new(weights: &[f64]) -> Self {
+        Self::over(DeadlineSelector::new(), weights)
+    }
+
+    /// A fair-share gate over an explicitly configured inner deadline
+    /// policy (custom urgency factor or preemption cost).
+    pub fn over(inner: DeadlineSelector, weights: &[f64]) -> Self {
+        let total: f64 = weights.iter().sum();
+        assert!(
+            weights.iter().all(|&w| w.is_finite() && w > 0.0) || weights.is_empty(),
+            "tenant weights must be positive and finite: {weights:?}"
+        );
+        let weights = if weights.len() <= 1 {
+            Vec::new()
+        } else {
+            weights.iter().map(|w| w / total).collect()
+        };
+        Self {
+            inner,
+            weights,
+            vtime: BTreeMap::new(),
+            backlogged: BTreeSet::new(),
+            max_lead_secs: Self::DEFAULT_MAX_LEAD_SECS,
+            cached: None,
+        }
+    }
+
+    /// Override the lead window (see
+    /// [`FairShareSelector::DEFAULT_MAX_LEAD_SECS`]). 0 gates every
+    /// pick that does not serve the most-behind tenant.
+    pub fn with_max_lead_secs(mut self, secs: f64) -> Self {
+        assert!(secs.is_finite() && secs >= 0.0, "lead window {secs} must be non-negative");
+        self.max_lead_secs = secs;
+        self
+    }
+
+    /// Normalized weight of `tenant` (uniform share for a tenant the
+    /// weight vector does not cover).
+    pub fn weight(&self, tenant: TenantId) -> f64 {
+        if self.weights.is_empty() {
+            return 1.0;
+        }
+        let uniform = 1.0 / self.weights.len() as f64;
+        self.weights.get(tenant.0 as usize).copied().unwrap_or(uniform)
+    }
+
+    /// The most-behind backlogged tenant, or `None` while fewer than
+    /// two tenants are backlogged (the gate is then inert and every
+    /// entry point delegates wholesale). Also folds idle → backlogged
+    /// transitions into the virtual clocks.
+    fn gate(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<TenantId> {
+        if self.weights.is_empty() {
+            return None;
+        }
+        let now: BTreeSet<TenantId> = ctx.pending.iter().map(|k| k.tenant).collect();
+        if now.len() < 2 {
+            self.backlogged = now;
+            return None;
+        }
+        // A tenant (re)entering the backlog starts at the minimum
+        // virtual time of the tenants already running — no credit for
+        // idle time. Compute the floor over the *continuing* tenants
+        // first so two simultaneous entrants get the same floor.
+        let floor = now
+            .iter()
+            .filter(|t| self.backlogged.contains(t))
+            .filter_map(|t| self.vtime.get(t))
+            .fold(f64::INFINITY, |a, &b| a.min(b));
+        let floor = if floor.is_finite() { floor } else { 0.0 };
+        for &t in &now {
+            if !self.backlogged.contains(&t) {
+                let v = self.vtime.entry(t).or_insert(0.0);
+                *v = v.max(floor);
+            }
+        }
+        self.backlogged = now.clone();
+        now.iter().copied().min_by(|a, b| {
+            let va = self.vtime.get(a).copied().unwrap_or(0.0);
+            let vb = self.vtime.get(b).copied().unwrap_or(0.0);
+            va.total_cmp(&vb).then(a.cmp(b))
+        })
+    }
+
+    /// Charge `tenant` the expected service seconds of dispatching
+    /// `blocks` of `k`, normalized by its weight.
+    fn charge(&mut self, ctx: &SchedCtx<'_, '_>, k: &KernelInstance, blocks: u32) {
+        if self.weights.is_empty() {
+            return;
+        }
+        let rem = k.remaining_blocks().max(1);
+        let secs = ctx.est_remaining_secs(k) * f64::from(blocks.min(rem)) / f64::from(rem);
+        let w = self.weight(k.tenant);
+        *self.vtime.entry(k.tenant).or_insert(0.0) += secs / w;
+    }
+
+    /// Head-of-line kernel of `tenant`: earliest deadline first
+    /// (no deadline sorts last), then arrival order, then id.
+    fn tenant_head(ctx: &SchedCtx<'_, '_>, tenant: TenantId) -> Option<u64> {
+        ctx.pending
+            .iter()
+            .filter(|k| k.tenant == tenant)
+            .min_by(|a, b| {
+                let da = a.qos.deadline.unwrap_or(f64::INFINITY);
+                let db = b.qos.deadline.unwrap_or(f64::INFINITY);
+                da.total_cmp(&db)
+                    .then(a.arrival_time.total_cmp(&b.arrival_time))
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|k| k.id)
+    }
+
+    /// Virtual-time lead of `tenant` over `floor`.
+    fn lead(&self, tenant: TenantId, floor: f64) -> f64 {
+        self.vtime.get(&tenant).copied().unwrap_or(0.0) - floor
+    }
+
+    fn decision_key(ctx: &SchedCtx<'_, '_>) -> (u64, usize) {
+        (ctx.now_secs.to_bits(), ctx.backlog())
+    }
+}
+
+impl Selector for FairShareSelector {
+    fn name(&self) -> &'static str {
+        "fairshare"
+    }
+
+    fn select(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<Decision> {
+        let Some(lagging) = self.gate(ctx) else {
+            self.cached = Some((Self::decision_key(ctx), None));
+            return self.inner.select(ctx);
+        };
+        let floor = self.vtime.get(&lagging).copied().unwrap_or(0.0);
+        let pick = self.inner.select(ctx);
+        if let Some(d) = pick {
+            let tenant_of = |id: u64| {
+                ctx.pending
+                    .iter()
+                    .find(|k| k.id == id)
+                    .map(|k| k.tenant)
+                    .unwrap_or(TenantId::SOLE)
+            };
+            let (t1, t2) = (tenant_of(d.k1), tenant_of(d.k2));
+            let serves_lagging = t1 == lagging || t2 == lagging;
+            let within_band = self.lead(t1, floor) <= self.max_lead_secs
+                && self.lead(t2, floor) <= self.max_lead_secs;
+            if serves_lagging || within_band {
+                // The profit pick stands; both sides of the pair
+                // occupied the device, so both tenants are charged.
+                let (k1, k2) = (
+                    ctx.pending.iter().find(|k| k.id == d.k1),
+                    ctx.pending.iter().find(|k| k.id == d.k2),
+                );
+                if let Some(k1) = k1 {
+                    self.charge(ctx, k1, d.size1);
+                }
+                if let Some(k2) = k2 {
+                    self.charge(ctx, k2, d.size2);
+                }
+                self.cached = Some((Self::decision_key(ctx), None));
+                return Some(d);
+            }
+        }
+        // Gated (or no pair existed): the most-behind tenant's head
+        // runs solo; remember it for the solo_pick this same decision.
+        let head = Self::tenant_head(ctx, lagging);
+        self.cached = Some((Self::decision_key(ctx), head));
+        None
+    }
+
+    fn solo_pick(&mut self, ctx: &SchedCtx<'_, '_>) -> Option<u64> {
+        // Consume the memo `select` left for this decision; a key
+        // mismatch or a standalone call re-runs the gate.
+        let forced = match self.cached.take() {
+            Some((key, hit)) if key == Self::decision_key(ctx) => hit,
+            _ => self.gate(ctx).and_then(|lagging| Self::tenant_head(ctx, lagging)),
+        };
+        match forced {
+            Some(id) if ctx.pending.iter().any(|k| k.id == id) => Some(id),
+            Some(_) | None => self.inner.solo_pick(ctx),
+        }
+    }
+
+    fn solo_slice(&mut self, ctx: &SchedCtx<'_, '_>, head: &KernelInstance) -> u32 {
+        self.inner.solo_slice(ctx, head)
+    }
+
+    fn solo_plan(
+        &mut self,
+        ctx: &SchedCtx<'_, '_>,
+        head: &KernelInstance,
+    ) -> (u32, Option<PreemptPoint>) {
+        let (size, pin) = self.inner.solo_plan(ctx, head);
+        self.charge(ctx, head, size);
+        (size, pin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::coordinator::Coordinator;
+    use crate::kernel::BenchmarkApp;
+
+    fn ctx_over<'a, 'q>(
+        coord: &'a Coordinator,
+        pending: &'q [&'q KernelInstance],
+        now_secs: f64,
+    ) -> SchedCtx<'a, 'q> {
+        SchedCtx { coord, pending, now_secs, more_arrivals: true, admitted: &[], completed: &[] }
+    }
+
+    fn kernels_for(tenants: &[u32]) -> Vec<KernelInstance> {
+        tenants
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                KernelInstance::new(i as u64, BenchmarkApp::MM.spec(), i as f64 * 1e-6)
+                    .with_tenant(TenantId(t))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_tenant_backlog_never_gates() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let insts = kernels_for(&[0, 0, 0]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let mut fair = FairShareSelector::new(&[1.0, 1.0]);
+        let mut plain = DeadlineSelector::new();
+        // Same-app pending: no pair either way; solo pick must match
+        // the tenant-blind policy exactly.
+        assert!(fair.select(&ctx).is_none());
+        assert!(plain.select(&ctx).is_none());
+        assert_eq!(fair.solo_pick(&ctx), plain.solo_pick(&ctx));
+        assert!(fair.vtime.is_empty(), "no contention, no charges");
+    }
+
+    #[test]
+    fn behind_tenant_head_jumps_the_queue() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        // Tenant 0 floods the queue; tenant 1 has one kernel, last in
+        // arrival order. Same app throughout, so no pair exists and
+        // FIFO would run tenant 0 four times first.
+        let insts = kernels_for(&[0, 0, 0, 0, 1]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let mut fair = FairShareSelector::new(&[1.0, 1.0]);
+        // Tenant 0 has already been charged a full service ahead.
+        fair.vtime.insert(TenantId(0), 1.0);
+        fair.backlogged.extend([TenantId(0), TenantId(1)]);
+        assert!(fair.select(&ctx).is_none());
+        assert_eq!(fair.solo_pick(&ctx), Some(4), "tenant 1's head must run");
+    }
+
+    #[test]
+    fn charges_accumulate_inverse_to_weight() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let insts = kernels_for(&[0, 1]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let mut fair = FairShareSelector::new(&[3.0, 1.0]);
+        fair.charge(&ctx, &insts[0], insts[0].remaining_blocks());
+        fair.charge(&ctx, &insts[1], insts[1].remaining_blocks());
+        let v0 = fair.vtime[&TenantId(0)];
+        let v1 = fair.vtime[&TenantId(1)];
+        // Same kernel, same service estimate: the 1/4-weight tenant's
+        // virtual clock advances 3x faster than the 3/4-weight one.
+        assert!((v1 / v0 - 3.0).abs() < 1e-9, "v0={v0} v1={v1}");
+    }
+
+    #[test]
+    fn idle_tenant_earns_no_credit() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let mut fair = FairShareSelector::new(&[1.0, 1.0]);
+        // Tenant 0 has been running alone for a while.
+        fair.vtime.insert(TenantId(0), 5.0);
+        fair.backlogged.insert(TenantId(0));
+        // Tenant 1 arrives: its virtual clock starts at tenant 0's, not
+        // at 0 — otherwise it would monopolize the device to repay a
+        // deficit it accrued while idle.
+        let insts = kernels_for(&[0, 1]);
+        let refs: Vec<&KernelInstance> = insts.iter().collect();
+        let ctx = ctx_over(&coord, &refs, 0.0);
+        let lagging = fair.gate(&ctx);
+        assert_eq!(fair.vtime[&TenantId(1)], 5.0);
+        // Tie on virtual time breaks to the smaller tenant id.
+        assert_eq!(lagging, Some(TenantId(0)));
+    }
+}

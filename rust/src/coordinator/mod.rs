@@ -6,16 +6,18 @@
 //!
 //! ```text
 //!   arrivals ──► AdmissionPolicy (admit / defer / shed per class)
-//!               │   AdmitAll · BacklogCap · SloGuard
+//!               │   AdmitAll · BacklogCap · SloGuard · TenantQuota
 //!               ▼
 //!               Engine (clock, pending queue, slice dispatch,
-//!               │        completion bookkeeping, trace observer)
+//!               │        completion bookkeeping, trace observer;
+//!               │        built via EngineBuilder)
 //!               ├─ Selector (sees one SchedCtx) .. which work runs next
 //!               │    KerneletSelector   model-driven greedy (Alg. 1)
 //!               │    OptSelector        measured oracle
 //!               │    RandomSelector     Monte-Carlo plans
 //!               │    FifoSelector       BASE consolidation
 //!               │    DeadlineSelector   EDF-gated Kernelet (QoS)
+//!               │    FairShareSelector  weighted-fair tenancy gate
 //!               └─ TimingBackend  .. how long a slice takes
 //!                    SimCache            cycle-level simulator
 //!                    runtime::PjrtBackend real PJRT slice executions
@@ -34,6 +36,7 @@ pub mod deadline;
 pub mod engine;
 pub mod eta;
 pub mod executor;
+pub mod fairshare;
 pub mod greedy;
 pub mod multigpu;
 pub mod pruning;
@@ -41,15 +44,16 @@ pub mod simcache;
 
 pub use admission::{
     AdmissionController, AdmissionDecision, AdmissionPolicy, AdmissionReport, AdmissionSpec,
-    AdmitAll, BacklogCap, ClassAdmission, SloGuard,
+    AdmitAll, BacklogCap, ClassAdmission, SloGuard, TenantQuota,
 };
 pub use baselines::{run_base, run_monte_carlo, run_opt, OptSelector, RandomSelector};
 pub use deadline::DeadlineSelector;
 pub use engine::{
-    ClassStats, Decision, Engine, ExecutionReport, FifoSelector, KerneletSelector, Observer,
-    PairTiming, PreemptCost, PreemptPoint, QosReport, SchedCtx, Selector, SliceRecord,
-    StderrTrace, TimingBackend,
+    ClassStats, Decision, Engine, EngineBuilder, ExecutionReport, FifoSelector, KerneletSelector,
+    Observer, PairTiming, PreemptCost, PreemptPoint, QosReport, SchedCtx, Selector, SliceRecord,
+    StderrTrace, TenantStats, TimingBackend,
 };
+pub use fairshare::FairShareSelector;
 pub use eta::{weighted_mean_abs_err_secs, EtaModel, EtaStats};
 pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};

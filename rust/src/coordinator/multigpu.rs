@@ -48,17 +48,25 @@
 //! router (one controller in front of routing, [`ShedPoint::Router`])
 //! or at each device ([`ShedPoint::Device`]); either way the fleet
 //! report carries the merged per-class shed/deferred accounting and
-//! goodput.
+//! goodput. Sheds at either point are reported back to a streaming
+//! [`ArrivalSource`] via [`ArrivalSource::on_shed`], so closed-loop
+//! clients can retry instead of silently losing work; per-tenant
+//! rows ([`TenantStats`]) are merged across devices (router-level
+//! sheds included) with goodput recomputed against the fleet
+//! makespan.
+
+use std::collections::BTreeMap;
 
 use super::admission::{AdmissionController, AdmissionDecision, AdmissionReport, AdmissionSpec};
 use super::deadline::DeadlineSelector;
 use super::engine::{
-    Engine, ExecutionReport, KerneletSelector, PreemptCost, QosReport, SchedCtx, Selector,
+    Engine, EngineBuilder, ExecutionReport, KerneletSelector, PreemptCost, QosReport, SchedCtx,
+    Selector, TenantStats,
 };
 use super::eta::{EtaModel, EtaStats};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
-use crate::kernel::{KernelInstance, ServiceClass};
+use crate::kernel::{KernelInstance, ServiceClass, TenantId};
 use crate::workload::{ArrivalSource, Stream};
 
 /// Routing policy for arriving kernels.
@@ -119,6 +127,16 @@ pub struct MultiGpuReport {
     /// utilization, per-class QoS + admission), aligned with
     /// `per_device`.
     pub reports: Vec<ExecutionReport>,
+    /// Per-tenant accounting merged across the fleet (sorted by
+    /// tenant id): per-device [`TenantStats`] rows pooled exactly,
+    /// router-level sheds folded in, and each row's goodput
+    /// recomputed against the *fleet* makespan. One
+    /// [`TenantId::SOLE`] row when tenancy is not in play.
+    pub tenants: Vec<TenantStats>,
+    /// Shed submissions the arrival source retried
+    /// ([`ArrivalSource::retries`]) — nonzero only for closed-loop
+    /// sources under [`MultiGpuDispatcher::run_source`].
+    pub shed_retries: u64,
 }
 
 impl MultiGpuReport {
@@ -128,6 +146,11 @@ impl MultiGpuReport {
         self.reports
             .iter()
             .fold(QosReport::default(), |acc, r| acc.merge(&r.qos))
+    }
+
+    /// The fleet-merged row for one tenant, if it submitted anything.
+    pub fn tenant(&self, tenant: TenantId) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.tenant == tenant)
     }
 }
 
@@ -154,6 +177,10 @@ struct RouterState {
     batch: usize,
     eta: Option<Vec<EtaModel>>,
     scored: Vec<usize>,
+    /// Sheds decided *at the router* by tenant — these arrivals never
+    /// reach a device, so no per-device report counts them; the fleet
+    /// merge folds them back in.
+    router_shed: BTreeMap<TenantId, u64>,
 }
 
 impl MultiGpuDispatcher {
@@ -209,10 +236,10 @@ impl MultiGpuDispatcher {
         self.devices
             .iter()
             .map(|coord| {
-                let engine = Engine::new(coord);
+                let builder = EngineBuilder::new(coord);
                 match &self.admission {
-                    Some((spec, ShedPoint::Device)) => engine.with_admission(spec.build()),
-                    _ => engine,
+                    Some((spec, ShedPoint::Device)) => builder.admission(spec.build()).build(),
+                    _ => builder.build(),
                 }
             })
             .collect()
@@ -283,6 +310,7 @@ impl MultiGpuDispatcher {
                 _ => None,
             },
             scored: vec![0; self.devices.len()],
+            router_shed: BTreeMap::new(),
         }
     }
 
@@ -446,7 +474,9 @@ impl MultiGpuDispatcher {
     /// engine's [`Engine::offer`] decides (a no-op gate without
     /// admission). `routed[d]` counts the kernels device `d` was
     /// handed (including device-local sheds; router sheds reach no
-    /// device).
+    /// device). Returns `Some((id, shed_time_secs))` when the arrival
+    /// was shed at either point, so streaming callers can report it
+    /// to the source ([`ArrivalSource::on_shed`]).
     fn admit_route(
         &self,
         engines: &mut [Engine<'_>],
@@ -454,17 +484,18 @@ impl MultiGpuDispatcher {
         router: &mut Option<AdmissionController>,
         routed: &mut [usize],
         k: KernelInstance,
-    ) {
+    ) -> Option<(u64, f64)> {
         let (d, hint) = self.route(&*engines, st, &k);
         match router {
             Some(ctrl) => {
+                let now_secs = engines[d].clock_secs().max(k.arrival_time);
                 let decision = {
                     let pending = engines[d].pending();
                     let refs: Vec<&KernelInstance> = pending.iter().collect();
                     let ctx = SchedCtx {
                         coord: &self.devices[d],
                         pending: &refs,
-                        now_secs: engines[d].clock_secs().max(k.arrival_time),
+                        now_secs,
                         more_arrivals: true,
                         admitted: engines[d].submitted_log(),
                         completed: engines[d].completion_log(),
@@ -477,9 +508,16 @@ impl MultiGpuDispatcher {
                         let projected = self.projection_for(&*engines, st, d, hint, &k);
                         self.record_routed(st, d, k.id, k.arrival_time, projected);
                         engines[d].submit(k);
+                        None
                     }
-                    AdmissionDecision::Defer => ctrl.push_deferred(k),
-                    AdmissionDecision::Shed => {}
+                    AdmissionDecision::Defer => {
+                        ctrl.push_deferred(k);
+                        None
+                    }
+                    AdmissionDecision::Shed => {
+                        *st.router_shed.entry(k.tenant).or_insert(0) += 1;
+                        Some((k.id, now_secs))
+                    }
                 }
             }
             None => {
@@ -490,8 +528,14 @@ impl MultiGpuDispatcher {
                 // and deferrals are not scored).
                 let projected = self.projection_for(&*engines, st, d, hint, &k);
                 let (id, now) = (k.id, k.arrival_time);
-                if engines[d].offer(k) == AdmissionDecision::Admit {
-                    self.record_routed(st, d, id, now, projected);
+                let shed_at = engines[d].clock_secs().max(now);
+                match engines[d].offer(k) {
+                    AdmissionDecision::Admit => {
+                        self.record_routed(st, d, id, now, projected);
+                        None
+                    }
+                    AdmissionDecision::Defer => None,
+                    AdmissionDecision::Shed => Some((id, shed_at)),
                 }
             }
         }
@@ -605,6 +649,33 @@ impl MultiGpuDispatcher {
             total,
             "dispatcher lost kernels"
         );
+        // Fleet tenant rows: pool the per-device rows exactly
+        // ([`TenantStats::merge`] zeroes goodput on purpose), fold in
+        // router-level sheds (those arrivals reached no device), then
+        // recompute every row's goodput against the fleet makespan.
+        let mut tenants: BTreeMap<TenantId, TenantStats> = BTreeMap::new();
+        for rep in &reports {
+            for row in &rep.tenants {
+                tenants
+                    .entry(row.tenant)
+                    .and_modify(|acc| *acc = acc.merge(row))
+                    .or_insert_with(|| row.clone());
+            }
+        }
+        for (&tenant, &count) in &st.router_shed {
+            let row = tenants.entry(tenant).or_insert_with(|| TenantStats {
+                tenant,
+                ..TenantStats::default()
+            });
+            row.shed += count;
+        }
+        let tenants: Vec<TenantStats> = tenants
+            .into_values()
+            .map(|mut row| {
+                row.goodput_kps = row.completed_in_deadline as f64 / makespan.max(1e-12);
+                row
+            })
+            .collect();
         MultiGpuReport {
             makespan_secs: makespan,
             throughput_kps: completed as f64 / makespan.max(1e-12),
@@ -613,6 +684,8 @@ impl MultiGpuDispatcher {
             eta,
             per_device,
             reports,
+            tenants,
+            shed_retries: 0,
         }
     }
 
@@ -731,7 +804,14 @@ impl MultiGpuDispatcher {
                     // that advance re-score the ETA models first.
                     self.observe_eta(&engines, &mut st);
                     self.pump_router(&mut engines, &mut st, &mut router, &mut routed);
-                    self.admit_route(&mut engines, &mut st, &mut router, &mut routed, k);
+                    if let Some((id, t)) =
+                        self.admit_route(&mut engines, &mut st, &mut router, &mut routed, k)
+                    {
+                        // Client-visible backpressure: a closed-loop
+                        // source re-queues the client instead of losing
+                        // it forever.
+                        source.on_shed(id, t);
+                    }
                 }
                 None => {
                     // Step every engine (each pumps its own gate); stop
@@ -752,7 +832,9 @@ impl MultiGpuDispatcher {
             }
         }
         let total = st.arrivals;
-        self.assemble(engines, routed, total, router, st)
+        let mut report = self.assemble(engines, routed, total, router, st);
+        report.shed_retries = source.retries();
+        report
     }
 }
 
@@ -963,6 +1045,39 @@ mod tests {
             assert_eq!(a.completion, b.completion);
             assert_eq!(a.preemptions, 0);
         }
+    }
+
+    #[test]
+    fn fleet_tenant_rows_merge_across_devices() {
+        use crate::workload::TenantMix;
+        let gpus = [GpuConfig::c2050(), GpuConfig::c2050()];
+        let d = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin);
+        let mut stream = Stream::saturated(Mix::MIX, 4, 7);
+        let mix = TenantMix::split(&[1.0, 1.0]);
+        for (i, k) in stream.instances.iter_mut().enumerate() {
+            k.tenant = mix.stamp(i);
+        }
+        let rep = d.run(&stream);
+        // Both tenants land on both devices (round-robin over an
+        // alternating stamp), so the fleet rows are genuine merges.
+        assert_eq!(rep.tenants.len(), 2);
+        let completed: usize = rep.tenants.iter().map(|t| t.stats.completed).sum();
+        assert_eq!(completed, stream.len());
+        let submitted: usize = rep.tenants.iter().map(|t| t.submitted).sum();
+        assert_eq!(submitted, stream.len());
+        for row in &rep.tenants {
+            assert!(row.service_secs > 0.0, "{:?}", row.tenant);
+            assert_eq!(row.shed, 0);
+            // Goodput is recomputed against the fleet makespan, not
+            // summed from the per-device rows.
+            let expect = row.completed_in_deadline as f64 / rep.makespan_secs;
+            assert!((row.goodput_kps - expect).abs() < 1e-9, "{:?}", row.tenant);
+        }
+        assert_eq!(rep.shed_retries, 0);
+        // Without stamping, the fleet collapses to one SOLE row.
+        let plain = d.run(&Stream::saturated(Mix::MIX, 4, 7));
+        assert_eq!(plain.tenants.len(), 1);
+        assert_eq!(plain.tenants[0].tenant, TenantId::SOLE);
     }
 
     #[test]

@@ -17,13 +17,13 @@
 
 use super::report::{f, Report};
 use super::throughput::base_capacity_kps;
-use crate::config::GpuConfig;
+use crate::config::{GpuConfig, WorkloadSpec};
 use crate::coordinator::admission::DEFAULT_SLACK_FRACTION;
 use crate::coordinator::{
-    AdmissionSpec, ClassAdmission, ClassStats, Coordinator, Engine, KerneletSelector,
+    AdmissionSpec, ClassAdmission, ClassStats, Coordinator, EngineBuilder, KerneletSelector,
 };
 use crate::stats::split_seed;
-use crate::workload::{scenario_source, Mix, QosMix};
+use crate::workload::{Mix, QosMix};
 
 /// Admission policies the sweep compares.
 pub const ADMISSION_POLICIES: [&str; 3] = ["admitall", "backlogcap", "sloguard"];
@@ -110,6 +110,8 @@ pub fn admission_sweep(
         for (li, &load) in loads.iter().enumerate() {
             let offered = load * capacity;
             let seed = split_seed(opts.seed ^ 0xAD31, (si * 1000 + li) as u64);
+            let workload =
+                WorkloadSpec::new(scenario, mix).instances(per_app).load(load).seed(seed).qos(qos);
             for &policy in &ADMISSION_POLICIES {
                 let spec = AdmissionSpec::for_policy(
                     policy,
@@ -117,11 +119,12 @@ pub fn admission_sweep(
                     deadline_scale,
                     DEFAULT_BACKLOG_CAP,
                 );
-                let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
-                    .expect("admission sweep scenario names are valid");
+                let mut source =
+                    workload.source(capacity).expect("admission sweep scenario names are valid");
                 let mut sel = KerneletSelector;
-                let rep = Engine::new(&coord)
-                    .with_admission(spec.build())
+                let rep = EngineBuilder::new(&coord)
+                    .admission(spec.build())
+                    .build()
                     .run_source(&mut sel, source.as_mut());
                 assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left admitted kernels");
                 let a = rep.admission;

@@ -24,8 +24,10 @@
 //! Repo-native telemetry ids: `qdepth` (pending-queue timeline),
 //! `saturation` (offered-load sweep over the streaming scenarios),
 //! `qos` (per-class turnaround percentiles + deadline misses),
-//! `admission` (goodput + tails under load shedding) and `routing`
-//! (fleet deadline misses per routing policy, EFC vs backlog routing).
+//! `admission` (goodput + tails under load shedding), `routing`
+//! (fleet deadline misses per routing policy, EFC vs backlog routing)
+//! and `tenancy` (per-tenant shares + tails under a flooding tenant,
+//! weighted-fair vs tenant-blind scheduling).
 
 pub mod admission;
 pub mod qos;
@@ -34,6 +36,7 @@ pub mod routing;
 pub mod scheduling;
 pub mod slicing;
 pub mod tables;
+pub mod tenancy;
 pub mod throughput;
 pub mod validation;
 
@@ -42,10 +45,11 @@ pub use report::Report;
 use anyhow::{bail, Result};
 
 /// All figure/table ids, in paper order, plus repo-native telemetry
-/// reports (`qdepth`, `saturation`, `qos`, `admission`, `routing`).
-pub const ALL_IDS: [&str; 18] = [
+/// reports (`qdepth`, `saturation`, `qos`, `admission`, `routing`,
+/// `tenancy`).
+pub const ALL_IDS: [&str; 19] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table6", "fig14", "qdepth", "saturation", "qos", "admission", "routing",
+    "fig13", "table6", "fig14", "qdepth", "saturation", "qos", "admission", "routing", "tenancy",
 ];
 
 /// Options shared by the generators.
@@ -94,6 +98,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "qos" => qos::qos(opts),
         "admission" => admission::admission(opts),
         "routing" => routing::routing(opts),
+        "tenancy" => tenancy::tenancy(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

@@ -12,11 +12,11 @@
 //! `qos` bench records into `BENCH_qos.json`.
 
 use super::report::{f, Report};
-use super::throughput::{base_capacity_kps, selector_for};
-use crate::config::GpuConfig;
-use crate::coordinator::{ClassStats, Coordinator, Engine};
+use super::throughput::base_capacity_kps;
+use crate::config::{GpuConfig, SelectorSpec, WorkloadSpec};
+use crate::coordinator::{ClassStats, Coordinator, EngineBuilder};
 use crate::stats::split_seed;
-use crate::workload::{scenario_source, Mix, QosMix};
+use crate::workload::{Mix, QosMix};
 
 /// Policies the QoS sweep compares.
 pub const QOS_POLICIES: [&str; 2] = ["kernelet", "deadline"];
@@ -78,11 +78,16 @@ pub fn qos_sweep(
         for (li, &load) in loads.iter().enumerate() {
             let offered = load * capacity;
             let seed = split_seed(opts.seed ^ 0x0905, (si * 1000 + li) as u64);
+            let workload =
+                WorkloadSpec::new(scenario, mix).instances(per_app).load(load).seed(seed).qos(qos);
             for &policy in &QOS_POLICIES {
-                let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
-                    .expect("qos sweep scenario names are valid");
-                let mut sel = selector_for(policy);
-                let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
+                let mut source =
+                    workload.source(capacity).expect("qos sweep scenario names are valid");
+                let mut sel = SelectorSpec::from_name(policy)
+                    .expect("qos sweep policy names are valid")
+                    .build();
+                let rep =
+                    EngineBuilder::new(&coord).build().run_source(sel.as_mut(), source.as_mut());
                 assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
                 out.push(QosPoint {
                     scenario,

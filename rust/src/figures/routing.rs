@@ -17,13 +17,13 @@
 //! observable in the trajectory, not just in unit tests.
 
 use super::report::{f, Report};
-use super::throughput::{base_capacity_kps, dispatch_policy_for};
-use crate::config::GpuConfig;
+use super::throughput::base_capacity_kps;
+use crate::config::{DispatchSpec, GpuConfig, WorkloadSpec};
 use crate::coordinator::{
     weighted_mean_abs_err_secs, ClassStats, Coordinator, EtaStats, MultiGpuDispatcher,
 };
 use crate::stats::split_seed;
-use crate::workload::{scenario_source, Mix, QosMix};
+use crate::workload::{Mix, QosMix};
 
 /// Routing policies the sweep compares (`efc` is the tentpole).
 pub const ROUTING_POLICIES: [&str; 4] = ["roundrobin", "leastloaded", "sloaware", "efc"];
@@ -107,14 +107,19 @@ pub fn routing_sweep(
     let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load)| {
         let offered = load * capacity * gpus as f64;
         let seed = split_seed(opts.seed ^ 0xEFC0, (si * 1000 + li) as u64);
+        let workload =
+            WorkloadSpec::new(scenario, mix).instances(per_app).load(load).seed(seed).qos(qos);
         let mut out = Vec::with_capacity(ROUTING_POLICIES.len());
         for &policy in &ROUTING_POLICIES {
             let dispatcher = MultiGpuDispatcher::new(
                 &vec![GpuConfig::c2050(); gpus],
-                dispatch_policy_for(policy),
+                DispatchSpec::from_name(policy)
+                    .expect("routing sweep policy names are valid")
+                    .build(),
             )
             .with_warm_from(&coord);
-            let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+            let mut source = workload
+                .source(capacity * gpus as f64)
                 .expect("routing sweep scenario names are valid");
             let rep = dispatcher.run_source(source.as_mut());
             assert!(

@@ -1,0 +1,293 @@
+//! Multi-tenant fairness sweep (repo-native): per-tenant service
+//! shares, tails and deadline misses under a flooding tenant — the
+//! isolation story `qos` (class tails) and `admission` (load shedding)
+//! cannot tell, because both are tenant-blind.
+//!
+//! The sweep crosses arrival scenario × offered load × selector policy
+//! ({`deadline`, `fairshare`}) on one C2050 under a two-tenant mix
+//! where tenant 0 floods at [`DEFAULT_TENANT_SHARES`] (10× tenant 1's
+//! arrival rate) and both tenants carry equal fair-share weights. The
+//! [`FairShareSelector`](crate::coordinator::FairShareSelector) gates
+//! the deadline selector's picks by per-tenant virtual service time:
+//! under bursty overload the victim tenant's p99 must be strictly
+//! better than under the tenant-blind
+//! [`DeadlineSelector`](crate::coordinator::DeadlineSelector), while
+//! its service share stays inside its weight band — the acceptance bar
+//! `benches/tenancy.rs` records into `BENCH_tenancy.json` and
+//! `scripts/check_bench.py` gates.
+
+use super::report::{f, Report};
+use super::throughput::base_capacity_kps;
+use crate::config::{GpuConfig, SelectorSpec, WorkloadSpec};
+use crate::coordinator::{Coordinator, EngineBuilder, TenantStats};
+use crate::kernel::TenantId;
+use crate::stats::split_seed;
+use crate::workload::{Mix, QosMix, TenantMix};
+
+/// Selector policies the sweep compares (`fairshare` is the tentpole).
+pub const TENANCY_POLICIES: [&str; 2] = ["deadline", "fairshare"];
+
+/// Scenarios the sweep crosses (bursty overload is the headline).
+pub const TENANCY_SCENARIOS: [&str; 2] = ["poisson", "bursty"];
+
+/// Offered-load factors relative to BASE capacity.
+pub const TENANCY_LOADS: [f64; 3] = [0.5, 1.5, 3.0];
+
+/// Arrival-rate shares: tenant 0 floods at 10× tenant 1's rate.
+pub const DEFAULT_TENANT_SHARES: [f64; 2] = [10.0, 1.0];
+
+/// Fair-share weights: both tenants are entitled to equal service.
+pub const DEFAULT_FAIR_WEIGHTS: [f64; 2] = [1.0, 1.0];
+
+/// Default latency-class share of arrivals.
+pub const DEFAULT_LATENCY_FRACTION: f64 = 0.3;
+
+/// Default deadline scale (× mean whole-kernel service time).
+pub const DEFAULT_DEADLINE_SCALE: f64 = 4.0;
+
+/// One (scenario, load, policy) measurement under the tenant flood.
+#[derive(Debug, Clone)]
+pub struct TenancyPoint {
+    /// Arrival scenario name.
+    pub scenario: &'static str,
+    /// Selector policy name.
+    pub policy: &'static str,
+    /// Offered load relative to BASE capacity.
+    pub load: f64,
+    /// Offered arrival rate (kernels/sec, both tenants combined).
+    pub offered_kps: f64,
+    /// Kernels completed (all tenants).
+    pub kernels: usize,
+    /// Delivered throughput over the makespan.
+    pub throughput_kps: f64,
+    /// Per-tenant rows, sorted by tenant id.
+    pub tenants: Vec<TenantStats>,
+}
+
+impl TenancyPoint {
+    /// Tenant `t`'s fraction of the run's charged slice-seconds.
+    pub fn service_share(&self, t: TenantId) -> f64 {
+        let total: f64 = self.tenants.iter().map(|r| r.service_secs).sum();
+        match self.tenants.iter().find(|r| r.tenant == t) {
+            Some(row) if total > 0.0 => row.service_secs / total,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Run the scenario × load × policy cross on one C2050 under the
+/// tenant flood. Both policies of a cell see the identical stamped
+/// arrival sequence (same derived seed; stamping is RNG-free).
+/// Returns the points plus the BASE capacity loads and deadlines were
+/// scaled by.
+pub fn tenancy_sweep(
+    opts: &super::FigOptions,
+    loads: &[f64],
+    scenarios: &[&'static str],
+    shares: &[f64],
+    weights: &[f64],
+    latency_fraction: f64,
+    deadline_scale: f64,
+) -> (Vec<TenancyPoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let qos = QosMix::latency_share(latency_fraction, deadline_scale / capacity);
+    let tenants = TenantMix::split(shares);
+    let per_app = opts.instances_per_app;
+    let mut cells: Vec<(usize, &'static str, usize, f64)> = Vec::new();
+    for (si, &scenario) in scenarios.iter().enumerate() {
+        for (li, &load) in loads.iter().enumerate() {
+            cells.push((si, scenario, li, load));
+        }
+    }
+    // Parallel over (scenario × load) cells — per-cell seeds derive
+    // from grid coordinates, so the fan-out is bit-identical to the
+    // serial loop (see `crate::sweep`).
+    let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load)| {
+        let offered = load * capacity;
+        let seed = split_seed(opts.seed ^ 0x7E4A, (si * 1000 + li) as u64);
+        let workload = WorkloadSpec::new(scenario, mix)
+            .instances(per_app)
+            .load(load)
+            .seed(seed)
+            .qos(qos)
+            .tenants(tenants.clone());
+        let mut out = Vec::with_capacity(TENANCY_POLICIES.len());
+        for &policy in &TENANCY_POLICIES {
+            let spec = match policy {
+                "fairshare" => SelectorSpec::FairShare {
+                    weights: weights.to_vec(),
+                    max_lead_secs: None,
+                },
+                other => SelectorSpec::from_name(other)
+                    .expect("tenancy sweep policy names are valid"),
+            };
+            let mut sel = spec.build();
+            let mut source =
+                workload.source(capacity).expect("tenancy sweep scenario names are valid");
+            let rep = EngineBuilder::new(&coord).build().run_source(sel.as_mut(), source.as_mut());
+            assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
+            out.push(TenancyPoint {
+                scenario,
+                policy,
+                load,
+                offered_kps: offered,
+                kernels: rep.kernels_completed,
+                throughput_kps: rep.throughput_kps,
+                tenants: rep.tenants,
+            });
+        }
+        out
+    });
+    (per_cell.into_iter().flatten().collect(), capacity)
+}
+
+/// The `tenancy` figure: per-tenant shares, tails and misses under the
+/// flood, one row per (point, tenant).
+pub fn tenancy(opts: &super::FigOptions) -> Report {
+    // Full engine runs per point; cap like `qos` does so `figure all`
+    // stays tractable.
+    let opts =
+        super::FigOptions { instances_per_app: opts.instances_per_app.min(100), ..opts.clone() };
+    let (points, capacity) = tenancy_sweep(
+        &opts,
+        &TENANCY_LOADS,
+        &TENANCY_SCENARIOS,
+        &DEFAULT_TENANT_SHARES,
+        &DEFAULT_FAIR_WEIGHTS,
+        DEFAULT_LATENCY_FRACTION,
+        DEFAULT_DEADLINE_SCALE,
+    );
+    let mut r = Report::new(
+        "tenancy",
+        "Multi-tenant fairness: per-tenant shares + tails under a 10x flood (scenario x load x policy)",
+        &[
+            "scenario", "load", "policy", "tenant", "done", "share", "p50_s", "p99_s", "miss",
+            "shed", "goodput_kps",
+        ],
+    );
+    for p in &points {
+        for row in &p.tenants {
+            r.row(vec![
+                p.scenario.to_string(),
+                f(p.load, 2),
+                p.policy.to_string(),
+                row.tenant.to_string(),
+                row.stats.completed.to_string(),
+                f(p.service_share(row.tenant), 3),
+                f(row.stats.p50_turnaround_secs, 4),
+                f(row.stats.p99_turnaround_secs, 4),
+                row.stats.deadline_misses.to_string(),
+                row.shed.to_string(),
+                f(row.goodput_kps, 1),
+            ]);
+        }
+    }
+    r.note(format!(
+        "tenant arrival shares {:?} (tenant 0 floods), fair weights {:?}; mix {}% \
+         latency-class; deadlines = arrival + {:.1}x mean whole-kernel service time \
+         ({capacity:.1} kernels/s BASE capacity on C2050/MIX); instances/app = {}",
+        DEFAULT_TENANT_SHARES,
+        DEFAULT_FAIR_WEIGHTS,
+        (DEFAULT_LATENCY_FRACTION * 100.0) as u32,
+        DEFAULT_DEADLINE_SCALE,
+        opts.instances_per_app
+    ));
+    r.note(
+        "fairshare = weighted-fair gate over the deadline selector: the tenant behind in \
+         virtual service time jumps the queue; share = tenant's fraction of charged \
+         slice-seconds",
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigOptions;
+
+    fn small() -> FigOptions {
+        FigOptions { instances_per_app: 8, mc_samples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_covers_the_cross_and_partitions_tenants() {
+        let (points, capacity) = tenancy_sweep(
+            &small(),
+            &[0.5, 3.0],
+            &["bursty"],
+            &DEFAULT_TENANT_SHARES,
+            &DEFAULT_FAIR_WEIGHTS,
+            0.3,
+            4.0,
+        );
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), 2 * TENANCY_POLICIES.len());
+        for p in &points {
+            assert_eq!(p.tenants.len(), 2, "{p:?}");
+            let done: usize = p.tenants.iter().map(|t| t.stats.completed).sum();
+            assert_eq!(done, p.kernels, "{p:?}");
+            // The 10:1 split: tenant 0 submits ~10/11 of the arrivals.
+            assert!(p.tenants[0].submitted > p.tenants[1].submitted * 5, "{p:?}");
+            let shares: f64 =
+                p.tenants.iter().map(|t| p.service_share(t.tenant)).sum();
+            assert!((shares - 1.0).abs() < 1e-9, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn fairshare_beats_blind_deadline_on_victim_p99_under_flood() {
+        // The tentpole acceptance (also encoded in check_bench.py): at
+        // the bursty peak, the fair gate must deliver the flooded-out
+        // victim a strictly better p99 than the tenant-blind deadline
+        // selector, without starving it of service.
+        let opts = FigOptions { instances_per_app: 40, mc_samples: 1, ..Default::default() };
+        let (points, _) = tenancy_sweep(
+            &opts,
+            &[3.0],
+            &["bursty"],
+            &DEFAULT_TENANT_SHARES,
+            &DEFAULT_FAIR_WEIGHTS,
+            0.3,
+            4.0,
+        );
+        let get = |policy: &str| points.iter().find(|p| p.policy == policy).unwrap();
+        let blind = get("deadline");
+        let fair = get("fairshare");
+        let victim = TenantId(1);
+        let p99 = |p: &TenancyPoint| {
+            p.tenants.iter().find(|t| t.tenant == victim).unwrap().stats.p99_turnaround_secs
+        };
+        assert!(
+            p99(fair) < p99(blind),
+            "fairshare victim p99 {} !< deadline victim p99 {}",
+            p99(fair),
+            p99(blind)
+        );
+        // Weight band: the victim is never starved below half its
+        // arrival share and never credited past its (equal) weight.
+        let arrival_share = 1.0 / 11.0;
+        let share = fair.service_share(victim);
+        assert!(share >= 0.5 * arrival_share, "victim starved: share {share}");
+        assert!(share <= 0.5 + 0.05, "victim over-credited: share {share}");
+    }
+
+    #[test]
+    fn tenancy_report_shape() {
+        let r = tenancy(&small());
+        assert_eq!(
+            r.rows.len(),
+            TENANCY_SCENARIOS.len() * TENANCY_LOADS.len() * TENANCY_POLICIES.len() * 2
+        );
+        let pol = r.col("policy");
+        for p in TENANCY_POLICIES {
+            assert!(r.rows.iter().any(|row| row[pol] == p), "missing {p}");
+        }
+        let tenant = r.col("tenant");
+        assert!(r.rows.iter().any(|row| row[tenant] == "0"));
+        assert!(r.rows.iter().any(|row| row[tenant] == "1"));
+        assert_eq!(r.notes.len(), 2);
+    }
+}

@@ -12,14 +12,11 @@
 //! tracks the trajectory.
 
 use super::report::{f, Report};
-use crate::config::GpuConfig;
-use crate::coordinator::{
-    ClassStats, Coordinator, DeadlineSelector, DispatchPolicy, Engine, FifoSelector,
-    KerneletSelector, MultiGpuDispatcher, Selector,
-};
+use crate::config::{DispatchSpec, GpuConfig, SelectorSpec, WorkloadSpec};
+use crate::coordinator::{ClassStats, Coordinator, EngineBuilder, MultiGpuDispatcher};
 use crate::kernel::KernelSpec;
 use crate::stats::split_seed;
-use crate::workload::{scenario_source, Mix, QosMix};
+use crate::workload::{Mix, QosMix};
 
 /// Scenarios the default sweep crosses (all streaming; "saturated" is
 /// fig13's territory).
@@ -36,33 +33,6 @@ pub const FLEET_POLICIES: [&str; 3] = ["roundrobin", "leastloaded", "sloaware"];
 
 /// Fleet sizes (homogeneous C2050s) the fleet sweep scales across.
 pub const DEFAULT_FLEETS: [usize; 3] = [1, 2, 4];
-
-/// Build the selector for a sweep policy name — the one mapping every
-/// sweep/CLI/test site shares, so adding a policy is wired in exactly
-/// one place. Valid: `kernelet`, `base`, `deadline`.
-pub fn selector_for(policy: &str) -> Box<dyn Selector> {
-    match policy {
-        "kernelet" => Box::new(KerneletSelector),
-        "base" => Box::new(FifoSelector),
-        "deadline" => Box::new(DeadlineSelector::new()),
-        other => panic!("unknown policy {other} (valid: kernelet base deadline)"),
-    }
-}
-
-/// Routing-policy name → [`DispatchPolicy`] (the fleet-sweep analogue
-/// of [`selector_for`]). Valid: `roundrobin`, `leastloaded`,
-/// `sloaware`, `efc` (the `routing` sweep's earliest-feasible policy).
-pub fn dispatch_policy_for(policy: &str) -> DispatchPolicy {
-    match policy {
-        "roundrobin" => DispatchPolicy::RoundRobin,
-        "leastloaded" => DispatchPolicy::LeastLoaded,
-        "sloaware" => DispatchPolicy::SloAware,
-        "efc" => DispatchPolicy::EarliestFeasible,
-        other => panic!(
-            "unknown routing policy {other} (valid: roundrobin leastloaded sloaware efc)"
-        ),
-    }
-}
 
 /// One (scenario, load, policy) measurement.
 #[derive(Debug, Clone)]
@@ -134,13 +104,16 @@ pub fn load_sweep(
     let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load)| {
         let offered = load * capacity;
         let seed = split_seed(opts.seed, (si * 1000 + li) as u64);
+        let workload =
+            WorkloadSpec::new(scenario, mix).instances(per_app).load(load).seed(seed);
         let mut out = Vec::with_capacity(SWEEP_POLICIES.len());
         for &policy in &SWEEP_POLICIES {
             let mut source =
-                scenario_source(scenario, mix, per_app, offered, seed, QosMix::ALL_BATCH)
-                    .expect("sweep scenario names are valid");
-            let mut sel = selector_for(policy);
-            let rep = Engine::new(&coord).run_source(sel.as_mut(), source.as_mut());
+                workload.source(capacity).expect("sweep scenario names are valid");
+            let mut sel = SelectorSpec::from_name(policy)
+                .expect("sweep policy names are valid")
+                .build();
+            let rep = EngineBuilder::new(&coord).build().run_source(sel.as_mut(), source.as_mut());
             assert_eq!(rep.incomplete, 0, "{scenario}/{policy} left kernels behind");
             out.push(SweepPoint {
                 scenario,
@@ -225,14 +198,19 @@ pub fn fleet_sweep(
     let per_cell = crate::sweep::run_cells(&cells, |_, &(si, scenario, li, load, gpus)| {
         let offered = load * capacity * gpus as f64;
         let seed = split_seed(opts.seed, (si * 10_000 + li * 100 + gpus) as u64);
+        let workload =
+            WorkloadSpec::new(scenario, mix).instances(per_app).load(load).seed(seed).qos(qos);
         let mut out = Vec::with_capacity(FLEET_POLICIES.len());
         for &policy in &FLEET_POLICIES {
             let dispatcher = MultiGpuDispatcher::new(
                 &vec![GpuConfig::c2050(); gpus],
-                dispatch_policy_for(policy),
+                DispatchSpec::from_name(policy)
+                    .expect("fleet sweep policy names are valid")
+                    .build(),
             )
             .with_warm_from(&coord);
-            let mut source = scenario_source(scenario, mix, per_app, offered, seed, qos)
+            let mut source = workload
+                .source(capacity * gpus as f64)
                 .expect("fleet sweep scenario names are valid");
             let rep = dispatcher.run_source(source.as_mut());
             let fleet = rep.fleet_qos();

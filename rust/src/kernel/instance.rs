@@ -35,6 +35,27 @@ impl ServiceClass {
     }
 }
 
+/// Identity of the tenant (user, job queue, customer) a kernel was
+/// submitted by — the fairness dimension threaded from the workload
+/// layer through scheduling and into the per-tenant report sections.
+///
+/// Tenant 0 is the implicit "sole tenant" of single-tenant runs: every
+/// instance starts as [`TenantId::SOLE`], so a workload that never
+/// stamps tenants is byte-identical to one that predates tenancy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The default tenant of an unstamped instance (id 0).
+    pub const SOLE: TenantId = TenantId(0);
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
 /// Quality-of-service annotation carried by a kernel instance.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Qos {
@@ -86,6 +107,9 @@ pub struct KernelInstance {
     pub arrival_time: f64,
     /// Service class + optional deadline ([`Qos::BATCH`] by default).
     pub qos: Qos,
+    /// Submitting tenant ([`TenantId::SOLE`] unless a `TenantMix`
+    /// stamps the workload).
+    pub tenant: TenantId,
     /// First not-yet-dispatched block id.
     next_block: u32,
 }
@@ -95,7 +119,7 @@ impl KernelInstance {
     /// `arrival_time`, batch class by default.
     pub fn new(id: u64, spec: KernelSpec, arrival_time: f64) -> Self {
         spec.validate();
-        Self { id, spec, arrival_time, qos: Qos::BATCH, next_block: 0 }
+        Self { id, spec, arrival_time, qos: Qos::BATCH, tenant: TenantId::SOLE, next_block: 0 }
     }
 
     /// Annotate with a QoS class/deadline (builder; arrival sources
@@ -105,6 +129,13 @@ impl KernelInstance {
             assert!(d.is_finite() && d >= 0.0, "kernel {}: bad deadline {d}", self.id);
         }
         self.qos = qos;
+        self
+    }
+
+    /// Attribute the instance to a tenant (builder; `TenantMix` stamps
+    /// instances through this at emission time).
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -235,5 +266,15 @@ mod tests {
     #[should_panic]
     fn non_finite_deadline_rejected() {
         let _ = inst().with_qos(Qos::latency(Some(f64::NAN)));
+    }
+
+    #[test]
+    fn tenant_defaults_to_sole_and_round_trips() {
+        let k = inst();
+        assert_eq!(k.tenant, TenantId::SOLE);
+        assert_eq!(k.tenant, TenantId::default());
+        let k = k.with_tenant(TenantId(3));
+        assert_eq!(k.tenant, TenantId(3));
+        assert_eq!(format!("{}", k.tenant), "3");
     }
 }

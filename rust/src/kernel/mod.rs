@@ -14,5 +14,5 @@ pub mod spec;
 pub mod testing;
 
 pub use benchmarks::{benchmark_suite, BenchmarkApp};
-pub use instance::{KernelInstance, KernelStatus, Qos, ServiceClass};
+pub use instance::{KernelInstance, KernelStatus, Qos, ServiceClass, TenantId};
 pub use spec::{InstructionMix, KernelSpec};

@@ -19,7 +19,9 @@
 //! See DESIGN.md for the substitution argument.
 //!
 //! ## Layout
-//! - [`config`] — GPU architecture configs (paper Table 2).
+//! - [`config`] — GPU architecture configs (paper Table 2) plus the
+//!   unified spec layer (`WorkloadSpec`/`PolicySpec`): the one
+//!   name→policy mapping the CLI, figure sweeps and benches share.
 //! - [`stats`] — deterministic RNG, distributions, regression, CDFs.
 //! - [`kernel`] — kernel specs, the 8-benchmark suite (Tables 3-4),
 //!   synthetic testing kernels (Fig. 4), launch instances.
@@ -81,5 +83,7 @@ pub mod stats;
 pub mod sweep;
 pub mod workload;
 
-pub use config::{Arch, GpuConfig};
-pub use kernel::{benchmark_suite, BenchmarkApp, KernelInstance, KernelSpec, Qos, ServiceClass};
+pub use config::{Arch, DispatchSpec, GpuConfig, PolicySpec, SelectorSpec, WorkloadSpec};
+pub use kernel::{
+    benchmark_suite, BenchmarkApp, KernelInstance, KernelSpec, Qos, ServiceClass, TenantId,
+};

@@ -8,7 +8,7 @@
 //! kernelet profile <bench|all> [--gpu c2050|gtx680]
 //! kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu ...] [--instances N]
 //!                   [--scenario NAME] [--load X] [--trace FILE]
-//!                   [--qos-mix F] [--deadline-scale S]
+//!                   [--qos-mix F] [--deadline-scale S] [--tenants F]
 //!                   [--admission POLICY] [--backlog-cap N]
 //!                   [--dispatch POLICY] [--gpus N] [--preempt-cost S]
 //!                   [--cache-dir DIR]
@@ -24,19 +24,19 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use kernelet::config::GpuConfig;
+use kernelet::config::{DispatchSpec, GpuConfig, SelectorSpec, WorkloadSpec};
 use kernelet::coordinator::baselines::{run_base, run_opt};
 use kernelet::coordinator::{
-    run_kernelet, AdmissionSpec, BacklogCap, Coordinator, DeadlineSelector, Engine,
-    MultiGpuDispatcher, PreemptCost, Selector, ShedPoint,
+    run_kernelet, AdmissionSpec, BacklogCap, Coordinator, EngineBuilder, MultiGpuDispatcher,
+    PreemptCost, ShedPoint, TenantStats,
 };
-use kernelet::figures::throughput::{base_capacity_kps, dispatch_policy_for, selector_for};
+use kernelet::figures::throughput::base_capacity_kps;
 use kernelet::figures::{self, FigOptions};
-use kernelet::kernel::BenchmarkApp;
+use kernelet::kernel::{BenchmarkApp, TenantId};
 use kernelet::profiler;
 #[cfg(feature = "pjrt")]
 use kernelet::runtime::{ArtifactRegistry, SlicedRunner};
-use kernelet::workload::{ArrivalSource, Mix, QosMix, RecordingSource, Stream};
+use kernelet::workload::{ArrivalSource, Mix, QosMix, RecordingSource, Stream, TenantMix};
 
 fn main() {
     if let Err(e) = run() {
@@ -69,14 +69,14 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|routing|all>
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|routing|tenancy|all>
                     [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
                     [--scenario saturated|poisson|bursty|diurnal|heavytail|closed|trace]
                     [--load X] [--trace FILE] [--seed N]
-                    [--qos-mix F] [--deadline-scale S]
-                    [--admission admitall|backlogcap|sloguard] [--backlog-cap N]
+                    [--qos-mix F] [--deadline-scale S] [--tenants F]
+                    [--admission admitall|backlogcap|sloguard|tenantquota] [--backlog-cap N]
                     [--dispatch roundrobin|leastloaded|sloaware|efc|all] [--gpus N]
                     [--preempt-cost SECS] [--cache-dir DIR]
   kernelet trace record --scenario NAME [--mix M] [--gpu G] [--instances N]
@@ -101,8 +101,18 @@ reports per-class p99 turnaround + deadline misses.
 `--admission` gates every arrival through a load-shedding policy before
 the pending set (admitall = open door; backlogcap = shed once the queue
 reaches --backlog-cap, default 32; sloguard = defer/shed batch kernels
-while projected latency-class slack is at risk) and adds shed/deferred
-counts plus goodput (completed-within-deadline kernels/s) to the table.
+while projected latency-class slack is at risk; tenantquota = sloguard
+plus a per-tenant backlog quota so one tenant cannot monopolize the
+queue) and adds shed/deferred counts plus goodput
+(completed-within-deadline kernels/s) to the table.
+
+`--tenants F` splits arrivals between two tenants (tenant 0 floods with
+share F of the arrival rate), adds the weighted-fair `fairshare` policy
+row (equal per-tenant weights gating the deadline selector by virtual
+service time) and prints per-tenant completions, service share, p99 and
+shed counts under every policy row. Closed-loop clients whose
+submissions are shed retry with jittered think-time; the retry count is
+reported.
 
 `--dispatch` routes the scenario across a fleet of --gpus devices
 (default 2; load is then relative to the fleet's capacity) and prints
@@ -330,6 +340,38 @@ fn parse_admission(
     Ok(Some((AdmissionSpec::for_policy(name, capacity_kps, deadline_scale, cap), cap)))
 }
 
+/// Parse `--tenants F` (tenant 0's share of the arrival rate in a
+/// two-tenant split; absent = single-tenant, which leaves every run
+/// bit-identical to the pre-tenancy engine).
+fn parse_tenants(args: &[String]) -> Result<TenantMix> {
+    let Some(v) = flag_value(args, "--tenants") else { return Ok(TenantMix::SINGLE) };
+    let share: f64 = v.parse()?;
+    anyhow::ensure!(
+        share > 0.0 && share < 1.0,
+        "--tenants {share} must be a share in (0,1) (tenant 0's fraction of arrivals)"
+    );
+    Ok(TenantMix::split(&[share, 1.0 - share]))
+}
+
+/// Print one indented line per tenant under a policy row: completions,
+/// fraction of the run's charged slice-seconds, tail, misses, sheds.
+fn print_tenant_rows(rows: &[TenantStats]) {
+    let total: f64 = rows.iter().map(|t| t.service_secs).sum();
+    for t in rows {
+        println!(
+            "  tenant {}: done {:>5}  share {:>5.3}  p99 {:>9.5}s  miss {:>4}  shed {:>4}  \
+             goodput {:>7.1}/s",
+            t.tenant,
+            t.stats.completed,
+            if total > 0.0 { t.service_secs / total } else { 0.0 },
+            t.stats.p99_turnaround_secs,
+            t.stats.deadline_misses,
+            t.shed,
+            t.goodput_kps
+        );
+    }
+}
+
 /// `schedule --scenario NAME`: stream arrivals online and compare BASE
 /// vs Kernelet (plus the deadline policy under `--qos-mix`) from the
 /// same seed. Open-loop scenarios give every policy the identical
@@ -371,6 +413,7 @@ fn cmd_schedule_scenario(
     let offered = load * capacity;
     let (qos, deadline_scale) = parse_qos_mix(args, capacity)?;
     let admission = parse_admission(args, capacity, deadline_scale)?;
+    let tenants = parse_tenants(args)?;
 
     // A replayed trace carries its own annotations: honor them (and the
     // QoS comparison they imply) unless the user explicitly re-stamps
@@ -393,13 +436,17 @@ fn cmd_schedule_scenario(
             .as_ref()
             .map_or(false, |ks| ks.iter().any(|k| k.qos != kernelet::Qos::BATCH));
 
+    let workload = WorkloadSpec::new(scenario, mix)
+        .instances(instances)
+        .load(load)
+        .qos(qos)
+        .tenants(tenants.clone());
     let make_source = |seed: u64| -> Result<Box<dyn ArrivalSource>> {
         match &trace_instances {
-            Some(ks) => Ok(Box::new(kernelet::workload::ReplaySource::from_instances(
-                "trace",
-                ks.clone(),
+            Some(ks) => Ok(tenants.attach(Box::new(
+                kernelet::workload::ReplaySource::from_instances("trace", ks.clone()),
             ))),
-            None => kernelet::workload::scenario_source(scenario, mix, instances, offered, seed, qos),
+            None => workload.clone().seed(seed).source(capacity),
         }
     };
 
@@ -450,8 +497,19 @@ fn cmd_schedule_scenario(
             }
         }
     }
-    let policies: &[&str] =
-        if qos_on { &["base", "kernelet", "deadline"] } else { &["base", "kernelet"] };
+    if !tenants.is_single() {
+        println!(
+            "tenants: {} (tenant 0 share {:.2}); fairshare = equal-weight fair gate over the \
+             deadline selector",
+            tenants.tenants(),
+            tenants.share(TenantId(0))
+        );
+    }
+    let mut policies: Vec<&str> =
+        if qos_on { vec!["base", "kernelet", "deadline"] } else { vec!["base", "kernelet"] };
+    if !tenants.is_single() {
+        policies.push("fairshare");
+    }
     let admission_header =
         if admission.is_some() { " shed defer goodput_kps" } else { "" };
     if qos_on {
@@ -475,17 +533,24 @@ fn cmd_schedule_scenario(
             cost.break_even_secs()
         );
     }
-    for &policy in policies {
+    for &policy in &policies {
         let mut source = make_source(seed)?;
-        let mut sel: Box<dyn Selector> = match (policy, preempt_cost) {
-            ("deadline", Some(cost)) => Box::new(DeadlineSelector::new().with_preemption(cost)),
-            _ => selector_for(policy),
+        let mut sel = match policy {
+            "deadline" => SelectorSpec::Deadline { preempt: preempt_cost }.build(),
+            "fairshare" => SelectorSpec::FairShare {
+                weights: vec![1.0; tenants.tenants()],
+                max_lead_secs: None,
+            }
+            .build(),
+            other => {
+                SelectorSpec::from_name(other).expect("comparison policy names are valid").build()
+            }
         };
-        let mut engine = Engine::new(&coord);
+        let mut builder = EngineBuilder::new(&coord);
         if let Some((spec, _)) = &admission {
-            engine = engine.with_admission(spec.build());
+            builder = builder.admission(spec.build());
         }
-        let rep = engine.run_source(sel.as_mut(), source.as_mut());
+        let rep = builder.build().run_source(sel.as_mut(), source.as_mut());
         let mut line = if qos_on {
             format!(
                 "{:>9} {:>9.3} {:>13.1} {:>14.5} {:>6.3} {:>7.1} {:>7} {:>12.5} {:>6}",
@@ -521,6 +586,12 @@ fn cmd_schedule_scenario(
             ));
         }
         println!("{line}");
+        if !tenants.is_single() {
+            print_tenant_rows(&rep.tenants);
+        }
+        if rep.shed_retries > 0 {
+            println!("  ({} shed submissions retried by closed-loop clients)", rep.shed_retries);
+        }
     }
     spill_cache_dir(&cache_dir, &coord)?;
     Ok(())
@@ -545,15 +616,14 @@ fn cmd_schedule_fleet(
     seed: u64,
     preempt_cost: Option<PreemptCost>,
 ) -> Result<()> {
-    const DISPATCH_POLICIES: [&str; 4] = ["roundrobin", "leastloaded", "sloaware", "efc"];
     let dispatch = flag_value(args, "--dispatch").expect("caller checked --dispatch");
     let policies: Vec<&str> = if dispatch == "all" {
-        DISPATCH_POLICIES.to_vec()
+        DispatchSpec::NAMES.to_vec()
     } else {
         anyhow::ensure!(
-            DISPATCH_POLICIES.contains(&dispatch),
+            DispatchSpec::NAMES.contains(&dispatch),
             "unknown --dispatch {dispatch} (valid: {} all)",
-            DISPATCH_POLICIES.join(" ")
+            DispatchSpec::NAMES.join(" ")
         );
         vec![dispatch]
     };
@@ -568,6 +638,13 @@ fn cmd_schedule_fleet(
     let offered = load * capacity * gpus as f64;
     let (qos, deadline_scale) = parse_qos_mix(args, capacity)?;
     let admission = parse_admission(args, capacity, deadline_scale)?;
+    let tenants = parse_tenants(args)?;
+    let workload = WorkloadSpec::new(scenario, mix)
+        .instances(instances)
+        .load(load)
+        .seed(seed)
+        .qos(qos)
+        .tenants(tenants.clone());
     println!(
         "routing scenario {scenario} across {gpus}x {} (mix {}, {} instances/app, \
          load {load:.2} = {offered:.1} kernels/s offered; fleet BASE capacity {:.1} kernels/s)",
@@ -594,17 +671,17 @@ fn cmd_schedule_fleet(
         "eta_err_s"
     );
     for policy in policies {
-        let mut dispatcher =
-            MultiGpuDispatcher::new(&vec![gpu.clone(); gpus], dispatch_policy_for(policy));
+        let mut dispatcher = MultiGpuDispatcher::new(
+            &vec![gpu.clone(); gpus],
+            DispatchSpec::from_name(policy).expect("names validated above").build(),
+        );
         if let Some(cost) = preempt_cost {
             dispatcher = dispatcher.with_preemption(cost);
         }
         if let Some((spec, _)) = &admission {
             dispatcher = dispatcher.with_admission(*spec, ShedPoint::Router);
         }
-        let mut source = kernelet::workload::scenario_source(
-            scenario, mix, instances, offered, seed, qos,
-        )?;
+        let mut source = workload.source(capacity * gpus as f64)?;
         let rep = dispatcher.run_source(source.as_mut());
         let fleet = rep.fleet_qos();
         let eta_err = match kernelet::coordinator::weighted_mean_abs_err_secs(&rep.eta) {
@@ -622,6 +699,12 @@ fn cmd_schedule_fleet(
             rep.reports.iter().map(|r| r.preemptions).sum::<u64>(),
             eta_err
         );
+        if !tenants.is_single() {
+            print_tenant_rows(&rep.tenants);
+        }
+        if rep.shed_retries > 0 {
+            println!("  ({} shed submissions retried by closed-loop clients)", rep.shed_retries);
+        }
     }
     Ok(())
 }
@@ -650,10 +733,15 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     let coord = Coordinator::new(&gpu);
     let capacity = base_capacity_kps(&coord, mix);
     let (qos, _scale) = parse_qos_mix(args, capacity)?;
-    let mut source =
-        kernelet::workload::scenario_source(scenario, mix, instances, load * capacity, seed, qos)?;
+    let mut source = WorkloadSpec::new(scenario, mix)
+        .instances(instances)
+        .load(load)
+        .seed(seed)
+        .qos(qos)
+        .source(capacity)?;
     let mut recorder = RecordingSource::new(source.as_mut());
-    let rep = Engine::new(&coord)
+    let rep = EngineBuilder::new(&coord)
+        .build()
         .run_source(&mut kernelet::coordinator::KerneletSelector, &mut recorder);
     let log = recorder.into_log();
     let json = kernelet::workload::write_trace(&log)?;

@@ -66,6 +66,19 @@ pub trait ArrivalSource {
     /// Open-loop sources ignore it.
     fn on_completion(&mut self, _id: u64, _t_secs: f64) {}
 
+    /// Shed feedback — client-visible backpressure: instance `id` was
+    /// rejected by admission control (at the gate, the router or a
+    /// device) at `t_secs` and will never run. Open-loop sources ignore
+    /// it; [`ClosedLoopSource`] re-queues the client with a capped,
+    /// jittered retry instead of losing it permanently.
+    fn on_shed(&mut self, _id: u64, _t_secs: f64) {}
+
+    /// Number of shed submissions the source has re-queued for retry so
+    /// far (0 for sources without retry semantics).
+    fn retries(&self) -> u64 {
+        0
+    }
+
     /// Whether the source may still produce arrivals (drives the solo
     /// dispatcher's chunk-vs-run-whole decision). The default treats a
     /// scheduled arrival as the only evidence; closed-loop sources
@@ -522,20 +535,37 @@ impl ArrivalSource for HeavyTailSource {
 // Closed loop
 // ---------------------------------------------------------------------
 
+/// How many consecutive sheds a closed-loop client retries before it
+/// gives up its current submission for good.
+const MAX_SHED_RETRIES: u32 = 5;
+
 /// N clients, each cycling submit → wait for completion → think
 /// (exponential) → resubmit, until `total` jobs have been issued
 /// fleet-wide. The offered load self-throttles with service time — the
 /// canonical interactive-user model.
+///
+/// Backpressure: a shed submission ([`ArrivalSource::on_shed`]) is
+/// retried — the client re-enters think state with a fresh jittered
+/// think draw and resubmits under a new id, up to [`MAX_SHED_RETRIES`]
+/// consecutive sheds (a completion resets the strike count). The source
+/// used to drop such clients permanently; [`Self::retries`] counts the
+/// re-queues so reports can surface them.
 pub struct ClosedLoopSource {
     specs: Vec<KernelSpec>,
     rng: Xoshiro256,
     think_rate: f64,
     total: u64,
+    /// Jobs charged against `total` (a retried shed returns its slot).
     issued: u64,
+    /// Monotone id counter — never reused, so a retry is a fresh id.
+    next_id: u64,
     /// (next submit time, client) for clients currently thinking.
     thinking: Vec<(f64, usize)>,
     /// instance id → owning client, for jobs in flight.
     owner: HashMap<u64, usize>,
+    /// Consecutive sheds per client since its last completion.
+    strikes: Vec<u32>,
+    retried: u64,
     qos: QosMix,
 }
 
@@ -552,8 +582,11 @@ impl ClosedLoopSource {
             think_rate,
             total,
             issued: 0,
+            next_id: 0,
             thinking,
             owner: HashMap::new(),
+            strikes: vec![0; clients],
+            retried: 0,
             qos: QosMix::ALL_BATCH,
         }
     }
@@ -593,7 +626,8 @@ impl ArrivalSource for ClosedLoopSource {
         }
         let i = self.head()?;
         let (t, client) = self.thinking.remove(i);
-        let id = self.issued;
+        let id = self.next_id;
+        self.next_id += 1;
         self.issued += 1;
         self.owner.insert(id, client);
         let spec = self.rng.choose(&self.specs).clone();
@@ -602,14 +636,36 @@ impl ArrivalSource for ClosedLoopSource {
 
     fn on_completion(&mut self, id: u64, t_secs: f64) {
         if let Some(client) = self.owner.remove(&id) {
+            self.strikes[client] = 0;
             if self.issued < self.total {
                 self.thinking.push((t_secs + self.rng.exponential(self.think_rate), client));
             }
         }
     }
 
+    fn on_shed(&mut self, id: u64, t_secs: f64) {
+        if let Some(client) = self.owner.remove(&id) {
+            self.strikes[client] += 1;
+            if self.strikes[client] <= MAX_SHED_RETRIES {
+                // Return the budget slot and resubmit after a jittered
+                // think — the retry is a fresh id, never a reused one.
+                self.issued -= 1;
+                self.retried += 1;
+                self.thinking.push((t_secs + self.rng.exponential(self.think_rate), client));
+            }
+            // Past the cap the client abandons this submission: the
+            // shed stays terminal, exactly the pre-retry behavior.
+        }
+    }
+
+    fn retries(&self) -> u64 {
+        self.retried
+    }
+
     fn more_expected(&self) -> bool {
-        self.issued < self.total
+        // A client that exhausted its shed retries is gone for good; if
+        // every client gave up, no budget slot can ever be filled.
+        self.issued < self.total && (!self.thinking.is_empty() || !self.owner.is_empty())
     }
 }
 
@@ -795,6 +851,14 @@ impl ArrivalSource for RecordingSource<'_> {
 
     fn on_completion(&mut self, id: u64, t_secs: f64) {
         self.inner.on_completion(id, t_secs);
+    }
+
+    fn on_shed(&mut self, id: u64, t_secs: f64) {
+        self.inner.on_shed(id, t_secs);
+    }
+
+    fn retries(&self) -> u64 {
+        self.inner.retries()
     }
 
     fn more_expected(&self) -> bool {
@@ -1114,6 +1178,60 @@ mod tests {
         }
         assert_eq!(done, 6);
         assert!(!src.more_expected());
+    }
+
+    #[test]
+    fn closed_loop_retries_shed_submissions() {
+        let mut src = ClosedLoopSource::new(Mix::MIX, 1, 10.0, 3, 41);
+        // The lone client submits; the gate sheds it.
+        let a = src.next_arrival().unwrap();
+        assert_eq!(src.retries(), 0);
+        src.on_shed(a.id, a.arrival_time + 0.1);
+        // The client is NOT lost: it re-enters think state and will
+        // resubmit (the pre-fix behavior dropped it permanently).
+        assert_eq!(src.retries(), 1);
+        assert!(src.more_expected());
+        let b = src.next_arrival().expect("shed client must resubmit");
+        assert!(b.id > a.id, "retry must use a fresh id");
+        assert!(b.arrival_time > a.arrival_time, "retry waits out a think");
+        // A completion resets the strike count; the run still issues
+        // its full budget of 3 completed jobs.
+        src.on_completion(b.id, b.arrival_time + 0.2);
+        let mut done = 1;
+        while let Some(k) = src.next_arrival() {
+            done += 1;
+            src.on_completion(k.id, k.arrival_time + 0.2);
+        }
+        assert_eq!(done, 3);
+        assert!(!src.more_expected());
+    }
+
+    #[test]
+    fn closed_loop_client_gives_up_after_capped_retries() {
+        let mut src = ClosedLoopSource::new(Mix::MIX, 1, 10.0, 5, 43);
+        // Shed everything: the client retries MAX_SHED_RETRIES times,
+        // then abandons the submission for good.
+        let mut sheds = 0;
+        while let Some(k) = src.next_arrival() {
+            sheds += 1;
+            src.on_shed(k.id, k.arrival_time + 0.01);
+        }
+        assert_eq!(sheds, 1 + MAX_SHED_RETRIES as u64);
+        assert_eq!(src.retries(), MAX_SHED_RETRIES as u64);
+        // No live client remains, so the source reports exhaustion even
+        // though the job budget was never filled.
+        assert!(!src.more_expected());
+        assert!(src.peek_time().is_none());
+    }
+
+    #[test]
+    fn open_loop_sources_ignore_shed_feedback() {
+        let mut src = PoissonSource::new(Mix::MIX, 4, 100.0, 9);
+        let a = src.next_arrival().unwrap();
+        src.on_shed(a.id, a.arrival_time);
+        assert_eq!(src.retries(), 0);
+        let rest = drain(&mut src);
+        assert_eq!(rest.len(), 15, "shed feedback must not perturb open loops");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 pub mod arrivals;
 pub mod qos;
+pub mod tenancy;
 
 pub use arrivals::{
     parse_trace, scenario_source, trace_source, write_trace, ArrivalSource, BurstySource,
@@ -20,6 +21,7 @@ pub use arrivals::{
     ReplaySource, SCENARIO_NAMES,
 };
 pub use qos::QosMix;
+pub use tenancy::TenantMix;
 
 use crate::kernel::{BenchmarkApp, KernelInstance};
 use crate::stats::Xoshiro256;

@@ -1,0 +1,257 @@
+//! Tenant mix specs for arrival sources.
+//!
+//! A [`TenantMix`] tells a workload how its arrivals are split across
+//! tenants (users, job queues, customers). Like [`QosMix`](crate::workload::QosMix),
+//! assignment is **deterministic in the emission index** and consumes
+//! **no RNG**, so attaching a mix to a source never perturbs its
+//! arrival-time draw sequence — and the single-tenant mix
+//! ([`TenantMix::SINGLE`]) attaches as the identity transform (the
+//! inner source is returned unwrapped), so tenancy-off runs stay
+//! bit-identical to the pre-tenant engine. The invariants suite pins
+//! this differentially on every scenario.
+
+use crate::kernel::{KernelInstance, TenantId};
+use crate::workload::ArrivalSource;
+
+/// The tenant split a workload stamps onto its arrivals.
+///
+/// Holds one *arrival share* per tenant (normalized to sum 1). Shares
+/// describe who submits how much; they are independent of the fairness
+/// *weights* a selector enforces — a flooding tenant has a large share
+/// and an ordinary weight.
+///
+/// # Examples
+///
+/// ```
+/// use kernelet::kernel::TenantId;
+/// use kernelet::workload::TenantMix;
+///
+/// let mix = TenantMix::split(&[3.0, 1.0]); // tenant 0 submits 3x tenant 1
+/// let counts = (0..100).fold([0u64; 2], |mut c, i| {
+///     c[mix.stamp(i).0 as usize] += 1;
+///     c
+/// });
+/// assert_eq!(counts, [75, 25]);
+/// assert!(TenantMix::SINGLE.is_single());
+/// ```
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantMix {
+    /// Normalized arrival share per tenant; empty means single-tenant
+    /// (everything stays [`TenantId::SOLE`]).
+    shares: Vec<f64>,
+}
+
+impl TenantMix {
+    /// The tenancy-agnostic mix: one anonymous tenant, no stamping.
+    /// Attaching it to a source is the identity transform.
+    pub const SINGLE: TenantMix = TenantMix { shares: Vec::new() };
+
+    /// A multi-tenant split with the given relative arrival shares
+    /// (normalized internally). A split with zero or one entry is the
+    /// single-tenant mix.
+    pub fn split(shares: &[f64]) -> TenantMix {
+        if shares.len() <= 1 {
+            return TenantMix::SINGLE;
+        }
+        let total: f64 = shares.iter().sum();
+        assert!(
+            shares.iter().all(|&s| s.is_finite() && s > 0.0) && total > 0.0,
+            "tenant shares must be positive and finite: {shares:?}"
+        );
+        TenantMix { shares: shares.iter().map(|s| s / total).collect() }
+    }
+
+    /// Whether this mix stamps anything other than [`TenantId::SOLE`].
+    pub fn is_single(&self) -> bool {
+        self.shares.len() <= 1
+    }
+
+    /// Number of tenants (1 for the single-tenant mix).
+    pub fn tenants(&self) -> usize {
+        self.shares.len().max(1)
+    }
+
+    /// Normalized arrival share of `tenant` (1.0 under the
+    /// single-tenant mix).
+    pub fn share(&self, tenant: TenantId) -> f64 {
+        if self.is_single() {
+            1.0
+        } else {
+            self.shares.get(tenant.0 as usize).copied().unwrap_or(0.0)
+        }
+    }
+
+    /// Tenant of the `index`-th emitted arrival.
+    ///
+    /// The arrival goes to the first tenant whose *cumulative* share
+    /// floor advances at `index + 1` — the same integer-part rule
+    /// [`QosMix::stamp`](crate::workload::QosMix::stamp) uses, applied
+    /// to the cumulative share vector. For two tenants the split is
+    /// exact (`⌊n·share⌋` arrivals in every prefix of `n`); for more,
+    /// counts track their shares within a small bounded drift (an exact
+    /// simultaneous floor partition does not exist for ≥3 shares).
+    /// Deterministic and RNG-free by design.
+    pub fn stamp(&self, index: u64) -> TenantId {
+        if self.is_single() {
+            return TenantId::SOLE;
+        }
+        let mut cumulative = 0.0;
+        for (j, share) in self.shares.iter().enumerate() {
+            cumulative += share;
+            let lo = (cumulative * index as f64).floor();
+            let hi = (cumulative * (index + 1) as f64).floor();
+            if hi > lo {
+                return TenantId(j as u32);
+            }
+        }
+        // Float round-off can leave the last cumulative share a hair
+        // under 1.0; the tail tenant absorbs those indexes.
+        TenantId(self.shares.len() as u32 - 1)
+    }
+
+    /// Wrap `src` so every emitted arrival is stamped with its tenant.
+    ///
+    /// The single-tenant mix returns `src` unchanged — structurally the
+    /// identity, so a tenancy-off pipeline is the exact pre-tenant
+    /// object graph, not merely an equivalent one.
+    pub fn attach(&self, src: Box<dyn ArrivalSource>) -> Box<dyn ArrivalSource> {
+        if self.is_single() {
+            src
+        } else {
+            Box::new(TenantStamped { mix: self.clone(), inner: src, emitted: 0 })
+        }
+    }
+}
+
+/// An [`ArrivalSource`] adapter stamping tenants by emission index;
+/// every other trait method delegates to the inner source untouched.
+struct TenantStamped {
+    mix: TenantMix,
+    inner: Box<dyn ArrivalSource>,
+    emitted: u64,
+}
+
+impl ArrivalSource for TenantStamped {
+    fn scenario(&self) -> &'static str {
+        self.inner.scenario()
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.inner.peek_time()
+    }
+
+    fn next_arrival(&mut self) -> Option<KernelInstance> {
+        let k = self.inner.next_arrival()?;
+        let tenant = self.mix.stamp(self.emitted);
+        self.emitted += 1;
+        Some(k.with_tenant(tenant))
+    }
+
+    fn on_completion(&mut self, id: u64, t_secs: f64) {
+        self.inner.on_completion(id, t_secs);
+    }
+
+    fn on_shed(&mut self, id: u64, t_secs: f64) {
+        self.inner.on_shed(id, t_secs);
+    }
+
+    fn retries(&self) -> u64 {
+        self.inner.retries()
+    }
+
+    fn more_expected(&self) -> bool {
+        self.inner.more_expected()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{scenario_source, Mix, QosMix};
+
+    #[test]
+    fn single_mix_stamps_sole_tenant() {
+        for mix in [TenantMix::SINGLE, TenantMix::split(&[1.0]), TenantMix::split(&[])] {
+            assert!(mix.is_single());
+            assert_eq!(mix.tenants(), 1);
+            assert_eq!(mix.share(TenantId::SOLE), 1.0);
+            for i in 0..50 {
+                assert_eq!(mix.stamp(i), TenantId::SOLE);
+            }
+        }
+    }
+
+    #[test]
+    fn two_way_split_is_exact_in_every_prefix() {
+        for (a, b) in [(1.0, 1.0), (10.0, 1.0), (1.0, 3.0)] {
+            let mix = TenantMix::split(&[a, b]);
+            let share0 = a / (a + b);
+            let mut count0 = 0u64;
+            for n in 0..500u64 {
+                if mix.stamp(n) == TenantId(0) {
+                    count0 += 1;
+                }
+                let expect = (share0 * (n + 1) as f64).floor() as u64;
+                assert_eq!(count0, expect, "share {share0} prefix {}", n + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_way_split_tracks_shares() {
+        let shares = [5.0, 3.0, 2.0];
+        let mix = TenantMix::split(&shares);
+        let n = 1000u64;
+        let mut counts = [0u64; 3];
+        for i in 0..n {
+            counts[mix.stamp(i).0 as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<u64>(), n);
+        for (j, &c) in counts.iter().enumerate() {
+            let expect = shares[j] / 10.0 * n as f64;
+            assert!(
+                (c as f64 - expect).abs() <= 0.02 * n as f64,
+                "tenant {j}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn attach_single_is_structural_identity() {
+        // Same seed, with and without the single-tenant attach: every
+        // emitted instance is bit-identical, including tenant ids.
+        let mk = || scenario_source("poisson", Mix::MIX, 3, 200.0, 11, QosMix::ALL_BATCH).unwrap();
+        let mut plain = mk();
+        let mut attached = TenantMix::SINGLE.attach(mk());
+        while let Some(a) = plain.next_arrival() {
+            let b = attached.next_arrival().expect("attached source ended early");
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_time.to_bits(), b.arrival_time.to_bits());
+            assert_eq!(a.tenant, b.tenant);
+        }
+        assert!(attached.next_arrival().is_none());
+    }
+
+    #[test]
+    fn attach_stamps_without_perturbing_arrivals() {
+        let mk = || scenario_source("bursty", Mix::MIX, 4, 300.0, 13, QosMix::ALL_BATCH).unwrap();
+        let mut plain = mk();
+        let mix = TenantMix::split(&[10.0, 1.0]);
+        let mut stamped = mix.attach(mk());
+        let mut seen = [false; 2];
+        while let Some(a) = plain.next_arrival() {
+            let b = stamped.next_arrival().expect("stamped source ended early");
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_time.to_bits(), b.arrival_time.to_bits());
+            assert_eq!(a.spec, b.spec);
+            seen[b.tenant.0 as usize] = true;
+        }
+        assert!(seen[0] && seen[1], "both tenants must appear in the stream");
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_positive_share_rejected() {
+        let _ = TenantMix::split(&[1.0, 0.0]);
+    }
+}

@@ -8,7 +8,7 @@
 
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::{
-    AdmissionDecision, AdmissionSpec, Coordinator, Engine, KerneletSelector,
+    AdmissionDecision, AdmissionSpec, Coordinator, Engine, EngineBuilder, KerneletSelector,
 };
 use kernelet::figures::throughput::base_capacity_kps;
 use kernelet::kernel::{BenchmarkApp, KernelInstance};
@@ -39,8 +39,9 @@ fn admit_all_is_bit_identical_to_unguarded_engine() {
                 .expect("valid scenario")
         };
         let plain = Engine::new(&coord).run_source(&mut KerneletSelector, mk().as_mut());
-        let gated = Engine::new(&coord)
-            .with_admission(AdmissionSpec::AdmitAll.build())
+        let gated = EngineBuilder::new(&coord)
+            .admission(AdmissionSpec::AdmitAll.build())
+            .build()
             .run_source(&mut KerneletSelector, mk().as_mut());
         assert_eq!(gated.total_cycles, plain.total_cycles, "{scenario}: total_cycles");
         assert_eq!(gated.completion, plain.completion, "{scenario}: completion map");
@@ -80,8 +81,9 @@ fn slo_guard_sheds_only_batch_and_beats_admit_all_under_bursty_overload() {
 
     let open = Engine::new(&coord).run_source(&mut KerneletSelector, mk().as_mut());
     let spec = AdmissionSpec::for_policy("sloguard", capacity, deadline_scale, 16);
-    let guarded = Engine::new(&coord)
-        .with_admission(spec.build())
+    let guarded = EngineBuilder::new(&coord)
+        .admission(spec.build())
+        .build()
         .run_source(&mut KerneletSelector, mk().as_mut());
 
     // Craft check: the open door really is overloaded — a class-blind
@@ -138,8 +140,9 @@ fn admission_counts_partition_arrivals_exactly() {
                 .expect("valid scenario")
         };
         for spec in specs {
-            let rep = Engine::new(&coord)
-                .with_admission(spec.build())
+            let rep = EngineBuilder::new(&coord)
+                .admission(spec.build())
+                .build()
                 .run_source(&mut KerneletSelector, mk().as_mut());
             let a = &rep.admission;
             for (class, stats, adm) in [
@@ -197,8 +200,9 @@ fn backlog_cap_bounds_queue_depth() {
         QosMix::ALL_BATCH,
     )
     .unwrap();
-    let rep = Engine::new(&coord)
-        .with_admission(AdmissionSpec::BacklogCap { cap }.build())
+    let rep = EngineBuilder::new(&coord)
+        .admission(AdmissionSpec::BacklogCap { cap }.build())
+        .build()
         .run_source(&mut KerneletSelector, source.as_mut());
     assert!(
         rep.peak_queue_depth() <= cap,
@@ -233,7 +237,7 @@ fn deferred_kernels_are_released_and_complete() {
         KernelInstance::new(2, mm.clone(), 0.0),
         KernelInstance::new(3, mm, 0.0),
     ];
-    let mut engine = Engine::new(&coord).with_admission(spec.build());
+    let mut engine = EngineBuilder::new(&coord).admission(spec.build()).build();
     // The head is admitted; the rest defer at the gate.
     for k in instances {
         let d = engine.offer(k.clone());
@@ -261,7 +265,7 @@ fn deferred_kernels_are_released_and_complete() {
         KernelInstance::new(1, BenchmarkApp::MM.spec(), 0.0),
         KernelInstance::new(2, BenchmarkApp::MM.spec(), 0.0),
     ];
-    let rep = Engine::new(&coord).with_admission(spec.build()).run_source(
+    let rep = EngineBuilder::new(&coord).admission(spec.build()).build().run_source(
         &mut KerneletSelector,
         &mut ReplaySource::from_instances("crafted", instances),
     );

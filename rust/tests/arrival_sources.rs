@@ -6,9 +6,8 @@
 //! streaming scenario inherits the engine semantics the PR-1
 //! differential tests pinned against the seed loops.
 
-use kernelet::config::GpuConfig;
+use kernelet::config::{GpuConfig, SelectorSpec};
 use kernelet::coordinator::{Coordinator, Engine, KerneletSelector};
-use kernelet::figures::throughput::selector_for;
 use kernelet::model::hetero::build_hetero_chain;
 use kernelet::model::params::{ChainParams, SmEnv};
 use kernelet::workload::{
@@ -68,10 +67,10 @@ fn engine_streamed_poisson_matches_frozen_vec_schedule() {
         for (per_app, lambda) in [(6u32, 150.0), (10, 2000.0)] {
             let stream = Stream::poisson(Mix::MIX, per_app, lambda, seed);
             for policy in ["kernelet", "base"] {
-                let by_vec = Engine::new(&coord).run(selector_for(policy).as_mut(), &stream);
+                let sel = || SelectorSpec::from_name(policy).unwrap().build();
+                let by_vec = Engine::new(&coord).run(sel().as_mut(), &stream);
                 let mut src = PoissonSource::new(Mix::MIX, per_app, lambda, seed);
-                let by_src =
-                    Engine::new(&coord).run_source(selector_for(policy).as_mut(), &mut src);
+                let by_src = Engine::new(&coord).run_source(sel().as_mut(), &mut src);
                 assert_reports_identical(
                     &format!("{}/{policy}/λ{lambda}", gpu.name),
                     &by_src,

@@ -7,8 +7,8 @@
 use kernelet::config::GpuConfig;
 use kernelet::coordinator::baselines::{run_base, run_monte_carlo, run_opt};
 use kernelet::coordinator::{
-    coresident_feasible, feasible_splits, run_kernelet, Coordinator, DeadlineSelector, Engine,
-    FifoSelector, KerneletSelector,
+    coresident_feasible, feasible_splits, run_kernelet, AdmissionSpec, Coordinator,
+    DeadlineSelector, Engine, EngineBuilder, FifoSelector, KerneletSelector,
 };
 use kernelet::kernel::{BenchmarkApp, InstructionMix, KernelInstance, KernelSpec, Qos};
 use kernelet::workload::ReplaySource;
@@ -644,6 +644,48 @@ fn qos_disabled_is_bit_identical_to_pre_refactor_engine() {
         assert_eq!(dl.qos.batch.completed, stream.len());
         assert_eq!(dl.qos.latency.completed, 0);
         assert_eq!(dl.qos.total_deadline_misses(), 0);
+    }
+}
+
+/// DIFFERENTIAL: `EngineBuilder` is pure plumbing — an engine built
+/// through it is bit-identical to one assembled through the legacy
+/// `Engine::new` + `with_*` constructors, with and without an
+/// admission gate, on saturated and Poisson streams.
+#[test]
+fn engine_builder_is_bit_identical_to_legacy_constructors() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let streams = [
+        Stream::saturated(Mix::MIX, 2, 31),
+        Stream::poisson(Mix::ALL, 2, 120.0, 32),
+        Stream::poisson(Mix::MIX, 3, 900.0, 33),
+    ];
+    for (si, stream) in streams.iter().enumerate() {
+        let legacy = Engine::new(&coord).run(&mut KerneletSelector, stream);
+        let built = EngineBuilder::new(&coord).build().run(&mut KerneletSelector, stream);
+        assert_eq!(built.total_cycles, legacy.total_cycles, "stream {si}: total_cycles");
+        assert_eq!(built.completion, legacy.completion, "stream {si}: completion map");
+        assert_eq!(built.slice_trace, legacy.slice_trace, "stream {si}: slice trace");
+        assert_eq!(built.queue_depth, legacy.queue_depth, "stream {si}: queue depth");
+        assert_eq!(built.coschedule_rounds, legacy.coschedule_rounds, "stream {si}: rounds");
+        assert_eq!(
+            built.mean_turnaround_secs, legacy.mean_turnaround_secs,
+            "stream {si}: turnaround"
+        );
+
+        // Same pin through the admission axis (the deprecated shim
+        // must keep delegating to exactly what the builder wires up).
+        let spec = AdmissionSpec::BacklogCap { cap: 4 };
+        #[allow(deprecated)]
+        let legacy = Engine::new(&coord)
+            .with_admission(spec.build())
+            .run_source(&mut KerneletSelector, &mut ReplaySource::from_stream(stream));
+        let built = EngineBuilder::new(&coord)
+            .admission(spec.build())
+            .build()
+            .run_source(&mut KerneletSelector, &mut ReplaySource::from_stream(stream));
+        assert_eq!(built.total_cycles, legacy.total_cycles, "stream {si}: gated cycles");
+        assert_eq!(built.completion, legacy.completion, "stream {si}: gated completion");
+        assert_eq!(built.admission, legacy.admission, "stream {si}: gate accounting");
     }
 }
 

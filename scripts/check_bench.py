@@ -5,16 +5,20 @@ Stdlib only (runs in containers with nothing but python3). Two jobs:
 
 1. **Schema + acceptance checks** for every bench kind the repo emits
    (`BENCH_model.json`, `BENCH_scheduling.json`, `BENCH_throughput.json`,
-   `BENCH_qos.json`, `BENCH_admission.json`, `BENCH_routing.json`):
+   `BENCH_qos.json`, `BENCH_admission.json`, `BENCH_routing.json`,
+   `BENCH_tenancy.json`):
    structure, coverage
    (scenarios x policies x fleets), and the semantic acceptance bars —
    the deadline policy must not lose to class-blind Kernelet on the
    latency class under bursty overload (qos), the SLO guard must not
    lose to the open door while shedding only batch-class kernels, with
    the per-class completed + shed + deferred_unfinished + incomplete
-   counts summing exactly to arrivals in every cell (admission), and
+   counts summing exactly to arrivals in every cell (admission),
    ETA-driven routing (`efc`) must not lose to `sloaware` on fleet
-   latency-class deadline misses at the bursty peak load (routing).
+   latency-class deadline misses at the bursty peak load (routing), and
+   the weighted-fair gate must keep the flooded victim tenant inside
+   its weight band and never lose to the tenant-blind deadline
+   selector on the victim's p99 at the bursty peak (tenancy).
 
 2. **Baseline comparison**: fresh files are compared against committed
    baselines (default `scripts/baselines/`) with a +/-15% tolerance on
@@ -303,6 +307,99 @@ def validate_routing(d, name):
         fail(f"{name}: bursty sloaware/efc curves missing")
 
 
+def validate_tenancy(d, name):
+    check(d.get("bench") == "tenancy", f"{name}: wrong bench tag {d.get('bench')!r}")
+    check(0.0 < d.get("latency_fraction", 0) <= 1.0, f"{name}: bad latency_fraction")
+    check(d.get("deadline_scale", 0) > 0.0, f"{name}: bad deadline_scale")
+    shares = d.get("tenant_shares", [])
+    weights = d.get("fair_weights", [])
+    if not check(
+        len(shares) >= 2 and all(s > 0 for s in shares),
+        f"{name}: bad tenant_shares {shares}",
+    ):
+        return
+    check(
+        len(weights) == len(shares) and all(w > 0 for w in weights),
+        f"{name}: fair_weights {weights} don't match tenant_shares",
+    )
+    curves = d.get("curves", [])
+    policies = {c["policy"] for c in curves}
+    check(
+        policies >= {"deadline", "fairshare"},
+        f"{name}: missing tenancy policies: {sorted(policies)}",
+    )
+    scenarios = {c["scenario"] for c in curves}
+    check(len(scenarios) >= 2, f"{name}: need >=2 scenarios, got {sorted(scenarios)}")
+    by = {(c["scenario"], c["policy"]): c["points"] for c in curves}
+    for (scenario, policy), pts in by.items():
+        check(bool(pts), f"{name}: empty tenancy curve {scenario}/{policy}")
+        for p in pts:
+            label = f"{name}: {scenario}/{policy} load {p['load']}"
+            check(p.get("kernels", 0) > 0, f"{label}: dead point")
+            check(p.get("throughput_kps", 0) > 0, f"{label}: no throughput")
+            rows = p.get("tenants", [])
+            check(
+                len(rows) == len(shares),
+                f"{label}: {len(rows)} tenant rows != {len(shares)} tenants",
+            )
+            total_share = 0.0
+            for t in rows:
+                tl = f"{label} tenant {t.get('tenant')}"
+                check(t["completed"] <= t["submitted"], f"{tl}: completed exceeds submitted")
+                check(0.0 <= t["share"] <= 1.0, f"{tl}: share out of [0, 1]")
+                check(t["service_secs"] >= 0.0, f"{tl}: negative service")
+                check(t["shed"] >= 0, f"{tl}: negative shed")
+                check(t["p50_s"] <= t["p99_s"] + 1e-12, f"{tl}: percentiles unordered")
+                total_share += t["share"]
+            # Shares are service_secs / total, so they partition the run.
+            if any(t.get("service_secs", 0) > 0 for t in rows):
+                check(
+                    abs(total_share - 1.0) <= 1e-6,
+                    f"{label}: tenant shares sum to {total_share}, not 1",
+                )
+
+    # Acceptance (the tentpole bar): at the bursty peak load, the
+    # weighted-fair gate must keep the flooded victim tenant (smallest
+    # arrival share) inside its weight band — not starved below half its
+    # arrival share, not above its weight entitlement — and never lose
+    # to the tenant-blind deadline selector on the victim's p99;
+    # strictly better whenever the blind run actually misses deadlines
+    # (a quiet quick-mode run where nobody misses proves nothing).
+    if ("bursty", "deadline") in by and ("bursty", "fairshare") in by:
+        victim = shares.index(min(shares))
+
+        def peak(pol):
+            p = max(by[("bursty", pol)], key=lambda p: p["load"])
+            return next(t for t in p["tenants"] if t["tenant"] == victim)
+
+        blind, fair = peak("deadline"), peak("fairshare")
+        check(
+            fair["p99_s"] <= blind["p99_s"] + ABS_EPS,
+            f"{name}: fairshare victim p99 {fair['p99_s']} > deadline "
+            f"{blind['p99_s']} at bursty peak",
+        )
+        if blind["deadline_misses"] > 0:
+            check(
+                fair["deadline_misses"] < blind["deadline_misses"]
+                or fair["p99_s"] < blind["p99_s"],
+                f"{name}: fair gate bought the victim nothing under the bursty flood",
+            )
+        arrival_share = shares[victim] / sum(shares)
+        entitlement = weights[victim] / sum(weights)
+        check(
+            fair["share"] >= 0.5 * arrival_share,
+            f"{name}: victim starved under fairshare: share {fair['share']} < "
+            f"half its arrival share {arrival_share}",
+        )
+        check(
+            fair["share"] <= entitlement + 0.05,
+            f"{name}: victim past its weight entitlement {entitlement}: "
+            f"share {fair['share']}",
+        )
+    else:
+        fail(f"{name}: bursty deadline/fairshare curves missing")
+
+
 MODEL_COUNTERS = (
     "memo_hits",
     "memo_misses",
@@ -364,6 +461,7 @@ VALIDATORS = {
     "qos": validate_qos,
     "admission": validate_admission,
     "routing": validate_routing,
+    "tenancy": validate_tenancy,
 }
 
 
@@ -379,6 +477,10 @@ COMPARE_KEYS = {
     "qos": ["throughput_kps", "latency.p99_s", "batch.p99_s"],
     "admission": ["throughput_kps", "goodput_kps", "latency.p99_s"],
     "routing": ["throughput_kps", "goodput_kps", "latency.p99_s"],
+    # Per-tenant rows are a list (not addressable by dotted path); the
+    # point-level kernel count and throughput are the deterministic
+    # drift signals.
+    "tenancy": ["kernels", "throughput_kps"],
 }
 
 
@@ -537,6 +639,35 @@ def _routing_point(load, policy):
     return point
 
 
+def _tenant_row(tenant, submitted, share, p99, misses=0, shed=0):
+    return {
+        "tenant": tenant,
+        "submitted": submitted,
+        "completed": submitted - shed,
+        "share": share,
+        "service_secs": share * 2.0,
+        "shed": shed,
+        "p50_s": p99 / 3,
+        "p99_s": p99,
+        "deadline_misses": misses,
+        "goodput_kps": 50.0,
+    }
+
+
+def _tenancy_point(load, policy):
+    victim_p99 = 0.1 if policy == "fairshare" else 0.5
+    victim_misses = 1 if policy == "fairshare" else 5
+    return {
+        "load": load,
+        "kernels": 220,
+        "throughput_kps": 100.0,
+        "tenants": [
+            _tenant_row(0, 200, 0.9, 0.3),
+            _tenant_row(1, 20, 0.1, victim_p99, misses=victim_misses),
+        ],
+    }
+
+
 def _qos_cls(p99, misses, deadlined):
     return {
         "completed": 40,
@@ -669,6 +800,27 @@ EXAMPLES = {
             for p in ("roundrobin", "leastloaded", "sloaware", "efc")
         ],
     },
+    "tenancy": {
+        "bench": "tenancy",
+        "gpu": "C2050",
+        "mix": "MIX",
+        "instances_per_app": 40,
+        "tenant_shares": [10.0, 1.0],
+        "fair_weights": [1.0, 1.0],
+        "latency_fraction": 0.3,
+        "deadline_scale": 4.0,
+        "base_capacity_kps": 120.0,
+        "wall_ms": 12,
+        "curves": [
+            {
+                "scenario": s,
+                "policy": p,
+                "points": [_tenancy_point(l, p) for l in (1.5, 3.0)],
+            }
+            for s in ("poisson", "bursty")
+            for p in ("deadline", "fairshare")
+        ],
+    },
 }
 
 
@@ -707,6 +859,37 @@ def self_test():
     QUIET = False
     if len(FAILURES) == before:
         fail("self-test: efc-beats-sloaware violation slipped through validate_routing")
+    else:
+        del FAILURES[before:]
+    # Negative: a fair gate that loses on the flooded victim's p99 at
+    # the bursty peak must be caught (the tenancy acceptance bar).
+    broken = json.loads(json.dumps(EXAMPLES["tenancy"]))
+    for c in broken["curves"]:
+        if c["scenario"] == "bursty" and c["policy"] == "fairshare":
+            for p in c["points"]:
+                p["tenants"][1]["p99_s"] = 0.9
+    before = len(FAILURES)
+    QUIET = True
+    validate_tenancy(broken, "<negative>")
+    QUIET = False
+    if len(FAILURES) == before:
+        fail("self-test: fairshare-loses-on-victim-p99 slipped through validate_tenancy")
+    else:
+        del FAILURES[before:]
+    # Negative: a starved victim (share below half its arrival share)
+    # must be caught even when the tail still looks fine.
+    starved = json.loads(json.dumps(EXAMPLES["tenancy"]))
+    for c in starved["curves"]:
+        if c["scenario"] == "bursty" and c["policy"] == "fairshare":
+            for p in c["points"]:
+                p["tenants"][0]["share"] = 0.99
+                p["tenants"][1]["share"] = 0.01
+    before = len(FAILURES)
+    QUIET = True
+    validate_tenancy(starved, "<negative>")
+    QUIET = False
+    if len(FAILURES) == before:
+        fail("self-test: starved victim slipped through validate_tenancy")
     else:
         del FAILURES[before:]
     # Negative: a binary search that simulates more candidates than the

@@ -5,7 +5,8 @@
 # events-per-second, BENCH_throughput.json saturation + fleet curves,
 # BENCH_qos.json per-class tail latency, BENCH_admission.json
 # goodput/shedding under overload, BENCH_routing.json fleet deadline
-# routing). Schema and baseline gating lives in scripts/check_bench.py.
+# routing, BENCH_tenancy.json per-tenant fair-share isolation). Schema
+# and baseline gating lives in scripts/check_bench.py.
 #
 # Usage: ./scripts/ci.sh [--quick]
 #   --quick   lower bench instance counts (CI smoke; default 50/8/10)
@@ -38,12 +39,14 @@ tp_instances=50
 qos_instances=40
 adm_instances=40
 routing_instances=25
+tenancy_instances=40
 if [[ "${1:-}" == "--quick" ]]; then
   instances=50
   tp_instances=8
   qos_instances=10
   adm_instances=10
   routing_instances=8
+  tenancy_instances=10
 fi
 
 # Known-failing tier-1 tests, one fully-qualified test name per line —
@@ -147,12 +150,17 @@ KERNELET_INSTANCES="${routing_instances}" \
 KERNELET_ROUTING_OUT="BENCH_routing.json" \
   cargo bench --bench routing
 
+echo "==> cargo bench --bench tenancy (instances/app=${tenancy_instances})"
+KERNELET_INSTANCES="${tenancy_instances}" \
+KERNELET_TENANCY_OUT="BENCH_tenancy.json" \
+  cargo bench --bench tenancy
+
 echo "==> bench gate (schemas + acceptance + baseline drift)"
 if command -v python3 >/dev/null 2>&1; then
   python3 "$SCRIPT_DIR/check_bench.py" \
     --baseline-dir "$SCRIPT_DIR/baselines" \
     BENCH_model.json BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json \
-    BENCH_admission.json BENCH_routing.json
+    BENCH_admission.json BENCH_routing.json BENCH_tenancy.json
 else
   echo "warning: python3 unavailable — falling back to shape greps" >&2
   grep -q '"bench":"model"' BENCH_model.json
@@ -163,6 +171,7 @@ else
   grep -q '"bench":"qos"' BENCH_qos.json
   grep -q '"bench":"admission"' BENCH_admission.json
   grep -q '"bench":"routing"' BENCH_routing.json
+  grep -q '"bench":"tenancy"' BENCH_tenancy.json
 fi
 
 echo "==> perf record:"

@@ -26,6 +26,14 @@ textually, stdlib only:
    path; the checker flags `Vec::new(`, `vec![` and `.to_vec()` inside
    the marked body (scratch-reuse hot loops like the simulator engine
    and the Markov solver carry these markers).
+5. **Builder bypass** — engine configuration goes through
+   `EngineBuilder`; the deprecated `Engine::with_timing` /
+   `with_observer` / `with_admission` shims remain only for the pinned
+   builder-vs-legacy differential. New `.with_*(` call sites outside
+   `engine.rs` are flagged unless covered by an explicit
+   `#[allow(deprecated)]`. The two-argument
+   `MultiGpuDispatcher::with_admission(spec, shed_point)` is a
+   different, current API and stays exempt.
 
 Usage:
     lint.py [--root DIR] [--self-test]
@@ -195,6 +203,59 @@ def check_no_alloc(path, src, code, findings):
             k += 1
 
 
+BUILDER_BYPASS = re.compile(r"\.with_(timing|observer|admission)\s*\(")
+
+
+def _call_has_toplevel_comma(lines, idx, pos):
+    """Whether the call opening at `lines[idx][pos-1]` has a `,` at
+    argument depth (i.e. takes more than one argument)."""
+    depth = 1
+    i, j = idx, pos
+    while i < len(lines):
+        text = lines[i]
+        while j < len(text):
+            c = text[j]
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+                if depth == 0:
+                    return False
+            elif c == "," and depth == 1:
+                return True
+            j += 1
+        i += 1
+        j = 0
+    return False
+
+
+def check_builder_bypass(path, code, findings):
+    """Flag legacy `Engine::with_*` configuration call sites.
+
+    `engine.rs` itself (shim definitions, builder internals and their
+    unit tests) is exempt, as is any site under an explicit
+    `#[allow(deprecated)]` within the previous three lines (the pinned
+    builder-vs-legacy differential) and the two-argument fleet form
+    `MultiGpuDispatcher::with_admission(spec, shed_point)`.
+    """
+    if path.name == "engine.rs":
+        return
+    stripped = code.splitlines()
+    for idx, text in enumerate(stripped):
+        m = BUILDER_BYPASS.search(text)
+        if not m:
+            continue
+        if m.group(1) == "admission" and _call_has_toplevel_comma(stripped, idx, m.end()):
+            continue
+        context = "\n".join(stripped[max(0, idx - 3) : idx + 1])
+        if "#[allow(deprecated)]" in context:
+            continue
+        findings.append(
+            f"{path}:{idx + 1}: legacy Engine::with_{m.group(1)} call site — "
+            "configure through EngineBuilder instead"
+        )
+
+
 def test_mod_ranges(lines):
     """Line ranges (1-based, inclusive) of `#[cfg(test)] mod` bodies."""
     ranges = []
@@ -257,6 +318,7 @@ def lint_file(path, findings):
     check_balance(path, code, findings)
     check_stray_macros(path, code, findings)
     check_no_alloc(path, src, code, findings)
+    check_builder_bypass(path, code, findings)
     if "src" in path.parts:  # doc bar applies to the library, not tests/benches
         check_doc_coverage(path, src, findings)
 
@@ -352,6 +414,26 @@ BAD_ORPHAN_MARKER = """//! Module doc.
 const X: u32 = 1;
 """
 
+GOOD_BUILDER = """//! Module doc.
+
+/// The fleet's two-argument form and an explicitly allowed legacy
+/// pin are both exempt from the builder-bypass check.
+pub fn g() {
+    let _d = dispatcher.with_admission(spec, ShedPoint::Router);
+    #[allow(deprecated)]
+    let _e = Engine::new(&coord).with_admission(spec.build());
+    let _b = EngineBuilder::new(&coord).admission(spec.build()).build();
+}
+"""
+
+BAD_BUILDER = """//! Module doc.
+
+/// Doc.
+pub fn f() {
+    let _e = Engine::new(&coord).with_timing(&timing);
+}
+"""
+
 
 def self_test():
     failures = []
@@ -363,12 +445,14 @@ def self_test():
         check_balance(path, code, findings)
         check_stray_macros(path, code, findings)
         check_no_alloc(path, src, code, findings)
+        check_builder_bypass(path, code, findings)
         check_doc_coverage(path, src, findings)
         return findings
 
-    good = lint_snippet(GOOD_SNIPPET, "good")
-    if good:
-        failures.append(f"good snippet flagged: {good}")
+    for src, name in ((GOOD_SNIPPET, "good"), (GOOD_BUILDER, "goodbuilder")):
+        good = lint_snippet(src, name)
+        if good:
+            failures.append(f"good snippet {name!r} flagged: {good}")
     for src, name, want in (
         (BAD_UNDOC, "undoc", "undocumented"),
         (BAD_NO_MODULE_DOC, "nomod", "module doc"),
@@ -376,6 +460,7 @@ def self_test():
         (BAD_STRAY, "stray", "stray"),
         (BAD_ALLOC, "alloc", "allocation in"),
         (BAD_ORPHAN_MARKER, "orphan", "no following fn"),
+        (BAD_BUILDER, "builder", "EngineBuilder"),
     ):
         findings = lint_snippet(src, name)
         if not any(want in f for f in findings):
