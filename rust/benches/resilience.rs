@@ -1,0 +1,175 @@
+//! Fleet-resilience benchmark: runs the fault drills (empty plan /
+//! device drain / 3× slowdown, sloaware vs efc routing) and the
+//! flash-crowd autoscaling pair on C2050 fleets and records phase
+//! goodput, re-route counts, calibration corrections and autoscaler
+//! activity to `BENCH_resilience.json` — the repo's availability
+//! trajectory, gated by CI (`scripts/check_bench.py`) next to the
+//! other BENCH files.
+//!
+//! Run: `cargo bench --bench resilience`
+//! Environment:
+//! - `KERNELET_INSTANCES` overrides instances/app (default 25; the
+//!   fault drill is six full 4-GPU fleet runs plus two flash-crowd
+//!   runs, so this bench scales like `routing`).
+//! - `KERNELET_RESILIENCE_OUT` overrides the JSON output path
+//!   (default `BENCH_resilience.json` in the working directory).
+//!
+//! JSON schema (times in seconds, rates in kernels/sec). `drills` has
+//! one entry per (mode, policy); `corrections` is the per-device ETA
+//! correction factor (empty except under `efc`):
+//!
+//! ```json
+//! {
+//!   "bench": "resilience",
+//!   "gpu": "C2050",
+//!   "mix": "MIX",
+//!   "gpus": 4,
+//!   "instances_per_app": 25,
+//!   "latency_fraction": 0.3,
+//!   "deadline_scale": 4.0,
+//!   "load": 1.5,
+//!   "base_capacity_kps": 123.4,
+//!   "wall_ms": 456,
+//!   "drills": [
+//!     {"mode": "drain", "policy": "efc", "kernels": 100,
+//!      "goodput_kps": 90.0, "pre_kps": 100.0, "during_kps": 70.0,
+//!      "post_kps": 85.0, "rerouted": 12, "stranded": 0,
+//!      "reroute_latency_s": 0.004, "deadline_misses": 3,
+//!      "corrections": [1.0, 1.0, 1.0, 1.0]}
+//!   ],
+//!   "flashcrowd": {
+//!     "fixed_gpus": 2, "auto_gpus": 4,
+//!     "fixed_goodput_kps": 80.0, "autoscaled_goodput_kps": 95.0,
+//!     "fixed_shed": 30, "autoscaled_shed": 5,
+//!     "scale_ups": 2, "scale_downs": 1, "peak_active": 4
+//!   }
+//! }
+//! ```
+//!
+//! Acceptance bars (checked by `scripts/check_bench.py`): on the
+//! `drain`/`efc` drill nothing is stranded, at least one kernel
+//! re-routes and during-fault goodput holds ≥ 50% of pre-fault; on the
+//! `slowdown`/`efc` drill the degraded device's ETA correction exceeds
+//! every healthy device's; the autoscaled flash-crowd fleet scales up
+//! and strictly beats the fixed fleet on goodput.
+
+use kernelet::bench::once;
+use kernelet::figures::resilience::{
+    flashcrowd_pair, resilience_sweep, ResiliencePoint, DEFAULT_DEADLINE_SCALE, DEFAULT_GPUS,
+    DEFAULT_LATENCY_FRACTION, DEFAULT_LOAD, FLASH_BASE_GPUS, FLASH_SPARE_GPUS, RESILIENCE_DRILLS,
+};
+use kernelet::figures::FigOptions;
+
+fn main() {
+    let instances: u32 = std::env::var("KERNELET_INSTANCES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25);
+    let opts = FigOptions { instances_per_app: instances, ..Default::default() };
+
+    let ((points, capacity), dt1) = once("resilience::resilience_sweep", || {
+        resilience_sweep(&opts, &RESILIENCE_DRILLS, DEFAULT_LOAD, DEFAULT_GPUS)
+    });
+    let (flash, dt2) = once("resilience::flashcrowd_pair", || flashcrowd_pair(&opts));
+
+    println!(
+        "{:>12} {:>9} {:>5} {:>7} {:>12} {:>9} {:>10} {:>9} {:>9} {:>9} {:>6} {:>5}",
+        "mode", "policy", "gpus", "done", "goodput_kps", "pre_kps", "during_kps", "post_kps",
+        "rerouted", "stranded", "shed", "peak"
+    );
+    for p in points.iter().chain(&flash) {
+        let res = &p.resilience;
+        let rerouted: usize = res.events.iter().map(|e| e.rerouted).sum();
+        println!(
+            "{:>12} {:>9} {:>5} {:>7} {:>12.1} {:>9.1} {:>10.1} {:>9.1} {:>9} {:>9} {:>6} {:>5}",
+            p.mode,
+            p.policy,
+            p.gpus,
+            p.kernels,
+            p.goodput_kps,
+            res.goodput_pre_kps,
+            res.goodput_during_kps,
+            res.goodput_post_kps,
+            rerouted,
+            res.stranded,
+            p.shed,
+            res.peak_active_devices,
+        );
+    }
+
+    let json = to_json(&points, &flash, instances, capacity, (dt1 + dt2).as_millis());
+    let out = std::env::var("KERNELET_RESILIENCE_OUT")
+        .unwrap_or_else(|_| "BENCH_resilience.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            // CI gates this file next; a stale copy passing the check
+            // would silently freeze the recorded trajectory.
+            eprintln!("could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn drill_json(p: &ResiliencePoint) -> String {
+    let res = &p.resilience;
+    let rerouted: usize = res.events.iter().map(|e| e.rerouted).sum();
+    let corrections: Vec<String> = p.eta.iter().map(|e| e.correction.to_string()).collect();
+    format!(
+        "{{\"mode\":\"{}\",\"policy\":\"{}\",\"kernels\":{},\"goodput_kps\":{},\
+         \"pre_kps\":{},\"during_kps\":{},\"post_kps\":{},\"rerouted\":{},\"stranded\":{},\
+         \"reroute_latency_s\":{},\"deadline_misses\":{},\"corrections\":[{}]}}",
+        p.mode,
+        p.policy,
+        p.kernels,
+        p.goodput_kps,
+        res.goodput_pre_kps,
+        res.goodput_during_kps,
+        res.goodput_post_kps,
+        rerouted,
+        res.stranded,
+        res.reroute_latency_mean_secs,
+        p.deadline_misses,
+        corrections.join(",")
+    )
+}
+
+fn to_json(
+    points: &[ResiliencePoint],
+    flash: &[ResiliencePoint],
+    instances: u32,
+    capacity: f64,
+    wall_ms: u128,
+) -> String {
+    let drills: Vec<String> = points.iter().map(drill_json).collect();
+    let fixed = flash
+        .iter()
+        .find(|p| p.mode == "flash-fixed")
+        .expect("flashcrowd pair always has a fixed arm");
+    let auto = flash
+        .iter()
+        .find(|p| p.mode == "flash-auto")
+        .expect("flashcrowd pair always has an autoscaled arm");
+    let fc = format!(
+        "{{\"fixed_gpus\":{FLASH_BASE_GPUS},\"auto_gpus\":{},\
+         \"fixed_goodput_kps\":{},\"autoscaled_goodput_kps\":{},\
+         \"fixed_shed\":{},\"autoscaled_shed\":{},\
+         \"scale_ups\":{},\"scale_downs\":{},\"peak_active\":{}}}",
+        FLASH_BASE_GPUS + FLASH_SPARE_GPUS,
+        fixed.goodput_kps,
+        auto.goodput_kps,
+        fixed.shed,
+        auto.shed,
+        auto.resilience.scale_ups,
+        auto.resilience.scale_downs,
+        auto.resilience.peak_active_devices,
+    );
+    format!(
+        "{{\"bench\":\"resilience\",\"gpu\":\"C2050\",\"mix\":\"MIX\",\"gpus\":{DEFAULT_GPUS},\
+         \"instances_per_app\":{instances},\"latency_fraction\":{DEFAULT_LATENCY_FRACTION},\
+         \"deadline_scale\":{DEFAULT_DEADLINE_SCALE},\"load\":{DEFAULT_LOAD},\
+         \"base_capacity_kps\":{capacity},\"wall_ms\":{wall_ms},\"drills\":[{}],\
+         \"flashcrowd\":{fc}}}\n",
+        drills.join(",")
+    )
+}

@@ -13,16 +13,17 @@
 //! name→policy mapping the CLI, the figure sweeps and the benches
 //! share lives here (or in
 //! [`AdmissionSpec`](crate::coordinator::AdmissionSpec), which the
-//! layer re-groups), so adding a selector, routing policy or admission
-//! policy is wired in exactly one place. [`SelectorSpec`] and
-//! [`DispatchSpec`] follow `AdmissionSpec`'s `from_name`/`name`/`build`
-//! contract; [`WorkloadSpec`] bundles scenario + mix + load + seed +
+//! layer re-groups), so adding a selector, routing policy, admission
+//! policy or fault drill is wired in exactly one place.
+//! [`SelectorSpec`], [`DispatchSpec`] and [`FaultSpec`] follow
+//! `AdmissionSpec`'s `from_name`/`name`/`build` contract; [`WorkloadSpec`] bundles scenario + mix + load + seed +
 //! [`QosMix`] + [`TenantMix`] and builds the arrival source.
 
 use crate::coordinator::admission::AdmissionSpec;
 use crate::coordinator::deadline::DeadlineSelector;
 use crate::coordinator::engine::{FifoSelector, KerneletSelector, PreemptCost, Selector};
 use crate::coordinator::fairshare::FairShareSelector;
+use crate::coordinator::faults::{AutoscalerSpec, FaultEvent, FaultPlan};
 use crate::coordinator::multigpu::DispatchPolicy;
 use crate::workload::{scenario_source, ArrivalSource, Mix, QosMix, TenantMix};
 
@@ -364,6 +365,82 @@ impl DispatchSpec {
     }
 }
 
+/// Named fault-drill configuration — the name→[`FaultPlan`] mapping
+/// the CLI (`--faults`), the resilience figure and the resilience
+/// bench share. Follows the `from_name`/`name`/`build` contract of
+/// [`DispatchSpec`], except that `build` also needs the fleet size,
+/// an onset time and a seed to place the drill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// No faults at all: `build` returns `None`, so the dispatcher
+    /// runs the exact pre-fault pipeline (structural absence, not an
+    /// empty plan).
+    None,
+    /// Drain the highest-index device at the onset time.
+    Drain,
+    /// Slow the highest-index device down 3× at the onset time.
+    Slowdown,
+    /// Seeded mixed churn: 3 events over 4× the onset time, drawn by
+    /// [`FaultPlan::seeded_churn`].
+    Churn,
+    /// No timed events; an elastic autoscaler starting at half the
+    /// fleet, checking every onset interval.
+    Autoscale,
+}
+
+impl FaultSpec {
+    /// Every name [`FaultSpec::from_name`] accepts.
+    pub const NAMES: [&'static str; 5] = ["none", "drain", "slowdown", "churn", "autoscale"];
+
+    /// Name → spec; `None` on an unknown name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "none" => Some(FaultSpec::None),
+            "drain" => Some(FaultSpec::Drain),
+            "slowdown" => Some(FaultSpec::Slowdown),
+            "churn" => Some(FaultSpec::Churn),
+            "autoscale" => Some(FaultSpec::Autoscale),
+            _ => None,
+        }
+    }
+
+    /// The spec's drill name (inverse of [`FaultSpec::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSpec::None => "none",
+            FaultSpec::Drain => "drain",
+            FaultSpec::Slowdown => "slowdown",
+            FaultSpec::Churn => "churn",
+            FaultSpec::Autoscale => "autoscale",
+        }
+    }
+
+    /// The fault plan the spec names, placed for a `gpus`-device fleet
+    /// with the first event around `onset_secs`. Returns `None` for
+    /// [`FaultSpec::None`] so callers skip
+    /// [`with_faults`](crate::coordinator::MultiGpuDispatcher::with_faults)
+    /// entirely.
+    pub fn build(&self, gpus: usize, onset_secs: f64, seed: u64) -> Option<FaultPlan> {
+        let last = gpus.saturating_sub(1);
+        match self {
+            FaultSpec::None => None,
+            FaultSpec::Drain => Some(
+                FaultPlan::new().with_event(FaultEvent::Drain { at_secs: onset_secs, device: last }),
+            ),
+            FaultSpec::Slowdown => Some(FaultPlan::new().with_event(FaultEvent::Slowdown {
+                at_secs: onset_secs,
+                device: last,
+                factor: 3.0,
+            })),
+            FaultSpec::Churn => Some(FaultPlan::seeded_churn(seed, gpus, 3, onset_secs * 4.0)),
+            FaultSpec::Autoscale => Some(FaultPlan::new().with_autoscaler(AutoscalerSpec::new(
+                (gpus / 2).max(1),
+                onset_secs,
+            ))),
+        }
+    }
+}
+
 /// Everything policy-shaped about one experiment under one roof: the
 /// scheduling selector, optional fleet routing, optional admission
 /// gate. Construct with [`PolicySpec::new`] and chain the `with_*`
@@ -582,6 +659,33 @@ mod tests {
         }
         assert!(DispatchSpec::from_name("nope").is_none());
         assert_eq!(DispatchSpec::from_name("efc").unwrap().build(), DispatchPolicy::EarliestFeasible);
+    }
+
+    #[test]
+    fn fault_spec_round_trips_names_and_places_drills() {
+        for name in FaultSpec::NAMES {
+            let spec = FaultSpec::from_name(name).unwrap();
+            assert_eq!(spec.name(), name);
+        }
+        assert!(FaultSpec::from_name("nope").is_none());
+        // "none" is structural absence, not an empty plan.
+        assert!(FaultSpec::None.build(2, 0.1, 7).is_none());
+        // Timed drills land on the last device at the onset.
+        let drain = FaultSpec::Drain.build(3, 0.2, 7).unwrap();
+        assert_eq!(drain.events().len(), 1);
+        assert_eq!(drain.events()[0].device(), 2);
+        assert_eq!(drain.events()[0].at_secs(), 0.2);
+        let slow = FaultSpec::Slowdown.build(2, 0.1, 7).unwrap();
+        assert_eq!(slow.events()[0].kind(), "slowdown");
+        // Churn is seeded and replayable.
+        let a = FaultSpec::Churn.build(4, 0.1, 7).unwrap();
+        let b = FaultSpec::Churn.build(4, 0.1, 7).unwrap();
+        assert_eq!(a.events().len(), 3);
+        assert_eq!(a, b);
+        // Autoscale has no timed events but carries a controller.
+        let auto = FaultSpec::Autoscale.build(4, 0.05, 7).unwrap();
+        assert!(auto.events().is_empty());
+        assert_eq!(auto.autoscaler().unwrap().initial_active, 2);
     }
 
     #[test]

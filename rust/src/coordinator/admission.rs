@@ -571,6 +571,33 @@ impl AdmissionController {
         Some(k)
     }
 
+    /// Reverse one admitted arrival's accounting (`arrivals` and
+    /// `admitted` both drop by one) — fleet drain support: when a
+    /// fault withdraws an already-admitted kernel from this gate's
+    /// device so it can be re-offered elsewhere, the kernel must not
+    /// be counted at two gates.
+    pub fn forget_admitted(&mut self, class: ServiceClass) {
+        let c = self.class_mut(class);
+        debug_assert!(c.arrivals > 0 && c.admitted > 0, "forgetting an arrival never admitted");
+        c.arrivals = c.arrivals.saturating_sub(1);
+        c.admitted = c.admitted.saturating_sub(1);
+    }
+
+    /// Drain the deferred queue, reversing each kernel's
+    /// arrival/deferral accounting, and hand the kernels back — fleet
+    /// drain support (the kernels will be re-offered to a surviving
+    /// device's gate, which counts them afresh).
+    pub fn withdraw_deferred(&mut self) -> Vec<KernelInstance> {
+        let out: Vec<KernelInstance> = self.deferred.drain(..).collect();
+        for k in &out {
+            let c = self.class_mut(k.qos.class);
+            debug_assert!(c.arrivals > 0 && c.deferrals > 0, "withdrawing a never-deferred kernel");
+            c.arrivals = c.arrivals.saturating_sub(1);
+            c.deferrals = c.deferrals.saturating_sub(1);
+        }
+        out
+    }
+
     /// Close out: whatever is still parked becomes `deferred_unfinished`.
     pub fn into_report(self) -> AdmissionReport {
         let mut report = AdmissionReport {

@@ -59,7 +59,7 @@
 //! is every lookup the scan used to pay, and the scan itself whenever
 //! no deadline is pending. `tests/hotpath_invariants.rs` pins the
 //! indexed selector decision- and report-identical to a frozen
-//! scan-based copy on all six arrival sources, and a `debug_assert`
+//! scan-based copy on every arrival source, and a `debug_assert`
 //! cross-checks the index against the pending set at every sync.
 //!
 //! # Mid-slice preemption

@@ -853,6 +853,33 @@ impl<'a> Engine<'a> {
         self.admission = Some(ctrl);
     }
 
+    /// Withdraw every kernel still pending — and, with a device-local
+    /// gate installed, still deferred — reversing the bookkeeping
+    /// their admission created (`submitted`, tenant join keys, the
+    /// gate's arrival/admitted/deferral counters) as if they had
+    /// never been handed to this device. Fleet drain support
+    /// ([`FaultEvent::Drain`](super::FaultEvent::Drain)): the caller
+    /// re-routes the returned kernels elsewhere, so counting them
+    /// here too would double-account them. Slice progress already
+    /// made is kept on the returned instances (residual blocks carry
+    /// over to the new device); completed kernels are untouched.
+    pub fn withdraw_pending(&mut self) -> Vec<KernelInstance> {
+        let mut out = std::mem::take(&mut self.queue);
+        for k in &out {
+            if let Some(pos) = self.submitted.iter().rposition(|&(id, _, _)| id == k.id) {
+                self.submitted.remove(pos);
+            }
+            self.tenant_of.remove(&k.id);
+            if let Some(ctrl) = self.admission.as_mut() {
+                ctrl.forget_admitted(k.qos.class);
+            }
+        }
+        if let Some(ctrl) = self.admission.as_mut() {
+            out.extend(ctrl.withdraw_deferred());
+        }
+        out
+    }
+
     /// Completions so far, in completion order. Callers that feed a
     /// closed-loop source keep a cursor into this log.
     pub fn completion_log(&self) -> &[(u64, f64)] {

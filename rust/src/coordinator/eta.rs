@@ -258,6 +258,16 @@ impl EtaModel {
         }
     }
 
+    /// Forget a routed-but-incomplete kernel: its in-flight projection
+    /// and price-memo entry are dropped, so a later completion on
+    /// *another* device (after a fleet drain re-routed it) is ignored
+    /// as an unknown id instead of scored against a projection made
+    /// for this device. Already-scored samples are untouched.
+    pub fn forget(&mut self, id: u64) {
+        self.in_flight.remove(&id);
+        self.prices.remove(&id);
+    }
+
     /// Calibration quality so far (zeroes before the first scored
     /// completion).
     pub fn stats(&self) -> EtaStats {

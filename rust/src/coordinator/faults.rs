@@ -1,0 +1,499 @@
+//! Fault injection and fleet dynamics for the multi-GPU dispatcher.
+//!
+//! Kernelet targets shared clusters, where throughput must survive the
+//! fleet misbehaving: devices get drained for maintenance, degrade
+//! (thermal throttling, a noisy co-located tenant), and elastic fleets
+//! grow and shrink with demand. A [`FaultPlan`] describes those
+//! dynamics as *timed, deterministic events* that
+//! [`MultiGpuDispatcher::run_source`](super::MultiGpuDispatcher::run_source)
+//! injects while it routes a streaming arrival source:
+//!
+//! - [`FaultEvent::Drain`] — the device's pending set is withdrawn
+//!   (accounting reversed, as if never handed there) and re-routed
+//!   through the live routing policy; with no surviving device the
+//!   work is *stranded* (lost, reported — never silently dropped).
+//! - [`FaultEvent::Slowdown`] — the device's effective rate degrades
+//!   by a factor, applied through [`ScaledTiming`], a
+//!   [`TimingBackend`] decorator. The routing-side price model keeps
+//!   quoting healthy-device costs on purpose: only
+//!   [`EtaModel`](super::EtaModel) *calibration* can notice the gap
+//!   between projection and observed completions, which is exactly the
+//!   paper-style online-prediction story the drill exercises.
+//! - [`AutoscalerSpec`] — an elastic autoscaler that activates a spare
+//!   device after sustained shedding (the SloGuard/quota backpressure
+//!   signal) and deactivates a device that has sat idle for several
+//!   consecutive checks.
+//!
+//! Determinism: a plan is data, not callbacks. Seeded plans come from
+//! [`FaultPlan::seeded_churn`], which splits its seed per event with
+//! [`split_seed`] — the same discipline every workload generator in
+//! this crate uses — so a (seed, fleet, horizon) triple always yields
+//! the same drill. An **empty plan is inert by construction**: the
+//! scale-1.0 fast path in [`ScaledTiming`] returns the inner backend's
+//! values untouched and no event ever fires, so a fleet run with an
+//! empty plan is bit-identical to a faultless fleet
+//! (`tests/resilience_invariants.rs` pins this differentially).
+//!
+//! Availability metrics land in [`ResilienceReport`] (goodput before /
+//! during / after the first fault, re-route latency, kernels stranded
+//! per event, autoscaler activity), surfaced as
+//! [`MultiGpuReport::resilience`](super::MultiGpuReport::resilience).
+
+use std::cell::Cell;
+
+use super::engine::{PairTiming, TimingBackend};
+use crate::kernel::KernelSpec;
+use crate::stats::{split_seed, Xoshiro256};
+
+/// One timed fleet event in a [`FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// Remove a device from service at `at_secs`: its pending set is
+    /// withdrawn and re-routed across the surviving devices, and it
+    /// never receives work again (retired — the autoscaler cannot
+    /// bring it back).
+    Drain {
+        /// When the event fires (seconds on the run clock).
+        at_secs: f64,
+        /// Which device (fleet index) is drained.
+        device: usize,
+    },
+    /// Degrade a device's effective rate by `factor` from `at_secs`
+    /// on: every slice it dispatches afterwards takes `factor`× as
+    /// long. Repeated slowdowns on one device compose (factors
+    /// multiply).
+    Slowdown {
+        /// When the event fires (seconds on the run clock).
+        at_secs: f64,
+        /// Which device (fleet index) degrades.
+        device: usize,
+        /// Duration multiplier, `>= 1.0`.
+        factor: f64,
+    },
+}
+
+impl FaultEvent {
+    /// When the event fires (seconds on the run clock).
+    pub fn at_secs(&self) -> f64 {
+        match *self {
+            FaultEvent::Drain { at_secs, .. } | FaultEvent::Slowdown { at_secs, .. } => at_secs,
+        }
+    }
+
+    /// The device (fleet index) the event targets.
+    pub fn device(&self) -> usize {
+        match *self {
+            FaultEvent::Drain { device, .. } | FaultEvent::Slowdown { device, .. } => device,
+        }
+    }
+
+    /// Short event-kind label (`"drain"` / `"slowdown"`), the `kind`
+    /// a fired event records in [`FaultEventRecord`].
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::Drain { .. } => "drain",
+            FaultEvent::Slowdown { .. } => "slowdown",
+        }
+    }
+}
+
+/// Elastic-fleet policy evaluated at a fixed check cadence during a
+/// fault-injected run.
+///
+/// Scale **up** when the fleet shed at least
+/// [`shed_threshold`](Self::shed_threshold) arrivals since the last
+/// check (sustained SloGuard / quota / backlog backpressure): the
+/// lowest-index inactive, non-retired device joins. Scale **down**
+/// when an active device's pending set was empty at
+/// [`idle_intervals`](Self::idle_intervals) consecutive checks: the
+/// highest-index such device retires from the active set (it can
+/// rejoin later) — never below one active device, and never a device
+/// holding work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalerSpec {
+    /// Devices active at the start of the run (the rest are warm
+    /// spares the scale-up signal can activate). Clamped to the fleet
+    /// size at run start.
+    pub initial_active: usize,
+    /// Seconds between autoscaler evaluations (checks fire at
+    /// `interval`, `2 * interval`, ...).
+    pub check_interval_secs: f64,
+    /// Sheds since the previous check that trigger a scale-up.
+    pub shed_threshold: u64,
+    /// Consecutive idle checks before a device is deactivated.
+    pub idle_intervals: u32,
+}
+
+impl AutoscalerSpec {
+    /// Default scale-up signal: ≥ 4 sheds in one check interval.
+    pub const DEFAULT_SHED_THRESHOLD: u64 = 4;
+    /// Default scale-down signal: idle at 3 consecutive checks.
+    pub const DEFAULT_IDLE_INTERVALS: u32 = 3;
+
+    /// An autoscaler starting `initial_active` devices and evaluating
+    /// every `check_interval_secs`, with the default signals.
+    pub fn new(initial_active: usize, check_interval_secs: f64) -> Self {
+        assert!(initial_active >= 1, "need at least one initially active device");
+        assert!(
+            check_interval_secs > 0.0 && check_interval_secs.is_finite(),
+            "bad check interval {check_interval_secs}"
+        );
+        Self {
+            initial_active,
+            check_interval_secs,
+            shed_threshold: Self::DEFAULT_SHED_THRESHOLD,
+            idle_intervals: Self::DEFAULT_IDLE_INTERVALS,
+        }
+    }
+
+    /// Override the scale-up shed threshold (builder).
+    pub fn with_shed_threshold(mut self, threshold: u64) -> Self {
+        assert!(threshold >= 1, "a zero threshold would scale up every check");
+        self.shed_threshold = threshold;
+        self
+    }
+
+    /// Override the scale-down idle-check count (builder).
+    pub fn with_idle_intervals(mut self, intervals: u32) -> Self {
+        assert!(intervals >= 1, "need at least one idle check before scale-down");
+        self.idle_intervals = intervals;
+        self
+    }
+}
+
+/// A deterministic schedule of fleet-dynamics events
+/// ([`MultiGpuDispatcher::with_faults`](super::MultiGpuDispatcher::with_faults)):
+/// timed [`FaultEvent`]s kept sorted by firing time, an optional
+/// [`AutoscalerSpec`], and the phase window the availability metrics
+/// are computed over. [`FaultPlan::new`] is the inert empty plan —
+/// installing it changes nothing observable (differentially pinned in
+/// `tests/resilience_invariants.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    autoscaler: Option<AutoscalerSpec>,
+    phase_window_secs: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultPlan {
+    /// Default width of the "during fault" goodput window (seconds
+    /// after the first fired event). Drills whose runs are shorter
+    /// than this should set their own via
+    /// [`Self::with_phase_window_secs`].
+    pub const DEFAULT_PHASE_WINDOW_SECS: f64 = 0.05;
+
+    /// The empty plan: no events, no autoscaler — inert.
+    pub fn new() -> Self {
+        Self {
+            events: Vec::new(),
+            autoscaler: None,
+            phase_window_secs: Self::DEFAULT_PHASE_WINDOW_SECS,
+        }
+    }
+
+    /// Add a timed event (builder; the schedule stays sorted by
+    /// firing time, ties keeping insertion order).
+    pub fn with_event(mut self, event: FaultEvent) -> Self {
+        assert!(
+            event.at_secs().is_finite() && event.at_secs() >= 0.0,
+            "bad event time {}",
+            event.at_secs()
+        );
+        if let FaultEvent::Slowdown { factor, .. } = event {
+            assert!(factor >= 1.0 && factor.is_finite(), "slowdown factor {factor} < 1");
+        }
+        self.events.push(event);
+        self.events.sort_by(|a, b| a.at_secs().total_cmp(&b.at_secs()));
+        self
+    }
+
+    /// Attach an elastic autoscaler (builder).
+    pub fn with_autoscaler(mut self, spec: AutoscalerSpec) -> Self {
+        self.autoscaler = Some(spec);
+        self
+    }
+
+    /// Override the "during fault" goodput window (builder).
+    pub fn with_phase_window_secs(mut self, window_secs: f64) -> Self {
+        assert!(window_secs > 0.0 && window_secs.is_finite(), "bad phase window {window_secs}");
+        self.phase_window_secs = window_secs;
+        self
+    }
+
+    /// The scheduled events, sorted by firing time.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The autoscaler, if one is attached.
+    pub fn autoscaler(&self) -> Option<AutoscalerSpec> {
+        self.autoscaler
+    }
+
+    /// Width of the "during fault" goodput window (seconds).
+    pub fn phase_window_secs(&self) -> f64 {
+        self.phase_window_secs
+    }
+
+    /// True when the plan can never do anything (no events, no
+    /// autoscaler).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.autoscaler.is_none()
+    }
+
+    /// A deterministic mixed churn drill: `events` drain/slowdown
+    /// events over `devices` devices, timed inside the middle of
+    /// `[0, horizon_secs]`. Each event draws from its own
+    /// [`split_seed`] sub-stream, so plans are stable under
+    /// re-ordering of unrelated draws. Device 0 is the survivor — it
+    /// is never drained (slowdowns may still hit it), so the fleet
+    /// always keeps a route; with a single-device fleet the plan
+    /// degenerates to slowdowns only.
+    pub fn seeded_churn(seed: u64, devices: usize, events: usize, horizon_secs: f64) -> Self {
+        assert!(devices >= 1, "need at least one device");
+        assert!(horizon_secs > 0.0 && horizon_secs.is_finite(), "bad horizon {horizon_secs}");
+        let mut plan = Self::new();
+        let mut undrained: Vec<usize> = (1..devices).collect();
+        for i in 0..events {
+            let mut rng = Xoshiro256::new(split_seed(seed, (i + 1) as u64));
+            let at_secs = horizon_secs * (0.2 + 0.6 * rng.f64());
+            let drain = !undrained.is_empty() && rng.f64() < 0.5;
+            plan = if drain {
+                let device = undrained.swap_remove(rng.index(undrained.len()));
+                plan.with_event(FaultEvent::Drain { at_secs, device })
+            } else {
+                let device = rng.index(devices);
+                let factor = 1.5 + 2.5 * rng.f64();
+                plan.with_event(FaultEvent::Slowdown { at_secs, device, factor })
+            };
+        }
+        plan
+    }
+}
+
+/// A [`TimingBackend`] decorator that stretches measured durations by
+/// a runtime-adjustable factor — the mechanism behind
+/// [`FaultEvent::Slowdown`]. The fleet wraps every device's backend in
+/// one of these whenever a plan is installed; at scale 1.0 (the reset
+/// state) each call returns the inner backend's values **untouched**
+/// (no arithmetic), so an un-degraded device is bit-identical to an
+/// unwrapped one. Routing-side cost estimates deliberately do *not*
+/// go through this wrapper: the router keeps quoting healthy prices,
+/// and only ETA calibration can detect the degradation.
+pub struct ScaledTiming<'a> {
+    inner: &'a dyn TimingBackend,
+    scale: Cell<f64>,
+}
+
+impl<'a> ScaledTiming<'a> {
+    /// Wrap `inner` at scale 1.0 (pass-through).
+    pub fn new(inner: &'a dyn TimingBackend) -> Self {
+        Self { inner, scale: Cell::new(1.0) }
+    }
+
+    /// Set the duration multiplier (`>= 1.0`; 1.0 restores exact
+    /// pass-through). Interior-mutable so a fault can fire while the
+    /// engines hold shared references.
+    pub fn set_scale(&self, scale: f64) {
+        assert!(scale >= 1.0 && scale.is_finite(), "timing scale {scale} < 1");
+        self.scale.set(scale);
+    }
+
+    /// The current duration multiplier.
+    pub fn scale(&self) -> f64 {
+        self.scale.get()
+    }
+}
+
+impl TimingBackend for ScaledTiming<'_> {
+    fn backend_name(&self) -> &'static str {
+        "scaled"
+    }
+
+    fn time_solo(&self, spec: &KernelSpec, blocks: u32) -> f64 {
+        let v = self.inner.time_solo(spec, blocks);
+        let s = self.scale.get();
+        if s == 1.0 {
+            v
+        } else {
+            v * s
+        }
+    }
+
+    fn time_pair(
+        &self,
+        k1: &KernelSpec,
+        s1: u32,
+        q1: u32,
+        k2: &KernelSpec,
+        s2: u32,
+        q2: u32,
+    ) -> PairTiming {
+        let m = self.inner.time_pair(k1, s1, q1, k2, s2, q2);
+        let s = self.scale.get();
+        if s == 1.0 {
+            return m;
+        }
+        PairTiming {
+            cycles: m.cycles * s,
+            cipc: [m.cipc[0] / s, m.cipc[1] / s],
+            total_ipc: m.total_ipc / s,
+        }
+    }
+}
+
+/// One fired fleet event in [`ResilienceReport::events`], with the
+/// per-event availability counts the tentpole asks for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEventRecord {
+    /// What fired: `"drain"`, `"slowdown"`, `"scale-up"` or
+    /// `"scale-down"`.
+    pub kind: &'static str,
+    /// When it fired (the scheduled time for plan events, the check
+    /// time for autoscaler actions).
+    pub at_secs: f64,
+    /// The device it targeted.
+    pub device: usize,
+    /// Kernels withdrawn from the device and successfully re-routed
+    /// (drain events; 0 otherwise).
+    pub rerouted: usize,
+    /// Kernels withdrawn with no surviving device to take them —
+    /// lost, and accounted in the fleet conservation identity
+    /// (drain events; 0 otherwise).
+    pub stranded: usize,
+}
+
+/// Availability metrics of one fault-injected fleet run
+/// ([`MultiGpuReport::resilience`](super::MultiGpuReport::resilience)).
+/// Default (all zero, no events) on faultless runs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResilienceReport {
+    /// Every fired event, in firing order.
+    pub events: Vec<FaultEventRecord>,
+    /// Kernels lost fleet-wide because no active device could take
+    /// them (withdrawn on a drain of the last device, or arriving
+    /// into a fully drained fleet). Part of the conservation identity
+    /// `completed + shed + deferred_unfinished + stranded == arrivals`.
+    pub stranded: usize,
+    /// Goodput (in-deadline completions per second) before the first
+    /// fired event. Equals the run-wide goodput when nothing fired.
+    pub goodput_pre_kps: f64,
+    /// Goodput inside the phase window right after the first fired
+    /// event ([`FaultPlan::phase_window_secs`]).
+    pub goodput_during_kps: f64,
+    /// Goodput after the phase window closes (recovery).
+    pub goodput_post_kps: f64,
+    /// Mean seconds from a drain event to the completion of each
+    /// kernel it re-routed (0.0 when nothing was re-routed).
+    pub reroute_latency_mean_secs: f64,
+    /// Autoscaler activations.
+    pub scale_ups: usize,
+    /// Autoscaler deactivations.
+    pub scale_downs: usize,
+    /// Largest active-device count observed at any autoscaler check
+    /// (0 without an autoscaler).
+    pub peak_active_devices: usize,
+    /// Active devices when the run settled.
+    pub final_active_devices: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::coordinator::Coordinator;
+    use crate::kernel::BenchmarkApp;
+
+    #[test]
+    fn scaled_timing_is_bit_identical_at_unit_scale() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let scaled = ScaledTiming::new(&coord.simcache);
+        let mm = BenchmarkApp::MM.spec();
+        let pc = BenchmarkApp::PC.spec();
+        let a = coord.simcache.time_solo(&mm, 64);
+        let b = scaled.time_solo(&mm, 64);
+        assert_eq!(a.to_bits(), b.to_bits());
+        let p = coord.simcache.time_pair(&mm, 32, 2, &pc, 32, 2);
+        let q = scaled.time_pair(&mm, 32, 2, &pc, 32, 2);
+        assert_eq!(p.cycles.to_bits(), q.cycles.to_bits());
+        assert_eq!(p.cipc[0].to_bits(), q.cipc[0].to_bits());
+        assert_eq!(p.cipc[1].to_bits(), q.cipc[1].to_bits());
+        assert_eq!(p.total_ipc.to_bits(), q.total_ipc.to_bits());
+    }
+
+    #[test]
+    fn scaled_timing_stretches_durations_and_resets() {
+        let coord = Coordinator::new(&GpuConfig::c2050());
+        let scaled = ScaledTiming::new(&coord.simcache);
+        let mm = BenchmarkApp::MM.spec();
+        let base = scaled.time_solo(&mm, 64);
+        scaled.set_scale(3.0);
+        assert_eq!(scaled.time_solo(&mm, 64), base * 3.0);
+        let pc = BenchmarkApp::PC.spec();
+        let healthy = coord.simcache.time_pair(&mm, 32, 2, &pc, 32, 2);
+        let slow = scaled.time_pair(&mm, 32, 2, &pc, 32, 2);
+        assert_eq!(slow.cycles, healthy.cycles * 3.0);
+        assert_eq!(slow.total_ipc, healthy.total_ipc / 3.0);
+        scaled.set_scale(1.0);
+        assert_eq!(scaled.time_solo(&mm, 64).to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn plan_keeps_events_sorted_by_time() {
+        let plan = FaultPlan::new()
+            .with_event(FaultEvent::Slowdown { at_secs: 0.9, device: 0, factor: 2.0 })
+            .with_event(FaultEvent::Drain { at_secs: 0.1, device: 1 })
+            .with_event(FaultEvent::Slowdown { at_secs: 0.5, device: 1, factor: 1.5 });
+        let times: Vec<f64> = plan.events().iter().map(FaultEvent::at_secs).collect();
+        assert_eq!(times, vec![0.1, 0.5, 0.9]);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::new().is_empty());
+    }
+
+    #[test]
+    fn seeded_churn_is_deterministic_and_spares_device_zero() {
+        let a = FaultPlan::seeded_churn(42, 4, 6, 2.0);
+        let b = FaultPlan::seeded_churn(42, 4, 6, 2.0);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::seeded_churn(43, 4, 6, 2.0));
+        assert_eq!(a.events().len(), 6);
+        for ev in a.events() {
+            assert!(ev.at_secs() >= 0.2 * 2.0 && ev.at_secs() <= 0.8 * 2.0, "{ev:?}");
+            if let FaultEvent::Drain { device, .. } = ev {
+                assert_ne!(*device, 0, "survivor drained: {ev:?}");
+            }
+        }
+        // Never drains the same device twice.
+        let mut drained: Vec<usize> =
+            a.events().iter().filter_map(|e| match e {
+                FaultEvent::Drain { device, .. } => Some(*device),
+                _ => None,
+            }).collect();
+        let n = drained.len();
+        drained.sort_unstable();
+        drained.dedup();
+        assert_eq!(drained.len(), n);
+        // A one-device fleet degenerates to slowdowns only.
+        let solo = FaultPlan::seeded_churn(7, 1, 4, 1.0);
+        assert!(solo.events().iter().all(|e| e.kind() == "slowdown"));
+    }
+
+    #[test]
+    fn autoscaler_spec_builders_validate() {
+        let auto = AutoscalerSpec::new(2, 0.01)
+            .with_shed_threshold(8)
+            .with_idle_intervals(5);
+        assert_eq!(auto.initial_active, 2);
+        assert_eq!(auto.shed_threshold, 8);
+        assert_eq!(auto.idle_intervals, 5);
+        let plan = FaultPlan::new().with_autoscaler(auto);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.autoscaler(), Some(auto));
+    }
+}

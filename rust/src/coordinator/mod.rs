@@ -27,7 +27,9 @@
 //! thin adapters binding a `Selector` to the engine; [`multigpu`] runs
 //! one engine per device and routes arrivals online off live engine
 //! load ([`eta`] adds the calibrated per-device completion-horizon
-//! model `EarliestFeasible` routing consults). There is no other
+//! model `EarliestFeasible` routing consults, and [`faults`] injects
+//! deterministic fleet dynamics — drains, slowdowns, autoscaling —
+//! into the streaming dispatch loop). There is no other
 //! clock-advancing dispatch loop in the crate.
 
 pub mod admission;
@@ -37,6 +39,7 @@ pub mod engine;
 pub mod eta;
 pub mod executor;
 pub mod fairshare;
+pub mod faults;
 pub mod greedy;
 pub mod multigpu;
 pub mod pruning;
@@ -54,6 +57,9 @@ pub use engine::{
     StderrTrace, TenantStats, TimingBackend,
 };
 pub use fairshare::FairShareSelector;
+pub use faults::{
+    AutoscalerSpec, FaultEvent, FaultEventRecord, FaultPlan, ResilienceReport, ScaledTiming,
+};
 pub use eta::{weighted_mean_abs_err_secs, EtaModel, EtaStats};
 pub use executor::run_kernelet;
 pub use greedy::{CoSchedule, Coordinator};

@@ -55,7 +55,7 @@
 //! sheds included) with goodput recomputed against the fleet
 //! makespan.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::admission::{AdmissionController, AdmissionDecision, AdmissionReport, AdmissionSpec};
 use super::deadline::DeadlineSelector;
@@ -64,6 +64,7 @@ use super::engine::{
     Selector, TenantStats,
 };
 use super::eta::{EtaModel, EtaStats};
+use super::faults::{FaultEvent, FaultEventRecord, FaultPlan, ResilienceReport, ScaledTiming};
 use super::greedy::Coordinator;
 use crate::config::GpuConfig;
 use crate::kernel::{KernelInstance, ServiceClass, TenantId};
@@ -137,6 +138,12 @@ pub struct MultiGpuReport {
     /// ([`ArrivalSource::retries`]) — nonzero only for closed-loop
     /// sources under [`MultiGpuDispatcher::run_source`].
     pub shed_retries: u64,
+    /// Availability metrics of the fault-injected run
+    /// ([`MultiGpuDispatcher::with_faults`]): fired events, stranded
+    /// kernels, goodput before/during/after the first fault, re-route
+    /// latency and autoscaler activity. Default (all zero) on
+    /// faultless runs and under [`MultiGpuDispatcher::run`].
+    pub resilience: ResilienceReport,
 }
 
 impl MultiGpuReport {
@@ -165,6 +172,9 @@ pub struct MultiGpuDispatcher {
     /// preemption under [`DispatchPolicy::SloAware`] (the PR-4
     /// behavior).
     preempt: Option<PreemptCost>,
+    /// Fleet-dynamics schedule ([`Self::with_faults`]); `None` (the
+    /// default) is the faultless fleet.
+    faults: Option<FaultPlan>,
 }
 
 /// Per-run routing state: the global arrival index (round-robin's
@@ -181,6 +191,11 @@ struct RouterState {
     /// reach a device, so no per-device report counts them; the fleet
     /// merge folds them back in.
     router_shed: BTreeMap<TenantId, u64>,
+    /// Devices routing may pick from, sorted ascending. All devices on
+    /// a faultless run — iterating it is then index-for-index the
+    /// `0..n` sweep the pre-fault router did, keeping decisions
+    /// bit-identical. Fault events and the autoscaler shrink/grow it.
+    active: Vec<usize>,
 }
 
 impl MultiGpuDispatcher {
@@ -193,6 +208,7 @@ impl MultiGpuDispatcher {
             policy,
             admission: None,
             preempt: None,
+            faults: None,
         }
     }
 
@@ -209,6 +225,19 @@ impl MultiGpuDispatcher {
     /// preemption-free PR-4 behavior).
     pub fn with_preemption(mut self, cost: PreemptCost) -> Self {
         self.preempt = Some(cost);
+        self
+    }
+
+    /// Install a fleet-dynamics schedule: [`Self::run_source`] injects
+    /// the plan's timed drain/slowdown events and runs its autoscaler
+    /// while routing, and reports availability metrics in
+    /// [`MultiGpuReport::resilience`]. An empty plan
+    /// ([`FaultPlan::new`]) is inert — the run is bit-identical to the
+    /// same dispatcher without this call (pinned differentially in
+    /// `tests/resilience_invariants.rs`). [`Self::run`] replays fixed
+    /// streams on the healthy fleet and ignores the plan.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -231,12 +260,20 @@ impl MultiGpuDispatcher {
     }
 
     /// Fresh per-device engines, with device-local admission gates
-    /// installed under [`ShedPoint::Device`].
-    fn make_engines(&self) -> Vec<Engine<'_>> {
+    /// installed under [`ShedPoint::Device`]. With `timings` (a
+    /// fault-injected run), each engine is timed through its device's
+    /// [`ScaledTiming`] wrapper so slowdown events can degrade it
+    /// mid-run; at scale 1.0 the wrapper is exact pass-through, so an
+    /// empty fault plan stays bit-identical to the unwrapped fleet.
+    fn make_engines<'e>(&'e self, timings: Option<&'e [ScaledTiming<'e>]>) -> Vec<Engine<'e>> {
         self.devices
             .iter()
-            .map(|coord| {
-                let builder = EngineBuilder::new(coord);
+            .enumerate()
+            .map(|(d, coord)| {
+                let mut builder = EngineBuilder::new(coord);
+                if let Some(ts) = timings {
+                    builder = builder.timing(&ts[d]);
+                }
                 match &self.admission {
                     Some((spec, ShedPoint::Device)) => builder.admission(spec.build()).build(),
                     _ => builder.build(),
@@ -311,6 +348,7 @@ impl MultiGpuDispatcher {
             },
             scored: vec![0; self.devices.len()],
             router_shed: BTreeMap::new(),
+            active: (0..self.devices.len()).collect(),
         }
     }
 
@@ -346,16 +384,16 @@ impl MultiGpuDispatcher {
         &self,
         engines: &[Engine<'_>],
         models: &mut [EtaModel],
+        active: &[usize],
         k: &KernelInstance,
     ) -> (usize, f64) {
         let now = k.arrival_time;
-        models
-            .iter_mut()
-            .enumerate()
-            .map(|(d, model)| {
+        active
+            .iter()
+            .map(|&d| {
                 (
                     d,
-                    model.projected_finish_secs(
+                    models[d].projected_finish_secs(
                         &self.devices[d],
                         engines[d].pending(),
                         engines[d].clock_secs(),
@@ -414,18 +452,18 @@ impl MultiGpuDispatcher {
         }
     }
 
-    /// Least-loaded destination for `k`: one load evaluation per device
-    /// per arrival (the per-queue sum is O(pending), too heavy to
-    /// repeat inside a pairwise comparator).
-    fn least_loaded(&self, engines: &[Engine<'_>], k: &KernelInstance) -> usize {
-        let loads: Vec<f64> = (0..self.devices.len())
-            .map(|d| self.live_load(d, &engines[d], k.arrival_time) + self.est_cost(d, k))
+    /// Least-loaded destination for `k` among `active`: one load
+    /// evaluation per device per arrival (the per-queue sum is
+    /// O(pending), too heavy to repeat inside a pairwise comparator).
+    fn least_loaded(&self, engines: &[Engine<'_>], active: &[usize], k: &KernelInstance) -> usize {
+        let loads: Vec<(usize, f64)> = active
+            .iter()
+            .map(|&d| (d, self.live_load(d, &engines[d], k.arrival_time) + self.est_cost(d, k)))
             .collect();
         loads
             .iter()
-            .enumerate()
             .min_by(|(_, a), (_, b)| a.total_cmp(b))
-            .map(|(d, _)| d)
+            .map(|&(d, _)| d)
             .unwrap()
     }
 
@@ -439,32 +477,36 @@ impl MultiGpuDispatcher {
         st: &mut RouterState,
         k: &KernelInstance,
     ) -> (usize, Option<f64>) {
-        let n = self.devices.len();
+        // Disjoint borrows: the ETA models mutate while the active
+        // list is only read.
+        let RouterState { arrivals, batch, eta, active, .. } = st;
+        let n = active.len();
+        debug_assert!(n > 0, "routing with no active device");
         let (d, projected) = match self.policy {
-            DispatchPolicy::RoundRobin => (st.arrivals % n, None),
-            DispatchPolicy::LeastLoaded => (self.least_loaded(engines, k), None),
+            DispatchPolicy::RoundRobin => (active[*arrivals % n], None),
+            DispatchPolicy::LeastLoaded => (self.least_loaded(engines, active, k), None),
             DispatchPolicy::SloAware | DispatchPolicy::EarliestFeasible => {
                 if k.qos.class == ServiceClass::Latency {
-                    match st.eta.as_mut() {
+                    match eta.as_mut() {
                         // The earliest calibrated projected completion
                         // across the fleet.
                         Some(models) => {
-                            let (d, p) = self.earliest_feasible(engines, models, k);
+                            let (d, p) = self.earliest_feasible(engines, models, active, k);
                             (d, Some(p))
                         }
                         // The shortest wait the fleet can offer right now.
-                        None => (self.least_loaded(engines, k), None),
+                        None => (self.least_loaded(engines, active, k), None),
                     }
                 } else {
                     // Batch spreads on its own wheel so bulk work does
                     // not chase the latency kernels onto one device.
-                    let d = st.batch % n;
-                    st.batch += 1;
+                    let d = active[*batch % n];
+                    *batch += 1;
                     (d, None)
                 }
             }
         };
-        st.arrivals += 1;
+        *arrivals += 1;
         (d, projected)
     }
 
@@ -553,15 +595,23 @@ impl MultiGpuDispatcher {
         routed: &mut [usize],
     ) -> usize {
         let Some(ctrl) = router else { return 0 };
+        // A fully drained fleet has nowhere to release to; deferred
+        // work stays parked (closing as `deferred_unfinished`).
+        if st.active.is_empty() {
+            return 0;
+        }
         let mut released = 0usize;
         loop {
             let Some(head) = ctrl.peek_deferred() else { break };
-            let (d, hint) = match st.eta.as_mut() {
-                Some(models) => {
-                    let (d, p) = self.earliest_feasible(&*engines, models, head);
-                    (d, Some(p))
+            let (d, hint) = {
+                let RouterState { eta, active, .. } = &mut *st;
+                match eta.as_mut() {
+                    Some(models) => {
+                        let (d, p) = self.earliest_feasible(&*engines, models, active, head);
+                        (d, Some(p))
+                    }
+                    None => (self.least_loaded(&*engines, active, head), None),
                 }
-                None => (self.least_loaded(&*engines, head), None),
             };
             let got = {
                 let pending = engines[d].pending();
@@ -593,7 +643,9 @@ impl MultiGpuDispatcher {
     /// Close out all engines into the fleet report. `routed[d]` is how
     /// many kernels device `d` was handed; `total` the fleet-wide
     /// arrival count (including shed/deferred work that never reached
-    /// a device).
+    /// a device); `stranded` the kernels lost to a fully drained
+    /// fleet (0 on faultless runs), which the conservation identity
+    /// accounts alongside shed and deferred work.
     fn assemble(
         &self,
         engines: Vec<Engine<'_>>,
@@ -601,6 +653,7 @@ impl MultiGpuDispatcher {
         total: usize,
         router: Option<AdmissionController>,
         mut st: RouterState,
+        stranded: usize,
     ) -> MultiGpuReport {
         // Score the completions the final drain produced before the
         // models are frozen into the report.
@@ -645,7 +698,7 @@ impl MultiGpuDispatcher {
             reports.push(rep);
         }
         assert_eq!(
-            completed + admission.total_shed() + admission.total_deferred_unfinished(),
+            completed + admission.total_shed() + admission.total_deferred_unfinished() + stranded,
             total,
             "dispatcher lost kernels"
         );
@@ -686,6 +739,7 @@ impl MultiGpuDispatcher {
             reports,
             tenants,
             shed_retries: 0,
+            resilience: ResilienceReport::default(),
         }
     }
 
@@ -693,7 +747,7 @@ impl MultiGpuDispatcher {
     /// queue with the Kernelet policy through its own engine.
     pub fn run(&self, stream: &Stream) -> MultiGpuReport {
         let n = self.devices.len();
-        let mut engines = self.make_engines();
+        let mut engines = self.make_engines(None);
         let mut selectors = self.make_selectors();
         let mut router = self.make_router();
         let mut routed = vec![0usize; n];
@@ -723,7 +777,7 @@ impl MultiGpuDispatcher {
                 break;
             }
         }
-        self.assemble(engines, routed, stream.len(), router, st)
+        self.assemble(engines, routed, stream.len(), router, st, 0)
     }
 
     /// Route a streaming [`ArrivalSource`] online: same routing
@@ -735,12 +789,26 @@ impl MultiGpuDispatcher {
     /// tight.
     pub fn run_source(&self, source: &mut dyn ArrivalSource) -> MultiGpuReport {
         let n = self.devices.len();
-        let mut engines = self.make_engines();
+        // With a fault plan installed, every engine is timed through a
+        // per-device ScaledTiming so slowdown events can degrade it
+        // mid-run. Declared before the engines so it outlives them.
+        let scaled: Option<Vec<ScaledTiming<'_>>> = self
+            .faults
+            .as_ref()
+            .map(|_| self.devices.iter().map(|c| ScaledTiming::new(&c.simcache)).collect());
+        let mut engines = self.make_engines(scaled.as_deref());
         let mut selectors = self.make_selectors();
         let mut router = self.make_router();
         let mut routed = vec![0usize; n];
         let mut fed = vec![0usize; n];
         let mut st = self.router_state();
+        let mut faults = self.faults.as_ref().map(|plan| FaultRun::new(plan, n));
+        if let Some(fr) = &mut faults {
+            if let Some(auto) = fr.plan.autoscaler() {
+                st.active.truncate(auto.initial_active.min(n).max(1));
+                fr.peak_active = st.active.len();
+            }
+        }
 
         fn feed(engines: &[Engine<'_>], fed: &mut [usize], source: &mut dyn ArrivalSource) {
             for (engine, cursor) in engines.iter().zip(fed.iter_mut()) {
@@ -759,6 +827,18 @@ impl MultiGpuDispatcher {
             self.pump_router(&mut engines, &mut st, &mut router, &mut routed);
             match source.peek_time() {
                 Some(t) => {
+                    // Fault events scheduled at or before the next
+                    // arrival fire now, before the devices advance to
+                    // it — slices dispatched on the way to `t` already
+                    // run degraded, and a drained device's pending set
+                    // is re-routed while the survivors still have the
+                    // gap to absorb it. (Event granularity is the
+                    // arrival stream: an event timed inside a quiet
+                    // gap fires at the next routing opportunity.)
+                    if let Some(fr) = &mut faults {
+                        let ts = scaled.as_deref().expect("fault runs wrap timings");
+                        self.fault_tick(t, fr, ts, &mut engines, &mut st, &mut router, &mut routed);
+                    }
                     // Advance devices toward the arrival one decision
                     // at a time, feeding completions between rounds, so
                     // a closed-loop resubmit that lands *earlier* than
@@ -804,9 +884,27 @@ impl MultiGpuDispatcher {
                     // that advance re-score the ETA models first.
                     self.observe_eta(&engines, &mut st);
                     self.pump_router(&mut engines, &mut st, &mut router, &mut routed);
+                    if let Some(fr) = &mut faults {
+                        if st.active.is_empty() {
+                            // Fully drained fleet: the arrival is
+                            // stranded — counted, reported, lost (no
+                            // retry; there is nothing to retry onto).
+                            st.arrivals += 1;
+                            fr.stranded += 1;
+                            continue 'outer;
+                        }
+                        fr.note_arrival(&k);
+                    }
                     if let Some((id, t)) =
                         self.admit_route(&mut engines, &mut st, &mut router, &mut routed, k)
                     {
+                        if let Some(fr) = &mut faults {
+                            // Sustained shedding is the autoscaler's
+                            // scale-up signal; a shed kernel never
+                            // completes, so drop its deadline note.
+                            fr.sheds_since_check += 1;
+                            fr.deadline_of.remove(&id);
+                        }
                         // Client-visible backpressure: a closed-loop
                         // source re-queues the client instead of losing
                         // it forever.
@@ -823,18 +921,353 @@ impl MultiGpuDispatcher {
                         advanced |= engine.step(sel.as_mut(), None, more);
                     }
                     self.observe_eta(&engines, &mut st);
+                    // During drain-out the fault clock is the fleet
+                    // frontier (the furthest engine clock).
+                    if let Some(fr) = &mut faults {
+                        let frontier =
+                            engines.iter().map(Engine::clock_secs).fold(0.0, f64::max);
+                        let ts = scaled.as_deref().expect("fault runs wrap timings");
+                        self.fault_tick(
+                            frontier,
+                            fr,
+                            ts,
+                            &mut engines,
+                            &mut st,
+                            &mut router,
+                            &mut routed,
+                        );
+                    }
                     if !advanced
                         && self.pump_router(&mut engines, &mut st, &mut router, &mut routed) == 0
                     {
-                        break;
+                        // A drain that just fired may have re-routed
+                        // withdrawn work onto engines this round
+                        // already stepped past — settle only when
+                        // nothing is pending anywhere.
+                        if faults.is_none()
+                            || engines.iter().all(|e| e.pending().is_empty())
+                        {
+                            break;
+                        }
                     }
                 }
             }
         }
         let total = st.arrivals;
-        let mut report = self.assemble(engines, routed, total, router, st);
+        let final_active = st.active.len();
+        if let Some(fr) = &mut faults {
+            fr.harvest(&engines);
+        }
+        let stranded = faults.as_ref().map_or(0, |fr| fr.stranded);
+        let mut report = self.assemble(engines, routed, total, router, st, stranded);
         report.shed_retries = source.retries();
+        if let Some(fr) = faults {
+            report.resilience = fr.into_report(report.makespan_secs, final_active);
+        }
         report
+    }
+
+    /// Fire every fault event scheduled at or before `now`, then run
+    /// the autoscaler's checks up to `now`. Completion harvesting for
+    /// the phase-goodput ledger happens first so completions are
+    /// attributed against the pre-event phase boundaries.
+    #[allow(clippy::too_many_arguments)]
+    fn fault_tick(
+        &self,
+        now: f64,
+        fr: &mut FaultRun<'_>,
+        scaled: &[ScaledTiming<'_>],
+        engines: &mut [Engine<'_>],
+        st: &mut RouterState,
+        router: &mut Option<AdmissionController>,
+        routed: &mut [usize],
+    ) {
+        fr.harvest(engines);
+        while let Some(&ev) = fr.plan.events().get(fr.next_event) {
+            if ev.at_secs() > now {
+                break;
+            }
+            fr.next_event += 1;
+            if fr.first_event_at.is_none() {
+                fr.first_event_at = Some(ev.at_secs());
+            }
+            match ev {
+                FaultEvent::Drain { at_secs, device } => {
+                    if !fr.retired[device] {
+                        self.fire_drain(engines, st, router, routed, fr, device, at_secs);
+                    }
+                }
+                FaultEvent::Slowdown { at_secs, device, factor } => {
+                    // Repeated slowdowns on one device compose.
+                    scaled[device].set_scale(scaled[device].scale() * factor);
+                    fr.records.push(FaultEventRecord {
+                        kind: "slowdown",
+                        at_secs,
+                        device,
+                        rerouted: 0,
+                        stranded: 0,
+                    });
+                }
+            }
+        }
+        self.autoscale_tick(fr, &*engines, st, now);
+    }
+
+    /// Retire `device`: withdraw its pending set (bookkeeping
+    /// reversed as if never handed there), drop it from the active
+    /// list for good, and re-route the withdrawn kernels through the
+    /// live routing policy — each counted exactly once fleet-wide
+    /// (the router's arrival counter is restored after each re-offer,
+    /// and any gate that already admitted the kernel forgets it
+    /// first). With no survivors the withdrawn kernels are stranded.
+    #[allow(clippy::too_many_arguments)]
+    fn fire_drain(
+        &self,
+        engines: &mut [Engine<'_>],
+        st: &mut RouterState,
+        router: &mut Option<AdmissionController>,
+        routed: &mut [usize],
+        fr: &mut FaultRun<'_>,
+        device: usize,
+        at_secs: f64,
+    ) {
+        fr.retired[device] = true;
+        st.active.retain(|&d| d != device);
+        let withdrawn = engines[device].withdraw_pending();
+        routed[device] -= withdrawn.len();
+        if let Some(models) = st.eta.as_mut() {
+            for k in &withdrawn {
+                models[device].forget(k.id);
+            }
+        }
+        let mut rerouted = 0usize;
+        let mut stranded = 0usize;
+        for k in withdrawn {
+            if st.active.is_empty() {
+                stranded += 1;
+                fr.stranded += 1;
+                fr.deadline_of.remove(&k.id);
+                continue;
+            }
+            if let Some(ctrl) = router.as_mut() {
+                // The router gate admitted this kernel once already;
+                // un-count that so the re-offer's fresh decision
+                // leaves every kernel judged exactly once.
+                ctrl.forget_admitted(k.qos.class);
+            }
+            let id = k.id;
+            let arrivals_before = st.arrivals;
+            let shed = self.admit_route(engines, st, router, routed, k);
+            // Re-routed, not a new arrival: the fleet total already
+            // counted it when it first arrived.
+            st.arrivals = arrivals_before;
+            match shed {
+                Some((sid, _)) => {
+                    // The surviving gate refused it: it closes as shed
+                    // (without the on_shed retry callback — the client
+                    // already submitted it once).
+                    fr.deadline_of.remove(&sid);
+                }
+                None => {
+                    fr.rerouted.insert(id, at_secs);
+                    rerouted += 1;
+                }
+            }
+        }
+        fr.records.push(FaultEventRecord { kind: "drain", at_secs, device, rerouted, stranded });
+    }
+
+    /// Run every autoscaler check due by `now`: scale up on sustained
+    /// shedding since the previous check, scale down a device that
+    /// was idle at several consecutive checks (never below one active
+    /// device, never a retired device back in, never a device holding
+    /// work out).
+    fn autoscale_tick(
+        &self,
+        fr: &mut FaultRun<'_>,
+        engines: &[Engine<'_>],
+        st: &mut RouterState,
+        now: f64,
+    ) {
+        let Some(auto) = fr.plan.autoscaler() else { return };
+        while now >= fr.next_check {
+            let at_secs = fr.next_check;
+            fr.next_check += auto.check_interval_secs;
+            if fr.sheds_since_check >= auto.shed_threshold {
+                let join =
+                    (0..engines.len()).find(|d| !fr.retired[*d] && !st.active.contains(d));
+                if let Some(device) = join {
+                    st.active.push(device);
+                    st.active.sort_unstable();
+                    fr.scale_ups += 1;
+                    fr.records.push(FaultEventRecord {
+                        kind: "scale-up",
+                        at_secs,
+                        device,
+                        rerouted: 0,
+                        stranded: 0,
+                    });
+                }
+            }
+            fr.sheds_since_check = 0;
+            for d in 0..engines.len() {
+                if st.active.contains(&d) && engines[d].pending().is_empty() {
+                    fr.idle_streak[d] += 1;
+                } else {
+                    fr.idle_streak[d] = 0;
+                }
+            }
+            if st.active.len() > 1 {
+                let drop = st
+                    .active
+                    .iter()
+                    .rev()
+                    .find(|&&d| fr.idle_streak[d] >= auto.idle_intervals)
+                    .copied();
+                if let Some(device) = drop {
+                    st.active.retain(|&x| x != device);
+                    fr.idle_streak[device] = 0;
+                    fr.scale_downs += 1;
+                    fr.records.push(FaultEventRecord {
+                        kind: "scale-down",
+                        at_secs,
+                        device,
+                        rerouted: 0,
+                        stranded: 0,
+                    });
+                }
+            }
+            fr.peak_active = fr.peak_active.max(st.active.len());
+        }
+    }
+}
+
+/// Live state of one fault-injected [`MultiGpuDispatcher::run_source`]:
+/// the event cursor, retired devices, the phase-goodput ledger
+/// (per-completion deadline outcomes bucketed against the first
+/// event's time), re-route latency tracking and autoscaler counters.
+/// Folded into a [`ResilienceReport`] at close.
+struct FaultRun<'p> {
+    plan: &'p FaultPlan,
+    next_event: usize,
+    retired: Vec<bool>,
+    records: Vec<FaultEventRecord>,
+    stranded: usize,
+    /// Re-routed kernel id → the drain's fire time (re-route latency
+    /// is completion minus this).
+    rerouted: HashMap<u64, f64>,
+    reroute_latency_sum: f64,
+    reroute_scored: usize,
+    first_event_at: Option<f64>,
+    /// Arrival id → absolute deadline (None = undeadlined, counts as
+    /// in-deadline, matching the goodput numerator).
+    deadline_of: HashMap<u64, Option<f64>>,
+    /// (completion time, met deadline) fleet-wide, harvested from the
+    /// per-engine completion logs via `cursors`.
+    completions: Vec<(f64, bool)>,
+    cursors: Vec<usize>,
+    next_check: f64,
+    sheds_since_check: u64,
+    idle_streak: Vec<u32>,
+    scale_ups: usize,
+    scale_downs: usize,
+    peak_active: usize,
+}
+
+impl<'p> FaultRun<'p> {
+    fn new(plan: &'p FaultPlan, n: usize) -> Self {
+        let next_check =
+            plan.autoscaler().map_or(f64::INFINITY, |a| a.check_interval_secs);
+        Self {
+            plan,
+            next_event: 0,
+            retired: vec![false; n],
+            records: Vec::new(),
+            stranded: 0,
+            rerouted: HashMap::new(),
+            reroute_latency_sum: 0.0,
+            reroute_scored: 0,
+            first_event_at: None,
+            deadline_of: HashMap::new(),
+            completions: Vec::new(),
+            cursors: vec![0; n],
+            next_check,
+            sheds_since_check: 0,
+            idle_streak: vec![0; n],
+            scale_ups: 0,
+            scale_downs: 0,
+            peak_active: 0,
+        }
+    }
+
+    /// Note an arrival's deadline before it is routed, so its eventual
+    /// completion can be bucketed as good or late.
+    fn note_arrival(&mut self, k: &KernelInstance) {
+        self.deadline_of.insert(k.id, k.qos.deadline);
+    }
+
+    /// Pull new completions off every engine's log into the phase
+    /// ledger, scoring re-route latency for kernels a drain moved.
+    fn harvest(&mut self, engines: &[Engine<'_>]) {
+        for (d, engine) in engines.iter().enumerate() {
+            let log = engine.completion_log();
+            while self.cursors[d] < log.len() {
+                let (id, t) = log[self.cursors[d]];
+                self.cursors[d] += 1;
+                let met = match self.deadline_of.get(&id) {
+                    Some(Some(deadline)) => t <= *deadline,
+                    _ => true,
+                };
+                self.completions.push((t, met));
+                if let Some(&fired_at) = self.rerouted.get(&id) {
+                    self.reroute_latency_sum += (t - fired_at).max(0.0);
+                    self.reroute_scored += 1;
+                }
+            }
+        }
+    }
+
+    /// Close the ledger into the report: goodput is bucketed into
+    /// pre `[0, t0)`, during `[t0, t0 + window)` and post
+    /// `[t0 + window, makespan]` phases around the first fired
+    /// event's time `t0`; with nothing fired all three equal the
+    /// run-wide goodput.
+    fn into_report(self, makespan_secs: f64, final_active: usize) -> ResilienceReport {
+        let rate = |count: usize, span: f64| count as f64 / span.max(1e-12);
+        let good = |lo: f64, hi: f64| {
+            self.completions.iter().filter(|&&(t, met)| met && t >= lo && t < hi).count()
+        };
+        let (pre, during, post) = match self.first_event_at {
+            Some(t0) => {
+                let w = self.plan.phase_window_secs();
+                let post_span = (makespan_secs - (t0 + w)).max(0.0);
+                (
+                    rate(good(0.0, t0), t0),
+                    rate(good(t0, t0 + w), w),
+                    rate(good(t0 + w, f64::INFINITY), post_span),
+                )
+            }
+            None => {
+                let overall = rate(good(0.0, f64::INFINITY), makespan_secs);
+                (overall, overall, overall)
+            }
+        };
+        ResilienceReport {
+            events: self.records,
+            stranded: self.stranded,
+            goodput_pre_kps: pre,
+            goodput_during_kps: during,
+            goodput_post_kps: post,
+            reroute_latency_mean_secs: if self.reroute_scored == 0 {
+                0.0
+            } else {
+                self.reroute_latency_sum / self.reroute_scored as f64
+            },
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            peak_active_devices: self.peak_active,
+            final_active_devices: final_active,
+        }
     }
 }
 

@@ -25,13 +25,16 @@
 //! `saturation` (offered-load sweep over the streaming scenarios),
 //! `qos` (per-class turnaround percentiles + deadline misses),
 //! `admission` (goodput + tails under load shedding), `routing`
-//! (fleet deadline misses per routing policy, EFC vs backlog routing)
-//! and `tenancy` (per-tenant shares + tails under a flooding tenant,
-//! weighted-fair vs tenant-blind scheduling).
+//! (fleet deadline misses per routing policy, EFC vs backlog routing),
+//! `tenancy` (per-tenant shares + tails under a flooding tenant,
+//! weighted-fair vs tenant-blind scheduling) and `resilience` (fleet
+//! availability under injected drains, slowdowns and flash-crowd
+//! autoscaling).
 
 pub mod admission;
 pub mod qos;
 pub mod report;
+pub mod resilience;
 pub mod routing;
 pub mod scheduling;
 pub mod slicing;
@@ -46,10 +49,11 @@ use anyhow::{bail, Result};
 
 /// All figure/table ids, in paper order, plus repo-native telemetry
 /// reports (`qdepth`, `saturation`, `qos`, `admission`, `routing`,
-/// `tenancy`).
-pub const ALL_IDS: [&str; 19] = [
+/// `tenancy`, `resilience`).
+pub const ALL_IDS: [&str; 20] = [
     "table2", "table4", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "table6", "fig14", "qdepth", "saturation", "qos", "admission", "routing", "tenancy",
+    "resilience",
 ];
 
 /// Options shared by the generators.
@@ -99,6 +103,7 @@ pub fn generate(id: &str, opts: &FigOptions) -> Result<Report> {
         "admission" => admission::admission(opts),
         "routing" => routing::routing(opts),
         "tenancy" => tenancy::tenancy(opts),
+        "resilience" => resilience::resilience(opts),
         other => bail!("unknown figure/table id {other} (valid: {ALL_IDS:?})"),
     })
 }

@@ -1,0 +1,378 @@
+//! Resilience sweep (repo-native): fleet availability under injected
+//! faults — device drains, slowdown faults and flash-crowd autoscaling
+//! — the dynamics story the steady-state `routing` sweep cannot tell.
+//!
+//! Two drills share the table. The *fault drill* crosses routing
+//! policy ({`sloaware`, `efc`}) × fault plan ({`none`, `drain`,
+//! `slowdown`}, see [`FaultSpec`]) on a homogeneous C2050 fleet under
+//! a latency/batch mix at overload: every policy of a drill sees the
+//! identical annotated arrival sequence, the `none` rows run an
+//! *empty* [`FaultPlan`] (pinned bit-identical to the faultless
+//! dispatcher in `tests/resilience_invariants.rs`), and the phase
+//! goodputs read straight off [`ResilienceReport`]. The *flash-crowd
+//! drill* layers a 3× arrival surge on the diurnal scenario and
+//! compares a fixed fleet against an elastic one that starts at the
+//! same size but may scale into spare devices when the SLO guard
+//! sheds — the acceptance bars `benches/resilience.rs` records into
+//! `BENCH_resilience.json` and `scripts/check_bench.py` gates
+//! (goodput during a drain holds ≥ 50% of pre-fault; the autoscaled
+//! fleet strictly beats the fixed fleet on flash-crowd goodput).
+
+use super::report::{f, Report};
+use super::throughput::base_capacity_kps;
+use crate::config::{DispatchSpec, FaultSpec, GpuConfig, WorkloadSpec};
+use crate::coordinator::{
+    AdmissionSpec, AutoscalerSpec, Coordinator, EtaStats, FaultPlan, MultiGpuDispatcher,
+    ResilienceReport, ShedPoint,
+};
+use crate::stats::split_seed;
+use crate::workload::{Mix, QosMix};
+
+/// Routing policies the fault drill compares.
+pub const RESILIENCE_POLICIES: [&str; 2] = ["sloaware", "efc"];
+
+/// Fault drills the sweep crosses (`none` = empty plan, the control).
+pub const RESILIENCE_DRILLS: [&str; 3] = ["none", "drain", "slowdown"];
+
+/// Default homogeneous fleet size for the fault drill (4 devices so a
+/// single drain costs a quarter of the fleet, leaving clear margin on
+/// the during-fault goodput bar).
+pub const DEFAULT_GPUS: usize = 4;
+
+/// Fixed-arm fleet size for the flash-crowd drill.
+pub const FLASH_BASE_GPUS: usize = 2;
+
+/// Default offered load relative to fleet BASE capacity.
+pub const DEFAULT_LOAD: f64 = 1.5;
+
+/// Default latency-class share of arrivals.
+pub const DEFAULT_LATENCY_FRACTION: f64 = 0.3;
+
+/// Default deadline scale (× mean whole-kernel service time).
+pub const DEFAULT_DEADLINE_SCALE: f64 = 4.0;
+
+/// Spare devices the elastic flash-crowd fleet may scale into.
+pub const FLASH_SPARE_GPUS: usize = 2;
+
+/// One (drill, policy) fleet measurement.
+#[derive(Debug, Clone)]
+pub struct ResiliencePoint {
+    /// Drill name (`none`/`drain`/`slowdown`/`flash-fixed`/`flash-auto`).
+    pub mode: &'static str,
+    /// Routing policy name.
+    pub policy: &'static str,
+    /// Devices the fleet *may* use (spares included).
+    pub gpus: usize,
+    /// Kernels completed fleet-wide.
+    pub kernels: usize,
+    /// Fleet throughput over the makespan.
+    pub throughput_kps: f64,
+    /// Fleet goodput (completed-within-deadline kernels/sec).
+    pub goodput_kps: f64,
+    /// Fleet latency-class deadline misses.
+    pub deadline_misses: usize,
+    /// Kernels shed at the router gate (flash-crowd rows only).
+    pub shed: usize,
+    /// Per-device ETA calibration stats (empty except under `efc`) —
+    /// the slowdown drill reads the degraded device's correction here.
+    pub eta: Vec<EtaStats>,
+    /// Availability telemetry (phase goodputs, re-routes, autoscaling).
+    pub resilience: ResilienceReport,
+}
+
+/// Run the fault drill: policy × fault plan on a homogeneous C2050
+/// fleet, every cell on the identical arrival sequence. Returns the
+/// points plus the per-device BASE capacity loads were scaled by.
+pub fn resilience_sweep(
+    opts: &super::FigOptions,
+    drills: &[&'static str],
+    load: f64,
+    gpus: usize,
+) -> (Vec<ResiliencePoint>, f64) {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let specs: Vec<crate::kernel::KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
+    coord.prewarm(&specs);
+    let qos = QosMix::latency_share(DEFAULT_LATENCY_FRACTION, DEFAULT_DEADLINE_SCALE / capacity);
+    let per_app = opts.instances_per_app;
+    let total = per_app as usize * mix.apps().len();
+    // Expected run span sizes the drill: the fault fires ~30% in and
+    // the "during" phase window covers the following quarter-span.
+    let span = total as f64 / (load * capacity * gpus as f64);
+    let onset = 0.3 * span;
+    // One workload seed for the whole drill so `none` vs `drain` vs
+    // `slowdown` differ only in the injected plan.
+    let seed = split_seed(opts.seed ^ 0xFA17, 0);
+    let per_cell = crate::sweep::run_cells(drills, |_, &drill| {
+        let workload =
+            WorkloadSpec::new("poisson", mix).instances(per_app).load(load).seed(seed).qos(qos);
+        let mut out = Vec::with_capacity(RESILIENCE_POLICIES.len());
+        for &policy in &RESILIENCE_POLICIES {
+            let plan = FaultSpec::from_name(drill)
+                .expect("resilience drill names are valid")
+                .build(gpus, onset, seed)
+                // The control rows run an *empty* plan (not the
+                // faultless fast path) so their phase goodputs render
+                // and the inert-plan contract shows up in the output.
+                .unwrap_or_else(FaultPlan::new)
+                .with_phase_window_secs(0.25 * span);
+            let dispatcher = MultiGpuDispatcher::new(
+                &vec![GpuConfig::c2050(); gpus],
+                DispatchSpec::from_name(policy)
+                    .expect("resilience policy names are valid")
+                    .build(),
+            )
+            .with_faults(plan)
+            .with_warm_from(&coord);
+            let mut source = workload
+                .source(capacity * gpus as f64)
+                .expect("resilience sweep scenario names are valid");
+            let rep = dispatcher.run_source(source.as_mut());
+            assert!(
+                rep.reports.iter().all(|r| r.incomplete == 0),
+                "{drill}/{policy} left kernels behind"
+            );
+            let fleet = rep.fleet_qos();
+            out.push(ResiliencePoint {
+                mode: drill,
+                policy,
+                gpus,
+                kernels: rep.per_device.iter().map(|p| p.1).sum(),
+                throughput_kps: rep.throughput_kps,
+                goodput_kps: rep.goodput_kps,
+                deadline_misses: fleet.latency.deadline_misses + fleet.batch.deadline_misses,
+                shed: 0,
+                eta: rep.eta,
+                resilience: rep.resilience,
+            });
+        }
+        out
+    });
+    (per_cell.into_iter().flatten().collect(), capacity)
+}
+
+/// Run the flash-crowd drill: a 3× arrival surge over the diurnal
+/// scenario against an SLO-guarded `efc` fleet, fixed vs elastic. The
+/// elastic fleet starts at the same active size but may scale into
+/// [`FLASH_SPARE_GPUS`] spares when the guard sheds, and back down
+/// when devices idle. Both fleets see the identical arrival sequence.
+pub fn flashcrowd_pair(opts: &super::FigOptions) -> Vec<ResiliencePoint> {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let mix = Mix::MIX;
+    let capacity = base_capacity_kps(&coord, mix);
+    let specs: Vec<crate::kernel::KernelSpec> = mix.apps().iter().map(|a| a.spec()).collect();
+    coord.prewarm(&specs);
+    let qos = QosMix::latency_share(DEFAULT_LATENCY_FRACTION, DEFAULT_DEADLINE_SCALE / capacity);
+    let per_app = opts.instances_per_app;
+    let base_gpus = FLASH_BASE_GPUS;
+    let total = per_app as usize * mix.apps().len();
+    let span = total as f64 / (DEFAULT_LOAD * capacity * base_gpus as f64);
+    let seed = split_seed(opts.seed ^ 0xF1A5, 0);
+    let admission =
+        AdmissionSpec::for_policy("sloguard", capacity, DEFAULT_DEADLINE_SCALE, usize::MAX);
+    // (fleet size, fault plan) per arm; the fixed arm runs an empty
+    // plan so both rows report phase goodput the same way.
+    let arms: [(&'static str, usize, FaultPlan); 2] = [
+        ("flash-fixed", base_gpus, FaultPlan::new()),
+        (
+            "flash-auto",
+            base_gpus + FLASH_SPARE_GPUS,
+            FaultPlan::new().with_autoscaler(AutoscalerSpec::new(base_gpus, span / 24.0)),
+        ),
+    ];
+    crate::sweep::run_cells(&arms, |_, &(mode, gpus, ref plan)| {
+        let workload = WorkloadSpec::new("flashcrowd", mix)
+            .instances(per_app)
+            .load(DEFAULT_LOAD)
+            .seed(seed)
+            .qos(qos);
+        let dispatcher = MultiGpuDispatcher::new(
+            &vec![GpuConfig::c2050(); gpus],
+            DispatchSpec::EarliestFeasible.build(),
+        )
+        .with_admission(admission, ShedPoint::Router)
+        .with_faults(plan.clone().with_phase_window_secs(0.25 * span))
+        .with_warm_from(&coord);
+        // Offered rate keys off the *base* fleet so both arms see the
+        // identical surge; the spares are headroom, not extra load.
+        let mut source = workload
+            .source(capacity * base_gpus as f64)
+            .expect("flashcrowd scenario name is valid");
+        let rep = dispatcher.run_source(source.as_mut());
+        let fleet = rep.fleet_qos();
+        ResiliencePoint {
+            mode,
+            policy: "efc",
+            gpus,
+            kernels: rep.per_device.iter().map(|p| p.1).sum(),
+            throughput_kps: rep.throughput_kps,
+            goodput_kps: rep.goodput_kps,
+            deadline_misses: fleet.latency.deadline_misses + fleet.batch.deadline_misses,
+            shed: rep.admission.total_shed(),
+            eta: rep.eta,
+            resilience: rep.resilience,
+        }
+    })
+}
+
+/// The `resilience` figure: availability under injected faults — phase
+/// goodput around the fault, re-route latency, stranded kernels and
+/// autoscaler activity, one row per (drill, policy).
+pub fn resilience(opts: &super::FigOptions) -> Report {
+    // Several full fleet runs per drill; cap like `routing` so
+    // `figure all` stays tractable.
+    let opts =
+        super::FigOptions { instances_per_app: opts.instances_per_app.min(60), ..opts.clone() };
+    let (mut points, capacity) =
+        resilience_sweep(&opts, &RESILIENCE_DRILLS, DEFAULT_LOAD, DEFAULT_GPUS);
+    points.extend(flashcrowd_pair(&opts));
+    let mut r = Report::new(
+        "resilience",
+        "Fleet availability under faults: drains, slowdowns, flash-crowd autoscaling",
+        &[
+            "mode", "policy", "gpus", "done", "goodput_kps", "pre_kps", "during_kps", "post_kps",
+            "rerouted", "stranded", "reroute_s", "shed", "scale", "peak",
+        ],
+    );
+    for p in &points {
+        let res = &p.resilience;
+        let rerouted: usize = res.events.iter().map(|e| e.rerouted).sum();
+        r.row(vec![
+            p.mode.to_string(),
+            p.policy.to_string(),
+            p.gpus.to_string(),
+            p.kernels.to_string(),
+            f(p.goodput_kps, 1),
+            f(res.goodput_pre_kps, 1),
+            f(res.goodput_during_kps, 1),
+            f(res.goodput_post_kps, 1),
+            rerouted.to_string(),
+            res.stranded.to_string(),
+            if res.reroute_latency_mean_secs > 0.0 {
+                f(res.reroute_latency_mean_secs, 5)
+            } else {
+                "-".to_string()
+            },
+            p.shed.to_string(),
+            format!("+{}/-{}", res.scale_ups, res.scale_downs),
+            res.peak_active_devices.to_string(),
+        ]);
+    }
+    r.note(format!(
+        "fault drill: {DEFAULT_GPUS}x C2050 at load {DEFAULT_LOAD} ({capacity:.1} kernels/s BASE \
+         capacity per device), poisson arrivals, {}% latency-class; drain/slowdown(3x) hit the \
+         last device ~30% into the run; `none` rows run an EMPTY fault plan (bit-identical to \
+         the faultless dispatcher); pre/during/post = deadline-met goodput before/inside/after \
+         the phase window around the first fault",
+        (DEFAULT_LATENCY_FRACTION * 100.0) as u32,
+    ));
+    r.note(format!(
+        "flash crowd: 3x surge over diurnal arrivals, sloguard-gated efc fleet; flash-fixed = \
+         {FLASH_BASE_GPUS} devices, flash-auto = same active start + {FLASH_SPARE_GPUS} spares the \
+         autoscaler may join on sustained shedding (scale = +ups/-downs; peak = peak active \
+         devices); instances/app = {}",
+        opts.instances_per_app,
+    ));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigOptions;
+
+    fn small() -> FigOptions {
+        FigOptions { instances_per_app: 6, mc_samples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_covers_the_drills_and_conserves_kernels() {
+        let (points, capacity) = resilience_sweep(&small(), &RESILIENCE_DRILLS, 1.5, 2);
+        assert!(capacity > 0.0);
+        assert_eq!(points.len(), RESILIENCE_DRILLS.len() * RESILIENCE_POLICIES.len());
+        for p in &points {
+            assert_eq!(p.kernels, 24, "{p:?}");
+            assert!(p.goodput_kps <= p.throughput_kps + 1e-9, "{p:?}");
+            assert_eq!(p.resilience.stranded, 0, "{p:?}");
+            match p.mode {
+                "none" => {
+                    assert!(p.resilience.events.is_empty(), "{p:?}");
+                    // Empty plan: every phase is the whole run.
+                    assert!(
+                        (p.resilience.goodput_pre_kps - p.resilience.goodput_post_kps).abs()
+                            < 1e-9,
+                        "{p:?}"
+                    );
+                }
+                "drain" => {
+                    assert_eq!(p.resilience.events.len(), 1, "{p:?}");
+                    let ev = &p.resilience.events[0];
+                    assert_eq!(ev.kind, "drain", "{p:?}");
+                    assert_eq!(ev.stranded, 0, "{p:?}");
+                }
+                "slowdown" => {
+                    assert_eq!(p.resilience.events.len(), 1, "{p:?}");
+                    assert_eq!(p.resilience.events[0].kind, "slowdown", "{p:?}");
+                }
+                other => panic!("unexpected mode {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn drain_keeps_the_fleet_available() {
+        // The tentpole acceptance bar (also encoded in check_bench.py):
+        // losing one of two devices mid-run must not collapse goodput —
+        // the during-fault phase holds at least half the pre-fault rate
+        // and nothing is stranded.
+        let opts = FigOptions { instances_per_app: 25, mc_samples: 1, ..Default::default() };
+        let (points, _) = resilience_sweep(&opts, &["drain"], DEFAULT_LOAD, DEFAULT_GPUS);
+        let efc = points.iter().find(|p| p.policy == "efc").unwrap();
+        assert_eq!(efc.resilience.stranded, 0, "{efc:?}");
+        assert!(
+            efc.resilience.goodput_during_kps >= 0.5 * efc.resilience.goodput_pre_kps,
+            "goodput collapsed: during {} vs pre {}",
+            efc.resilience.goodput_during_kps,
+            efc.resilience.goodput_pre_kps
+        );
+        let rerouted: usize = efc.resilience.events.iter().map(|e| e.rerouted).sum();
+        assert!(rerouted >= 1, "drain re-routed nothing: {efc:?}");
+    }
+
+    #[test]
+    fn autoscaled_flashcrowd_beats_fixed_fleet() {
+        // The second acceptance bar: under the surge, the elastic
+        // fleet's goodput strictly beats the fixed fleet's.
+        let opts = FigOptions { instances_per_app: 30, mc_samples: 1, ..Default::default() };
+        let points = flashcrowd_pair(&opts);
+        assert_eq!(points.len(), 2);
+        let fixed = points.iter().find(|p| p.mode == "flash-fixed").unwrap();
+        let auto = points.iter().find(|p| p.mode == "flash-auto").unwrap();
+        assert!(auto.resilience.scale_ups >= 1, "autoscaler never scaled up: {auto:?}");
+        assert!(auto.resilience.peak_active_devices > FLASH_BASE_GPUS, "{auto:?}");
+        assert!(
+            auto.goodput_kps > fixed.goodput_kps,
+            "elastic fleet did not beat fixed: {} vs {}",
+            auto.goodput_kps,
+            fixed.goodput_kps
+        );
+    }
+
+    #[test]
+    fn resilience_report_shape() {
+        let r = resilience(&small());
+        assert_eq!(
+            r.rows.len(),
+            RESILIENCE_DRILLS.len() * RESILIENCE_POLICIES.len() + 2
+        );
+        let mode = r.col("mode");
+        for d in RESILIENCE_DRILLS {
+            assert!(r.rows.iter().any(|row| row[mode] == d), "missing {d}");
+        }
+        assert!(r.rows.iter().any(|row| row[mode] == "flash-auto"), "missing flash-auto");
+        assert_eq!(r.notes.len(), 2);
+    }
+}

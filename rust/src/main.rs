@@ -11,7 +11,7 @@
 //!                   [--qos-mix F] [--deadline-scale S] [--tenants F]
 //!                   [--admission POLICY] [--backlog-cap N]
 //!                   [--dispatch POLICY] [--gpus N] [--preempt-cost S]
-//!                   [--cache-dir DIR]
+//!                   [--faults DRILL] [--fault-at SECS] [--cache-dir DIR]
 //! kernelet trace record --scenario NAME [--out FILE]   dump a scenario
 //!                   to the JSON trace format (incl. QoS annotations)
 //! kernelet slice-ptx <file.ptx> [--dims 1|2]   rectify a PTX kernel
@@ -24,7 +24,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use kernelet::config::{DispatchSpec, GpuConfig, SelectorSpec, WorkloadSpec};
+use kernelet::config::{DispatchSpec, FaultSpec, GpuConfig, SelectorSpec, WorkloadSpec};
 use kernelet::coordinator::baselines::{run_base, run_opt};
 use kernelet::coordinator::{
     run_kernelet, AdmissionSpec, BacklogCap, Coordinator, EngineBuilder, MultiGpuDispatcher,
@@ -69,15 +69,16 @@ kernelet — concurrent GPU kernel scheduling via dynamic slicing (paper reprodu
 
 USAGE:
   kernelet table <2|4|6>
-  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|routing|tenancy|all>
-                    [--out DIR] [--quick]
+  kernelet figure <4|6|7|8|9|10|11|12|13|14|qdepth|saturation|qos|admission|routing|tenancy|
+                    resilience|all> [--out DIR] [--quick]
   kernelet profile <BENCH|all> [--gpu c2050|gtx680]
   kernelet schedule --mix <CI|MI|MIX|ALL> [--gpu c2050|gtx680] [--instances N]
-                    [--scenario saturated|poisson|bursty|diurnal|heavytail|closed|trace]
+                    [--scenario saturated|poisson|bursty|diurnal|flashcrowd|heavytail|closed|trace]
                     [--load X] [--trace FILE] [--seed N]
                     [--qos-mix F] [--deadline-scale S] [--tenants F]
                     [--admission admitall|backlogcap|sloguard|tenantquota] [--backlog-cap N]
                     [--dispatch roundrobin|leastloaded|sloaware|efc|all] [--gpus N]
+                    [--faults none|drain|slowdown|churn|autoscale] [--fault-at SECS]
                     [--preempt-cost SECS] [--cache-dir DIR]
   kernelet trace record --scenario NAME [--mix M] [--gpu G] [--instances N]
                     [--load X] [--qos-mix F] [--deadline-scale S] [--seed N]
@@ -121,6 +122,16 @@ sloaware / efc). efc routes latency kernels by calibrated projected
 completion (per-device ETA model) and schedules its devices with
 mid-slice preemption; `--preempt-cost SECS` overrides the preemption
 cost (also applies to the single-device deadline policy row).
+
+`--faults` injects a deterministic fault drill into the fleet run
+(drain = remove the last device at --fault-at seconds, re-routing its
+pending kernels; slowdown = degrade the last device 3x; churn = 3
+seeded mixed events; autoscale = start at half the fleet and let
+sustained shedding/idleness grow/shrink the active set) and appends an
+availability row per policy: phase goodput around the fault, re-routed
+and stranded counts, autoscaler activity. `--faults none` (the
+default) runs the untouched pipeline. See `figure resilience` for the
+full drill table.
 
 `trace record` replays the scenario through the engine and dumps the
 realized arrival sequence (app, t, grid, class, deadline) as a JSON
@@ -633,6 +644,20 @@ fn cmd_schedule_fleet(
         scenario != "trace",
         "--dispatch replays generated scenarios only (trace replay is single-device)"
     );
+    let fault_mode = flag_value(args, "--faults").unwrap_or("none");
+    let fault_spec = match FaultSpec::from_name(fault_mode) {
+        Some(spec) => spec,
+        None => bail!(
+            "unknown --faults {fault_mode} (valid: {})",
+            FaultSpec::NAMES.join(" ")
+        ),
+    };
+    let fault_at: f64 = flag_value(args, "--fault-at").unwrap_or("0.05").parse()?;
+    anyhow::ensure!(
+        fault_at.is_finite() && fault_at >= 0.0,
+        "--fault-at {fault_at} must be a non-negative time in seconds"
+    );
+    let faults = fault_spec.build(gpus, fault_at, seed);
     let coord = Coordinator::new(gpu);
     let capacity = base_capacity_kps(&coord, mix);
     let offered = load * capacity * gpus as f64;
@@ -681,6 +706,9 @@ fn cmd_schedule_fleet(
         if let Some((spec, _)) = &admission {
             dispatcher = dispatcher.with_admission(*spec, ShedPoint::Router);
         }
+        if let Some(plan) = &faults {
+            dispatcher = dispatcher.with_faults(plan.clone());
+        }
         let mut source = workload.source(capacity * gpus as f64)?;
         let rep = dispatcher.run_source(source.as_mut());
         let fleet = rep.fleet_qos();
@@ -699,6 +727,24 @@ fn cmd_schedule_fleet(
             rep.reports.iter().map(|r| r.preemptions).sum::<u64>(),
             eta_err
         );
+        if faults.is_some() {
+            let res = &rep.resilience;
+            let rerouted: usize = res.events.iter().map(|e| e.rerouted).sum();
+            println!(
+                "  resilience[{fault_mode}]: {} event(s) fired; goodput pre/during/post = \
+                 {:.1}/{:.1}/{:.1} kernels/s; {rerouted} re-routed, {} stranded; \
+                 autoscaler +{}/-{} (peak {} active, {} at settle)",
+                res.events.len(),
+                res.goodput_pre_kps,
+                res.goodput_during_kps,
+                res.goodput_post_kps,
+                res.stranded,
+                res.scale_ups,
+                res.scale_downs,
+                res.peak_active_devices,
+                res.final_active_devices,
+            );
+        }
         if !tenants.is_single() {
             print_tenant_rows(&rep.tenants);
         }

@@ -334,7 +334,10 @@ impl ArrivalSource for BurstySource {
 // ---------------------------------------------------------------------
 
 /// Sinusoidal rate curve λ(t) = base · (1 + amp · sin(2πt/period)),
-/// sampled exactly by thinning a Poisson process at λ_max.
+/// sampled exactly by thinning a Poisson process at λ_max. A
+/// flash-crowd surge window ([`DiurnalSource::with_surge`]) can
+/// multiply the instantaneous rate inside a timed interval — the
+/// arrival-side half of the fleet resilience drills.
 pub struct DiurnalSource {
     specs: Vec<KernelSpec>,
     rng: Xoshiro256,
@@ -347,6 +350,10 @@ pub struct DiurnalSource {
     t: f64,
     pending: Option<KernelInstance>,
     qos: QosMix,
+    /// Flash-crowd window `(start_secs, duration_secs, factor)`;
+    /// `None` (the default) leaves every draw bit-identical to the
+    /// surge-free source.
+    surge: Option<(f64, f64, f64)>,
 }
 
 impl DiurnalSource {
@@ -366,6 +373,7 @@ impl DiurnalSource {
             t: 0.0,
             pending: None,
             qos: QosMix::ALL_BATCH,
+            surge: None,
         };
         src.pending = src.generate();
         src
@@ -377,8 +385,31 @@ impl DiurnalSource {
         self
     }
 
+    /// Layer a flash-crowd surge on the diurnal curve (builder):
+    /// inside `[at_secs, at_secs + duration_secs)` the instantaneous
+    /// rate is multiplied by `factor`. The thinning bound is raised to
+    /// cover the surged peak, so sampling stays exact over the window.
+    /// Call right after construction: the one pre-drawn head arrival
+    /// was thinned against the un-surged bound (exact whenever it
+    /// precedes the window, which a mid-run surge guarantees).
+    pub fn with_surge(mut self, at_secs: f64, duration_secs: f64, factor: f64) -> Self {
+        assert!(at_secs >= 0.0 && duration_secs > 0.0, "bad surge window");
+        assert!(
+            factor >= 1.0 && factor.is_finite(),
+            "surge factor {factor} < 1 would be a lull, not a crowd"
+        );
+        self.surge = Some((at_secs, duration_secs, factor));
+        self.lambda_max = self.base * (1.0 + self.amp) * factor;
+        self
+    }
+
     fn rate_at(&self, t: f64) -> f64 {
-        self.base * (1.0 + self.amp * (2.0 * std::f64::consts::PI * t / self.period).sin())
+        let diurnal =
+            self.base * (1.0 + self.amp * (2.0 * std::f64::consts::PI * t / self.period).sin());
+        match self.surge {
+            Some((at, dur, factor)) if t >= at && t < at + dur => diurnal * factor,
+            _ => diurnal,
+        }
     }
 
     fn generate(&mut self) -> Option<KernelInstance> {
@@ -399,7 +430,11 @@ impl DiurnalSource {
 
 impl ArrivalSource for DiurnalSource {
     fn scenario(&self) -> &'static str {
-        "diurnal"
+        if self.surge.is_some() {
+            "flashcrowd"
+        } else {
+            "diurnal"
+        }
     }
 
     fn peek_time(&self) -> Option<f64> {
@@ -981,8 +1016,8 @@ impl<'a> JsonCursor<'a> {
 // ---------------------------------------------------------------------
 
 /// Names accepted by [`scenario_source`].
-pub const SCENARIO_NAMES: [&str; 6] =
-    ["saturated", "poisson", "bursty", "diurnal", "heavytail", "closed"];
+pub const SCENARIO_NAMES: [&str; 7] =
+    ["saturated", "poisson", "bursty", "diurnal", "heavytail", "closed", "flashcrowd"];
 
 /// Build a named scenario over `mix` offering roughly `agg_rate_kps`
 /// kernels/sec in aggregate, with `per_app` instances per application
@@ -1039,6 +1074,17 @@ pub fn scenario_source(
         ),
         "heavytail" => {
             Box::new(HeavyTailSource::new(mix, total, agg_rate_kps, 1.1, seed).with_qos(qos))
+        }
+        // The diurnal curve with a flash-crowd layered on: 3× the
+        // instantaneous rate across the middle fifth of the run's
+        // expected span — the arrival-side fleet-resilience drill.
+        "flashcrowd" => {
+            let span = total.max(1) as f64 / agg_rate_kps;
+            Box::new(
+                DiurnalSource::new(mix, total, agg_rate_kps, 0.8, span / 3.0, seed)
+                    .with_surge(0.4 * span, 0.2 * span, 3.0)
+                    .with_qos(qos),
+            )
         }
         // 8 clients whose think-limited aggregate rate is the target;
         // service time then throttles the realized rate below it.
@@ -1138,6 +1184,34 @@ mod tests {
         let peak = out.iter().filter(|k| (0.0..0.5).contains(&phase(k.arrival_time))).count();
         let trough = out.len() - peak;
         assert!(peak > trough * 2, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn flashcrowd_surge_compresses_the_window() {
+        // The scenario surges the middle fifth of the expected span at
+        // 3× — that window must hold far more than a fifth of all
+        // arrivals (expected share 3·0.2/(0.8 + 3·0.2) ≈ 0.43).
+        let mut src =
+            scenario_source("flashcrowd", Mix::MIX, 50, 400.0, 11, QosMix::ALL_BATCH).unwrap();
+        assert_eq!(src.scenario(), "flashcrowd");
+        let out = drain(src.as_mut());
+        assert_eq!(out.len(), 200);
+        let span = 200.0 / 400.0;
+        let (w0, w1) = (0.4 * span, 0.6 * span);
+        let in_window =
+            out.iter().filter(|k| k.arrival_time >= w0 && k.arrival_time < w1).count();
+        assert!(
+            in_window * 10 > out.len() * 3,
+            "surge window holds {in_window}/{} arrivals",
+            out.len()
+        );
+        // Surge-free construction is untouched: plain diurnal still
+        // reports its own scenario and the same seed still replays.
+        let a = drain(&mut DiurnalSource::new(Mix::MIX, 100, 400.0, 0.8, 0.1, 11));
+        let b = drain(&mut DiurnalSource::new(Mix::MIX, 100, 400.0, 0.8, 0.1, 11));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_time.to_bits(), y.arrival_time.to_bits());
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Smoke + shape tests over the figure generators the unit tests do not
 //! already cover (kept quick: FigOptions::quick()).
 
-use kernelet::figures::{generate, FigOptions};
+use kernelet::figures::{generate, FigOptions, ALL_IDS};
 
 #[test]
 fn fig4_correlations_positive() {
@@ -70,6 +70,55 @@ fn fig12_cp_prediction_correlates() {
     // the IPC-level agreement; the paper's claim is only that it
     // suffices to rank schedules (verified end-to-end by fig13).
     assert!(corr > 0.25, "corr={corr}");
+}
+
+#[test]
+fn figure_registry_is_complete() {
+    // Adding a figure means growing ALL_IDS; this pins the count so a
+    // new generator cannot be wired into `generate` but left out of
+    // `figure all` (or vice versa — generate() rejects unknown ids).
+    assert_eq!(ALL_IDS.len(), 20, "figure registry drifted: {ALL_IDS:?}");
+    for id in ["routing", "tenancy", "resilience"] {
+        assert!(ALL_IDS.contains(&id), "{id} missing from ALL_IDS");
+    }
+}
+
+#[test]
+fn routing_figure_smokes() {
+    let opts = FigOptions { instances_per_app: 6, mc_samples: 1, ..Default::default() };
+    let r = generate("routing", &opts).unwrap();
+    assert_eq!(r.id, "routing");
+    assert!(!r.rows.is_empty());
+    let policy = r.col("policy");
+    for p in ["roundrobin", "sloaware", "efc"] {
+        assert!(r.rows.iter().any(|row| row[policy] == p), "missing policy {p}");
+    }
+}
+
+#[test]
+fn tenancy_figure_smokes() {
+    let opts = FigOptions { instances_per_app: 6, mc_samples: 1, ..Default::default() };
+    let r = generate("tenancy", &opts).unwrap();
+    assert_eq!(r.id, "tenancy");
+    assert!(!r.rows.is_empty());
+    // Every row carries a tenant label and a parseable goodput.
+    let goodput = r.column_f64("goodput_kps");
+    assert!(goodput.iter().all(|g| g.is_finite() && *g >= 0.0));
+}
+
+#[test]
+fn resilience_figure_smokes() {
+    let opts = FigOptions { instances_per_app: 6, mc_samples: 1, ..Default::default() };
+    let r = generate("resilience", &opts).unwrap();
+    assert_eq!(r.id, "resilience");
+    // 3 drills x 2 policies + the flash-crowd pair.
+    assert_eq!(r.rows.len(), 8);
+    let (mode, stranded) = (r.col("mode"), r.col("stranded"));
+    for m in ["none", "drain", "slowdown", "flash-fixed", "flash-auto"] {
+        assert!(r.rows.iter().any(|row| row[mode] == m), "missing mode {m}");
+    }
+    // The control rows ran an empty plan: nothing stranded anywhere.
+    assert!(r.rows.iter().all(|row| row[stranded] == "0"), "stranded kernels in smoke run");
 }
 
 #[test]

@@ -220,8 +220,8 @@ fn test_qos(coord: &Coordinator) -> QosMix {
 }
 
 /// Tentpole pin: the EDF-indexed `DeadlineSelector` is decision- and
-/// report-identical to the frozen scan-based predecessor on all six
-/// arrival scenarios, with and without mid-slice preemption.
+/// report-identical to the frozen scan-based predecessor on every
+/// arrival scenario, with and without mid-slice preemption.
 #[test]
 fn indexed_deadline_selector_matches_scan_reference_on_all_scenarios() {
     let coord = Coordinator::new(&GpuConfig::c2050());

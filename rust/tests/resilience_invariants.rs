@@ -1,0 +1,393 @@
+//! Fleet-resilience invariants: the differential pin (an EMPTY
+//! [`FaultPlan`] installed on the dispatcher is bit-identical to the
+//! faultless dispatcher on every scenario × routing policy, preemption
+//! on and off), kernel conservation under seeded churn (every arrival
+//! is completed, shed, deferred, or stranded — and counted exactly
+//! once), the drain drill (withdrawn work re-routes to survivors;
+//! draining the *last* device strands instead of losing silently), the
+//! slowdown drill (only ETA calibration notices a degraded device, and
+//! the calibrated router beats the uncalibrated one on the victim
+//! tail), and the autoscaler drills (scale-up on sustained shedding,
+//! scale-down on idle).
+
+use kernelet::config::{DispatchSpec, GpuConfig};
+use kernelet::coordinator::{
+    AdmissionSpec, AutoscalerSpec, Coordinator, DispatchPolicy, FaultEvent, FaultPlan,
+    MultiGpuDispatcher, MultiGpuReport, PreemptCost, ShedPoint,
+};
+use kernelet::figures::throughput::base_capacity_kps;
+use kernelet::workload::{scenario_source, Mix, QosMix, SCENARIO_NAMES};
+
+const SEED: u64 = 0xFA_0807;
+
+/// Fleet-wide completed-kernel count.
+fn completed(rep: &MultiGpuReport) -> usize {
+    rep.reports.iter().map(|r| r.kernels_completed).sum()
+}
+
+/// The conservation identity every fault-injected run must satisfy:
+/// `completed + shed + deferred_unfinished + stranded + incomplete`
+/// partitions the arrivals exactly — churn may move kernels between
+/// devices, but never duplicates or loses one.
+fn assert_conserved(rep: &MultiGpuReport, arrivals: usize, label: &str) {
+    let incomplete: usize = rep.reports.iter().map(|r| r.incomplete).sum();
+    assert_eq!(
+        completed(rep)
+            + rep.admission.total_shed()
+            + rep.admission.total_deferred_unfinished()
+            + rep.resilience.stranded
+            + incomplete,
+        arrivals,
+        "{label}: kernels not conserved"
+    );
+    // Counted exactly once: fleet-wide completion ids are disjoint
+    // across devices (a re-routed kernel completes on exactly one).
+    let mut ids: Vec<u64> =
+        rep.reports.iter().flat_map(|r| r.completion.keys().copied()).collect();
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "{label}: a kernel completed on two devices");
+    assert_eq!(n, completed(rep), "{label}: completion log disagrees with counts");
+}
+
+/// DIFFERENTIAL (the tentpole's zero-cost pin): installing an empty
+/// [`FaultPlan`] must leave every run bit-identical to the faultless
+/// dispatcher — the `ScaledTiming` wrappers pass through untouched at
+/// scale 1.0, the active list covers the whole fleet, and the
+/// resilience ledger only observes. Checked on every scenario ×
+/// {roundrobin, sloaware, efc} × preemption {off, on}.
+#[test]
+fn empty_fault_plan_is_bit_identical_on_all_scenarios() {
+    let gpu = GpuConfig::c2050();
+    let coord = Coordinator::new(&gpu);
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let qos = QosMix::latency_share(0.3, 4.0 / capacity);
+    let gpus = vec![GpuConfig::c2050(), GpuConfig::c2050()];
+    for scenario in SCENARIO_NAMES {
+        for policy in ["roundrobin", "sloaware", "efc"] {
+            for preempt in [false, true] {
+                let label = format!("{scenario}/{policy}/preempt={preempt}");
+                let build = || {
+                    let mut d = MultiGpuDispatcher::new(
+                        &gpus,
+                        DispatchSpec::from_name(policy).expect("valid policy").build(),
+                    );
+                    if preempt {
+                        d = d.with_preemption(PreemptCost::for_gpu(&gpu));
+                    }
+                    d
+                };
+                let mk = || {
+                    scenario_source(scenario, Mix::MIX, 4, 2.0 * capacity, SEED, qos)
+                        .expect("valid scenario")
+                };
+                let plain = build().run_source(mk().as_mut());
+                let pinned = build().with_faults(FaultPlan::new()).run_source(mk().as_mut());
+                assert_eq!(
+                    pinned.makespan_secs.to_bits(),
+                    plain.makespan_secs.to_bits(),
+                    "{label}: makespan"
+                );
+                assert_eq!(
+                    pinned.throughput_kps.to_bits(),
+                    plain.throughput_kps.to_bits(),
+                    "{label}: throughput"
+                );
+                assert_eq!(
+                    pinned.goodput_kps.to_bits(),
+                    plain.goodput_kps.to_bits(),
+                    "{label}: goodput"
+                );
+                assert_eq!(pinned.per_device, plain.per_device, "{label}: per-device");
+                assert_eq!(pinned.eta, plain.eta, "{label}: eta calibration");
+                assert_eq!(pinned.tenants, plain.tenants, "{label}: tenant rows");
+                assert_eq!(pinned.shed_retries, plain.shed_retries, "{label}: retries");
+                assert_eq!(
+                    pinned.reports.len(),
+                    plain.reports.len(),
+                    "{label}: report count"
+                );
+                for (a, b) in pinned.reports.iter().zip(&plain.reports) {
+                    assert_eq!(a.total_cycles, b.total_cycles, "{label}: total_cycles");
+                    assert_eq!(a.completion, b.completion, "{label}: completion map");
+                    assert_eq!(a.slice_trace, b.slice_trace, "{label}: slice trace");
+                    assert_eq!(a.queue_depth, b.queue_depth, "{label}: queue depth");
+                    assert_eq!(a.qos, b.qos, "{label}: per-class stats");
+                    assert_eq!(a.preemptions, b.preemptions, "{label}: preemptions");
+                    assert_eq!(a.incomplete, b.incomplete, "{label}: incomplete");
+                }
+                // The inert plan observed but changed nothing: no
+                // events, nothing stranded, and the pre-fault phase is
+                // the whole run.
+                assert!(pinned.resilience.events.is_empty(), "{label}: events fired");
+                assert_eq!(pinned.resilience.stranded, 0, "{label}: stranded");
+                assert_eq!(pinned.resilience.scale_ups, 0, "{label}: scale-ups");
+                assert!(
+                    (pinned.resilience.goodput_pre_kps - pinned.goodput_kps).abs() < 1e-9,
+                    "{label}: pre-fault goodput {} != run goodput {}",
+                    pinned.resilience.goodput_pre_kps,
+                    pinned.goodput_kps
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: under seeded mixed churn (drains + slowdowns) the fleet
+/// never loses or duplicates a kernel — with and without a router
+/// admission gate, on both an oblivious and a calibrated router.
+#[test]
+fn seeded_churn_conserves_every_kernel() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let gpus = vec![GpuConfig::c2050(); 3];
+    let per_app = 12;
+    let arrivals = per_app as usize * Mix::MIX.apps().len();
+    let rate = 1.5 * capacity * gpus.len() as f64;
+    let span = arrivals as f64 / rate;
+    for churn_seed in [1u64, 2, 3] {
+        let plan = FaultPlan::seeded_churn(SEED ^ churn_seed, gpus.len(), 3, span);
+        // Device 0 is the churn survivor, so the fleet always keeps a
+        // route and nothing is ever stranded by these plans.
+        for ev in plan.events() {
+            if let FaultEvent::Drain { device, .. } = ev {
+                assert_ne!(*device, 0, "churn drained the survivor: {ev:?}");
+            }
+        }
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::EarliestFeasible] {
+            for gated in [false, true] {
+                let label = format!("churn{churn_seed}/{policy:?}/gated={gated}");
+                let mut dispatcher = MultiGpuDispatcher::new(&gpus, policy)
+                    .with_faults(plan.clone());
+                if gated {
+                    dispatcher = dispatcher
+                        .with_admission(AdmissionSpec::BacklogCap { cap: 6 }, ShedPoint::Router);
+                }
+                let mut source =
+                    scenario_source("poisson", Mix::MIX, per_app, rate, SEED ^ 4, QosMix::ALL_BATCH)
+                        .expect("valid scenario");
+                let rep = dispatcher.run_source(source.as_mut());
+                assert_conserved(&rep, arrivals, &label);
+                // Event-level stranding sums to the fleet number (the
+                // survivor guarantees no arrival-time stranding).
+                let event_stranded: usize =
+                    rep.resilience.events.iter().map(|e| e.stranded).sum();
+                assert_eq!(rep.resilience.stranded, event_stranded, "{label}: stranded split");
+                assert_eq!(rep.resilience.stranded, 0, "{label}: churn stranded work");
+            }
+        }
+    }
+}
+
+/// The drain drill, happy path: losing one of two devices mid-run
+/// re-routes its withdrawn pending set to the survivor and every
+/// kernel still completes.
+#[test]
+fn drain_reroutes_pending_work_to_the_survivor() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let gpus = vec![GpuConfig::c2050(), GpuConfig::c2050()];
+    let per_app = 15;
+    let arrivals = per_app as usize * Mix::MIX.apps().len();
+    let rate = 2.0 * capacity * gpus.len() as f64;
+    let span = arrivals as f64 / rate;
+    // 2x overload guarantees a backlog on the drained device at onset.
+    let plan = FaultPlan::new()
+        .with_event(FaultEvent::Drain { at_secs: 0.4 * span, device: 1 });
+    let dispatcher =
+        MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin).with_faults(plan);
+    let mut source =
+        scenario_source("poisson", Mix::MIX, per_app, rate, SEED ^ 5, QosMix::ALL_BATCH)
+            .expect("valid scenario");
+    let rep = dispatcher.run_source(source.as_mut());
+    assert_eq!(rep.resilience.events.len(), 1);
+    let ev = &rep.resilience.events[0];
+    assert_eq!(ev.kind, "drain");
+    assert_eq!(ev.device, 1);
+    assert!(ev.rerouted >= 1, "drain withdrew nothing: {ev:?}");
+    assert_eq!(ev.stranded, 0, "a survivor existed, nothing may strand");
+    assert_eq!(rep.resilience.stranded, 0);
+    assert!(
+        rep.resilience.reroute_latency_mean_secs > 0.0,
+        "re-routed kernels completed, so the re-route latency is positive"
+    );
+    // Everything completes: the withdrawn work landed on the survivor.
+    assert_eq!(completed(&rep), arrivals, "re-routed kernels lost");
+    assert_conserved(&rep, arrivals, "drain");
+    assert!(
+        rep.per_device[0].1 > rep.per_device[1].1,
+        "the survivor absorbed the re-routes: {:?}",
+        rep.per_device
+    );
+}
+
+/// The drain drill, edge path: draining the *last* device strands its
+/// withdrawn pending set and every later arrival — counted and
+/// reported, never silently lost.
+#[test]
+fn draining_the_last_device_strands_instead_of_losing() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let gpus = vec![GpuConfig::c2050()];
+    let per_app = 15;
+    let arrivals = per_app as usize * Mix::MIX.apps().len();
+    let rate = 2.0 * capacity;
+    let span = arrivals as f64 / rate;
+    let plan = FaultPlan::new()
+        .with_event(FaultEvent::Drain { at_secs: 0.3 * span, device: 0 });
+    let dispatcher =
+        MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin).with_faults(plan);
+    let mut source =
+        scenario_source("poisson", Mix::MIX, per_app, rate, SEED ^ 6, QosMix::ALL_BATCH)
+            .expect("valid scenario");
+    let rep = dispatcher.run_source(source.as_mut());
+    let ev = &rep.resilience.events[0];
+    assert_eq!(ev.kind, "drain");
+    assert_eq!(ev.rerouted, 0, "no survivor can take re-routes: {ev:?}");
+    assert!(rep.resilience.stranded > 0, "a fully drained fleet must strand");
+    // The stranded count is the event's withdrawals plus the arrivals
+    // that found no active device afterwards.
+    assert!(rep.resilience.stranded >= ev.stranded, "{:?}", rep.resilience);
+    assert!(completed(&rep) > 0, "the pre-drain phase completed work");
+    assert_conserved(&rep, arrivals, "last-device drain");
+}
+
+/// The slowdown drill (the tentpole's calibration story): a 3× fault
+/// on one of two `efc` devices is invisible to the routing-side price
+/// model — only ETA calibration can notice it. The degraded device's
+/// learned correction must grow past the healthy device's, its share
+/// of routed kernels must drop versus the fault-free control, and the
+/// calibrated router must beat the uncalibrated `SloAware` fleet on
+/// the latency-class tail for the same seed and the same fault.
+#[test]
+fn slowdown_is_detected_by_calibration_and_routed_around() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let qos = QosMix::latency_share(0.3, 4.0 / capacity);
+    let gpus = vec![GpuConfig::c2050(), GpuConfig::c2050()];
+    let per_app = 30;
+    let arrivals = per_app as usize * Mix::MIX.apps().len();
+    let rate = 1.5 * capacity * gpus.len() as f64;
+    let span = arrivals as f64 / rate;
+    let fault = FaultPlan::new().with_event(FaultEvent::Slowdown {
+        at_secs: 0.3 * span,
+        device: 1,
+        factor: 3.0,
+    });
+    let run = |policy: DispatchPolicy, plan: FaultPlan| {
+        let mut source =
+            scenario_source("poisson", Mix::MIX, per_app, rate, SEED ^ 7, qos)
+                .expect("valid scenario");
+        MultiGpuDispatcher::new(&gpus, policy).with_faults(plan).run_source(source.as_mut())
+    };
+    let faulted = run(DispatchPolicy::EarliestFeasible, fault.clone());
+    let control = run(DispatchPolicy::EarliestFeasible, FaultPlan::new());
+    let blind = run(DispatchPolicy::SloAware, fault);
+
+    assert_eq!(faulted.resilience.events[0].kind, "slowdown");
+    assert_conserved(&faulted, arrivals, "slowdown/efc");
+
+    // Calibration noticed: the degraded device's correction grew past
+    // the healthy device's AND past its own fault-free baseline.
+    assert_eq!(faulted.eta.len(), 2, "efc reports per-device calibration");
+    let (healthy, degraded) = (faulted.eta[0].correction, faulted.eta[1].correction);
+    assert!(
+        degraded > healthy,
+        "calibration missed the slowdown: degraded {degraded} !> healthy {healthy}"
+    );
+    assert!(
+        degraded > control.eta[1].correction,
+        "correction did not grow over the fault-free baseline: {degraded} vs {}",
+        control.eta[1].correction
+    );
+
+    // Routing followed the calibration: the degraded device's share of
+    // routed kernels dropped versus the fault-free control.
+    assert!(
+        faulted.per_device[1].1 < control.per_device[1].1,
+        "router kept feeding the degraded device: {:?} vs control {:?}",
+        faulted.per_device,
+        control.per_device
+    );
+
+    // And it paid off where the SLO lives: the calibrated router's
+    // latency-class p99 beats the uncalibrated SloAware fleet that saw
+    // the identical arrivals and the identical fault.
+    let (p_efc, p_blind) = (
+        faulted.fleet_qos().latency.p99_turnaround_secs,
+        blind.fleet_qos().latency.p99_turnaround_secs,
+    );
+    assert!(
+        p_efc < p_blind,
+        "calibrated p99 {p_efc} !< uncalibrated p99 {p_blind}"
+    );
+}
+
+/// The autoscaler's scale-up signal: sustained router shedding joins a
+/// warm spare, which then serves real work.
+#[test]
+fn autoscaler_joins_a_spare_under_sustained_shedding() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let gpus = vec![GpuConfig::c2050(), GpuConfig::c2050()];
+    let per_app = 40;
+    let arrivals = per_app as usize * Mix::MIX.apps().len();
+    // 3x one device's capacity: the single active device must shed.
+    let rate = 3.0 * capacity;
+    let span = arrivals as f64 / rate;
+    let plan = FaultPlan::new()
+        .with_autoscaler(AutoscalerSpec::new(1, span / 30.0).with_shed_threshold(1));
+    let dispatcher = MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin)
+        .with_admission(AdmissionSpec::BacklogCap { cap: 4 }, ShedPoint::Router)
+        .with_faults(plan);
+    let mut source =
+        scenario_source("poisson", Mix::MIX, per_app, rate, SEED ^ 8, QosMix::ALL_BATCH)
+            .expect("valid scenario");
+    let rep = dispatcher.run_source(source.as_mut());
+    assert!(rep.admission.total_shed() > 0, "craft broken: overload never shed");
+    assert!(rep.resilience.scale_ups >= 1, "sustained shedding never scaled up");
+    assert_eq!(rep.resilience.peak_active_devices, 2, "the spare never counted active");
+    assert!(
+        rep.resilience.events.iter().any(|e| e.kind == "scale-up"),
+        "scale-up left no event record"
+    );
+    assert!(rep.per_device[1].1 > 0, "the joined spare served nothing");
+    assert_conserved(&rep, arrivals, "autoscale-up");
+}
+
+/// The autoscaler's scale-down signal: a device idle at consecutive
+/// checks retires from the active set (never below one device), and
+/// the remaining device still completes everything.
+#[test]
+fn autoscaler_retires_an_idle_device() {
+    let coord = Coordinator::new(&GpuConfig::c2050());
+    let capacity = base_capacity_kps(&coord, Mix::MIX);
+    let gpus = vec![GpuConfig::c2050(), GpuConfig::c2050()];
+    let per_app = 10;
+    let arrivals = per_app as usize * Mix::MIX.apps().len();
+    // Half of one device's capacity across two devices: both idle most
+    // of the time, so an idle check is guaranteed early.
+    let rate = 0.5 * capacity;
+    let span = arrivals as f64 / rate;
+    let plan = FaultPlan::new()
+        .with_autoscaler(AutoscalerSpec::new(2, span / 80.0).with_idle_intervals(1));
+    let dispatcher =
+        MultiGpuDispatcher::new(&gpus, DispatchPolicy::RoundRobin).with_faults(plan);
+    let mut source =
+        scenario_source("poisson", Mix::MIX, per_app, rate, SEED ^ 9, QosMix::ALL_BATCH)
+            .expect("valid scenario");
+    let rep = dispatcher.run_source(source.as_mut());
+    // Without an admission gate nothing sheds, so the retired device
+    // can never rejoin and exactly one scale-down is possible (the
+    // floor of one active device blocks a second).
+    assert_eq!(rep.resilience.scale_ups, 0, "no sheds, no scale-up signal");
+    assert_eq!(rep.resilience.scale_downs, 1, "idle device never retired");
+    assert_eq!(rep.resilience.final_active_devices, 1, "{:?}", rep.resilience);
+    assert!(
+        rep.resilience.events.iter().any(|e| e.kind == "scale-down"),
+        "scale-down left no event record"
+    );
+    assert_eq!(completed(&rep), arrivals, "the surviving device dropped work");
+    assert_conserved(&rep, arrivals, "autoscale-down");
+}

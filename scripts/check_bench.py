@@ -6,7 +6,7 @@ Stdlib only (runs in containers with nothing but python3). Two jobs:
 1. **Schema + acceptance checks** for every bench kind the repo emits
    (`BENCH_model.json`, `BENCH_scheduling.json`, `BENCH_throughput.json`,
    `BENCH_qos.json`, `BENCH_admission.json`, `BENCH_routing.json`,
-   `BENCH_tenancy.json`):
+   `BENCH_tenancy.json`, `BENCH_resilience.json`):
    structure, coverage
    (scenarios x policies x fleets), and the semantic acceptance bars —
    the deadline policy must not lose to class-blind Kernelet on the
@@ -15,10 +15,16 @@ Stdlib only (runs in containers with nothing but python3). Two jobs:
    the per-class completed + shed + deferred_unfinished + incomplete
    counts summing exactly to arrivals in every cell (admission),
    ETA-driven routing (`efc`) must not lose to `sloaware` on fleet
-   latency-class deadline misses at the bursty peak load (routing), and
+   latency-class deadline misses at the bursty peak load (routing),
    the weighted-fair gate must keep the flooded victim tenant inside
    its weight band and never lose to the tenant-blind deadline
-   selector on the victim's p99 at the bursty peak (tenancy).
+   selector on the victim's p99 at the bursty peak (tenancy), and the
+   fault drills must stay available — a mid-run drain strands nothing,
+   re-routes at least one kernel and holds during-fault goodput at
+   >= 50% of pre-fault, a 3x slowdown is detected by ETA calibration
+   (the degraded device's correction exceeds every healthy device's),
+   and the autoscaled flash-crowd fleet scales up and strictly beats
+   the fixed fleet on goodput (resilience).
 
 2. **Baseline comparison**: fresh files are compared against committed
    baselines (default `scripts/baselines/`) with a +/-15% tolerance on
@@ -400,6 +406,93 @@ def validate_tenancy(d, name):
         fail(f"{name}: bursty deadline/fairshare curves missing")
 
 
+def validate_resilience(d, name):
+    check(d.get("bench") == "resilience", f"{name}: wrong bench tag {d.get('bench')!r}")
+    check(0.0 < d.get("latency_fraction", 0) <= 1.0, f"{name}: bad latency_fraction")
+    check(d.get("deadline_scale", 0) > 0.0, f"{name}: bad deadline_scale")
+    check(d.get("load", 0) > 0.0, f"{name}: bad load")
+    gpus = d.get("gpus", 0)
+    check(gpus >= 2, f"{name}: resilience needs a fleet, got gpus={gpus}")
+    drills = d.get("drills", [])
+    by = {(x.get("mode"), x.get("policy")): x for x in drills}
+    modes = {m for (m, _p) in by}
+    check(
+        modes >= {"none", "drain", "slowdown"},
+        f"{name}: missing drills: {sorted(modes)}",
+    )
+    for (mode, policy), x in by.items():
+        label = f"{name}: {mode}/{policy}"
+        check(x.get("kernels", 0) > 0, f"{label}: dead drill")
+        for k in ("goodput_kps", "pre_kps", "during_kps", "post_kps"):
+            v = x.get(k)
+            check(isinstance(v, (int, float)) and v >= 0, f"{label}: bad {k}: {v!r}")
+        check(x.get("stranded", -1) >= 0, f"{label}: bad stranded count")
+        check(x.get("rerouted", -1) >= 0, f"{label}: bad rerouted count")
+        check(x.get("reroute_latency_s", -1) >= 0, f"{label}: negative re-route latency")
+        corr = x.get("corrections", [])
+        if policy == "efc":
+            # Calibration must be observable: one correction per device.
+            check(len(corr) == gpus, f"{label}: corrections {len(corr)} != gpus {gpus}")
+            for c in corr:
+                check(c > 0.0, f"{label}: non-positive eta correction")
+        else:
+            check(not corr, f"{label}: non-efc drill carries corrections")
+        if mode == "none":
+            # The empty plan is inert: no events, nothing re-routed.
+            check(
+                x.get("rerouted") == 0 and x.get("stranded") == 0,
+                f"{label}: empty fault plan re-routed or stranded kernels",
+            )
+
+    # Acceptance (availability bar): losing a device mid-run must not
+    # collapse the fleet — nothing stranded, at least one kernel
+    # re-routed, during-fault goodput >= 50% of pre-fault.
+    drain = by.get(("drain", "efc"))
+    if check(drain is not None, f"{name}: drain/efc drill missing"):
+        check(drain["stranded"] == 0, f"{name}: drain stranded {drain['stranded']} kernels")
+        check(drain["rerouted"] >= 1, f"{name}: drain re-routed nothing")
+        check(
+            drain["during_kps"] >= 0.5 * drain["pre_kps"],
+            f"{name}: drain goodput collapsed: during {drain['during_kps']} < half of "
+            f"pre-fault {drain['pre_kps']}",
+        )
+
+    # Acceptance (detection bar): a 3x slowdown on the last device must
+    # show up in ETA calibration — its correction exceeds every healthy
+    # device's.
+    slow = by.get(("slowdown", "efc"))
+    if check(slow is not None, f"{name}: slowdown/efc drill missing"):
+        corr = slow.get("corrections", [])
+        if check(len(corr) == gpus, f"{name}: slowdown corrections incomplete: {corr}"):
+            degraded, healthy = corr[-1], corr[:-1]
+            check(
+                all(degraded > c for c in healthy),
+                f"{name}: slowdown undetected: degraded correction {degraded} does not "
+                f"exceed healthy {healthy}",
+            )
+
+    # Acceptance (elasticity bar): under the flash crowd the autoscaler
+    # must engage and the elastic fleet must strictly beat the fixed one
+    # on goodput.
+    fc = d.get("flashcrowd")
+    if check(isinstance(fc, dict), f"{name}: missing flashcrowd block"):
+        check(fc.get("fixed_gpus", 0) >= 1, f"{name}: bad flashcrowd.fixed_gpus")
+        check(
+            fc.get("auto_gpus", 0) > fc.get("fixed_gpus", 0),
+            f"{name}: elastic fleet has no spare devices",
+        )
+        check(fc.get("scale_ups", 0) >= 1, f"{name}: autoscaler never scaled up")
+        check(
+            fc.get("peak_active", 0) > fc.get("fixed_gpus", 0),
+            f"{name}: autoscaler never exceeded the fixed fleet size",
+        )
+        check(
+            fc.get("autoscaled_goodput_kps", 0) > fc.get("fixed_goodput_kps", float("inf")),
+            f"{name}: autoscaled goodput {fc.get('autoscaled_goodput_kps')} does not beat "
+            f"fixed {fc.get('fixed_goodput_kps')}",
+        )
+
+
 MODEL_COUNTERS = (
     "memo_hits",
     "memo_misses",
@@ -462,6 +555,7 @@ VALIDATORS = {
     "admission": validate_admission,
     "routing": validate_routing,
     "tenancy": validate_tenancy,
+    "resilience": validate_resilience,
 }
 
 
@@ -668,6 +762,28 @@ def _tenancy_point(load, policy):
     }
 
 
+def _resilience_drill(mode, policy):
+    x = {
+        "mode": mode,
+        "policy": policy,
+        "kernels": 100,
+        "goodput_kps": 90.0,
+        "pre_kps": 100.0,
+        "during_kps": 100.0 if mode == "none" else 72.0,
+        "post_kps": 100.0 if mode == "none" else 85.0,
+        "rerouted": 12 if mode == "drain" else 0,
+        "stranded": 0,
+        "reroute_latency_s": 0.004 if mode == "drain" else 0.0,
+        "deadline_misses": 3,
+        "corrections": [],
+    }
+    if policy == "efc":
+        x["corrections"] = (
+            [1.0, 1.0, 1.0, 2.8] if mode == "slowdown" else [1.0, 1.0, 1.0, 1.0]
+        )
+    return x
+
+
 def _qos_cls(p99, misses, deadlined):
     return {
         "completed": 40,
@@ -821,6 +937,34 @@ EXAMPLES = {
             for p in ("deadline", "fairshare")
         ],
     },
+    "resilience": {
+        "bench": "resilience",
+        "gpu": "C2050",
+        "mix": "MIX",
+        "gpus": 4,
+        "instances_per_app": 25,
+        "latency_fraction": 0.3,
+        "deadline_scale": 4.0,
+        "load": 1.5,
+        "base_capacity_kps": 120.0,
+        "wall_ms": 20,
+        "drills": [
+            _resilience_drill(m, p)
+            for m in ("none", "drain", "slowdown")
+            for p in ("sloaware", "efc")
+        ],
+        "flashcrowd": {
+            "fixed_gpus": 2,
+            "auto_gpus": 4,
+            "fixed_goodput_kps": 80.0,
+            "autoscaled_goodput_kps": 95.0,
+            "fixed_shed": 30,
+            "autoscaled_shed": 5,
+            "scale_ups": 2,
+            "scale_downs": 1,
+            "peak_active": 4,
+        },
+    },
 }
 
 
@@ -907,6 +1051,32 @@ def self_test():
             fail(f"self-test: {what} slipped through validate_model")
         else:
             del FAILURES[before:]
+    # Negative: a drain whose during-fault goodput collapses below half
+    # of pre-fault must be caught (the availability bar).
+    broken = json.loads(json.dumps(EXAMPLES["resilience"]))
+    for x in broken["drills"]:
+        if x["mode"] == "drain" and x["policy"] == "efc":
+            x["during_kps"] = 0.2 * x["pre_kps"]
+    before = len(FAILURES)
+    QUIET = True
+    validate_resilience(broken, "<negative>")
+    QUIET = False
+    if len(FAILURES) == before:
+        fail("self-test: drain goodput collapse slipped through validate_resilience")
+    else:
+        del FAILURES[before:]
+    # Negative: an elastic fleet that fails to beat the fixed fleet on
+    # flash-crowd goodput must be caught (the elasticity bar).
+    flat = json.loads(json.dumps(EXAMPLES["resilience"]))
+    flat["flashcrowd"]["autoscaled_goodput_kps"] = flat["flashcrowd"]["fixed_goodput_kps"]
+    before = len(FAILURES)
+    QUIET = True
+    validate_resilience(flat, "<negative>")
+    QUIET = False
+    if len(FAILURES) == before:
+        fail("self-test: flat autoscaling gain slipped through validate_resilience")
+    else:
+        del FAILURES[before:]
     # Negative: an inconsistent (or absent) events block must be caught.
     broken = json.loads(json.dumps(EXAMPLES["scheduling"]))
     broken["events"]["total"] += 1

@@ -5,7 +5,8 @@
 # events-per-second, BENCH_throughput.json saturation + fleet curves,
 # BENCH_qos.json per-class tail latency, BENCH_admission.json
 # goodput/shedding under overload, BENCH_routing.json fleet deadline
-# routing, BENCH_tenancy.json per-tenant fair-share isolation). Schema
+# routing, BENCH_tenancy.json per-tenant fair-share isolation,
+# BENCH_resilience.json availability under fault drills). Schema
 # and baseline gating lives in scripts/check_bench.py.
 #
 # Usage: ./scripts/ci.sh [--quick]
@@ -40,6 +41,7 @@ qos_instances=40
 adm_instances=40
 routing_instances=25
 tenancy_instances=40
+resilience_instances=25
 if [[ "${1:-}" == "--quick" ]]; then
   instances=50
   tp_instances=8
@@ -47,6 +49,7 @@ if [[ "${1:-}" == "--quick" ]]; then
   adm_instances=10
   routing_instances=8
   tenancy_instances=10
+  resilience_instances=8
 fi
 
 # Known-failing tier-1 tests, one fully-qualified test name per line —
@@ -155,12 +158,17 @@ KERNELET_INSTANCES="${tenancy_instances}" \
 KERNELET_TENANCY_OUT="BENCH_tenancy.json" \
   cargo bench --bench tenancy
 
+echo "==> cargo bench --bench resilience (instances/app=${resilience_instances})"
+KERNELET_INSTANCES="${resilience_instances}" \
+KERNELET_RESILIENCE_OUT="BENCH_resilience.json" \
+  cargo bench --bench resilience
+
 echo "==> bench gate (schemas + acceptance + baseline drift)"
 if command -v python3 >/dev/null 2>&1; then
   python3 "$SCRIPT_DIR/check_bench.py" \
     --baseline-dir "$SCRIPT_DIR/baselines" \
     BENCH_model.json BENCH_scheduling.json BENCH_throughput.json BENCH_qos.json \
-    BENCH_admission.json BENCH_routing.json BENCH_tenancy.json
+    BENCH_admission.json BENCH_routing.json BENCH_tenancy.json BENCH_resilience.json
 else
   echo "warning: python3 unavailable — falling back to shape greps" >&2
   grep -q '"bench":"model"' BENCH_model.json
@@ -172,6 +180,8 @@ else
   grep -q '"bench":"admission"' BENCH_admission.json
   grep -q '"bench":"routing"' BENCH_routing.json
   grep -q '"bench":"tenancy"' BENCH_tenancy.json
+  grep -q '"bench":"resilience"' BENCH_resilience.json
+  grep -q '"flashcrowd"' BENCH_resilience.json
 fi
 
 echo "==> perf record:"
